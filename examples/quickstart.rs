@@ -1,0 +1,41 @@
+//! Quickstart: mine frequent itemsets from a small inline basket
+//! database with RDD-Eclat (variant V4) and print the result.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use rdd_eclat::fim::eclat::{mine_eclat_vec, EclatConfig, EclatVariant};
+use rdd_eclat::sparklet::SparkletContext;
+
+fn main() {
+    // A tiny market-basket database: items are integer-coded products.
+    let baskets: Vec<Vec<u32>> = vec![
+        vec![1, 2, 5],    // bread, milk, beer
+        vec![2, 4],       // milk, eggs
+        vec![2, 3],       // milk, butter
+        vec![1, 2, 4],    // bread, milk, eggs
+        vec![1, 3],       // bread, butter
+        vec![2, 3],       // milk, butter
+        vec![1, 3],       // bread, butter
+        vec![1, 2, 3, 5], // bread, milk, butter, beer
+        vec![1, 2, 3],    // bread, milk, butter
+    ];
+    let names = ["", "bread", "milk", "butter", "eggs", "beer"];
+
+    // An in-process Sparklet "cluster" with 4 executor cores.
+    let sc = SparkletContext::local(4);
+
+    // Mine with EclatV4 (hash-partitioned equivalence classes, p=4),
+    // requiring an itemset to appear in at least 2 baskets.
+    let cfg = EclatConfig::new(EclatVariant::V4, 2).with_p(4);
+    let result = mine_eclat_vec(&sc, baskets, &cfg);
+
+    println!("frequent itemsets (min_sup = 2):");
+    let mut itemsets = result.itemsets.clone();
+    itemsets.sort_by_key(|f| (f.items.len(), std::cmp::Reverse(f.support)));
+    for f in &itemsets {
+        let labels: Vec<&str> = f.items.iter().map(|&i| names[i as usize]).collect();
+        println!("  {{{}}} x{}", labels.join(", "), f.support);
+    }
+    println!("total: {} itemsets", result.len());
+    assert!(result.len() >= 10, "demo db should yield >= 10 itemsets");
+}

@@ -1,0 +1,115 @@
+"""AOT: lower the L2 graphs to HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the crate-side
+XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Artifacts are compiled for fixed shapes; the rust coordinator tiles/pads
+its bitmaps to match. Emitted set (plus ``manifest.txt``):
+
+  cooc_{I}x{K}.hlo.txt              cooc_step          f32[I,K] -> f32[I,I]
+  intersect_{R}x{W}.hlo.txt         intersect_step     2x i32[R,W] -> (i32[R,W], i32[R])
+  intersect_minsup_{R}x{W}.hlo.txt  intersect_minsup_step (+ scalar i32 min_sup)
+  model.hlo.txt                     alias of the default intersect artifact
+                                    (the Makefile's staleness stamp)
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts/model.hlo.txt``
+"""
+
+import argparse
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (items, txn_chunk) shapes for the co-occurrence artifact.
+COOC_SHAPES = [(256, 2048), (128, 512)]
+# (rows, words) shapes for the intersection artifacts.
+INTERSECT_SHAPES = [(256, 1024), (64, 256)]
+DEFAULT_MODEL = "intersect_256x1024.hlo.txt"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_cooc(items: int, chunk: int) -> str:
+    spec = jax.ShapeDtypeStruct((items, chunk), jnp.float32)
+    return to_hlo_text(jax.jit(model.cooc_step).lower(spec))
+
+
+def lower_cooc_pair(items: int, chunk: int) -> str:
+    spec = jax.ShapeDtypeStruct((items, chunk), jnp.float32)
+    return to_hlo_text(jax.jit(model.cooc_pair_step).lower(spec, spec))
+
+
+def lower_intersect(rows: int, words: int) -> str:
+    spec = jax.ShapeDtypeStruct((rows, words), jnp.int32)
+    return to_hlo_text(jax.jit(model.intersect_step).lower(spec, spec))
+
+
+def lower_intersect_minsup(rows: int, words: int) -> str:
+    spec = jax.ShapeDtypeStruct((rows, words), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    return to_hlo_text(
+        jax.jit(model.intersect_minsup_step).lower(spec, spec, scalar)
+    )
+
+
+def emit_all(outdir: str) -> list[str]:
+    os.makedirs(outdir, exist_ok=True)
+    written = []
+
+    def write(name: str, text: str):
+        path = os.path.join(outdir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        written.append(name)
+        print(f"  {name}: {len(text)} chars")
+
+    for items, chunk in COOC_SHAPES:
+        write(f"cooc_{items}x{chunk}.hlo.txt", lower_cooc(items, chunk))
+        write(f"cooc_pair_{items}x{chunk}.hlo.txt", lower_cooc_pair(items, chunk))
+    for rows, words in INTERSECT_SHAPES:
+        write(f"intersect_{rows}x{words}.hlo.txt", lower_intersect(rows, words))
+        write(
+            f"intersect_minsup_{rows}x{words}.hlo.txt",
+            lower_intersect_minsup(rows, words),
+        )
+
+    shutil.copyfile(
+        os.path.join(outdir, DEFAULT_MODEL), os.path.join(outdir, "model.hlo.txt")
+    )
+    written.append("model.hlo.txt")
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(written) + "\n")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out",
+        default="../artifacts/model.hlo.txt",
+        help="path of the stamp artifact; all artifacts go to its directory",
+    )
+    args = ap.parse_args()
+    outdir = os.path.dirname(os.path.abspath(args.out)) or "."
+    print(f"emitting HLO artifacts to {outdir}")
+    written = emit_all(outdir)
+    print(f"wrote {len(written)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Pallas kernel: tiled co-occurrence counting (the 2-itemset phase).
+
+The Eclat Phase-2 triangular matrix of candidate-2-itemset supports is,
+in dense form, ``C = A @ A.T`` for the 0/1 item-by-transaction matrix
+``A``. On TPU this is exactly the MXU's home turf, so the kernel is a
+classic tiled matmul with a VMEM accumulator:
+
+  * grid = (I-tiles, J-tiles, K-tiles); K is the transaction axis.
+  * each (i, j) output tile is initialised on the first K step and
+    accumulated across K steps — the standard revisiting-output pattern.
+  * block shapes default to (128, 128, 512): an A tile (128x512 f32,
+    256 KiB) + a B tile (512x128, 256 KiB) + the C accumulator
+    (128x128, 64 KiB) is ~0.6 MiB of VMEM, far under the ~16 MiB
+    budget, and feeds the 128x128 systolic array full tiles.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same program runs
+on the rust-side CPU client. Numerics are identical either way — f32
+accumulation of 0/1 products is exact below 2^24 transactions.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_I = 128
+DEFAULT_BLOCK_J = 128
+DEFAULT_BLOCK_K = 512
+
+
+def _cooc_kernel(a_ref, bt_ref, o_ref):
+    """One (i, j, k) grid step: o[i, j] += a[i, k] @ a.T[k, j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], bt_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_i", "block_j", "block_k")
+)
+def cooc_pair(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    block_i: int = DEFAULT_BLOCK_I,
+    block_j: int = DEFAULT_BLOCK_J,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jnp.ndarray:
+    """Compute ``a @ b.T`` for 0/1 f32 matrices via the tiled Pallas kernel.
+
+    The general form the rust coordinator needs for item-block tiling:
+    the co-occurrence counts between item block ``a`` and item block
+    ``b`` over a shared transaction chunk. ``a`` and ``b`` are
+    ``[n_items, n_txns]`` f32 (0.0 / 1.0); dimensions must be multiples
+    of the block shape — the AOT path compiles for fixed tile sizes and
+    the coordinator pads bitmaps up to the artifact shape.
+    """
+    ni, nt = a.shape
+    if b.shape != a.shape:
+        raise ValueError(f"shape mismatch: {a.shape} vs {b.shape}")
+    bi = min(block_i, ni)
+    bj = min(block_j, ni)
+    bk = min(block_k, nt)
+    if ni % bi or ni % bj or nt % bk:
+        raise ValueError(
+            f"shape {a.shape} not divisible by blocks ({bi},{bj},{bk})"
+        )
+    bt = b.T
+    grid = (ni // bi, ni // bj, nt // bk)
+    return pl.pallas_call(
+        _cooc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bj), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bi, bj), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ni, ni), jnp.float32),
+        interpret=True,
+    )(a, bt)
+
+
+def cooccurrence(
+    a: jnp.ndarray,
+    *,
+    block_i: int = DEFAULT_BLOCK_I,
+    block_j: int = DEFAULT_BLOCK_J,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jnp.ndarray:
+    """``a @ a.T`` — the symmetric special case of :func:`cooc_pair`."""
+    return cooc_pair(a, a, block_i=block_i, block_j=block_j, block_k=block_k)
+
+
+def vmem_bytes(block_i: int, block_j: int, block_k: int) -> int:
+    """Estimated VMEM footprint of one grid step (A, Bt, C tiles, f32)."""
+    return 4 * (block_i * block_k + block_k * block_j + block_i * block_j)

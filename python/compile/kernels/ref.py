@@ -1,0 +1,41 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the kernels are validated against (pytest +
+hypothesis). They are intentionally written with the most direct jnp
+formulation — no tiling, no tricks — so a mismatch always indicts the
+kernel, not the oracle.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def cooccurrence_ref(a: jnp.ndarray) -> jnp.ndarray:
+    """Dense co-occurrence counts of a 0/1 item-by-transaction matrix.
+
+    ``a[i, t] == 1`` iff item ``i`` occurs in transaction ``t``.
+    Returns ``C = a @ a.T`` where ``C[i, j]`` is the number of
+    transactions containing both ``i`` and ``j`` (the support of the
+    2-itemset ``{i, j}``); the diagonal holds 1-item supports.
+    """
+    a = a.astype(jnp.float32)
+    return a @ a.T
+
+
+def intersect_ref(x: jnp.ndarray, y: jnp.ndarray):
+    """Bitmap tidset intersection + support.
+
+    ``x`` and ``y`` are ``[rows, words]`` int32 arrays, each row a packed
+    bitmap of transaction ids (32 tids per word, bit k of word w == tid
+    ``32 * w + k``). Returns ``(x & y, support)`` with ``support[r]`` the
+    popcount of row ``r`` of the intersection.
+    """
+    z = jnp.bitwise_and(x, y)
+    pc = lax.population_count(z.view(jnp.uint32)).astype(jnp.int32)
+    return z, jnp.sum(pc, axis=1)
+
+
+def support_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise popcount (support) of packed int32 bitmaps."""
+    pc = lax.population_count(x.view(jnp.uint32)).astype(jnp.int32)
+    return jnp.sum(pc, axis=1)

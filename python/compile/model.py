@@ -1,0 +1,60 @@
+"""L2: the support-counting compute graph, composed from the L1 kernels.
+
+The RDD-Eclat paper has no neural model; its "model" — the compute the
+coordinator repeatedly dispatches — is support counting:
+
+  * ``cooc_step``       Phase-2 of every variant: the dense candidate
+                        2-itemset count matrix of a transaction tile
+                        (the paper's upper-triangular accumulator matrix,
+                        produced here as ``A @ A.T`` on the MXU path).
+  * ``intersect_step``  Phase-3/4 inner loop: batched tidset-bitmap
+                        intersection + support for equivalence-class
+                        candidate generation.
+  * ``intersect_minsup_step``  same, plus the min_sup comparison fused
+                        into the graph so the rust side reads back a
+                        ready-made frequency mask.
+
+Each function is pure JAX calling the Pallas kernels, so `aot.py` lowers
+it once to HLO text and the rust runtime executes it with no Python on
+the request path.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.cooccurrence import cooc_pair, cooccurrence
+from compile.kernels.intersect import intersect
+
+
+def cooc_step(a: jnp.ndarray):
+    """Candidate-2-itemset count tile: ``(a @ a.T,)`` for 0/1 f32 ``a``.
+
+    The rust coordinator accumulates tiles over the transaction axis, so
+    this artifact is compiled for a fixed ``[items, txn_chunk]`` shape and
+    invoked once per chunk.
+    """
+    return (cooccurrence(a),)
+
+
+def cooc_pair_step(a: jnp.ndarray, b: jnp.ndarray):
+    """General item-block tile: ``(a @ b.T,)`` — lets the coordinator
+    cover an item space larger than one artifact tile by sweeping block
+    pairs (bi, bj)."""
+    return (cooc_pair(a, b),)
+
+
+def intersect_step(x: jnp.ndarray, y: jnp.ndarray):
+    """Batched tidset intersection: ``(x & y, row_popcount)``."""
+    inter, sup = intersect(x, y)
+    return inter, sup
+
+
+def intersect_minsup_step(x: jnp.ndarray, y: jnp.ndarray, min_sup: jnp.ndarray):
+    """Intersection with the frequency test fused in.
+
+    ``min_sup`` is a scalar int32 operand (not baked into the artifact) so
+    one compiled executable serves every support threshold. Returns
+    ``(inter, support, frequent_mask)``.
+    """
+    inter, sup = intersect(x, y)
+    mask = (sup >= min_sup).astype(jnp.int32)
+    return inter, sup, mask

@@ -1,0 +1,207 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+hypothesis sweeps shapes and contents; these are the core correctness
+signal for everything the rust runtime executes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.cooccurrence import (
+    cooc_pair,
+    cooccurrence,
+    vmem_bytes as cooc_vmem,
+)
+from compile.kernels.intersect import intersect, vmem_bytes as inter_vmem
+from compile.kernels.ref import cooccurrence_ref, intersect_ref, support_ref
+
+
+# ---------------------------------------------------------------- cooccurrence
+def dense_01(ni: int, nt: int, density: float, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return (rng.random((ni, nt)) < density).astype(np.float32)
+
+
+@pytest.mark.parametrize(
+    "ni,nt,bi,bj,bk",
+    [
+        (128, 512, 128, 128, 512),
+        (256, 1024, 128, 128, 512),
+        (256, 2048, 128, 128, 512),
+        (128, 512, 64, 64, 128),
+        (64, 128, 64, 64, 128),
+    ],
+)
+def test_cooc_matches_ref_shapes(ni, nt, bi, bj, bk):
+    a = dense_01(ni, nt, 0.3, seed=ni * 7 + nt)
+    got = cooccurrence(a, block_i=bi, block_j=bj, block_k=bk)
+    want = cooccurrence_ref(jnp.asarray(a))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+def test_cooc_counts_are_exact_integers():
+    a = dense_01(128, 512, 0.5, seed=1)
+    got = np.asarray(cooccurrence(a))
+    assert np.all(got == np.round(got))
+    # diagonal = per-item supports
+    np.testing.assert_array_equal(np.diag(got), a.sum(axis=1))
+
+
+def test_cooc_symmetry():
+    a = dense_01(128, 512, 0.2, seed=2)
+    got = np.asarray(cooccurrence(a))
+    np.testing.assert_array_equal(got, got.T)
+
+
+def test_cooc_rejects_non_divisible():
+    a = dense_01(100, 512, 0.3, seed=3)
+    with pytest.raises(ValueError):
+        cooccurrence(a, block_i=64, block_j=64, block_k=128)
+
+
+def test_cooc_empty_and_full():
+    z = np.zeros((64, 128), np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(cooccurrence(z, block_i=64, block_j=64, block_k=128)), 0.0
+    )
+    o = np.ones((64, 128), np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(cooccurrence(o, block_i=64, block_j=64, block_k=128)), 128.0
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ni_blocks=st.integers(1, 3),
+    nt_blocks=st.integers(1, 4),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cooc_hypothesis(ni_blocks, nt_blocks, density, seed):
+    bi = bj = 32
+    bk = 64
+    a = dense_01(ni_blocks * bi, nt_blocks * bk, density, seed)
+    got = cooccurrence(a, block_i=bi, block_j=bj, block_k=bk)
+    want = cooccurrence_ref(jnp.asarray(a))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+
+
+def test_cooc_pair_asymmetric_blocks():
+    # a @ b.T for two different item blocks — the rust tiling path
+    a = dense_01(64, 128, 0.3, seed=21)
+    b = dense_01(64, 128, 0.4, seed=22)
+    got = cooc_pair(a, b, block_i=32, block_j=32, block_k=64)
+    want = a.astype(np.float32) @ b.astype(np.float32).T
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_cooc_pair_rejects_mismatch():
+    a = dense_01(64, 128, 0.3, seed=23)
+    b = dense_01(64, 256, 0.3, seed=24)
+    with pytest.raises(ValueError):
+        cooc_pair(a, b, block_i=32, block_j=32, block_k=64)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    blocks=st.integers(1, 3),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cooc_pair_hypothesis(blocks, density, seed):
+    a = dense_01(blocks * 32, 2 * 64, density, seed)
+    b = dense_01(blocks * 32, 2 * 64, 1.0 - density, seed ^ 1)
+    got = cooc_pair(a, b, block_i=32, block_j=32, block_k=64)
+    want = a.astype(np.float32) @ b.astype(np.float32).T
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# ------------------------------------------------------------------- intersect
+def bitmaps(r: int, w: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(-(2**31), 2**31, size=(r, w), dtype=np.int64).astype(
+        np.int32
+    )
+
+
+@pytest.mark.parametrize(
+    "r,w,br", [(64, 256, 64), (256, 1024, 256), (512, 128, 256), (256, 64, 64)]
+)
+def test_intersect_matches_ref_shapes(r, w, br):
+    x, y = bitmaps(r, w, seed=r + w), bitmaps(r, w, seed=r * w)
+    gi, gs = intersect(x, y, block_r=br)
+    wi, ws = intersect_ref(jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+
+
+def test_intersect_identities():
+    x = bitmaps(64, 64, seed=9)
+    zero = np.zeros_like(x)
+    gi, gs = intersect(x, zero, block_r=64)
+    np.testing.assert_array_equal(np.asarray(gi), 0)
+    np.testing.assert_array_equal(np.asarray(gs), 0)
+    gi, gs = intersect(x, x, block_r=64)
+    np.testing.assert_array_equal(np.asarray(gi), x)
+    np.testing.assert_array_equal(
+        np.asarray(gs), np.asarray(support_ref(jnp.asarray(x)))
+    )
+
+
+def test_intersect_support_counts_bits():
+    # row of all-ones words: support = 32 * words
+    x = np.full((64, 16), -1, np.int32)
+    _, gs = intersect(x, x, block_r=64)
+    np.testing.assert_array_equal(np.asarray(gs), 32 * 16)
+
+
+def test_intersect_rejects_non_divisible():
+    x = bitmaps(100, 64, seed=1)
+    with pytest.raises(ValueError):
+        intersect(x, x, block_r=64)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r_blocks=st.integers(1, 4),
+    w=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_intersect_hypothesis(r_blocks, w, seed):
+    br = 32
+    r = r_blocks * br
+    x, y = bitmaps(r, w, seed=seed), bitmaps(r, w, seed=seed ^ 0x5EED)
+    gi, gs = intersect(x, y, block_r=br)
+    wi, ws = intersect_ref(jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_intersect_support_vs_python_sets(seed):
+    """End-to-end semantic check: bitmap path == python set intersection."""
+    rng = np.random.default_rng(seed)
+    n_tids = 32 * 8
+    a = set(rng.choice(n_tids, size=40, replace=False).tolist())
+    b = set(rng.choice(n_tids, size=40, replace=False).tolist())
+
+    def pack(s):
+        words = np.zeros(8, np.uint32)
+        for t in s:
+            words[t // 32] |= np.uint32(1) << np.uint32(t % 32)
+        return words.view(np.int32)
+
+    x = np.tile(pack(a), (32, 1))
+    y = np.tile(pack(b), (32, 1))
+    _, gs = intersect(x, y, block_r=32)
+    assert int(np.asarray(gs)[0]) == len(a & b)
+
+
+# ------------------------------------------------------------------ VMEM model
+def test_vmem_estimates_within_budget():
+    assert cooc_vmem(128, 128, 512) < 16 * 2**20
+    assert inter_vmem(256, 1024) < 16 * 2**20

@@ -1,0 +1,52 @@
+"""L2 graph correctness: model steps = kernel composition semantics."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels.ref import cooccurrence_ref, intersect_ref
+
+
+def test_cooc_step_tuple_and_value():
+    rng = np.random.default_rng(3)
+    a = (rng.random((128, 512)) < 0.25).astype(np.float32)
+    out = model.cooc_step(a)
+    assert isinstance(out, tuple) and len(out) == 1
+    np.testing.assert_array_equal(
+        np.asarray(out[0]), np.asarray(cooccurrence_ref(jnp.asarray(a)))
+    )
+
+
+def test_intersect_step_matches_ref():
+    rng = np.random.default_rng(4)
+    x = rng.integers(-(2**31), 2**31, size=(64, 256), dtype=np.int64).astype(
+        np.int32
+    )
+    y = rng.integers(-(2**31), 2**31, size=(64, 256), dtype=np.int64).astype(
+        np.int32
+    )
+    gi, gs = model.intersect_step(x, y)
+    wi, ws = intersect_ref(jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+
+
+def test_intersect_minsup_mask():
+    # Construct rows with known supports 0, 32, 64 and threshold at 32.
+    x = np.zeros((64, 2), np.int32)
+    x[1, 0] = -1  # 32 bits
+    x[2, :] = -1  # 64 bits
+    inter, sup, mask = model.intersect_minsup_step(x, x, np.int32(32))
+    np.testing.assert_array_equal(np.asarray(inter), x)
+    s = np.asarray(sup)
+    m = np.asarray(mask)
+    assert s[0] == 0 and m[0] == 0
+    assert s[1] == 32 and m[1] == 1
+    assert s[2] == 64 and m[2] == 1
+
+
+def test_intersect_minsup_threshold_is_runtime_operand():
+    x = np.full((64, 1), -1, np.int32)  # every row support = 32
+    for thr, expect in [(0, 1), (32, 1), (33, 0)]:
+        _, _, mask = model.intersect_minsup_step(x, x, np.int32(thr))
+        assert int(np.asarray(mask)[0]) == expect

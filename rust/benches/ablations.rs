@@ -1,0 +1,133 @@
+//! Bench target: design-choice ablations called out in DESIGN.md —
+//! A1: triangular matrix on/off (Phase-2 pruning value)
+//! A2: equivalence-class partitioner (default / hash / reverse-hash) and
+//!     the p sweep, plus the balance-ratio metric the paper's §4.4
+//!     motivates
+//! A3: tidset representation (sorted tid lists vs packed bitmaps)
+
+use rdd_eclat::coordinator::{experiments::Algo, ExperimentConfig};
+use rdd_eclat::data::Dataset;
+use rdd_eclat::fim::eclat::{mine_eclat_vec, EclatConfig, EclatVariant};
+use rdd_eclat::fim::partitioners::{
+    balance_ratio, default_partitioner, hash_partitioner, reverse_hash_partitioner,
+};
+use rdd_eclat::fim::sequential::eclat_sequential_with;
+use rdd_eclat::fim::tidset::{BitmapTidset, VecTidset};
+use rdd_eclat::fim::types::abs_min_sup;
+use rdd_eclat::sparklet::{Partitioner, SparkletContext};
+use rdd_eclat::util::bench::BenchSuite;
+
+fn main() {
+    let cfg = ExperimentConfig::default();
+    tri_matrix_ablation(&cfg);
+    partitioner_ablation(&cfg);
+    tidset_repr_ablation(&cfg);
+    prefix_len_ablation(&cfg);
+    rdd_eclat::coordinator::experiments::extended_comparison(&cfg).finish();
+}
+
+/// §6 future work: 1-length vs 2-length prefix classes, and the fused V6.
+fn prefix_len_ablation(cfg: &ExperimentConfig) {
+    let mut suite = BenchSuite::new(
+        "ablation_prefix_len",
+        "V5 with k=1 vs k=2 prefix classes vs V6-fused (LPT-balanced)",
+    );
+    let txns = Dataset::T10I4D100K.generate_scaled(cfg.seed, cfg.scale);
+    for &frac in &[0.003f64, 0.002, 0.001] {
+        let min_sup = abs_min_sup(frac, txns.len());
+        for (label, variant, k) in [
+            ("V5-k1", EclatVariant::V5, 1usize),
+            ("V5-k2", EclatVariant::V5, 2),
+            ("V6-fused", EclatVariant::V6Fused, 2),
+        ] {
+            suite.measure(label, "min_sup", frac, || {
+                let sc = SparkletContext::local(cfg.cores);
+                let ecfg = EclatConfig::new(variant, min_sup)
+                    .with_p(cfg.p)
+                    .with_prefix_len(k);
+                let _ = mine_eclat_vec(&sc, txns.clone(), &ecfg);
+            });
+        }
+    }
+    suite.finish();
+}
+
+fn tri_matrix_ablation(cfg: &ExperimentConfig) {
+    let mut suite = BenchSuite::new(
+        "ablation_trimatrix",
+        "EclatV1 on T10 with/without the triangular-matrix Phase-2",
+    );
+    let txns = Dataset::T10I4D100K.generate_scaled(cfg.seed, cfg.scale);
+    for &frac in &[0.005f64, 0.003, 0.001] {
+        let min_sup = abs_min_sup(frac, txns.len());
+        for (label, mode) in [("triMatrix=on", true), ("triMatrix=off", false)] {
+            suite.measure(label, "min_sup", frac, || {
+                let sc = SparkletContext::local(cfg.cores);
+                let ecfg = EclatConfig::new(EclatVariant::V1, min_sup).with_tri_matrix(mode);
+                let _ = mine_eclat_vec(&sc, txns.clone(), &ecfg);
+            });
+        }
+    }
+    suite.finish();
+}
+
+fn partitioner_ablation(cfg: &ExperimentConfig) {
+    // (a) wall-clock across partitioners at p=10 and a p sweep for V4/V5
+    let mut suite = BenchSuite::new(
+        "ablation_partitioner",
+        "V3 (default) vs V4 (hash) vs V5 (reverse-hash) across p",
+    );
+    let txns = Dataset::T10I4D100K.generate_scaled(cfg.seed, cfg.scale);
+    let min_sup = abs_min_sup(0.002, txns.len());
+    for &p in &[2usize, 5, 10, 20] {
+        for variant in [EclatVariant::V3, EclatVariant::V4, EclatVariant::V5] {
+            suite.measure(variant.name(), "p", p as f64, || {
+                let sc = SparkletContext::local(cfg.cores);
+                let ecfg = EclatConfig::new(variant, min_sup).with_p(p);
+                let _ = mine_eclat_vec(&sc, txns.clone(), &ecfg);
+            });
+        }
+    }
+    suite.finish();
+
+    // (b) static balance-ratio of the three partitioners on the Eclat
+    // class-weight shape (weights decay with rank)
+    let n = 200usize;
+    let weights: Vec<usize> = (0..n).map(|r| n - r).collect();
+    println!("## partitioner balance ratio (max/mean summed class weights; 1.0 = perfect)");
+    for p in [4usize, 10, 16] {
+        let d = default_partitioner(n + 1);
+        let h = hash_partitioner(p);
+        let r = reverse_hash_partitioner(p);
+        println!(
+            "  p={p:<3} default(n-1)={:.3}  hash={:.3}  reverseHash={:.3}",
+            balance_ratio(&weights, |rank| d.partition(&rank), n),
+            balance_ratio(&weights, |rank| h.partition(&rank), p),
+            balance_ratio(&weights, |rank| r.partition(&rank), p),
+        );
+    }
+}
+
+fn tidset_repr_ablation(cfg: &ExperimentConfig) {
+    let mut suite = BenchSuite::new(
+        "ablation_tidset_repr",
+        "sequential Eclat: sorted tid lists vs packed bitmaps",
+    );
+    for (name, d) in [
+        ("T10", Dataset::T10I4D100K),
+        ("BMS2", Dataset::Bms2),
+    ] {
+        let txns = d.generate_scaled(cfg.seed, cfg.scale);
+        let frac = if d.tri_matrix_mode() { 0.002 } else { 0.001 };
+        let min_sup = abs_min_sup(frac, txns.len());
+        suite.measure(&format!("{name}-veclist"), "dataset", 0.0, || {
+            let _ = eclat_sequential_with::<VecTidset>(&txns, min_sup);
+        });
+        suite.measure(&format!("{name}-bitmap"), "dataset", 0.0, || {
+            let _ = eclat_sequential_with::<BitmapTidset>(&txns, min_sup);
+        });
+    }
+    suite.finish();
+    // keep Algo import used for future extension
+    let _ = Algo::Apriori;
+}

@@ -1,0 +1,18 @@
+//! Bench target: Fig. 1 — execution time vs min_sup on BMS_WebView_1,
+//! (a) Eclat variants + RDD-Apriori, (b) Eclat variants only.
+
+use rdd_eclat::coordinator::{experiments, report, ExperimentConfig};
+use rdd_eclat::data::Dataset;
+
+fn main() {
+    let cfg = ExperimentConfig::default();
+    let a = experiments::fig_minsup(1, Dataset::Bms1, true, &cfg);
+    a.finish();
+    experiments::fig_minsup(1, Dataset::Bms1, false, &cfg).finish();
+    let checks = vec![
+        report::check_eclat_beats_apriori(&a),
+        report::check_gap_widens(&a),
+        report::check_v45_beat_v23(&a),
+    ];
+    println!("{}", report::render_claims(&checks));
+}

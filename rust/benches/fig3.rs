@@ -1,0 +1,17 @@
+//! Bench target: Fig. 3 — execution time vs min_sup on T10I4D100K.
+
+use rdd_eclat::coordinator::{experiments, report, ExperimentConfig};
+use rdd_eclat::data::Dataset;
+
+fn main() {
+    let cfg = ExperimentConfig::default();
+    let a = experiments::fig_minsup(3, Dataset::T10I4D100K, true, &cfg);
+    a.finish();
+    experiments::fig_minsup(3, Dataset::T10I4D100K, false, &cfg).finish();
+    let checks = vec![
+        report::check_eclat_beats_apriori(&a),
+        report::check_gap_widens(&a),
+        report::check_v45_beat_v23(&a),
+    ];
+    println!("{}", report::render_claims(&checks));
+}

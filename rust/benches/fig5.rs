@@ -1,0 +1,18 @@
+//! Bench target: Fig. 5 — execution time vs executor cores:
+//! (a) BMS_WebView_2 at min_sup = 0.001, (b) T40I10D100K at 0.01.
+
+use rdd_eclat::coordinator::{experiments, report, ExperimentConfig};
+use rdd_eclat::data::Dataset;
+
+fn main() {
+    let cfg = ExperimentConfig::default();
+    let a = experiments::fig_cores(Dataset::Bms2, 0.001, &cfg);
+    a.finish();
+    let b = experiments::fig_cores(Dataset::T40I10D100K, 0.01, &cfg);
+    b.finish();
+    let checks = vec![
+        report::check_core_scaling(&a),
+        report::check_core_scaling(&b),
+    ];
+    println!("{}", report::render_claims(&checks));
+}

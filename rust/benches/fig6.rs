@@ -1,0 +1,14 @@
+//! Bench target: Fig. 6 — scalability on increasing T10I4D100K size
+//! (doubled 1x..16x) at min_sup = 0.05.
+
+use rdd_eclat::coordinator::{experiments, report, ExperimentConfig};
+
+fn main() {
+    let cfg = ExperimentConfig::default();
+    let suite = experiments::fig_scaling(&cfg);
+    suite.finish();
+    println!(
+        "{}",
+        report::render_claims(&[report::check_linear_scaling(&suite)])
+    );
+}

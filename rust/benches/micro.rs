@@ -1,0 +1,159 @@
+//! Bench target: microbenchmarks of the hot-path primitives — the inputs
+//! to the §Perf optimization loop (EXPERIMENTS.md).
+//!
+//!  * tidset intersection throughput (merge, gallop, bitmap)
+//!  * triangular-matrix update throughput
+//!  * trie candidate counting
+//!  * Sparklet shuffle (reduceByKey) record throughput
+//!  * Bottom-Up recursion on a synthetic dense class
+
+use rdd_eclat::fim::eqclass::{bottom_up, EquivalenceClass};
+use rdd_eclat::fim::tidset::{BitmapTidset, TidOps, VecTidset};
+use rdd_eclat::fim::trie::ItemTrie;
+use rdd_eclat::fim::trimatrix::TriMatrix;
+use rdd_eclat::sparklet::{PairRdd, SparkletContext};
+use rdd_eclat::util::bench::BenchSuite;
+use rdd_eclat::util::SplitMix64;
+
+fn main() {
+    intersection_bench();
+    trimatrix_bench();
+    trie_bench();
+    shuffle_bench();
+    bottom_up_bench();
+}
+
+fn random_tids(rng: &mut SplitMix64, universe: usize, density: f64) -> Vec<u32> {
+    (0..universe as u32).filter(|_| rng.gen_bool(density)).collect()
+}
+
+fn intersection_bench() {
+    let mut suite = BenchSuite::new("micro_intersect", "tidset intersection throughput");
+    let mut rng = SplitMix64::new(1);
+    let universe = 100_000;
+    let a = random_tids(&mut rng, universe, 0.1);
+    let b = random_tids(&mut rng, universe, 0.1);
+    let small = random_tids(&mut rng, universe, 0.002);
+
+    let va = VecTidset::from_tids(&a, universe);
+    let vb = VecTidset::from_tids(&b, universe);
+    let vs = VecTidset::from_tids(&small, universe);
+    suite.measure("merge-10k∩10k", "case", 0.0, || {
+        std::hint::black_box(va.intersect_support(&vb));
+    });
+    suite.measure("gallop-200∩10k", "case", 1.0, || {
+        std::hint::black_box(vs.intersect_support(&va));
+    });
+
+    let ba = BitmapTidset::from_tids(&a, universe);
+    let bb = BitmapTidset::from_tids(&b, universe);
+    suite.measure("bitmap-and-count", "case", 2.0, || {
+        std::hint::black_box(ba.intersect_support(&bb));
+    });
+    suite.measure("bitmap-and-alloc", "case", 3.0, || {
+        std::hint::black_box(ba.intersect(&bb));
+    });
+    suite.finish();
+}
+
+fn trimatrix_bench() {
+    let mut suite = BenchSuite::new("micro_trimatrix", "triangular matrix update throughput");
+    let mut rng = SplitMix64::new(2);
+    let n_items = 1000;
+    let txns: Vec<Vec<u32>> = (0..5_000)
+        .map(|_| {
+            let mut t: Vec<u32> = (0..40).map(|_| rng.gen_range(n_items) as u32).collect();
+            t.sort_unstable();
+            t.dedup();
+            t
+        })
+        .collect();
+    suite.measure("update-5k-wide-txns", "width", 40.0, || {
+        let mut m = TriMatrix::new(n_items);
+        for t in &txns {
+            m.update_transaction(t);
+        }
+        std::hint::black_box(&m);
+    });
+    suite.finish();
+}
+
+fn trie_bench() {
+    let mut suite = BenchSuite::new("micro_trie", "candidate trie subset counting");
+    let mut rng = SplitMix64::new(3);
+    let n_items = 300u32;
+    // 2000 random 3-item candidates
+    let mut trie = ItemTrie::new();
+    for _ in 0..2000 {
+        let mut c: Vec<u32> = (0..3).map(|_| rng.gen_range(n_items as usize) as u32).collect();
+        c.sort_unstable();
+        c.dedup();
+        if c.len() == 3 {
+            trie.insert(&c);
+        }
+    }
+    let txns: Vec<Vec<u32>> = (0..2_000)
+        .map(|_| {
+            let mut t: Vec<u32> = (0..15).map(|_| rng.gen_range(n_items as usize) as u32).collect();
+            t.sort_unstable();
+            t.dedup();
+            t
+        })
+        .collect();
+    suite.measure("count-2k-cands-2k-txns", "case", 0.0, || {
+        let mut local = trie.clone();
+        for t in &txns {
+            local.count_subsets(t);
+        }
+        std::hint::black_box(&local);
+    });
+    suite.finish();
+}
+
+fn shuffle_bench() {
+    let mut suite = BenchSuite::new("micro_shuffle", "Sparklet reduceByKey throughput");
+    for &n in &[100_000usize, 500_000] {
+        let pairs: Vec<(u32, u64)> = (0..n).map(|i| ((i % 1000) as u32, 1u64)).collect();
+        suite.measure("reduceByKey", "records", n as f64, || {
+            let sc = SparkletContext::local(2);
+            let out = sc
+                .parallelize(pairs.clone(), 8)
+                .reduce_by_key(|a, b| a + b)
+                .collect();
+            std::hint::black_box(out);
+        });
+    }
+    suite.finish();
+}
+
+fn bottom_up_bench() {
+    let mut suite = BenchSuite::new("micro_bottom_up", "Bottom-Up recursion on a dense class");
+    let mut rng = SplitMix64::new(4);
+    let universe = 20_000;
+    // one class with 40 members over a correlated tid universe — deep
+    // recursion territory
+    let base = random_tids(&mut rng, universe, 0.4);
+    let members: Vec<(u32, VecTidset)> = (0..40u32)
+        .map(|i| {
+            let tids: Vec<u32> = base
+                .iter()
+                .copied()
+                .filter(|_| rng.gen_bool(0.8))
+                .collect();
+            (i, VecTidset::from_tids(&tids, universe))
+        })
+        .collect();
+    let class = EquivalenceClass {
+        prefix: vec![999],
+        members,
+    };
+    for &min_sup_frac in &[0.35f64, 0.3] {
+        let min_sup = (universe as f64 * min_sup_frac) as u32;
+        suite.measure("bottom-up-40-members", "min_sup", min_sup_frac, || {
+            let mut out = Vec::new();
+            bottom_up(&class, min_sup, &mut out);
+            std::hint::black_box(out.len());
+        });
+    }
+    suite.finish();
+}

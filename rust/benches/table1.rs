@@ -1,0 +1,19 @@
+//! Bench target: Table 1 — dataset properties (generated vs paper) plus
+//! generation throughput.
+
+use rdd_eclat::coordinator::{experiments, ExperimentConfig};
+use rdd_eclat::data::Dataset;
+use rdd_eclat::util::bench::BenchSuite;
+
+fn main() {
+    let cfg = ExperimentConfig::default();
+    println!("{}", experiments::table1(&cfg));
+
+    let mut suite = BenchSuite::new("table1_generation", "dataset generation time");
+    for d in Dataset::all() {
+        suite.measure(d.name(), "scale", cfg.scale, || {
+            let _ = d.generate_scaled(cfg.seed, cfg.scale);
+        });
+    }
+    suite.finish();
+}

@@ -1,0 +1,109 @@
+//! Bench target A3: XLA/PJRT artifact backend vs native rust for the two
+//! support-count primitives (Phase-2 co-occurrence matrix; batched
+//! tidset intersection). Requires `make artifacts`.
+
+use rdd_eclat::coordinator::ExperimentConfig;
+use rdd_eclat::data::Dataset;
+use rdd_eclat::fim::trimatrix::TriMatrix;
+use rdd_eclat::runtime::{artifacts_available, artifacts_dir, XlaFim};
+use rdd_eclat::util::bench::BenchSuite;
+use rdd_eclat::util::Bitmap;
+
+fn main() {
+    if !artifacts_available() {
+        eprintln!("SKIP xla_backend bench: run `make artifacts` first");
+        return;
+    }
+    let cfg = ExperimentConfig::default();
+    let mut fim = XlaFim::load(&artifacts_dir()).expect("load artifacts");
+    println!("platform: {}", fim.platform());
+
+    cooc_bench(&cfg, &mut fim);
+    intersect_bench(&mut fim);
+}
+
+fn cooc_bench(cfg: &ExperimentConfig, fim: &mut XlaFim) {
+    let mut suite = BenchSuite::new(
+        "xla_cooc",
+        "Phase-2 candidate-2-itemset counts: native loop vs XLA matmul artifact",
+    );
+    let txns = Dataset::T10I4D100K.generate_scaled(cfg.seed, (cfg.scale * 0.2).max(0.01));
+    let n_txns = txns.len();
+    // dense-rank the items
+    let mut items: Vec<u32> = txns.iter().flatten().copied().collect();
+    items.sort_unstable();
+    items.dedup();
+    let rank: std::collections::HashMap<u32, u32> = items
+        .iter()
+        .enumerate()
+        .map(|(r, &i)| (i, r as u32))
+        .collect();
+    let ranked: Vec<Vec<u32>> = txns
+        .iter()
+        .map(|t| {
+            let mut v: Vec<u32> = t.iter().map(|i| rank[i]).collect();
+            v.sort_unstable();
+            v
+        })
+        .collect();
+    let n_items = items.len();
+
+    suite.measure("native", "items", n_items as f64, || {
+        let mut m = TriMatrix::new(n_items);
+        for t in &ranked {
+            m.update_transaction(t);
+        }
+        std::hint::black_box(&m);
+    });
+
+    // per-item bitmaps for the XLA path
+    let mut bitmaps: Vec<Bitmap> = (0..n_items).map(|_| Bitmap::new(n_txns)).collect();
+    for (tid, t) in ranked.iter().enumerate() {
+        for &r in t {
+            bitmaps[r as usize].set(tid);
+        }
+    }
+    let refs: Vec<&Bitmap> = bitmaps.iter().collect();
+    suite.measure("xla", "items", n_items as f64, || {
+        let m = fim.cooc_tri_matrix(&refs).unwrap();
+        std::hint::black_box(&m);
+    });
+    suite.finish();
+}
+
+fn intersect_bench(fim: &mut XlaFim) {
+    let mut suite = BenchSuite::new(
+        "xla_intersect",
+        "batched tidset intersection: native AND+popcount vs XLA artifact",
+    );
+    let mut rng = rdd_eclat::util::SplitMix64::new(0xBE9C);
+    for &(rows, universe) in &[(256usize, 32_768usize), (1024, 32_768), (256, 131_072)] {
+        let make = |rng: &mut rdd_eclat::util::SplitMix64| {
+            let mut b = Bitmap::new(universe);
+            for i in 0..universe {
+                if rng.gen_bool(0.05) {
+                    b.set(i);
+                }
+            }
+            b
+        };
+        let xs: Vec<Bitmap> = (0..rows).map(|_| make(&mut rng)).collect();
+        let ys: Vec<Bitmap> = (0..rows).map(|_| make(&mut rng)).collect();
+        let label = format!("{rows}x{}w", universe / 32);
+        suite.measure("native", "case", rows as f64, || {
+            let mut total = 0usize;
+            for (x, y) in xs.iter().zip(&ys) {
+                total += x.and_count(y);
+            }
+            std::hint::black_box(total);
+        });
+        let xr: Vec<&Bitmap> = xs.iter().collect();
+        let yr: Vec<&Bitmap> = ys.iter().collect();
+        suite.measure("xla", "case", rows as f64, || {
+            let (_, sup) = fim.intersect_batch(&xr, &yr).unwrap();
+            std::hint::black_box(sup);
+        });
+        eprintln!("  case {label} done");
+    }
+    suite.finish();
+}

@@ -1,0 +1,110 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `repro <command> [--flag value]...`. Flags may appear in any
+//! order; `--flag=value` and `--flag value` both parse.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self, String> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        let mut bools = Vec::new();
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument: {arg}"));
+            };
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                flags.insert(name.to_string(), it.next().unwrap());
+            } else {
+                bools.push(name.to_string());
+            }
+        }
+        Ok(Self {
+            command,
+            flags,
+            bools,
+        })
+    }
+
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name}: cannot parse {v:?}")),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name) || self.get(name) == Some("true")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = parse("mine --dataset t10 --min-sup 0.01 --tri-matrix");
+        assert_eq!(a.command, "mine");
+        assert_eq!(a.get("dataset"), Some("t10"));
+        assert_eq!(a.get("min-sup"), Some("0.01"));
+        assert!(a.flag("tri-matrix"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("fig --id=3 --scale=0.5");
+        assert_eq!(a.get_parse::<usize>("id").unwrap(), Some(3));
+        assert_eq!(a.get_parse::<f64>("scale").unwrap(), Some(0.5));
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = parse("fig --id notanumber");
+        assert!(a.get_parse::<usize>("id").is_err());
+    }
+
+    #[test]
+    fn positional_rejected() {
+        assert!(Args::parse(vec!["mine".into(), "stray".into()]).is_err());
+    }
+
+    #[test]
+    fn empty_means_help() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

@@ -1,0 +1,76 @@
+//! Experiment configuration shared by CLI and benches.
+
+/// Knobs for a figure regeneration run. Environment overrides (used by
+/// CI and the quick test path):
+/// * `REPRO_SCALE`  — dataset scale factor (default 0.25)
+/// * `REPRO_SEED`   — generator seed (default 2019)
+/// * `REPRO_CORES`  — executor cores (default: machine parallelism)
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub seed: u64,
+    /// Fraction of the full Table-1 dataset size to generate. The paper's
+    /// *shape* (algorithm ordering, crossovers) is scale-stable; full
+    /// scale (1.0) reproduces Table-1 sizes exactly.
+    pub scale: f64,
+    pub cores: usize,
+    /// `p` for EclatV4/V5 (paper: 10).
+    pub p: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            seed: env_u64("REPRO_SEED", 2019),
+            scale: env_f64("REPRO_SCALE", 0.25),
+            cores: env_usize(
+                "REPRO_CORES",
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            ),
+            p: 10,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn with_scale(mut self, scale: f64) -> Self {
+        self.scale = scale;
+        self
+    }
+
+    pub fn with_cores(mut self, cores: usize) -> Self {
+        self.cores = cores;
+        self
+    }
+}
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = ExperimentConfig::default();
+        assert!(c.scale > 0.0);
+        assert!(c.cores >= 1);
+        assert_eq!(c.p, 10);
+    }
+
+    #[test]
+    fn builders() {
+        let c = ExperimentConfig::default().with_scale(0.5).with_cores(2);
+        assert_eq!(c.scale, 0.5);
+        assert_eq!(c.cores, 2);
+    }
+}

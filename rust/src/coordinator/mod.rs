@@ -1,0 +1,10 @@
+//! Experiment coordinator: drivers that regenerate every table and
+//! figure of the paper's evaluation (§5), shared by the CLI and the
+//! bench targets.
+
+pub mod config;
+pub mod experiments;
+pub mod report;
+
+pub use config::ExperimentConfig;
+pub use experiments::{fig_cores, fig_minsup, fig_scaling, table1, Algo};

@@ -1,0 +1,243 @@
+//! Report rendering: turn bench suites into the EXPERIMENTS.md blocks
+//! and validate the paper's qualitative claims against measurements.
+
+use crate::util::bench::BenchSuite;
+
+/// A qualitative claim from the paper checked against a measured suite.
+#[derive(Debug, Clone)]
+pub struct ClaimCheck {
+    pub claim: String,
+    pub holds: bool,
+    pub detail: String,
+}
+
+/// Claim: every Eclat variant beats RDD-Apriori at every x (Figs 1a–4a).
+pub fn check_eclat_beats_apriori(suite: &BenchSuite) -> ClaimCheck {
+    let mut holds = true;
+    let mut worst = String::new();
+    let xs: Vec<f64> = unique_xs(suite);
+    for &x in &xs {
+        let Some(apriori) = suite.median("RDD-Apriori", x) else {
+            continue;
+        };
+        for v in ["EclatV1", "EclatV2", "EclatV3", "EclatV4", "EclatV5"] {
+            if let Some(e) = suite.median(v, x) {
+                if e >= apriori {
+                    holds = false;
+                    worst = format!("{v} {:.1}ms >= apriori {:.1}ms at x={x}", e, apriori);
+                }
+            }
+        }
+    }
+    ClaimCheck {
+        claim: "RDD-Eclat outperforms RDD-Apriori at every min_sup".into(),
+        holds,
+        detail: if holds {
+            let speedup = average_speedup(suite);
+            format!("mean speedup vs slowest variant: {speedup:.1}x")
+        } else {
+            worst
+        },
+    }
+}
+
+/// Claim: the Eclat–Apriori gap widens as min_sup decreases (§5.1).
+pub fn check_gap_widens(suite: &BenchSuite) -> ClaimCheck {
+    let mut xs = unique_xs(suite);
+    xs.sort_by(|a, b| b.partial_cmp(a).unwrap()); // descending min_sup
+    let ratios: Vec<f64> = xs
+        .iter()
+        .filter_map(|&x| {
+            let a = suite.median("RDD-Apriori", x)?;
+            let best = ["EclatV1", "EclatV4", "EclatV5"]
+                .iter()
+                .filter_map(|v| suite.median(v, x))
+                .fold(f64::INFINITY, f64::min);
+            Some(a / best)
+        })
+        .collect();
+    let holds = ratios.len() >= 2 && ratios.last().unwrap() > ratios.first().unwrap();
+    ClaimCheck {
+        claim: "execution-time gap widens with decreasing min_sup".into(),
+        holds,
+        detail: format!("apriori/eclat ratios along sweep: {ratios:.1?}"),
+    }
+}
+
+/// Claim: V4/V5 beat V2/V3 (partitioning heuristics help, §5.1).
+pub fn check_v45_beat_v23(suite: &BenchSuite) -> ClaimCheck {
+    let xs = unique_xs(suite);
+    let mut wins = 0usize;
+    let mut total = 0usize;
+    for &x in &xs {
+        let v45: Vec<f64> = ["EclatV4", "EclatV5"]
+            .iter()
+            .filter_map(|v| suite.median(v, x))
+            .collect();
+        let v23: Vec<f64> = ["EclatV2", "EclatV3"]
+            .iter()
+            .filter_map(|v| suite.median(v, x))
+            .collect();
+        if v45.is_empty() || v23.is_empty() {
+            continue;
+        }
+        total += 1;
+        let best45 = v45.iter().copied().fold(f64::INFINITY, f64::min);
+        let best23 = v23.iter().copied().fold(f64::INFINITY, f64::min);
+        if best45 < best23 {
+            wins += 1;
+        }
+    }
+    ClaimCheck {
+        claim: "EclatV4/V5 improve on EclatV2/V3".into(),
+        holds: total > 0 && wins * 2 > total,
+        detail: format!("best(V4,V5) < best(V2,V3) at {wins}/{total} sweep points"),
+    }
+}
+
+/// Claim: execution time decreases with more cores (Fig 5).
+pub fn check_core_scaling(suite: &BenchSuite) -> ClaimCheck {
+    let mut xs = unique_xs(suite);
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (lo, hi) = (xs[0], *xs.last().unwrap());
+    let mut improved = 0usize;
+    let mut total = 0usize;
+    for v in ["EclatV1", "EclatV2", "EclatV3", "EclatV4", "EclatV5"] {
+        if let (Some(a), Some(b)) = (suite.median(v, lo), suite.median(v, hi)) {
+            total += 1;
+            if b < a {
+                improved += 1;
+            }
+        }
+    }
+    ClaimCheck {
+        claim: format!("time decreases from {lo} to {hi} cores"),
+        holds: total > 0 && improved * 2 > total,
+        detail: format!("{improved}/{total} variants faster at {hi} cores"),
+    }
+}
+
+/// Claim: execution time grows ~linearly with dataset size (Fig 6).
+pub fn check_linear_scaling(suite: &BenchSuite) -> ClaimCheck {
+    let mut worst_r = 1.0f64;
+    for v in ["EclatV1", "EclatV2", "EclatV3", "EclatV4", "EclatV5"] {
+        let mut pts: Vec<(f64, f64)> = suite
+            .measurements()
+            .iter()
+            .filter(|m| m.series == v)
+            .map(|m| (m.x, m.median_ms()))
+            .collect();
+        if pts.len() < 3 {
+            continue;
+        }
+        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+        let r = crate::util::stats::pearson(&xs, &ys);
+        worst_r = worst_r.min(r);
+    }
+    ClaimCheck {
+        claim: "execution time linear in dataset size".into(),
+        holds: worst_r > 0.95,
+        detail: format!("worst Pearson r across variants: {worst_r:.4}"),
+    }
+}
+
+/// Render claim checks as a markdown block.
+pub fn render_claims(checks: &[ClaimCheck]) -> String {
+    let mut out = String::from("### Claim checks\n");
+    for c in checks {
+        out.push_str(&format!(
+            "- [{}] {} — {}\n",
+            if c.holds { "x" } else { " " },
+            c.claim,
+            c.detail
+        ));
+    }
+    out
+}
+
+fn unique_xs(suite: &BenchSuite) -> Vec<f64> {
+    let mut xs: Vec<f64> = Vec::new();
+    for m in suite.measurements() {
+        if !xs.iter().any(|&x| (x - m.x).abs() < 1e-12) {
+            xs.push(m.x);
+        }
+    }
+    xs
+}
+
+fn average_speedup(suite: &BenchSuite) -> f64 {
+    let xs = unique_xs(suite);
+    let mut ratios = Vec::new();
+    for &x in &xs {
+        if let Some(a) = suite.median("RDD-Apriori", x) {
+            let worst_eclat = ["EclatV1", "EclatV2", "EclatV3", "EclatV4", "EclatV5"]
+                .iter()
+                .filter_map(|v| suite.median(v, x))
+                .fold(0.0f64, f64::max);
+            if worst_eclat > 0.0 {
+                ratios.push(a / worst_eclat);
+            }
+        }
+    }
+    crate::util::stats::mean(&ratios)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_suite() -> BenchSuite {
+        let mut s = BenchSuite::new("fake", "test").with_reps(1, 0);
+        for (x, apriori, v1, v4) in [
+            (0.02, 100.0, 40.0, 30.0),
+            (0.01, 300.0, 60.0, 45.0),
+        ] {
+            s.record("RDD-Apriori", "min_sup", x, vec![apriori]);
+            s.record("EclatV1", "min_sup", x, vec![v1]);
+            s.record("EclatV2", "min_sup", x, vec![v1 * 1.3]);
+            s.record("EclatV3", "min_sup", x, vec![v1 * 1.25]);
+            s.record("EclatV4", "min_sup", x, vec![v4]);
+            s.record("EclatV5", "min_sup", x, vec![v4 * 1.02]);
+        }
+        s
+    }
+
+    #[test]
+    fn claims_hold_on_paper_shaped_data() {
+        let s = fake_suite();
+        assert!(check_eclat_beats_apriori(&s).holds);
+        assert!(check_gap_widens(&s).holds);
+        assert!(check_v45_beat_v23(&s).holds);
+    }
+
+    #[test]
+    fn claims_fail_on_inverted_data() {
+        let mut s = BenchSuite::new("bad", "test").with_reps(1, 0);
+        s.record("RDD-Apriori", "min_sup", 0.01, vec![10.0]);
+        s.record("EclatV1", "min_sup", 0.01, vec![50.0]);
+        assert!(!check_eclat_beats_apriori(&s).holds);
+    }
+
+    #[test]
+    fn linear_scaling_detects_linearity() {
+        let mut s = BenchSuite::new("lin", "test").with_reps(1, 0);
+        for v in ["EclatV1", "EclatV2", "EclatV3", "EclatV4", "EclatV5"] {
+            for (x, y) in [(1.0, 10.0), (2.0, 21.0), (4.0, 39.0), (8.0, 82.0)] {
+                s.record(v, "size", x, vec![y]);
+            }
+        }
+        assert!(check_linear_scaling(&s).holds);
+    }
+
+    #[test]
+    fn render_claims_markdown() {
+        let out = render_claims(&[ClaimCheck {
+            claim: "x".into(),
+            holds: true,
+            detail: "d".into(),
+        }]);
+        assert!(out.contains("- [x] x — d"));
+    }
+}

@@ -1,0 +1,196 @@
+//! BMS_WebView-like clickstream generator.
+//!
+//! The real BMS_WebView_1/2 datasets (KDD Cup 2000, Blue Martini) are
+//! click-stream sessions over a product catalogue and cannot be
+//! redistributed; this generator reproduces the properties that drive
+//! FIM runtime behaviour (DESIGN.md §3):
+//!
+//!  * Table-1 scale: 59 602 / 77 512 sessions, 497 / 3 340 products,
+//!    average widths 2.5 / 5.
+//!  * Zipf-like product popularity (web traffic is heavy-tailed).
+//!  * Session locality: items within a session cluster around a
+//!    "category" neighbourhood, so frequent 2/3-itemsets exist.
+//!  * Sparse item-id space: raw product ids are spread over a large
+//!    range (the paper's reason `triMatrixMode=false` on BMS — a
+//!    triangular matrix over the id space would blow memory).
+
+use crate::fim::Transaction;
+use crate::util::SplitMix64;
+
+#[derive(Debug, Clone)]
+pub struct BmsSpec {
+    pub n_sessions: usize,
+    pub n_products: usize,
+    pub avg_width: f64,
+    /// Zipf skew of product popularity.
+    pub skew: f64,
+    /// Probability the next click stays in the same category cluster.
+    pub locality: f64,
+    /// Raw ids are `id_stride * k` — spreads the id space like the real
+    /// data's product codes (BMS ids go up to ~89k).
+    pub id_stride: u32,
+}
+
+impl BmsSpec {
+    pub fn bms1() -> Self {
+        Self {
+            n_sessions: 59_602,
+            n_products: 497,
+            avg_width: 2.5,
+            skew: 0.9,
+            locality: 0.55,
+            id_stride: 180, // ids up to ~89.5k, like the real BMS codes
+        }
+    }
+
+    pub fn bms2() -> Self {
+        Self {
+            n_sessions: 77_512,
+            n_products: 3_340,
+            avg_width: 5.0,
+            skew: 0.85,
+            locality: 0.5,
+            id_stride: 27, // ids up to ~90k
+        }
+    }
+
+    pub fn scaled(mut self, factor: f64) -> Self {
+        self.n_sessions = ((self.n_sessions as f64 * factor) as usize).max(1);
+        self
+    }
+
+    /// Generate the sessions.
+    pub fn generate(&self, seed: u64) -> Vec<Transaction> {
+        let mut rng = SplitMix64::new(seed ^ 0xB517_C11C);
+        // Zipf cumulative over product *ranks*.
+        let cum = zipf_cumulative(self.n_products, self.skew);
+        // Category neighbourhoods: products are grouped in blocks of ~20
+        // ranks; a local step picks within the current block.
+        let block = 20usize;
+        let mut sessions = Vec::with_capacity(self.n_sessions);
+        while sessions.len() < self.n_sessions {
+            // Session length: 1 + Poisson(avg-1) keeps the mean at
+            // avg_width with the observed mode at small sizes.
+            let len = 1 + rng.poisson(self.avg_width - 1.0);
+            let mut session: Vec<u32> = Vec::with_capacity(len);
+            let mut current = pick_zipf(&mut rng, &cum);
+            session.push(self.rank_to_id(current));
+            while session.len() < len {
+                current = if rng.gen_bool(self.locality) {
+                    // stay in the category block
+                    let base = (current / block) * block;
+                    let width = block.min(self.n_products - base);
+                    base + rng.gen_range(width)
+                } else {
+                    pick_zipf(&mut rng, &cum)
+                };
+                let id = self.rank_to_id(current);
+                if !session.contains(&id) {
+                    session.push(id);
+                }
+            }
+            session.sort_unstable();
+            sessions.push(session);
+        }
+        sessions
+    }
+
+    #[inline]
+    fn rank_to_id(&self, rank: usize) -> u32 {
+        // popular products get scattered ids too: permute by multiplying
+        // in a fixed odd stride modulo the catalogue, then stretch.
+        let perm = (rank as u64 * 2654435761 % self.n_products as u64) as u32;
+        perm * self.id_stride + 3
+    }
+}
+
+fn zipf_cumulative(n: usize, s: f64) -> Vec<f64> {
+    let raw: Vec<f64> = (1..=n).map(|k| 1.0 / (k as f64).powf(s)).collect();
+    let total: f64 = raw.iter().sum();
+    let mut cum = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    for w in raw {
+        acc += w / total;
+        cum.push(acc);
+    }
+    if let Some(last) = cum.last_mut() {
+        *last = 1.0;
+    }
+    cum
+}
+
+fn pick_zipf(rng: &mut SplitMix64, cum: &[f64]) -> usize {
+    let u = rng.next_f64();
+    cum.partition_point(|&c| c < u).min(cum.len() - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let s = BmsSpec::bms1().scaled(0.01);
+        assert_eq!(s.generate(3), s.generate(3));
+    }
+
+    #[test]
+    fn bms1_statistics_near_table1() {
+        let s = BmsSpec::bms1().scaled(0.2); // ~12K sessions
+        let txns = s.generate(42);
+        let avg = txns.iter().map(|t| t.len()).sum::<usize>() as f64 / txns.len() as f64;
+        assert!((1.8..3.4).contains(&avg), "avg width {avg} vs paper 2.5");
+        let distinct: std::collections::HashSet<u32> = txns.iter().flatten().copied().collect();
+        assert!(
+            distinct.len() <= 497,
+            "more products than catalogue: {}",
+            distinct.len()
+        );
+        assert!(distinct.len() > 300, "catalogue under-used: {}", distinct.len());
+    }
+
+    #[test]
+    fn item_id_space_is_large() {
+        // the property that forces triMatrixMode=false in the paper
+        let txns = BmsSpec::bms1().scaled(0.05).generate(1);
+        let max_id = txns.iter().flatten().max().copied().unwrap();
+        assert!(max_id > 50_000, "ids too dense: max {max_id}");
+    }
+
+    #[test]
+    fn popularity_is_skewed() {
+        let txns = BmsSpec::bms2().scaled(0.1).generate(9);
+        let mut counts: std::collections::HashMap<u32, usize> = Default::default();
+        for t in &txns {
+            for &i in t {
+                *counts.entry(i).or_default() += 1;
+            }
+        }
+        let mut freqs: Vec<usize> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        let total: usize = freqs.iter().sum();
+        let top10: usize = freqs.iter().take(freqs.len() / 10).sum();
+        assert!(
+            top10 as f64 / total as f64 > 0.4,
+            "top-10% items only {}%",
+            100 * top10 / total
+        );
+    }
+
+    #[test]
+    fn sessions_sorted_unique_nonempty() {
+        let txns = BmsSpec::bms2().scaled(0.02).generate(4);
+        for t in &txns {
+            assert!(!t.is_empty());
+            assert!(t.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn locality_produces_frequent_pairs() {
+        let txns = BmsSpec::bms2().scaled(0.2).generate(2);
+        let min_sup = (0.003 * txns.len() as f64).ceil() as u32;
+        let r = crate::fim::sequential::eclat_sequential(&txns, min_sup);
+        assert!(r.max_length() >= 2, "no frequent pairs at 0.3% support");
+    }
+}

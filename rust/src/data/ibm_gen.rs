@@ -1,0 +1,236 @@
+//! IBM Quest synthetic transaction generator — reimplementation of the
+//! generative process from Agrawal & Srikant, "Fast Algorithms for Mining
+//! Association Rules" (VLDB '94, §Experiments), the tool that produced
+//! T10I4D100K and T40I10D100K.
+//!
+//! Process (paper parameters in brackets):
+//!  * Draw |L| = `n_patterns` [2000] *potentially frequent itemsets*:
+//!    sizes ~ Poisson(mean `pattern_len` = I), items drawn with some
+//!    fraction carried over from the previous pattern (correlation) and
+//!    the rest picked from a skewed item distribution.
+//!  * Each pattern gets a weight ~ Exponential(1), normalized to sum 1,
+//!    and a corruption level ~ clipped Normal(0.5, 0.1).
+//!  * Each transaction draws its size ~ Poisson(mean `avg_txn_len` = T),
+//!    then packs patterns chosen by weight; each chosen pattern is
+//!    *corrupted* — items dropped with the pattern's corruption level —
+//!    and inserted until the transaction is full (last pattern kept with
+//!    probability proportional to the overflow, as in the original).
+
+use crate::fim::Transaction;
+use crate::util::SplitMix64;
+
+/// Generator parameters: T = `avg_txn_len`, I = `pattern_len`,
+/// D = `n_transactions`, N = `n_items`.
+#[derive(Debug, Clone)]
+pub struct QuestSpec {
+    pub n_transactions: usize,
+    pub n_items: usize,
+    pub avg_txn_len: f64,
+    pub pattern_len: f64,
+    pub n_patterns: usize,
+    pub correlation: f64,
+}
+
+impl QuestSpec {
+    /// T10I4D100K over 870 items (Table 1).
+    pub fn t10i4d100k() -> Self {
+        Self {
+            n_transactions: 100_000,
+            n_items: 870,
+            avg_txn_len: 10.0,
+            pattern_len: 4.0,
+            n_patterns: 1000,
+            correlation: 0.25,
+        }
+    }
+
+    /// T40I10D100K over 1000 items (Table 1).
+    pub fn t40i10d100k() -> Self {
+        Self {
+            n_transactions: 100_000,
+            n_items: 1_000,
+            avg_txn_len: 40.0,
+            pattern_len: 10.0,
+            n_patterns: 2000,
+            correlation: 0.25,
+        }
+    }
+
+    pub fn scaled(mut self, factor: f64) -> Self {
+        self.n_transactions = ((self.n_transactions as f64 * factor) as usize).max(1);
+        self
+    }
+
+    /// Generate the database.
+    pub fn generate(&self, seed: u64) -> Vec<Transaction> {
+        let mut rng = SplitMix64::new(seed ^ 0x1B3_9E57);
+        let patterns = self.gen_patterns(&mut rng);
+        let weights = cumulative_weights(&mut rng, patterns.len());
+        let corruption: Vec<f64> = (0..patterns.len())
+            .map(|_| rng.normal(0.5, 0.1).clamp(0.0, 1.0))
+            .collect();
+
+        let mut txns = Vec::with_capacity(self.n_transactions);
+        while txns.len() < self.n_transactions {
+            let target = rng.poisson(self.avg_txn_len).max(1);
+            let mut txn: Transaction = Vec::with_capacity(target + 4);
+            while txn.len() < target {
+                let pi = pick_weighted(&mut rng, &weights);
+                let pat = &patterns[pi];
+                // corrupt: drop items while coin < corruption level
+                let mut kept: Vec<u32> = Vec::with_capacity(pat.len());
+                for &it in pat {
+                    if !rng.gen_bool(corruption[pi]) {
+                        kept.push(it);
+                    }
+                }
+                if kept.is_empty() {
+                    kept.push(pat[rng.gen_range(pat.len())]);
+                }
+                // if it overflows the size, keep it only half the time
+                // (original generator's rule), else stop.
+                if txn.len() + kept.len() > target && !txn.is_empty() {
+                    if rng.gen_bool(0.5) {
+                        txn.extend(kept);
+                    }
+                    break;
+                }
+                txn.extend(kept);
+            }
+            txn.sort_unstable();
+            txn.dedup();
+            if !txn.is_empty() {
+                txns.push(txn);
+            }
+        }
+        txns
+    }
+
+    /// The potentially-frequent patterns, with item carry-over between
+    /// consecutive patterns (the original's correlation knob).
+    fn gen_patterns(&self, rng: &mut SplitMix64) -> Vec<Vec<u32>> {
+        let mut patterns: Vec<Vec<u32>> = Vec::with_capacity(self.n_patterns);
+        for i in 0..self.n_patterns {
+            let len = rng.poisson(self.pattern_len).max(1);
+            let mut items: Vec<u32> = Vec::with_capacity(len);
+            if i > 0 {
+                // carry over a correlated fraction from the previous pattern
+                let prev = &patterns[i - 1];
+                for &it in prev.iter() {
+                    if items.len() < len && rng.gen_bool(self.correlation) {
+                        items.push(it);
+                    }
+                }
+            }
+            while items.len() < len {
+                // skewed item popularity: square the uniform to favour
+                // low ids (a smooth Zipf-ish head)
+                let u = rng.next_f64();
+                let item = ((u * u) * self.n_items as f64) as u32;
+                let item = item.min(self.n_items as u32 - 1);
+                if !items.contains(&item) {
+                    items.push(item);
+                }
+            }
+            items.sort_unstable();
+            items.dedup();
+            patterns.push(items);
+        }
+        patterns
+    }
+}
+
+/// Exponential(1) weights, normalized, as a cumulative distribution.
+fn cumulative_weights(rng: &mut SplitMix64, n: usize) -> Vec<f64> {
+    let raw: Vec<f64> = (0..n).map(|_| rng.exponential(1.0)).collect();
+    let total: f64 = raw.iter().sum();
+    let mut cum = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    for w in raw {
+        acc += w / total;
+        cum.push(acc);
+    }
+    if let Some(last) = cum.last_mut() {
+        *last = 1.0;
+    }
+    cum
+}
+
+/// Binary-search a cumulative weight table.
+fn pick_weighted(rng: &mut SplitMix64, cum: &[f64]) -> usize {
+    let u = rng.next_f64();
+    cum.partition_point(|&c| c < u).min(cum.len() - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = QuestSpec::t10i4d100k().scaled(0.01);
+        assert_eq!(spec.generate(7), spec.generate(7));
+        assert_ne!(spec.generate(7), spec.generate(8));
+    }
+
+    #[test]
+    fn t10_statistics_near_table1() {
+        let spec = QuestSpec::t10i4d100k().scaled(0.1); // 10K txns
+        let txns = spec.generate(42);
+        assert_eq!(txns.len(), 10_000);
+        let avg: f64 = txns.iter().map(|t| t.len()).sum::<usize>() as f64 / txns.len() as f64;
+        assert!(
+            (7.0..13.0).contains(&avg),
+            "avg width {avg} too far from T=10"
+        );
+        let max_item = txns.iter().flatten().max().copied().unwrap_or(0);
+        assert!(max_item < 870);
+        // item diversity: most of the catalogue appears
+        let distinct: std::collections::HashSet<u32> =
+            txns.iter().flatten().copied().collect();
+        assert!(distinct.len() > 400, "only {} distinct items", distinct.len());
+    }
+
+    #[test]
+    fn t40_wider_than_t10() {
+        let t10 = QuestSpec::t10i4d100k().scaled(0.02).generate(1);
+        let t40 = QuestSpec::t40i10d100k().scaled(0.02).generate(1);
+        let avg = |txns: &[Transaction]| {
+            txns.iter().map(|t| t.len()).sum::<usize>() as f64 / txns.len() as f64
+        };
+        assert!(avg(&t40) > 2.5 * avg(&t10), "t40 {} vs t10 {}", avg(&t40), avg(&t10));
+    }
+
+    #[test]
+    fn transactions_sorted_unique() {
+        let txns = QuestSpec::t10i4d100k().scaled(0.005).generate(3);
+        for t in &txns {
+            assert!(t.windows(2).all(|w| w[0] < w[1]), "not sorted/unique: {t:?}");
+            assert!(!t.is_empty());
+        }
+    }
+
+    #[test]
+    fn has_frequent_patterns_not_just_noise() {
+        // The generator must plant co-occurring patterns: mining at 1%
+        // support should find some 2-itemsets (pure noise wouldn't).
+        let txns = QuestSpec::t10i4d100k().scaled(0.05).generate(11); // 5K
+        let min_sup = (0.01 * txns.len() as f64).ceil() as u32;
+        let result = crate::fim::sequential::eclat_sequential(&txns, min_sup);
+        assert!(
+            result.max_length() >= 2,
+            "no frequent 2-itemsets at 1% support — generator has no structure"
+        );
+    }
+
+    #[test]
+    fn weighted_pick_in_range_and_biased() {
+        let mut rng = SplitMix64::new(5);
+        let cum = cumulative_weights(&mut rng, 100);
+        assert_eq!(cum.len(), 100);
+        assert!((cum[99] - 1.0).abs() < 1e-12);
+        for _ in 0..1000 {
+            assert!(pick_weighted(&mut rng, &cum) < 100);
+        }
+    }
+}

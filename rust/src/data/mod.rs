@@ -1,0 +1,94 @@
+//! Benchmark datasets: generators for the paper's four datasets (Table 1)
+//! and file I/O.
+//!
+//! The real BMS_WebView click-streams are not redistributable and the
+//! original IBM Quest binary is long gone, so both are *re-implemented
+//! generators* calibrated to Table 1's statistics (see DESIGN.md §3 for
+//! the substitution argument).
+
+pub mod bms_gen;
+pub mod ibm_gen;
+pub mod reader;
+pub mod scale;
+pub mod stats;
+
+pub use bms_gen::BmsSpec;
+pub use ibm_gen::QuestSpec;
+pub use reader::{read_transactions, write_transactions};
+pub use stats::DatasetStats;
+
+use crate::fim::Transaction;
+
+/// The four benchmark datasets of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataset {
+    Bms1,
+    Bms2,
+    T10I4D100K,
+    T40I10D100K,
+}
+
+impl Dataset {
+    pub fn all() -> [Dataset; 4] {
+        [Self::Bms1, Self::Bms2, Self::T10I4D100K, Self::T40I10D100K]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Bms1 => "BMS_WebView_1",
+            Self::Bms2 => "BMS_WebView_2",
+            Self::T10I4D100K => "T10I4D100K",
+            Self::T40I10D100K => "T40I10D100K",
+        }
+    }
+
+    /// Paper Table 1 properties (transactions, items, avg width).
+    pub fn table1_row(&self) -> (usize, usize, f64) {
+        match self {
+            Self::Bms1 => (59_602, 497, 2.5),
+            Self::Bms2 => (77_512, 3_340, 5.0),
+            Self::T10I4D100K => (100_000, 870, 10.0),
+            Self::T40I10D100K => (100_000, 1_000, 40.0),
+        }
+    }
+
+    /// Whether the paper enables the triangular matrix for this dataset.
+    pub fn tri_matrix_mode(&self) -> bool {
+        matches!(self, Self::T10I4D100K | Self::T40I10D100K)
+    }
+
+    /// Generate the dataset (full size) with the given seed.
+    pub fn generate(&self, seed: u64) -> Vec<Transaction> {
+        self.generate_scaled(seed, 1.0)
+    }
+
+    /// Generate with a scale factor on the transaction count (used by the
+    /// quick test paths; Fig. 6 uses `scale::replicate` instead).
+    pub fn generate_scaled(&self, seed: u64, scale: f64) -> Vec<Transaction> {
+        match self {
+            Self::Bms1 => BmsSpec::bms1().scaled(scale).generate(seed),
+            Self::Bms2 => BmsSpec::bms2().scaled(scale).generate(seed),
+            Self::T10I4D100K => QuestSpec::t10i4d100k().scaled(scale).generate(seed),
+            Self::T40I10D100K => QuestSpec::t40i10d100k().scaled(scale).generate(seed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_rows_match_paper() {
+        assert_eq!(Dataset::Bms1.table1_row(), (59_602, 497, 2.5));
+        assert_eq!(Dataset::T40I10D100K.table1_row().0, 100_000);
+    }
+
+    #[test]
+    fn tri_matrix_flags_match_paper() {
+        assert!(!Dataset::Bms1.tri_matrix_mode());
+        assert!(!Dataset::Bms2.tri_matrix_mode());
+        assert!(Dataset::T10I4D100K.tri_matrix_mode());
+        assert!(Dataset::T40I10D100K.tri_matrix_mode());
+    }
+}

@@ -1,0 +1,81 @@
+//! Transaction file I/O in the standard FIMI format: one transaction per
+//! line, space-separated integer items (what `sc.textFile` reads in the
+//! paper, and what SPMF / the FIMI repository distribute).
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+
+use crate::fim::{types::Item, Transaction};
+
+/// Read a FIMI-format file into normalized (sorted, deduped) transactions.
+pub fn read_transactions(path: &str) -> std::io::Result<Vec<Transaction>> {
+    let f = std::fs::File::open(path)?;
+    let reader = BufReader::new(f);
+    let mut out = Vec::new();
+    for line in reader.lines() {
+        let line = line?;
+        let mut t: Transaction = line
+            .split_whitespace()
+            .filter_map(|s| s.parse::<Item>().ok())
+            .collect();
+        if t.is_empty() {
+            continue;
+        }
+        t.sort_unstable();
+        t.dedup();
+        out.push(t);
+    }
+    Ok(out)
+}
+
+/// Write transactions in FIMI format.
+pub fn write_transactions(path: &str, txns: &[Transaction]) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for t in txns {
+        let mut first = true;
+        for item in t {
+            if !first {
+                w.write_all(b" ")?;
+            }
+            write!(w, "{item}")?;
+            first = false;
+        }
+        w.write_all(b"\n")?;
+    }
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("rdd_eclat_reader_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let txns = vec![vec![1u32, 2, 3], vec![5], vec![2, 9, 100]];
+        let path = tmp("roundtrip.txt");
+        write_transactions(&path, &txns).unwrap();
+        assert_eq!(read_transactions(&path).unwrap(), txns);
+    }
+
+    #[test]
+    fn normalizes_and_skips_empty() {
+        let path = tmp("messy.txt");
+        std::fs::write(&path, "3 1 2 2\n\n  \n7\nx 5 y 4\n").unwrap();
+        let txns = read_transactions(&path).unwrap();
+        assert_eq!(txns, vec![vec![1, 2, 3], vec![7], vec![4, 5]]);
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(read_transactions("/nonexistent/nope.txt").is_err());
+    }
+}

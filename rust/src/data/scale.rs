@@ -1,0 +1,92 @@
+//! Dataset scaling for the Fig. 6 experiment: "to get the larger dataset
+//! size, it is doubled each time from its previous dataset", 100K → 1600K
+//! transactions.
+//!
+//! Doubling follows the paper's methodology (replicate the transaction
+//! set), with an optional jitter mode that re-draws item ids through the
+//! generator instead — both keep the support *fractions* identical, so a
+//! fixed relative min_sup finds the same itemsets at every scale.
+
+use crate::fim::Transaction;
+use crate::util::SplitMix64;
+
+/// Replicate a database `factor` times (paper's doubling).
+pub fn replicate(base: &[Transaction], factor: usize) -> Vec<Transaction> {
+    let mut out = Vec::with_capacity(base.len() * factor);
+    for _ in 0..factor {
+        out.extend_from_slice(base);
+    }
+    out
+}
+
+/// Replicate with per-copy transaction shuffling — same multiset of
+/// transactions, different order, so partition contents differ per copy
+/// (defeats accidental cache-locality advantages in scaling runs).
+pub fn replicate_shuffled(base: &[Transaction], factor: usize, seed: u64) -> Vec<Transaction> {
+    let mut out = replicate(base, factor);
+    let mut rng = SplitMix64::new(seed);
+    rng.shuffle(&mut out);
+    out
+}
+
+/// The Fig. 6 x-axis: scale factors 1, 2, 4, 8, 16 (100K → 1600K).
+pub fn fig6_factors() -> [usize; 5] {
+    [1, 2, 4, 8, 16]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fim::sequential::eclat_sequential;
+    use crate::fim::types::abs_min_sup;
+
+    #[test]
+    fn replicate_sizes() {
+        let base = vec![vec![1u32, 2], vec![3]];
+        assert_eq!(replicate(&base, 4).len(), 8);
+        assert_eq!(replicate(&base, 1), base);
+    }
+
+    #[test]
+    fn shuffled_same_multiset() {
+        let base: Vec<Transaction> = (0..50).map(|i| vec![i as u32]).collect();
+        let mut a = replicate(&base, 3);
+        let mut b = replicate_shuffled(&base, 3, 9);
+        assert_ne!(a, b, "shuffle changed nothing");
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scaling_preserves_relative_supports() {
+        // Mining at the same *fraction* must find identical itemsets with
+        // supports scaled by the factor.
+        let base = vec![
+            vec![1u32, 2, 3],
+            vec![1, 2],
+            vec![2, 3],
+            vec![1, 3],
+            vec![1, 2, 3],
+        ];
+        let frac = 0.4;
+        let r1 = eclat_sequential(&base, abs_min_sup(frac, base.len()));
+        let big = replicate(&base, 4);
+        let r4 = eclat_sequential(&big, abs_min_sup(frac, big.len()));
+        let c1: Vec<(Vec<u32>, u32)> = r1.canonical().into_iter().collect();
+        let c4: Vec<(Vec<u32>, u32)> = r4.canonical().into_iter().collect();
+        assert_eq!(c1.len(), c4.len());
+        for ((i1, s1), (i4, s4)) in c1.iter().zip(&c4) {
+            assert_eq!(i1, i4);
+            assert_eq!(s1 * 4, *s4);
+        }
+    }
+
+    #[test]
+    fn fig6_doubles() {
+        let f = fig6_factors();
+        for w in f.windows(2) {
+            assert_eq!(w[1], w[0] * 2);
+        }
+    }
+}

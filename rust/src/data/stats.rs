@@ -1,0 +1,85 @@
+//! Dataset statistics profiler — regenerates Table 1.
+
+use crate::fim::Transaction;
+
+/// The properties Table 1 reports, plus extras used in DESIGN.md.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetStats {
+    pub transactions: usize,
+    pub distinct_items: usize,
+    pub avg_width: f64,
+    pub max_width: usize,
+    pub max_item_id: u32,
+    /// Density = avg_width / distinct_items.
+    pub density: f64,
+}
+
+impl DatasetStats {
+    pub fn compute(txns: &[Transaction]) -> Self {
+        let transactions = txns.len();
+        let mut items = std::collections::HashSet::new();
+        let mut total = 0usize;
+        let mut max_width = 0usize;
+        let mut max_item_id = 0u32;
+        for t in txns {
+            total += t.len();
+            max_width = max_width.max(t.len());
+            for &i in t {
+                items.insert(i);
+                max_item_id = max_item_id.max(i);
+            }
+        }
+        let distinct_items = items.len();
+        let avg_width = if transactions == 0 {
+            0.0
+        } else {
+            total as f64 / transactions as f64
+        };
+        let density = if distinct_items == 0 {
+            0.0
+        } else {
+            avg_width / distinct_items as f64
+        };
+        Self {
+            transactions,
+            distinct_items,
+            avg_width,
+            max_width,
+            max_item_id,
+            density,
+        }
+    }
+}
+
+impl std::fmt::Display for DatasetStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} txns, {} items, avg width {:.2}, max width {}, max id {}",
+            self.transactions, self.distinct_items, self.avg_width, self.max_width, self.max_item_id
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn computes_basic_stats() {
+        let txns = vec![vec![1u32, 2, 3], vec![2, 3], vec![900]];
+        let s = DatasetStats::compute(&txns);
+        assert_eq!(s.transactions, 3);
+        assert_eq!(s.distinct_items, 4);
+        assert!((s.avg_width - 2.0).abs() < 1e-12);
+        assert_eq!(s.max_width, 3);
+        assert_eq!(s.max_item_id, 900);
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let s = DatasetStats::compute(&[]);
+        assert_eq!(s.transactions, 0);
+        assert_eq!(s.avg_width, 0.0);
+    }
+}

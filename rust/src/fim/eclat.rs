@@ -1,0 +1,531 @@
+//! RDD-Eclat: the paper's five variants (§4), expressed against the
+//! Sparklet operator surface so each phase reads like the pseudo-code.
+//!
+//! | Variant | Phase structure (paper) |
+//! |---------|-------------------------|
+//! | V1 | P1: vertical DB via `flatMapToPair`+`groupByKey` on the unpartitioned input; P2: triangular-matrix accumulator over raw transactions; P3: driver builds equivalence classes, `partitionBy(defaultPartitioner(n-1))`, `flatMap(Bottom-Up)` |
+//! | V2 | P1: item counts via `reduceByKey`; P2: broadcast frequent-item trie, Borgelt-filter transactions, tri-matrix on filtered; P3: `coalesce(1)` + `flatMapToPair`+`groupByKey` vertical DB; P4 = V1's P3 |
+//! | V3 | V2 but P3 builds the vertical DB in a hashmap *accumulator* |
+//! | V4 | V3 with `hashPartitioner(p)` in P4 |
+//! | V5 | V3 with `reverseHashPartitioner(p)` in P4 |
+//!
+//! All variants return identical itemsets (asserted against the
+//! sequential oracles); they differ in operator/shuffle structure, which
+//! is what the paper's figures measure.
+
+use std::sync::Arc;
+
+use crate::sparklet::accumulator::AccumValue;
+use crate::sparklet::{PairRdd, Rdd, SparkletContext};
+use crate::util::hash::FxHashMap;
+
+use super::eqclass::{bottom_up, build_classes, EquivalenceClass};
+use super::partitioners;
+use super::tidset::{TidOps, VecTidset};
+use super::trie::ItemTrie;
+use super::trimatrix::TriMatrix;
+use super::types::{FrequentItemset, Item, MiningResult, Transaction};
+
+/// Which variant to run. `V1`–`V5` are the paper's five; `V6Fused` is
+/// this repo's implementation of the paper's §6 future work: the best
+/// modules assembled — transaction filtering + hashmap vertical DB (V3
+/// base), **2-length-prefix** equivalence classes, and the LPT
+/// weight-balanced class partitioner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EclatVariant {
+    V1,
+    V2,
+    V3,
+    V4,
+    V5,
+    V6Fused,
+}
+
+impl EclatVariant {
+    /// The paper's five variants (what the figures sweep).
+    pub fn all() -> [EclatVariant; 5] {
+        [Self::V1, Self::V2, Self::V3, Self::V4, Self::V5]
+    }
+
+    /// All variants including the future-work fusion.
+    pub fn all_with_fused() -> [EclatVariant; 6] {
+        [Self::V1, Self::V2, Self::V3, Self::V4, Self::V5, Self::V6Fused]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::V1 => "EclatV1",
+            Self::V2 => "EclatV2",
+            Self::V3 => "EclatV3",
+            Self::V4 => "EclatV4",
+            Self::V5 => "EclatV5",
+            Self::V6Fused => "EclatV6-fused",
+        }
+    }
+}
+
+/// Mining parameters (the paper's `min_sup`, `triMatrixMode`, `p`).
+#[derive(Clone)]
+pub struct EclatConfig {
+    pub variant: EclatVariant,
+    /// Absolute minimum support count (see `types::abs_min_sup`).
+    pub min_sup: u32,
+    /// Enable the triangular-matrix 2-itemset optimization. The paper
+    /// sets this false for BMS1/BMS2 (item-id space too large).
+    pub tri_matrix_mode: bool,
+    /// `p`: number of equivalence-class partitions for V4/V5/V6 (paper: 10).
+    pub p: usize,
+    /// Equivalence-class prefix length: 1 (the paper) or 2 (§6 future
+    /// work). Ignored by V6Fused, which always uses 2.
+    pub prefix_len: usize,
+}
+
+impl EclatConfig {
+    pub fn new(variant: EclatVariant, min_sup: u32) -> Self {
+        Self {
+            variant,
+            min_sup,
+            tri_matrix_mode: true,
+            p: 10,
+            prefix_len: 1,
+        }
+    }
+
+    pub fn with_prefix_len(mut self, k: usize) -> Self {
+        assert!((1..=2).contains(&k), "prefix_len must be 1 or 2");
+        self.prefix_len = k;
+        self
+    }
+
+    pub fn with_tri_matrix(mut self, on: bool) -> Self {
+        self.tri_matrix_mode = on;
+        self
+    }
+
+    pub fn with_p(mut self, p: usize) -> Self {
+        self.p = p.max(1);
+        self
+    }
+}
+
+/// Accumulator value for EclatV3's vertical-database hashmap.
+impl AccumValue for FxHashMap<Item, Vec<u32>> {
+    fn merge(&mut self, other: Self) {
+        for (k, mut v) in other {
+            self.entry(k).or_default().append(&mut v);
+        }
+    }
+}
+
+/// Parse a dataset line ("item item item") into a normalized transaction.
+pub fn parse_line(line: &str) -> Transaction {
+    let mut t: Transaction = line
+        .split_whitespace()
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    t.sort_unstable();
+    t.dedup();
+    t
+}
+
+/// Lines RDD -> normalized transactions RDD.
+pub fn transactions_from_lines(lines: &Rdd<String>) -> Rdd<Transaction> {
+    lines
+        .map(|l| parse_line(&l))
+        .filter(|t| !t.is_empty())
+}
+
+// --------------------------------------------------------------- phases
+
+/// V1 Phase-1 (Algorithm 2): vertical dataset from the *unpartitioned*
+/// input: `flatMapToPair(t -> (item, tid))` + `groupByKey` + min_sup
+/// filter. Returns the (item, tidset) list sorted by ascending support
+/// and the transaction count.
+fn v1_phase1(txns: &Rdd<Transaction>, min_sup: u32) -> (Vec<(Item, Vec<u32>)>, usize) {
+    let single = txns.coalesce(1);
+    let n_txns = single.count();
+    let item_tids = single
+        .zip_with_index()
+        .flat_map_to_pair(|(t, tid)| {
+            t.into_iter()
+                .map(move |item| (item, tid as u32))
+                .collect::<Vec<_>>()
+        })
+        .group_by_key();
+    let freq_item_tids = item_tids.filter(move |(_, tids)| tids.len() as u32 >= min_sup);
+    let mut list: Vec<(Item, Vec<u32>)> = freq_item_tids
+        .collect()
+        .into_iter()
+        .map(|(item, mut tids)| {
+            tids.sort_unstable();
+            (item, tids)
+        })
+        .collect();
+    // "sorted in the ascending order of support" (ties by item id).
+    list.sort_by_key(|(item, tids)| (tids.len(), *item));
+    (list, n_txns)
+}
+
+/// V2/V3 Phase-1 (Algorithm 5): frequent items via word-count.
+fn v2_phase1(sc: &SparkletContext, txns: &Rdd<Transaction>, min_sup: u32) -> Vec<(Item, u32)> {
+    let _ = sc;
+    let item_counts = txns
+        .flat_map(|t| t)
+        .map_to_pair(|item| (item, 1u32))
+        .reduce_by_key(|a, b| a + b);
+    let mut freq: Vec<(Item, u32)> = item_counts
+        .filter(move |(_, c)| *c >= min_sup)
+        .collect();
+    // "list of frequent items in alphanumeric order"
+    freq.sort_by_key(|(item, _)| *item);
+    freq
+}
+
+/// Phase-2 (Algorithms 3/6): the triangular-matrix accumulator over all
+/// 2-item combinations, computed in parallel on `defaultParallelism`
+/// partitions. `item_space` is the matrix dimension: V1 indexes by raw
+/// item id (the paper's memory blowup on BMS), V2+ index filtered items.
+fn phase2_trimatrix(
+    sc: &SparkletContext,
+    txns: &Rdd<Transaction>,
+    item_space: usize,
+) -> TriMatrix {
+    let acc = sc.accumulator(move || TriMatrix::new(item_space));
+    let acc2 = acc.clone();
+    let rep = txns.repartition(sc.default_parallelism());
+    rep.foreach_partition(move |_, txns| {
+        acc2.update_in_place(|m| {
+            for t in &txns {
+                m.update_transaction(t);
+            }
+        });
+    });
+    acc.drain()
+}
+
+/// V2 Phase-3 (Algorithm 7): vertical DB from filtered transactions via
+/// `coalesce(1)` + `flatMapToPair` + `groupByKey`.
+fn v2_phase3(filtered: &Rdd<Transaction>, min_sup: u32) -> (Vec<(Item, Vec<u32>)>, usize) {
+    // identical machinery to v1_phase1 but over filtered transactions
+    v1_phase1(filtered, min_sup)
+}
+
+/// V3 Phase-3: vertical DB accumulated into a shared hashmap.
+fn v3_phase3(
+    sc: &SparkletContext,
+    filtered: &Rdd<Transaction>,
+    freq_items: &[(Item, u32)],
+) -> (Vec<(Item, Vec<u32>)>, usize) {
+    let single = filtered.coalesce(1);
+    let n_txns = single.count();
+    let acc = sc.accumulator(FxHashMap::<Item, Vec<u32>>::default);
+    let acc2 = acc.clone();
+    single
+        .zip_with_index()
+        .foreach_partition(move |_, items| {
+            acc2.update_in_place(|map| {
+                for (t, tid) in &items {
+                    for &item in t {
+                        map.entry(item).or_default().push(*tid as u32);
+                    }
+                }
+            });
+        });
+    let mut map = acc.drain();
+    // The updated hashmap is used to sort Phase-1's frequent items by
+    // total order of increasing support.
+    let mut list: Vec<(Item, Vec<u32>)> = freq_items
+        .iter()
+        .filter_map(|(item, _)| {
+            map.remove(item).map(|mut tids| {
+                tids.sort_unstable();
+                (*item, tids)
+            })
+        })
+        .collect();
+    list.sort_by_key(|(item, tids)| (tids.len(), *item));
+    (list, n_txns)
+}
+
+/// How Phase-4 places equivalence classes on partitions.
+enum PartitionStrategy {
+    /// A fixed rank-based partitioner (default / hash / reverse-hash).
+    Fixed(Arc<crate::sparklet::partitioner::FnPartitioner<usize>>),
+    /// LPT over actual class weights into `p` partitions (V6).
+    Weighted(usize),
+}
+
+/// Phase-3/4 (Algorithm 4): build equivalence classes on the driver,
+/// parallelize + `partitionBy` + `flatMap(Bottom-Up)`. `prefix_len`
+/// selects 1-length (paper) or 2-length (§6 future work) class prefixes.
+fn phase_classes<TS: TidOps>(
+    sc: &SparkletContext,
+    vertical: Vec<(Item, TS)>,
+    min_sup: u32,
+    tri_matrix: Option<&TriMatrix>,
+    strategy: PartitionStrategy,
+    prefix_len: usize,
+) -> Vec<FrequentItemset> {
+    let mut out: Vec<FrequentItemset> = Vec::new();
+    let mut classes: Vec<(usize, EquivalenceClass<TS>)> =
+        build_classes(&vertical, min_sup, tri_matrix, |item| item, &mut out);
+    if prefix_len >= 2 {
+        let mut threes = Vec::new();
+        classes = crate::fim::eqclass::decompose_to_prefix2(classes, min_sup, &mut threes);
+        out.extend(threes);
+    }
+    if classes.is_empty() {
+        return out;
+    }
+    let partitioner = match strategy {
+        PartitionStrategy::Fixed(p) => p,
+        PartitionStrategy::Weighted(p) => {
+            let weights: Vec<usize> = classes.iter().map(|(_, c)| c.weight()).collect();
+            partitioners::weighted_partitioner(&weights, p)
+        }
+    };
+    let ecs = sc
+        .parallelize(classes, 1)
+        .partition_by(partitioner)
+        .cache();
+    let deeper = ecs.flat_map(move |(_, ec)| {
+        let mut acc = Vec::new();
+        bottom_up(&ec, min_sup, &mut acc);
+        acc
+    });
+    out.extend(deeper.collect());
+    out
+}
+
+// -------------------------------------------------------------- variants
+
+/// Run the configured RDD-Eclat variant over a transactions RDD.
+pub fn mine_eclat(
+    sc: &SparkletContext,
+    txns: &Rdd<Transaction>,
+    cfg: &EclatConfig,
+) -> MiningResult {
+    match cfg.variant {
+        EclatVariant::V1 => mine_v1(sc, txns, cfg),
+        _ => mine_v2plus(sc, txns, cfg),
+    }
+}
+
+fn mine_v1(sc: &SparkletContext, txns: &Rdd<Transaction>, cfg: &EclatConfig) -> MiningResult {
+    let txns = txns.cache();
+    // Phase-1
+    let (vertical_tids, n_txns) = v1_phase1(&txns, cfg.min_sup);
+    let mut result: Vec<FrequentItemset> = vertical_tids
+        .iter()
+        .map(|(item, tids)| FrequentItemset::new(vec![*item], tids.len() as u32))
+        .collect();
+    let n = vertical_tids.len();
+    if n < 2 {
+        return MiningResult::new(result);
+    }
+    // Phase-2: triangular matrix over *raw* item ids (V1 behaviour).
+    let tri = if cfg.tri_matrix_mode {
+        let max_item = txns
+            .map(|t| t.into_iter().max().unwrap_or(0))
+            .reduce(|a, b| a.max(b))
+            .unwrap_or(0);
+        Some(phase2_trimatrix(sc, &txns, max_item as usize + 1))
+    } else {
+        None
+    };
+    // Phase-3
+    let vertical: Vec<(Item, VecTidset)> = vertical_tids
+        .into_iter()
+        .map(|(item, tids)| (item, VecTidset::from_tids(&tids, n_txns)))
+        .collect();
+    result.extend(phase_classes(
+        sc,
+        vertical,
+        cfg.min_sup,
+        tri.as_ref(),
+        PartitionStrategy::Fixed(partitioners::default_partitioner(n)),
+        cfg.prefix_len,
+    ));
+    MiningResult::new(result)
+}
+
+fn mine_v2plus(sc: &SparkletContext, txns: &Rdd<Transaction>, cfg: &EclatConfig) -> MiningResult {
+    let txns = txns.cache();
+    // Phase-1 (Algorithm 5)
+    let freq_items = v2_phase1(sc, &txns, cfg.min_sup);
+    let mut result: Vec<FrequentItemset> = freq_items
+        .iter()
+        .map(|(item, c)| FrequentItemset::new(vec![*item], *c))
+        .collect();
+    let n = freq_items.len();
+    if n < 2 {
+        return MiningResult::new(result);
+    }
+    // Phase-2 (Algorithm 6): broadcast trieL1, filter transactions.
+    let trie_l1 = ItemTrie::from_items(freq_items.iter().map(|(i, _)| *i));
+    let b_trie = sc.broadcast(trie_l1);
+    let filtered = txns
+        .map(move |t| b_trie.value().filter_transaction(&t))
+        .filter(|t| !t.is_empty())
+        .cache();
+    let tri = if cfg.tri_matrix_mode {
+        let max_item = freq_items.iter().map(|(i, _)| *i).max().unwrap_or(0);
+        Some(phase2_trimatrix(sc, &filtered, max_item as usize + 1))
+    } else {
+        None
+    };
+    // Phase-3: vertical dataset.
+    let (vertical_tids, n_txns) = match cfg.variant {
+        EclatVariant::V2 => v2_phase3(&filtered, cfg.min_sup),
+        _ => v3_phase3(sc, &filtered, &freq_items),
+    };
+    // Phase-4: equivalence classes with the variant's partitioner.
+    let strategy = match cfg.variant {
+        EclatVariant::V4 => PartitionStrategy::Fixed(partitioners::hash_partitioner(cfg.p)),
+        EclatVariant::V5 => {
+            PartitionStrategy::Fixed(partitioners::reverse_hash_partitioner(cfg.p))
+        }
+        EclatVariant::V6Fused => PartitionStrategy::Weighted(cfg.p),
+        _ => PartitionStrategy::Fixed(partitioners::default_partitioner(n)),
+    };
+    let prefix_len = if cfg.variant == EclatVariant::V6Fused {
+        2
+    } else {
+        cfg.prefix_len
+    };
+    let vertical: Vec<(Item, VecTidset)> = vertical_tids
+        .into_iter()
+        .map(|(item, tids)| (item, VecTidset::from_tids(&tids, n_txns)))
+        .collect();
+    result.extend(phase_classes(
+        sc,
+        vertical,
+        cfg.min_sup,
+        tri.as_ref(),
+        strategy,
+        prefix_len,
+    ));
+    MiningResult::new(result)
+}
+
+/// Convenience: mine an in-memory database with the given variant.
+pub fn mine_eclat_vec(
+    sc: &SparkletContext,
+    txns: Vec<Transaction>,
+    cfg: &EclatConfig,
+) -> MiningResult {
+    let parts = sc.default_parallelism();
+    let rdd = sc.parallelize(txns, parts).map(|mut t| {
+        t.sort_unstable();
+        t.dedup();
+        t
+    });
+    mine_eclat(sc, &rdd, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fim::sequential::eclat_sequential;
+
+    fn demo_db() -> Vec<Transaction> {
+        vec![
+            vec![1, 2, 5],
+            vec![2, 4],
+            vec![2, 3],
+            vec![1, 2, 4],
+            vec![1, 3],
+            vec![2, 3],
+            vec![1, 3],
+            vec![1, 2, 3, 5],
+            vec![1, 2, 3],
+        ]
+    }
+
+    #[test]
+    fn all_variants_match_oracle_on_demo() {
+        let sc = SparkletContext::local(4);
+        for min_sup in [1u32, 2, 3] {
+            let oracle = eclat_sequential(&demo_db(), min_sup);
+            for variant in EclatVariant::all_with_fused() {
+                let cfg = EclatConfig::new(variant, min_sup).with_p(3);
+                let got = mine_eclat_vec(&sc, demo_db(), &cfg);
+                assert!(
+                    got.same_as(&oracle),
+                    "{} min_sup={min_sup}: got {} itemsets, want {}",
+                    variant.name(),
+                    got.len(),
+                    oracle.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prefix2_mode_matches_oracle() {
+        let sc = SparkletContext::local(2);
+        for variant in [EclatVariant::V1, EclatVariant::V3, EclatVariant::V5] {
+            let cfg = EclatConfig::new(variant, 2).with_prefix_len(2);
+            let got = mine_eclat_vec(&sc, demo_db(), &cfg);
+            assert!(
+                got.same_as(&eclat_sequential(&demo_db(), 2)),
+                "{} prefix_len=2",
+                variant.name()
+            );
+        }
+    }
+
+    #[test]
+    fn tri_matrix_mode_equivalent() {
+        let sc = SparkletContext::local(2);
+        for variant in EclatVariant::all() {
+            let with = mine_eclat_vec(
+                &sc,
+                demo_db(),
+                &EclatConfig::new(variant, 2).with_tri_matrix(true),
+            );
+            let without = mine_eclat_vec(
+                &sc,
+                demo_db(),
+                &EclatConfig::new(variant, 2).with_tri_matrix(false),
+            );
+            assert!(with.same_as(&without), "{}", variant.name());
+        }
+    }
+
+    #[test]
+    fn parse_line_normalizes() {
+        assert_eq!(parse_line("3 1 2 2"), vec![1, 2, 3]);
+        assert_eq!(parse_line("  7  "), vec![7]);
+        assert_eq!(parse_line(""), Vec::<Item>::new());
+        assert_eq!(parse_line("5 x 2"), vec![2, 5]); // non-numeric skipped
+    }
+
+    #[test]
+    fn p_parameter_respected() {
+        let sc = SparkletContext::local(2);
+        for p in [1usize, 2, 7] {
+            let cfg = EclatConfig::new(EclatVariant::V4, 1).with_p(p);
+            let got = mine_eclat_vec(&sc, demo_db(), &cfg);
+            assert!(got.same_as(&eclat_sequential(&demo_db(), 1)), "p={p}");
+        }
+    }
+
+    #[test]
+    fn min_sup_above_all_returns_empty() {
+        let sc = SparkletContext::local(2);
+        for variant in EclatVariant::all() {
+            let cfg = EclatConfig::new(variant, 100);
+            assert!(mine_eclat_vec(&sc, demo_db(), &cfg).is_empty());
+        }
+    }
+
+    #[test]
+    fn single_frequent_item_short_circuits() {
+        let sc = SparkletContext::local(2);
+        let db = vec![vec![1], vec![1], vec![2]];
+        let cfg = EclatConfig::new(EclatVariant::V1, 2);
+        let r = mine_eclat_vec(&sc, db, &cfg);
+        assert_eq!(r.canonical().len(), 1);
+    }
+}

@@ -1,0 +1,332 @@
+//! Equivalence classes and Zaki's Bottom-Up search (Algorithm 1 of the
+//! paper, transcribed from [12] / the SPMF implementation).
+//!
+//! Itemsets sharing a (k-1)-length prefix form an equivalence class; each
+//! class is an independent sub-lattice, which is precisely what the paper
+//! partitions across executors in Phase-3/4. `bottom_up` recursively
+//! decomposes a class, intersecting member tidsets pairwise and keeping
+//! candidates that clear `min_sup`.
+
+use super::tidset::TidOps;
+use super::trimatrix::TriMatrix;
+use super::types::{FrequentItemset, Item};
+
+/// An equivalence class: all member itemsets share `prefix`; a member is
+/// (last item, tidset of `prefix ∪ {item}`).
+#[derive(Debug, Clone)]
+pub struct EquivalenceClass<TS> {
+    pub prefix: Vec<Item>,
+    pub members: Vec<(Item, TS)>,
+}
+
+impl<TS> EquivalenceClass<TS> {
+    /// Workload proxy used by the partitioner ablation: classes with more
+    /// members generate more candidates (the paper's §4.4 measure).
+    pub fn weight(&self) -> usize {
+        self.members.len()
+    }
+}
+
+/// Algorithm 1: Bottom-Up(EC_k). Appends every frequent itemset derived
+/// from `class` (sizes `prefix.len() + 2` and deeper) to `out`.
+pub fn bottom_up<TS: TidOps>(
+    class: &EquivalenceClass<TS>,
+    min_sup: u32,
+    out: &mut Vec<FrequentItemset>,
+) {
+    for i in 0..class.members.len() {
+        let (item_i, ref ts_i) = class.members[i];
+        let mut next_prefix = class.prefix.clone();
+        next_prefix.push(item_i);
+        let mut next_members: Vec<(Item, TS)> = Vec::new();
+        for (item_j, ts_j) in &class.members[i + 1..] {
+            // §Perf O5+O6: bounded count-only probe first — failing
+            // candidates (the majority at low min_sup) abort early and
+            // never allocate a tidset.
+            if let Some(sup) = ts_i.intersect_support_min(ts_j, min_sup) {
+                let ts_ij = ts_i.intersect(ts_j);
+                let mut items = next_prefix.clone();
+                items.push(*item_j);
+                out.push(FrequentItemset::new(items, sup));
+                next_members.push((*item_j, ts_ij));
+            }
+        }
+        if !next_members.is_empty() {
+            let next = EquivalenceClass {
+                prefix: next_prefix,
+                members: next_members,
+            };
+            bottom_up(&next, min_sup, out);
+        }
+    }
+}
+
+/// Build the 1-length-prefix equivalence classes of frequent 2-itemsets
+/// from the vertical dataset (Phase-3 of EclatV1, Algorithm 4 lines
+/// 1–16). `vertical` must be sorted in the processing order (the paper
+/// sorts by ascending support). Emits the frequent 2-itemsets into
+/// `two_itemsets` as a side product.
+///
+/// `tri_matrix`: when present, prunes infrequent pairs *before* the
+/// tidset intersection (`triMatrixMode = true`). Item ids in the matrix
+/// are the positions in `vertical` (dense ranks), matching how the RDD
+/// algorithms rank items.
+pub fn build_classes<TS: TidOps>(
+    vertical: &[(Item, TS)],
+    min_sup: u32,
+    tri_matrix: Option<&TriMatrix>,
+    rank_of: impl Fn(Item) -> u32,
+    two_itemsets: &mut Vec<FrequentItemset>,
+) -> Vec<(usize, EquivalenceClass<TS>)> {
+    let n = vertical.len();
+    let mut classes = Vec::new();
+    for i in 0..n.saturating_sub(1) {
+        let (item_i, ref ts_i) = vertical[i];
+        let mut members: Vec<(Item, TS)> = Vec::new();
+        for (item_j, ts_j) in &vertical[i + 1..] {
+            if let Some(m) = tri_matrix {
+                // tri-matrix pre-filter: survivors are frequent by
+                // construction, so materialize directly.
+                if m.get_support(rank_of(item_i), rank_of(*item_j)) < min_sup {
+                    continue;
+                }
+            } else {
+                // §Perf O5+O6: no matrix (BMS mode) — bounded count-only
+                // probe so infrequent pairs abort early, no allocation.
+                if ts_i.intersect_support_min(ts_j, min_sup).is_none() {
+                    continue;
+                }
+            }
+            let ts_ij = ts_i.intersect(ts_j);
+            let sup = ts_ij.support() as u32;
+            if sup >= min_sup {
+                two_itemsets.push(FrequentItemset::new(vec![item_i, *item_j], sup));
+                members.push((*item_j, ts_ij));
+            }
+        }
+        if !members.is_empty() {
+            classes.push((
+                i,
+                EquivalenceClass {
+                    prefix: vec![item_i],
+                    members,
+                },
+            ));
+        }
+    }
+    classes
+}
+
+/// Decompose 1-prefix classes one level further into 2-length-prefix
+/// classes (the paper's §6 future-work: "the results can be explored for
+/// the k-length prefixes where k >= 2"). Finer classes → more, smaller
+/// parallel units → better balance at high skew. Emits the frequent
+/// 3-itemsets discovered during decomposition into `three_itemsets`.
+///
+/// Returned keys are dense ranks in construction order (prefix-sorted),
+/// ready for the same partitioners as the 1-prefix path.
+pub fn decompose_to_prefix2<TS: TidOps>(
+    classes: Vec<(usize, EquivalenceClass<TS>)>,
+    min_sup: u32,
+    three_itemsets: &mut Vec<FrequentItemset>,
+) -> Vec<(usize, EquivalenceClass<TS>)> {
+    let mut out = Vec::new();
+    let mut rank = 0usize;
+    for (_, class) in classes {
+        for i in 0..class.members.len() {
+            let (item_i, ref ts_i) = class.members[i];
+            let mut prefix = class.prefix.clone();
+            prefix.push(item_i);
+            let mut members: Vec<(Item, TS)> = Vec::new();
+            for (item_j, ts_j) in &class.members[i + 1..] {
+                // §Perf O5+O6
+                if let Some(sup) = ts_i.intersect_support_min(ts_j, min_sup) {
+                    let ts_ij = ts_i.intersect(ts_j);
+                    let mut items = prefix.clone();
+                    items.push(*item_j);
+                    three_itemsets.push(FrequentItemset::new(items, sup));
+                    members.push((*item_j, ts_ij));
+                }
+            }
+            if !members.is_empty() {
+                out.push((
+                    rank,
+                    EquivalenceClass {
+                        prefix: prefix.clone(),
+                        members,
+                    },
+                ));
+                rank += 1;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fim::tidset::VecTidset;
+
+    /// Tiny database from Zaki's paper style: items 0..4, 6 transactions.
+    fn vertical_db() -> (Vec<(Item, VecTidset)>, usize) {
+        // txns: 0:{0,1,2} 1:{1,2,3} 2:{0,1,3} 3:{0,1,2,3} 4:{1,2} 5:{0,3}
+        let txns: Vec<Vec<Item>> = vec![
+            vec![0, 1, 2],
+            vec![1, 2, 3],
+            vec![0, 1, 3],
+            vec![0, 1, 2, 3],
+            vec![1, 2],
+            vec![0, 3],
+        ];
+        let n = txns.len();
+        let mut vertical = Vec::new();
+        for item in 0..4u32 {
+            let tids: Vec<u32> = txns
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| t.contains(&item))
+                .map(|(i, _)| i as u32)
+                .collect();
+            vertical.push((item, VecTidset::from_tids(&tids, n)));
+        }
+        (vertical, n)
+    }
+
+    fn brute_force(txns: &[Vec<Item>], min_sup: u32) -> std::collections::BTreeSet<(Vec<Item>, u32)> {
+        // enumerate all itemsets over items present
+        let mut items: Vec<Item> = txns.iter().flatten().copied().collect();
+        items.sort_unstable();
+        items.dedup();
+        let mut out = std::collections::BTreeSet::new();
+        let m = items.len();
+        for mask in 1u32..(1 << m) {
+            let set: Vec<Item> = (0..m)
+                .filter(|b| mask >> b & 1 == 1)
+                .map(|b| items[b])
+                .collect();
+            let sup = txns
+                .iter()
+                .filter(|t| set.iter().all(|i| t.contains(i)))
+                .count() as u32;
+            if sup >= min_sup {
+                out.insert((set, sup));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn classes_and_bottom_up_match_bruteforce() {
+        let (vertical, _n) = vertical_db();
+        let txns: Vec<Vec<Item>> = vec![
+            vec![0, 1, 2],
+            vec![1, 2, 3],
+            vec![0, 1, 3],
+            vec![0, 1, 2, 3],
+            vec![1, 2],
+            vec![0, 3],
+        ];
+        for min_sup in 1..=4u32 {
+            let mut twos = Vec::new();
+            let classes = build_classes(&vertical, min_sup, None, |i| i, &mut twos);
+            let mut all = Vec::new();
+            // 1-itemsets
+            for (item, ts) in &vertical {
+                let sup = ts.support() as u32;
+                if sup >= min_sup {
+                    all.push(FrequentItemset::new(vec![*item], sup));
+                }
+            }
+            all.extend(twos);
+            for (_, c) in &classes {
+                bottom_up(c, min_sup, &mut all);
+            }
+            let got: std::collections::BTreeSet<(Vec<Item>, u32)> =
+                all.iter().map(|f| (f.items.clone(), f.support)).collect();
+            assert_eq!(got, brute_force(&txns, min_sup), "min_sup={min_sup}");
+            assert_eq!(got.len(), all.len(), "duplicates at min_sup={min_sup}");
+        }
+    }
+
+    #[test]
+    fn trimatrix_pruning_preserves_result() {
+        let (vertical, _) = vertical_db();
+        let txns: Vec<Vec<Item>> = vec![
+            vec![0, 1, 2],
+            vec![1, 2, 3],
+            vec![0, 1, 3],
+            vec![0, 1, 2, 3],
+            vec![1, 2],
+            vec![0, 3],
+        ];
+        let mut tm = TriMatrix::new(4);
+        for t in &txns {
+            tm.update_transaction(t);
+        }
+        for min_sup in 1..=4u32 {
+            let mut twos_pruned = Vec::new();
+            let mut twos_plain = Vec::new();
+            let c1 = build_classes(&vertical, min_sup, Some(&tm), |i| i, &mut twos_pruned);
+            let c2 = build_classes(&vertical, min_sup, None, |i| i, &mut twos_plain);
+            twos_pruned.sort();
+            twos_plain.sort();
+            assert_eq!(twos_pruned, twos_plain);
+            assert_eq!(c1.len(), c2.len());
+        }
+    }
+
+    #[test]
+    fn prefix2_decomposition_preserves_itemsets() {
+        let (vertical, _) = vertical_db();
+        for min_sup in 1..=3u32 {
+            // 1-prefix path
+            let mut twos_a = Vec::new();
+            let classes1 = build_classes(&vertical, min_sup, None, |i| i, &mut twos_a);
+            let mut all_1p = twos_a.clone();
+            for (_, c) in &classes1 {
+                bottom_up(c, min_sup, &mut all_1p);
+            }
+            // 2-prefix path: decompose, then bottom-up from level 3
+            let mut twos_b = Vec::new();
+            let classes1b = build_classes(&vertical, min_sup, None, |i| i, &mut twos_b);
+            let mut threes = Vec::new();
+            let classes2 = decompose_to_prefix2(classes1b, min_sup, &mut threes);
+            let mut all_2p = twos_b;
+            all_2p.extend(threes);
+            for (_, c) in &classes2 {
+                bottom_up(c, min_sup, &mut all_2p);
+            }
+            let canon = |v: &[FrequentItemset]| -> std::collections::BTreeSet<_> {
+                v.iter().map(|f| (f.items.clone(), f.support)).collect()
+            };
+            assert_eq!(canon(&all_1p), canon(&all_2p), "min_sup={min_sup}");
+        }
+    }
+
+    #[test]
+    fn prefix2_produces_more_finer_classes() {
+        let (vertical, _) = vertical_db();
+        let mut twos = Vec::new();
+        let classes1 = build_classes(&vertical, 1, None, |i| i, &mut twos);
+        let n1 = classes1.len();
+        let max_w1 = classes1.iter().map(|(_, c)| c.weight()).max().unwrap();
+        let mut threes = Vec::new();
+        let classes2 = decompose_to_prefix2(classes1, 1, &mut threes);
+        assert!(classes2.len() >= n1, "{} < {n1}", classes2.len());
+        let max_w2 = classes2.iter().map(|(_, c)| c.weight()).max().unwrap();
+        assert!(max_w2 <= max_w1);
+        // prefixes are 2 items long
+        assert!(classes2.iter().all(|(_, c)| c.prefix.len() == 2));
+    }
+
+    #[test]
+    fn class_weight_is_member_count() {
+        let (vertical, _) = vertical_db();
+        let mut twos = Vec::new();
+        let classes = build_classes(&vertical, 1, None, |i| i, &mut twos);
+        for (_, c) in &classes {
+            assert_eq!(c.weight(), c.members.len());
+        }
+    }
+}

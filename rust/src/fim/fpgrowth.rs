@@ -1,0 +1,400 @@
+//! FP-Growth (Han et al. [20]) — the third baseline family of the
+//! paper's related work (PFP [25], DFPS [11]).
+//!
+//! * [`fpgrowth_sequential`] — arena-based FP-tree with header links and
+//!   the standard conditional-pattern-base recursion.
+//! * [`mine_fpgrowth_rdd`] — the PFP/DFPS shape on Sparklet: frequent
+//!   items by word-count, items hashed into `g` groups, mappers emit
+//!   group-dependent transaction prefixes, each reducer builds a local
+//!   FP-tree for its group's shard and mines only its own items, results
+//!   union without duplication.
+
+use crate::sparklet::{PairRdd, Rdd, SparkletContext};
+use crate::util::hash::FxHashMap;
+
+use super::types::{FrequentItemset, Item, MiningResult, Transaction};
+
+// ------------------------------------------------------------- FP-tree
+
+#[derive(Debug, Clone)]
+struct Node {
+    item: Item,
+    count: u32,
+    parent: usize,
+    children: FxHashMap<Item, usize>,
+}
+
+/// Arena-allocated FP-tree with a header table of per-item node lists.
+#[derive(Debug, Clone)]
+pub struct FpTree {
+    nodes: Vec<Node>,
+    header: FxHashMap<Item, Vec<usize>>,
+}
+
+impl FpTree {
+    pub fn new() -> Self {
+        Self {
+            nodes: vec![Node {
+                item: u32::MAX,
+                count: 0,
+                parent: usize::MAX,
+                children: FxHashMap::default(),
+            }],
+            header: FxHashMap::default(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.len() == 1
+    }
+
+    /// Insert a path (already filtered + sorted in tree order) with a
+    /// multiplicity.
+    pub fn insert(&mut self, path: &[Item], count: u32) {
+        let mut cur = 0usize;
+        for &item in path {
+            cur = match self.nodes[cur].children.get(&item) {
+                Some(&child) => {
+                    self.nodes[child].count += count;
+                    child
+                }
+                None => {
+                    let idx = self.nodes.len();
+                    self.nodes.push(Node {
+                        item,
+                        count,
+                        parent: cur,
+                        children: FxHashMap::default(),
+                    });
+                    self.nodes[cur].children.insert(item, idx);
+                    self.header.entry(item).or_default().push(idx);
+                    idx
+                }
+            };
+        }
+    }
+
+    /// Total support of an item in this tree.
+    fn item_support(&self, item: Item) -> u32 {
+        self.header
+            .get(&item)
+            .map(|nodes| nodes.iter().map(|&n| self.nodes[n].count).sum())
+            .unwrap_or(0)
+    }
+
+    /// Conditional pattern base of `item`: (prefix path root→parent,
+    /// count) per occurrence.
+    fn pattern_base(&self, item: Item) -> Vec<(Vec<Item>, u32)> {
+        let mut out = Vec::new();
+        if let Some(nodes) = self.header.get(&item) {
+            for &n in nodes {
+                let count = self.nodes[n].count;
+                let mut path = Vec::new();
+                let mut cur = self.nodes[n].parent;
+                while cur != 0 && cur != usize::MAX {
+                    path.push(self.nodes[cur].item);
+                    cur = self.nodes[cur].parent;
+                }
+                path.reverse();
+                if !path.is_empty() {
+                    out.push((path, count));
+                }
+            }
+        }
+        out
+    }
+
+    /// Items present in this tree.
+    fn items(&self) -> Vec<Item> {
+        self.header.keys().copied().collect()
+    }
+}
+
+impl Default for FpTree {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Build a conditional FP-tree from a pattern base, keeping only items
+/// with support >= min_sup, paths ordered by (support desc, item asc).
+fn conditional_tree(base: &[(Vec<Item>, u32)], min_sup: u32) -> FpTree {
+    let mut counts: FxHashMap<Item, u32> = FxHashMap::default();
+    for (path, c) in base {
+        for &i in path {
+            *counts.entry(i).or_insert(0) += c;
+        }
+    }
+    let mut tree = FpTree::new();
+    for (path, c) in base {
+        let mut filtered: Vec<Item> = path
+            .iter()
+            .copied()
+            .filter(|i| counts[i] >= min_sup)
+            .collect();
+        filtered.sort_by_key(|i| (std::cmp::Reverse(counts[i]), *i));
+        if !filtered.is_empty() {
+            tree.insert(&filtered, *c);
+        }
+    }
+    tree
+}
+
+/// The FP-Growth recursion: mine all itemsets of `tree` extended with
+/// `suffix`. When `only_items` is set (PFP group mining), top-level
+/// extensions are restricted to those items to avoid duplicate emission
+/// across groups.
+fn fp_mine(
+    tree: &FpTree,
+    suffix: &[Item],
+    min_sup: u32,
+    only_items: Option<&dyn Fn(Item) -> bool>,
+    out: &mut Vec<FrequentItemset>,
+) {
+    let mut items = tree.items();
+    items.sort_unstable();
+    for item in items {
+        if let Some(pred) = only_items {
+            if !pred(item) {
+                continue;
+            }
+        }
+        let support = tree.item_support(item);
+        if support < min_sup {
+            continue;
+        }
+        let mut itemset = suffix.to_vec();
+        itemset.push(item);
+        out.push(FrequentItemset::new(itemset.clone(), support));
+        let base = tree.pattern_base(item);
+        if !base.is_empty() {
+            let cond = conditional_tree(&base, min_sup);
+            if !cond.is_empty() {
+                // deeper levels are unrestricted: suffix already contains
+                // a group item, so ownership is established
+                fp_mine(&cond, &itemset, min_sup, None, out);
+            }
+        }
+    }
+}
+
+/// Sequential FP-Growth.
+pub fn fpgrowth_sequential(txns: &[Transaction], min_sup: u32) -> MiningResult {
+    // global item counts
+    let mut counts: FxHashMap<Item, u32> = FxHashMap::default();
+    for t in txns {
+        let mut seen = t.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        for i in seen {
+            *counts.entry(i).or_insert(0) += 1;
+        }
+    }
+    counts.retain(|_, c| *c >= min_sup);
+    let mut tree = FpTree::new();
+    for t in txns {
+        let mut filtered: Vec<Item> = t.iter().copied().filter(|i| counts.contains_key(i)).collect();
+        filtered.sort_unstable();
+        filtered.dedup();
+        filtered.sort_by_key(|i| (std::cmp::Reverse(counts[i]), *i));
+        if !filtered.is_empty() {
+            tree.insert(&filtered, 1);
+        }
+    }
+    let mut out = Vec::new();
+    fp_mine(&tree, &[], min_sup, None, &mut out);
+    MiningResult::new(out)
+}
+
+// ----------------------------------------------------------- PFP on RDDs
+
+/// Parallel FP-Growth (PFP [25] / DFPS [11] shape) on Sparklet.
+/// `n_groups` is PFP's G parameter (item-group shards).
+pub fn mine_fpgrowth_rdd(
+    sc: &SparkletContext,
+    txns: &Rdd<Transaction>,
+    min_sup: u32,
+    n_groups: usize,
+) -> MiningResult {
+    let txns = txns.cache();
+    // Step 1: frequent items (word count).
+    let counts: Vec<(Item, u32)> = txns
+        .flat_map(|t| t)
+        .map_to_pair(|i| (i, 1u32))
+        .reduce_by_key(|a, b| a + b)
+        .filter(move |(_, c)| *c >= min_sup)
+        .collect();
+    if counts.is_empty() {
+        return MiningResult::default();
+    }
+    let count_map: FxHashMap<Item, u32> = counts.iter().copied().collect();
+    let b_counts = sc.broadcast(count_map);
+    let g = n_groups.max(1);
+
+    // Step 2: group-dependent shards. For the frequency-ordered
+    // transaction t, for each position j (from the tail), emit the prefix
+    // t[0..=j] to group(t[j]) — at most once per group per transaction.
+    let b2 = b_counts.clone();
+    let shards = txns.flat_map_to_pair(move |t| {
+        let counts = b2.value();
+        let mut filtered: Vec<Item> = t
+            .iter()
+            .copied()
+            .filter(|i| counts.contains_key(i))
+            .collect();
+        filtered.sort_unstable();
+        filtered.dedup();
+        filtered.sort_by_key(|i| (std::cmp::Reverse(counts[i]), *i));
+        let mut out: Vec<(usize, Vec<Item>)> = Vec::new();
+        let mut emitted = std::collections::HashSet::new();
+        for j in (0..filtered.len()).rev() {
+            let grp = (filtered[j] as usize) % g;
+            if emitted.insert(grp) {
+                out.push((grp, filtered[..=j].to_vec()));
+            }
+        }
+        out
+    });
+
+    // Step 3: per-group FP-trees, mining only the group's own items at
+    // the top level.
+    let b3 = b_counts.clone();
+    let grouped = shards.group_by_key_with_partitions(g);
+    let mined = grouped.flat_map(move |(grp, paths)| {
+        let counts = b3.value();
+        let mut tree = FpTree::new();
+        for path in &paths {
+            tree.insert(path, 1);
+        }
+        let mut out = Vec::new();
+        let owns = |item: Item| (item as usize) % g == grp && counts.contains_key(&item);
+        fp_mine(&tree, &[], min_sup, Some(&owns), &mut out);
+        out
+    });
+    MiningResult::new(mined.collect())
+}
+
+/// Convenience: mine an in-memory database.
+pub fn mine_fpgrowth_rdd_vec(
+    sc: &SparkletContext,
+    txns: Vec<Transaction>,
+    min_sup: u32,
+) -> MiningResult {
+    let parts = sc.default_parallelism();
+    let groups = sc.default_parallelism() * 2;
+    let rdd = sc.parallelize(txns, parts).map(|mut t| {
+        t.sort_unstable();
+        t.dedup();
+        t
+    });
+    mine_fpgrowth_rdd(sc, &rdd, min_sup, groups)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fim::sequential::eclat_sequential;
+    use crate::util::prop::{forall, gen};
+
+    fn demo_db() -> Vec<Transaction> {
+        vec![
+            vec![1, 2, 5],
+            vec![2, 4],
+            vec![2, 3],
+            vec![1, 2, 4],
+            vec![1, 3],
+            vec![2, 3],
+            vec![1, 3],
+            vec![1, 2, 3, 5],
+            vec![1, 2, 3],
+        ]
+    }
+
+    #[test]
+    fn sequential_matches_eclat_on_demo() {
+        for min_sup in 1..=4u32 {
+            let fp = fpgrowth_sequential(&demo_db(), min_sup);
+            let ec = eclat_sequential(&demo_db(), min_sup);
+            assert!(
+                fp.same_as(&ec),
+                "min_sup={min_sup}: fp={} eclat={}",
+                fp.len(),
+                ec.len()
+            );
+        }
+    }
+
+    #[test]
+    fn tree_structure_shares_prefixes() {
+        let mut tree = FpTree::new();
+        tree.insert(&[1, 2, 3], 1);
+        tree.insert(&[1, 2, 4], 1);
+        tree.insert(&[1, 2, 3], 1);
+        // nodes: root + 1,2,3,4 = 5 (prefix shared)
+        assert_eq!(tree.nodes.len(), 5);
+        assert_eq!(tree.item_support(1), 3);
+        assert_eq!(tree.item_support(3), 2);
+    }
+
+    #[test]
+    fn pattern_base_walks_to_root() {
+        let mut tree = FpTree::new();
+        tree.insert(&[1, 2, 3], 2);
+        tree.insert(&[1, 3], 1);
+        let base = tree.pattern_base(3);
+        let mut got: Vec<(Vec<Item>, u32)> = base;
+        got.sort();
+        assert_eq!(got, vec![(vec![1], 1), (vec![1, 2], 2)]);
+    }
+
+    #[test]
+    fn rdd_pfp_matches_sequential_on_demo() {
+        let sc = SparkletContext::local(3);
+        for min_sup in [1u32, 2, 3] {
+            let got = mine_fpgrowth_rdd_vec(&sc, demo_db(), min_sup);
+            let want = fpgrowth_sequential(&demo_db(), min_sup);
+            assert!(got.same_as(&want), "min_sup={min_sup}");
+        }
+    }
+
+    #[test]
+    fn property_fp_equals_eclat_random() {
+        forall(30, gen::database(25, 8, 0.35), |db| {
+            for min_sup in [1u32, 2, 3] {
+                if !fpgrowth_sequential(db, min_sup).same_as(&eclat_sequential(db, min_sup)) {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn property_pfp_group_count_invariant() {
+        // result must not depend on the number of groups
+        let sc = SparkletContext::local(2);
+        forall(12, gen::database(20, 7, 0.4), |db| {
+            let want = fpgrowth_sequential(db, 2);
+            for g in [1usize, 3, 8] {
+                let rdd = sc.parallelize(db.clone(), 3).map(|mut t: Transaction| {
+                    t.sort_unstable();
+                    t.dedup();
+                    t
+                });
+                let got = mine_fpgrowth_rdd(&sc, &rdd, 2, g);
+                if !got.same_as(&want) {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn empty_db_and_high_minsup() {
+        assert!(fpgrowth_sequential(&[], 1).is_empty());
+        assert!(fpgrowth_sequential(&demo_db(), 100).is_empty());
+        let sc = SparkletContext::local(2);
+        assert!(mine_fpgrowth_rdd_vec(&sc, demo_db(), 100).is_empty());
+    }
+}

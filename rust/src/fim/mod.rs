@@ -1,0 +1,24 @@
+//! Frequent itemset mining: the paper's algorithm layer.
+//!
+//! Substrate types ([`types`], [`tidset`], [`trimatrix`], [`trie`],
+//! [`eqclass`]), the sequential oracles ([`sequential`]), the five
+//! RDD-Eclat variants ([`eclat`]) and the RDD-Apriori / YAFIM baseline
+//! ([`apriori`]), the paper's equivalence-class partitioners
+//! ([`partitioners`]), and association-rule generation ([`rules`]).
+
+pub mod apriori;
+pub mod eclat;
+pub mod eqclass;
+pub mod fpgrowth;
+pub mod postprocess;
+pub mod partitioners;
+pub mod rules;
+pub mod sequential;
+pub mod tidset;
+pub mod trie;
+pub mod trimatrix;
+pub mod types;
+
+pub use eclat::{mine_eclat, EclatConfig, EclatVariant};
+pub use tidset::{BitmapTidset, TidOps, VecTidset};
+pub use types::{FrequentItemset, Item, MiningResult, Transaction};

@@ -1,0 +1,166 @@
+//! The paper's equivalence-class partitioners (§4.1, §4.4).
+//!
+//! Keys are equivalence-class *prefix ranks*: class `i` is rooted at the
+//! i-th frequent item in the processing order (ascending support), for
+//! `i ∈ [0, n-1)` where `n` is the number of frequent items. Rank `i`'s
+//! class has up to `n - 1 - i` members, so low ranks are heavy — the
+//! skew the V4/V5 heuristics attack.
+
+use std::sync::Arc;
+
+use crate::sparklet::partitioner::FnPartitioner;
+
+/// EclatV1: `defaultPartitioner(n - 1)` — one partition per equivalence
+/// class (modulo, which is the identity when ranks < n-1).
+pub fn default_partitioner(n_frequent_items: usize) -> Arc<FnPartitioner<usize>> {
+    let p = n_frequent_items.saturating_sub(1).max(1);
+    Arc::new(FnPartitioner::new(p, move |rank: &usize| rank % p))
+}
+
+/// EclatV4: `hashPartitioner(p)` — hash the prefix rank, remainder is the
+/// partition id. With dense ranks this is a modulo, which stripes heavy
+/// (low-rank) and light (high-rank) classes across partitions.
+pub fn hash_partitioner(p: usize) -> Arc<FnPartitioner<usize>> {
+    let p = p.max(1);
+    Arc::new(FnPartitioner::new(p, move |rank: &usize| rank % p))
+}
+
+/// EclatV5: `reverseHashPartitioner(p)` — like the hash partitioner for
+/// ranks `< p`, but once the rank reaches `p` the direction alternates
+/// every block (boustrophedon): block 0 assigns 0,1,…,p-1, block 1
+/// assigns p-1,…,1,0, block 2 forward again, and so on. Pairing the
+/// heaviest class of a block with the lightest of the next balances the
+/// summed member counts per partition.
+pub fn reverse_hash_partitioner(p: usize) -> Arc<FnPartitioner<usize>> {
+    let p = p.max(1);
+    Arc::new(FnPartitioner::new(p, move |rank: &usize| {
+        let block = rank / p;
+        let off = rank % p;
+        if block % 2 == 0 {
+            off
+        } else {
+            p - 1 - off
+        }
+    }))
+}
+
+/// The paper's §6 "improved heuristic": greedy LPT assignment of classes
+/// to partitions by *actual member count* (weight), not rank arithmetic.
+/// Requires the weights up front (the driver has them after class
+/// construction), returns an explicit rank→partition table.
+pub fn weighted_partitioner(weights: &[usize], p: usize) -> Arc<FnPartitioner<usize>> {
+    let p = p.max(1);
+    // LPT: sort class ranks by descending weight, place each on the
+    // least-loaded partition.
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by_key(|&r| std::cmp::Reverse(weights[r]));
+    let mut load = vec![0usize; p];
+    let mut table = vec![0usize; weights.len()];
+    for r in order {
+        let target = (0..p).min_by_key(|&m| load[m]).unwrap();
+        table[r] = target;
+        load[target] += weights[r];
+    }
+    Arc::new(FnPartitioner::new(p, move |rank: &usize| {
+        table.get(*rank).copied().unwrap_or(rank % p)
+    }))
+}
+
+/// Workload-balance metric for the ablation: given per-class weights and
+/// a partition assignment, the ratio max/mean of summed weights (1.0 is
+/// perfectly balanced).
+pub fn balance_ratio(weights: &[usize], partition_of: impl Fn(usize) -> usize, p: usize) -> f64 {
+    let mut sums = vec![0usize; p.max(1)];
+    for (rank, &w) in weights.iter().enumerate() {
+        sums[partition_of(rank)] += w;
+    }
+    let total: usize = sums.iter().sum();
+    if total == 0 {
+        return 1.0;
+    }
+    let mean = total as f64 / sums.len() as f64;
+    let max = *sums.iter().max().unwrap() as f64;
+    max / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparklet::Partitioner;
+
+    #[test]
+    fn default_is_identity_for_class_ranks() {
+        let p = default_partitioner(6); // 5 partitions for 6 items
+        assert_eq!(p.num_partitions(), 5);
+        for rank in 0..5usize {
+            assert_eq!(p.partition(&rank), rank);
+        }
+    }
+
+    #[test]
+    fn hash_is_modulo() {
+        let p = hash_partitioner(4);
+        assert_eq!(p.num_partitions(), 4);
+        assert_eq!(p.partition(&0), 0);
+        assert_eq!(p.partition(&5), 1);
+        assert_eq!(p.partition(&11), 3);
+    }
+
+    #[test]
+    fn reverse_hash_zigzags() {
+        let p = reverse_hash_partitioner(4);
+        // block 0: 0 1 2 3 ; block 1: 3 2 1 0 ; block 2: 0 1 2 3
+        let got: Vec<usize> = (0..12usize).map(|r| p.partition(&r)).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 3, 2, 1, 0, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn reverse_hash_balances_monotone_weights_better() {
+        // Class weights decay with rank (the Eclat shape): w = n - rank.
+        let n = 40usize;
+        let weights: Vec<usize> = (0..n).map(|r| n - r).collect();
+        let p = 4;
+        let hp = hash_partitioner(p);
+        let rp = reverse_hash_partitioner(p);
+        let hb = balance_ratio(&weights, |r| hp.partition(&r), p);
+        let rb = balance_ratio(&weights, |r| rp.partition(&r), p);
+        assert!(
+            rb <= hb + 1e-9,
+            "reverse ({rb:.4}) should balance at least as well as hash ({hb:.4})"
+        );
+        assert!(rb < 1.05, "zigzag should be near-perfect: {rb:.4}");
+    }
+
+    #[test]
+    fn weighted_partitioner_beats_both_heuristics() {
+        // adversarial weights: heavy head + noise — rank arithmetic can't
+        // balance this, LPT can.
+        let weights: Vec<usize> = (0..50)
+            .map(|r| if r % 7 == 0 { 100 } else { 3 + r % 5 })
+            .collect();
+        let p = 4;
+        let h = hash_partitioner(p);
+        let r = reverse_hash_partitioner(p);
+        let w = weighted_partitioner(&weights, p);
+        let hb = balance_ratio(&weights, |rank| h.partition(&rank), p);
+        let rb = balance_ratio(&weights, |rank| r.partition(&rank), p);
+        let wb = balance_ratio(&weights, |rank| w.partition(&rank), p);
+        assert!(wb <= hb && wb <= rb, "LPT {wb:.3} vs hash {hb:.3} / rev {rb:.3}");
+        assert!(wb < 1.2, "LPT should be near-balanced: {wb:.3}");
+    }
+
+    #[test]
+    fn weighted_partitioner_in_range() {
+        let w = weighted_partitioner(&[5, 1, 9, 2], 3);
+        for r in 0..10usize {
+            assert!(w.partition(&r) < 3);
+        }
+    }
+
+    #[test]
+    fn balance_ratio_degenerate() {
+        assert_eq!(balance_ratio(&[], |_| 0, 3), 1.0);
+        let r = balance_ratio(&[10, 0, 0], |rank| rank, 3);
+        assert!((r - 3.0).abs() < 1e-9);
+    }
+}

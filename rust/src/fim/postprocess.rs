@@ -1,0 +1,192 @@
+//! Post-processing of mining results: closed and maximal frequent
+//! itemsets — the standard condensed representations (Zaki's CHARM /
+//! Bayardo's MaxMiner outputs), useful when the full result set (e.g.
+//! 13K itemsets on T10 at 0.1%) is too verbose for downstream use.
+//!
+//! * **closed**: no proper superset has the *same* support.
+//! * **maximal**: no proper superset is frequent at all.
+//! Every maximal itemset is closed; both sets reconstruct the full
+//! result's membership (maximal) or membership+supports (closed).
+
+use crate::util::hash::FxHashMap;
+
+use super::types::{FrequentItemset, Item, MiningResult};
+
+fn is_subset(a: &[Item], b: &[Item]) -> bool {
+    // both sorted
+    let mut j = 0usize;
+    for &x in a {
+        while j < b.len() && b[j] < x {
+            j += 1;
+        }
+        if j >= b.len() || b[j] != x {
+            return false;
+        }
+        j += 1;
+    }
+    true
+}
+
+/// Group itemsets by length for superset scans (longer first).
+fn by_length_desc(result: &MiningResult) -> Vec<&FrequentItemset> {
+    let mut v: Vec<&FrequentItemset> = result.itemsets.iter().collect();
+    v.sort_by_key(|f| std::cmp::Reverse(f.items.len()));
+    v
+}
+
+/// Maximal frequent itemsets: those with no frequent proper superset.
+pub fn maximal_itemsets(result: &MiningResult) -> MiningResult {
+    let sorted = by_length_desc(result);
+    let mut maximal: Vec<FrequentItemset> = Vec::new();
+    for f in sorted {
+        let covered = maximal
+            .iter()
+            .any(|m| m.items.len() > f.items.len() && is_subset(&f.items, &m.items));
+        if !covered {
+            maximal.push(f.clone());
+        }
+    }
+    MiningResult::new(maximal)
+}
+
+/// Closed frequent itemsets: those with no proper superset of equal
+/// support. Uses the support-partition trick: an itemset can only be
+/// closed-violated by a superset with identical support.
+pub fn closed_itemsets(result: &MiningResult) -> MiningResult {
+    let mut by_support: FxHashMap<u32, Vec<&FrequentItemset>> = FxHashMap::default();
+    for f in &result.itemsets {
+        by_support.entry(f.support).or_default().push(f);
+    }
+    let mut closed = Vec::new();
+    for f in &result.itemsets {
+        let peers = &by_support[&f.support];
+        let has_equal_superset = peers.iter().any(|g| {
+            g.items.len() > f.items.len() && is_subset(&f.items, &g.items)
+        });
+        if !has_equal_superset {
+            closed.push(f.clone());
+        }
+    }
+    MiningResult::new(closed)
+}
+
+/// Compression ratio of a condensed representation (|condensed| / |full|).
+pub fn compression_ratio(full: &MiningResult, condensed: &MiningResult) -> f64 {
+    if full.is_empty() {
+        return 1.0;
+    }
+    condensed.len() as f64 / full.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fim::sequential::eclat_sequential;
+    use crate::util::prop::{forall, gen};
+
+    fn demo_db() -> Vec<Vec<Item>> {
+        vec![
+            vec![1, 2, 5],
+            vec![2, 4],
+            vec![2, 3],
+            vec![1, 2, 4],
+            vec![1, 3],
+            vec![2, 3],
+            vec![1, 3],
+            vec![1, 2, 3, 5],
+            vec![1, 2, 3],
+        ]
+    }
+
+    fn brute_maximal(full: &MiningResult) -> std::collections::BTreeSet<Vec<Item>> {
+        full.itemsets
+            .iter()
+            .filter(|f| {
+                !full.itemsets.iter().any(|g| {
+                    g.items.len() > f.items.len() && is_subset(&f.items, &g.items)
+                })
+            })
+            .map(|f| f.items.clone())
+            .collect()
+    }
+
+    fn brute_closed(full: &MiningResult) -> std::collections::BTreeSet<Vec<Item>> {
+        full.itemsets
+            .iter()
+            .filter(|f| {
+                !full.itemsets.iter().any(|g| {
+                    g.support == f.support
+                        && g.items.len() > f.items.len()
+                        && is_subset(&f.items, &g.items)
+                })
+            })
+            .map(|f| f.items.clone())
+            .collect()
+    }
+
+    #[test]
+    fn subset_check() {
+        assert!(is_subset(&[1, 3], &[1, 2, 3]));
+        assert!(is_subset(&[], &[1]));
+        assert!(!is_subset(&[1, 4], &[1, 2, 3]));
+        assert!(!is_subset(&[1, 2, 3], &[1, 2]));
+    }
+
+    #[test]
+    fn maximal_and_closed_match_bruteforce_demo() {
+        let full = eclat_sequential(&demo_db(), 2);
+        let maximal = maximal_itemsets(&full);
+        let closed = closed_itemsets(&full);
+        let max_sets: std::collections::BTreeSet<Vec<Item>> =
+            maximal.itemsets.iter().map(|f| f.items.clone()).collect();
+        let closed_sets: std::collections::BTreeSet<Vec<Item>> =
+            closed.itemsets.iter().map(|f| f.items.clone()).collect();
+        assert_eq!(max_sets, brute_maximal(&full));
+        assert_eq!(closed_sets, brute_closed(&full));
+        // maximal ⊆ closed ⊆ full
+        assert!(max_sets.is_subset(&closed_sets));
+        assert!(closed.len() <= full.len());
+        assert!(maximal.len() <= closed.len());
+    }
+
+    #[test]
+    fn property_condensed_representations() {
+        forall(25, gen::database(25, 8, 0.4), |db| {
+            let full = eclat_sequential(db, 2);
+            let maximal = maximal_itemsets(&full);
+            let closed = closed_itemsets(&full);
+            let max_sets: std::collections::BTreeSet<Vec<Item>> =
+                maximal.itemsets.iter().map(|f| f.items.clone()).collect();
+            let closed_sets: std::collections::BTreeSet<Vec<Item>> =
+                closed.itemsets.iter().map(|f| f.items.clone()).collect();
+            max_sets == brute_maximal(&full)
+                && closed_sets == brute_closed(&full)
+                && max_sets.is_subset(&closed_sets)
+        });
+    }
+
+    #[test]
+    fn every_frequent_itemset_has_maximal_superset() {
+        let full = eclat_sequential(&demo_db(), 2);
+        let maximal = maximal_itemsets(&full);
+        for f in &full.itemsets {
+            assert!(
+                maximal
+                    .itemsets
+                    .iter()
+                    .any(|m| is_subset(&f.items, &m.items)),
+                "{:?} not covered",
+                f.items
+            );
+        }
+    }
+
+    #[test]
+    fn compression_ratio_sane() {
+        let full = eclat_sequential(&demo_db(), 1);
+        let maximal = maximal_itemsets(&full);
+        let r = compression_ratio(&full, &maximal);
+        assert!(r > 0.0 && r < 1.0, "ratio {r}");
+        assert_eq!(compression_ratio(&MiningResult::default(), &maximal), 1.0);
+    }
+}

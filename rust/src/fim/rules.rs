@@ -1,0 +1,161 @@
+//! Association-rule generation from mined frequent itemsets
+//! (support/confidence/lift) — used by the `retail_rules` example; the
+//! paper's motivation section frames FIM as the support step of
+//! association-rule mining.
+
+use crate::util::hash::FxHashMap;
+
+use super::types::{Item, MiningResult};
+
+/// An association rule `antecedent => consequent`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rule {
+    pub antecedent: Vec<Item>,
+    pub consequent: Vec<Item>,
+    /// Absolute support of antecedent ∪ consequent.
+    pub support: u32,
+    pub confidence: f64,
+    pub lift: f64,
+}
+
+impl std::fmt::Display for Rule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let a: Vec<String> = self.antecedent.iter().map(|i| i.to_string()).collect();
+        let c: Vec<String> = self.consequent.iter().map(|i| i.to_string()).collect();
+        write!(
+            f,
+            "{{{}}} => {{{}}} (sup={}, conf={:.3}, lift={:.3})",
+            a.join(","),
+            c.join(","),
+            self.support,
+            self.confidence,
+            self.lift
+        )
+    }
+}
+
+/// Generate all rules with confidence >= `min_conf` from a mining result.
+/// `n_transactions` is |D| (for lift).
+pub fn generate_rules(
+    result: &MiningResult,
+    min_conf: f64,
+    n_transactions: usize,
+) -> Vec<Rule> {
+    let support: FxHashMap<Vec<Item>, u32> = result
+        .itemsets
+        .iter()
+        .map(|f| (f.items.clone(), f.support))
+        .collect();
+    let n = n_transactions as f64;
+    let mut rules = Vec::new();
+    for f in &result.itemsets {
+        let k = f.items.len();
+        if k < 2 {
+            continue;
+        }
+        // Every non-empty proper subset as antecedent.
+        for mask in 1u32..((1 << k) - 1) {
+            let mut ante = Vec::new();
+            let mut cons = Vec::new();
+            for (b, &item) in f.items.iter().enumerate() {
+                if mask >> b & 1 == 1 {
+                    ante.push(item);
+                } else {
+                    cons.push(item);
+                }
+            }
+            let Some(&ante_sup) = support.get(&ante) else {
+                continue; // antecedent below min_sup: skip (anti-monotone)
+            };
+            let conf = f.support as f64 / ante_sup as f64;
+            if conf < min_conf {
+                continue;
+            }
+            let lift = match support.get(&cons) {
+                Some(&cons_sup) if cons_sup > 0 => conf / (cons_sup as f64 / n),
+                _ => f64::NAN,
+            };
+            rules.push(Rule {
+                antecedent: ante,
+                consequent: cons,
+                support: f.support,
+                confidence: conf,
+                lift,
+            });
+        }
+    }
+    rules.sort_by(|a, b| {
+        b.confidence
+            .partial_cmp(&a.confidence)
+            .unwrap()
+            .then(b.support.cmp(&a.support))
+    });
+    rules
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fim::sequential::eclat_sequential;
+
+    fn db() -> Vec<Vec<Item>> {
+        vec![
+            vec![1, 2],
+            vec![1, 2],
+            vec![1, 2, 3],
+            vec![1, 3],
+            vec![2, 3],
+        ]
+    }
+
+    #[test]
+    fn confidence_and_lift_correct() {
+        let result = eclat_sequential(&db(), 1);
+        let rules = generate_rules(&result, 0.0, 5);
+        // rule {1} => {2}: sup({1,2})=3, sup({1})=4 -> conf 0.75
+        let r = rules
+            .iter()
+            .find(|r| r.antecedent == vec![1] && r.consequent == vec![2])
+            .unwrap();
+        assert_eq!(r.support, 3);
+        assert!((r.confidence - 0.75).abs() < 1e-12);
+        // lift = conf / (sup({2})/5) = 0.75 / (4/5) = 0.9375
+        assert!((r.lift - 0.9375).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_conf_filters() {
+        let result = eclat_sequential(&db(), 1);
+        let all = generate_rules(&result, 0.0, 5);
+        let high = generate_rules(&result, 0.9, 5);
+        assert!(high.len() < all.len());
+        assert!(high.iter().all(|r| r.confidence >= 0.9));
+    }
+
+    #[test]
+    fn rules_sorted_by_confidence() {
+        let result = eclat_sequential(&db(), 1);
+        let rules = generate_rules(&result, 0.0, 5);
+        for w in rules.windows(2) {
+            assert!(w[0].confidence >= w[1].confidence);
+        }
+    }
+
+    #[test]
+    fn no_rules_from_single_items() {
+        let result = eclat_sequential(&[vec![1], vec![2]], 1);
+        assert!(generate_rules(&result, 0.0, 2).is_empty());
+    }
+
+    #[test]
+    fn three_way_rules_enumerated() {
+        let result = eclat_sequential(&db(), 1);
+        let rules = generate_rules(&result, 0.0, 5);
+        // {1,2,3} frequent (sup 1): 6 rules from the 3-itemset
+        let from_triple = rules
+            .iter()
+            .filter(|r| r.antecedent.len() + r.consequent.len() == 3)
+            .count();
+        assert_eq!(from_triple, 6);
+    }
+}

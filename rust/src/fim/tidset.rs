@@ -1,0 +1,300 @@
+//! Tidset representations and the intersection kernel.
+//!
+//! Eclat's inner loop is `tidset(A_i) ∩ tidset(A_j)`. Two representations
+//! are provided behind [`TidOps`]:
+//!
+//! * [`VecTidset`] — sorted `Vec<u32>` of transaction ids, the textbook
+//!   (and SPMF) representation the paper uses. Intersection is a linear
+//!   merge with a galloping fast path for skewed sizes.
+//! * [`BitmapTidset`] — packed `u32` bitmaps (AND + popcount), the
+//!   representation the XLA artifact consumes, so the native and
+//!   accelerated paths share exact layout semantics.
+//!
+//! The mining code is generic over `TidOps`; the ablation bench compares
+//! the two (EXPERIMENTS.md §Ablations).
+
+use crate::util::Bitmap;
+
+/// Operations a tidset representation must support.
+pub trait TidOps: Clone + Send + Sync + 'static {
+    /// Build from a sorted, deduplicated tid list; `universe` is the
+    /// total transaction count (bitmap capacity).
+    fn from_tids(tids: &[u32], universe: usize) -> Self;
+    /// Number of transactions containing the itemset.
+    fn support(&self) -> usize;
+    /// Intersection.
+    fn intersect(&self, other: &Self) -> Self;
+    /// Support of the intersection without materializing it (used when
+    /// the candidate fails min_sup and the tidset would be discarded).
+    fn intersect_support(&self, other: &Self) -> usize;
+    /// Support with an early abort: returns `None` as soon as the
+    /// remaining elements cannot reach `min_sup` (§Perf O6 — the
+    /// dominant savings in triMatrixMode=false datasets, where most of
+    /// the O(n²) candidate pairs are hopeless).
+    fn intersect_support_min(&self, other: &Self, min_sup: u32) -> Option<u32> {
+        let s = self.intersect_support(other) as u32;
+        (s >= min_sup).then_some(s)
+    }
+    /// Recover the sorted tid list (tests / output).
+    fn to_tids(&self) -> Vec<u32>;
+}
+
+// ------------------------------------------------------------- VecTidset
+
+/// Sorted tid-list tidset.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VecTidset {
+    tids: Vec<u32>,
+}
+
+impl VecTidset {
+    pub fn tids(&self) -> &[u32] {
+        &self.tids
+    }
+
+    /// Linear merge intersection into a fresh vec.
+    fn merge_intersect(a: &[u32], b: &[u32]) -> Vec<u32> {
+        // Galloping when sizes are very skewed: binary-search the larger.
+        if a.len() * 32 < b.len() {
+            return Self::gallop_intersect(a, b);
+        }
+        if b.len() * 32 < a.len() {
+            return Self::gallop_intersect(b, a);
+        }
+        // Branch-light two-pointer merge (§Perf O2): advancing both
+        // cursors arithmetically instead of a 3-way branch lets the
+        // compiler keep the loop tight; bounds checks are elided by the
+        // loop condition.
+        let mut out = Vec::with_capacity(a.len().min(b.len()));
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.len() && j < b.len() {
+            let (x, y) = (a[i], b[j]);
+            if x == y {
+                out.push(x);
+            }
+            i += (x <= y) as usize;
+            j += (y <= x) as usize;
+        }
+        out
+    }
+
+    /// Count-only merge (§Perf O3): support of the intersection without
+    /// allocating or writing the result — the min_sup-check fast path.
+    fn merge_count(a: &[u32], b: &[u32]) -> usize {
+        if a.len() * 32 < b.len() {
+            return Self::gallop_count(a, b);
+        }
+        if b.len() * 32 < a.len() {
+            return Self::gallop_count(b, a);
+        }
+        let mut count = 0usize;
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.len() && j < b.len() {
+            let (x, y) = (a[i], b[j]);
+            count += (x == y) as usize;
+            i += (x <= y) as usize;
+            j += (y <= x) as usize;
+        }
+        count
+    }
+
+    fn gallop_count(small: &[u32], large: &[u32]) -> usize {
+        let mut count = 0usize;
+        let mut lo = 0usize;
+        for &x in small {
+            match large[lo..].binary_search(&x) {
+                Ok(pos) => {
+                    count += 1;
+                    lo += pos + 1;
+                }
+                Err(pos) => lo += pos,
+            }
+            if lo >= large.len() {
+                break;
+            }
+        }
+        count
+    }
+
+    /// For |small| << |large|: binary search each element of the small
+    /// side in the remaining suffix of the large side.
+    fn gallop_intersect(small: &[u32], large: &[u32]) -> Vec<u32> {
+        let mut out = Vec::with_capacity(small.len());
+        let mut lo = 0usize;
+        for &x in small {
+            match large[lo..].binary_search(&x) {
+                Ok(pos) => {
+                    out.push(x);
+                    lo += pos + 1;
+                }
+                Err(pos) => {
+                    lo += pos;
+                }
+            }
+            if lo >= large.len() {
+                break;
+            }
+        }
+        out
+    }
+}
+
+impl TidOps for VecTidset {
+    fn from_tids(tids: &[u32], _universe: usize) -> Self {
+        debug_assert!(tids.windows(2).all(|w| w[0] < w[1]), "tids must be sorted+unique");
+        Self {
+            tids: tids.to_vec(),
+        }
+    }
+
+    fn support(&self) -> usize {
+        self.tids.len()
+    }
+
+    fn intersect(&self, other: &Self) -> Self {
+        Self {
+            tids: Self::merge_intersect(&self.tids, &other.tids),
+        }
+    }
+
+    fn intersect_support(&self, other: &Self) -> usize {
+        Self::merge_count(&self.tids, &other.tids)
+    }
+
+    fn intersect_support_min(&self, other: &Self, min_sup: u32) -> Option<u32> {
+        let (a, b) = (&self.tids[..], &other.tids[..]);
+        let need = min_sup as usize;
+        if a.len().min(b.len()) < need {
+            return None; // can never reach min_sup
+        }
+        let mut count = 0usize;
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.len() && j < b.len() {
+            // infeasibility bound: even matching every remaining element
+            // of the shorter side cannot reach min_sup
+            if count + (a.len() - i).min(b.len() - j) < need {
+                return None;
+            }
+            let (x, y) = (a[i], b[j]);
+            count += (x == y) as usize;
+            i += (x <= y) as usize;
+            j += (y <= x) as usize;
+        }
+        (count >= need).then_some(count as u32)
+    }
+
+    fn to_tids(&self) -> Vec<u32> {
+        self.tids.clone()
+    }
+}
+
+// ----------------------------------------------------------- BitmapTidset
+
+/// Packed-bitmap tidset over the transaction universe.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitmapTidset {
+    bits: Bitmap,
+}
+
+impl BitmapTidset {
+    pub fn bitmap(&self) -> &Bitmap {
+        &self.bits
+    }
+}
+
+impl TidOps for BitmapTidset {
+    fn from_tids(tids: &[u32], universe: usize) -> Self {
+        Self {
+            bits: Bitmap::from_sorted_tids(tids, universe),
+        }
+    }
+
+    fn support(&self) -> usize {
+        self.bits.count()
+    }
+
+    fn intersect(&self, other: &Self) -> Self {
+        Self {
+            bits: self.bits.and(&other.bits),
+        }
+    }
+
+    fn intersect_support(&self, other: &Self) -> usize {
+        self.bits.and_count(&other.bits)
+    }
+
+    fn to_tids(&self) -> Vec<u32> {
+        self.bits.to_tids()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    fn random_sorted(rng: &mut SplitMix64, universe: usize, density: f64) -> Vec<u32> {
+        (0..universe as u32)
+            .filter(|_| rng.gen_bool(density))
+            .collect()
+    }
+
+    #[test]
+    fn vec_and_bitmap_agree_with_set_oracle() {
+        let mut rng = SplitMix64::new(0xFACE);
+        for _ in 0..100 {
+            let universe = 1 + rng.gen_range(600);
+            let a = random_sorted(&mut rng, universe, 0.3);
+            let b = random_sorted(&mut rng, universe, 0.3);
+            let oracle: Vec<u32> = a.iter().filter(|x| b.binary_search(x).is_ok()).copied().collect();
+
+            let va = VecTidset::from_tids(&a, universe);
+            let vb = VecTidset::from_tids(&b, universe);
+            assert_eq!(va.intersect(&vb).to_tids(), oracle);
+            assert_eq!(va.intersect_support(&vb), oracle.len());
+
+            let ba = BitmapTidset::from_tids(&a, universe);
+            let bb = BitmapTidset::from_tids(&b, universe);
+            assert_eq!(ba.intersect(&bb).to_tids(), oracle);
+            assert_eq!(ba.intersect_support(&bb), oracle.len());
+        }
+    }
+
+    #[test]
+    fn galloping_path_correct() {
+        let mut rng = SplitMix64::new(0xBEEF);
+        let universe = 100_000;
+        let big = random_sorted(&mut rng, universe, 0.5);
+        let small: Vec<u32> = vec![3, 77, 500, 9999, 50_000, 99_999];
+        let oracle: Vec<u32> = small
+            .iter()
+            .filter(|x| big.binary_search(x).is_ok())
+            .copied()
+            .collect();
+        let vs = VecTidset::from_tids(&small, universe);
+        let vb = VecTidset::from_tids(&big, universe);
+        assert_eq!(vs.intersect(&vb).to_tids(), oracle);
+        assert_eq!(vb.intersect(&vs).to_tids(), oracle);
+    }
+
+    #[test]
+    fn supports_match_lengths() {
+        let tids = vec![1u32, 5, 9, 200];
+        let v = VecTidset::from_tids(&tids, 256);
+        let b = BitmapTidset::from_tids(&tids, 256);
+        assert_eq!(v.support(), 4);
+        assert_eq!(b.support(), 4);
+        assert_eq!(v.to_tids(), tids);
+        assert_eq!(b.to_tids(), tids);
+    }
+
+    #[test]
+    fn empty_intersection() {
+        let a = VecTidset::from_tids(&[1, 3, 5], 10);
+        let b = VecTidset::from_tids(&[0, 2, 4], 10);
+        assert_eq!(a.intersect(&b).support(), 0);
+        let ba = BitmapTidset::from_tids(&[1, 3, 5], 10);
+        let bb = BitmapTidset::from_tids(&[0, 2, 4], 10);
+        assert_eq!(ba.intersect(&bb).support(), 0);
+    }
+}

@@ -1,0 +1,225 @@
+//! Item trie — Borgelt's transaction-filtering structure [13] plus the
+//! candidate trie used by the Apriori baseline for support counting.
+//!
+//! For 1-itemset filtering a set would suffice, but the trie also backs
+//! (a) EclatV2/V3's broadcast `trieL1` exactly as the paper describes and
+//! (b) YAFIM-style candidate subset matching, where prefix sharing is the
+//! point: counting all candidate k-itemsets contained in a transaction
+//! walks the trie once instead of probing each candidate.
+
+use crate::util::hash::FxHashMap;
+
+use super::types::Item;
+
+/// A prefix trie over sorted itemsets.
+#[derive(Debug, Clone, Default)]
+pub struct ItemTrie {
+    root: Node,
+    len: usize,
+}
+
+#[derive(Debug, Clone, Default)]
+struct Node {
+    children: FxHashMap<Item, Node>,
+    terminal: bool,
+    /// Support counter for candidate counting (Apriori phase-2).
+    count: u32,
+}
+
+impl ItemTrie {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build the 1-item trie (`trieL1`) from the frequent items.
+    pub fn from_items(items: impl IntoIterator<Item = Item>) -> Self {
+        let mut t = Self::new();
+        for i in items {
+            t.insert(&[i]);
+        }
+        t
+    }
+
+    /// Insert a sorted itemset.
+    pub fn insert(&mut self, itemset: &[Item]) {
+        debug_assert!(itemset.windows(2).all(|w| w[0] < w[1]));
+        let mut node = &mut self.root;
+        for &i in itemset {
+            node = node.children.entry(i).or_default();
+        }
+        if !node.terminal {
+            node.terminal = true;
+            self.len += 1;
+        }
+    }
+
+    /// Number of stored itemsets.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Exact membership of a sorted itemset.
+    pub fn contains(&self, itemset: &[Item]) -> bool {
+        let mut node = &self.root;
+        for &i in itemset {
+            match node.children.get(&i) {
+                Some(n) => node = n,
+                None => return false,
+            }
+        }
+        node.terminal
+    }
+
+    /// Does the trie contain the single item? (transaction filtering).
+    pub fn contains_item(&self, item: Item) -> bool {
+        self.root
+            .children
+            .get(&item)
+            .is_some_and(|n| n.terminal)
+    }
+
+    /// Borgelt transaction filtering: keep only items present (as
+    /// 1-itemsets) in this trie. Preserves input order.
+    pub fn filter_transaction(&self, txn: &[Item]) -> Vec<Item> {
+        txn.iter()
+            .copied()
+            .filter(|&i| self.contains_item(i))
+            .collect()
+    }
+
+    /// Increment the count of every stored itemset that is a subset of
+    /// the (sorted) transaction. Recursive prefix descent: at each node
+    /// try each remaining transaction item that has a child edge.
+    pub fn count_subsets(&mut self, txn: &[Item]) {
+        fn walk(node: &mut Node, txn: &[Item]) {
+            if node.terminal {
+                node.count += 1;
+            }
+            if node.children.is_empty() {
+                return;
+            }
+            for (pos, &i) in txn.iter().enumerate() {
+                if let Some(child) = node.children.get_mut(&i) {
+                    walk(child, &txn[pos + 1..]);
+                }
+            }
+        }
+        walk(&mut self.root, txn);
+    }
+
+    /// Drain `(itemset, count)` for all stored itemsets.
+    pub fn counts(&self) -> Vec<(Vec<Item>, u32)> {
+        let mut out = Vec::with_capacity(self.len);
+        let mut prefix = Vec::new();
+        fn walk(node: &Node, prefix: &mut Vec<Item>, out: &mut Vec<(Vec<Item>, u32)>) {
+            if node.terminal {
+                out.push((prefix.clone(), node.count));
+            }
+            let mut keys: Vec<Item> = node.children.keys().copied().collect();
+            keys.sort_unstable();
+            for k in keys {
+                prefix.push(k);
+                walk(&node.children[&k], prefix, out);
+                prefix.pop();
+            }
+        }
+        walk(&self.root, &mut prefix, &mut out);
+        out
+    }
+
+    /// Merge another trie's counts into this one (accumulator semantics:
+    /// same candidate sets, add counts).
+    pub fn merge_counts(&mut self, other: &ItemTrie) {
+        fn walk(a: &mut Node, b: &Node) {
+            a.count += b.count;
+            for (k, bc) in &b.children {
+                let ac = a.children.entry(*k).or_default();
+                if bc.terminal && !ac.terminal {
+                    ac.terminal = true;
+                }
+                walk(ac, bc);
+            }
+        }
+        walk(&mut self.root, &other.root);
+        // recompute len (cheap enough; merging is once per stage)
+        self.len = self.counts().len();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_contains() {
+        let mut t = ItemTrie::new();
+        t.insert(&[1, 3, 5]);
+        t.insert(&[1, 3]);
+        assert!(t.contains(&[1, 3, 5]));
+        assert!(t.contains(&[1, 3]));
+        assert!(!t.contains(&[1]));
+        assert!(!t.contains(&[3, 5]));
+        assert_eq!(t.len(), 2);
+        t.insert(&[1, 3]); // duplicate
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn filter_transaction_keeps_frequent_order() {
+        let t = ItemTrie::from_items([2, 5, 9]);
+        assert_eq!(t.filter_transaction(&[1, 2, 3, 5, 8, 9]), vec![2, 5, 9]);
+        assert_eq!(t.filter_transaction(&[7, 8]), Vec::<Item>::new());
+        assert!(t.contains_item(5));
+        assert!(!t.contains_item(1));
+    }
+
+    #[test]
+    fn count_subsets_matches_bruteforce() {
+        let candidates: Vec<Vec<Item>> = vec![vec![1, 2], vec![1, 3], vec![2, 3], vec![1, 2, 3]];
+        let txns: Vec<Vec<Item>> = vec![vec![1, 2, 3], vec![1, 2], vec![2, 3], vec![1, 3, 4]];
+        let mut t = ItemTrie::new();
+        for c in &candidates {
+            t.insert(c);
+        }
+        for txn in &txns {
+            t.count_subsets(txn);
+        }
+        let counts: std::collections::HashMap<Vec<Item>, u32> =
+            t.counts().into_iter().collect();
+        for c in &candidates {
+            let want = txns
+                .iter()
+                .filter(|txn| c.iter().all(|i| txn.contains(i)))
+                .count() as u32;
+            assert_eq!(counts[c], want, "candidate {c:?}");
+        }
+    }
+
+    #[test]
+    fn merge_counts_adds() {
+        let mut a = ItemTrie::new();
+        a.insert(&[1, 2]);
+        let mut b = ItemTrie::new();
+        b.insert(&[1, 2]);
+        a.count_subsets(&[1, 2]);
+        b.count_subsets(&[1, 2]);
+        b.count_subsets(&[1, 2, 3]);
+        a.merge_counts(&b);
+        let counts = a.counts();
+        assert_eq!(counts, vec![(vec![1, 2], 3)]);
+    }
+
+    #[test]
+    fn counts_sorted_lexicographically() {
+        let mut t = ItemTrie::new();
+        t.insert(&[2]);
+        t.insert(&[1]);
+        t.insert(&[1, 2]);
+        let sets: Vec<Vec<Item>> = t.counts().into_iter().map(|(s, _)| s).collect();
+        assert_eq!(sets, vec![vec![1], vec![1, 2], vec![2]]);
+    }
+}

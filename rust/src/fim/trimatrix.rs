@@ -1,0 +1,213 @@
+//! The upper-triangular candidate-2-itemset count matrix (Zaki [12],
+//! recommended for Phase-2 of every RDD-Eclat variant).
+//!
+//! Counting 2-itemsets with tidset intersections is the most expensive
+//! level of the lattice; one pass over the horizontal transactions into a
+//! triangular matrix is far cheaper. The matrix is shared across tasks as
+//! a Sparklet accumulator (elementwise-add merge), exactly the paper's
+//! `accMatrix`.
+//!
+//! Size scales with the square of the *item-id space*, which is why the
+//! paper disables it for BMS1/BMS2 (large ids) — our experiments honour
+//! the same `tri_matrix_mode` flag.
+
+use crate::sparklet::accumulator::AccumValue;
+
+use super::types::Item;
+
+/// Upper-triangular u32 count matrix over items `0..n` (dense ranks).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TriMatrix {
+    n: usize,
+    counts: Vec<u32>,
+}
+
+impl TriMatrix {
+    pub fn new(n_items: usize) -> Self {
+        let len = n_items * n_items.saturating_sub(1) / 2;
+        Self {
+            n: n_items,
+            counts: vec![0; len],
+        }
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.n
+    }
+
+    /// Memory footprint in bytes (the paper's out-of-memory guard).
+    pub fn bytes(&self) -> usize {
+        self.counts.len() * std::mem::size_of::<u32>()
+    }
+
+    /// Linear index of pair (i, j) with i < j < n: row-major upper
+    /// triangle. Row i starts at i*n - i*(i+1)/2 - i - ... standard:
+    /// idx = i*(2n - i - 1)/2 + (j - i - 1).
+    #[inline]
+    fn index(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < j && j < self.n, "bad pair ({i},{j}) n={}", self.n);
+        i * (2 * self.n - i - 1) / 2 + (j - i - 1)
+    }
+
+    /// Increment the count of the unordered pair {a, b}.
+    #[inline]
+    pub fn update(&mut self, a: Item, b: Item) {
+        let (i, j) = if a < b {
+            (a as usize, b as usize)
+        } else {
+            (b as usize, a as usize)
+        };
+        let idx = self.index(i, j);
+        self.counts[idx] += 1;
+    }
+
+    /// Count every 2-combination of a (sorted, deduped) transaction.
+    pub fn update_transaction(&mut self, txn: &[Item]) {
+        for (x, &a) in txn.iter().enumerate() {
+            for &b in &txn[x + 1..] {
+                self.update(a, b);
+            }
+        }
+    }
+
+    /// Support of the unordered pair {a, b}.
+    #[inline]
+    pub fn get_support(&self, a: Item, b: Item) -> u32 {
+        if a == b {
+            return 0;
+        }
+        let (i, j) = if a < b {
+            (a as usize, b as usize)
+        } else {
+            (b as usize, a as usize)
+        };
+        self.counts[self.index(i, j)]
+    }
+
+    /// Add counts from an XLA co-occurrence tile: `tile[r, c]` is the
+    /// count of items `(row_base + r, col_base + c)`. Only strictly-upper
+    /// pairs inside the matrix are merged.
+    pub fn add_cooc_tile(
+        &mut self,
+        tile: &[f32],
+        tile_dim: usize,
+        row_base: usize,
+        col_base: usize,
+    ) {
+        for r in 0..tile_dim {
+            let gi = row_base + r;
+            if gi >= self.n {
+                break;
+            }
+            for c in 0..tile_dim {
+                let gj = col_base + c;
+                if gj >= self.n || gi >= gj {
+                    continue;
+                }
+                let v = tile[r * tile_dim + c] as u32;
+                if v > 0 {
+                    let idx = self.index(gi, gj);
+                    self.counts[idx] += v;
+                }
+            }
+        }
+    }
+}
+
+impl AccumValue for TriMatrix {
+    fn merge(&mut self, other: Self) {
+        assert_eq!(self.n, other.n, "triangular matrix size mismatch");
+        for (a, b) in self.counts.iter_mut().zip(other.counts) {
+            *a += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_covers_all_pairs_uniquely() {
+        let n = 17;
+        let m = TriMatrix::new(n);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let idx = m.index(i, j);
+                assert!(idx < m.counts.len());
+                assert!(seen.insert(idx), "collision at ({i},{j})");
+            }
+        }
+        assert_eq!(seen.len(), n * (n - 1) / 2);
+    }
+
+    #[test]
+    fn update_and_get_symmetric() {
+        let mut m = TriMatrix::new(5);
+        m.update(3, 1);
+        m.update(1, 3);
+        assert_eq!(m.get_support(1, 3), 2);
+        assert_eq!(m.get_support(3, 1), 2);
+        assert_eq!(m.get_support(0, 4), 0);
+        assert_eq!(m.get_support(2, 2), 0);
+    }
+
+    #[test]
+    fn transaction_counts_match_bruteforce() {
+        let txns: Vec<Vec<Item>> = vec![
+            vec![0, 1, 2],
+            vec![1, 2, 3],
+            vec![0, 2, 3],
+            vec![0, 1, 2, 3],
+        ];
+        let mut m = TriMatrix::new(4);
+        for t in &txns {
+            m.update_transaction(t);
+        }
+        // brute force
+        for i in 0..4u32 {
+            for j in (i + 1)..4u32 {
+                let want = txns
+                    .iter()
+                    .filter(|t| t.contains(&i) && t.contains(&j))
+                    .count() as u32;
+                assert_eq!(m.get_support(i, j), want, "pair ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_adds_elementwise() {
+        let mut a = TriMatrix::new(4);
+        let mut b = TriMatrix::new(4);
+        a.update(0, 1);
+        b.update(0, 1);
+        b.update(2, 3);
+        a.merge(b);
+        assert_eq!(a.get_support(0, 1), 2);
+        assert_eq!(a.get_support(2, 3), 1);
+    }
+
+    #[test]
+    fn cooc_tile_merge() {
+        // 2x2 tile at (row_base=0, col_base=0) for n=3
+        let mut m = TriMatrix::new(3);
+        // tile[r,c]: pair counts; diagonal ignored; lower triangle ignored
+        let tile = vec![5.0f32, 2.0, 7.0, 4.0]; // (0,0)=5 (0,1)=2 (1,0)=7 (1,1)=4
+        m.add_cooc_tile(&tile, 2, 0, 0);
+        assert_eq!(m.get_support(0, 1), 2);
+        // off-diagonal tile
+        let tile2 = vec![3.0f32, 0.0, 1.0, 9.0]; // rows {0,1} x cols {2,3(, oob)}
+        m.add_cooc_tile(&tile2, 2, 0, 2);
+        assert_eq!(m.get_support(0, 2), 3);
+        assert_eq!(m.get_support(1, 2), 1);
+    }
+
+    #[test]
+    fn bytes_reflects_quadratic_growth() {
+        assert!(TriMatrix::new(1000).bytes() > TriMatrix::new(100).bytes() * 50);
+        assert_eq!(TriMatrix::new(0).bytes(), 0);
+        assert_eq!(TriMatrix::new(1).bytes(), 0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Core FIM types: items, transactions, mining results.
+
+use std::collections::BTreeSet;
+
+/// An item is an integer token (all four benchmark datasets are
+/// integer-coded; BMS item ids reach into the tens of thousands, which is
+/// exactly why the paper disables the triangular matrix there).
+pub type Item = u32;
+
+/// A transaction: the items bought/clicked together. Kept sorted+deduped
+/// by the readers/generators.
+pub type Transaction = Vec<Item>;
+
+/// One mined itemset with its absolute support count.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct FrequentItemset {
+    pub items: Vec<Item>,
+    pub support: u32,
+}
+
+impl FrequentItemset {
+    pub fn new(mut items: Vec<Item>, support: u32) -> Self {
+        // §Perf O4: emission-path fast path — inputs are usually already
+        // sorted (class prefixes follow the processing order), so check
+        // in O(k) before paying the sort.
+        if !items.is_sorted() {
+            items.sort_unstable();
+        }
+        Self { items, support }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+impl std::fmt::Display for FrequentItemset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let items: Vec<String> = self.items.iter().map(|i| i.to_string()).collect();
+        write!(f, "{} #SUP: {}", items.join(" "), self.support)
+    }
+}
+
+/// The result of a mining run, with comparison helpers for oracle tests.
+#[derive(Debug, Clone, Default)]
+pub struct MiningResult {
+    pub itemsets: Vec<FrequentItemset>,
+}
+
+impl MiningResult {
+    pub fn new(itemsets: Vec<FrequentItemset>) -> Self {
+        Self { itemsets }
+    }
+
+    pub fn len(&self) -> usize {
+        self.itemsets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.itemsets.is_empty()
+    }
+
+    /// Canonical form: sorted set of (items, support) — order-insensitive
+    /// equality across algorithms and partitionings.
+    pub fn canonical(&self) -> BTreeSet<(Vec<Item>, u32)> {
+        self.itemsets
+            .iter()
+            .map(|f| (f.items.clone(), f.support))
+            .collect()
+    }
+
+    pub fn same_as(&self, other: &MiningResult) -> bool {
+        self.canonical() == other.canonical()
+    }
+
+    /// Count of itemsets of each length (1-itemsets, 2-itemsets, ...).
+    pub fn histogram(&self) -> Vec<usize> {
+        let mut h = Vec::new();
+        for f in &self.itemsets {
+            let k = f.len();
+            if h.len() < k {
+                h.resize(k, 0);
+            }
+            h[k - 1] += 1;
+        }
+        h
+    }
+
+    pub fn max_length(&self) -> usize {
+        self.itemsets.iter().map(|f| f.len()).max().unwrap_or(0)
+    }
+}
+
+/// Convert a relative minimum support (fraction of |D|) into an absolute
+/// count, matching the paper's "min_sup = 0.001" notation. Rounds up so
+/// an itemset must appear in at least `ceil(frac * n)` transactions.
+pub fn abs_min_sup(frac: f64, n_transactions: usize) -> u32 {
+    ((frac * n_transactions as f64).ceil() as u32).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn itemset_sorts_items() {
+        let f = FrequentItemset::new(vec![3, 1, 2], 5);
+        assert_eq!(f.items, vec![1, 2, 3]);
+        assert_eq!(f.support, 5);
+    }
+
+    #[test]
+    fn display_spmf_style() {
+        let f = FrequentItemset::new(vec![2, 7], 11);
+        assert_eq!(f.to_string(), "2 7 #SUP: 11");
+    }
+
+    #[test]
+    fn canonical_ignores_order() {
+        let a = MiningResult::new(vec![
+            FrequentItemset::new(vec![1], 3),
+            FrequentItemset::new(vec![2], 2),
+        ]);
+        let b = MiningResult::new(vec![
+            FrequentItemset::new(vec![2], 2),
+            FrequentItemset::new(vec![1], 3),
+        ]);
+        assert!(a.same_as(&b));
+    }
+
+    #[test]
+    fn histogram_counts_lengths() {
+        let r = MiningResult::new(vec![
+            FrequentItemset::new(vec![1], 3),
+            FrequentItemset::new(vec![2], 2),
+            FrequentItemset::new(vec![1, 2], 2),
+        ]);
+        assert_eq!(r.histogram(), vec![2, 1]);
+        assert_eq!(r.max_length(), 2);
+    }
+
+    #[test]
+    fn abs_min_sup_rounds_up() {
+        assert_eq!(abs_min_sup(0.5, 10), 5);
+        assert_eq!(abs_min_sup(0.001, 59602), 60);
+        assert_eq!(abs_min_sup(0.0, 100), 1); // floor at 1
+        assert_eq!(abs_min_sup(0.015, 1000), 15);
+    }
+}

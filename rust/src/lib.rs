@@ -1,0 +1,31 @@
+//! # rdd-eclat
+//!
+//! A full reproduction of *"RDD-Eclat: Approaches to Parallelize Eclat
+//! Algorithm on Spark RDD Framework"* (Singh, Singh, Mishra, Garg —
+//! ICCNCT 2019) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * [`sparklet`] — a from-scratch Spark-RDD-like dataflow engine (the
+//!   substrate the paper assumes): lazy RDDs, DAG scheduler, shuffle,
+//!   broadcast/accumulators, caching, lineage recovery.
+//! * [`fim`] — frequent itemset mining: tidsets, the triangular matrix,
+//!   Borgelt transaction filtering, equivalence classes, Zaki's
+//!   Bottom-Up search, the five RDD-Eclat variants (V1–V5), the
+//!   RDD-Apriori (YAFIM) baseline, and sequential oracles.
+//! * [`data`] — benchmark dataset substitutes: an IBM Quest synthetic
+//!   generator (T10I4D100K / T40I10D100K) and a BMS-WebView-like
+//!   clickstream generator, plus file I/O and scaling.
+//! * [`runtime`] — the XLA/PJRT bridge: loads HLO-text artifacts AOT
+//!   compiled from JAX+Pallas (`python/compile/`) and exposes batched
+//!   support-count primitives to the mining hot path.
+//! * [`coordinator`] — experiment drivers that regenerate every table
+//!   and figure of the paper's evaluation section.
+//! * [`util`] — in-tree substrate (thread pool, RNG, bitmaps, bench and
+//!   property-test harnesses) since the build is fully offline.
+
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod fim;
+pub mod runtime;
+pub mod sparklet;
+pub mod util;

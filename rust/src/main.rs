@@ -1,0 +1,296 @@
+//! `repro` — the RDD-Eclat leader binary.
+//!
+//! Commands:
+//!   table1                         regenerate Table 1 (dataset properties)
+//!   fig --id N [--panel a|b]       regenerate Fig N (1..6)
+//!   mine --dataset D --min-sup F   run one algorithm on one dataset
+//!        [--variant v1..v5|apriori] [--cores N] [--p N] [--scale F]
+//!   claims --id N                  run Fig N and check the paper's claims
+//!   xla-smoke                      load + execute the AOT artifacts
+//!   all                            table1 + every figure (long)
+//!   help
+//!
+//! Shared env overrides: REPRO_SCALE, REPRO_SEED, REPRO_CORES,
+//! REPRO_BENCH_REPS, REPRO_BENCH_WARMUP, REPRO_ARTIFACTS.
+
+use anyhow::{bail, Result};
+
+use rdd_eclat::cli::Args;
+use rdd_eclat::coordinator::{experiments, report, ExperimentConfig};
+use rdd_eclat::data::Dataset;
+use rdd_eclat::fim::eclat::EclatVariant;
+use rdd_eclat::fim::types::abs_min_sup;
+
+fn main() -> Result<()> {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    let mut cfg = ExperimentConfig::default();
+    if let Some(scale) = args.get_parse::<f64>("scale").map_err(anyhow::Error::msg)? {
+        cfg.scale = scale;
+    }
+    if let Some(cores) = args.get_parse::<usize>("cores").map_err(anyhow::Error::msg)? {
+        cfg.cores = cores;
+    }
+    if let Some(p) = args.get_parse::<usize>("p").map_err(anyhow::Error::msg)? {
+        cfg.p = p;
+    }
+
+    match args.command.as_str() {
+        "table1" => println!("{}", experiments::table1(&cfg)),
+        "fig" => run_fig(&args, &cfg)?,
+        "claims" => run_claims(&args, &cfg)?,
+        "mine" => run_mine(&args, &cfg)?,
+        "generate" => run_generate(&args, &cfg)?,
+        "rules" => run_rules(&args, &cfg)?,
+        "xla-smoke" => xla_smoke()?,
+        "all" => {
+            println!("{}", experiments::table1(&cfg));
+            for id in 1..=6 {
+                run_fig_id(id, None, &cfg)?;
+            }
+        }
+        _ => print_help(),
+    }
+    Ok(())
+}
+
+fn parse_dataset(name: &str) -> Result<Dataset> {
+    Ok(match name.to_lowercase().as_str() {
+        "bms1" | "bms_webview_1" => Dataset::Bms1,
+        "bms2" | "bms_webview_2" => Dataset::Bms2,
+        "t10" | "t10i4d100k" => Dataset::T10I4D100K,
+        "t40" | "t40i10d100k" => Dataset::T40I10D100K,
+        other => bail!("unknown dataset {other} (bms1|bms2|t10|t40)"),
+    })
+}
+
+fn fig_dataset(id: usize) -> Result<Dataset> {
+    Ok(match id {
+        1 => Dataset::Bms1,
+        2 => Dataset::Bms2,
+        3 => Dataset::T10I4D100K,
+        4 => Dataset::T40I10D100K,
+        _ => bail!("figures 1-4 are min_sup sweeps; got {id}"),
+    })
+}
+
+fn run_fig(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
+    let id: usize = args
+        .get_parse("id")
+        .map_err(anyhow::Error::msg)?
+        .ok_or_else(|| anyhow::anyhow!("--id 1..6 required"))?;
+    let panel = args.get("panel").map(|s| s.to_string());
+    run_fig_id(id, panel, cfg)
+}
+
+fn run_fig_id(id: usize, panel: Option<String>, cfg: &ExperimentConfig) -> Result<()> {
+    match id {
+        1..=4 => {
+            let d = fig_dataset(id)?;
+            let panels: Vec<bool> = match panel.as_deref() {
+                Some("a") => vec![true],
+                Some("b") => vec![false],
+                _ => vec![true, false],
+            };
+            for with_apriori in panels {
+                experiments::fig_minsup(id, d, with_apriori, cfg).finish();
+            }
+        }
+        5 => {
+            experiments::fig_cores(Dataset::Bms2, 0.001, cfg).finish();
+            experiments::fig_cores(Dataset::T40I10D100K, 0.01, cfg).finish();
+        }
+        6 => experiments::fig_scaling(cfg).finish(),
+        _ => bail!("--id must be 1..6"),
+    }
+    Ok(())
+}
+
+fn run_claims(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
+    let id: usize = args
+        .get_parse("id")
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or(3);
+    match id {
+        1..=4 => {
+            let d = fig_dataset(id)?;
+            let suite = experiments::fig_minsup(id, d, true, cfg);
+            suite.finish();
+            let checks = vec![
+                report::check_eclat_beats_apriori(&suite),
+                report::check_gap_widens(&suite),
+                report::check_v45_beat_v23(&suite),
+            ];
+            println!("{}", report::render_claims(&checks));
+        }
+        5 => {
+            let suite = experiments::fig_cores(Dataset::Bms2, 0.001, cfg);
+            suite.finish();
+            println!(
+                "{}",
+                report::render_claims(&[report::check_core_scaling(&suite)])
+            );
+        }
+        6 => {
+            let suite = experiments::fig_scaling(cfg);
+            suite.finish();
+            println!(
+                "{}",
+                report::render_claims(&[report::check_linear_scaling(&suite)])
+            );
+        }
+        _ => bail!("--id must be 1..6"),
+    }
+    Ok(())
+}
+
+fn run_mine(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
+    let dataset = parse_dataset(args.get_or("dataset", "t10"))?;
+    let min_sup_frac: f64 = args
+        .get_parse("min-sup")
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or(0.01);
+    let variant = args.get_or("variant", "v4").to_lowercase();
+    let txns = dataset.generate_scaled(cfg.seed, cfg.scale);
+    let min_sup = abs_min_sup(min_sup_frac, txns.len());
+    let algo = match variant.as_str() {
+        "apriori" => experiments::Algo::Apriori,
+        "v1" => experiments::Algo::Eclat(EclatVariant::V1),
+        "v2" => experiments::Algo::Eclat(EclatVariant::V2),
+        "v3" => experiments::Algo::Eclat(EclatVariant::V3),
+        "v4" => experiments::Algo::Eclat(EclatVariant::V4),
+        "v5" => experiments::Algo::Eclat(EclatVariant::V5),
+        other => bail!("unknown variant {other}"),
+    };
+    println!(
+        "mining {} ({} txns, scale {}) at min_sup {} ({} abs) with {} on {} cores",
+        dataset.name(),
+        txns.len(),
+        cfg.scale,
+        min_sup_frac,
+        min_sup,
+        algo.name(),
+        cfg.cores
+    );
+    let (result, ms) = experiments::run_algo(algo, &txns, min_sup, dataset.tri_matrix_mode(), cfg);
+    println!(
+        "found {} frequent itemsets (max length {}) in {:.1} ms",
+        result.len(),
+        result.max_length(),
+        ms
+    );
+    let hist = result.histogram();
+    for (k, count) in hist.iter().enumerate() {
+        println!("  L{}: {count}", k + 1);
+    }
+    Ok(())
+}
+
+/// Write a generated benchmark dataset to disk in FIMI format.
+fn run_generate(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
+    let dataset = parse_dataset(args.get_or("dataset", "t10"))?;
+    let out = args.get_or("out", "dataset.txt").to_string();
+    let txns = dataset.generate_scaled(
+        args.get_parse::<u64>("seed")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(cfg.seed),
+        cfg.scale,
+    );
+    rdd_eclat::data::write_transactions(&out, &txns)?;
+    let stats = rdd_eclat::data::DatasetStats::compute(&txns);
+    println!("wrote {out}: {stats}");
+    Ok(())
+}
+
+/// Mine + derive association rules from a dataset (generated or a file
+/// via --input).
+fn run_rules(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
+    use rdd_eclat::fim::eclat::{mine_eclat_vec, EclatConfig};
+    use rdd_eclat::fim::rules::generate_rules;
+    use rdd_eclat::sparklet::SparkletContext;
+    let txns = if let Some(path) = args.get("input") {
+        rdd_eclat::data::read_transactions(path)?
+    } else {
+        parse_dataset(args.get_or("dataset", "t10"))?.generate_scaled(cfg.seed, cfg.scale)
+    };
+    let min_sup_frac: f64 = args
+        .get_parse("min-sup")
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or(0.01);
+    let min_conf: f64 = args
+        .get_parse("min-conf")
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or(0.5);
+    let top: usize = args
+        .get_parse("top")
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or(20);
+    let min_sup = abs_min_sup(min_sup_frac, txns.len());
+    let sc = SparkletContext::local(cfg.cores);
+    let result = mine_eclat_vec(
+        &sc,
+        txns.clone(),
+        &EclatConfig::new(EclatVariant::V5, min_sup).with_p(cfg.p),
+    );
+    let rules = generate_rules(&result, min_conf, txns.len());
+    println!(
+        "{} itemsets, {} rules (min_sup={min_sup_frac}, min_conf={min_conf}); top {top}:",
+        result.len(),
+        rules.len()
+    );
+    for r in rules.iter().take(top) {
+        println!("  {r}");
+    }
+    Ok(())
+}
+
+fn xla_smoke() -> Result<()> {
+    use rdd_eclat::runtime::{artifacts_dir, XlaFim};
+    use rdd_eclat::util::Bitmap;
+    let mut fim = XlaFim::load(&artifacts_dir())?;
+    println!("PJRT platform: {}", fim.platform());
+    let mut a = Bitmap::new(1000);
+    let mut b = Bitmap::new(1000);
+    for i in (0..1000).step_by(3) {
+        a.set(i);
+    }
+    for i in (0..1000).step_by(5) {
+        b.set(i);
+    }
+    let (inter, sup) = fim.intersect_batch(&[&a], &[&b])?;
+    println!(
+        "intersect smoke: |a|={} |b|={} |a∩b|={} (expect 67)",
+        a.count(),
+        b.count(),
+        sup[0]
+    );
+    assert_eq!(sup[0], 67);
+    assert_eq!(inter[0].count(), 67);
+    println!("xla-smoke OK");
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "repro — RDD-Eclat reproduction (see README.md)\n\
+         \n\
+         USAGE: repro <command> [flags]\n\
+         \n\
+         COMMANDS:\n\
+           table1                       dataset properties (Table 1)\n\
+           fig --id N [--panel a|b]     regenerate figure N in 1..6\n\
+           claims --id N                figure N + paper-claim checks\n\
+           mine --dataset D --min-sup F --variant V   one mining run\n\
+           xla-smoke                    verify the XLA/PJRT artifact path\n\
+           all                          everything (long)\n\
+         \n\
+         FLAGS: --scale F  --cores N  --p N\n\
+         ENV:   REPRO_SCALE REPRO_SEED REPRO_CORES REPRO_BENCH_REPS"
+    );
+}

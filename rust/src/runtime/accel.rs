@@ -1,0 +1,279 @@
+//! XLA-backed FIM primitives: batched tidset intersection and the
+//! co-occurrence (candidate-2-itemset) count matrix.
+//!
+//! The artifacts are compiled for fixed tile shapes; this module tiles /
+//! pads arbitrary workloads onto them:
+//!
+//!  * `intersect_batch`: rows are processed in chunks of the artifact's
+//!    R; the word axis in chunks of W (AND + popcount are elementwise /
+//!    additive across word chunks, so chunk supports just sum).
+//!  * `cooc_tri_matrix`: item blocks of I × I swept pairwise (bi ≤ bj),
+//!    transaction axis in chunks of K, partial products accumulated into
+//!    the triangular matrix — the same schedule the Pallas grid uses on
+//!    TPU, lifted one level up.
+
+use anyhow::{Context, Result};
+
+use crate::fim::trimatrix::TriMatrix;
+use crate::fim::types::Item;
+use crate::util::Bitmap;
+
+use super::executable::ArtifactRegistry;
+
+/// Which artifacts this engine uses.
+const INTERSECT: &str = "intersect_256x1024";
+const INTERSECT_MINSUP: &str = "intersect_minsup_256x1024";
+const COOC_PAIR: &str = "cooc_pair_256x2048";
+
+/// XLA-accelerated support-count engine. NOT `Send`: PJRT handles live on
+/// the driver thread; phases batch their work and call in from there.
+pub struct XlaFim {
+    registry: ArtifactRegistry,
+    dir: String,
+}
+
+impl XlaFim {
+    /// Load the engine from the artifacts directory (`make artifacts`).
+    pub fn load(dir: &str) -> Result<Self> {
+        let mut registry = ArtifactRegistry::new()?;
+        registry.load(dir, INTERSECT)?;
+        registry.load(dir, INTERSECT_MINSUP)?;
+        registry.load(dir, COOC_PAIR)?;
+        Ok(Self {
+            registry,
+            dir: dir.to_string(),
+        })
+    }
+
+    /// Load from the default artifacts dir.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&super::artifacts_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.registry.platform()
+    }
+
+    /// Batched tidset intersection: `out[i] = xs[i] & ys[i]` with
+    /// supports. All bitmaps must share the same universe.
+    pub fn intersect_batch(
+        &mut self,
+        xs: &[&Bitmap],
+        ys: &[&Bitmap],
+    ) -> Result<(Vec<Bitmap>, Vec<u32>)> {
+        assert_eq!(xs.len(), ys.len());
+        if xs.is_empty() {
+            return Ok((Vec::new(), Vec::new()));
+        }
+        let nbits = xs[0].nbits();
+        let n_words = xs[0].words().len();
+        let art = self.registry.load(&self.dir, INTERSECT)?;
+        let (tile_r, tile_w) = art.shape;
+
+        let n = xs.len();
+        let mut out_words: Vec<Vec<u32>> = vec![vec![0u32; n_words]; n];
+        let mut supports = vec![0u32; n];
+
+        for row0 in (0..n).step_by(tile_r) {
+            let rows = tile_r.min(n - row0);
+            for word0 in (0..n_words).step_by(tile_w) {
+                let words = tile_w.min(n_words - word0);
+                // pack [tile_r, tile_w] i32 tiles (zero-padded)
+                let mut xt = vec![0i32; tile_r * tile_w];
+                let mut yt = vec![0i32; tile_r * tile_w];
+                for r in 0..rows {
+                    let xw = &xs[row0 + r].words()[word0..word0 + words];
+                    let yw = &ys[row0 + r].words()[word0..word0 + words];
+                    for (c, (&a, &b)) in xw.iter().zip(yw).enumerate() {
+                        xt[r * tile_w + c] = a as i32;
+                        yt[r * tile_w + c] = b as i32;
+                    }
+                }
+                let lx = xla::Literal::vec1(&xt).reshape(&[tile_r as i64, tile_w as i64])?;
+                let ly = xla::Literal::vec1(&yt).reshape(&[tile_r as i64, tile_w as i64])?;
+                let result = art.exe.execute::<xla::Literal>(&[lx, ly])?[0][0]
+                    .to_literal_sync()?;
+                let (inter, sup) = result.to_tuple2().context("intersect output tuple")?;
+                let inter: Vec<i32> = inter.to_vec()?;
+                let sup: Vec<i32> = sup.to_vec()?;
+                for r in 0..rows {
+                    supports[row0 + r] += sup[r] as u32;
+                    let dst = &mut out_words[row0 + r][word0..word0 + words];
+                    for (c, d) in dst.iter_mut().enumerate() {
+                        *d = inter[r * tile_w + c] as u32;
+                    }
+                }
+            }
+        }
+
+        let bitmaps = out_words
+            .into_iter()
+            .map(|words| {
+                let mut b = Bitmap::new(nbits);
+                for (i, w) in words.into_iter().enumerate() {
+                    if w != 0 {
+                        // write whole words through the tid interface-free path
+                        for bit in 0..32 {
+                            if w >> bit & 1 == 1 {
+                                let idx = i * 32 + bit;
+                                if idx < nbits {
+                                    b.set(idx);
+                                }
+                            }
+                        }
+                    }
+                }
+                b
+            })
+            .collect();
+        Ok((bitmaps, supports))
+    }
+
+    /// Batched intersection with the min_sup test fused into the graph
+    /// (the `intersect_minsup` artifact): returns only supports and the
+    /// 0/1 frequency mask — the readback-light path when callers discard
+    /// infrequent intersections anyway. `min_sup` is a runtime scalar
+    /// operand, so one compiled executable serves every threshold.
+    ///
+    /// Constraint of the fused artifact: the word axis must fit a single
+    /// tile (mask composition across word chunks would need a host-side
+    /// re-check); larger universes should use `intersect_batch`.
+    pub fn intersect_minsup_batch(
+        &mut self,
+        xs: &[&Bitmap],
+        ys: &[&Bitmap],
+        min_sup: u32,
+    ) -> Result<(Vec<u32>, Vec<bool>)> {
+        assert_eq!(xs.len(), ys.len());
+        if xs.is_empty() {
+            return Ok((Vec::new(), Vec::new()));
+        }
+        let art = self.registry.load(&self.dir, INTERSECT_MINSUP)?;
+        let (tile_r, tile_w) = art.shape;
+        let n_words = xs[0].words().len();
+        anyhow::ensure!(
+            n_words <= tile_w,
+            "universe {} words exceeds fused-artifact tile {tile_w}; use intersect_batch",
+            n_words
+        );
+        let n = xs.len();
+        let mut supports = vec![0u32; n];
+        let mut mask = vec![false; n];
+        for row0 in (0..n).step_by(tile_r) {
+            let rows = tile_r.min(n - row0);
+            let mut xt = vec![0i32; tile_r * tile_w];
+            let mut yt = vec![0i32; tile_r * tile_w];
+            for r in 0..rows {
+                for (c, (&a, &b)) in xs[row0 + r]
+                    .words()
+                    .iter()
+                    .zip(ys[row0 + r].words())
+                    .enumerate()
+                {
+                    xt[r * tile_w + c] = a as i32;
+                    yt[r * tile_w + c] = b as i32;
+                }
+            }
+            let lx = xla::Literal::vec1(&xt).reshape(&[tile_r as i64, tile_w as i64])?;
+            let ly = xla::Literal::vec1(&yt).reshape(&[tile_r as i64, tile_w as i64])?;
+            let lm = xla::Literal::scalar(min_sup as i32);
+            let result = art.exe.execute::<xla::Literal>(&[lx, ly, lm])?[0][0]
+                .to_literal_sync()?;
+            let (_, sup, m) = result.to_tuple3().context("minsup output tuple")?;
+            let sup: Vec<i32> = sup.to_vec()?;
+            let m: Vec<i32> = m.to_vec()?;
+            for r in 0..rows {
+                supports[row0 + r] = sup[r] as u32;
+                mask[row0 + r] = m[r] != 0;
+            }
+        }
+        Ok((supports, mask))
+    }
+
+    /// Candidate-2-itemset counts (the paper's Phase-2 triangular matrix)
+    /// from per-item transaction bitmaps, via the cooc_pair matmul
+    /// artifact. `items[i]` is the bitmap of item with dense rank `i`.
+    pub fn cooc_tri_matrix(&mut self, items: &[&Bitmap]) -> Result<TriMatrix> {
+        let n = items.len();
+        let mut tri = TriMatrix::new(n);
+        if n < 2 {
+            return Ok(tri);
+        }
+        let n_txns = items[0].nbits();
+        let art = self.registry.load(&self.dir, COOC_PAIR)?;
+        let (tile_i, tile_k) = art.shape;
+
+        // Dense 0/1 tile builder for item block starting at `base`,
+        // transaction chunk starting at `t0`.
+        let build_tile = |base: usize, t0: usize| -> Vec<f32> {
+            let mut tile = vec![0f32; tile_i * tile_k];
+            for r in 0..tile_i.min(n - base) {
+                let bm = items[base + r];
+                let hi = (t0 + tile_k).min(n_txns);
+                // walk words overlapping [t0, hi)
+                let w0 = t0 / 32;
+                let w1 = hi.div_ceil(32);
+                for wi in w0..w1.min(bm.words().len()) {
+                    let w = bm.words()[wi];
+                    if w == 0 {
+                        continue;
+                    }
+                    let mut bits = w;
+                    while bits != 0 {
+                        let b = bits.trailing_zeros() as usize;
+                        bits &= bits - 1;
+                        let t = wi * 32 + b;
+                        if t >= t0 && t < hi {
+                            tile[r * tile_k + (t - t0)] = 1.0;
+                        }
+                    }
+                }
+            }
+            tile
+        };
+
+        for bi in (0..n).step_by(tile_i) {
+            for bj in (bi..n).step_by(tile_i) {
+                // accumulate over transaction chunks
+                let mut acc = vec![0f32; tile_i * tile_i];
+                for t0 in (0..n_txns).step_by(tile_k) {
+                    let a = build_tile(bi, t0);
+                    let b = if bj == bi {
+                        a.clone()
+                    } else {
+                        build_tile(bj, t0)
+                    };
+                    let la =
+                        xla::Literal::vec1(&a).reshape(&[tile_i as i64, tile_k as i64])?;
+                    let lb =
+                        xla::Literal::vec1(&b).reshape(&[tile_i as i64, tile_k as i64])?;
+                    let result = art.exe.execute::<xla::Literal>(&[la, lb])?[0][0]
+                        .to_literal_sync()?;
+                    let tile = result.to_tuple1().context("cooc output tuple")?;
+                    let tile: Vec<f32> = tile.to_vec()?;
+                    for (x, t) in acc.iter_mut().zip(tile) {
+                        *x += t;
+                    }
+                }
+                tri.add_cooc_tile(&acc, tile_i, bi, bj);
+            }
+        }
+        Ok(tri)
+    }
+
+    /// Convenience: build per-item bitmaps from a vertical tid list and
+    /// produce the triangular matrix. Items must be densely ranked
+    /// (`rank -> tids`); rank order must match the caller's.
+    pub fn cooc_from_vertical(
+        &mut self,
+        vertical: &[(Item, Vec<u32>)],
+        n_txns: usize,
+    ) -> Result<TriMatrix> {
+        let bitmaps: Vec<Bitmap> = vertical
+            .iter()
+            .map(|(_, tids)| Bitmap::from_sorted_tids(tids, n_txns))
+            .collect();
+        let refs: Vec<&Bitmap> = bitmaps.iter().collect();
+        self.cooc_tri_matrix(&refs)
+    }
+}

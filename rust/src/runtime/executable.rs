@@ -1,0 +1,89 @@
+//! Artifact loading: HLO text file → compiled PJRT executable.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+/// One compiled artifact plus its declared tile shape.
+pub struct LoadedArtifact {
+    pub name: String,
+    /// (rows/items, words/chunk) tile shape parsed from the file name.
+    pub shape: (usize, usize),
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+/// Loads and caches compiled executables from the artifacts directory.
+pub struct ArtifactRegistry {
+    client: xla::PjRtClient,
+    loaded: HashMap<String, LoadedArtifact>,
+}
+
+impl ArtifactRegistry {
+    /// Create a CPU PJRT client. This is the expensive step (~100 ms);
+    /// do it once per process.
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self {
+            client,
+            loaded: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<dir>/<name>.hlo.txt` (cached by name).
+    pub fn load(&mut self, dir: &str, name: &str) -> Result<&LoadedArtifact> {
+        if !self.loaded.contains_key(name) {
+            let path = format!("{dir}/{name}.hlo.txt");
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parse HLO text {path}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile {name}"))?;
+            let shape = parse_shape(name)
+                .with_context(|| format!("artifact name {name} lacks RxC suffix"))?;
+            self.loaded.insert(
+                name.to_string(),
+                LoadedArtifact {
+                    name: name.to_string(),
+                    shape,
+                    exe,
+                },
+            );
+        }
+        Ok(&self.loaded[name])
+    }
+
+    /// Names listed in the artifacts manifest (without `.hlo.txt`).
+    pub fn manifest(dir: &str) -> Result<Vec<String>> {
+        let text = std::fs::read_to_string(format!("{dir}/manifest.txt"))
+            .with_context(|| format!("read {dir}/manifest.txt — run `make artifacts`"))?;
+        Ok(text
+            .split_whitespace()
+            .filter_map(|n| n.strip_suffix(".hlo.txt").map(|s| s.to_string()))
+            .collect())
+    }
+}
+
+/// Parse the `<base>_{R}x{C}` tile-shape suffix convention.
+fn parse_shape(name: &str) -> Option<(usize, usize)> {
+    let tail = name.rsplit('_').next()?;
+    let (r, c) = tail.split_once('x')?;
+    Some((r.parse().ok()?, c.parse().ok()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_shape_convention() {
+        assert_eq!(parse_shape("intersect_256x1024"), Some((256, 1024)));
+        assert_eq!(parse_shape("cooc_pair_128x512"), Some((128, 512)));
+        assert_eq!(parse_shape("model"), None);
+    }
+}

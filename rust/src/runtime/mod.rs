@@ -1,0 +1,26 @@
+//! XLA/PJRT runtime — loads the HLO-text artifacts that
+//! `python/compile/aot.py` produced and executes them on the CPU PJRT
+//! client. Python never runs on this path: the rust binary is
+//! self-contained once `make artifacts` has been run.
+//!
+//! Interchange is HLO *text* (see aot.py for why: jax ≥ 0.5 emits
+//! 64-bit-id protos that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids).
+
+pub mod accel;
+pub mod executable;
+
+pub use accel::XlaFim;
+pub use executable::{ArtifactRegistry, LoadedArtifact};
+
+/// Default artifacts directory, overridable with `REPRO_ARTIFACTS`.
+pub fn artifacts_dir() -> String {
+    std::env::var("REPRO_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+/// True if the artifacts directory looks built (manifest present).
+pub fn artifacts_available() -> bool {
+    std::path::Path::new(&artifacts_dir())
+        .join("manifest.txt")
+        .exists()
+}

@@ -1,0 +1,181 @@
+//! Accumulators — Spark's write-only shared variables.
+//!
+//! The paper leans on two non-trivial accumulators: the triangular
+//! matrix of candidate-2-itemset counts (`accMatrix`, EclatV1/V2) and a
+//! hashmap of item→tidset (EclatV3). Both merges are commutative and
+//! associative, which is all Spark guarantees for accumulator updates in
+//! transformations.
+//!
+//! Implementation: the value is sharded across `n_shards` mutexes; a
+//! task's `add` locks one shard chosen by thread id, so concurrent tasks
+//! rarely contend. `value()` folds all shards with the user's `merge`.
+//! Like Spark, updates from *re-executed* tasks can double-count; the
+//! failure-injection tests assert only on counters that tolerate it.
+
+use std::sync::{Arc, Mutex};
+
+/// Commutative-merge accumulator value.
+pub trait AccumValue: Send + 'static {
+    fn merge(&mut self, other: Self);
+}
+
+impl AccumValue for u64 {
+    fn merge(&mut self, other: Self) {
+        *self += other;
+    }
+}
+
+impl AccumValue for i64 {
+    fn merge(&mut self, other: Self) {
+        *self += other;
+    }
+}
+
+impl AccumValue for f64 {
+    fn merge(&mut self, other: Self) {
+        *self += other;
+    }
+}
+
+impl<T: Send + 'static> AccumValue for Vec<T> {
+    fn merge(&mut self, mut other: Self) {
+        self.append(&mut other);
+    }
+}
+
+/// A sharded accumulator. Cloning yields a handle to the same value.
+pub struct Accumulator<V: AccumValue> {
+    shards: Arc<Vec<Mutex<V>>>,
+    zero: Arc<dyn Fn() -> V + Send + Sync>,
+}
+
+impl<V: AccumValue> Clone for Accumulator<V> {
+    fn clone(&self) -> Self {
+        Self {
+            shards: Arc::clone(&self.shards),
+            zero: Arc::clone(&self.zero),
+        }
+    }
+}
+
+impl<V: AccumValue> Accumulator<V> {
+    /// `zero` constructs the identity element (also used to drain shards).
+    pub fn new(n_shards: usize, zero: impl Fn() -> V + Send + Sync + 'static) -> Self {
+        let shards = (0..n_shards.max(1)).map(|_| Mutex::new(zero())).collect();
+        Self {
+            shards: Arc::new(shards),
+            zero: Arc::new(zero),
+        }
+    }
+
+    #[inline]
+    fn shard_index(&self) -> usize {
+        // Cheap per-thread affinity: hash the thread id.
+        let tid = std::thread::current().id();
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        use std::hash::{Hash, Hasher};
+        tid.hash(&mut h);
+        (h.finish() % self.shards.len() as u64) as usize
+    }
+
+    /// Merge a delta into the accumulator (task-side `acc.add(..)`).
+    pub fn add(&self, delta: V) {
+        let idx = self.shard_index();
+        self.shards[idx].lock().unwrap().merge(delta);
+    }
+
+    /// Apply an in-place update to this thread's shard — the high-rate
+    /// path for the triangular-matrix accumulator (no temporary `V`).
+    pub fn update_in_place(&self, f: impl FnOnce(&mut V)) {
+        let idx = self.shard_index();
+        f(&mut self.shards[idx].lock().unwrap());
+    }
+
+    /// Driver-side read: folds all shards into a fresh zero (leaving the
+    /// shards intact so this can be called repeatedly).
+    pub fn value_with(&self, mut fold: impl FnMut(&mut V, &V)) -> V {
+        let mut acc = (self.zero)();
+        for s in self.shards.iter() {
+            fold(&mut acc, &s.lock().unwrap());
+        }
+        acc
+    }
+
+    /// Driver-side read that consumes shard contents (resets to zero).
+    /// Cheaper than `value_with` for large values; use once per job.
+    pub fn drain(&self) -> V {
+        let mut acc = (self.zero)();
+        for s in self.shards.iter() {
+            let mut guard = s.lock().unwrap();
+            let v = std::mem::replace(&mut *guard, (self.zero)());
+            acc.merge(v);
+        }
+        acc
+    }
+}
+
+impl<V: AccumValue + Clone> Accumulator<V> {
+    /// Driver-side read for cloneable values.
+    pub fn value(&self) -> V {
+        self.value_with(|acc, shard| acc.merge(shard.clone()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ThreadPool;
+
+    #[test]
+    fn counts_across_threads() {
+        let acc: Accumulator<u64> = Accumulator::new(8, || 0);
+        let pool = ThreadPool::new(4);
+        let jobs: Vec<_> = (0..100)
+            .map(|_| {
+                let acc = acc.clone();
+                move || acc.add(1)
+            })
+            .collect();
+        pool.run_all(jobs);
+        assert_eq!(acc.value(), 100);
+    }
+
+    #[test]
+    fn vec_accumulator_collects_everything() {
+        let acc: Accumulator<Vec<u32>> = Accumulator::new(4, Vec::new);
+        let pool = ThreadPool::new(4);
+        let jobs: Vec<_> = (0..50u32)
+            .map(|i| {
+                let acc = acc.clone();
+                move || acc.add(vec![i])
+            })
+            .collect();
+        pool.run_all(jobs);
+        let mut v = acc.drain();
+        v.sort_unstable();
+        assert_eq!(v, (0..50).collect::<Vec<_>>());
+        // drained: now empty
+        assert!(acc.drain().is_empty());
+    }
+
+    #[test]
+    fn update_in_place_accumulates() {
+        let acc: Accumulator<Vec<u64>> = Accumulator::new(2, || vec![0; 4]);
+        acc.update_in_place(|v| v[2] += 5);
+        acc.update_in_place(|v| v[2] += 7);
+        let total = acc.value_with(|a, s| {
+            for (x, y) in a.iter_mut().zip(s) {
+                *x += *y;
+            }
+        });
+        assert_eq!(total[2], 12);
+    }
+
+    #[test]
+    fn value_is_repeatable() {
+        let acc: Accumulator<u64> = Accumulator::new(4, || 0);
+        acc.add(3);
+        assert_eq!(acc.value(), 3);
+        assert_eq!(acc.value(), 3);
+    }
+}

@@ -1,0 +1,135 @@
+//! Partition cache — `rdd.cache()` / MEMORY_ONLY storage.
+//!
+//! Stores computed partitions keyed by (rdd id, partition index) as
+//! type-erased vectors. Eviction is exposed so the lineage-recovery
+//! tests can simulate executor loss: evict a cached partition and the
+//! next job recomputes it from lineage transparently.
+
+use std::any::Any;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+type Stored = Arc<dyn Any + Send + Sync>;
+
+#[derive(Default)]
+pub struct CacheManager {
+    /// Rdd ids with caching enabled.
+    enabled: Mutex<HashSet<usize>>,
+    entries: Mutex<HashMap<(usize, usize), Stored>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CacheManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn enable(&self, rdd_id: usize) {
+        self.enabled.lock().unwrap().insert(rdd_id);
+    }
+
+    pub fn is_enabled(&self, rdd_id: usize) -> bool {
+        self.enabled.lock().unwrap().contains(&rdd_id)
+    }
+
+    /// Fetch a cached partition, if present.
+    pub fn get<T: Clone + Send + Sync + 'static>(
+        &self,
+        rdd_id: usize,
+        part: usize,
+    ) -> Option<Vec<T>> {
+        let entries = self.entries.lock().unwrap();
+        match entries.get(&(rdd_id, part)) {
+            Some(stored) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                stored.downcast_ref::<Vec<T>>().cloned()
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    pub fn put<T: Clone + Send + Sync + 'static>(
+        &self,
+        rdd_id: usize,
+        part: usize,
+        data: Vec<T>,
+    ) {
+        self.entries
+            .lock()
+            .unwrap()
+            .insert((rdd_id, part), Arc::new(data));
+    }
+
+    /// Evict one partition (simulated executor loss).
+    pub fn evict(&self, rdd_id: usize, part: usize) -> bool {
+        self.entries.lock().unwrap().remove(&(rdd_id, part)).is_some()
+    }
+
+    /// Evict all partitions of an rdd (`unpersist`).
+    pub fn evict_rdd(&self, rdd_id: usize) {
+        self.entries
+            .lock()
+            .unwrap()
+            .retain(|(id, _), _| *id != rdd_id);
+        self.enabled.lock().unwrap().remove(&rdd_id);
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn cached_partitions(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_evict() {
+        let c = CacheManager::new();
+        c.enable(1);
+        assert!(c.is_enabled(1));
+        assert!(!c.is_enabled(2));
+        assert_eq!(c.get::<u32>(1, 0), None);
+        c.put(1, 0, vec![1u32, 2, 3]);
+        assert_eq!(c.get::<u32>(1, 0), Some(vec![1, 2, 3]));
+        assert!(c.evict(1, 0));
+        assert!(!c.evict(1, 0));
+        assert_eq!(c.get::<u32>(1, 0), None);
+    }
+
+    #[test]
+    fn unpersist_clears_all_partitions() {
+        let c = CacheManager::new();
+        c.enable(7);
+        c.put(7, 0, vec![1u8]);
+        c.put(7, 1, vec![2u8]);
+        c.put(8, 0, vec![3u8]);
+        c.evict_rdd(7);
+        assert!(!c.is_enabled(7));
+        assert_eq!(c.get::<u8>(7, 0), None);
+        assert_eq!(c.get::<u8>(8, 0), Some(vec![3u8]));
+    }
+
+    #[test]
+    fn hit_miss_counters() {
+        let c = CacheManager::new();
+        c.put(1, 0, vec![0u8]);
+        let _ = c.get::<u8>(1, 0);
+        let _ = c.get::<u8>(1, 1);
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+    }
+}

@@ -1,0 +1,98 @@
+//! Engine configuration — the `SparkConf` analog.
+
+/// Configuration for a [`super::SparkletContext`].
+#[derive(Debug, Clone)]
+pub struct SparkletConf {
+    /// Application name (metrics / logs).
+    pub app_name: String,
+    /// Worker threads in the executor pool — `spark.executor.cores`.
+    /// Also the default parallelism for `parallelize` and shuffles.
+    pub executor_cores: usize,
+    /// Default number of shuffle partitions (when a partitioner is not
+    /// given explicitly). `spark.sql.shuffle.partitions` analog.
+    pub shuffle_partitions: usize,
+    /// Max attempts per task before the job fails (`spark.task.maxFailures`).
+    pub max_task_failures: usize,
+    /// Fault injection: probability a task panics on its first attempt.
+    /// 0.0 disables. Deterministic per (stage, partition) given the seed.
+    pub task_failure_rate: f64,
+    /// Seed for failure injection.
+    pub failure_seed: u64,
+    /// Capture per-stage metrics (cheap; on by default).
+    pub collect_metrics: bool,
+}
+
+impl Default for SparkletConf {
+    fn default() -> Self {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        Self {
+            app_name: "sparklet-app".into(),
+            executor_cores: cores,
+            shuffle_partitions: cores,
+            max_task_failures: 4,
+            task_failure_rate: 0.0,
+            failure_seed: 0,
+            collect_metrics: true,
+        }
+    }
+}
+
+impl SparkletConf {
+    pub fn new(app_name: &str) -> Self {
+        Self {
+            app_name: app_name.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn with_cores(mut self, cores: usize) -> Self {
+        assert!(cores > 0);
+        self.executor_cores = cores;
+        self.shuffle_partitions = cores;
+        self
+    }
+
+    pub fn with_shuffle_partitions(mut self, n: usize) -> Self {
+        self.shuffle_partitions = n;
+        self
+    }
+
+    pub fn with_failure_injection(mut self, rate: f64, seed: u64) -> Self {
+        self.task_failure_rate = rate;
+        self.failure_seed = seed;
+        self
+    }
+
+    pub fn with_max_task_failures(mut self, n: usize) -> Self {
+        self.max_task_failures = n.max(1);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = SparkletConf::default();
+        assert!(c.executor_cores >= 1);
+        assert_eq!(c.task_failure_rate, 0.0);
+        assert!(c.max_task_failures >= 1);
+    }
+
+    #[test]
+    fn builders_chain() {
+        let c = SparkletConf::new("t")
+            .with_cores(3)
+            .with_shuffle_partitions(7)
+            .with_failure_injection(0.5, 9)
+            .with_max_task_failures(2);
+        assert_eq!(c.executor_cores, 3);
+        assert_eq!(c.shuffle_partitions, 7);
+        assert_eq!(c.task_failure_rate, 0.5);
+        assert_eq!(c.max_task_failures, 2);
+    }
+}

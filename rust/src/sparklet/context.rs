@@ -1,0 +1,192 @@
+//! The driver-side entry point — `SparkContext` analog.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::accumulator::{AccumValue, Accumulator};
+use super::broadcast::{Broadcast, BroadcastRegistry};
+use super::cache::CacheManager;
+use super::conf::SparkletConf;
+use super::metrics::MetricsRegistry;
+use super::rdd::{Data, Rdd};
+use super::shuffle::ShuffleManager;
+use super::transforms::ParallelCollection;
+use crate::util::ThreadPool;
+
+struct ContextInner {
+    conf: SparkletConf,
+    pool: ThreadPool,
+    shuffle: ShuffleManager,
+    cache: CacheManager,
+    broadcasts: BroadcastRegistry,
+    metrics: MetricsRegistry,
+    next_rdd_id: AtomicUsize,
+}
+
+/// Cheap-to-clone handle on the engine. Dropping the last handle joins
+/// the executor pool.
+#[derive(Clone)]
+pub struct SparkletContext {
+    inner: Arc<ContextInner>,
+}
+
+impl SparkletContext {
+    pub fn new(conf: SparkletConf) -> Self {
+        let pool = ThreadPool::new(conf.executor_cores);
+        Self {
+            inner: Arc::new(ContextInner {
+                pool,
+                shuffle: ShuffleManager::new(),
+                cache: CacheManager::new(),
+                broadcasts: BroadcastRegistry::default(),
+                metrics: MetricsRegistry::new(),
+                next_rdd_id: AtomicUsize::new(0),
+                conf,
+            }),
+        }
+    }
+
+    /// Context with default configuration (all cores).
+    pub fn default_local() -> Self {
+        Self::new(SparkletConf::default())
+    }
+
+    /// Local context with `cores` executor threads.
+    pub fn local(cores: usize) -> Self {
+        Self::new(SparkletConf::default().with_cores(cores))
+    }
+
+    pub fn conf(&self) -> &SparkletConf {
+        &self.inner.conf
+    }
+
+    /// `sc.defaultParallelism()` — number of executor cores.
+    pub fn default_parallelism(&self) -> usize {
+        self.inner.conf.executor_cores
+    }
+
+    pub(crate) fn pool(&self) -> &ThreadPool {
+        &self.inner.pool
+    }
+
+    pub fn shuffle_manager(&self) -> &ShuffleManager {
+        &self.inner.shuffle
+    }
+
+    pub fn cache(&self) -> &CacheManager {
+        &self.inner.cache
+    }
+
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.inner.metrics
+    }
+
+    pub(crate) fn new_rdd_id(&self) -> usize {
+        self.inner.next_rdd_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    // ------------------------------------------------------------- sources
+
+    /// Distribute a collection across `num_partitions` partitions.
+    pub fn parallelize<T: Data>(&self, data: Vec<T>, num_partitions: usize) -> Rdd<T> {
+        Rdd::from_base(Arc::new(ParallelCollection::new(
+            self.clone(),
+            data,
+            num_partitions,
+        )))
+    }
+
+    /// Distribute with default parallelism.
+    pub fn parallelize_default<T: Data>(&self, data: Vec<T>) -> Rdd<T> {
+        self.parallelize(data, self.default_parallelism())
+    }
+
+    /// Read a text file as an RDD of lines split into `min_partitions`
+    /// partitions (the paper's `sc.textFile("db", 1)`).
+    pub fn text_file(&self, path: &str, min_partitions: usize) -> std::io::Result<Rdd<String>> {
+        let content = std::fs::read_to_string(path)?;
+        let lines: Vec<String> = content.lines().map(|s| s.to_string()).collect();
+        Ok(self.parallelize(lines, min_partitions.max(1)))
+    }
+
+    // ------------------------------------------------------ shared variables
+
+    /// Create a broadcast variable.
+    pub fn broadcast<T>(&self, value: T) -> Broadcast<T> {
+        self.inner.broadcasts.create(value)
+    }
+
+    /// Create an accumulator sharded across the executor cores.
+    pub fn accumulator<V: AccumValue>(
+        &self,
+        zero: impl Fn() -> V + Send + Sync + 'static,
+    ) -> Accumulator<V> {
+        Accumulator::new(self.inner.conf.executor_cores, zero)
+    }
+
+    // ------------------------------------------------------------------ jobs
+
+    /// Run an action: apply `func` to every partition of `rdd`, returning
+    /// per-partition results in partition order.
+    pub fn run_job<T: Data, U: Send + 'static>(
+        &self,
+        rdd: &Rdd<T>,
+        func: impl Fn(usize, Vec<T>) -> U + Send + Sync + 'static,
+    ) -> Vec<U> {
+        super::scheduler::run_job(self, rdd, func)
+    }
+
+    /// Free shuffle buckets and cached partitions (between experiments).
+    pub fn reset_state(&self) {
+        self.inner.shuffle.clear_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallelize_preserves_order_and_count() {
+        let sc = SparkletContext::local(4);
+        let data: Vec<u32> = (0..1000).collect();
+        let rdd = sc.parallelize(data.clone(), 7);
+        assert_eq!(rdd.num_partitions(), 7);
+        assert_eq!(rdd.collect(), data);
+        assert_eq!(rdd.count(), 1000);
+    }
+
+    #[test]
+    fn parallelize_more_partitions_than_elements() {
+        let sc = SparkletContext::local(2);
+        let rdd = sc.parallelize(vec![1, 2, 3], 10);
+        assert_eq!(rdd.num_partitions(), 10);
+        assert_eq!(rdd.count(), 3);
+    }
+
+    #[test]
+    fn default_parallelism_is_cores() {
+        let sc = SparkletContext::local(3);
+        assert_eq!(sc.default_parallelism(), 3);
+    }
+
+    #[test]
+    fn broadcast_and_accumulator() {
+        let sc = SparkletContext::local(2);
+        let b = sc.broadcast(vec![1u32, 2, 3]);
+        let acc = sc.accumulator(|| 0u64);
+        let rdd = sc.parallelize((0..100u32).collect(), 4);
+        let acc2 = acc.clone();
+        let b2 = b.clone();
+        let total: usize = rdd
+            .map(move |x| {
+                acc2.add(1);
+                x as usize + b2.value().len()
+            })
+            .collect()
+            .iter()
+            .sum();
+        assert_eq!(total, (0..100).sum::<usize>() + 300);
+        assert_eq!(acc.value(), 100);
+    }
+}

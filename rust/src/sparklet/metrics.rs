@@ -1,0 +1,175 @@
+//! Per-stage execution metrics (timings, task counts, retries).
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// What kind of stage produced the metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    ShuffleMap,
+    Result,
+}
+
+#[derive(Debug, Clone)]
+pub struct StageMetrics {
+    pub kind: StageKind,
+    pub rdd_id: usize,
+    pub num_tasks: usize,
+    pub wall: Duration,
+    pub task_millis: Vec<f64>,
+    pub retries: usize,
+}
+
+impl StageMetrics {
+    pub fn max_task_ms(&self) -> f64 {
+        self.task_millis.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn total_task_ms(&self) -> f64 {
+        self.task_millis.iter().sum()
+    }
+}
+
+/// Registry of all stages run by a context.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    stages: Mutex<Vec<StageMetrics>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, m: StageMetrics) {
+        self.stages.lock().unwrap().push(m);
+    }
+
+    pub fn stages(&self) -> Vec<StageMetrics> {
+        self.stages.lock().unwrap().clone()
+    }
+
+    pub fn total_retries(&self) -> usize {
+        self.stages.lock().unwrap().iter().map(|s| s.retries).sum()
+    }
+
+    pub fn total_wall(&self) -> Duration {
+        self.stages.lock().unwrap().iter().map(|s| s.wall).sum()
+    }
+
+    /// Scheduler overhead estimate: wall time minus the critical path
+    /// (max task per stage) as a fraction of wall. Used by the perf pass.
+    pub fn overhead_fraction(&self) -> f64 {
+        let stages = self.stages.lock().unwrap();
+        let wall: f64 = stages.iter().map(|s| s.wall.as_secs_f64() * 1e3).sum();
+        let critical: f64 = stages.iter().map(|s| s.max_task_ms()).sum();
+        if wall <= 0.0 {
+            0.0
+        } else {
+            ((wall - critical) / wall).max(0.0)
+        }
+    }
+
+    pub fn clear(&self) {
+        self.stages.lock().unwrap().clear();
+    }
+
+    /// Modeled wall-clock for a `cores`-wide executor, from the recorded
+    /// per-task durations: per stage, the LPT (longest-processing-time)
+    /// makespan of its tasks over `cores` machines; stages execute
+    /// sequentially (Spark's barrier). Used on single-CPU hosts where a
+    /// real thread sweep can't show parallel speedup — see DESIGN.md §3.
+    pub fn modeled_makespan_ms(&self, cores: usize) -> f64 {
+        let cores = cores.max(1);
+        let stages = self.stages.lock().unwrap();
+        stages
+            .iter()
+            .map(|s| lpt_makespan(&s.task_millis, cores))
+            .sum()
+    }
+}
+
+/// LPT list-scheduling makespan: sort tasks descending, place each on the
+/// least-loaded machine.
+pub fn lpt_makespan(tasks: &[f64], machines: usize) -> f64 {
+    let mut sorted = tasks.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut load = vec![0.0f64; machines.max(1)];
+    for t in sorted {
+        let idx = load
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        load[idx] += t;
+    }
+    load.iter().copied().fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stage(kind: StageKind, wall_ms: u64, tasks: Vec<f64>, retries: usize) -> StageMetrics {
+        StageMetrics {
+            kind,
+            rdd_id: 0,
+            num_tasks: tasks.len(),
+            wall: Duration::from_millis(wall_ms),
+            task_millis: tasks,
+            retries,
+        }
+    }
+
+    #[test]
+    fn records_and_aggregates() {
+        let r = MetricsRegistry::new();
+        r.record(stage(StageKind::ShuffleMap, 10, vec![4.0, 8.0], 1));
+        r.record(stage(StageKind::Result, 20, vec![15.0], 0));
+        assert_eq!(r.stages().len(), 2);
+        assert_eq!(r.total_retries(), 1);
+        assert_eq!(r.total_wall(), Duration::from_millis(30));
+    }
+
+    #[test]
+    fn overhead_fraction_bounds() {
+        let r = MetricsRegistry::new();
+        assert_eq!(r.overhead_fraction(), 0.0);
+        r.record(stage(StageKind::Result, 100, vec![90.0], 0));
+        let f = r.overhead_fraction();
+        assert!(f > 0.0 && f < 0.2, "overhead {f}");
+    }
+
+    #[test]
+    fn clear_resets() {
+        let r = MetricsRegistry::new();
+        r.record(stage(StageKind::Result, 5, vec![5.0], 0));
+        r.clear();
+        assert!(r.stages().is_empty());
+    }
+
+    #[test]
+    fn lpt_makespan_basics() {
+        // 4 equal tasks on 2 machines: 2 each
+        assert_eq!(lpt_makespan(&[1.0, 1.0, 1.0, 1.0], 2), 2.0);
+        // single machine: sum
+        assert_eq!(lpt_makespan(&[3.0, 2.0, 1.0], 1), 6.0);
+        // dominated by the largest task
+        assert_eq!(lpt_makespan(&[10.0, 1.0, 1.0], 4), 10.0);
+        // empty
+        assert_eq!(lpt_makespan(&[], 3), 0.0);
+    }
+
+    #[test]
+    fn modeled_makespan_decreases_with_cores() {
+        let r = MetricsRegistry::new();
+        r.record(stage(StageKind::Result, 0, vec![5.0; 16], 0));
+        let m1 = r.modeled_makespan_ms(1);
+        let m4 = r.modeled_makespan_ms(4);
+        let m16 = r.modeled_makespan_ms(16);
+        assert!(m1 > m4 && m4 > m16);
+        assert_eq!(m1, 80.0);
+        assert_eq!(m16, 5.0);
+    }
+}

@@ -1,0 +1,41 @@
+//! # Sparklet — a from-scratch Spark-RDD-like dataflow engine
+//!
+//! The substrate the RDD-Eclat paper assumes: resilient distributed
+//! datasets with lazy transformations, wide/narrow dependencies, a DAG
+//! scheduler that splits stages at shuffle boundaries, a hash shuffle,
+//! broadcast variables, accumulators, partition caching, and lineage
+//! based recomputation. "Executor cores" are worker threads of a fixed
+//! pool, so the paper's Fig. 5 core-scaling sweep maps directly onto
+//! `SparkletConf::executor_cores`.
+//!
+//! Design notes
+//! * RDDs are typed (`Rdd<T>`); the scheduler sees the DAG through the
+//!   object-safe [`DepNode`] view, and each shuffle boundary carries a
+//!   type-erased map-task runner so stages stay monomorphic inside.
+//! * Partition `compute` materializes a `Vec<T>` (not a lazy iterator):
+//!   simpler lifetimes, identical semantics, and the FIM workloads hold
+//!   partitions in memory anyway (Spark would too, with `cache()`).
+//! * Failure injection (`SparkletConf::task_failure_rate`) makes tasks
+//!   panic on their first attempt with a seeded coin; the scheduler
+//!   retries from lineage, which is exactly Spark's recovery story.
+
+pub mod accumulator;
+pub mod broadcast;
+pub mod cache;
+pub mod conf;
+pub mod context;
+pub mod metrics;
+pub mod pair;
+pub mod partitioner;
+pub mod rdd;
+pub mod scheduler;
+pub mod shuffle;
+pub mod transforms;
+
+pub use accumulator::Accumulator;
+pub use broadcast::Broadcast;
+pub use conf::SparkletConf;
+pub use context::SparkletContext;
+pub use pair::PairRdd;
+pub use partitioner::{HashPartitioner, Partitioner, RangePartitioner};
+pub use rdd::{Data, Rdd, TaskContext};

@@ -1,0 +1,534 @@
+//! Pair-RDD operations and the shuffle boundary machinery.
+//!
+//! A wide dependency is a [`ShuffleDependency`]: it owns the parent RDD,
+//! the partitioner, and (optionally) a map-side combine aggregator. The
+//! scheduler only sees the object-safe [`ShuffleDepObj`] — `run_map_task`
+//! is type-erased, so the DAG walk never needs the key/value types.
+
+use std::hash::Hash;
+use std::sync::Arc;
+
+use super::context::SparkletContext;
+use super::partitioner::{FnPartitioner, HashPartitioner, Partitioner, RangePartitioner};
+use super::rdd::{materialize, Data, Dep, DepNode, Rdd, RddBase, TaskContext};
+use crate::util::hash::FxHashMap;
+
+/// Object-safe view of a shuffle dependency for the scheduler.
+pub trait ShuffleDepObj: Send + Sync {
+    fn shuffle_id(&self) -> usize;
+    fn num_map_partitions(&self) -> usize;
+    fn num_reduce_partitions(&self) -> usize;
+    fn parent_node(&self) -> Arc<dyn DepNode>;
+    /// Execute one map task: compute the parent partition, bucket it by
+    /// the partitioner (with optional map-side combine), and register the
+    /// buckets with the shuffle manager. All buckets are written at the
+    /// end so a retried task never half-writes.
+    fn run_map_task(&self, map_part: usize, ctx: &TaskContext);
+}
+
+/// Map-side / reduce-side combine functions (Spark's `Aggregator`).
+pub struct Aggregator<K, V, C> {
+    pub create: Arc<dyn Fn(V) -> C + Send + Sync>,
+    pub merge_value: Arc<dyn Fn(&mut C, V) + Send + Sync>,
+    pub merge_combiners: Arc<dyn Fn(&mut C, C) + Send + Sync>,
+    _k: std::marker::PhantomData<fn() -> K>,
+}
+
+impl<K, V, C> Aggregator<K, V, C> {
+    pub fn new(
+        create: impl Fn(V) -> C + Send + Sync + 'static,
+        merge_value: impl Fn(&mut C, V) + Send + Sync + 'static,
+        merge_combiners: impl Fn(&mut C, C) + Send + Sync + 'static,
+    ) -> Self {
+        Self {
+            create: Arc::new(create),
+            merge_value: Arc::new(merge_value),
+            merge_combiners: Arc::new(merge_combiners),
+            _k: std::marker::PhantomData,
+        }
+    }
+}
+
+impl<K, V, C> Clone for Aggregator<K, V, C> {
+    fn clone(&self) -> Self {
+        Self {
+            create: Arc::clone(&self.create),
+            merge_value: Arc::clone(&self.merge_value),
+            merge_combiners: Arc::clone(&self.merge_combiners),
+            _k: std::marker::PhantomData,
+        }
+    }
+}
+
+/// A wide dependency: parent pair-RDD → partitioned buckets.
+pub struct ShuffleDependency<K: Data + Hash + Eq, V: Data, C: Data> {
+    shuffle_id: usize,
+    parent: Arc<dyn RddBase<(K, V)>>,
+    partitioner: Arc<dyn Partitioner<K>>,
+    aggregator: Option<Aggregator<K, V, C>>,
+    map_side_combine: bool,
+}
+
+impl<K: Data + Hash + Eq, V: Data, C: Data> ShuffleDependency<K, V, C> {
+    pub fn new(
+        ctx: &SparkletContext,
+        parent: Arc<dyn RddBase<(K, V)>>,
+        partitioner: Arc<dyn Partitioner<K>>,
+        aggregator: Option<Aggregator<K, V, C>>,
+        map_side_combine: bool,
+    ) -> Self {
+        assert!(
+            !map_side_combine || aggregator.is_some(),
+            "map-side combine requires an aggregator"
+        );
+        Self {
+            shuffle_id: ctx.shuffle_manager().new_shuffle_id(),
+            parent,
+            partitioner,
+            aggregator,
+            map_side_combine,
+        }
+    }
+}
+
+impl<K: Data + Hash + Eq, V: Data, C: Data> ShuffleDepObj for ShuffleDependency<K, V, C> {
+    fn shuffle_id(&self) -> usize {
+        self.shuffle_id
+    }
+
+    fn num_map_partitions(&self) -> usize {
+        self.parent.num_partitions()
+    }
+
+    fn num_reduce_partitions(&self) -> usize {
+        self.partitioner.num_partitions()
+    }
+
+    fn parent_node(&self) -> Arc<dyn DepNode> {
+        Arc::clone(&self.parent) as Arc<dyn DepNode>
+    }
+
+    fn run_map_task(&self, map_part: usize, ctx: &TaskContext) {
+        let records = materialize(&self.parent, map_part, ctx);
+        let nr = self.num_reduce_partitions();
+        let mgr = ctx.context().shuffle_manager();
+        if self.map_side_combine {
+            let agg = self.aggregator.as_ref().unwrap();
+            // Combine locally, then bucket combiners.
+            let mut combined: FxHashMap<K, C> = FxHashMap::default();
+            for (k, v) in records {
+                match combined.get_mut(&k) {
+                    Some(c) => (agg.merge_value)(c, v),
+                    None => {
+                        combined.insert(k, (agg.create)(v));
+                    }
+                }
+            }
+            let mut buckets: Vec<Vec<(K, C)>> = (0..nr).map(|_| Vec::new()).collect();
+            for (k, c) in combined {
+                let p = self.partitioner.partition(&k);
+                buckets[p].push((k, c));
+            }
+            for (p, bucket) in buckets.into_iter().enumerate() {
+                let n = bucket.len();
+                mgr.write_bucket(self.shuffle_id, p, Arc::new(bucket), n);
+            }
+        } else {
+            let mut buckets: Vec<Vec<(K, V)>> = (0..nr).map(|_| Vec::new()).collect();
+            for (k, v) in records {
+                let p = self.partitioner.partition(&k);
+                buckets[p].push((k, v));
+            }
+            for (p, bucket) in buckets.into_iter().enumerate() {
+                let n = bucket.len();
+                mgr.write_bucket(self.shuffle_id, p, Arc::new(bucket), n);
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- ShuffledRdd
+
+/// Post-shuffle RDD with combine semantics: output is `(K, C)`.
+pub struct ShuffledRdd<K: Data + Hash + Eq, V: Data, C: Data> {
+    id: usize,
+    ctx: SparkletContext,
+    dep: Arc<ShuffleDependency<K, V, C>>,
+}
+
+impl<K: Data + Hash + Eq, V: Data, C: Data> DepNode for ShuffledRdd<K, V, C> {
+    fn node_id(&self) -> usize {
+        self.id
+    }
+    fn node_deps(&self) -> Vec<Dep> {
+        vec![Dep::Shuffle(
+            Arc::clone(&self.dep) as Arc<dyn ShuffleDepObj>
+        )]
+    }
+    fn node_label(&self) -> &'static str {
+        "shuffled"
+    }
+}
+
+impl<K: Data + Hash + Eq, V: Data, C: Data> RddBase<(K, C)> for ShuffledRdd<K, V, C> {
+    fn id(&self) -> usize {
+        self.id
+    }
+    fn context(&self) -> SparkletContext {
+        self.ctx.clone()
+    }
+    fn num_partitions(&self) -> usize {
+        self.dep.num_reduce_partitions()
+    }
+    fn compute(&self, part: usize, ctx: &TaskContext) -> Vec<(K, C)> {
+        let mgr = ctx.context().shuffle_manager();
+        let buckets = mgr.fetch(self.dep.shuffle_id, part);
+        let agg = self.dep.aggregator.as_ref().expect("shuffled rdd aggregator");
+        let mut merged: FxHashMap<K, C> = FxHashMap::default();
+        if self.dep.map_side_combine {
+            for b in buckets {
+                let bucket = b
+                    .downcast_ref::<Vec<(K, C)>>()
+                    .expect("combiner bucket type");
+                for (k, c) in bucket.iter().cloned() {
+                    match merged.get_mut(&k) {
+                        Some(acc) => (agg.merge_combiners)(acc, c),
+                        None => {
+                            merged.insert(k, c);
+                        }
+                    }
+                }
+            }
+        } else {
+            for b in buckets {
+                let bucket = b.downcast_ref::<Vec<(K, V)>>().expect("value bucket type");
+                for (k, v) in bucket.iter().cloned() {
+                    match merged.get_mut(&k) {
+                        Some(acc) => (agg.merge_value)(acc, v),
+                        None => {
+                            merged.insert(k, (agg.create)(v));
+                        }
+                    }
+                }
+            }
+        }
+        merged.into_iter().collect()
+    }
+}
+
+// ----------------------------------------------------------- PartitionedRdd
+
+/// Post-shuffle RDD *without* aggregation: `partitionBy` — records land on
+/// the partition their key hashes to, values untouched.
+pub struct PartitionedRdd<K: Data + Hash + Eq, V: Data> {
+    id: usize,
+    ctx: SparkletContext,
+    dep: Arc<ShuffleDependency<K, V, V>>,
+}
+
+impl<K: Data + Hash + Eq, V: Data> DepNode for PartitionedRdd<K, V> {
+    fn node_id(&self) -> usize {
+        self.id
+    }
+    fn node_deps(&self) -> Vec<Dep> {
+        vec![Dep::Shuffle(
+            Arc::clone(&self.dep) as Arc<dyn ShuffleDepObj>
+        )]
+    }
+    fn node_label(&self) -> &'static str {
+        "partitionBy"
+    }
+}
+
+impl<K: Data + Hash + Eq, V: Data> RddBase<(K, V)> for PartitionedRdd<K, V> {
+    fn id(&self) -> usize {
+        self.id
+    }
+    fn context(&self) -> SparkletContext {
+        self.ctx.clone()
+    }
+    fn num_partitions(&self) -> usize {
+        self.dep.num_reduce_partitions()
+    }
+    fn compute(&self, part: usize, ctx: &TaskContext) -> Vec<(K, V)> {
+        let mgr = ctx.context().shuffle_manager();
+        let mut out = Vec::new();
+        for b in mgr.fetch(self.dep.shuffle_id, part) {
+            let bucket = b.downcast_ref::<Vec<(K, V)>>().expect("bucket type");
+            out.extend(bucket.iter().cloned());
+        }
+        out
+    }
+}
+
+// ------------------------------------------------------------ PairRdd trait
+
+/// Key-value operations on `Rdd<(K, V)>` — the `JavaPairRDD` surface the
+/// paper's pseudo-code uses.
+pub trait PairRdd<K: Data + Hash + Eq, V: Data> {
+    fn combine_by_key<C: Data>(
+        &self,
+        aggregator: Aggregator<K, V, C>,
+        partitioner: Arc<dyn Partitioner<K>>,
+        map_side_combine: bool,
+    ) -> Rdd<(K, C)>;
+
+    fn reduce_by_key(&self, f: impl Fn(V, V) -> V + Send + Sync + 'static) -> Rdd<(K, V)>;
+
+    fn reduce_by_key_with_partitions(
+        &self,
+        f: impl Fn(V, V) -> V + Send + Sync + 'static,
+        num_partitions: usize,
+    ) -> Rdd<(K, V)>;
+
+    fn group_by_key(&self) -> Rdd<(K, Vec<V>)>;
+
+    fn group_by_key_with_partitions(&self, num_partitions: usize) -> Rdd<(K, Vec<V>)>;
+
+    fn partition_by(&self, partitioner: Arc<dyn Partitioner<K>>) -> Rdd<(K, V)>;
+
+    fn map_values<W: Data>(&self, f: impl Fn(V) -> W + Send + Sync + 'static) -> Rdd<(K, W)>;
+
+    fn keys(&self) -> Rdd<K>;
+
+    fn values(&self) -> Rdd<V>;
+
+    fn count_by_key(&self) -> std::collections::HashMap<K, usize>;
+
+    fn collect_as_map(&self) -> std::collections::HashMap<K, V>;
+
+    fn sort_by_key(&self) -> Rdd<(K, V)>
+    where
+        K: Ord;
+
+    fn join<W: Data>(&self, other: &Rdd<(K, W)>) -> Rdd<(K, (V, W))>;
+
+    /// Spark's `aggregateByKey`: zero value + per-value merge + combiner
+    /// merge (map-side combined).
+    fn aggregate_by_key<C: Data>(
+        &self,
+        zero: C,
+        seq_op: impl Fn(&mut C, V) + Send + Sync + 'static,
+        comb_op: impl Fn(&mut C, C) + Send + Sync + 'static,
+    ) -> Rdd<(K, C)>;
+
+    /// Spark's `foldByKey`: `aggregate_by_key` with C = V.
+    fn fold_by_key(
+        &self,
+        zero: V,
+        f: impl Fn(V, V) -> V + Send + Sync + 'static,
+    ) -> Rdd<(K, V)>;
+
+    /// Group both RDDs by key in one pass (Spark's `cogroup`).
+    fn cogroup<W: Data>(&self, other: &Rdd<(K, W)>) -> Rdd<(K, (Vec<V>, Vec<W>))>;
+}
+
+impl<K: Data + Hash + Eq, V: Data> PairRdd<K, V> for Rdd<(K, V)> {
+    fn combine_by_key<C: Data>(
+        &self,
+        aggregator: Aggregator<K, V, C>,
+        partitioner: Arc<dyn Partitioner<K>>,
+        map_side_combine: bool,
+    ) -> Rdd<(K, C)> {
+        let ctx = self.context();
+        let dep = Arc::new(ShuffleDependency::new(
+            &ctx,
+            Arc::clone(&self.base),
+            partitioner,
+            Some(aggregator),
+            map_side_combine,
+        ));
+        Rdd::from_base(Arc::new(ShuffledRdd {
+            id: ctx.new_rdd_id(),
+            ctx,
+            dep,
+        }))
+    }
+
+    fn reduce_by_key(&self, f: impl Fn(V, V) -> V + Send + Sync + 'static) -> Rdd<(K, V)> {
+        let n = self.context().conf().shuffle_partitions;
+        self.reduce_by_key_with_partitions(f, n)
+    }
+
+    fn reduce_by_key_with_partitions(
+        &self,
+        f: impl Fn(V, V) -> V + Send + Sync + 'static,
+        num_partitions: usize,
+    ) -> Rdd<(K, V)> {
+        let f = Arc::new(f);
+        let f2 = Arc::clone(&f);
+        let agg = Aggregator::new(
+            |v: V| v,
+            move |c: &mut V, v: V| {
+                let old = c.clone();
+                *c = f(old, v);
+            },
+            move |c: &mut V, o: V| {
+                let old = c.clone();
+                *c = f2(old, o);
+            },
+        );
+        self.combine_by_key(agg, Arc::new(HashPartitioner::new(num_partitions)), true)
+    }
+
+    fn group_by_key(&self) -> Rdd<(K, Vec<V>)> {
+        let n = self.context().conf().shuffle_partitions;
+        self.group_by_key_with_partitions(n)
+    }
+
+    fn group_by_key_with_partitions(&self, num_partitions: usize) -> Rdd<(K, Vec<V>)> {
+        let agg = Aggregator::new(
+            |v: V| vec![v],
+            |c: &mut Vec<V>, v: V| c.push(v),
+            |c: &mut Vec<V>, mut o: Vec<V>| c.append(&mut o),
+        );
+        // Spark does not map-side combine groupByKey (it would buffer the
+        // same data anyway); we keep that behaviour.
+        self.combine_by_key(agg, Arc::new(HashPartitioner::new(num_partitions)), false)
+    }
+
+    fn partition_by(&self, partitioner: Arc<dyn Partitioner<K>>) -> Rdd<(K, V)> {
+        let ctx = self.context();
+        let dep = Arc::new(ShuffleDependency::<K, V, V>::new(
+            &ctx,
+            Arc::clone(&self.base),
+            partitioner,
+            None,
+            false,
+        ));
+        Rdd::from_base(Arc::new(PartitionedRdd {
+            id: ctx.new_rdd_id(),
+            ctx,
+            dep,
+        }))
+    }
+
+    fn map_values<W: Data>(&self, f: impl Fn(V) -> W + Send + Sync + 'static) -> Rdd<(K, W)> {
+        self.map(move |(k, v)| (k, f(v)))
+    }
+
+    fn keys(&self) -> Rdd<K> {
+        self.map(|(k, _)| k)
+    }
+
+    fn values(&self) -> Rdd<V> {
+        self.map(|(_, v)| v)
+    }
+
+    fn count_by_key(&self) -> std::collections::HashMap<K, usize> {
+        let mut out = std::collections::HashMap::new();
+        for (k, _) in self.collect() {
+            *out.entry(k).or_insert(0) += 1;
+        }
+        out
+    }
+
+    fn collect_as_map(&self) -> std::collections::HashMap<K, V> {
+        self.collect().into_iter().collect()
+    }
+
+    fn sort_by_key(&self) -> Rdd<(K, V)>
+    where
+        K: Ord,
+    {
+        // Sample keys, build range bounds, shuffle, sort per partition.
+        let n = self.context().conf().shuffle_partitions.max(1);
+        let sample: Vec<K> = self
+            .context()
+            .run_job(self, |_, items: Vec<(K, V)>| {
+                items
+                    .iter()
+                    .step_by((items.len() / 20).max(1))
+                    .map(|(k, _)| k.clone())
+                    .collect::<Vec<K>>()
+            })
+            .into_iter()
+            .flatten()
+            .collect();
+        let rp = Arc::new(RangePartitioner::from_sample(sample, n));
+        self.partition_by(rp)
+            .map_partitions(|_, mut items: Vec<(K, V)>| {
+                items.sort_by(|a, b| a.0.cmp(&b.0));
+                items
+            })
+    }
+
+    fn join<W: Data>(&self, other: &Rdd<(K, W)>) -> Rdd<(K, (V, W))> {
+        self.cogroup(other).flat_map(|(k, (vs, ws))| {
+            let mut out = Vec::with_capacity(vs.len() * ws.len());
+            for v in &vs {
+                for w in &ws {
+                    out.push((k.clone(), (v.clone(), w.clone())));
+                }
+            }
+            out
+        })
+    }
+
+    fn aggregate_by_key<C: Data>(
+        &self,
+        zero: C,
+        seq_op: impl Fn(&mut C, V) + Send + Sync + 'static,
+        comb_op: impl Fn(&mut C, C) + Send + Sync + 'static,
+    ) -> Rdd<(K, C)> {
+        let seq = Arc::new(seq_op);
+        let seq2 = Arc::clone(&seq);
+        let agg = Aggregator::new(
+            move |v: V| {
+                let mut c = zero.clone();
+                seq(&mut c, v);
+                c
+            },
+            move |c: &mut C, v: V| seq2(c, v),
+            comb_op,
+        );
+        let n = self.context().conf().shuffle_partitions;
+        self.combine_by_key(agg, Arc::new(HashPartitioner::new(n)), true)
+    }
+
+    fn fold_by_key(
+        &self,
+        zero: V,
+        f: impl Fn(V, V) -> V + Send + Sync + 'static,
+    ) -> Rdd<(K, V)> {
+        let f = Arc::new(f);
+        let f2 = Arc::clone(&f);
+        self.aggregate_by_key(
+            zero,
+            move |c: &mut V, v: V| {
+                let old = c.clone();
+                *c = f(old, v);
+            },
+            move |c: &mut V, o: V| {
+                let old = c.clone();
+                *c = f2(old, o);
+            },
+        )
+    }
+
+    fn cogroup<W: Data>(&self, other: &Rdd<(K, W)>) -> Rdd<(K, (Vec<V>, Vec<W>))> {
+        // Tag sides, union, group once; split per key.
+        let left = self.map_values(|v| (Some(v), None::<W>));
+        let right = other.map_values(|w| (None::<V>, Some(w)));
+        let both = left.union(&right);
+        both.group_by_key().map(|(k, pairs)| {
+            let mut vs = Vec::new();
+            let mut ws = Vec::new();
+            for (v, w) in pairs {
+                if let Some(v) = v {
+                    vs.push(v);
+                }
+                if let Some(w) = w {
+                    ws.push(w);
+                }
+            }
+            (k, (vs, ws))
+        })
+    }
+}
+
+/// Convenience: the paper's `defaultPartitioner(n)` — modulo over a dense
+/// integer key space (equivalence-class prefix ranks).
+pub fn default_partitioner(n: usize) -> Arc<FnPartitioner<usize>> {
+    Arc::new(FnPartitioner::new(n.max(1), move |k: &usize| k % n.max(1)))
+}

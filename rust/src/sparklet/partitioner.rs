@@ -1,0 +1,163 @@
+//! Partitioners — how keys map to shuffle partitions.
+//!
+//! The paper's equivalence-class placement heuristics (EclatV4/V5) are
+//! implemented as custom partitioners on top of this trait; the engine
+//! itself ships the Spark built-ins (hash, range) plus a closure adapter.
+
+use std::hash::Hash;
+use std::sync::Arc;
+
+use crate::util::hash::fx_hash;
+
+/// Maps a key to a partition id in `[0, num_partitions)`.
+pub trait Partitioner<K>: Send + Sync {
+    fn num_partitions(&self) -> usize;
+    fn partition(&self, key: &K) -> usize;
+}
+
+/// Spark's default: `hash(key) mod p`.
+#[derive(Debug, Clone)]
+pub struct HashPartitioner {
+    partitions: usize,
+}
+
+impl HashPartitioner {
+    pub fn new(partitions: usize) -> Self {
+        assert!(partitions > 0, "partitioner needs >= 1 partition");
+        Self { partitions }
+    }
+}
+
+impl<K: Hash> Partitioner<K> for HashPartitioner {
+    fn num_partitions(&self) -> usize {
+        self.partitions
+    }
+
+    fn partition(&self, key: &K) -> usize {
+        (fx_hash(key) % self.partitions as u64) as usize
+    }
+}
+
+/// Range partitioner over ordered keys (used by `sort_by_key`). Bounds
+/// are upper bounds of each partition except the last.
+pub struct RangePartitioner<K: Ord> {
+    bounds: Vec<K>,
+}
+
+impl<K: Ord + Clone> RangePartitioner<K> {
+    /// Build from a sample of keys, aiming for `partitions` near-equal
+    /// ranges.
+    pub fn from_sample(mut sample: Vec<K>, partitions: usize) -> Self {
+        assert!(partitions > 0);
+        sample.sort();
+        sample.dedup();
+        let mut bounds = Vec::new();
+        if !sample.is_empty() && partitions > 1 {
+            for i in 1..partitions {
+                let idx = i * sample.len() / partitions;
+                if idx < sample.len() {
+                    let b = sample[idx].clone();
+                    if bounds.last() != Some(&b) {
+                        bounds.push(b);
+                    }
+                }
+            }
+        }
+        Self { bounds }
+    }
+}
+
+impl<K: Ord + Send + Sync> Partitioner<K> for RangePartitioner<K> {
+    fn num_partitions(&self) -> usize {
+        self.bounds.len() + 1
+    }
+
+    fn partition(&self, key: &K) -> usize {
+        self.bounds.partition_point(|b| b <= key)
+    }
+}
+
+/// Closure-based partitioner — the adapter the FIM layer uses for the
+/// paper's `defaultPartitioner`, `hashPartitioner`, and
+/// `reverseHashPartitioner` heuristics.
+pub struct FnPartitioner<K> {
+    partitions: usize,
+    f: Arc<dyn Fn(&K) -> usize + Send + Sync>,
+}
+
+impl<K> FnPartitioner<K> {
+    pub fn new(partitions: usize, f: impl Fn(&K) -> usize + Send + Sync + 'static) -> Self {
+        assert!(partitions > 0);
+        Self {
+            partitions,
+            f: Arc::new(f),
+        }
+    }
+}
+
+impl<K: Send + Sync> Partitioner<K> for FnPartitioner<K> {
+    fn num_partitions(&self) -> usize {
+        self.partitions
+    }
+
+    fn partition(&self, key: &K) -> usize {
+        // Clamp out-of-range ids rather than assert: the paper's custom
+        // partitioners return raw ranks that the engine must keep in range.
+        (self.f)(key).min(self.partitions - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_partitioner_in_range_and_deterministic() {
+        let p = HashPartitioner::new(7);
+        for k in 0..1000u32 {
+            let a = p.partition(&k);
+            assert!(a < 7);
+            assert_eq!(a, p.partition(&k));
+        }
+    }
+
+    #[test]
+    fn hash_partitioner_spreads() {
+        let p = HashPartitioner::new(8);
+        let mut counts = [0usize; 8];
+        for k in 0..8000u32 {
+            counts[p.partition(&k)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 500), "skew: {counts:?}");
+    }
+
+    #[test]
+    fn range_partitioner_orders() {
+        let keys: Vec<u32> = (0..100).collect();
+        let rp = RangePartitioner::from_sample(keys, 4);
+        assert_eq!(Partitioner::<u32>::num_partitions(&rp), 4);
+        let mut last = 0;
+        for k in 0..100u32 {
+            let p = rp.partition(&k);
+            assert!(p >= last, "non-monotone at {k}");
+            last = p;
+        }
+        assert_eq!(rp.partition(&0), 0);
+        assert_eq!(rp.partition(&99), 3);
+    }
+
+    #[test]
+    fn range_partitioner_single_partition() {
+        let rp = RangePartitioner::from_sample(vec![5u32, 1, 9], 1);
+        assert_eq!(Partitioner::<u32>::num_partitions(&rp), 1);
+        assert_eq!(rp.partition(&123), 0);
+    }
+
+    #[test]
+    fn fn_partitioner_clamps() {
+        let p = FnPartitioner::new(3, |k: &u32| *k as usize);
+        assert_eq!(p.partition(&0), 0);
+        assert_eq!(p.partition(&2), 2);
+        assert_eq!(p.partition(&99), 2); // clamped
+    }
+}

@@ -1,0 +1,342 @@
+//! RDD core: the typed dataset handle, the object-safe DAG view the
+//! scheduler traverses, and the task-side materialization path.
+
+use std::sync::Arc;
+
+use super::context::SparkletContext;
+use super::pair::ShuffleDepObj;
+
+/// Element types storable in an RDD. Blanket-implemented.
+pub trait Data: Clone + Send + Sync + 'static {}
+impl<T: Clone + Send + Sync + 'static> Data for T {}
+
+/// Per-task execution context (partition index, attempt, engine handles).
+pub struct TaskContext {
+    pub partition: usize,
+    pub attempt: usize,
+    pub(crate) ctx: SparkletContext,
+}
+
+impl TaskContext {
+    pub(crate) fn new(partition: usize, attempt: usize, ctx: SparkletContext) -> Self {
+        Self {
+            partition,
+            attempt,
+            ctx,
+        }
+    }
+
+    pub fn context(&self) -> &SparkletContext {
+        &self.ctx
+    }
+}
+
+/// A dependency edge in the DAG.
+pub enum Dep {
+    /// Narrow: the child computes directly from the parent's partitions.
+    Narrow(Arc<dyn DepNode>),
+    /// Wide: a shuffle boundary — the scheduler must run the dependency's
+    /// map stage before any task of the child stage starts.
+    Shuffle(Arc<dyn ShuffleDepObj>),
+}
+
+/// Object-safe, type-erased view of an RDD for DAG traversal.
+pub trait DepNode: Send + Sync {
+    fn node_id(&self) -> usize;
+    fn node_deps(&self) -> Vec<Dep>;
+    /// Human-readable operator name (lineage debug output).
+    fn node_label(&self) -> &'static str {
+        "rdd"
+    }
+}
+
+/// The typed RDD implementation trait. Concrete operators (map, filter,
+/// shuffled, …) implement this plus [`DepNode`].
+pub trait RddBase<T: Data>: DepNode {
+    fn id(&self) -> usize;
+    fn context(&self) -> SparkletContext;
+    fn num_partitions(&self) -> usize;
+    /// Compute one partition. Pure w.r.t. lineage: recomputation after a
+    /// failure must yield equivalent data.
+    fn compute(&self, part: usize, ctx: &TaskContext) -> Vec<T>;
+}
+
+/// Cache-aware partition materialization: every parent read goes through
+/// here so `cache()` and lineage recomputation compose transparently.
+pub(crate) fn materialize<T: Data>(
+    rdd: &Arc<dyn RddBase<T>>,
+    part: usize,
+    ctx: &TaskContext,
+) -> Vec<T> {
+    let cache = ctx.ctx.cache();
+    if cache.is_enabled(rdd.id()) {
+        if let Some(hit) = cache.get::<T>(rdd.id(), part) {
+            return hit;
+        }
+        let data = rdd.compute(part, ctx);
+        cache.put(rdd.id(), part, data.clone());
+        data
+    } else {
+        rdd.compute(part, ctx)
+    }
+}
+
+/// The user-facing typed handle. Cheap to clone; transformations are lazy
+/// and build the DAG, actions run jobs through the scheduler.
+pub struct Rdd<T: Data> {
+    pub(crate) base: Arc<dyn RddBase<T>>,
+}
+
+impl<T: Data> Clone for Rdd<T> {
+    fn clone(&self) -> Self {
+        Self {
+            base: Arc::clone(&self.base),
+        }
+    }
+}
+
+impl<T: Data> Rdd<T> {
+    pub(crate) fn from_base(base: Arc<dyn RddBase<T>>) -> Self {
+        Self { base }
+    }
+
+    pub fn id(&self) -> usize {
+        self.base.id()
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.base.num_partitions()
+    }
+
+    pub fn context(&self) -> SparkletContext {
+        self.base.context()
+    }
+
+    pub(crate) fn as_node(&self) -> Arc<dyn DepNode> {
+        Arc::clone(&self.base) as Arc<dyn DepNode>
+    }
+
+    // ------------------------------------------------------ transformations
+
+    pub fn map<U: Data>(&self, f: impl Fn(T) -> U + Send + Sync + 'static) -> Rdd<U> {
+        super::transforms::map(self, f)
+    }
+
+    pub fn flat_map<U: Data, I: IntoIterator<Item = U>>(
+        &self,
+        f: impl Fn(T) -> I + Send + Sync + 'static,
+    ) -> Rdd<U> {
+        super::transforms::flat_map(self, f)
+    }
+
+    pub fn filter(&self, f: impl Fn(&T) -> bool + Send + Sync + 'static) -> Rdd<T> {
+        super::transforms::filter(self, f)
+    }
+
+    /// `mapPartitionsWithIndex`: transform a whole partition at once.
+    pub fn map_partitions<U: Data>(
+        &self,
+        f: impl Fn(usize, Vec<T>) -> Vec<U> + Send + Sync + 'static,
+    ) -> Rdd<U> {
+        super::transforms::map_partitions(self, f)
+    }
+
+    /// Map each element to a key-value pair (`mapToPair`).
+    pub fn map_to_pair<K: Data, V: Data>(
+        &self,
+        f: impl Fn(T) -> (K, V) + Send + Sync + 'static,
+    ) -> Rdd<(K, V)> {
+        self.map(f)
+    }
+
+    /// FlatMap each element to key-value pairs (`flatMapToPair`).
+    pub fn flat_map_to_pair<K: Data, V: Data, I: IntoIterator<Item = (K, V)>>(
+        &self,
+        f: impl Fn(T) -> I + Send + Sync + 'static,
+    ) -> Rdd<(K, V)> {
+        self.flat_map(f)
+    }
+
+    pub fn union(&self, other: &Rdd<T>) -> Rdd<T> {
+        super::transforms::union(self, other)
+    }
+
+    /// Reduce to `n` partitions without a shuffle (contiguous grouping;
+    /// preserves element order across the concatenation).
+    pub fn coalesce(&self, n: usize) -> Rdd<T> {
+        super::transforms::coalesce(self, n)
+    }
+
+    /// Redistribute into `n` partitions via a round-robin shuffle.
+    pub fn repartition(&self, n: usize) -> Rdd<T>
+    where
+        T: std::hash::Hash + Eq,
+    {
+        super::transforms::repartition(self, n)
+    }
+
+    /// Bernoulli sample with the given fraction and seed.
+    pub fn sample(&self, fraction: f64, seed: u64) -> Rdd<T> {
+        super::transforms::sample(self, fraction, seed)
+    }
+
+    /// Partition contents as single elements (`glom`), for tests/debug.
+    pub fn glom(&self) -> Rdd<Vec<T>> {
+        self.map_partitions(|_, items| vec![items])
+    }
+
+    /// Pair each element with a global index (0-based, partition-ordered).
+    pub fn zip_with_index(&self) -> Rdd<(T, u64)> {
+        let counts: Vec<u64> = self
+            .context()
+            .run_job(self, |_, items: Vec<T>| items.len() as u64);
+        let mut offsets = Vec::with_capacity(counts.len());
+        let mut acc = 0u64;
+        for c in counts {
+            offsets.push(acc);
+            acc += c;
+        }
+        self.map_partitions(move |part, items| {
+            let base = offsets[part];
+            items
+                .into_iter()
+                .enumerate()
+                .map(|(i, x)| (x, base + i as u64))
+                .collect()
+        })
+    }
+
+    /// Mark this RDD's partitions for caching on first computation.
+    pub fn cache(&self) -> Rdd<T> {
+        self.context().cache().enable(self.id());
+        self.clone()
+    }
+
+    /// Drop cached partitions.
+    pub fn unpersist(&self) {
+        self.context().cache().evict_rdd(self.id());
+    }
+
+    // ------------------------------------------------------------- actions
+
+    pub fn collect(&self) -> Vec<T> {
+        self.context()
+            .run_job(self, |_, items: Vec<T>| items)
+            .into_iter()
+            .flatten()
+            .collect()
+    }
+
+    pub fn count(&self) -> usize {
+        self.context()
+            .run_job(self, |_, items: Vec<T>| items.len())
+            .into_iter()
+            .sum()
+    }
+
+    pub fn reduce(&self, f: impl Fn(T, T) -> T + Send + Sync + 'static) -> Option<T> {
+        let f = Arc::new(f);
+        let g = Arc::clone(&f);
+        let partials: Vec<Option<T>> = self.context().run_job(self, move |_, items: Vec<T>| {
+            items.into_iter().reduce(|a, b| g(a, b))
+        });
+        partials.into_iter().flatten().reduce(|a, b| f(a, b))
+    }
+
+    pub fn fold<U: Data>(
+        &self,
+        zero: U,
+        f: impl Fn(U, T) -> U + Send + Sync + 'static,
+        combine: impl Fn(U, U) -> U,
+    ) -> U {
+        let f = Arc::new(f);
+        let z = zero.clone();
+        let partials: Vec<U> = self.context().run_job(self, move |_, items: Vec<T>| {
+            items.into_iter().fold(z.clone(), |a, b| f(a, b))
+        });
+        partials.into_iter().fold(zero, combine)
+    }
+
+    pub fn take(&self, n: usize) -> Vec<T> {
+        let mut out = self.collect();
+        out.truncate(n);
+        out
+    }
+
+    pub fn first(&self) -> Option<T> {
+        self.take(1).into_iter().next()
+    }
+
+    /// Run a side-effecting function over every partition (action).
+    pub fn foreach_partition(&self, f: impl Fn(usize, Vec<T>) + Send + Sync + 'static) {
+        let _: Vec<()> = self.context().run_job(self, move |p, items| f(p, items));
+    }
+
+    /// Count occurrences of each distinct value (`countByValue`).
+    pub fn count_by_value(&self) -> std::collections::HashMap<T, usize>
+    where
+        T: std::hash::Hash + Eq,
+    {
+        use super::pair::PairRdd;
+        self.map_to_pair(|x| (x, 1usize))
+            .reduce_by_key(|a, b| a + b)
+            .collect()
+            .into_iter()
+            .collect()
+    }
+
+    /// The `n` smallest elements in order (`takeOrdered`): per-partition
+    /// top-n, then a driver-side merge — never collects whole partitions.
+    pub fn take_ordered(&self, n: usize) -> Vec<T>
+    where
+        T: Ord,
+    {
+        let partials: Vec<Vec<T>> = self.context().run_job(self, move |_, mut items: Vec<T>| {
+            items.sort();
+            items.truncate(n);
+            items
+        });
+        let mut merged: Vec<T> = partials.into_iter().flatten().collect();
+        merged.sort();
+        merged.truncate(n);
+        merged
+    }
+
+    /// The `n` largest elements, descending (`top`).
+    pub fn top(&self, n: usize) -> Vec<T>
+    where
+        T: Ord,
+    {
+        let partials: Vec<Vec<T>> = self.context().run_job(self, move |_, mut items: Vec<T>| {
+            items.sort_by(|a, b| b.cmp(a));
+            items.truncate(n);
+            items
+        });
+        let mut merged: Vec<T> = partials.into_iter().flatten().collect();
+        merged.sort_by(|a, b| b.cmp(a));
+        merged.truncate(n);
+        merged
+    }
+}
+
+impl<T: Data + std::fmt::Display> Rdd<T> {
+    /// Write partitions as `part-NNNNN` text files under `dir`.
+    pub fn save_as_text_file(&self, dir: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let dir = dir.to_string();
+        let results: Vec<Result<(), String>> =
+            self.context().run_job(self, move |part, items: Vec<T>| {
+                let path = format!("{dir}/part-{part:05}");
+                let mut out = String::new();
+                for x in &items {
+                    out.push_str(&x.to_string());
+                    out.push('\n');
+                }
+                std::fs::write(&path, out).map_err(|e| e.to_string())
+            });
+        for r in results {
+            r.map_err(|e| std::io::Error::other(e))?;
+        }
+        Ok(())
+    }
+}

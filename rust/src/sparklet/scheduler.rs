@@ -1,0 +1,188 @@
+//! DAG scheduler: stage splitting at shuffle boundaries, task submission
+//! to the executor pool, retries from lineage, failure injection.
+//!
+//! A job is: (target RDD, per-partition result function). Execution:
+//!  1. Walk the dependency DAG; for every incomplete shuffle dependency
+//!     (post-order, so grandparents first) run its *map stage* — one task
+//!     per parent partition — then mark the shuffle complete.
+//!  2. Run the *result stage*: one task per target partition applying the
+//!     result function.
+//! Task failures (panics or injected faults) are retried up to
+//! `max_task_failures` times; because `compute` is pure over lineage,
+//! a retry recomputes exactly what was lost — Spark's recovery model.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::context::SparkletContext;
+use super::metrics::{StageKind, StageMetrics};
+use super::pair::ShuffleDepObj;
+use super::rdd::{materialize, Data, Dep, DepNode, Rdd, TaskContext};
+
+/// Deterministic fault-injection coin: should task (stage_tag, part,
+/// attempt) fail? Only first attempts fail so jobs always converge.
+fn injected_failure(ctx: &SparkletContext, stage_tag: u64, part: usize, attempt: usize) -> bool {
+    let rate = ctx.conf().task_failure_rate;
+    if rate <= 0.0 || attempt > 0 {
+        return false;
+    }
+    let mut rng = crate::util::SplitMix64::new(
+        ctx.conf()
+            .failure_seed
+            .wrapping_add(stage_tag)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(part as u64),
+    );
+    rng.gen_bool(rate)
+}
+
+/// Run a set of per-partition tasks with retry-from-lineage. `run` must be
+/// safe to re-execute for the same partition.
+fn run_stage<U: Send + 'static>(
+    ctx: &SparkletContext,
+    kind: StageKind,
+    rdd_id: usize,
+    stage_tag: u64,
+    num_tasks: usize,
+    run: Arc<dyn Fn(usize, usize) -> U + Send + Sync>,
+) -> Vec<U> {
+    let wall = Instant::now();
+    let mut results: Vec<Option<U>> = (0..num_tasks).map(|_| None).collect();
+    let mut task_millis = vec![0.0f64; num_tasks];
+    let mut pending: Vec<usize> = (0..num_tasks).collect();
+    let mut retries = 0usize;
+    let max_attempts = ctx.conf().max_task_failures;
+
+    for attempt in 0..max_attempts {
+        if pending.is_empty() {
+            break;
+        }
+        let jobs: Vec<_> = pending
+            .iter()
+            .map(|&part| {
+                let run = Arc::clone(&run);
+                let ctx2 = ctx.clone();
+                move || {
+                    if injected_failure(&ctx2, stage_tag, part, attempt) {
+                        panic!("injected task failure (stage {stage_tag}, part {part})");
+                    }
+                    let t = Instant::now();
+                    let out = run(part, attempt);
+                    (out, t.elapsed().as_secs_f64() * 1e3)
+                }
+            })
+            .collect();
+        let outcomes = ctx.pool().run_all(jobs);
+        let mut still_pending = Vec::new();
+        for (&part, outcome) in pending.iter().zip(outcomes) {
+            match outcome {
+                Ok((out, ms)) => {
+                    results[part] = Some(out);
+                    task_millis[part] = ms;
+                }
+                Err(msg) => {
+                    log::warn!("task {part} failed (attempt {attempt}): {msg}");
+                    retries += 1;
+                    still_pending.push(part);
+                }
+            }
+        }
+        pending = still_pending;
+    }
+
+    if !pending.is_empty() {
+        panic!(
+            "stage failed: partitions {pending:?} exceeded {} attempts",
+            max_attempts
+        );
+    }
+
+    if ctx.conf().collect_metrics {
+        ctx.metrics().record(StageMetrics {
+            kind,
+            rdd_id,
+            num_tasks,
+            wall: wall.elapsed(),
+            task_millis,
+            retries,
+        });
+    }
+
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+/// Recursively ensure every shuffle dependency reachable from `node` has
+/// completed its map stage (running grandparent shuffles first).
+fn ensure_shuffles(ctx: &SparkletContext, node: &Arc<dyn DepNode>, visited: &mut HashSet<usize>) {
+    if !visited.insert(node.node_id()) {
+        return;
+    }
+    for dep in node.node_deps() {
+        match dep {
+            Dep::Narrow(parent) => ensure_shuffles(ctx, &parent, visited),
+            Dep::Shuffle(sd) => {
+                let mgr = ctx.shuffle_manager();
+                if mgr.is_completed(sd.shuffle_id()) {
+                    continue;
+                }
+                // Parents of the map stage first.
+                let parent = sd.parent_node();
+                ensure_shuffles(ctx, &parent, visited);
+                run_map_stage(ctx, &sd);
+            }
+        }
+    }
+}
+
+fn run_map_stage(ctx: &SparkletContext, sd: &Arc<dyn ShuffleDepObj>) {
+    let mgr = ctx.shuffle_manager();
+    // Clear any partial output from a previous failed run of this stage.
+    mgr.clear_shuffle(sd.shuffle_id());
+    let n = sd.num_map_partitions();
+    let sd2 = Arc::clone(sd);
+    let ctx2 = ctx.clone();
+    let stage_tag = 0x5A5A_0000u64 ^ sd.shuffle_id() as u64;
+    run_stage::<()>(
+        ctx,
+        StageKind::ShuffleMap,
+        usize::MAX,
+        stage_tag,
+        n,
+        Arc::new(move |part, attempt| {
+            let tc = TaskContext::new(part, attempt, ctx2.clone());
+            sd2.run_map_task(part, &tc);
+        }),
+    );
+    mgr.mark_completed(sd.shuffle_id());
+}
+
+/// Entry point used by all actions.
+pub fn run_job<T: Data, U: Send + 'static>(
+    ctx: &SparkletContext,
+    rdd: &Rdd<T>,
+    func: impl Fn(usize, Vec<T>) -> U + Send + Sync + 'static,
+) -> Vec<U> {
+    // Stage 0..k-1: shuffle map stages in dependency order.
+    let node = rdd.as_node();
+    let mut visited = HashSet::new();
+    ensure_shuffles(ctx, &node, &mut visited);
+
+    // Result stage.
+    let base = Arc::clone(&rdd.base);
+    let ctx2 = ctx.clone();
+    let func = Arc::new(func);
+    let stage_tag = 0xA11C_0000u64 ^ rdd.id() as u64;
+    run_stage(
+        ctx,
+        StageKind::Result,
+        rdd.id(),
+        stage_tag,
+        rdd.num_partitions(),
+        Arc::new(move |part, attempt| {
+            let tc = TaskContext::new(part, attempt, ctx2.clone());
+            let data = materialize(&base, part, &tc);
+            func(part, data)
+        }),
+    )
+}

@@ -1,0 +1,145 @@
+//! In-memory hash shuffle — the wide-dependency data plane.
+//!
+//! Map tasks partition their output into `num_reduce` buckets and
+//! register each bucket here; reduce tasks fetch and concatenate the
+//! buckets for their partition. Buckets are type-erased (`Box<dyn Any>`)
+//! because the shuffle manager is shared across all shuffles of a
+//! context; the typed shuffle dependency downcasts on read.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+type Bucket = Arc<dyn Any + Send + Sync>;
+
+/// Shuffle data + completion registry for one context.
+#[derive(Default)]
+pub struct ShuffleManager {
+    /// (shuffle_id, reduce_partition) -> one bucket per completed map task.
+    buckets: Mutex<HashMap<(usize, usize), Vec<Bucket>>>,
+    /// Shuffle ids whose map stage has fully completed.
+    completed: Mutex<std::collections::HashSet<usize>>,
+    next_shuffle_id: AtomicUsize,
+    /// Total records moved through the shuffle (metrics).
+    records_written: AtomicU64,
+}
+
+impl ShuffleManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn new_shuffle_id(&self) -> usize {
+        self.next_shuffle_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Write one map task's bucket for `reduce_part`. `records` is the
+    /// bucket length, tracked for metrics.
+    pub fn write_bucket(
+        &self,
+        shuffle_id: usize,
+        reduce_part: usize,
+        bucket: Bucket,
+        records: usize,
+    ) {
+        self.records_written
+            .fetch_add(records as u64, Ordering::Relaxed);
+        self.buckets
+            .lock()
+            .unwrap()
+            .entry((shuffle_id, reduce_part))
+            .or_default()
+            .push(bucket);
+    }
+
+    /// Fetch all buckets for a reduce partition (empty if none).
+    pub fn fetch(&self, shuffle_id: usize, reduce_part: usize) -> Vec<Bucket> {
+        self.buckets
+            .lock()
+            .unwrap()
+            .get(&(shuffle_id, reduce_part))
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    /// Clear any partial buckets for a shuffle (before re-running its map
+    /// stage after a failure, so retries don't double-write).
+    pub fn clear_shuffle(&self, shuffle_id: usize) {
+        self.buckets
+            .lock()
+            .unwrap()
+            .retain(|(sid, _), _| *sid != shuffle_id);
+        self.completed.lock().unwrap().remove(&shuffle_id);
+    }
+
+    pub fn mark_completed(&self, shuffle_id: usize) {
+        self.completed.lock().unwrap().insert(shuffle_id);
+    }
+
+    pub fn is_completed(&self, shuffle_id: usize) -> bool {
+        self.completed.lock().unwrap().contains(&shuffle_id)
+    }
+
+    pub fn records_written(&self) -> u64 {
+        self.records_written.load(Ordering::Relaxed)
+    }
+
+    /// Drop all shuffle data (job teardown / memory reclamation).
+    pub fn clear_all(&self) {
+        self.buckets.lock().unwrap().clear();
+        self.completed.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_fetch_roundtrip() {
+        let m = ShuffleManager::new();
+        let sid = m.new_shuffle_id();
+        m.write_bucket(sid, 0, Arc::new(vec![(1u32, "a")]), 1);
+        m.write_bucket(sid, 0, Arc::new(vec![(2u32, "b")]), 1);
+        m.write_bucket(sid, 1, Arc::new(vec![(3u32, "c")]), 1);
+        let got = m.fetch(sid, 0);
+        assert_eq!(got.len(), 2);
+        let first = got[0]
+            .downcast_ref::<Vec<(u32, &str)>>()
+            .expect("type roundtrip");
+        assert_eq!(first, &vec![(1u32, "a")]);
+        assert_eq!(m.fetch(sid, 1).len(), 1);
+        assert_eq!(m.fetch(sid, 2).len(), 0);
+        assert_eq!(m.records_written(), 3);
+    }
+
+    #[test]
+    fn completion_registry() {
+        let m = ShuffleManager::new();
+        let sid = m.new_shuffle_id();
+        assert!(!m.is_completed(sid));
+        m.mark_completed(sid);
+        assert!(m.is_completed(sid));
+        m.clear_shuffle(sid);
+        assert!(!m.is_completed(sid));
+    }
+
+    #[test]
+    fn clear_shuffle_scopes_to_id() {
+        let m = ShuffleManager::new();
+        let a = m.new_shuffle_id();
+        let b = m.new_shuffle_id();
+        m.write_bucket(a, 0, Arc::new(vec![1u32]), 1);
+        m.write_bucket(b, 0, Arc::new(vec![2u32]), 1);
+        m.clear_shuffle(a);
+        assert_eq!(m.fetch(a, 0).len(), 0);
+        assert_eq!(m.fetch(b, 0).len(), 1);
+    }
+
+    #[test]
+    fn distinct_ids() {
+        let m = ShuffleManager::new();
+        assert_ne!(m.new_shuffle_id(), m.new_shuffle_id());
+    }
+}

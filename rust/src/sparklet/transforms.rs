@@ -1,0 +1,404 @@
+//! Narrow transformations: concrete RDD operator types.
+//!
+//! Each operator is a struct holding its parent(s) and closure, plus
+//! `DepNode` + `RddBase` impls. All are narrow dependencies — they
+//! compute a partition purely from parent partitions of the same index
+//! (or a contiguous group, for `coalesce`).
+
+use std::sync::Arc;
+
+use super::context::SparkletContext;
+use super::rdd::{materialize, Data, Dep, DepNode, Rdd, RddBase, TaskContext};
+use crate::util::SplitMix64;
+
+// ------------------------------------------------------------------ sources
+
+/// `parallelize`: a pre-partitioned in-memory collection.
+pub struct ParallelCollection<T: Data> {
+    id: usize,
+    ctx: SparkletContext,
+    parts: Arc<Vec<Vec<T>>>,
+}
+
+impl<T: Data> ParallelCollection<T> {
+    pub fn new(ctx: SparkletContext, data: Vec<T>, num_parts: usize) -> Self {
+        let num_parts = num_parts.max(1);
+        let n = data.len();
+        let mut parts: Vec<Vec<T>> = (0..num_parts).map(|_| Vec::new()).collect();
+        // Contiguous split (Spark's slice semantics): partition i gets
+        // range [i*n/p, (i+1)*n/p).
+        for (i, part) in parts.iter_mut().enumerate() {
+            let lo = i * n / num_parts;
+            let hi = (i + 1) * n / num_parts;
+            part.extend_from_slice(&data[lo..hi]);
+        }
+        Self {
+            id: ctx.new_rdd_id(),
+            ctx,
+            parts: Arc::new(parts),
+        }
+    }
+}
+
+impl<T: Data> DepNode for ParallelCollection<T> {
+    fn node_id(&self) -> usize {
+        self.id
+    }
+    fn node_deps(&self) -> Vec<Dep> {
+        Vec::new()
+    }
+    fn node_label(&self) -> &'static str {
+        "parallelize"
+    }
+}
+
+impl<T: Data> RddBase<T> for ParallelCollection<T> {
+    fn id(&self) -> usize {
+        self.id
+    }
+    fn context(&self) -> SparkletContext {
+        self.ctx.clone()
+    }
+    fn num_partitions(&self) -> usize {
+        self.parts.len()
+    }
+    fn compute(&self, part: usize, _ctx: &TaskContext) -> Vec<T> {
+        self.parts[part].clone()
+    }
+}
+
+// --------------------------------------------------------------------- map
+
+pub struct MapRdd<T: Data, U: Data> {
+    id: usize,
+    parent: Arc<dyn RddBase<T>>,
+    f: Arc<dyn Fn(T) -> U + Send + Sync>,
+}
+
+impl<T: Data, U: Data> DepNode for MapRdd<T, U> {
+    fn node_id(&self) -> usize {
+        self.id
+    }
+    fn node_deps(&self) -> Vec<Dep> {
+        vec![Dep::Narrow(Arc::clone(&self.parent) as Arc<dyn DepNode>)]
+    }
+    fn node_label(&self) -> &'static str {
+        "map"
+    }
+}
+
+impl<T: Data, U: Data> RddBase<U> for MapRdd<T, U> {
+    fn id(&self) -> usize {
+        self.id
+    }
+    fn context(&self) -> SparkletContext {
+        self.parent.context()
+    }
+    fn num_partitions(&self) -> usize {
+        self.parent.num_partitions()
+    }
+    fn compute(&self, part: usize, ctx: &TaskContext) -> Vec<U> {
+        materialize(&self.parent, part, ctx)
+            .into_iter()
+            .map(|x| (self.f)(x))
+            .collect()
+    }
+}
+
+pub fn map<T: Data, U: Data>(
+    rdd: &Rdd<T>,
+    f: impl Fn(T) -> U + Send + Sync + 'static,
+) -> Rdd<U> {
+    Rdd::from_base(Arc::new(MapRdd {
+        id: rdd.context().new_rdd_id(),
+        parent: Arc::clone(&rdd.base),
+        f: Arc::new(f),
+    }))
+}
+
+// ----------------------------------------------------------------- flat_map
+
+pub struct FlatMapRdd<T: Data, U: Data> {
+    id: usize,
+    parent: Arc<dyn RddBase<T>>,
+    f: Arc<dyn Fn(T) -> Vec<U> + Send + Sync>,
+}
+
+impl<T: Data, U: Data> DepNode for FlatMapRdd<T, U> {
+    fn node_id(&self) -> usize {
+        self.id
+    }
+    fn node_deps(&self) -> Vec<Dep> {
+        vec![Dep::Narrow(Arc::clone(&self.parent) as Arc<dyn DepNode>)]
+    }
+    fn node_label(&self) -> &'static str {
+        "flatMap"
+    }
+}
+
+impl<T: Data, U: Data> RddBase<U> for FlatMapRdd<T, U> {
+    fn id(&self) -> usize {
+        self.id
+    }
+    fn context(&self) -> SparkletContext {
+        self.parent.context()
+    }
+    fn num_partitions(&self) -> usize {
+        self.parent.num_partitions()
+    }
+    fn compute(&self, part: usize, ctx: &TaskContext) -> Vec<U> {
+        materialize(&self.parent, part, ctx)
+            .into_iter()
+            .flat_map(|x| (self.f)(x))
+            .collect()
+    }
+}
+
+pub fn flat_map<T: Data, U: Data, I: IntoIterator<Item = U>>(
+    rdd: &Rdd<T>,
+    f: impl Fn(T) -> I + Send + Sync + 'static,
+) -> Rdd<U> {
+    Rdd::from_base(Arc::new(FlatMapRdd {
+        id: rdd.context().new_rdd_id(),
+        parent: Arc::clone(&rdd.base),
+        f: Arc::new(move |x| f(x).into_iter().collect()),
+    }))
+}
+
+// ------------------------------------------------------------------- filter
+
+pub struct FilterRdd<T: Data> {
+    id: usize,
+    parent: Arc<dyn RddBase<T>>,
+    f: Arc<dyn Fn(&T) -> bool + Send + Sync>,
+}
+
+impl<T: Data> DepNode for FilterRdd<T> {
+    fn node_id(&self) -> usize {
+        self.id
+    }
+    fn node_deps(&self) -> Vec<Dep> {
+        vec![Dep::Narrow(Arc::clone(&self.parent) as Arc<dyn DepNode>)]
+    }
+    fn node_label(&self) -> &'static str {
+        "filter"
+    }
+}
+
+impl<T: Data> RddBase<T> for FilterRdd<T> {
+    fn id(&self) -> usize {
+        self.id
+    }
+    fn context(&self) -> SparkletContext {
+        self.parent.context()
+    }
+    fn num_partitions(&self) -> usize {
+        self.parent.num_partitions()
+    }
+    fn compute(&self, part: usize, ctx: &TaskContext) -> Vec<T> {
+        materialize(&self.parent, part, ctx)
+            .into_iter()
+            .filter(|x| (self.f)(x))
+            .collect()
+    }
+}
+
+pub fn filter<T: Data>(
+    rdd: &Rdd<T>,
+    f: impl Fn(&T) -> bool + Send + Sync + 'static,
+) -> Rdd<T> {
+    Rdd::from_base(Arc::new(FilterRdd {
+        id: rdd.context().new_rdd_id(),
+        parent: Arc::clone(&rdd.base),
+        f: Arc::new(f),
+    }))
+}
+
+// ----------------------------------------------------------- map_partitions
+
+pub struct MapPartitionsRdd<T: Data, U: Data> {
+    id: usize,
+    parent: Arc<dyn RddBase<T>>,
+    f: Arc<dyn Fn(usize, Vec<T>) -> Vec<U> + Send + Sync>,
+}
+
+impl<T: Data, U: Data> DepNode for MapPartitionsRdd<T, U> {
+    fn node_id(&self) -> usize {
+        self.id
+    }
+    fn node_deps(&self) -> Vec<Dep> {
+        vec![Dep::Narrow(Arc::clone(&self.parent) as Arc<dyn DepNode>)]
+    }
+    fn node_label(&self) -> &'static str {
+        "mapPartitions"
+    }
+}
+
+impl<T: Data, U: Data> RddBase<U> for MapPartitionsRdd<T, U> {
+    fn id(&self) -> usize {
+        self.id
+    }
+    fn context(&self) -> SparkletContext {
+        self.parent.context()
+    }
+    fn num_partitions(&self) -> usize {
+        self.parent.num_partitions()
+    }
+    fn compute(&self, part: usize, ctx: &TaskContext) -> Vec<U> {
+        (self.f)(part, materialize(&self.parent, part, ctx))
+    }
+}
+
+pub fn map_partitions<T: Data, U: Data>(
+    rdd: &Rdd<T>,
+    f: impl Fn(usize, Vec<T>) -> Vec<U> + Send + Sync + 'static,
+) -> Rdd<U> {
+    Rdd::from_base(Arc::new(MapPartitionsRdd {
+        id: rdd.context().new_rdd_id(),
+        parent: Arc::clone(&rdd.base),
+        f: Arc::new(f),
+    }))
+}
+
+// -------------------------------------------------------------------- union
+
+pub struct UnionRdd<T: Data> {
+    id: usize,
+    parents: Vec<Arc<dyn RddBase<T>>>,
+}
+
+impl<T: Data> DepNode for UnionRdd<T> {
+    fn node_id(&self) -> usize {
+        self.id
+    }
+    fn node_deps(&self) -> Vec<Dep> {
+        self.parents
+            .iter()
+            .map(|p| Dep::Narrow(Arc::clone(p) as Arc<dyn DepNode>))
+            .collect()
+    }
+    fn node_label(&self) -> &'static str {
+        "union"
+    }
+}
+
+impl<T: Data> RddBase<T> for UnionRdd<T> {
+    fn id(&self) -> usize {
+        self.id
+    }
+    fn context(&self) -> SparkletContext {
+        self.parents[0].context()
+    }
+    fn num_partitions(&self) -> usize {
+        self.parents.iter().map(|p| p.num_partitions()).sum()
+    }
+    fn compute(&self, part: usize, ctx: &TaskContext) -> Vec<T> {
+        let mut offset = part;
+        for p in &self.parents {
+            if offset < p.num_partitions() {
+                return materialize(p, offset, ctx);
+            }
+            offset -= p.num_partitions();
+        }
+        panic!("union partition {part} out of range");
+    }
+}
+
+pub fn union<T: Data>(a: &Rdd<T>, b: &Rdd<T>) -> Rdd<T> {
+    Rdd::from_base(Arc::new(UnionRdd {
+        id: a.context().new_rdd_id(),
+        parents: vec![Arc::clone(&a.base), Arc::clone(&b.base)],
+    }))
+}
+
+// ------------------------------------------------------------------ coalesce
+
+/// Narrow coalesce: child partition i reads a contiguous group of parent
+/// partitions, preserving order — which is what EclatV2's
+/// `coalesce(1)` relies on for stable transaction-id assignment.
+pub struct CoalesceRdd<T: Data> {
+    id: usize,
+    parent: Arc<dyn RddBase<T>>,
+    num_parts: usize,
+}
+
+impl<T: Data> CoalesceRdd<T> {
+    fn group(&self, part: usize) -> std::ops::Range<usize> {
+        let np = self.parent.num_partitions();
+        let lo = part * np / self.num_parts;
+        let hi = (part + 1) * np / self.num_parts;
+        lo..hi
+    }
+}
+
+impl<T: Data> DepNode for CoalesceRdd<T> {
+    fn node_id(&self) -> usize {
+        self.id
+    }
+    fn node_deps(&self) -> Vec<Dep> {
+        vec![Dep::Narrow(Arc::clone(&self.parent) as Arc<dyn DepNode>)]
+    }
+    fn node_label(&self) -> &'static str {
+        "coalesce"
+    }
+}
+
+impl<T: Data> RddBase<T> for CoalesceRdd<T> {
+    fn id(&self) -> usize {
+        self.id
+    }
+    fn context(&self) -> SparkletContext {
+        self.parent.context()
+    }
+    fn num_partitions(&self) -> usize {
+        self.num_parts
+    }
+    fn compute(&self, part: usize, ctx: &TaskContext) -> Vec<T> {
+        let mut out = Vec::new();
+        for p in self.group(part) {
+            out.extend(materialize(&self.parent, p, ctx));
+        }
+        out
+    }
+}
+
+pub fn coalesce<T: Data>(rdd: &Rdd<T>, n: usize) -> Rdd<T> {
+    let n = n.max(1).min(rdd.num_partitions().max(1));
+    Rdd::from_base(Arc::new(CoalesceRdd {
+        id: rdd.context().new_rdd_id(),
+        parent: Arc::clone(&rdd.base),
+        num_parts: n,
+    }))
+}
+
+/// Round-robin repartition (wide): tag with a rotating key, hash-shuffle,
+/// strip the tag.
+pub fn repartition<T: Data + std::hash::Hash + Eq>(rdd: &Rdd<T>, n: usize) -> Rdd<T> {
+    use super::pair::PairRdd;
+    let n = n.max(1);
+    let tagged = rdd.map_partitions(move |part, items| {
+        items
+            .into_iter()
+            .enumerate()
+            .map(|(i, x)| ((part + i) % n, x))
+            .collect::<Vec<(usize, T)>>()
+    });
+    tagged
+        .partition_by(Arc::new(super::partitioner::FnPartitioner::new(
+            n,
+            move |k: &usize| *k % n,
+        )))
+        .values()
+}
+
+// ------------------------------------------------------------------- sample
+
+pub fn sample<T: Data>(rdd: &Rdd<T>, fraction: f64, seed: u64) -> Rdd<T> {
+    rdd.map_partitions(move |part, items| {
+        let mut rng = SplitMix64::new(seed ^ (part as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        items
+            .into_iter()
+            .filter(|_| rng.gen_bool(fraction))
+            .collect()
+    })
+}

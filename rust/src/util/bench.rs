@@ -1,0 +1,210 @@
+//! Minimal bench harness (criterion is unavailable offline).
+//!
+//! Each `[[bench]]` target is a plain `main()` that builds a
+//! [`BenchSuite`], registers measurements, and prints a fixed-width table
+//! plus a CSV next to `bench_output.txt`. Repetitions + median/stddev give
+//! stable numbers without criterion's statistical machinery.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// One measured series (e.g. one algorithm across a min_sup sweep).
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub series: String,
+    pub x_label: String,
+    pub x: f64,
+    pub millis: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn median_ms(&self) -> f64 {
+        stats::median(&self.millis)
+    }
+}
+
+/// A named collection of measurements that renders paper-style tables.
+pub struct BenchSuite {
+    pub name: String,
+    pub description: String,
+    measurements: Vec<Measurement>,
+    reps: usize,
+    warmup: usize,
+}
+
+impl BenchSuite {
+    pub fn new(name: &str, description: &str) -> Self {
+        // Fast mode for CI/test runs: REPRO_BENCH_REPS=1 REPRO_BENCH_WARMUP=0
+        let reps = std::env::var("REPRO_BENCH_REPS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(3);
+        let warmup = std::env::var("REPRO_BENCH_WARMUP")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(1);
+        Self {
+            name: name.to_string(),
+            description: description.to_string(),
+            measurements: Vec::new(),
+            reps,
+            warmup,
+        }
+    }
+
+    pub fn with_reps(mut self, reps: usize, warmup: usize) -> Self {
+        self.reps = reps;
+        self.warmup = warmup;
+        self
+    }
+
+    /// Measure `f` with warmup + repetitions and record the series point.
+    pub fn measure<F: FnMut()>(&mut self, series: &str, x_label: &str, x: f64, mut f: F) {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut millis = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps {
+            let t = Instant::now();
+            f();
+            millis.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        eprintln!(
+            "  [{}] {series} @ {x_label}={x}: {:.1} ms",
+            self.name,
+            stats::median(&millis)
+        );
+        self.measurements.push(Measurement {
+            series: series.to_string(),
+            x_label: x_label.to_string(),
+            x,
+            millis,
+        });
+    }
+
+    /// Record an externally measured value (e.g. from a run that also
+    /// returns data we want to assert on).
+    pub fn record(&mut self, series: &str, x_label: &str, x: f64, millis: Vec<f64>) {
+        self.measurements.push(Measurement {
+            series: series.to_string(),
+            x_label: x_label.to_string(),
+            x,
+            millis,
+        });
+    }
+
+    pub fn measurements(&self) -> &[Measurement] {
+        &self.measurements
+    }
+
+    /// Median for a given (series, x) point, if present.
+    pub fn median(&self, series: &str, x: f64) -> Option<f64> {
+        self.measurements
+            .iter()
+            .find(|m| m.series == series && (m.x - x).abs() < 1e-12)
+            .map(|m| m.median_ms())
+    }
+
+    /// Render the paper-style table: rows = x values, columns = series.
+    pub fn render_table(&self) -> String {
+        let mut series: Vec<String> = Vec::new();
+        let mut xs: Vec<f64> = Vec::new();
+        for m in &self.measurements {
+            if !series.contains(&m.series) {
+                series.push(m.series.clone());
+            }
+            if !xs.iter().any(|&x| (x - m.x).abs() < 1e-12) {
+                xs.push(m.x);
+            }
+        }
+        let x_label = self
+            .measurements
+            .first()
+            .map(|m| m.x_label.clone())
+            .unwrap_or_else(|| "x".into());
+        let mut out = String::new();
+        out.push_str(&format!("## {} — {}\n", self.name, self.description));
+        out.push_str(&format!("{:>12}", x_label));
+        for s in &series {
+            out.push_str(&format!("{:>14}", s));
+        }
+        out.push('\n');
+        for &x in &xs {
+            out.push_str(&format!("{:>12}", trim_float(x)));
+            for s in &series {
+                match self.median(s, x) {
+                    Some(ms) => out.push_str(&format!("{:>12.1}ms", ms)),
+                    None => out.push_str(&format!("{:>14}", "-")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering (one row per measurement, all reps).
+    pub fn render_csv(&self) -> String {
+        let mut out = String::from("bench,series,x_label,x,median_ms,stddev_ms,reps\n");
+        for m in &self.measurements {
+            out.push_str(&format!(
+                "{},{},{},{},{:.3},{:.3},{}\n",
+                self.name,
+                m.series,
+                m.x_label,
+                trim_float(m.x),
+                m.median_ms(),
+                stats::stddev(&m.millis),
+                m.millis.len()
+            ));
+        }
+        out
+    }
+
+    /// Print the table to stdout and write CSV under `target/bench-results/`.
+    pub fn finish(&self) {
+        println!("{}", self.render_table());
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.csv", self.name));
+        if let Err(e) = std::fs::write(&path, self.render_csv()) {
+            eprintln!("warn: could not write {}: {e}", path.display());
+        } else {
+            eprintln!("wrote {}", path.display());
+        }
+    }
+}
+
+fn trim_float(x: f64) -> String {
+    if (x - x.round()).abs() < 1e-9 {
+        format!("{}", x.round() as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_and_table() {
+        let mut suite = BenchSuite::new("t", "test").with_reps(2, 0);
+        suite.measure("a", "n", 1.0, || {});
+        suite.measure("b", "n", 1.0, || {});
+        suite.measure("a", "n", 2.0, || {});
+        let table = suite.render_table();
+        assert!(table.contains("a") && table.contains("b"));
+        assert!(suite.median("a", 1.0).is_some());
+        assert!(suite.median("b", 2.0).is_none());
+        let csv = suite.render_csv();
+        assert_eq!(csv.lines().count(), 4); // header + 3
+    }
+
+    #[test]
+    fn record_external() {
+        let mut suite = BenchSuite::new("t2", "test").with_reps(1, 0);
+        suite.record("x", "k", 5.0, vec![10.0, 20.0, 30.0]);
+        assert_eq!(suite.median("x", 5.0).unwrap(), 20.0);
+    }
+}

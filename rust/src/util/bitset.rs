@@ -1,0 +1,215 @@
+//! Packed bitmap over u32 words — the tidset representation that feeds
+//! both the native SIMD-friendly intersection loop and the XLA artifact
+//! (whose operands are `s32[rows, words]` with identical bit layout:
+//! tid `t` lives at bit `t % 32` of word `t / 32`).
+
+/// A fixed-capacity bitmap of transaction ids.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bitmap {
+    words: Vec<u32>,
+    /// Number of addressable bits (tids); words.len() == ceil(nbits/32).
+    nbits: usize,
+}
+
+impl Bitmap {
+    pub fn new(nbits: usize) -> Self {
+        Self {
+            words: vec![0; nbits.div_ceil(32)],
+            nbits,
+        }
+    }
+
+    pub fn from_sorted_tids(tids: &[u32], nbits: usize) -> Self {
+        let mut b = Self::new(nbits);
+        for &t in tids {
+            b.set(t as usize);
+        }
+        b
+    }
+
+    #[inline]
+    pub fn nbits(&self) -> usize {
+        self.nbits
+    }
+
+    #[inline]
+    pub fn words(&self) -> &[u32] {
+        &self.words
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.nbits, "bit {i} out of range {}", self.nbits);
+        self.words[i / 32] |= 1u32 << (i % 32);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        self.words[i / 32] &= !(1u32 << (i % 32));
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        (self.words[i / 32] >> (i % 32)) & 1 == 1
+    }
+
+    /// Number of set bits (the tidset's support).
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// `self & other` into a fresh bitmap. The FIM hot path uses
+    /// [`and_into`](Self::and_into) to avoid the allocation.
+    pub fn and(&self, other: &Self) -> Self {
+        let mut out = self.clone();
+        out.and_assign(other);
+        out
+    }
+
+    /// `self &= other`.
+    pub fn and_assign(&mut self, other: &Self) {
+        debug_assert_eq!(self.words.len(), other.words.len());
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= *b;
+        }
+    }
+
+    /// Intersect into a caller-provided buffer, returning the popcount.
+    /// This is the native hot path: one pass, no allocation.
+    #[inline]
+    pub fn and_into(&self, other: &Self, out: &mut Self) -> usize {
+        debug_assert_eq!(self.words.len(), other.words.len());
+        debug_assert_eq!(self.words.len(), out.words.len());
+        let mut count = 0usize;
+        for ((o, &a), &b) in out.words.iter_mut().zip(&self.words).zip(&other.words) {
+            let w = a & b;
+            *o = w;
+            count += w.count_ones() as usize;
+        }
+        out.nbits = self.nbits;
+        count
+    }
+
+    /// Popcount of the intersection without materializing it — used when
+    /// only the support survives the min_sup test.
+    #[inline]
+    pub fn and_count(&self, other: &Self) -> usize {
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(&a, &b)| (a & b).count_ones() as usize)
+            .sum()
+    }
+
+    /// Iterate set bit indices in ascending order.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 32 + b)
+                }
+            })
+        })
+    }
+
+    pub fn to_tids(&self) -> Vec<u32> {
+        self.iter_ones().map(|i| i as u32).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// View the words as i32 (bit-identical) for the XLA operand path.
+    pub fn words_i32(&self) -> Vec<i32> {
+        self.words.iter().map(|&w| w as i32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_clear() {
+        let mut b = Bitmap::new(100);
+        assert!(!b.get(37));
+        b.set(37);
+        assert!(b.get(37));
+        b.clear(37);
+        assert!(!b.get(37));
+    }
+
+    #[test]
+    fn count_and_iter() {
+        let mut b = Bitmap::new(200);
+        let tids = [0usize, 31, 32, 63, 64, 128, 199];
+        for &t in &tids {
+            b.set(t);
+        }
+        assert_eq!(b.count(), tids.len());
+        let got: Vec<usize> = b.iter_ones().collect();
+        assert_eq!(got, tids);
+    }
+
+    #[test]
+    fn intersection_matches_sets() {
+        use std::collections::BTreeSet;
+        let mut rng = crate::util::SplitMix64::new(77);
+        for _ in 0..50 {
+            let n = 500;
+            let a: BTreeSet<usize> = (0..n).filter(|_| rng.gen_bool(0.2)).collect();
+            let b: BTreeSet<usize> = (0..n).filter(|_| rng.gen_bool(0.2)).collect();
+            let ba = {
+                let mut x = Bitmap::new(n);
+                a.iter().for_each(|&i| x.set(i));
+                x
+            };
+            let bb = {
+                let mut x = Bitmap::new(n);
+                b.iter().for_each(|&i| x.set(i));
+                x
+            };
+            let want: Vec<usize> = a.intersection(&b).copied().collect();
+            let inter = ba.and(&bb);
+            assert_eq!(inter.iter_ones().collect::<Vec<_>>(), want);
+            assert_eq!(inter.count(), want.len());
+            assert_eq!(ba.and_count(&bb), want.len());
+            let mut buf = Bitmap::new(n);
+            assert_eq!(ba.and_into(&bb, &mut buf), want.len());
+            assert_eq!(buf, inter);
+        }
+    }
+
+    #[test]
+    fn from_sorted_tids_roundtrip() {
+        let tids = vec![1u32, 5, 31, 32, 99];
+        let b = Bitmap::from_sorted_tids(&tids, 128);
+        assert_eq!(b.to_tids(), tids);
+    }
+
+    #[test]
+    fn words_i32_bit_identical() {
+        let mut b = Bitmap::new(32);
+        b.set(31);
+        assert_eq!(b.words()[0], 0x8000_0000);
+        assert_eq!(b.words_i32()[0], i32::MIN);
+    }
+
+    #[test]
+    fn empty_and_full() {
+        let b = Bitmap::new(64);
+        assert!(b.is_empty());
+        assert_eq!(b.count(), 0);
+        let mut f = Bitmap::new(64);
+        (0..64).for_each(|i| f.set(i));
+        assert_eq!(f.count(), 64);
+        assert!(!f.is_empty());
+    }
+}

@@ -1,0 +1,107 @@
+//! FxHash-style fast hashing (the std SipHash is measurably slow in the
+//! shuffle hot loop; FxHash is the rustc-internal multiply-xor hash).
+
+use std::hash::{BuildHasherDefault, Hash, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// The rustc FxHasher: word-at-a-time multiply-rotate.
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, i: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ i).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add_to_hash(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            self.add_to_hash(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add_to_hash(i);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add_to_hash(i as u64);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+pub type FxHashSet<K> = std::collections::HashSet<K, FxBuildHasher>;
+
+/// Hash a single value with FxHash (used by hash partitioners).
+#[inline]
+pub fn fx_hash<T: Hash>(value: &T) -> u64 {
+    let mut h = FxHasher::default();
+    value.hash(&mut h);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(fx_hash(&"hello"), fx_hash(&"hello"));
+        assert_eq!(fx_hash(&12345u64), fx_hash(&12345u64));
+    }
+
+    #[test]
+    fn distinguishes_values() {
+        assert_ne!(fx_hash(&1u32), fx_hash(&2u32));
+        assert_ne!(fx_hash(&"a"), fx_hash(&"b"));
+    }
+
+    #[test]
+    fn map_works() {
+        let mut m: FxHashMap<String, u32> = FxHashMap::default();
+        m.insert("x".into(), 1);
+        m.insert("y".into(), 2);
+        assert_eq!(m["x"], 1);
+        assert_eq!(m["y"], 2);
+    }
+
+    #[test]
+    fn spreads_small_ints() {
+        // partition-id quality check: consecutive ints should not all
+        // collide mod small p.
+        let p = 10;
+        let mut buckets = vec![0usize; p];
+        for i in 0..1000u32 {
+            buckets[(fx_hash(&i) % p as u64) as usize] += 1;
+        }
+        let max = *buckets.iter().max().unwrap();
+        let min = *buckets.iter().min().unwrap();
+        assert!(max < 3 * min.max(1), "skewed buckets: {buckets:?}");
+    }
+}

@@ -1,0 +1,16 @@
+//! Utility substrate built in-tree (the offline registry has no rayon /
+//! rand / criterion / proptest, so the pieces live here).
+
+pub mod bench;
+pub mod bitset;
+pub mod hash;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use bitset::Bitmap;
+pub use pool::ThreadPool;
+pub use rng::SplitMix64;
+pub use timer::Timer;

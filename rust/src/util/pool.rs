@@ -1,0 +1,207 @@
+//! Fixed-size worker thread pool — the "executor cores" of Sparklet.
+//!
+//! No tokio/rayon offline, so the pool is built on std primitives: a
+//! shared `Mutex<VecDeque>` job queue with a `Condvar`, N worker threads,
+//! and completion signalled through per-job channels. The Spark analogy:
+//! one pool = one executor JVM, `threads` = `spark.executor.cores`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    active: AtomicUsize,
+}
+
+/// A fixed pool of worker threads executing queued jobs FIFO.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize) -> Self {
+        assert!(size > 0, "thread pool needs at least one worker");
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("sparklet-exec-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self {
+            shared,
+            workers,
+            size,
+        }
+    }
+
+    /// Number of worker threads ("executor cores").
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Enqueue a job for execution.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, job: F) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Box::new(job));
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Run a batch of jobs and collect their results in input order,
+    /// blocking until all complete. Panics in jobs are converted into
+    /// `Err` strings so the scheduler can retry from lineage.
+    pub fn run_all<T, F>(&self, jobs: Vec<F>) -> Vec<Result<T, String>>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        let receivers: Vec<Receiver<Result<T, String>>> = jobs
+            .into_iter()
+            .map(|job| {
+                let (tx, rx) = channel();
+                self.execute(move || {
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job))
+                        .map_err(|e| panic_message(e.as_ref()));
+                    let _ = tx.send(result);
+                });
+                rx
+            })
+            .collect();
+        receivers
+            .into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .unwrap_or_else(|_| Err("worker dropped result channel".into()))
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .take(n)
+            .collect()
+    }
+
+    /// Number of jobs currently executing (for metrics).
+    pub fn active(&self) -> usize {
+        self.shared.active.load(Ordering::Relaxed)
+    }
+}
+
+fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "task panicked".to_string()
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        shared.active.fetch_add(1, Ordering::Relaxed);
+        job();
+        shared.active.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs_in_order_of_submission_results() {
+        let pool = ThreadPool::new(4);
+        let jobs: Vec<_> = (0..100)
+            .map(|i| move || i * 2)
+            .collect();
+        let results = pool.run_all(jobs);
+        for (i, r) in results.into_iter().enumerate() {
+            assert_eq!(r.unwrap(), i * 2);
+        }
+    }
+
+    #[test]
+    fn parallelism_actually_happens() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let peak = Arc::new(AtomicU64::new(0));
+        let jobs: Vec<_> = (0..16)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                let p = Arc::clone(&peak);
+                move || {
+                    let now = c.fetch_add(1, Ordering::SeqCst) + 1;
+                    p.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    c.fetch_sub(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        pool.run_all(jobs);
+        assert!(peak.load(Ordering::SeqCst) >= 2, "no overlap observed");
+    }
+
+    #[test]
+    fn panic_becomes_err_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let results = pool.run_all(vec![
+            Box::new(|| 1usize) as Box<dyn FnOnce() -> usize + Send>,
+            Box::new(|| panic!("boom")),
+            Box::new(|| 3usize),
+        ]);
+        assert_eq!(results[0].as_ref().unwrap(), &1);
+        assert!(results[1].as_ref().unwrap_err().contains("boom"));
+        assert_eq!(results[2].as_ref().unwrap(), &3);
+        // pool still works afterwards
+        let again = pool.run_all(vec![|| 7usize]);
+        assert_eq!(again[0].as_ref().unwrap(), &7);
+    }
+
+    #[test]
+    fn shutdown_joins_workers() {
+        let pool = ThreadPool::new(3);
+        let _ = pool.run_all((0..10).map(|i| move || i).collect::<Vec<_>>());
+        drop(pool); // must not hang
+    }
+}

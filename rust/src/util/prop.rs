@@ -1,0 +1,170 @@
+//! Tiny property-based testing harness (proptest is unavailable offline).
+//!
+//! `forall(cases, gen, prop)` runs `prop` on `cases` generated inputs and,
+//! on failure, reports the seed + a best-effort shrink so failures are
+//! reproducible. Generators are plain `Fn(&mut SplitMix64) -> T`.
+
+use super::rng::SplitMix64;
+
+/// Run `prop` on `cases` random inputs from `gen`. Panics with the seed
+/// and debug-printed input on the first failure (after shrinking, if a
+/// shrinker is provided via [`forall_shrink`]).
+pub fn forall<T: std::fmt::Debug>(
+    cases: usize,
+    gen: impl Fn(&mut SplitMix64) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    forall_shrink(cases, gen, |_| Vec::new(), prop)
+}
+
+/// `forall` with a shrinker: on failure, repeatedly tries the candidate
+/// simplifications produced by `shrink` until a local minimum survives.
+pub fn forall_shrink<T: std::fmt::Debug>(
+    cases: usize,
+    gen: impl Fn(&mut SplitMix64) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    let base_seed = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xD15EA5Eu64);
+    for case in 0..cases {
+        let mut rng = SplitMix64::new(base_seed.wrapping_add(case as u64));
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            let minimal = minimize(input, &shrink, &prop);
+            panic!(
+                "property failed (seed={}, case={case}):\n{minimal:#?}\n\
+                 rerun with PROP_SEED={} to reproduce",
+                base_seed, base_seed
+            );
+        }
+    }
+}
+
+fn minimize<T: std::fmt::Debug>(
+    mut failing: T,
+    shrink: &impl Fn(&T) -> Vec<T>,
+    prop: &impl Fn(&T) -> bool,
+) -> T {
+    // Greedy descent: take the first shrunk candidate that still fails.
+    'outer: loop {
+        for cand in shrink(&failing) {
+            if !prop(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+        }
+        return failing;
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::SplitMix64;
+
+    pub fn usize_in(lo: usize, hi: usize) -> impl Fn(&mut SplitMix64) -> usize {
+        move |r| lo + r.gen_range(hi - lo + 1)
+    }
+
+    pub fn vec_of<T>(
+        len_lo: usize,
+        len_hi: usize,
+        elem: impl Fn(&mut SplitMix64) -> T,
+    ) -> impl Fn(&mut SplitMix64) -> Vec<T> {
+        move |r| {
+            let n = len_lo + r.gen_range(len_hi - len_lo + 1);
+            (0..n).map(|_| elem(r)).collect()
+        }
+    }
+
+    /// A random transaction database: `n_txn` transactions over
+    /// `n_items` items with the given density.
+    pub fn database(
+        n_txn_hi: usize,
+        n_items_hi: usize,
+        density: f64,
+    ) -> impl Fn(&mut SplitMix64) -> Vec<Vec<u32>> {
+        move |r| {
+            let n_txn = 1 + r.gen_range(n_txn_hi);
+            let n_items = 2 + r.gen_range(n_items_hi.max(2));
+            (0..n_txn)
+                .map(|_| {
+                    let mut t: Vec<u32> = (0..n_items as u32)
+                        .filter(|_| r.gen_bool(density))
+                        .collect();
+                    if t.is_empty() {
+                        t.push(r.gen_range(n_items) as u32);
+                    }
+                    t
+                })
+                .collect()
+        }
+    }
+
+    /// Shrinker for databases: drop transactions / drop items.
+    pub fn shrink_database(db: &[Vec<u32>]) -> Vec<Vec<Vec<u32>>> {
+        let mut out = Vec::new();
+        if db.len() > 1 {
+            out.push(db[..db.len() / 2].to_vec());
+            out.push(db[db.len() / 2..].to_vec());
+            let mut one_less = db.to_vec();
+            one_less.pop();
+            out.push(one_less);
+        }
+        if db.iter().any(|t| t.len() > 1) {
+            out.push(
+                db.iter()
+                    .map(|t| t[..t.len().div_ceil(2)].to_vec())
+                    .collect(),
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(100, |r| r.gen_range(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(100, |r| r.gen_range(100), |&x| x < 50);
+    }
+
+    #[test]
+    fn shrinker_minimizes() {
+        // Shrink a failing vec (contains 7) down; minimal should still
+        // contain 7 but be shorter than typical.
+        let result = std::panic::catch_unwind(|| {
+            forall_shrink(
+                50,
+                gen::vec_of(0, 20, |r| r.gen_range(10) as u32),
+                |v: &Vec<u32>| {
+                    let mut outs = Vec::new();
+                    if v.len() > 1 {
+                        outs.push(v[..v.len() / 2].to_vec());
+                        outs.push(v[v.len() / 2..].to_vec());
+                    }
+                    outs
+                },
+                |v| !v.contains(&7),
+            );
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn database_gen_wellformed() {
+        forall(50, gen::database(20, 10, 0.3), |db| {
+            !db.is_empty() && db.iter().all(|t| !t.is_empty())
+        });
+    }
+}

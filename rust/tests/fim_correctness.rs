@@ -1,0 +1,152 @@
+//! Cross-algorithm correctness: every distributed algorithm must return
+//! exactly the itemsets of the sequential oracles, across datasets,
+//! supports, partitionings, and engine configurations.
+
+use rdd_eclat::data::Dataset;
+use rdd_eclat::fim::apriori::mine_apriori_rdd_vec;
+use rdd_eclat::fim::eclat::{mine_eclat_vec, EclatConfig, EclatVariant};
+use rdd_eclat::fim::sequential::{apriori_sequential, eclat_sequential};
+use rdd_eclat::fim::types::abs_min_sup;
+use rdd_eclat::sparklet::{SparkletConf, SparkletContext};
+
+#[test]
+fn variants_match_oracle_on_t10_sample() {
+    let txns = Dataset::T10I4D100K.generate_scaled(42, 0.02); // 2K txns
+    let min_sup = abs_min_sup(0.01, txns.len());
+    let oracle = eclat_sequential(&txns, min_sup);
+    assert!(!oracle.is_empty());
+    let sc = SparkletContext::local(3);
+    for v in EclatVariant::all() {
+        let cfg = EclatConfig::new(v, min_sup).with_tri_matrix(true);
+        let got = mine_eclat_vec(&sc, txns.clone(), &cfg);
+        assert!(got.same_as(&oracle), "{}", v.name());
+    }
+    let apriori = mine_apriori_rdd_vec(&sc, txns.clone(), min_sup);
+    assert!(apriori.same_as(&oracle), "rdd-apriori");
+}
+
+#[test]
+fn variants_match_oracle_on_bms_sample_no_trimatrix() {
+    let txns = Dataset::Bms1.generate_scaled(42, 0.05); // ~3K sessions
+    let min_sup = abs_min_sup(0.002, txns.len());
+    let oracle = eclat_sequential(&txns, min_sup);
+    let sc = SparkletContext::local(2);
+    for v in EclatVariant::all() {
+        let cfg = EclatConfig::new(v, min_sup).with_tri_matrix(false);
+        let got = mine_eclat_vec(&sc, txns.clone(), &cfg);
+        assert!(got.same_as(&oracle), "{}", v.name());
+    }
+}
+
+#[test]
+fn deep_itemsets_on_t40_sample() {
+    // T40 has wide transactions -> deeper lattice levels; exercises the
+    // recursion properly.
+    let txns = Dataset::T40I10D100K.generate_scaled(1, 0.005); // 500 txns
+    let min_sup = abs_min_sup(0.05, txns.len());
+    let oracle = eclat_sequential(&txns, min_sup);
+    assert!(
+        oracle.max_length() >= 3,
+        "want depth >= 3, got {}",
+        oracle.max_length()
+    );
+    let sc = SparkletContext::local(2);
+    for v in [EclatVariant::V1, EclatVariant::V4] {
+        let got = mine_eclat_vec(&sc, txns.clone(), &EclatConfig::new(v, min_sup));
+        assert!(got.same_as(&oracle), "{}", v.name());
+    }
+    let apriori = apriori_sequential(&txns, min_sup);
+    assert!(apriori.same_as(&oracle));
+}
+
+#[test]
+fn result_invariant_to_cores_and_partitions() {
+    let txns = Dataset::T10I4D100K.generate_scaled(9, 0.01);
+    let min_sup = abs_min_sup(0.01, txns.len());
+    let base = eclat_sequential(&txns, min_sup);
+    for cores in [1usize, 2, 7] {
+        let sc = SparkletContext::local(cores);
+        for p in [1usize, 3, 16] {
+            let cfg = EclatConfig::new(EclatVariant::V5, min_sup).with_p(p);
+            let got = mine_eclat_vec(&sc, txns.clone(), &cfg);
+            assert!(got.same_as(&base), "cores={cores} p={p}");
+        }
+    }
+}
+
+#[test]
+fn mining_survives_failure_injection() {
+    // Lineage recovery must not corrupt results. NOTE: accumulators can
+    // double-count under retries (documented Spark caveat), so inject
+    // failures only with triMatrixMode=false (no accumulator on the
+    // Phase-2 path) and V2 (groupByKey vertical rather than hashmap
+    // accumulator).
+    let txns = Dataset::T10I4D100K.generate_scaled(3, 0.01);
+    let min_sup = abs_min_sup(0.02, txns.len());
+    let oracle = eclat_sequential(&txns, min_sup);
+    let conf = SparkletConf::new("faulty-mine")
+        .with_cores(4)
+        .with_failure_injection(0.3, 777)
+        .with_max_task_failures(8);
+    let sc = SparkletContext::new(conf);
+    let cfg = EclatConfig::new(EclatVariant::V2, min_sup).with_tri_matrix(false);
+    let got = mine_eclat_vec(&sc, txns.clone(), &cfg);
+    assert!(got.same_as(&oracle));
+    assert!(
+        sc.metrics().total_retries() > 0,
+        "injection should have fired"
+    );
+}
+
+#[test]
+fn apriori_survives_failure_injection() {
+    let txns = Dataset::T10I4D100K.generate_scaled(5, 0.005);
+    let min_sup = abs_min_sup(0.02, txns.len());
+    let oracle = apriori_sequential(&txns, min_sup);
+    let conf = SparkletConf::new("faulty-apriori")
+        .with_cores(3)
+        .with_failure_injection(0.3, 999)
+        .with_max_task_failures(8);
+    let sc = SparkletContext::new(conf);
+    let got = mine_apriori_rdd_vec(&sc, txns.clone(), min_sup);
+    assert!(got.same_as(&oracle));
+}
+
+#[test]
+fn file_roundtrip_mine() {
+    // write -> textFile -> mine == in-memory mine
+    use rdd_eclat::data::write_transactions;
+    use rdd_eclat::fim::eclat::transactions_from_lines;
+    let txns = Dataset::Bms2.generate_scaled(8, 0.01);
+    let min_sup = abs_min_sup(0.005, txns.len());
+    let dir = std::env::temp_dir().join("rdd_eclat_file_mine");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("db.txt");
+    write_transactions(path.to_str().unwrap(), &txns).unwrap();
+    let sc = SparkletContext::local(2);
+    let lines = sc.text_file(path.to_str().unwrap(), 2).unwrap();
+    let rdd = transactions_from_lines(&lines);
+    let cfg = EclatConfig::new(EclatVariant::V3, min_sup).with_tri_matrix(false);
+    let got = rdd_eclat::fim::eclat::mine_eclat(&sc, &rdd, &cfg);
+    assert!(got.same_as(&eclat_sequential(&txns, min_sup)));
+}
+
+#[test]
+fn supports_are_exact_counts() {
+    // spot-check supports against brute-force membership counting
+    let txns = Dataset::T10I4D100K.generate_scaled(2, 0.005);
+    let min_sup = abs_min_sup(0.02, txns.len());
+    let sc = SparkletContext::local(2);
+    let got = mine_eclat_vec(
+        &sc,
+        txns.clone(),
+        &EclatConfig::new(EclatVariant::V4, min_sup),
+    );
+    for f in got.itemsets.iter().take(50) {
+        let brute = txns
+            .iter()
+            .filter(|t| f.items.iter().all(|i| t.binary_search(i).is_ok()))
+            .count() as u32;
+        assert_eq!(f.support, brute, "itemset {:?}", f.items);
+    }
+}

@@ -1,0 +1,149 @@
+//! Property-based tests over randomized databases (in-tree harness —
+//! proptest is unavailable offline): distributed == sequential, FIM
+//! invariants, RDD semantics vs Vec oracles.
+
+use rdd_eclat::fim::apriori::mine_apriori_rdd_vec;
+use rdd_eclat::fim::eclat::{mine_eclat_vec, EclatConfig, EclatVariant};
+use rdd_eclat::fim::sequential::{apriori_sequential, eclat_sequential};
+use rdd_eclat::sparklet::{PairRdd, SparkletContext};
+use rdd_eclat::util::prop::{forall, forall_shrink, gen};
+
+#[test]
+fn prop_every_variant_equals_oracle() {
+    let sc = SparkletContext::local(2);
+    forall_shrink(
+        25,
+        gen::database(30, 10, 0.35),
+        |db| gen::shrink_database(db),
+        |db| {
+            let oracle = eclat_sequential(db, 2);
+            EclatVariant::all().into_iter().all(|v| {
+                let cfg = EclatConfig::new(v, 2).with_p(3);
+                mine_eclat_vec(&sc, db.clone(), &cfg).same_as(&oracle)
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_rdd_apriori_equals_sequential() {
+    let sc = SparkletContext::local(3);
+    forall(25, gen::database(25, 8, 0.4), |db| {
+        for min_sup in [1u32, 2, 3] {
+            if !mine_apriori_rdd_vec(&sc, db.clone(), min_sup)
+                .same_as(&apriori_sequential(db, min_sup))
+            {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_monotone_in_min_sup() {
+    // Raising min_sup can only shrink the result set (and it must be a
+    // subset).
+    forall(30, gen::database(30, 9, 0.35), |db| {
+        let lo = eclat_sequential(db, 2).canonical();
+        let hi = eclat_sequential(db, 3).canonical();
+        hi.iter().all(|x| lo.contains(x)) && hi.len() <= lo.len()
+    });
+}
+
+#[test]
+fn prop_supports_at_least_min_sup() {
+    forall(30, gen::database(30, 9, 0.3), |db| {
+        let r = eclat_sequential(db, 2);
+        r.itemsets.iter().all(|f| f.support >= 2)
+    });
+}
+
+#[test]
+fn prop_transaction_order_irrelevant() {
+    // Mining a permuted database yields the same itemsets.
+    let sc = SparkletContext::local(2);
+    forall(20, gen::database(25, 8, 0.35), |db| {
+        let mut shuffled = db.clone();
+        shuffled.reverse();
+        let a = mine_eclat_vec(&sc, db.clone(), &EclatConfig::new(EclatVariant::V4, 2));
+        let b = mine_eclat_vec(&sc, shuffled, &EclatConfig::new(EclatVariant::V4, 2));
+        a.same_as(&b)
+    });
+}
+
+// ------------------------- RDD semantics vs Vec oracle (randomized) ----
+
+#[test]
+fn prop_rdd_map_filter_equals_vec() {
+    let sc = SparkletContext::local(3);
+    forall(30, gen::vec_of(0, 200, |r| r.next_u32() % 1000), |data| {
+        let want: Vec<u32> = data.iter().map(|x| x * 2).filter(|x| x % 3 != 0).collect();
+        let got = sc
+            .parallelize(data.clone(), 5)
+            .map(|x| x * 2)
+            .filter(|x| x % 3 != 0)
+            .collect();
+        got == want
+    });
+}
+
+#[test]
+fn prop_reduce_by_key_equals_hashmap() {
+    let sc = SparkletContext::local(2);
+    forall(
+        25,
+        gen::vec_of(0, 300, |r| (r.next_u32() % 20, r.next_u32() % 100)),
+        |pairs| {
+            let mut want: std::collections::HashMap<u32, u64> = Default::default();
+            for (k, v) in pairs {
+                *want.entry(*k).or_insert(0) += *v as u64;
+            }
+            let got = sc
+                .parallelize(pairs.clone(), 4)
+                .map(|(k, v)| (k, v as u64))
+                .reduce_by_key(|a, b| a + b)
+                .collect_as_map();
+            got == want
+        },
+    );
+}
+
+#[test]
+fn prop_group_by_key_partitions_values() {
+    let sc = SparkletContext::local(2);
+    forall(
+        20,
+        gen::vec_of(1, 200, |r| (r.next_u32() % 10, r.next_u32())),
+        |pairs| {
+            let grouped = sc.parallelize(pairs.clone(), 3).group_by_key().collect();
+            let total: usize = grouped.iter().map(|(_, vs)| vs.len()).sum();
+            // every value lands exactly once, under its own key
+            total == pairs.len()
+                && grouped.iter().all(|(k, vs)| {
+                    vs.iter().all(|v| pairs.contains(&(*k, *v)))
+                })
+        },
+    );
+}
+
+#[test]
+fn prop_coalesce_preserves_content_order() {
+    let sc = SparkletContext::local(2);
+    forall(20, gen::vec_of(0, 300, |r| r.next_u32()), |data| {
+        let rdd = sc.parallelize(data.clone(), 7).coalesce(2);
+        rdd.collect() == *data
+    });
+}
+
+#[test]
+fn prop_zip_with_index_dense() {
+    let sc = SparkletContext::local(3);
+    forall(20, gen::vec_of(0, 150, |r| r.next_u32()), |data| {
+        let indexed = sc.parallelize(data.clone(), 4).zip_with_index().collect();
+        indexed
+            .iter()
+            .enumerate()
+            .all(|(i, (x, idx))| *idx == i as u64 && *x == data[i])
+    });
+}

@@ -1,0 +1,262 @@
+//! End-to-end tests of the XLA/PJRT bridge: HLO-text artifacts compiled
+//! by `python/compile/aot.py`, loaded and executed from rust, checked
+//! against the native implementations.
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (with a loud message) otherwise so `cargo test` works in a fresh
+//! checkout.
+
+use rdd_eclat::fim::sequential::eclat_sequential;
+use rdd_eclat::fim::trimatrix::TriMatrix;
+use rdd_eclat::runtime::{artifacts_available, artifacts_dir, ArtifactRegistry, XlaFim};
+use rdd_eclat::util::{Bitmap, SplitMix64};
+
+fn need_artifacts() -> bool {
+    if artifacts_available() {
+        true
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        false
+    }
+}
+
+#[test]
+fn registry_loads_and_reports_platform() {
+    if !need_artifacts() {
+        return;
+    }
+    let mut reg = ArtifactRegistry::new().unwrap();
+    let art = reg.load(&artifacts_dir(), "intersect_64x256").unwrap();
+    assert_eq!(art.shape, (64, 256));
+    assert!(!reg.platform().is_empty());
+}
+
+#[test]
+fn manifest_lists_artifacts() {
+    if !need_artifacts() {
+        return;
+    }
+    let names = ArtifactRegistry::manifest(&artifacts_dir()).unwrap();
+    assert!(names.iter().any(|n| n.starts_with("intersect_")));
+    assert!(names.iter().any(|n| n.starts_with("cooc_pair_")));
+    assert!(names.contains(&"model".to_string()));
+}
+
+#[test]
+fn intersect_batch_matches_native() {
+    if !need_artifacts() {
+        return;
+    }
+    let mut fim = XlaFim::load(&artifacts_dir()).unwrap();
+    let mut rng = SplitMix64::new(0xA11CE);
+    // universe larger than one word-tile to exercise word chunking:
+    // 1024 words/tile = 32768 tids; use 40000
+    let universe = 40_000usize;
+    let n = 300usize; // > 256 rows/tile to exercise row chunking
+    let make = |rng: &mut SplitMix64| {
+        let mut b = Bitmap::new(universe);
+        for i in 0..universe {
+            if rng.gen_bool(0.05) {
+                b.set(i);
+            }
+        }
+        b
+    };
+    let xs: Vec<Bitmap> = (0..n).map(|_| make(&mut rng)).collect();
+    let ys: Vec<Bitmap> = (0..n).map(|_| make(&mut rng)).collect();
+    let xr: Vec<&Bitmap> = xs.iter().collect();
+    let yr: Vec<&Bitmap> = ys.iter().collect();
+    let (inter, sup) = fim.intersect_batch(&xr, &yr).unwrap();
+    assert_eq!(inter.len(), n);
+    for i in 0..n {
+        let want = xs[i].and(&ys[i]);
+        assert_eq!(inter[i], want, "row {i} bitmap mismatch");
+        assert_eq!(sup[i] as usize, want.count(), "row {i} support mismatch");
+    }
+}
+
+#[test]
+fn intersect_batch_empty_input() {
+    if !need_artifacts() {
+        return;
+    }
+    let mut fim = XlaFim::load(&artifacts_dir()).unwrap();
+    let (inter, sup) = fim.intersect_batch(&[], &[]).unwrap();
+    assert!(inter.is_empty() && sup.is_empty());
+}
+
+#[test]
+fn intersect_minsup_fused_matches_native() {
+    if !need_artifacts() {
+        return;
+    }
+    let mut fim = XlaFim::load(&artifacts_dir()).unwrap();
+    let mut rng = SplitMix64::new(0x315EED);
+    let universe = 8_192usize; // 256 words — single fused tile
+    let n = 100usize;
+    let make = |rng: &mut SplitMix64, d: f64| {
+        let mut b = Bitmap::new(universe);
+        for i in 0..universe {
+            if rng.gen_bool(d) {
+                b.set(i);
+            }
+        }
+        b
+    };
+    let xs: Vec<Bitmap> = (0..n).map(|_| make(&mut rng, 0.1)).collect();
+    let ys: Vec<Bitmap> = (0..n).map(|_| make(&mut rng, 0.1)).collect();
+    let xr: Vec<&Bitmap> = xs.iter().collect();
+    let yr: Vec<&Bitmap> = ys.iter().collect();
+    let min_sup = 80u32;
+    let (sup, mask) = fim.intersect_minsup_batch(&xr, &yr, min_sup).unwrap();
+    for i in 0..n {
+        let want = xs[i].and_count(&ys[i]) as u32;
+        assert_eq!(sup[i], want, "row {i}");
+        assert_eq!(mask[i], want >= min_sup, "row {i} mask");
+    }
+    // threshold is a runtime operand: re-run with a different min_sup
+    let (_, mask0) = fim.intersect_minsup_batch(&xr, &yr, 0).unwrap();
+    assert!(mask0.iter().all(|&m| m));
+    // oversized universe is rejected, not silently wrong
+    let big = Bitmap::new(64 * 1024 * 32);
+    assert!(fim.intersect_minsup_batch(&[&big], &[&big], 1).is_err());
+}
+
+#[test]
+fn cooc_matches_native_trimatrix() {
+    if !need_artifacts() {
+        return;
+    }
+    let mut fim = XlaFim::load(&artifacts_dir()).unwrap();
+    let mut rng = SplitMix64::new(0xC00C);
+    // item count above one 256-row tile to exercise block-pair sweep
+    let n_items = 300usize;
+    let n_txns = 3_000usize;
+    // random transactions of ~8 items
+    let txns: Vec<Vec<u32>> = (0..n_txns)
+        .map(|_| {
+            let mut t: Vec<u32> = (0..n_items as u32)
+                .filter(|_| rng.gen_bool(8.0 / n_items as f64))
+                .collect();
+            if t.is_empty() {
+                t.push(rng.gen_range(n_items) as u32);
+            }
+            t
+        })
+        .collect();
+    // native matrix
+    let mut native = TriMatrix::new(n_items);
+    for t in &txns {
+        native.update_transaction(t);
+    }
+    // per-item bitmaps -> xla matrix
+    let mut bitmaps: Vec<Bitmap> = (0..n_items).map(|_| Bitmap::new(n_txns)).collect();
+    for (tid, t) in txns.iter().enumerate() {
+        for &i in t {
+            bitmaps[i as usize].set(tid);
+        }
+    }
+    let refs: Vec<&Bitmap> = bitmaps.iter().collect();
+    let xla_tri = fim.cooc_tri_matrix(&refs).unwrap();
+    for i in 0..n_items as u32 {
+        for j in (i + 1)..n_items as u32 {
+            assert_eq!(
+                xla_tri.get_support(i, j),
+                native.get_support(i, j),
+                "pair ({i},{j})"
+            );
+        }
+    }
+}
+
+#[test]
+fn cooc_from_vertical_roundtrip() {
+    if !need_artifacts() {
+        return;
+    }
+    let mut fim = XlaFim::load(&artifacts_dir()).unwrap();
+    let txns = vec![
+        vec![0u32, 1, 2],
+        vec![0, 1],
+        vec![1, 2],
+        vec![0, 2],
+        vec![0, 1, 2],
+    ];
+    let n = txns.len();
+    let mut vertical: Vec<(u32, Vec<u32>)> = Vec::new();
+    for item in 0..3u32 {
+        let tids: Vec<u32> = txns
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.contains(&item))
+            .map(|(i, _)| i as u32)
+            .collect();
+        vertical.push((item, tids));
+    }
+    let tri = fim.cooc_from_vertical(&vertical, n).unwrap();
+    assert_eq!(tri.get_support(0, 1), 3);
+    assert_eq!(tri.get_support(0, 2), 3);
+    assert_eq!(tri.get_support(1, 2), 3);
+}
+
+#[test]
+fn xla_phase2_drives_full_mine() {
+    // Use the XLA triangular matrix as the Phase-2 of a real mine and
+    // check the itemsets equal the sequential oracle. This is the
+    // "three layers compose" smoke test at the algorithm level.
+    if !need_artifacts() {
+        return;
+    }
+    let mut fim = XlaFim::load(&artifacts_dir()).unwrap();
+    let db = rdd_eclat::data::Dataset::T10I4D100K.generate_scaled(11, 0.01); // 1K txns
+    let n = db.len();
+    let min_sup = rdd_eclat::fim::types::abs_min_sup(0.01, n);
+
+    // vertical db over frequent items, ranked dense
+    use std::collections::HashMap;
+    let mut tidsets: HashMap<u32, Vec<u32>> = HashMap::new();
+    for (tid, t) in db.iter().enumerate() {
+        for &i in t {
+            tidsets.entry(i).or_default().push(tid as u32);
+        }
+    }
+    let mut vertical: Vec<(u32, Vec<u32>)> = tidsets
+        .into_iter()
+        .filter(|(_, tids)| tids.len() as u32 >= min_sup)
+        .collect();
+    vertical.sort_by_key(|(item, tids)| (tids.len(), *item));
+
+    let tri = fim.cooc_from_vertical(&vertical, n).expect("xla cooc");
+
+    // run class construction with the XLA matrix as pruning oracle
+    use rdd_eclat::fim::eqclass::{bottom_up, build_classes};
+    use rdd_eclat::fim::tidset::{TidOps, VecTidset};
+    use rdd_eclat::fim::types::FrequentItemset;
+    let rank: HashMap<u32, u32> = vertical
+        .iter()
+        .enumerate()
+        .map(|(r, (item, _))| (*item, r as u32))
+        .collect();
+    let vts: Vec<(u32, VecTidset)> = vertical
+        .iter()
+        .map(|(item, tids)| (*item, VecTidset::from_tids(tids, n)))
+        .collect();
+    let mut out: Vec<FrequentItemset> = vts
+        .iter()
+        .map(|(item, ts)| FrequentItemset::new(vec![*item], ts.support() as u32))
+        .collect();
+    let mut twos = Vec::new();
+    let classes = build_classes(&vts, min_sup, Some(&tri), |item| rank[&item], &mut twos);
+    out.extend(twos);
+    for (_, c) in &classes {
+        bottom_up(c, min_sup, &mut out);
+    }
+    let got = rdd_eclat::fim::MiningResult::new(out);
+    let oracle = eclat_sequential(&db, min_sup);
+    assert!(
+        got.same_as(&oracle),
+        "XLA-phase2 mine: {} itemsets vs oracle {}",
+        got.len(),
+        oracle.len()
+    );
+}

@@ -1,0 +1,400 @@
+//! Integration tests for the Sparklet engine: multi-stage jobs, shuffle
+//! semantics, caching, lineage recovery, failure injection.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use rdd_eclat::sparklet::{
+    pair::Aggregator, HashPartitioner, PairRdd, SparkletConf, SparkletContext,
+};
+
+fn sc(cores: usize) -> SparkletContext {
+    SparkletContext::local(cores)
+}
+
+#[test]
+fn wordcount_end_to_end() {
+    let sc = sc(4);
+    let lines = vec![
+        "the quick brown fox".to_string(),
+        "the lazy dog".to_string(),
+        "the quick dog".to_string(),
+    ];
+    let rdd = sc.parallelize(lines, 2);
+    let counts: HashMap<String, u32> = rdd
+        .flat_map(|l| l.split(' ').map(|w| w.to_string()).collect::<Vec<_>>())
+        .map_to_pair(|w| (w, 1u32))
+        .reduce_by_key(|a, b| a + b)
+        .collect_as_map();
+    assert_eq!(counts["the"], 3);
+    assert_eq!(counts["quick"], 2);
+    assert_eq!(counts["dog"], 2);
+    assert_eq!(counts["fox"], 1);
+    assert_eq!(counts.len(), 6);
+}
+
+#[test]
+fn reduce_by_key_matches_hashmap_oracle() {
+    let sc = sc(4);
+    let mut rng = rdd_eclat::util::SplitMix64::new(42);
+    let pairs: Vec<(u32, u64)> = (0..5000)
+        .map(|_| (rng.gen_range(100) as u32, rng.gen_range(10) as u64))
+        .collect();
+    let mut oracle: HashMap<u32, u64> = HashMap::new();
+    for (k, v) in &pairs {
+        *oracle.entry(*k).or_insert(0) += v;
+    }
+    let got = sc
+        .parallelize(pairs, 8)
+        .reduce_by_key(|a, b| a + b)
+        .collect_as_map();
+    assert_eq!(got, oracle);
+}
+
+#[test]
+fn group_by_key_groups_everything() {
+    let sc = sc(3);
+    let pairs: Vec<(u8, u32)> = (0..1000u32).map(|i| ((i % 7) as u8, i)).collect();
+    let grouped = sc.parallelize(pairs, 5).group_by_key().collect();
+    assert_eq!(grouped.len(), 7);
+    let mut total = 0;
+    for (k, vs) in grouped {
+        assert!(vs.iter().all(|v| (v % 7) as u8 == k));
+        total += vs.len();
+    }
+    assert_eq!(total, 1000);
+}
+
+#[test]
+fn partition_by_routes_keys() {
+    let sc = sc(4);
+    let pairs: Vec<(usize, &'static str)> = (0..100).map(|i| (i, "x")).collect();
+    let part = Arc::new(HashPartitioner::new(5));
+    let p2 = Arc::clone(&part);
+    let rdd = sc.parallelize(pairs, 4).partition_by(part);
+    assert_eq!(rdd.num_partitions(), 5);
+    let glommed = rdd.glom().collect();
+    use rdd_eclat::sparklet::Partitioner;
+    for (pi, partition) in glommed.iter().enumerate() {
+        for (k, _) in partition {
+            assert_eq!(p2.partition(k), pi, "key {k} in wrong partition {pi}");
+        }
+    }
+}
+
+#[test]
+fn chained_shuffles_two_stages() {
+    // (x % 10, x) -> sum per key -> re-key by sum % 3 -> group
+    let sc = sc(4);
+    let rdd = sc.parallelize((0..1000u64).collect::<Vec<_>>(), 6);
+    let sums = rdd
+        .map_to_pair(|x| (x % 10, x))
+        .reduce_by_key(|a, b| a + b);
+    let regrouped = sums
+        .map_to_pair(|(_, sum)| (sum % 3, sum))
+        .group_by_key()
+        .collect();
+    let total: u64 = regrouped.iter().flat_map(|(_, v)| v.iter()).sum();
+    assert_eq!(total, (0..1000u64).sum::<u64>());
+}
+
+#[test]
+fn combine_by_key_custom_aggregator() {
+    let sc = sc(2);
+    let pairs: Vec<(u8, f64)> = vec![(1, 2.0), (1, 4.0), (2, 6.0), (1, 6.0), (2, 10.0)];
+    // mean per key via (sum, count) combiner
+    let agg = Aggregator::new(
+        |v: f64| (v, 1usize),
+        |c: &mut (f64, usize), v: f64| {
+            c.0 += v;
+            c.1 += 1;
+        },
+        |c: &mut (f64, usize), o: (f64, usize)| {
+            c.0 += o.0;
+            c.1 += o.1;
+        },
+    );
+    let means: HashMap<u8, f64> = sc
+        .parallelize(pairs, 3)
+        .combine_by_key(agg, Arc::new(HashPartitioner::new(2)), true)
+        .map_values(|(s, n)| s / n as f64)
+        .collect_as_map();
+    assert_eq!(means[&1], 4.0);
+    assert_eq!(means[&2], 8.0);
+}
+
+#[test]
+fn coalesce_preserves_order() {
+    let sc = sc(4);
+    let data: Vec<u32> = (0..100).collect();
+    let rdd = sc.parallelize(data.clone(), 8).coalesce(1);
+    assert_eq!(rdd.num_partitions(), 1);
+    assert_eq!(rdd.collect(), data);
+}
+
+#[test]
+fn repartition_redistributes_all() {
+    let sc = sc(4);
+    let data: Vec<u32> = (0..1000).collect();
+    let rdd = sc.parallelize(data.clone(), 2).repartition(8);
+    assert_eq!(rdd.num_partitions(), 8);
+    let mut got = rdd.collect();
+    got.sort_unstable();
+    assert_eq!(got, data);
+    // reasonably balanced
+    let sizes: Vec<usize> = rdd.glom().collect().iter().map(|p| p.len()).collect();
+    assert!(sizes.iter().all(|&s| s > 50), "unbalanced: {sizes:?}");
+}
+
+#[test]
+fn zip_with_index_is_global_and_ordered() {
+    let sc = sc(3);
+    let data: Vec<String> = (0..57).map(|i| format!("row{i}")).collect();
+    let indexed = sc.parallelize(data.clone(), 5).zip_with_index().collect();
+    for (i, (x, idx)) in indexed.iter().enumerate() {
+        assert_eq!(*idx, i as u64);
+        assert_eq!(*x, data[i]);
+    }
+}
+
+#[test]
+fn sort_by_key_total_order() {
+    let sc = sc(4);
+    let mut rng = rdd_eclat::util::SplitMix64::new(7);
+    let pairs: Vec<(u64, u64)> = (0..2000).map(|i| (rng.next_u64() % 500, i)).collect();
+    let sorted = sc.parallelize(pairs.clone(), 6).sort_by_key().collect();
+    assert_eq!(sorted.len(), pairs.len());
+    for w in sorted.windows(2) {
+        assert!(w[0].0 <= w[1].0);
+    }
+}
+
+#[test]
+fn join_matches_nested_loop() {
+    let sc = sc(2);
+    let left = sc.parallelize(vec![(1u8, "a"), (2, "b"), (1, "c")], 2);
+    let right = sc.parallelize(vec![(1u8, 10u32), (3, 30)], 2);
+    let mut got = left.join(&right).collect();
+    got.sort_by_key(|(k, (v, w))| (*k, v.to_string(), *w));
+    assert_eq!(got, vec![(1, ("a", 10)), (1, ("c", 10))]);
+}
+
+#[test]
+fn caching_avoids_recompute() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let sc = sc(2);
+    let computed = Arc::new(AtomicUsize::new(0));
+    let c2 = Arc::clone(&computed);
+    let rdd = sc
+        .parallelize((0..100u32).collect::<Vec<_>>(), 4)
+        .map(move |x| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            x * 2
+        })
+        .cache();
+    assert_eq!(rdd.count(), 100);
+    let first_computations = computed.load(Ordering::SeqCst);
+    assert_eq!(first_computations, 100);
+    // second action hits the cache
+    assert_eq!(rdd.count(), 100);
+    assert_eq!(computed.load(Ordering::SeqCst), first_computations);
+    // eviction (executor loss) triggers lineage recompute
+    sc.cache().evict(rdd.id(), 0);
+    assert_eq!(rdd.count(), 100);
+    assert!(computed.load(Ordering::SeqCst) > first_computations);
+}
+
+#[test]
+fn failure_injection_recovers_via_lineage() {
+    let conf = SparkletConf::new("faulty")
+        .with_cores(4)
+        .with_failure_injection(0.5, 1234)
+        .with_max_task_failures(6);
+    let sc = SparkletContext::new(conf);
+    let data: Vec<u64> = (0..10_000).collect();
+    let sum: u64 = sc
+        .parallelize(data, 16)
+        .map(|x| x * 3)
+        .map_to_pair(|x| (x % 5, x))
+        .reduce_by_key(|a, b| a + b)
+        .values()
+        .collect()
+        .iter()
+        .sum();
+    assert_eq!(sum, (0..10_000u64).map(|x| x * 3).sum::<u64>());
+    assert!(
+        sc.metrics().total_retries() > 0,
+        "failure injection should have caused retries"
+    );
+}
+
+#[test]
+fn metrics_record_stages() {
+    let sc = sc(2);
+    let rdd = sc.parallelize((0..100u32).collect::<Vec<_>>(), 4);
+    let _ = rdd
+        .map_to_pair(|x| (x % 3, x))
+        .reduce_by_key(|a, b| a + b)
+        .collect();
+    let stages = sc.metrics().stages();
+    use rdd_eclat::sparklet::metrics::StageKind;
+    assert!(stages.iter().any(|s| s.kind == StageKind::ShuffleMap));
+    assert!(stages.iter().any(|s| s.kind == StageKind::Result));
+}
+
+#[test]
+fn text_file_roundtrip() {
+    let sc = sc(2);
+    let dir = std::env::temp_dir().join("sparklet_test_io");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let input = dir.join("input.txt");
+    std::fs::write(&input, "1 2 3\n4 5\n6\n").unwrap();
+    let rdd = sc.text_file(input.to_str().unwrap(), 1).unwrap();
+    assert_eq!(rdd.count(), 3);
+    let out_dir = dir.join("out");
+    rdd.save_as_text_file(out_dir.to_str().unwrap()).unwrap();
+    let saved = std::fs::read_to_string(out_dir.join("part-00000")).unwrap();
+    assert_eq!(saved, "1 2 3\n4 5\n6\n");
+}
+
+#[test]
+fn sample_is_deterministic_and_proportional() {
+    let sc = sc(4);
+    let rdd = sc.parallelize((0..10_000u32).collect::<Vec<_>>(), 8);
+    let a = rdd.sample(0.1, 99).collect();
+    let b = rdd.sample(0.1, 99).collect();
+    assert_eq!(a, b, "same seed must give same sample");
+    let frac = a.len() as f64 / 10_000.0;
+    assert!((0.07..0.13).contains(&frac), "fraction {frac}");
+}
+
+#[test]
+fn distinct_via_reduce() {
+    let sc = sc(2);
+    let data = vec![1u32, 2, 2, 3, 3, 3, 4];
+    let mut got: Vec<u32> = sc
+        .parallelize(data, 3)
+        .map_to_pair(|x| (x, ()))
+        .reduce_by_key(|_, _| ())
+        .keys()
+        .collect();
+    got.sort_unstable();
+    assert_eq!(got, vec![1, 2, 3, 4]);
+}
+
+#[test]
+fn union_concatenates() {
+    let sc = sc(2);
+    let a = sc.parallelize(vec![1u8, 2], 1);
+    let b = sc.parallelize(vec![3u8, 4], 2);
+    let u = a.union(&b);
+    assert_eq!(u.num_partitions(), 3);
+    assert_eq!(u.collect(), vec![1, 2, 3, 4]);
+}
+
+#[test]
+fn accumulator_from_tasks() {
+    let sc = sc(4);
+    let acc = sc.accumulator(|| 0u64);
+    let acc2 = acc.clone();
+    sc.parallelize((0..1000u64).collect::<Vec<_>>(), 8)
+        .foreach_partition(move |_, items| {
+            acc2.add(items.iter().sum::<u64>());
+        });
+    assert_eq!(acc.value(), (0..1000u64).sum::<u64>());
+}
+
+#[test]
+fn broadcast_shared_with_tasks() {
+    let sc = sc(4);
+    let lookup: HashMap<u32, &'static str> =
+        vec![(0, "zero"), (1, "one")].into_iter().collect();
+    let b = sc.broadcast(lookup);
+    let rdd = sc.parallelize(vec![0u32, 1, 0, 1, 1], 2);
+    let named: Vec<&'static str> = rdd.map(move |x| b.value()[&x]).collect();
+    assert_eq!(named, vec!["zero", "one", "zero", "one", "one"]);
+}
+
+#[test]
+fn aggregate_by_key_mean() {
+    let sc = sc(3);
+    let pairs = vec![(1u8, 2.0f64), (1, 4.0), (2, 6.0), (1, 6.0), (2, 10.0)];
+    let means: HashMap<u8, f64> = sc
+        .parallelize(pairs, 3)
+        .aggregate_by_key(
+            (0.0f64, 0usize),
+            |c, v| {
+                c.0 += v;
+                c.1 += 1;
+            },
+            |c, o| {
+                c.0 += o.0;
+                c.1 += o.1;
+            },
+        )
+        .map_values(|(s, n)| s / n as f64)
+        .collect_as_map();
+    assert_eq!(means[&1], 4.0);
+    assert_eq!(means[&2], 8.0);
+}
+
+#[test]
+fn fold_by_key_max() {
+    let sc = sc(2);
+    let pairs: Vec<(u8, u32)> = vec![(1, 5), (2, 9), (1, 12), (2, 3)];
+    let maxes = sc
+        .parallelize(pairs, 2)
+        .fold_by_key(0, |a, b| a.max(b))
+        .collect_as_map();
+    assert_eq!(maxes[&1], 12);
+    assert_eq!(maxes[&2], 9);
+}
+
+#[test]
+fn cogroup_collects_both_sides() {
+    let sc = sc(2);
+    let a = sc.parallelize(vec![(1u8, "x"), (1, "y"), (2, "z")], 2);
+    let b = sc.parallelize(vec![(1u8, 10u32), (3, 30)], 2);
+    let mut got = a.cogroup(&b).collect();
+    got.sort_by_key(|(k, _)| *k);
+    assert_eq!(got.len(), 3);
+    let (k1, (vs1, ws1)) = &got[0];
+    assert_eq!(*k1, 1);
+    let mut vs1 = vs1.clone();
+    vs1.sort();
+    assert_eq!(vs1, vec!["x", "y"]);
+    assert_eq!(ws1, &vec![10]);
+    assert_eq!(got[1], (2, (vec!["z"], vec![])));
+    assert_eq!(got[2], (3, (vec![], vec![30])));
+}
+
+#[test]
+fn count_by_value_and_take_ordered() {
+    let sc = sc(2);
+    let rdd = sc.parallelize(vec![3u32, 1, 3, 2, 3, 1], 3);
+    let counts = rdd.count_by_value();
+    assert_eq!(counts[&3], 3);
+    assert_eq!(counts[&1], 2);
+    assert_eq!(counts[&2], 1);
+    let rdd2 = sc.parallelize((0..100u32).rev().collect::<Vec<_>>(), 5);
+    assert_eq!(rdd2.take_ordered(4), vec![0, 1, 2, 3]);
+    assert_eq!(rdd2.top(3), vec![99, 98, 97]);
+}
+
+#[test]
+fn shared_parent_shuffle_runs_once() {
+    // Two actions over the same shuffled rdd: second should reuse the
+    // completed shuffle (is_completed guard).
+    let sc = sc(2);
+    let pairs = sc
+        .parallelize((0..100u32).map(|i| (i % 5, i)).collect::<Vec<_>>(), 4)
+        .reduce_by_key(|a, b| a + b);
+    let n1 = pairs.count();
+    let stages_after_first = sc.metrics().stages().len();
+    let n2 = pairs.count();
+    let stages_after_second = sc.metrics().stages().len();
+    assert_eq!(n1, n2);
+    // Second job adds only a result stage, not another map stage.
+    assert_eq!(stages_after_second - stages_after_first, 1);
+}
