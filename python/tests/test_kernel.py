@@ -6,6 +6,10 @@ signal for everything the rust runtime executes.
 
 import numpy as np
 import pytest
+
+# hypothesis is not part of the offline image; skip this module cleanly
+# (rather than erroring at collection) when it is missing.
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

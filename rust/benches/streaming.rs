@@ -1,0 +1,136 @@
+//! Bench target: incremental sliding-window Eclat vs a full per-window
+//! re-mine, across window overlap ratios.
+//!
+//! The incremental miner's claim is that a window slide only pays for
+//! the window's *edges* (expired + new tids) plus the border of the
+//! itemset lattice; the larger the overlap between consecutive windows,
+//! the bigger the win over re-running RDD-Eclat from scratch. Sweeps
+//! slide ∈ {2, 4, 8} over an 8-batch window (75%, 50%, 0% overlap) and
+//! reports per-window mine times for both paths, plus the miner's work
+//! counters (cache hits / delta-pruned / recomputed).
+
+use std::collections::VecDeque;
+
+use rdd_eclat::coordinator::ExperimentConfig;
+use rdd_eclat::data::Dataset;
+use rdd_eclat::fim::eclat::{mine_eclat_vec, EclatConfig, EclatVariant};
+use rdd_eclat::fim::streaming::{IncrementalEclat, StreamingEclatConfig};
+use rdd_eclat::fim::types::abs_min_sup;
+use rdd_eclat::fim::Transaction;
+use rdd_eclat::sparklet::SparkletContext;
+
+const WINDOW: usize = 8; // batches per window
+const MEASURED_WINDOWS: usize = 6;
+const BATCH_TXNS: usize = 1_250; // ~10k transactions per window
+const MIN_SUP_FRAC: f64 = 0.01;
+
+fn main() {
+    let cfg = ExperimentConfig::default();
+    let dataset = Dataset::T10I4D100K;
+    let batch_scale = BATCH_TXNS as f64 / dataset.table1_row().0 as f64;
+    let min_sup = abs_min_sup(MIN_SUP_FRAC, WINDOW * BATCH_TXNS);
+    let sc = SparkletContext::local(cfg.cores);
+
+    let mut suite = rdd_eclat::util::bench::BenchSuite::new(
+        "streaming_window",
+        "incremental vs full re-mine per sliding window (8-batch window, T10)",
+    );
+
+    for slide in [2usize, 4, 8] {
+        let overlap = 100.0 * (WINDOW - slide) as f64 / WINDOW as f64;
+        let gen_batch = |t: usize| -> Vec<Transaction> {
+            dataset.generate_scaled(
+                cfg.seed.wrapping_add(t as u64).wrapping_mul(0x9E37_79B9),
+                batch_scale,
+            )
+        };
+
+        let mut miner = IncrementalEclat::new(StreamingEclatConfig::new(min_sup, WINDOW, slide));
+        let mut history: VecDeque<Vec<Transaction>> = VecDeque::new();
+        let mut inc_ms: Vec<f64> = Vec::new();
+        let mut full_ms: Vec<f64> = Vec::new();
+        let mut t = 0usize;
+
+        // Warmup: fill the first window and mine it once (the first mine
+        // is a cold full build for both paths).
+        while t < WINDOW {
+            let b = gen_batch(t);
+            history.push_back(b.clone());
+            miner.push_batch(&b);
+            t += 1;
+        }
+        while history.len() > WINDOW {
+            history.pop_front();
+        }
+        miner.mine_window();
+
+        // Steady state: each iteration slides by `slide` batches and
+        // mines the window both ways.
+        for _ in 0..MEASURED_WINDOWS {
+            for _ in 0..slide {
+                let b = gen_batch(t);
+                history.push_back(b.clone());
+                miner.push_batch(&b);
+                t += 1;
+            }
+            while history.len() > WINDOW {
+                history.pop_front();
+            }
+
+            let t0 = std::time::Instant::now();
+            let inc = miner.mine_window();
+            inc_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+
+            let window_txns: Vec<Transaction> = history.iter().flatten().cloned().collect();
+            let t1 = std::time::Instant::now();
+            let full = mine_eclat_vec(
+                &sc,
+                window_txns,
+                &EclatConfig::new(EclatVariant::V5, min_sup)
+                    .with_tri_matrix(dataset.tri_matrix_mode())
+                    .with_p(cfg.p),
+            );
+            full_ms.push(t1.elapsed().as_secs_f64() * 1e3);
+
+            assert!(
+                inc.same_as(&full),
+                "slide {slide}: incremental and full re-mine disagree"
+            );
+        }
+
+        eprintln!(
+            "  slide {slide} ({overlap:.0}% overlap): {}",
+            miner.stats()
+        );
+        suite.record("incremental", "overlap%", overlap, inc_ms);
+        suite.record("full-remine", "overlap%", overlap, full_ms);
+    }
+
+    suite.finish();
+
+    println!("per-window medians ({MEASURED_WINDOWS} windows each):");
+    for slide in [2usize, 4, 8] {
+        let overlap = 100.0 * (WINDOW - slide) as f64 / WINDOW as f64;
+        let inc = suite.median("incremental", overlap).unwrap();
+        let full = suite.median("full-remine", overlap).unwrap();
+        let verdict = if inc < full {
+            "✓"
+        } else if overlap == 0.0 {
+            "– (no overlap: full rebuild either way)"
+        } else {
+            "✗"
+        };
+        println!(
+            "  overlap {overlap:>4.0}%: incremental {inc:>8.1} ms  vs  full {full:>8.1} ms  \
+             ({:.1}x) {verdict}",
+            full / inc.max(1e-6)
+        );
+        // The acceptance bar: with >= 50% window overlap the incremental
+        // path must beat a from-scratch re-mine.
+        assert!(
+            overlap < 50.0 || inc < full,
+            "incremental median ({inc:.1} ms) not below full re-mine ({full:.1} ms) \
+             at {overlap:.0}% overlap"
+        );
+    }
+}

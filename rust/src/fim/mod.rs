@@ -4,7 +4,9 @@
 //! [`eqclass`]), the sequential oracles ([`sequential`]), the five
 //! RDD-Eclat variants ([`eclat`]) and the RDD-Apriori / YAFIM baseline
 //! ([`apriori`]), the paper's equivalence-class partitioners
-//! ([`partitioners`]), and association-rule generation ([`rules`]).
+//! ([`partitioners`]), association-rule generation ([`rules`]), and the
+//! incremental sliding-window miner for the streaming layer
+//! ([`streaming`]).
 
 pub mod apriori;
 pub mod eclat;
@@ -14,11 +16,13 @@ pub mod postprocess;
 pub mod partitioners;
 pub mod rules;
 pub mod sequential;
+pub mod streaming;
 pub mod tidset;
 pub mod trie;
 pub mod trimatrix;
 pub mod types;
 
 pub use eclat::{mine_eclat, EclatConfig, EclatVariant};
+pub use streaming::{IncrementalEclat, StreamingEclatConfig};
 pub use tidset::{BitmapTidset, TidOps, VecTidset};
 pub use types::{FrequentItemset, Item, MiningResult, Transaction};

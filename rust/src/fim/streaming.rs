@@ -1,0 +1,567 @@
+//! Incremental sliding-window RDD-Eclat over the streaming layer.
+//!
+//! A window slide changes only the *edges* of the transaction window:
+//! `expired` tids leave, `new` tids arrive, and the (usually much
+//! larger) `kept` middle is shared with the previous window. Re-running
+//! full Eclat per window redoes all of the kept region's intersection
+//! work; [`IncrementalEclat`] reuses it through an exact *lattice
+//! cache*:
+//!
+//! * **Vertical deltas** — per-item window tidsets are maintained
+//!   incrementally: new batch tids are appended (tids are globally
+//!   monotone, so appends keep them sorted) and expired tids are
+//!   retired with a binary-searched drain.
+//! * **Lattice cache** — every frequent itemset of the previous window
+//!   keeps its tidset. On the next window its new tidset is the cached
+//!   suffix that survived expiry plus an intersection restricted to the
+//!   *new* tid region — O(delta), not O(window).
+//! * **Delta pruning** — a candidate *not* in the cache was infrequent
+//!   in the previous window (`sup ≤ min_sup − 1`). Its support can only
+//!   have grown through new tids, so if its members share no new tids it
+//!   is still infrequent and its whole subtree is pruned after an
+//!   O(delta) probe. Only *border* itemsets — infrequent before, active
+//!   in the delta — pay a full kept-region intersection.
+//!
+//! The result is exact: every window's itemsets equal a from-scratch
+//! mine of the window's transactions (asserted by
+//! `tests/streaming_property.rs` across random batch/window/slide
+//! combinations). `min_sup` is an absolute count and must stay fixed
+//! across a stream — the cache-absence bound above is relative to it.
+//!
+//! Transaction ids are `u32` and globally monotone; a stream is limited
+//! to ~4.3 B transactions before the counter would wrap.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::sparklet::streaming::DStream;
+use crate::util::hash::FxHashMap;
+
+use super::eclat::{mine_eclat_vec, EclatConfig};
+use super::tidset::VecTidset;
+use super::types::{FrequentItemset, Item, MiningResult, Transaction};
+
+/// Parameters of a streaming mine: absolute support threshold plus the
+/// window geometry in batches.
+#[derive(Debug, Clone)]
+pub struct StreamingEclatConfig {
+    /// Absolute minimum support count per window (fixed for the stream).
+    pub min_sup: u32,
+    /// Window length in batches.
+    pub window: usize,
+    /// Slide length in batches (`slide == window` ⇒ tumbling).
+    pub slide: usize,
+}
+
+impl StreamingEclatConfig {
+    pub fn new(min_sup: u32, window: usize, slide: usize) -> Self {
+        assert!(min_sup >= 1, "min_sup must be >= 1");
+        assert!(window >= 1, "window must be >= 1 batch");
+        assert!(slide >= 1, "slide must be >= 1 batch");
+        Self {
+            min_sup,
+            window,
+            slide,
+        }
+    }
+}
+
+/// Work counters across all mined windows (the bench's evidence that the
+/// incremental path skips work).
+#[derive(Debug, Clone, Default)]
+pub struct StreamStats {
+    /// Windows mined.
+    pub windows: usize,
+    /// Candidates served from the lattice cache (O(delta) update).
+    pub cache_hits: usize,
+    /// Uncached candidates pruned by an empty delta probe (O(delta)).
+    pub delta_pruned: usize,
+    /// Border candidates that paid a full kept-region intersection.
+    pub recomputed: usize,
+}
+
+impl std::fmt::Display for StreamStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "windows: {}, cache hits: {}, delta-pruned: {}, recomputed: {}",
+            self.windows, self.cache_hits, self.delta_pruned, self.recomputed
+        )
+    }
+}
+
+/// Exact incremental Eclat over a sliding window of transaction batches.
+pub struct IncrementalEclat {
+    cfg: StreamingEclatConfig,
+    /// Next global transaction id.
+    next_tid: u32,
+    /// Total batches ever pushed (drives slide cadence in `attach_*`).
+    batches_pushed: usize,
+    /// Retained batch tid ranges, oldest first: (start_tid, len).
+    batch_ranges: VecDeque<(u32, u32)>,
+    /// Per-item tidsets over the retained batches (sorted, unique).
+    window_items: FxHashMap<Item, Vec<u32>>,
+    /// Frequent itemsets (size ≥ 2) of the last mined window, keyed by
+    /// canonical (sorted) items, with their window tidsets.
+    lattice: FxHashMap<Vec<Item>, Vec<u32>>,
+    /// End tid (exclusive) of the last mined window.
+    prev_hi: u32,
+    has_mined: bool,
+    stats: StreamStats,
+}
+
+/// Immutable per-window mining context.
+struct WindowCtx<'a> {
+    min_sup: usize,
+    /// Window lower bound (inclusive): tids below are expired.
+    lo: u32,
+    /// Boundary between the kept region and newly arrived tids.
+    new_lo: u32,
+    old: &'a FxHashMap<Vec<Item>, Vec<u32>>,
+    /// No previous window ⇒ no cache semantics to lean on.
+    first_window: bool,
+}
+
+impl IncrementalEclat {
+    pub fn new(cfg: StreamingEclatConfig) -> Self {
+        Self {
+            cfg,
+            next_tid: 0,
+            batches_pushed: 0,
+            batch_ranges: VecDeque::new(),
+            window_items: FxHashMap::default(),
+            lattice: FxHashMap::default(),
+            prev_hi: 0,
+            has_mined: false,
+            stats: StreamStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &StreamingEclatConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> &StreamStats {
+        &self.stats
+    }
+
+    /// Total batches ingested so far.
+    pub fn batches_pushed(&self) -> usize {
+        self.batches_pushed
+    }
+
+    /// Tid range `[lo, hi)` the next `mine_window` call will cover.
+    pub fn window_range(&self) -> (u32, u32) {
+        let lo = self
+            .batch_ranges
+            .iter()
+            .rev()
+            .take(self.cfg.window)
+            .last()
+            .map(|&(s, _)| s)
+            .unwrap_or(self.next_tid);
+        (lo, self.next_tid)
+    }
+
+    /// Ingest one batch: assign global tids and fold the batch's vertical
+    /// representation into the per-item window tidsets.
+    pub fn push_batch(&mut self, txns: &[Transaction]) {
+        let start = self.next_tid;
+        // Fail loudly at the documented ~4.3 B-transaction limit instead
+        // of wrapping and silently corrupting the sorted-tid invariant.
+        let len = u32::try_from(txns.len()).expect("batch exceeds u32 transaction ids");
+        let end = start
+            .checked_add(len)
+            .expect("streaming tid space exhausted (u32 transaction ids)");
+        for (i, t) in txns.iter().enumerate() {
+            let tid = start + i as u32;
+            let mut items = t.clone();
+            items.sort_unstable();
+            items.dedup();
+            for item in items {
+                self.window_items.entry(item).or_default().push(tid);
+            }
+        }
+        self.next_tid = end;
+        self.batch_ranges.push_back((start, len));
+        self.batches_pushed += 1;
+    }
+
+    /// Mine the current window (the last `cfg.window` ingested batches),
+    /// updating the lattice cache for the next slide. Returns all
+    /// frequent itemsets of the window with exact supports.
+    pub fn mine_window(&mut self) -> MiningResult {
+        // Retire batches that slid out of the window.
+        while self.batch_ranges.len() > self.cfg.window {
+            self.batch_ranges.pop_front();
+        }
+        let lo = self
+            .batch_ranges
+            .front()
+            .map(|&(s, _)| s)
+            .unwrap_or(self.next_tid);
+        let hi = self.next_tid;
+
+        // Retire expired tids from the vertical DB.
+        self.window_items.retain(|_, tids| {
+            if tids.first().is_some_and(|&t| t < lo) {
+                let cut = tids.partition_point(|&t| t < lo);
+                tids.drain(..cut);
+            }
+            !tids.is_empty()
+        });
+
+        let ctx = WindowCtx {
+            min_sup: self.cfg.min_sup as usize,
+            lo,
+            new_lo: if self.has_mined {
+                self.prev_hi.clamp(lo, hi)
+            } else {
+                lo
+            },
+            old: &self.lattice,
+            first_window: !self.has_mined,
+        };
+
+        // Frequent 1-items in the paper's processing order (support asc).
+        // Borrowed slices, not clones: the 1-item tidsets are the largest
+        // vectors in the system, and copying them per window would make
+        // every mine O(window) regardless of how small the delta is.
+        let mut singles: Vec<(Item, &[u32])> = self
+            .window_items
+            .iter()
+            .filter(|(_, tids)| tids.len() >= ctx.min_sup)
+            .map(|(&item, tids)| (item, tids.as_slice()))
+            .collect();
+        singles.sort_by_key(|(item, tids)| (tids.len(), *item));
+
+        let mut out: Vec<FrequentItemset> = singles
+            .iter()
+            .map(|(item, tids)| FrequentItemset::new(vec![*item], tids.len() as u32))
+            .collect();
+
+        let mut new_lattice: FxHashMap<Vec<Item>, Vec<u32>> = FxHashMap::default();
+        mine_class(
+            &ctx,
+            &[],
+            &singles,
+            &mut new_lattice,
+            &mut out,
+            &mut self.stats,
+        );
+
+        self.lattice = new_lattice;
+        self.prev_hi = hi;
+        self.has_mined = true;
+        self.stats.windows += 1;
+        MiningResult::new(out)
+    }
+}
+
+/// Bottom-Up over an equivalence class, with cache-aware candidate
+/// tidset construction. `members` carry exact current-window tidsets,
+/// borrowed from the vertical DB (top level) or the owned child sets.
+fn mine_class(
+    ctx: &WindowCtx<'_>,
+    prefix: &[Item],
+    members: &[(Item, &[u32])],
+    new_lattice: &mut FxHashMap<Vec<Item>, Vec<u32>>,
+    out: &mut Vec<FrequentItemset>,
+    stats: &mut StreamStats,
+) {
+    for i in 0..members.len() {
+        let (item_i, ts_i) = members[i];
+        let mut child_prefix = prefix.to_vec();
+        child_prefix.push(item_i);
+        let mut child_owned: Vec<(Item, Vec<Item>, Vec<u32>)> = Vec::new();
+        for &(item_j, ts_j) in &members[i + 1..] {
+            let mut key = child_prefix.clone();
+            key.push(item_j);
+            key.sort_unstable();
+            if let Some(tids) = candidate_tidset(ctx, &key, ts_i, ts_j, stats) {
+                if tids.len() >= ctx.min_sup {
+                    out.push(FrequentItemset::new(key.clone(), tids.len() as u32));
+                    child_owned.push((item_j, key, tids));
+                }
+            }
+        }
+        if !child_owned.is_empty() {
+            let child_members: Vec<(Item, &[u32])> = child_owned
+                .iter()
+                .map(|(item, _, tids)| (*item, tids.as_slice()))
+                .collect();
+            mine_class(ctx, &child_prefix, &child_members, new_lattice, out, stats);
+        }
+        // Move the class's keys and tidsets into the next-window lattice
+        // cache only after the subtree is mined: the cache is write-only
+        // during a mine (lookups go to `ctx.old`), so deferring the
+        // inserts lets the recursion borrow the tidsets instead of
+        // cloning each one.
+        for (_, key, tids) in child_owned {
+            new_lattice.insert(key, tids);
+        }
+    }
+}
+
+/// Exact window tidset of the candidate `key` = members i ∪ j, or `None`
+/// when the delta probe proves it infrequent without touching the kept
+/// region.
+fn candidate_tidset(
+    ctx: &WindowCtx<'_>,
+    key: &[Item],
+    ts_i: &[u32],
+    ts_j: &[u32],
+    stats: &mut StreamStats,
+) -> Option<Vec<u32>> {
+    let si = ts_i.partition_point(|&t| t < ctx.new_lo);
+    let sj = ts_j.partition_point(|&t| t < ctx.new_lo);
+    let new_part = VecTidset::intersect_sorted(&ts_i[si..], &ts_j[sj..]);
+    if let Some(cached) = ctx.old.get(key) {
+        // Frequent last window: kept region = cached tids surviving
+        // expiry (cached holds only tids < new_lo by construction).
+        stats.cache_hits += 1;
+        let cut = cached.partition_point(|&t| t < ctx.lo);
+        let mut tids = Vec::with_capacity(cached.len() - cut + new_part.len());
+        tids.extend_from_slice(&cached[cut..]);
+        tids.extend_from_slice(&new_part);
+        Some(tids)
+    } else if !ctx.first_window && new_part.is_empty() {
+        // Infrequent last window (sup ≤ min_sup − 1) and no new
+        // occurrences: sup over the kept region alone cannot have grown,
+        // so the candidate — and by anti-monotonicity its whole subtree —
+        // stays infrequent.
+        stats.delta_pruned += 1;
+        None
+    } else {
+        // Border candidate: infrequent before but active in the delta
+        // (or very first window) — pay the full kept-region intersection.
+        stats.recomputed += 1;
+        let mut tids = VecTidset::intersect_sorted(&ts_i[..si], &ts_j[..sj]);
+        tids.extend_from_slice(&new_part);
+        Some(tids)
+    }
+}
+
+/// Wire an incremental miner onto a transaction DStream: every batch is
+/// ingested; at each slide boundary the window is mined and `sink` is
+/// called with the batch index, the window's itemsets, and the
+/// incremental mine's wall time in milliseconds (for comparison against
+/// a from-scratch re-mine). Returns the shared miner handle (for stats
+/// inspection after the run). The sink runs while the miner lock is
+/// held — don't lock the returned handle from inside it.
+pub fn attach_incremental_eclat(
+    stream: &DStream<Transaction>,
+    cfg: StreamingEclatConfig,
+    sink: impl Fn(usize, &MiningResult, f64) + Send + Sync + 'static,
+) -> Arc<Mutex<IncrementalEclat>> {
+    let miner = Arc::new(Mutex::new(IncrementalEclat::new(cfg.clone())));
+    let handle = Arc::clone(&miner);
+    stream.foreach_rdd(move |t, rdd| {
+        let batch = rdd.collect();
+        let mut m = handle.lock().unwrap();
+        m.push_batch(&batch);
+        // Slide cadence counts *pushed batches*, not global ticks: a
+        // source with slide_interval > 1 only delivers a batch at its
+        // active ticks.
+        if m.batches_pushed() % cfg.slide == 0 {
+            let t0 = std::time::Instant::now();
+            let result = m.mine_window();
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            sink(t, &result, ms);
+        }
+    });
+    miner
+}
+
+/// One verified window, as handed to the `report` callback of
+/// [`attach_checked_incremental_eclat`].
+pub struct CheckedWindow<'a> {
+    /// Tick at which the window fired.
+    pub tick: usize,
+    /// Transactions the window covered (what the full re-mine consumed).
+    pub n_txns: usize,
+    /// The window's frequent itemsets (identical for both paths).
+    pub itemsets: &'a MiningResult,
+    /// Incremental mine wall time, ms.
+    pub inc_ms: f64,
+    /// Full batch re-mine wall time, ms.
+    pub full_ms: f64,
+}
+
+/// [`attach_incremental_eclat`] plus a per-window cross-check: the raw
+/// batches of the current window are retained, re-mined from scratch
+/// with batch RDD-Eclat (`mine_eclat_vec` on the stream's engine, with
+/// the given `eclat` config), and asserted identical to the incremental
+/// result before `report` is called. This is the one implementation of
+/// the verification scaffold the CLI `stream` command and the
+/// `streaming_clickstream` example share.
+pub fn attach_checked_incremental_eclat(
+    stream: &DStream<Transaction>,
+    cfg: StreamingEclatConfig,
+    eclat: EclatConfig,
+    report: impl Fn(&CheckedWindow<'_>) + Send + Sync + 'static,
+) -> Arc<Mutex<IncrementalEclat>> {
+    assert_eq!(
+        eclat.min_sup, cfg.min_sup,
+        "incremental and batch mines must share one min_sup"
+    );
+    let sc = stream.stream_context().spark().clone();
+    // Raw batches of the current window, for the from-scratch re-mine.
+    // Registered before the miner, so it sees each batch first.
+    let history: Arc<Mutex<VecDeque<Vec<Transaction>>>> =
+        Arc::new(Mutex::new(VecDeque::new()));
+    {
+        let history = Arc::clone(&history);
+        let window = cfg.window;
+        stream.foreach_rdd(move |_t, rdd| {
+            let mut h = history.lock().unwrap();
+            h.push_back(rdd.collect());
+            while h.len() > window {
+                h.pop_front();
+            }
+        });
+    }
+    attach_incremental_eclat(stream, cfg, move |t, inc, inc_ms| {
+        let window_txns: Vec<Transaction> =
+            history.lock().unwrap().iter().flatten().cloned().collect();
+        let n_txns = window_txns.len();
+        let t0 = std::time::Instant::now();
+        let full = mine_eclat_vec(&sc, window_txns, &eclat);
+        let full_ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert!(
+            inc.same_as(&full),
+            "window at tick {t}: incremental and full re-mine disagree"
+        );
+        report(&CheckedWindow {
+            tick: t,
+            n_txns,
+            itemsets: inc,
+            inc_ms,
+            full_ms,
+        });
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fim::sequential::eclat_sequential;
+
+    fn batch(v: &[&[Item]]) -> Vec<Transaction> {
+        v.iter().map(|t| t.to_vec()).collect()
+    }
+
+    /// Concatenation of the last `window` batches — the from-scratch view.
+    fn window_txns(batches: &[Vec<Transaction>], upto: usize, window: usize) -> Vec<Transaction> {
+        let lo = (upto + 1).saturating_sub(window);
+        batches[lo..=upto].iter().flatten().cloned().collect()
+    }
+
+    #[test]
+    fn single_window_matches_sequential() {
+        let mut inc = IncrementalEclat::new(StreamingEclatConfig::new(2, 1, 1));
+        let txns = batch(&[&[1, 2, 5], &[2, 4], &[2, 3], &[1, 2, 4], &[1, 3]]);
+        inc.push_batch(&txns);
+        let got = inc.mine_window();
+        let want = eclat_sequential(&txns, 2);
+        assert!(got.same_as(&want), "got {:?}", got.canonical());
+    }
+
+    #[test]
+    fn sliding_windows_match_from_scratch() {
+        let batches = vec![
+            batch(&[&[1, 2], &[2, 3], &[1, 2, 3]]),
+            batch(&[&[2, 3], &[1, 3]]),
+            batch(&[&[1, 2, 3], &[2]]),
+            batch(&[&[3], &[1, 2]]),
+            batch(&[&[1, 2, 3], &[1, 3], &[2, 3]]),
+        ];
+        for (window, slide) in [(2usize, 1usize), (3, 1), (3, 2), (2, 2), (1, 1), (2, 3)] {
+            let mut inc = IncrementalEclat::new(StreamingEclatConfig::new(2, window, slide));
+            for (t, b) in batches.iter().enumerate() {
+                inc.push_batch(b);
+                if (t + 1) % slide == 0 {
+                    let got = inc.mine_window();
+                    let want = eclat_sequential(&window_txns(&batches, t, window), 2);
+                    assert!(
+                        got.same_as(&want),
+                        "w={window} s={slide} t={t}: got {:?} want {:?}",
+                        got.canonical(),
+                        want.canonical()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlapping_windows_hit_the_cache() {
+        // Stable frequent structure across batches ⇒ later windows should
+        // mostly be cache hits / delta updates.
+        let mk = |seed: u32| batch(&[&[1, 2, 3], &[1, 2], &[2, 3], &[seed % 7 + 10, 1]]);
+        let mut inc = IncrementalEclat::new(StreamingEclatConfig::new(3, 4, 1));
+        for t in 0..8u32 {
+            inc.push_batch(&mk(t));
+            inc.mine_window();
+        }
+        let stats = inc.stats();
+        assert_eq!(stats.windows, 8);
+        assert!(stats.cache_hits > 0, "no cache reuse: {stats}");
+    }
+
+    #[test]
+    fn disjoint_windows_are_exact_too() {
+        // slide > window leaves gaps between windows; kept region empty.
+        let batches: Vec<Vec<Transaction>> = (0..6)
+            .map(|t| batch(&[&[1, 2, t + 3], &[1, 2], &[2, 3]]))
+            .collect();
+        let mut inc = IncrementalEclat::new(StreamingEclatConfig::new(2, 1, 2));
+        for (t, b) in batches.iter().enumerate() {
+            inc.push_batch(b);
+            if (t + 1) % 2 == 0 {
+                let got = inc.mine_window();
+                let want = eclat_sequential(&window_txns(&batches, t, 1), 2);
+                assert!(got.same_as(&want), "t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batches_and_empty_windows() {
+        let mut inc = IncrementalEclat::new(StreamingEclatConfig::new(1, 2, 1));
+        inc.push_batch(&[]);
+        assert!(inc.mine_window().is_empty());
+        inc.push_batch(&batch(&[&[4, 5]]));
+        let got = inc.mine_window();
+        assert_eq!(got.canonical().len(), 3); // {4}, {5}, {4 5}
+        inc.push_batch(&[]);
+        inc.push_batch(&[]);
+        // window of the last 2 batches is now empty again
+        assert!(inc.mine_window().is_empty());
+    }
+
+    #[test]
+    fn attach_drives_miner_through_the_stream() {
+        use crate::sparklet::streaming::StreamContext;
+        use crate::sparklet::SparkletContext;
+
+        let batches: Vec<Vec<Transaction>> = (0..6)
+            .map(|t: u32| batch(&[&[1, 2], &[2, 3, t + 4], &[1, 2, 3]]))
+            .collect();
+        let ssc = StreamContext::new(SparkletContext::local(2));
+        let stream = ssc.queue_stream(batches.clone(), 2);
+        let results: Arc<Mutex<Vec<(usize, MiningResult)>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&results);
+        let cfg = StreamingEclatConfig::new(3, 3, 2);
+        attach_incremental_eclat(&stream, cfg.clone(), move |t, r, _ms| {
+            sink.lock().unwrap().push((t, r.clone()));
+        });
+        ssc.run_batches(6);
+        let got = results.lock().unwrap();
+        assert_eq!(got.len(), 3); // ticks 1, 3, 5
+        for (t, r) in got.iter() {
+            let want = eclat_sequential(&window_txns(&batches, *t, cfg.window), cfg.min_sup);
+            assert!(r.same_as(&want), "window at tick {t}");
+        }
+    }
+}

@@ -52,6 +52,14 @@ impl VecTidset {
         &self.tids
     }
 
+    /// Intersect two sorted, deduplicated tid slices into a fresh vec —
+    /// the raw kernel behind [`TidOps::intersect`], exposed for the
+    /// incremental streaming miner, which intersects tid-range *slices*
+    /// (kept / newly-arrived regions) of window tidsets.
+    pub fn intersect_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
+        Self::merge_intersect(a, b)
+    }
+
     /// Linear merge intersection into a fresh vec.
     fn merge_intersect(a: &[u32], b: &[u32]) -> Vec<u32> {
         // Galloping when sizes are very skewed: binary-search the larger.

@@ -18,6 +18,12 @@ pub struct StageMetrics {
     pub wall: Duration,
     pub task_millis: Vec<f64>,
     pub retries: usize,
+    /// Shuffle records written while this stage ran (map stages; 0 for
+    /// pure result stages).
+    pub shuffle_records: u64,
+    /// Estimated shuffle bytes written while this stage ran (records ×
+    /// static record size — see `ShuffleManager::bytes_written`).
+    pub shuffle_bytes: u64,
 }
 
 impl StageMetrics {
@@ -51,6 +57,53 @@ impl MetricsRegistry {
 
     pub fn total_retries(&self) -> usize {
         self.stages.lock().unwrap().iter().map(|s| s.retries).sum()
+    }
+
+    /// Total shuffle records written across all recorded stages.
+    pub fn total_shuffle_records(&self) -> u64 {
+        self.stages
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| s.shuffle_records)
+            .sum()
+    }
+
+    /// Total estimated shuffle bytes written across all recorded stages
+    /// — the volume signal streaming backpressure decisions read.
+    pub fn total_shuffle_bytes(&self) -> u64 {
+        self.stages
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| s.shuffle_bytes)
+            .sum()
+    }
+
+    /// One-line human-readable report of the recorded stages.
+    pub fn report(&self) -> String {
+        let stages = self.stages.lock().unwrap();
+        let mut maps = 0usize;
+        let mut retries = 0usize;
+        let mut records = 0u64;
+        let mut bytes = 0u64;
+        let mut wall_ms = 0.0f64;
+        for s in stages.iter() {
+            if s.kind == StageKind::ShuffleMap {
+                maps += 1;
+            }
+            retries += s.retries;
+            records += s.shuffle_records;
+            bytes += s.shuffle_bytes;
+            wall_ms += s.wall.as_secs_f64() * 1e3;
+        }
+        format!(
+            "{} stages ({} map, {} result), {wall_ms:.1} ms wall, {retries} retries, \
+             shuffle: {records} records / ~{bytes} bytes",
+            stages.len(),
+            maps,
+            stages.len() - maps,
+        )
     }
 
     pub fn total_wall(&self) -> Duration {
@@ -119,6 +172,8 @@ mod tests {
             wall: Duration::from_millis(wall_ms),
             task_millis: tasks,
             retries,
+            shuffle_records: 0,
+            shuffle_bytes: 0,
         }
     }
 
@@ -130,6 +185,21 @@ mod tests {
         assert_eq!(r.stages().len(), 2);
         assert_eq!(r.total_retries(), 1);
         assert_eq!(r.total_wall(), Duration::from_millis(30));
+    }
+
+    #[test]
+    fn shuffle_volume_aggregates_and_report() {
+        let r = MetricsRegistry::new();
+        let mut m = stage(StageKind::ShuffleMap, 5, vec![5.0], 0);
+        m.shuffle_records = 100;
+        m.shuffle_bytes = 1600;
+        r.record(m);
+        r.record(stage(StageKind::Result, 5, vec![5.0], 0));
+        assert_eq!(r.total_shuffle_records(), 100);
+        assert_eq!(r.total_shuffle_bytes(), 1600);
+        let report = r.report();
+        assert!(report.contains("100 records"), "{report}");
+        assert!(report.contains("1600 bytes"), "{report}");
     }
 
     #[test]

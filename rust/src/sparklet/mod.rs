@@ -6,7 +6,9 @@
 //! broadcast variables, accumulators, partition caching, and lineage
 //! based recomputation. "Executor cores" are worker threads of a fixed
 //! pool, so the paper's Fig. 5 core-scaling sweep maps directly onto
-//! `SparkletConf::executor_cores`.
+//! `SparkletConf::executor_cores`. The [`streaming`] submodule layers a
+//! Spark-Streaming-style micro-batch model (DStreams, windows, state)
+//! on top of the same scheduler.
 //!
 //! Design notes
 //! * RDDs are typed (`Rdd<T>`); the scheduler sees the DAG through the
@@ -30,6 +32,7 @@ pub mod partitioner;
 pub mod rdd;
 pub mod scheduler;
 pub mod shuffle;
+pub mod streaming;
 pub mod transforms;
 
 pub use accumulator::Accumulator;
@@ -39,3 +42,4 @@ pub use context::SparkletContext;
 pub use pair::PairRdd;
 pub use partitioner::{HashPartitioner, Partitioner, RangePartitioner};
 pub use rdd::{Data, Rdd, TaskContext};
+pub use streaming::{DStream, StatefulDStream, StreamContext};

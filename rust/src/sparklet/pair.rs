@@ -131,7 +131,8 @@ impl<K: Data + Hash + Eq, V: Data, C: Data> ShuffleDepObj for ShuffleDependency<
             }
             for (p, bucket) in buckets.into_iter().enumerate() {
                 let n = bucket.len();
-                mgr.write_bucket(self.shuffle_id, p, Arc::new(bucket), n);
+                let bytes = n * std::mem::size_of::<(K, C)>();
+                mgr.write_bucket(self.shuffle_id, p, Arc::new(bucket), n, bytes);
             }
         } else {
             let mut buckets: Vec<Vec<(K, V)>> = (0..nr).map(|_| Vec::new()).collect();
@@ -141,7 +142,8 @@ impl<K: Data + Hash + Eq, V: Data, C: Data> ShuffleDepObj for ShuffleDependency<
             }
             for (p, bucket) in buckets.into_iter().enumerate() {
                 let n = bucket.len();
-                mgr.write_bucket(self.shuffle_id, p, Arc::new(bucket), n);
+                let bytes = n * std::mem::size_of::<(K, V)>();
+                mgr.write_bucket(self.shuffle_id, p, Arc::new(bucket), n, bytes);
             }
         }
     }

@@ -48,6 +48,10 @@ fn run_stage<U: Send + 'static>(
     run: Arc<dyn Fn(usize, usize) -> U + Send + Sync>,
 ) -> Vec<U> {
     let wall = Instant::now();
+    // Snapshot shuffle-volume counters so the stage records its delta
+    // (the driver runs stages sequentially, so deltas don't interleave).
+    let records_before = ctx.shuffle_manager().records_written();
+    let bytes_before = ctx.shuffle_manager().bytes_written();
     let mut results: Vec<Option<U>> = (0..num_tasks).map(|_| None).collect();
     let mut task_millis = vec![0.0f64; num_tasks];
     let mut pending: Vec<usize> = (0..num_tasks).collect();
@@ -106,6 +110,8 @@ fn run_stage<U: Send + 'static>(
             wall: wall.elapsed(),
             task_millis,
             retries,
+            shuffle_records: ctx.shuffle_manager().records_written() - records_before,
+            shuffle_bytes: ctx.shuffle_manager().bytes_written() - bytes_before,
         });
     }
 

@@ -23,6 +23,11 @@ pub struct ShuffleManager {
     next_shuffle_id: AtomicUsize,
     /// Total records moved through the shuffle (metrics).
     records_written: AtomicU64,
+    /// Estimated bytes moved through the shuffle: records × the static
+    /// size of the record type (heap payloads like `Vec` count as their
+    /// header only — an estimate, but a monotone, cheap one; enough for
+    /// backpressure decisions in the streaming layer).
+    bytes_written: AtomicU64,
 }
 
 impl ShuffleManager {
@@ -35,16 +40,19 @@ impl ShuffleManager {
     }
 
     /// Write one map task's bucket for `reduce_part`. `records` is the
-    /// bucket length, tracked for metrics.
+    /// bucket length and `bytes` the estimated payload size (records ×
+    /// size hint), both tracked for metrics.
     pub fn write_bucket(
         &self,
         shuffle_id: usize,
         reduce_part: usize,
         bucket: Bucket,
         records: usize,
+        bytes: usize,
     ) {
         self.records_written
             .fetch_add(records as u64, Ordering::Relaxed);
+        self.bytes_written.fetch_add(bytes as u64, Ordering::Relaxed);
         self.buckets
             .lock()
             .unwrap()
@@ -85,6 +93,12 @@ impl ShuffleManager {
         self.records_written.load(Ordering::Relaxed)
     }
 
+    /// Estimated bytes written through the shuffle (see `bytes_written`
+    /// field note: static record size × records).
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes_written.load(Ordering::Relaxed)
+    }
+
     /// Drop all shuffle data (job teardown / memory reclamation).
     pub fn clear_all(&self) {
         self.buckets.lock().unwrap().clear();
@@ -100,9 +114,10 @@ mod tests {
     fn write_fetch_roundtrip() {
         let m = ShuffleManager::new();
         let sid = m.new_shuffle_id();
-        m.write_bucket(sid, 0, Arc::new(vec![(1u32, "a")]), 1);
-        m.write_bucket(sid, 0, Arc::new(vec![(2u32, "b")]), 1);
-        m.write_bucket(sid, 1, Arc::new(vec![(3u32, "c")]), 1);
+        let rec = std::mem::size_of::<(u32, &str)>();
+        m.write_bucket(sid, 0, Arc::new(vec![(1u32, "a")]), 1, rec);
+        m.write_bucket(sid, 0, Arc::new(vec![(2u32, "b")]), 1, rec);
+        m.write_bucket(sid, 1, Arc::new(vec![(3u32, "c")]), 1, rec);
         let got = m.fetch(sid, 0);
         assert_eq!(got.len(), 2);
         let first = got[0]
@@ -112,6 +127,7 @@ mod tests {
         assert_eq!(m.fetch(sid, 1).len(), 1);
         assert_eq!(m.fetch(sid, 2).len(), 0);
         assert_eq!(m.records_written(), 3);
+        assert_eq!(m.bytes_written(), 3 * rec as u64);
     }
 
     #[test]
@@ -130,8 +146,8 @@ mod tests {
         let m = ShuffleManager::new();
         let a = m.new_shuffle_id();
         let b = m.new_shuffle_id();
-        m.write_bucket(a, 0, Arc::new(vec![1u32]), 1);
-        m.write_bucket(b, 0, Arc::new(vec![2u32]), 1);
+        m.write_bucket(a, 0, Arc::new(vec![1u32]), 1, 4);
+        m.write_bucket(b, 0, Arc::new(vec![2u32]), 1, 4);
         m.clear_shuffle(a);
         assert_eq!(m.fetch(a, 0).len(), 0);
         assert_eq!(m.fetch(b, 0).len(), 1);

@@ -1,0 +1,143 @@
+//! The streaming driver — `StreamingContext` analog.
+//!
+//! Owns the tick counter and the registered output operations. Each
+//! [`StreamContext::tick`] advances the logical batch index and fires
+//! every output op for that batch; there is no wall-clock scheduler, so
+//! tests and benches drive batches explicitly and deterministically.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::dstream::DStream;
+use crate::sparklet::context::SparkletContext;
+use crate::sparklet::rdd::Data;
+
+/// An output operation: invoked once per tick with the batch index.
+pub(crate) type OutputOp = Arc<dyn Fn(usize) + Send + Sync>;
+
+struct StreamInner {
+    sc: SparkletContext,
+    outputs: Mutex<Vec<OutputOp>>,
+    next_batch: AtomicUsize,
+}
+
+/// Cheap-to-clone handle on the streaming driver.
+#[derive(Clone)]
+pub struct StreamContext {
+    inner: Arc<StreamInner>,
+}
+
+impl StreamContext {
+    pub fn new(sc: SparkletContext) -> Self {
+        Self {
+            inner: Arc::new(StreamInner {
+                sc,
+                outputs: Mutex::new(Vec::new()),
+                next_batch: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    /// The underlying batch engine.
+    pub fn spark(&self) -> &SparkletContext {
+        &self.inner.sc
+    }
+
+    /// Index the next `tick` will run.
+    pub fn current_batch(&self) -> usize {
+        self.inner.next_batch.load(Ordering::SeqCst)
+    }
+
+    // ------------------------------------------------------------- sources
+
+    /// A stream fed from a pre-built queue of batches (Spark's
+    /// `queueStream`). Ticks beyond the queue produce empty batches.
+    pub fn queue_stream<T: Data>(&self, batches: Vec<Vec<T>>, num_partitions: usize) -> DStream<T> {
+        let sc = self.spark().clone();
+        let parts = num_partitions.max(1);
+        DStream::from_gen(self.clone(), 1, move |t| {
+            sc.parallelize(batches.get(t).cloned().unwrap_or_default(), parts)
+        })
+    }
+
+    /// A stream produced by a deterministic `batch index -> records`
+    /// function — the hook the dataset generators (`BmsSpec`, `QuestSpec`)
+    /// plug into to emit per-tick transaction batches.
+    pub fn generator_stream<T: Data>(
+        &self,
+        num_partitions: usize,
+        gen: impl Fn(usize) -> Vec<T> + Send + Sync + 'static,
+    ) -> DStream<T> {
+        let sc = self.spark().clone();
+        let parts = num_partitions.max(1);
+        DStream::from_gen(self.clone(), 1, move |t| sc.parallelize(gen(t), parts))
+    }
+
+    // -------------------------------------------------------------- driving
+
+    pub(crate) fn register_output(&self, op: OutputOp) {
+        self.inner.outputs.lock().unwrap().push(op);
+    }
+
+    /// Run one batch: fire every registered output op for the next tick.
+    /// Returns the batch index that ran.
+    pub fn tick(&self) -> usize {
+        let t = self.inner.next_batch.fetch_add(1, Ordering::SeqCst);
+        // Snapshot the ops so an op may register further outputs without
+        // deadlocking (they take effect from the next tick).
+        let ops: Vec<OutputOp> = self.inner.outputs.lock().unwrap().clone();
+        for op in &ops {
+            op(t);
+        }
+        t
+    }
+
+    /// Drive `n` consecutive batches.
+    pub fn run_batches(&self, n: usize) {
+        for _ in 0..n {
+            self.tick();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparklet::SparkletContext;
+
+    #[test]
+    fn queue_stream_replays_batches_then_empties() {
+        let sc = SparkletContext::local(2);
+        let ssc = StreamContext::new(sc);
+        let s = ssc.queue_stream(vec![vec![1u32, 2], vec![3], vec![]], 2);
+        assert_eq!(s.rdd(0).collect(), vec![1, 2]);
+        assert_eq!(s.rdd(1).collect(), vec![3]);
+        assert!(s.rdd(2).collect().is_empty());
+        assert!(s.rdd(99).collect().is_empty());
+    }
+
+    #[test]
+    fn generator_stream_is_deterministic_per_batch() {
+        let sc = SparkletContext::local(2);
+        let ssc = StreamContext::new(sc);
+        let s = ssc.generator_stream(2, |t| vec![t as u32, t as u32 + 1]);
+        assert_eq!(s.rdd(4).collect(), vec![4, 5]);
+        assert_eq!(s.rdd(4).collect(), vec![4, 5]);
+        assert_eq!(s.rdd(0).collect(), vec![0, 1]);
+    }
+
+    #[test]
+    fn ticks_fire_outputs_in_order() {
+        let sc = SparkletContext::local(2);
+        let ssc = StreamContext::new(sc);
+        let s = ssc.generator_stream(1, |t| vec![t]);
+        let seen = s.collect_batches();
+        ssc.run_batches(3);
+        let got = seen.lock().unwrap().clone();
+        assert_eq!(
+            got,
+            vec![(0, vec![0]), (1, vec![1]), (2, vec![2])]
+        );
+        assert_eq!(ssc.current_batch(), 3);
+    }
+}

@@ -1,0 +1,310 @@
+//! `DStream<T>` — a discretized stream: one RDD per batch tick.
+//!
+//! A DStream is a *recipe* (`batch index -> Rdd<T>`) plus a memo of the
+//! RDDs it has produced. Transformations compose recipes; nothing runs
+//! until an output op (or a window / stateful child) asks for a batch.
+//! Produced RDDs are `cache()`d and unpersisted once they fall behind
+//! the remember horizon, which `window` widens on its parent so sliding
+//! windows can union still-materialized batches.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::context::StreamContext;
+use crate::sparklet::rdd::{Data, Rdd};
+
+pub struct DStream<T: Data> {
+    ssc: StreamContext,
+    /// Output cadence in ticks: active at `t` iff `(t + 1) % slide == 0`.
+    slide: usize,
+    /// How many trailing batches stay memoized (grown by `window`).
+    remember: Arc<AtomicUsize>,
+    gen: Arc<dyn Fn(usize) -> Rdd<T> + Send + Sync>,
+    memo: Arc<Mutex<HashMap<usize, Rdd<T>>>>,
+}
+
+impl<T: Data> Clone for DStream<T> {
+    fn clone(&self) -> Self {
+        Self {
+            ssc: self.ssc.clone(),
+            slide: self.slide,
+            remember: Arc::clone(&self.remember),
+            gen: Arc::clone(&self.gen),
+            memo: Arc::clone(&self.memo),
+        }
+    }
+}
+
+impl<T: Data> DStream<T> {
+    pub(crate) fn from_gen(
+        ssc: StreamContext,
+        slide: usize,
+        gen: impl Fn(usize) -> Rdd<T> + Send + Sync + 'static,
+    ) -> Self {
+        Self {
+            ssc,
+            slide: slide.max(1),
+            remember: Arc::new(AtomicUsize::new(1)),
+            gen: Arc::new(gen),
+            memo: Arc::new(Mutex::new(HashMap::new())),
+        }
+    }
+
+    pub fn stream_context(&self) -> &StreamContext {
+        &self.ssc
+    }
+
+    /// Output cadence in ticks.
+    pub fn slide_interval(&self) -> usize {
+        self.slide
+    }
+
+    /// Whether this stream produces output at tick `batch`.
+    pub fn is_active(&self, batch: usize) -> bool {
+        (batch + 1) % self.slide == 0
+    }
+
+    /// Keep at least the last `n` batches materialized (used by windows).
+    pub fn remember(&self, n: usize) {
+        self.remember.fetch_max(n.max(1), Ordering::SeqCst);
+    }
+
+    /// The RDD for batch `batch` (memoized; evicted batches are
+    /// regenerated deterministically from the recipe).
+    pub fn rdd(&self, batch: usize) -> Rdd<T> {
+        if let Some(r) = self.memo.lock().unwrap().get(&batch) {
+            return r.clone();
+        }
+        // Generate outside the lock: window/state recipes recurse into
+        // parent streams.
+        let r = (self.gen)(batch).cache();
+        let mut memo = self.memo.lock().unwrap();
+        let horizon = self.remember.load(Ordering::SeqCst).max(1);
+        let min_keep = batch.saturating_sub(horizon - 1);
+        memo.retain(|&b, old| {
+            if b < min_keep {
+                old.unpersist();
+                false
+            } else {
+                true
+            }
+        });
+        memo.insert(batch, r.clone());
+        r
+    }
+
+    /// Unpersist and forget every memoized batch. Call when done driving
+    /// a stream inside a long-lived process: cached partitions live in
+    /// the engine's `CacheManager` and are *not* freed by merely
+    /// dropping the handle.
+    pub fn clear(&self) {
+        let mut memo = self.memo.lock().unwrap();
+        for (_, r) in memo.drain() {
+            r.unpersist();
+        }
+    }
+
+    // ------------------------------------------------------ transformations
+
+    pub fn map<U: Data>(&self, f: impl Fn(T) -> U + Send + Sync + 'static) -> DStream<U> {
+        let parent = self.clone();
+        let f = Arc::new(f);
+        DStream::from_gen(self.ssc.clone(), self.slide, move |t| {
+            let f = Arc::clone(&f);
+            parent.rdd(t).map(move |x| f(x))
+        })
+    }
+
+    pub fn flat_map<U: Data>(
+        &self,
+        f: impl Fn(T) -> Vec<U> + Send + Sync + 'static,
+    ) -> DStream<U> {
+        let parent = self.clone();
+        let f = Arc::new(f);
+        DStream::from_gen(self.ssc.clone(), self.slide, move |t| {
+            let f = Arc::clone(&f);
+            parent.rdd(t).flat_map(move |x| f(x))
+        })
+    }
+
+    pub fn filter(&self, f: impl Fn(&T) -> bool + Send + Sync + 'static) -> DStream<T> {
+        let parent = self.clone();
+        let f = Arc::new(f);
+        DStream::from_gen(self.ssc.clone(), self.slide, move |t| {
+            let f = Arc::clone(&f);
+            parent.rdd(t).filter(move |x| f(x))
+        })
+    }
+
+    /// Arbitrary per-batch RDD-to-RDD transformation (Spark's
+    /// `transform`), with the batch index for time-aware logic.
+    pub fn transform<U: Data>(
+        &self,
+        f: impl Fn(&Rdd<T>, usize) -> Rdd<U> + Send + Sync + 'static,
+    ) -> DStream<U> {
+        let parent = self.clone();
+        DStream::from_gen(self.ssc.clone(), self.slide, move |t| f(&parent.rdd(t), t))
+    }
+
+    /// Map each element to a key-value pair (`mapToPair`).
+    pub fn map_to_pair<K: Data, V: Data>(
+        &self,
+        f: impl Fn(T) -> (K, V) + Send + Sync + 'static,
+    ) -> DStream<(K, V)> {
+        self.map(f)
+    }
+
+    /// Per-batch element counts as a single-element stream.
+    pub fn count(&self) -> DStream<usize> {
+        self.transform(|rdd, _| {
+            let n = rdd.count();
+            rdd.context().parallelize(vec![n], 1)
+        })
+    }
+
+    // ------------------------------------------------------------- windows
+
+    /// Sliding window: at each active tick (every `slide` ticks) the
+    /// window RDD is the union of the parent's last `size` batches.
+    /// `size` and `slide` are measured in ticks.
+    pub fn window(&self, size: usize, slide: usize) -> DStream<T> {
+        assert!(size >= 1, "window size must be >= 1");
+        assert!(slide >= 1, "window slide must be >= 1");
+        self.remember(size);
+        let parent = self.clone();
+        DStream::from_gen(self.ssc.clone(), slide, move |t| {
+            let lo = (t + 1).saturating_sub(size);
+            let mut acc: Option<Rdd<T>> = None;
+            for b in lo..=t {
+                // Union only the parent's *valid* batches: a parent with
+                // slide > 1 (a window of windows) produces output at its
+                // active ticks only — its inactive-tick RDDs are partial
+                // windows that would double-count elements.
+                if !parent.is_active(b) {
+                    continue;
+                }
+                let r = parent.rdd(b);
+                acc = Some(match acc {
+                    None => r,
+                    Some(a) => a.union(&r),
+                });
+            }
+            acc.unwrap_or_else(|| parent.ssc.spark().parallelize(Vec::new(), 1))
+        })
+    }
+
+    /// Tumbling window: non-overlapping, `window(size, size)`.
+    pub fn tumbling(&self, size: usize) -> DStream<T> {
+        self.window(size, size)
+    }
+
+    // -------------------------------------------------------------- outputs
+
+    /// Register an output op: runs at every *active* tick of this stream
+    /// with the batch index and that batch's RDD.
+    pub fn foreach_rdd(&self, f: impl Fn(usize, &Rdd<T>) + Send + Sync + 'static) {
+        let s = self.clone();
+        self.ssc.register_output(Arc::new(move |t| {
+            if s.is_active(t) {
+                f(t, &s.rdd(t));
+            }
+        }));
+    }
+
+    /// Testing helper: collect every active batch (index, elements) into
+    /// a shared buffer.
+    pub fn collect_batches(&self) -> Arc<Mutex<Vec<(usize, Vec<T>)>>> {
+        let out = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&out);
+        self.foreach_rdd(move |t, rdd| sink.lock().unwrap().push((t, rdd.collect())));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparklet::SparkletContext;
+
+    fn ssc(cores: usize) -> StreamContext {
+        StreamContext::new(SparkletContext::local(cores))
+    }
+
+    #[test]
+    fn map_filter_flat_map_compose_per_batch() {
+        let ssc = ssc(2);
+        let s = ssc
+            .queue_stream(vec![vec![1u32, 2, 3], vec![4, 5]], 2)
+            .map(|x| x * 10)
+            .filter(|x| *x != 20)
+            .flat_map(|x| vec![x, x + 1]);
+        assert_eq!(s.rdd(0).collect(), vec![10, 11, 30, 31]);
+        assert_eq!(s.rdd(1).collect(), vec![40, 41, 50, 51]);
+    }
+
+    #[test]
+    fn sliding_window_unions_last_size_batches() {
+        let ssc = ssc(2);
+        let src = ssc.generator_stream(1, |t| vec![t as u32]);
+        let w = src.window(3, 2);
+        assert_eq!(w.slide_interval(), 2);
+        // tick 1 (first active): window covers batches 0..=1
+        assert!(!w.is_active(0) && w.is_active(1));
+        assert_eq!(w.rdd(1).collect(), vec![0, 1]);
+        // tick 3: covers batches 1..=3
+        assert_eq!(w.rdd(3).collect(), vec![1, 2, 3]);
+        // tick 5: covers batches 3..=5
+        assert_eq!(w.rdd(5).collect(), vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn tumbling_windows_partition_the_stream() {
+        let ssc = ssc(2);
+        let src = ssc.generator_stream(1, |t| vec![t as u32]);
+        let w = src.tumbling(2);
+        let seen = w.collect_batches();
+        ssc.run_batches(6);
+        let got = seen.lock().unwrap().clone();
+        assert_eq!(
+            got,
+            vec![(1, vec![0, 1]), (3, vec![2, 3]), (5, vec![4, 5])]
+        );
+    }
+
+    #[test]
+    fn window_regenerates_evicted_batches_deterministically() {
+        let ssc = ssc(2);
+        let src = ssc.generator_stream(1, |t| vec![t as u32 * 100]);
+        let w = src.window(2, 1);
+        // Access far apart so early batches get evicted, then ask again.
+        assert_eq!(w.rdd(0).collect(), vec![0]);
+        assert_eq!(w.rdd(9).collect(), vec![800, 900]);
+        assert_eq!(w.rdd(0).collect(), vec![0]);
+    }
+
+    #[test]
+    fn window_over_windowed_stream_counts_each_batch_once() {
+        let ssc = ssc(2);
+        let src = ssc.generator_stream(1, |t| vec![t as u32]);
+        // A window of two tumbling-window outputs: the parent only emits
+        // at its active ticks (1, 3, ...); partial inactive-tick windows
+        // must not leak in (they would double-count batches).
+        let w = src.tumbling(2).window(4, 4);
+        assert!(w.is_active(3));
+        let mut got = w.rdd(3).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn count_stream() {
+        let ssc = ssc(2);
+        let s = ssc
+            .queue_stream(vec![vec![1u32, 2, 3], vec![], vec![7]], 2)
+            .count();
+        assert_eq!(s.rdd(0).collect(), vec![3]);
+        assert_eq!(s.rdd(1).collect(), vec![0]);
+        assert_eq!(s.rdd(2).collect(), vec![1]);
+    }
+}

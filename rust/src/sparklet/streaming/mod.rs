@@ -1,0 +1,44 @@
+//! # Sparklet Streaming — micro-batch DStreams over the RDD engine
+//!
+//! A Spark-Streaming-style layer on top of [`super::SparkletContext`]:
+//! a [`StreamContext`] drives *discrete* batches (logical ticks, no wall
+//! clock — deterministic and testable), and a [`DStream<T>`] is the
+//! recipe that produces one [`super::Rdd<T>`] per tick. Transformations
+//! lower batch-wise onto the existing RDD operators, so the DAG
+//! scheduler, shuffle, cache, and lineage recovery are reused as-is.
+//!
+//! Pieces, mirroring Spark Streaming's surface:
+//!
+//! * **Sources** — [`StreamContext::queue_stream`] (a pre-built queue of
+//!   batches, Spark's `queueStream`) and
+//!   [`StreamContext::generator_stream`] (a deterministic
+//!   batch-index → records function, used to drive the repo's dataset
+//!   generators as live feeds).
+//! * **Per-batch transformations** — `map` / `flat_map` / `filter` /
+//!   `transform`, each delegating to the same-named RDD operator.
+//! * **Windows** — [`DStream::window`] (sliding) and
+//!   [`DStream::tumbling`]: the window RDD is the union of the parent's
+//!   last `size` batch RDDs; output fires every `slide` ticks. Parents
+//!   remember (and cache) enough batches for the largest window over
+//!   them.
+//! * **State** — [`StatefulDStream::update_state_by_key`], built on
+//!   [`super::PairRdd::cogroup`] plus the existing
+//!   [`super::HashPartitioner`], with per-batch driver-side
+//!   checkpointing so state lineage stays O(1) deep.
+//!
+//! Batch indices are monotone `0, 1, 2, …`; a stream with slide `s` is
+//! *active* (produces output) at ticks where `(t + 1) % s == 0`. All
+//! generated RDDs are memoized per batch and `cache()`d, then unpersisted
+//! once they fall behind the stream's remember horizon.
+//!
+//! The FIM layer builds on this in `fim::streaming`: an incremental
+//! sliding-window RDD-Eclat that re-mines only the parts of the itemset
+//! lattice a window slide can actually change.
+
+pub mod context;
+pub mod dstream;
+pub mod state;
+
+pub use context::StreamContext;
+pub use dstream::DStream;
+pub use state::StatefulDStream;

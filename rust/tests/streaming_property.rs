@@ -1,0 +1,113 @@
+//! Streaming correctness property: for random batch sequences, the
+//! incremental sliding-window miner's per-window frequent itemsets
+//! exactly match a from-scratch `mine_eclat` on the window's
+//! concatenated transactions — across all window/slide combinations
+//! (overlapping, tumbling, and gapped windows) and support thresholds.
+
+use rdd_eclat::fim::eclat::{mine_eclat_vec, EclatConfig, EclatVariant};
+use rdd_eclat::fim::sequential::eclat_sequential;
+use rdd_eclat::fim::streaming::{IncrementalEclat, StreamingEclatConfig};
+use rdd_eclat::fim::Transaction;
+use rdd_eclat::sparklet::SparkletContext;
+use rdd_eclat::util::prop::forall;
+use rdd_eclat::util::SplitMix64;
+
+/// A random stream: (min_sup, batches). Batches may be empty; items are
+/// drawn from a small universe so 2+/3+-itemsets actually occur.
+fn gen_stream(r: &mut SplitMix64) -> (u32, Vec<Vec<Transaction>>) {
+    let min_sup = 1 + r.gen_range(3) as u32;
+    let n_batches = 2 + r.gen_range(4); // 2..=5 batches
+    let batches = (0..n_batches)
+        .map(|_| {
+            let n_txn = r.gen_range(10); // 0..=9 transactions (empty ok)
+            (0..n_txn)
+                .map(|_| {
+                    let width = 1 + r.gen_range(5);
+                    let mut t: Vec<u32> = (0..width).map(|_| r.gen_range(8) as u32).collect();
+                    t.sort_unstable();
+                    t.dedup();
+                    t
+                })
+                .collect()
+        })
+        .collect();
+    (min_sup, batches)
+}
+
+/// Concatenation of the last `window` batches ending at batch `upto`.
+fn window_txns(batches: &[Vec<Transaction>], upto: usize, window: usize) -> Vec<Transaction> {
+    let lo = (upto + 1).saturating_sub(window);
+    batches[lo..=upto].iter().flatten().cloned().collect()
+}
+
+#[test]
+fn incremental_matches_full_mine_for_all_window_slide_combos() {
+    let sc = SparkletContext::local(2);
+    forall(20, gen_stream, |(min_sup, batches)| {
+        let n = batches.len();
+        for window in 1..=n {
+            for slide in 1..=n {
+                let mut inc =
+                    IncrementalEclat::new(StreamingEclatConfig::new(*min_sup, window, slide));
+                for (t, b) in batches.iter().enumerate() {
+                    inc.push_batch(b);
+                    if (t + 1) % slide != 0 {
+                        continue;
+                    }
+                    let got = inc.mine_window();
+                    let want = mine_eclat_vec(
+                        &sc,
+                        window_txns(batches, t, window),
+                        &EclatConfig::new(EclatVariant::V4, *min_sup).with_p(3),
+                    );
+                    if !got.same_as(&want) {
+                        eprintln!(
+                            "mismatch: min_sup={min_sup} window={window} slide={slide} t={t}\n\
+                             got  {:?}\nwant {:?}",
+                            got.canonical(),
+                            want.canonical()
+                        );
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn incremental_matches_sequential_oracle_on_long_overlapping_stream() {
+    // Longer stream with heavy overlap — the regime where the lattice
+    // cache carries most of the work — checked against the sequential
+    // oracle every slide.
+    let mut rng = SplitMix64::new(0x5EED_57E4);
+    let batches: Vec<Vec<Transaction>> = (0..12)
+        .map(|_| {
+            (0..6)
+                .map(|_| {
+                    let width = 1 + rng.gen_range(4);
+                    let mut t: Vec<u32> =
+                        (0..width).map(|_| rng.gen_range(6) as u32).collect();
+                    t.sort_unstable();
+                    t.dedup();
+                    t
+                })
+                .collect()
+        })
+        .collect();
+    let (window, slide, min_sup) = (6usize, 1usize, 3u32);
+    let mut inc = IncrementalEclat::new(StreamingEclatConfig::new(min_sup, window, slide));
+    for (t, b) in batches.iter().enumerate() {
+        inc.push_batch(b);
+        let got = inc.mine_window();
+        let want = eclat_sequential(&window_txns(&batches, t, window), min_sup);
+        assert!(got.same_as(&want), "t={t}: {:?}", got.canonical());
+    }
+    // With 5/6 of each window shared, the cache must be doing real work.
+    let stats = inc.stats();
+    assert!(
+        stats.cache_hits > 0,
+        "overlapping stream never reused the lattice cache: {stats}"
+    );
+}

@@ -1,0 +1,46 @@
+//! Offline shim for the `log` crate: the five level macros, no logger
+//! registry. `error!`/`warn!` go to stderr (task failures must be
+//! visible); `info!`/`debug!`/`trace!` compile their arguments but emit
+//! nothing. Swap for the real crate in `rust/Cargo.toml` if a full
+//! logging facade is ever needed.
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => {
+        eprintln!("[ERROR] {}", format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        eprintln!("[WARN] {}", format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if false {
+            eprintln!("[INFO] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if false {
+            eprintln!("[DEBUG] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {
+        if false {
+            eprintln!("[TRACE] {}", format!($($arg)*));
+        }
+    };
+}
