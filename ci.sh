@@ -14,6 +14,23 @@ cargo build --release
 echo "== cargo test -q"
 cargo test -q
 
+echo "== cargo clippy --all-targets -- -D warnings"
+if cargo clippy --version >/dev/null 2>&1; then
+    # Advisory by default (same policy as rustfmt below: lint drift
+    # should not mask real build/test failures on dev images).
+    # CI_CLIPPY_STRICT=1 makes it a hard gate — the GitHub workflow
+    # sets it, so lints block merges.
+    if ! cargo clippy --all-targets -- -D warnings; then
+        if [ "${CI_CLIPPY_STRICT:-0}" = "1" ]; then
+            echo "clippy check failed (CI_CLIPPY_STRICT=1)"
+            exit 1
+        fi
+        echo "warn: clippy findings (non-fatal locally; fix before merge)"
+    fi
+else
+    echo "skip: clippy not installed"
+fi
+
 echo "== cargo fmt --check"
 if cargo fmt --version >/dev/null 2>&1; then
     # Advisory by default (images without rustfmt skip it; formatting

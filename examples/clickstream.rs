@@ -1,11 +1,13 @@
 //! Clickstream analysis: the BMS_WebView scenario — sparse short
 //! sessions, large item-id space (triangular matrix disabled, exactly as
-//! the paper configures BMS1/BMS2), comparing all five Eclat variants.
+//! the paper configures BMS1/BMS2), comparing all five Eclat variants
+//! through the unified session API.
 //!
 //! Run: `cargo run --release --example clickstream`
 
+use rdd_eclat::coordinator::experiments::eclat_roster;
 use rdd_eclat::data::{BmsSpec, DatasetStats};
-use rdd_eclat::fim::eclat::{mine_eclat_vec, EclatConfig, EclatVariant};
+use rdd_eclat::fim::engine::MiningSession;
 use rdd_eclat::fim::types::abs_min_sup;
 use rdd_eclat::sparklet::SparkletContext;
 
@@ -20,26 +22,26 @@ fn main() {
 
     let min_sup = abs_min_sup(0.001, sessions.len());
     let mut reference = None;
-    for variant in EclatVariant::all() {
+    for engine in eclat_roster() {
         let sc = SparkletContext::local(4);
-        let cfg = EclatConfig::new(variant, min_sup)
-            .with_tri_matrix(false) // id space too large, per the paper
-            .with_p(10);
-        let t = std::time::Instant::now();
-        let result = mine_eclat_vec(&sc, sessions.clone(), &cfg);
-        let ms = t.elapsed().as_secs_f64() * 1e3;
+        let report = MiningSession::new(engine)
+            .min_sup(min_sup)
+            .tri_matrix(false) // id space too large, per the paper
+            .p(10)
+            .run_vec(&sc, &sessions)
+            .expect("roster engines are registered");
         println!(
             "  {:<8} {:>6} itemsets  {:>8.1} ms  (stages: {}, retries: {})",
-            variant.name(),
-            result.len(),
-            ms,
-            sc.metrics().stages().len(),
+            report.label,
+            report.result.len(),
+            report.wall_ms,
+            report.n_stages(),
             sc.metrics().total_retries()
         );
         // all variants must agree
         match &reference {
-            None => reference = Some(result),
-            Some(r) => assert!(result.same_as(r), "{} disagrees", variant.name()),
+            None => reference = Some(report.result),
+            Some(r) => assert!(report.result.same_as(r), "{engine} disagrees"),
         }
     }
     println!("\nall variants produced identical itemsets ✓");

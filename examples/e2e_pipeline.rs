@@ -17,7 +17,7 @@
 //! Run: `cargo run --release --example e2e_pipeline`
 //! Scale via REPRO_SCALE (default 0.1 here = 10K transactions).
 
-use rdd_eclat::coordinator::experiments::{run_algo, Algo};
+use rdd_eclat::coordinator::experiments::{roster_with_apriori, run_engine};
 use rdd_eclat::coordinator::ExperimentConfig;
 use rdd_eclat::data::{write_transactions, Dataset, DatasetStats};
 use rdd_eclat::fim::eclat::transactions_from_lines;
@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(txns_rdd.count(), txns.len(), "textFile round-trip lost rows");
     println!("  textFile round-trip OK ({} transactions)", txns.len());
 
-    // ---- 3+4. sweep all algorithms
+    // ---- 3+4. sweep the registry roster (Apriori + the five variants)
     println!("\n=== e2e: algorithm sweep ===");
     let sweep = [0.005f64, 0.003, 0.002];
     let mut speedups = Vec::new();
@@ -60,22 +60,22 @@ fn main() -> anyhow::Result<()> {
         let mut apriori_ms = 0.0;
         let mut best_eclat = f64::INFINITY;
         let mut reference = None;
-        for algo in Algo::all_with_apriori() {
-            let (result, ms) = run_algo(algo, &txns, min_sup, true, &cfg);
+        for engine in roster_with_apriori() {
+            let report = run_engine(engine, &txns, min_sup, true, &cfg);
             println!(
                 "  min_sup={frac:<6} {:<12} {:>7} itemsets {:>9.1} ms",
-                algo.name(),
-                result.len(),
-                ms
+                report.label,
+                report.result.len(),
+                report.wall_ms
             );
-            match algo {
-                Algo::Apriori => apriori_ms = ms,
-                Algo::Eclat(_) => best_eclat = best_eclat.min(ms),
-                Algo::FpGrowth => {}
+            if engine == "apriori" {
+                apriori_ms = report.wall_ms;
+            } else {
+                best_eclat = best_eclat.min(report.wall_ms);
             }
             match &reference {
-                None => reference = Some(result),
-                Some(r) => assert!(result.same_as(r), "{} disagrees", algo.name()),
+                None => reference = Some(report.result),
+                Some(r) => assert!(report.result.same_as(r), "{engine} disagrees"),
             }
         }
         let speedup = apriori_ms / best_eclat;
@@ -85,14 +85,11 @@ fn main() -> anyhow::Result<()> {
     // oracle cross-check at the last point
     let min_sup = abs_min_sup(sweep[sweep.len() - 1], txns.len());
     let oracle = eclat_sequential(&txns, min_sup);
-    let (check, _) = run_algo(
-        Algo::Eclat(rdd_eclat::fim::eclat::EclatVariant::V5),
-        &txns,
-        min_sup,
-        true,
-        &cfg,
+    let check = run_engine("eclat-v5", &txns, min_sup, true, &cfg);
+    assert!(
+        check.result.same_as(&oracle),
+        "V5 disagrees with sequential oracle"
     );
-    assert!(check.same_as(&oracle), "V5 disagrees with sequential oracle");
     println!("  sequential-oracle cross-check OK ({} itemsets)", oracle.len());
 
     // ---- 5. XLA artifact path

@@ -1,9 +1,10 @@
 //! Quickstart: mine frequent itemsets from a small inline basket
-//! database with RDD-Eclat (variant V4) and print the result.
+//! database through the unified `MiningSession` API (engine `eclat-v4`)
+//! and print the result.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use rdd_eclat::fim::eclat::{mine_eclat_vec, EclatConfig, EclatVariant};
+use rdd_eclat::fim::engine::MiningSession;
 use rdd_eclat::sparklet::SparkletContext;
 
 fn main() {
@@ -25,17 +26,22 @@ fn main() {
     let sc = SparkletContext::local(4);
 
     // Mine with EclatV4 (hash-partitioned equivalence classes, p=4),
-    // requiring an itemset to appear in at least 2 baskets.
-    let cfg = EclatConfig::new(EclatVariant::V4, 2).with_p(4);
-    let result = mine_eclat_vec(&sc, baskets, &cfg);
+    // requiring an itemset to appear in at least 2 baskets. Swap the
+    // engine name for any other registered engine ("apriori",
+    // "fpgrowth", "eclat-v1"..) — the session API is identical.
+    let report = MiningSession::new("eclat-v4")
+        .min_sup(2)
+        .p(4)
+        .run_vec(&sc, &baskets)
+        .expect("eclat-v4 is a builtin engine");
 
     println!("frequent itemsets (min_sup = 2):");
-    let mut itemsets = result.itemsets.clone();
+    let mut itemsets = report.result.itemsets.clone();
     itemsets.sort_by_key(|f| (f.items.len(), std::cmp::Reverse(f.support)));
     for f in &itemsets {
         let labels: Vec<&str> = f.items.iter().map(|&i| names[i as usize]).collect();
         println!("  {{{}}} x{}", labels.join(", "), f.support);
     }
-    println!("total: {} itemsets", result.len());
-    assert!(result.len() >= 10, "demo db should yield >= 10 itemsets");
+    println!("total: {}", report.summary());
+    assert!(report.result.len() >= 10, "demo db should yield >= 10 itemsets");
 }

@@ -1,14 +1,12 @@
 //! Retail association-rule mining: generate an IBM-Quest-style retail
-//! basket dataset, mine frequent itemsets with RDD-Eclat, derive
-//! association rules, and print the strongest ones — the workload the
-//! paper's introduction motivates.
+//! basket dataset, mine frequent itemsets with RDD-Eclat and derive
+//! association rules in one `MiningSession`, and print the strongest
+//! ones — the workload the paper's introduction motivates.
 //!
 //! Run: `cargo run --release --example retail_rules`
 
 use rdd_eclat::data::QuestSpec;
-use rdd_eclat::fim::eclat::{mine_eclat_vec, EclatConfig, EclatVariant};
-use rdd_eclat::fim::rules::generate_rules;
-use rdd_eclat::fim::types::abs_min_sup;
+use rdd_eclat::fim::engine::MiningSession;
 use rdd_eclat::sparklet::SparkletContext;
 
 fn main() {
@@ -22,18 +20,23 @@ fn main() {
     );
 
     let sc = SparkletContext::local(4);
-    let min_sup = abs_min_sup(0.005, baskets.len()); // 0.5% support
-    let cfg = EclatConfig::new(EclatVariant::V5, min_sup).with_p(10);
-    let t = std::time::Instant::now();
-    let result = mine_eclat_vec(&sc, baskets.clone(), &cfg);
+    // One session: mine at 0.5% support with EclatV5, then derive rules
+    // at confidence >= 0.5 — the post-pipeline rides on the same run.
+    let report = MiningSession::new("eclat-v5")
+        .min_sup_frac(0.005)
+        .p(10)
+        .rules(0.5)
+        .run_vec(&sc, &baskets)
+        .expect("eclat-v5 is a builtin engine");
     println!(
-        "mined {} frequent itemsets (max length {}) in {:.0} ms",
-        result.len(),
-        result.max_length(),
-        t.elapsed().as_secs_f64() * 1e3
+        "mined {} frequent itemsets (max length {}) in {:.0} ms (min_sup abs {})",
+        report.result.len(),
+        report.result.max_length(),
+        report.wall_ms,
+        report.min_sup
     );
 
-    let rules = generate_rules(&result, 0.5, baskets.len());
+    let rules = report.rules.as_deref().unwrap_or(&[]);
     println!("\ntop association rules (confidence >= 0.5):");
     for r in rules.iter().take(15) {
         println!("  {r}");
@@ -41,7 +44,7 @@ fn main() {
     println!("({} rules total)", rules.len());
 
     // sanity: every rule's confidence is consistent with its supports
-    for r in &rules {
+    for r in rules {
         assert!(r.confidence > 0.0 && r.confidence <= 1.0);
     }
 }

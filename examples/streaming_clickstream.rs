@@ -11,7 +11,7 @@
 //! Run: `cargo run --release --example streaming_clickstream`
 
 use rdd_eclat::data::BmsSpec;
-use rdd_eclat::fim::eclat::{EclatConfig, EclatVariant};
+use rdd_eclat::fim::engine::MiningSession;
 use rdd_eclat::fim::streaming::{attach_checked_incremental_eclat, StreamingEclatConfig};
 use rdd_eclat::fim::types::abs_min_sup;
 use rdd_eclat::sparklet::{SparkletContext, StatefulDStream, StreamContext};
@@ -48,13 +48,16 @@ fn main() {
         });
 
     // Incremental miner on the sliding window, cross-checked per window
-    // against batch RDD-Eclat on the very same transactions.
+    // against a batch RDD-Eclat `MiningSession` on the very same
+    // transactions.
     let miner = attach_checked_incremental_eclat(
         &source,
         StreamingEclatConfig::new(min_sup, WINDOW, SLIDE),
         // BMS id space is large -> triMatrixMode=false, as the paper
         // configures BMS1/BMS2.
-        EclatConfig::new(EclatVariant::V4, min_sup).with_tri_matrix(false),
+        MiningSession::new("eclat-v4")
+            .min_sup(min_sup)
+            .tri_matrix(false),
         |w| {
             println!(
                 "  window @t={}: {} txns, {} itemsets (max len {}) — \

@@ -5,9 +5,9 @@
 //!     motivates
 //! A3: tidset representation (sorted tid lists vs packed bitmaps)
 
-use rdd_eclat::coordinator::{experiments::Algo, ExperimentConfig};
+use rdd_eclat::coordinator::ExperimentConfig;
 use rdd_eclat::data::Dataset;
-use rdd_eclat::fim::eclat::{mine_eclat_vec, EclatConfig, EclatVariant};
+use rdd_eclat::fim::engine::{MiningSession, TidsetRepr};
 use rdd_eclat::fim::partitioners::{
     balance_ratio, default_partitioner, hash_partitioner, reverse_hash_partitioner,
 };
@@ -35,17 +35,19 @@ fn prefix_len_ablation(cfg: &ExperimentConfig) {
     let txns = Dataset::T10I4D100K.generate_scaled(cfg.seed, cfg.scale);
     for &frac in &[0.003f64, 0.002, 0.001] {
         let min_sup = abs_min_sup(frac, txns.len());
-        for (label, variant, k) in [
-            ("V5-k1", EclatVariant::V5, 1usize),
-            ("V5-k2", EclatVariant::V5, 2),
-            ("V6-fused", EclatVariant::V6Fused, 2),
+        for (label, engine, k) in [
+            ("V5-k1", "eclat-v5", 1usize),
+            ("V5-k2", "eclat-v5", 2),
+            ("V6-fused", "eclat-v6", 2),
         ] {
             suite.measure(label, "min_sup", frac, || {
                 let sc = SparkletContext::local(cfg.cores);
-                let ecfg = EclatConfig::new(variant, min_sup)
-                    .with_p(cfg.p)
-                    .with_prefix_len(k);
-                let _ = mine_eclat_vec(&sc, txns.clone(), &ecfg);
+                let _ = MiningSession::new(engine)
+                    .min_sup(min_sup)
+                    .p(cfg.p)
+                    .prefix_len(k)
+                    .run_vec(&sc, &txns)
+                    .unwrap();
             });
         }
     }
@@ -63,8 +65,11 @@ fn tri_matrix_ablation(cfg: &ExperimentConfig) {
         for (label, mode) in [("triMatrix=on", true), ("triMatrix=off", false)] {
             suite.measure(label, "min_sup", frac, || {
                 let sc = SparkletContext::local(cfg.cores);
-                let ecfg = EclatConfig::new(EclatVariant::V1, min_sup).with_tri_matrix(mode);
-                let _ = mine_eclat_vec(&sc, txns.clone(), &ecfg);
+                let _ = MiningSession::new("eclat-v1")
+                    .min_sup(min_sup)
+                    .tri_matrix(mode)
+                    .run_vec(&sc, &txns)
+                    .unwrap();
             });
         }
     }
@@ -80,11 +85,18 @@ fn partitioner_ablation(cfg: &ExperimentConfig) {
     let txns = Dataset::T10I4D100K.generate_scaled(cfg.seed, cfg.scale);
     let min_sup = abs_min_sup(0.002, txns.len());
     for &p in &[2usize, 5, 10, 20] {
-        for variant in [EclatVariant::V3, EclatVariant::V4, EclatVariant::V5] {
-            suite.measure(variant.name(), "p", p as f64, || {
+        for (label, engine) in [
+            ("EclatV3", "eclat-v3"),
+            ("EclatV4", "eclat-v4"),
+            ("EclatV5", "eclat-v5"),
+        ] {
+            suite.measure(label, "p", p as f64, || {
                 let sc = SparkletContext::local(cfg.cores);
-                let ecfg = EclatConfig::new(variant, min_sup).with_p(p);
-                let _ = mine_eclat_vec(&sc, txns.clone(), &ecfg);
+                let _ = MiningSession::new(engine)
+                    .min_sup(min_sup)
+                    .p(p)
+                    .run_vec(&sc, &txns)
+                    .unwrap();
             });
         }
     }
@@ -126,8 +138,17 @@ fn tidset_repr_ablation(cfg: &ExperimentConfig) {
         suite.measure(&format!("{name}-bitmap"), "dataset", 0.0, || {
             let _ = eclat_sequential_with::<BitmapTidset>(&txns, min_sup);
         });
+        // The same axis through the distributed engine: Auto resolves
+        // per run against the measured vertical-database density.
+        suite.measure(&format!("{name}-rdd-auto"), "dataset", 0.0, || {
+            let sc = SparkletContext::local(cfg.cores);
+            let _ = MiningSession::new("eclat-v5")
+                .min_sup(min_sup)
+                .tidset(TidsetRepr::Auto)
+                .tri_matrix(d.tri_matrix_mode())
+                .run_vec(&sc, &txns)
+                .unwrap();
+        });
     }
     suite.finish();
-    // keep Algo import used for future extension
-    let _ = Algo::Apriori;
 }

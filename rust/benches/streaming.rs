@@ -13,7 +13,7 @@ use std::collections::VecDeque;
 
 use rdd_eclat::coordinator::ExperimentConfig;
 use rdd_eclat::data::Dataset;
-use rdd_eclat::fim::eclat::{mine_eclat_vec, EclatConfig, EclatVariant};
+use rdd_eclat::fim::engine::MiningSession;
 use rdd_eclat::fim::streaming::{IncrementalEclat, StreamingEclatConfig};
 use rdd_eclat::fim::types::abs_min_sup;
 use rdd_eclat::fim::Transaction;
@@ -30,6 +30,10 @@ fn main() {
     let batch_scale = BATCH_TXNS as f64 / dataset.table1_row().0 as f64;
     let min_sup = abs_min_sup(MIN_SUP_FRAC, WINDOW * BATCH_TXNS);
     let sc = SparkletContext::local(cfg.cores);
+    let session = MiningSession::new("eclat-v5")
+        .min_sup(min_sup)
+        .tri_matrix(dataset.tri_matrix_mode())
+        .p(cfg.p);
 
     let mut suite = rdd_eclat::util::bench::BenchSuite::new(
         "streaming_window",
@@ -56,7 +60,7 @@ fn main() {
         while t < WINDOW {
             let b = gen_batch(t);
             history.push_back(b.clone());
-            miner.push_batch(&b);
+            miner.push_batch(&b).unwrap();
             t += 1;
         }
         while history.len() > WINDOW {
@@ -70,7 +74,7 @@ fn main() {
             for _ in 0..slide {
                 let b = gen_batch(t);
                 history.push_back(b.clone());
-                miner.push_batch(&b);
+                miner.push_batch(&b).unwrap();
                 t += 1;
             }
             while history.len() > WINDOW {
@@ -83,13 +87,7 @@ fn main() {
 
             let window_txns: Vec<Transaction> = history.iter().flatten().cloned().collect();
             let t1 = std::time::Instant::now();
-            let full = mine_eclat_vec(
-                &sc,
-                window_txns,
-                &EclatConfig::new(EclatVariant::V5, min_sup)
-                    .with_tri_matrix(dataset.tri_matrix_mode())
-                    .with_p(cfg.p),
-            );
+            let full = session.run_vec(&sc, &window_txns).unwrap().result;
             full_ms.push(t1.elapsed().as_secs_f64() * 1e3);
 
             assert!(

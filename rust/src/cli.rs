@@ -2,8 +2,16 @@
 //!
 //! Grammar: `repro <command> [--flag value]...`. Flags may appear in any
 //! order; `--flag=value` and `--flag value` both parse.
+//!
+//! Commands declare their accepted flags as a [`CommandSpec`] allowlist;
+//! [`Args::validate`] rejects unknown/misspelled flags with an
+//! edit-distance suggestion instead of silently running with defaults
+//! (the old behaviour: `--min-supp 0.01` used to mine at the default
+//! support). Every command also answers `--help` from its spec.
 
 use std::collections::HashMap;
+
+use crate::util::text::closest;
 
 /// Parsed command line.
 #[derive(Debug, Clone)]
@@ -64,6 +72,110 @@ impl Args {
     pub fn flag(&self, name: &str) -> bool {
         self.bools.iter().any(|b| b == name) || self.get(name) == Some("true")
     }
+
+    /// `--help` anywhere after the command asks for the command's help.
+    pub fn wants_help(&self) -> bool {
+        self.flag("help")
+    }
+
+    /// Every flag name that appeared on the command line, in no
+    /// particular order.
+    pub fn flag_names(&self) -> Vec<&str> {
+        self.flags
+            .keys()
+            .map(|s| s.as_str())
+            .chain(self.bools.iter().map(|s| s.as_str()))
+            .collect()
+    }
+
+    /// Check every given flag against the command's allowlist. Unknown
+    /// flags fail with a "did you mean" suggestion drawn from the spec
+    /// (`--help` is always accepted).
+    pub fn validate(&self, spec: &CommandSpec) -> Result<(), String> {
+        for name in self.flag_names() {
+            if name == "help" || spec.flags.iter().any(|f| f.name == name) {
+                continue;
+            }
+            let mut msg = format!("unknown flag --{name} for `{}`", spec.name);
+            if let Some(s) = closest(name, spec.flags.iter().map(|f| f.name.as_str()), 3) {
+                msg.push_str(&format!(" — did you mean --{s}?"));
+            }
+            msg.push_str(&format!("\n\n{}", spec.render_help()));
+            return Err(msg);
+        }
+        Ok(())
+    }
+}
+
+/// One flag a command accepts.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    /// Flag name without the leading `--`.
+    pub name: String,
+    /// Value placeholder for help ("F", "N", "NAME"); empty for boolean
+    /// flags.
+    pub value: String,
+    /// One-line description (may embed registry-derived value lists).
+    pub help: String,
+}
+
+impl FlagSpec {
+    pub fn new(name: &str, value: &str, help: impl Into<String>) -> Self {
+        Self {
+            name: name.to_string(),
+            value: value.to_string(),
+            help: help.into(),
+        }
+    }
+}
+
+/// A command's allowlist + help text.
+#[derive(Debug, Clone)]
+pub struct CommandSpec {
+    pub name: String,
+    pub about: String,
+    pub flags: Vec<FlagSpec>,
+}
+
+impl CommandSpec {
+    pub fn new(name: &str, about: &str, flags: Vec<FlagSpec>) -> Self {
+        Self {
+            name: name.to_string(),
+            about: about.to_string(),
+            flags,
+        }
+    }
+
+    /// `USAGE` + flag table for `repro <command> --help`.
+    pub fn render_help(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE: repro {}", self.name, self.about, self.name);
+        if !self.flags.is_empty() {
+            out.push_str(" [flags]\n\nFLAGS:\n");
+            for f in &self.flags {
+                let lhs = if f.value.is_empty() {
+                    format!("--{}", f.name)
+                } else {
+                    format!("--{} {}", f.name, f.value)
+                };
+                out.push_str(&format!("  {lhs:<24} {}\n", f.help));
+            }
+        } else {
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Find the spec for a command, or a "did you mean" error drawn from the
+/// full command list.
+pub fn find_command<'a>(specs: &'a [CommandSpec], command: &str) -> Result<&'a CommandSpec, String> {
+    specs.iter().find(|s| s.name == command).ok_or_else(|| {
+        let mut msg = format!("unknown command {command:?}");
+        if let Some(s) = closest(command, specs.iter().map(|s| s.name.as_str()), 3) {
+            msg.push_str(&format!(" — did you mean `{s}`?"));
+        }
+        msg
+    })
 }
 
 #[cfg(test)]
@@ -72,6 +184,19 @@ mod tests {
 
     fn parse(s: &str) -> Args {
         Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    fn mine_spec() -> CommandSpec {
+        CommandSpec::new(
+            "mine",
+            "run one mining session",
+            vec![
+                FlagSpec::new("dataset", "D", "dataset name"),
+                FlagSpec::new("min-sup", "F", "relative min support"),
+                FlagSpec::new("engine", "NAME", "registered engine"),
+                FlagSpec::new("tri-matrix", "", "enable the triangular matrix"),
+            ],
+        )
     }
 
     #[test]
@@ -106,5 +231,47 @@ mod tests {
     fn empty_means_help() {
         let a = Args::parse(Vec::<String>::new()).unwrap();
         assert_eq!(a.command, "help");
+    }
+
+    #[test]
+    fn validate_accepts_known_flags() {
+        let a = parse("mine --dataset t10 --min-sup 0.01 --tri-matrix --help");
+        assert!(a.validate(&mine_spec()).is_ok());
+        assert!(a.wants_help());
+    }
+
+    #[test]
+    fn validate_rejects_misspelled_flag_with_suggestion() {
+        // the motivating bug: --min-supp used to run silently at the
+        // default support
+        let a = parse("mine --min-supp 0.01");
+        let err = a.validate(&mine_spec()).unwrap_err();
+        assert!(err.contains("unknown flag --min-supp"), "{err}");
+        assert!(err.contains("did you mean --min-sup?"), "{err}");
+        assert!(err.contains("USAGE"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_unknown_bool_flag() {
+        let a = parse("mine --dataset t10 --tri-matrx");
+        let err = a.validate(&mine_spec()).unwrap_err();
+        assert!(err.contains("--tri-matrx"), "{err}");
+        assert!(err.contains("--tri-matrix"), "{err}");
+    }
+
+    #[test]
+    fn help_renders_flag_table() {
+        let h = mine_spec().render_help();
+        assert!(h.contains("USAGE: repro mine"));
+        assert!(h.contains("--min-sup F"));
+        assert!(h.contains("--tri-matrix "));
+    }
+
+    #[test]
+    fn find_command_suggests() {
+        let specs = vec![mine_spec(), CommandSpec::new("stream", "stream", vec![])];
+        assert!(find_command(&specs, "mine").is_ok());
+        let err = find_command(&specs, "mien").unwrap_err();
+        assert!(err.contains("did you mean `mine`?"), "{err}");
     }
 }

@@ -1,79 +1,75 @@
 //! Figure/table drivers. Each function regenerates one evaluation
 //! artifact of the paper and returns a [`BenchSuite`] whose table mirrors
 //! the paper's axes (series = algorithms, x = min_sup / cores / size).
+//!
+//! Experiments are *declarative*: each driver is a roster of engine
+//! names (resolved through the [`EngineRegistry`]) swept over an axis,
+//! with every run going through one [`MiningSession`]. Registering a new
+//! engine makes it sweepable here without touching any driver.
 
 use crate::data::{Dataset, DatasetStats};
-use crate::fim::apriori::mine_apriori_rdd_vec;
-use crate::fim::eclat::{mine_eclat_vec, EclatConfig, EclatVariant};
+use crate::fim::engine::{EngineRegistry, MiningReport, MiningSession};
 use crate::fim::types::abs_min_sup;
-use crate::fim::{MiningResult, Transaction};
+use crate::fim::Transaction;
 use crate::sparklet::SparkletContext;
 use crate::util::bench::BenchSuite;
 
 use super::config::ExperimentConfig;
 
-/// An algorithm under measurement.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Algo {
-    Apriori,
-    FpGrowth,
-    Eclat(EclatVariant),
+// ---------------------------------------------------------------- rosters
+
+/// The paper's five Eclat variants (what the figures sweep), by registry
+/// name.
+pub fn eclat_roster() -> Vec<&'static str> {
+    vec!["eclat-v1", "eclat-v2", "eclat-v3", "eclat-v4", "eclat-v5"]
 }
 
-impl Algo {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Algo::Apriori => "RDD-Apriori",
-            Algo::FpGrowth => "RDD-FPGrowth",
-            Algo::Eclat(v) => v.name(),
-        }
-    }
-
-    pub fn eclat_variants() -> Vec<Algo> {
-        EclatVariant::all().into_iter().map(Algo::Eclat).collect()
-    }
-
-    pub fn all_with_apriori() -> Vec<Algo> {
-        let mut v = vec![Algo::Apriori];
-        v.extend(Self::eclat_variants());
-        v
-    }
-
-    /// Extended roster: paper baselines + the §6 future-work fusion.
-    pub fn extended() -> Vec<Algo> {
-        vec![
-            Algo::Apriori,
-            Algo::FpGrowth,
-            Algo::Eclat(EclatVariant::V1),
-            Algo::Eclat(EclatVariant::V5),
-            Algo::Eclat(EclatVariant::V6Fused),
-        ]
-    }
+/// The (a)-panel roster: RDD-Apriori plus the five Eclat variants.
+pub fn roster_with_apriori() -> Vec<&'static str> {
+    let mut v = vec!["apriori"];
+    v.extend(eclat_roster());
+    v
 }
 
-/// Run one algorithm once, returning (result, millis).
-pub fn run_algo(
-    algo: Algo,
+/// Extended roster: paper baselines + the §6 future-work fusion.
+pub fn extended_roster() -> Vec<&'static str> {
+    vec!["apriori", "fpgrowth", "eclat-v1", "eclat-v5", "eclat-v6"]
+}
+
+/// Every distributed engine currently registered (the `bench` command's
+/// default sweep): the registry minus the driver-side sequential oracle.
+pub fn registry_roster() -> Vec<&'static str> {
+    EngineRegistry::names()
+        .into_iter()
+        .filter(|n| *n != "sequential")
+        .collect()
+}
+
+/// Display label of a registered engine ("eclat-v4" -> "EclatV4").
+/// Panics on unregistered names — rosters are code, not user input.
+pub fn engine_label(name: &str) -> &'static str {
+    EngineRegistry::get(name)
+        .unwrap_or_else(|| panic!("engine {name:?} is not registered"))
+        .label()
+}
+
+/// Run one registered engine once over an in-memory database, on a fresh
+/// `cfg.cores`-wide context. Returns the full [`MiningReport`] (timings
+/// + per-stage metrics included).
+pub fn run_engine(
+    engine: &str,
     txns: &[Transaction],
     min_sup: u32,
     tri_matrix: bool,
     cfg: &ExperimentConfig,
-) -> (MiningResult, f64) {
+) -> MiningReport {
     let sc = SparkletContext::local(cfg.cores);
-    let t = std::time::Instant::now();
-    let result = match algo {
-        Algo::Apriori => mine_apriori_rdd_vec(&sc, txns.to_vec(), min_sup),
-        Algo::FpGrowth => {
-            crate::fim::fpgrowth::mine_fpgrowth_rdd_vec(&sc, txns.to_vec(), min_sup)
-        }
-        Algo::Eclat(variant) => {
-            let ecfg = EclatConfig::new(variant, min_sup)
-                .with_tri_matrix(tri_matrix)
-                .with_p(cfg.p);
-            mine_eclat_vec(&sc, txns.to_vec(), &ecfg)
-        }
-    };
-    (result, t.elapsed().as_secs_f64() * 1e3)
+    MiningSession::new(engine)
+        .min_sup(min_sup)
+        .tri_matrix(tri_matrix)
+        .p(cfg.p)
+        .run_vec(&sc, txns)
+        .unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// Extension experiment (not a paper figure): baseline families +
@@ -89,9 +85,9 @@ pub fn extended_comparison(cfg: &ExperimentConfig) -> BenchSuite {
     let txns = Dataset::T10I4D100K.generate_scaled(cfg.seed, cfg.scale);
     for &frac in &[0.005f64, 0.003, 0.002] {
         let min_sup = abs_min_sup(frac, txns.len());
-        for &algo in &Algo::extended() {
-            suite.measure(algo.name(), "min_sup", frac, || {
-                let _ = run_algo(algo, &txns, min_sup, true, cfg);
+        for engine in extended_roster() {
+            suite.measure(engine_label(engine), "min_sup", frac, || {
+                let _ = run_engine(engine, &txns, min_sup, true, cfg);
             });
         }
     }
@@ -135,16 +131,16 @@ pub fn fig_minsup(
     );
     let txns = dataset.generate_scaled(cfg.seed, cfg.scale);
     let tri = dataset.tri_matrix_mode();
-    let algos = if with_apriori {
-        Algo::all_with_apriori()
+    let roster = if with_apriori {
+        roster_with_apriori()
     } else {
-        Algo::eclat_variants()
+        eclat_roster()
     };
     for &frac in &minsup_sweep(dataset) {
         let min_sup = abs_min_sup(frac, txns.len());
-        for &algo in &algos {
-            suite.measure(algo.name(), "min_sup", frac, || {
-                let _ = run_algo(algo, &txns, min_sup, tri, cfg);
+        for engine in &roster {
+            suite.measure(engine_label(engine), "min_sup", frac, || {
+                let _ = run_engine(engine, &txns, min_sup, tri, cfg);
             });
         }
     }
@@ -186,33 +182,26 @@ pub fn fig_cores(dataset: Dataset, min_sup_frac: f64, cfg: &ExperimentConfig) ->
     let tri = dataset.tri_matrix_mode();
     let core_sweep = [2usize, 4, 6, 8, 10];
     if model {
-        for algo in Algo::eclat_variants() {
+        for engine in eclat_roster() {
             // One serial run per variant; makespan modeled per core count.
             let sc = SparkletContext::local(1);
-            let run = || match algo {
-                Algo::Apriori => mine_apriori_rdd_vec(&sc, txns.to_vec(), min_sup),
-                Algo::FpGrowth => {
-                    crate::fim::fpgrowth::mine_fpgrowth_rdd_vec(&sc, txns.to_vec(), min_sup)
-                }
-                Algo::Eclat(variant) => {
-                    let ecfg = EclatConfig::new(variant, min_sup)
-                        .with_tri_matrix(tri)
-                        .with_p(cfg.p);
-                    mine_eclat_vec(&sc, txns.to_vec(), &ecfg)
-                }
-            };
-            let _ = run();
+            let _ = MiningSession::new(engine)
+                .min_sup(min_sup)
+                .tri_matrix(tri)
+                .p(cfg.p)
+                .run_vec(&sc, &txns)
+                .unwrap_or_else(|e| panic!("{e}"));
             for &cores in &core_sweep {
                 let ms = sc.metrics().modeled_makespan_ms(cores);
-                suite.record(algo.name(), "cores", cores as f64, vec![ms]);
+                suite.record(engine_label(engine), "cores", cores as f64, vec![ms]);
             }
         }
     } else {
         for &cores in &core_sweep {
             let run_cfg = cfg.clone().with_cores(cores);
-            for algo in Algo::eclat_variants() {
-                suite.measure(algo.name(), "cores", cores as f64, || {
-                    let _ = run_algo(algo, &txns, min_sup, tri, &run_cfg);
+            for engine in eclat_roster() {
+                suite.measure(engine_label(engine), "cores", cores as f64, || {
+                    let _ = run_engine(engine, &txns, min_sup, tri, &run_cfg);
                 });
             }
         }
@@ -234,13 +223,13 @@ pub fn fig_scaling(cfg: &ExperimentConfig) -> BenchSuite {
     for factor in crate::data::scale::fig6_factors() {
         let txns = crate::data::scale::replicate_shuffled(&base, factor, cfg.seed ^ 0xF16);
         let min_sup = abs_min_sup(0.05, txns.len());
-        for algo in Algo::eclat_variants() {
+        for engine in eclat_roster() {
             suite.measure(
-                algo.name(),
+                engine_label(engine),
                 "transactions",
                 txns.len() as f64,
                 || {
-                    let _ = run_algo(algo, &txns, min_sup, true, cfg);
+                    let _ = run_engine(engine, &txns, min_sup, true, cfg);
                 },
             );
         }
@@ -289,15 +278,37 @@ mod tests {
     }
 
     #[test]
-    fn run_algo_returns_consistent_results() {
+    fn run_engine_returns_consistent_results() {
         let cfg = tiny_cfg();
         let txns = Dataset::T10I4D100K.generate_scaled(cfg.seed, cfg.scale);
         let min_sup = abs_min_sup(0.01, txns.len());
-        let (apriori, _) = run_algo(Algo::Apriori, &txns, min_sup, true, &cfg);
-        for v in EclatVariant::all() {
-            let (eclat, _) = run_algo(Algo::Eclat(v), &txns, min_sup, true, &cfg);
-            assert!(eclat.same_as(&apriori), "{} != apriori", v.name());
+        let apriori = run_engine("apriori", &txns, min_sup, true, &cfg);
+        for engine in eclat_roster() {
+            let eclat = run_engine(engine, &txns, min_sup, true, &cfg);
+            assert!(
+                eclat.result.same_as(&apriori.result),
+                "{engine} != apriori"
+            );
         }
+    }
+
+    #[test]
+    fn rosters_are_registered() {
+        for name in roster_with_apriori()
+            .into_iter()
+            .chain(extended_roster())
+            .chain(registry_roster())
+        {
+            assert!(EngineRegistry::get(name).is_some(), "{name}");
+        }
+        assert!(!registry_roster().contains(&"sequential"));
+    }
+
+    #[test]
+    fn labels_match_the_paper_series_names() {
+        assert_eq!(engine_label("eclat-v1"), "EclatV1");
+        assert_eq!(engine_label("apriori"), "RDD-Apriori");
+        assert_eq!(engine_label("fpgrowth"), "RDD-FPGrowth");
     }
 
     #[test]

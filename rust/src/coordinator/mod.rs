@@ -7,4 +7,4 @@ pub mod experiments;
 pub mod report;
 
 pub use config::ExperimentConfig;
-pub use experiments::{fig_cores, fig_minsup, fig_scaling, table1, Algo};
+pub use experiments::{fig_cores, fig_minsup, fig_scaling, run_engine, table1};

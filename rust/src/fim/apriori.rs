@@ -79,25 +79,20 @@ pub fn mine_apriori_rdd(
     MiningResult::new(frequent)
 }
 
-/// Convenience: mine an in-memory database.
-pub fn mine_apriori_rdd_vec(
-    sc: &SparkletContext,
-    txns: Vec<Transaction>,
-    min_sup: u32,
-) -> MiningResult {
-    let parts = sc.default_parallelism();
-    let rdd = sc.parallelize(txns, parts).map(|mut t| {
-        t.sort_unstable();
-        t.dedup();
-        t
-    });
-    mine_apriori_rdd(sc, &rdd, min_sup)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fim::engine::MiningSession;
     use crate::fim::sequential::{apriori_sequential, eclat_sequential};
+
+    /// Mine an in-memory database through the unified session API.
+    fn mine_vec(sc: &SparkletContext, txns: Vec<Transaction>, min_sup: u32) -> MiningResult {
+        MiningSession::new("apriori")
+            .min_sup(min_sup)
+            .run_vec(sc, &txns)
+            .unwrap()
+            .result
+    }
 
     fn demo_db() -> Vec<Transaction> {
         vec![
@@ -117,7 +112,7 @@ mod tests {
     fn matches_sequential_apriori() {
         let sc = SparkletContext::local(4);
         for min_sup in [1u32, 2, 3, 5] {
-            let got = mine_apriori_rdd_vec(&sc, demo_db(), min_sup);
+            let got = mine_vec(&sc, demo_db(), min_sup);
             let want = apriori_sequential(&demo_db(), min_sup);
             assert!(got.same_as(&want), "min_sup={min_sup}");
         }
@@ -126,14 +121,14 @@ mod tests {
     #[test]
     fn matches_eclat_oracle() {
         let sc = SparkletContext::local(2);
-        let got = mine_apriori_rdd_vec(&sc, demo_db(), 2);
+        let got = mine_vec(&sc, demo_db(), 2);
         assert!(got.same_as(&eclat_sequential(&demo_db(), 2)));
     }
 
     #[test]
     fn empty_db() {
         let sc = SparkletContext::local(2);
-        assert!(mine_apriori_rdd_vec(&sc, Vec::new(), 1).is_empty());
+        assert!(mine_vec(&sc, Vec::new(), 1).is_empty());
     }
 
     #[test]
@@ -142,7 +137,7 @@ mod tests {
         let base = apriori_sequential(&demo_db(), 2);
         for cores in [1usize, 2, 5] {
             let sc = SparkletContext::local(cores);
-            let got = mine_apriori_rdd_vec(&sc, demo_db(), 2);
+            let got = mine_vec(&sc, demo_db(), 2);
             assert!(got.same_as(&base), "cores={cores}");
         }
     }

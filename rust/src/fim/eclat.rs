@@ -9,9 +9,14 @@
 //! | V4 | V3 with `hashPartitioner(p)` in P4 |
 //! | V5 | V3 with `reverseHashPartitioner(p)` in P4 |
 //!
-//! All variants return identical itemsets (asserted against the
-//! sequential oracles); they differ in operator/shuffle structure, which
-//! is what the paper's figures measure.
+//! All variants run under the unified [`MiningConfig`]: the tidset
+//! representation ([`TidsetRepr`], including density-measured `Auto`)
+//! and the class-placement strategy ([`PartitionStrategy`]) are
+//! orthogonal axes resolved here, so any variant can be combined with
+//! any representation and any placement. All combinations return
+//! identical itemsets (asserted against the sequential oracles); they
+//! differ in operator/shuffle structure, which is what the paper's
+//! figures measure.
 
 use std::sync::Arc;
 
@@ -19,9 +24,10 @@ use crate::sparklet::accumulator::AccumValue;
 use crate::sparklet::{PairRdd, Rdd, SparkletContext};
 use crate::util::hash::FxHashMap;
 
+use super::engine::{MiningConfig, PartitionStrategy, TidsetRepr};
 use super::eqclass::{bottom_up, build_classes, EquivalenceClass};
 use super::partitioners;
-use super::tidset::{TidOps, VecTidset};
+use super::tidset::{BitmapTidset, TidOps, VecTidset};
 use super::trie::ItemTrie;
 use super::trimatrix::TriMatrix;
 use super::types::{FrequentItemset, Item, MiningResult, Transaction};
@@ -61,50 +67,6 @@ impl EclatVariant {
             Self::V5 => "EclatV5",
             Self::V6Fused => "EclatV6-fused",
         }
-    }
-}
-
-/// Mining parameters (the paper's `min_sup`, `triMatrixMode`, `p`).
-#[derive(Clone)]
-pub struct EclatConfig {
-    pub variant: EclatVariant,
-    /// Absolute minimum support count (see `types::abs_min_sup`).
-    pub min_sup: u32,
-    /// Enable the triangular-matrix 2-itemset optimization. The paper
-    /// sets this false for BMS1/BMS2 (item-id space too large).
-    pub tri_matrix_mode: bool,
-    /// `p`: number of equivalence-class partitions for V4/V5/V6 (paper: 10).
-    pub p: usize,
-    /// Equivalence-class prefix length: 1 (the paper) or 2 (§6 future
-    /// work). Ignored by V6Fused, which always uses 2.
-    pub prefix_len: usize,
-}
-
-impl EclatConfig {
-    pub fn new(variant: EclatVariant, min_sup: u32) -> Self {
-        Self {
-            variant,
-            min_sup,
-            tri_matrix_mode: true,
-            p: 10,
-            prefix_len: 1,
-        }
-    }
-
-    pub fn with_prefix_len(mut self, k: usize) -> Self {
-        assert!((1..=2).contains(&k), "prefix_len must be 1 or 2");
-        self.prefix_len = k;
-        self
-    }
-
-    pub fn with_tri_matrix(mut self, on: bool) -> Self {
-        self.tri_matrix_mode = on;
-        self
-    }
-
-    pub fn with_p(mut self, p: usize) -> Self {
-        self.p = p.max(1);
-        self
     }
 }
 
@@ -248,11 +210,35 @@ fn v3_phase3(
 }
 
 /// How Phase-4 places equivalence classes on partitions.
-enum PartitionStrategy {
+enum Placement {
     /// A fixed rank-based partitioner (default / hash / reverse-hash).
     Fixed(Arc<crate::sparklet::partitioner::FnPartitioner<usize>>),
-    /// LPT over actual class weights into `p` partitions (V6).
+    /// LPT over actual class weights into `p` partitions.
     Weighted(usize),
+}
+
+/// Map the config's partition-strategy axis (plus the variant's paper
+/// default) onto a concrete placement. `n` is the frequent-item count —
+/// the rank space of `defaultPartitioner(n - 1)`.
+fn placement(variant: EclatVariant, cfg: &MiningConfig, n: usize) -> Placement {
+    use PartitionStrategy as PS;
+    let strategy = match cfg.partitioning {
+        PS::EngineDefault => match variant {
+            EclatVariant::V4 => PS::Hash,
+            EclatVariant::V5 => PS::ReverseHash,
+            EclatVariant::V6Fused => PS::Weighted,
+            _ => PS::Ranked,
+        },
+        explicit => explicit,
+    };
+    match strategy {
+        PS::Ranked => Placement::Fixed(partitioners::default_partitioner(n)),
+        PS::Hash => Placement::Fixed(partitioners::hash_partitioner(cfg.p)),
+        PS::ReverseHash => Placement::Fixed(partitioners::reverse_hash_partitioner(cfg.p)),
+        PS::Weighted => Placement::Weighted(cfg.p),
+        // EngineDefault was rewritten to a concrete strategy above.
+        PS::EngineDefault => unreachable!("EngineDefault resolved to a concrete strategy"),
+    }
 }
 
 /// Phase-3/4 (Algorithm 4): build equivalence classes on the driver,
@@ -263,7 +249,7 @@ fn phase_classes<TS: TidOps>(
     vertical: Vec<(Item, TS)>,
     min_sup: u32,
     tri_matrix: Option<&TriMatrix>,
-    strategy: PartitionStrategy,
+    strategy: Placement,
     prefix_len: usize,
 ) -> Vec<FrequentItemset> {
     let mut out: Vec<FrequentItemset> = Vec::new();
@@ -278,8 +264,8 @@ fn phase_classes<TS: TidOps>(
         return out;
     }
     let partitioner = match strategy {
-        PartitionStrategy::Fixed(p) => p,
-        PartitionStrategy::Weighted(p) => {
+        Placement::Fixed(p) => p,
+        Placement::Weighted(p) => {
             let weights: Vec<usize> = classes.iter().map(|(_, c)| c.weight()).collect();
             partitioners::weighted_partitioner(&weights, p)
         }
@@ -297,21 +283,63 @@ fn phase_classes<TS: TidOps>(
     out
 }
 
-// -------------------------------------------------------------- variants
-
-/// Run the configured RDD-Eclat variant over a transactions RDD.
-pub fn mine_eclat(
+/// Resolve the tidset-representation axis against the *measured*
+/// vertical database (this is where `TidsetRepr::Auto` reads the
+/// density), materialize the tidsets, and run the partitioned Bottom-Up
+/// phase. Collapses what used to be duplicated `_vec`/bitmap call paths
+/// behind one dispatch point.
+#[allow(clippy::too_many_arguments)]
+fn phase_classes_repr(
     sc: &SparkletContext,
-    txns: &Rdd<Transaction>,
-    cfg: &EclatConfig,
-) -> MiningResult {
-    match cfg.variant {
-        EclatVariant::V1 => mine_v1(sc, txns, cfg),
-        _ => mine_v2plus(sc, txns, cfg),
+    vertical_tids: Vec<(Item, Vec<u32>)>,
+    n_txns: usize,
+    cfg: &MiningConfig,
+    tri: Option<&TriMatrix>,
+    strategy: Placement,
+    prefix_len: usize,
+    out: &mut Vec<FrequentItemset>,
+) {
+    let total_tids: usize = vertical_tids.iter().map(|(_, tids)| tids.len()).sum();
+    match cfg.tidset.resolve(total_tids, vertical_tids.len(), n_txns) {
+        TidsetRepr::Bitmap => {
+            let vertical: Vec<(Item, BitmapTidset)> = vertical_tids
+                .into_iter()
+                .map(|(item, tids)| (item, BitmapTidset::from_tids(&tids, n_txns)))
+                .collect();
+            out.extend(phase_classes(
+                sc, vertical, cfg.min_sup, tri, strategy, prefix_len,
+            ));
+        }
+        _ => {
+            let vertical: Vec<(Item, VecTidset)> = vertical_tids
+                .into_iter()
+                .map(|(item, tids)| (item, VecTidset::from_tids(&tids, n_txns)))
+                .collect();
+            out.extend(phase_classes(
+                sc, vertical, cfg.min_sup, tri, strategy, prefix_len,
+            ));
+        }
     }
 }
 
-fn mine_v1(sc: &SparkletContext, txns: &Rdd<Transaction>, cfg: &EclatConfig) -> MiningResult {
+// -------------------------------------------------------------- variants
+
+/// Run one RDD-Eclat variant over a transactions RDD under the unified
+/// [`MiningConfig`]. This is the single entry point behind the
+/// `eclat-v1`..`eclat-v6` engines of the [`super::engine::EngineRegistry`].
+pub fn mine_eclat(
+    sc: &SparkletContext,
+    txns: &Rdd<Transaction>,
+    variant: EclatVariant,
+    cfg: &MiningConfig,
+) -> MiningResult {
+    match variant {
+        EclatVariant::V1 => mine_v1(sc, txns, cfg),
+        _ => mine_v2plus(sc, txns, variant, cfg),
+    }
+}
+
+fn mine_v1(sc: &SparkletContext, txns: &Rdd<Transaction>, cfg: &MiningConfig) -> MiningResult {
     let txns = txns.cache();
     // Phase-1
     let (vertical_tids, n_txns) = v1_phase1(&txns, cfg.min_sup);
@@ -324,7 +352,7 @@ fn mine_v1(sc: &SparkletContext, txns: &Rdd<Transaction>, cfg: &EclatConfig) -> 
         return MiningResult::new(result);
     }
     // Phase-2: triangular matrix over *raw* item ids (V1 behaviour).
-    let tri = if cfg.tri_matrix_mode {
+    let tri = if cfg.tri_matrix {
         let max_item = txns
             .map(|t| t.into_iter().max().unwrap_or(0))
             .reduce(|a, b| a.max(b))
@@ -334,22 +362,25 @@ fn mine_v1(sc: &SparkletContext, txns: &Rdd<Transaction>, cfg: &EclatConfig) -> 
         None
     };
     // Phase-3
-    let vertical: Vec<(Item, VecTidset)> = vertical_tids
-        .into_iter()
-        .map(|(item, tids)| (item, VecTidset::from_tids(&tids, n_txns)))
-        .collect();
-    result.extend(phase_classes(
+    phase_classes_repr(
         sc,
-        vertical,
-        cfg.min_sup,
+        vertical_tids,
+        n_txns,
+        cfg,
         tri.as_ref(),
-        PartitionStrategy::Fixed(partitioners::default_partitioner(n)),
+        placement(EclatVariant::V1, cfg, n),
         cfg.prefix_len,
-    ));
+        &mut result,
+    );
     MiningResult::new(result)
 }
 
-fn mine_v2plus(sc: &SparkletContext, txns: &Rdd<Transaction>, cfg: &EclatConfig) -> MiningResult {
+fn mine_v2plus(
+    sc: &SparkletContext,
+    txns: &Rdd<Transaction>,
+    variant: EclatVariant,
+    cfg: &MiningConfig,
+) -> MiningResult {
     let txns = txns.cache();
     // Phase-1 (Algorithm 5)
     let freq_items = v2_phase1(sc, &txns, cfg.min_sup);
@@ -368,65 +399,57 @@ fn mine_v2plus(sc: &SparkletContext, txns: &Rdd<Transaction>, cfg: &EclatConfig)
         .map(move |t| b_trie.value().filter_transaction(&t))
         .filter(|t| !t.is_empty())
         .cache();
-    let tri = if cfg.tri_matrix_mode {
+    let tri = if cfg.tri_matrix {
         let max_item = freq_items.iter().map(|(i, _)| *i).max().unwrap_or(0);
         Some(phase2_trimatrix(sc, &filtered, max_item as usize + 1))
     } else {
         None
     };
     // Phase-3: vertical dataset.
-    let (vertical_tids, n_txns) = match cfg.variant {
+    let (vertical_tids, n_txns) = match variant {
         EclatVariant::V2 => v2_phase3(&filtered, cfg.min_sup),
         _ => v3_phase3(sc, &filtered, &freq_items),
     };
-    // Phase-4: equivalence classes with the variant's partitioner.
-    let strategy = match cfg.variant {
-        EclatVariant::V4 => PartitionStrategy::Fixed(partitioners::hash_partitioner(cfg.p)),
-        EclatVariant::V5 => {
-            PartitionStrategy::Fixed(partitioners::reverse_hash_partitioner(cfg.p))
-        }
-        EclatVariant::V6Fused => PartitionStrategy::Weighted(cfg.p),
-        _ => PartitionStrategy::Fixed(partitioners::default_partitioner(n)),
-    };
-    let prefix_len = if cfg.variant == EclatVariant::V6Fused {
+    // Phase-4: equivalence classes with the resolved placement.
+    let prefix_len = if variant == EclatVariant::V6Fused {
         2
     } else {
         cfg.prefix_len
     };
-    let vertical: Vec<(Item, VecTidset)> = vertical_tids
-        .into_iter()
-        .map(|(item, tids)| (item, VecTidset::from_tids(&tids, n_txns)))
-        .collect();
-    result.extend(phase_classes(
+    phase_classes_repr(
         sc,
-        vertical,
-        cfg.min_sup,
+        vertical_tids,
+        n_txns,
+        cfg,
         tri.as_ref(),
-        strategy,
+        placement(variant, cfg, n),
         prefix_len,
-    ));
+        &mut result,
+    );
     MiningResult::new(result)
-}
-
-/// Convenience: mine an in-memory database with the given variant.
-pub fn mine_eclat_vec(
-    sc: &SparkletContext,
-    txns: Vec<Transaction>,
-    cfg: &EclatConfig,
-) -> MiningResult {
-    let parts = sc.default_parallelism();
-    let rdd = sc.parallelize(txns, parts).map(|mut t| {
-        t.sort_unstable();
-        t.dedup();
-        t
-    });
-    mine_eclat(sc, &rdd, cfg)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::fim::sequential::eclat_sequential;
+
+    /// Parallelize + normalize an in-memory database and mine it (what
+    /// `MiningSession::run_vec` does, inlined for unit-test locality).
+    fn mine_vec(
+        sc: &SparkletContext,
+        txns: Vec<Transaction>,
+        variant: EclatVariant,
+        cfg: &MiningConfig,
+    ) -> MiningResult {
+        let parts = sc.default_parallelism().max(1);
+        let rdd = sc.parallelize(txns, parts).map(|mut t| {
+            t.sort_unstable();
+            t.dedup();
+            t
+        });
+        mine_eclat(sc, &rdd, variant, cfg)
+    }
 
     fn demo_db() -> Vec<Transaction> {
         vec![
@@ -448,8 +471,8 @@ mod tests {
         for min_sup in [1u32, 2, 3] {
             let oracle = eclat_sequential(&demo_db(), min_sup);
             for variant in EclatVariant::all_with_fused() {
-                let cfg = EclatConfig::new(variant, min_sup).with_p(3);
-                let got = mine_eclat_vec(&sc, demo_db(), &cfg);
+                let cfg = MiningConfig::new(min_sup).with_p(3);
+                let got = mine_vec(&sc, demo_db(), variant, &cfg);
                 assert!(
                     got.same_as(&oracle),
                     "{} min_sup={min_sup}: got {} itemsets, want {}",
@@ -462,11 +485,47 @@ mod tests {
     }
 
     #[test]
+    fn bitmap_and_auto_reprs_match_oracle() {
+        let sc = SparkletContext::local(2);
+        let oracle = eclat_sequential(&demo_db(), 2);
+        for variant in EclatVariant::all() {
+            for repr in [TidsetRepr::Bitmap, TidsetRepr::Auto] {
+                let cfg = MiningConfig::new(2).with_tidset(repr);
+                let got = mine_vec(&sc, demo_db(), variant, &cfg);
+                assert!(got.same_as(&oracle), "{} {}", variant.name(), repr.name());
+            }
+        }
+    }
+
+    #[test]
+    fn partition_strategy_override_is_result_invariant() {
+        let sc = SparkletContext::local(2);
+        let oracle = eclat_sequential(&demo_db(), 2);
+        for strategy in [
+            PartitionStrategy::Ranked,
+            PartitionStrategy::Hash,
+            PartitionStrategy::ReverseHash,
+            PartitionStrategy::Weighted,
+        ] {
+            for variant in [EclatVariant::V1, EclatVariant::V3, EclatVariant::V5] {
+                let cfg = MiningConfig::new(2).with_partitioning(strategy).with_p(3);
+                let got = mine_vec(&sc, demo_db(), variant, &cfg);
+                assert!(
+                    got.same_as(&oracle),
+                    "{} under {}",
+                    variant.name(),
+                    strategy.name()
+                );
+            }
+        }
+    }
+
+    #[test]
     fn prefix2_mode_matches_oracle() {
         let sc = SparkletContext::local(2);
         for variant in [EclatVariant::V1, EclatVariant::V3, EclatVariant::V5] {
-            let cfg = EclatConfig::new(variant, 2).with_prefix_len(2);
-            let got = mine_eclat_vec(&sc, demo_db(), &cfg);
+            let cfg = MiningConfig::new(2).with_prefix_len(2);
+            let got = mine_vec(&sc, demo_db(), variant, &cfg);
             assert!(
                 got.same_as(&eclat_sequential(&demo_db(), 2)),
                 "{} prefix_len=2",
@@ -479,15 +538,17 @@ mod tests {
     fn tri_matrix_mode_equivalent() {
         let sc = SparkletContext::local(2);
         for variant in EclatVariant::all() {
-            let with = mine_eclat_vec(
+            let with = mine_vec(
                 &sc,
                 demo_db(),
-                &EclatConfig::new(variant, 2).with_tri_matrix(true),
+                variant,
+                &MiningConfig::new(2).with_tri_matrix(true),
             );
-            let without = mine_eclat_vec(
+            let without = mine_vec(
                 &sc,
                 demo_db(),
-                &EclatConfig::new(variant, 2).with_tri_matrix(false),
+                variant,
+                &MiningConfig::new(2).with_tri_matrix(false),
             );
             assert!(with.same_as(&without), "{}", variant.name());
         }
@@ -505,8 +566,8 @@ mod tests {
     fn p_parameter_respected() {
         let sc = SparkletContext::local(2);
         for p in [1usize, 2, 7] {
-            let cfg = EclatConfig::new(EclatVariant::V4, 1).with_p(p);
-            let got = mine_eclat_vec(&sc, demo_db(), &cfg);
+            let cfg = MiningConfig::new(1).with_p(p);
+            let got = mine_vec(&sc, demo_db(), EclatVariant::V4, &cfg);
             assert!(got.same_as(&eclat_sequential(&demo_db(), 1)), "p={p}");
         }
     }
@@ -515,8 +576,8 @@ mod tests {
     fn min_sup_above_all_returns_empty() {
         let sc = SparkletContext::local(2);
         for variant in EclatVariant::all() {
-            let cfg = EclatConfig::new(variant, 100);
-            assert!(mine_eclat_vec(&sc, demo_db(), &cfg).is_empty());
+            let cfg = MiningConfig::new(100);
+            assert!(mine_vec(&sc, demo_db(), variant, &cfg).is_empty());
         }
     }
 
@@ -524,8 +585,8 @@ mod tests {
     fn single_frequent_item_short_circuits() {
         let sc = SparkletContext::local(2);
         let db = vec![vec![1], vec![1], vec![2]];
-        let cfg = EclatConfig::new(EclatVariant::V1, 2);
-        let r = mine_eclat_vec(&sc, db, &cfg);
+        let cfg = MiningConfig::new(2);
+        let r = mine_vec(&sc, db, EclatVariant::V1, &cfg);
         assert_eq!(r.canonical().len(), 1);
     }
 }

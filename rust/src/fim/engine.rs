@@ -1,0 +1,1067 @@
+//! The unified mining API: one builder-driven session for every
+//! algorithm, tidset representation, and execution mode.
+//!
+//! The paper evaluates a *family* of algorithms (five RDD-Eclat variants
+//! against Spark Apriori / FP-Growth), and the data-structure-axis study
+//! of Singh et al. (arXiv:1908.01338) swaps representations under a
+//! fixed algorithm. Both demand that **engine**, **tidset
+//! representation**, and **partition strategy** be orthogonal, swappable
+//! axes behind one API:
+//!
+//! * [`FimEngine`] — the trait every mining engine implements (the five
+//!   Eclat variants, the fused V6, Apriori/YAFIM, FP-Growth/PFP, and the
+//!   sequential oracle).
+//! * [`EngineRegistry`] — a static name → engine registry. New engines
+//!   (GPU tidset intersection via `runtime/`, distributed executors)
+//!   register once and appear everywhere: CLI `--engine` values, the
+//!   `bench` sweep, coordinator experiments, and the cross-engine
+//!   agreement test suite.
+//! * [`MiningConfig`] — the orthogonal axes as plain data: `min_sup`,
+//!   [`TidsetRepr`], [`PartitionStrategy`], `p`, `tri_matrix`,
+//!   `prefix_len`, `n_groups`.
+//! * [`MiningSession`] — the builder that composes an engine with a
+//!   config, optional post-stages (closed/maximal/top-k from
+//!   [`super::postprocess`]) and rule generation ([`super::rules`]),
+//!   and returns a [`MiningReport`]: the itemsets plus per-stage
+//!   [`StageMetrics`] pulled from the engine's `MetricsRegistry`, so
+//!   every run is benchmarkable for free.
+
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::sparklet::metrics::StageMetrics;
+use crate::sparklet::{Rdd, SparkletContext};
+use crate::util::text::closest;
+
+use super::apriori::mine_apriori_rdd;
+use super::eclat::{mine_eclat, EclatVariant};
+use super::fpgrowth::mine_fpgrowth_rdd;
+use super::postprocess;
+use super::rules::{generate_rules, Rule};
+use super::sequential::eclat_sequential_with;
+use super::tidset::{BitmapTidset, VecTidset};
+use super::types::{abs_min_sup, MiningResult, Transaction};
+
+// ------------------------------------------------------------------ axes
+
+/// Tidset representation axis (the data-structure perspective).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TidsetRepr {
+    /// Sorted `Vec<u32>` tid lists — the paper's (and SPMF's) layout.
+    Vec,
+    /// Packed `u32` bitmaps (AND + popcount) — the layout the XLA
+    /// artifact consumes.
+    Bitmap,
+    /// Pick per run by measured vertical-database density: bitmaps win
+    /// once the average tidset is dense enough that word-parallel AND
+    /// beats the element-wise merge.
+    Auto,
+}
+
+impl TidsetRepr {
+    /// Density at/above which `Auto` selects [`TidsetRepr::Bitmap`]. A
+    /// bitmap spends `n_txns / 32` words per tidset regardless of
+    /// support, a tid list one word per occurrence; with the galloping
+    /// fast path on the vec side the break-even sits around 1/64.
+    pub const AUTO_DENSITY_THRESHOLD: f64 = 1.0 / 64.0;
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Vec => "vec",
+            Self::Bitmap => "bitmap",
+            Self::Auto => "auto",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_lowercase().as_str() {
+            "vec" | "veclist" | "tidlist" | "list" => Ok(Self::Vec),
+            "bitmap" | "bits" | "bitset" => Ok(Self::Bitmap),
+            "auto" => Ok(Self::Auto),
+            other => Err(format!(
+                "unknown tidset representation {other:?} (vec|bitmap|auto)"
+            )),
+        }
+    }
+
+    /// Resolve `Auto` against a measured vertical database:
+    /// `total_tids` item occurrences spread over `n_items` frequent
+    /// items and `n_txns` transactions. Fixed representations pass
+    /// through unchanged.
+    pub fn resolve(self, total_tids: usize, n_items: usize, n_txns: usize) -> TidsetRepr {
+        match self {
+            Self::Auto => {
+                if n_items == 0 || n_txns == 0 {
+                    return Self::Vec;
+                }
+                let density = total_tids as f64 / (n_items as f64 * n_txns as f64);
+                if density >= Self::AUTO_DENSITY_THRESHOLD {
+                    Self::Bitmap
+                } else {
+                    Self::Vec
+                }
+            }
+            fixed => fixed,
+        }
+    }
+}
+
+/// Equivalence-class placement axis (`fim::partitioners`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// The engine's paper-default placement: V4 → hash, V5 →
+    /// reverse-hash, V6 → LPT-weighted, everything else →
+    /// `defaultPartitioner(n - 1)`.
+    EngineDefault,
+    /// `defaultPartitioner(n - 1)`: one partition per class rank.
+    Ranked,
+    /// `hashPartitioner(p)`.
+    Hash,
+    /// `reverseHashPartitioner(p)` (boustrophedon rank striping).
+    ReverseHash,
+    /// Greedy LPT over actual class weights into `p` partitions.
+    Weighted,
+}
+
+impl PartitionStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::EngineDefault => "engine",
+            Self::Ranked => "ranked",
+            Self::Hash => "hash",
+            Self::ReverseHash => "reverse-hash",
+            Self::Weighted => "weighted",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.to_lowercase().as_str() {
+            "engine" | "engine-default" => Ok(Self::EngineDefault),
+            "ranked" | "default" => Ok(Self::Ranked),
+            "hash" => Ok(Self::Hash),
+            "reverse-hash" | "reversehash" | "reverse" => Ok(Self::ReverseHash),
+            "weighted" | "lpt" => Ok(Self::Weighted),
+            other => Err(format!(
+                "unknown partition strategy {other:?} \
+                 (engine|ranked|hash|reverse-hash|weighted)"
+            )),
+        }
+    }
+}
+
+/// Mining parameters shared by every engine — the orthogonal axes as
+/// plain data. Engines read the knobs that apply to them (Apriori
+/// ignores `tidset`; FP-Growth only reads `min_sup` and `n_groups`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MiningConfig {
+    /// Absolute minimum support count (see [`abs_min_sup`]).
+    pub min_sup: u32,
+    /// Tidset representation for the intersection kernel.
+    pub tidset: TidsetRepr,
+    /// Equivalence-class placement.
+    pub partitioning: PartitionStrategy,
+    /// `p`: class partitions for hash/reverse-hash/weighted (paper: 10).
+    pub p: usize,
+    /// Triangular-matrix 2-itemset pruning (the paper disables it on
+    /// BMS1/BMS2, whose item-id space is too large).
+    pub tri_matrix: bool,
+    /// Equivalence-class prefix length: 1 (the paper) or 2 (§6 future
+    /// work). V6Fused always uses 2.
+    pub prefix_len: usize,
+    /// PFP group shards for FP-Growth.
+    pub n_groups: usize,
+}
+
+impl Default for MiningConfig {
+    fn default() -> Self {
+        Self {
+            min_sup: 1,
+            tidset: TidsetRepr::Vec,
+            partitioning: PartitionStrategy::EngineDefault,
+            p: 10,
+            tri_matrix: true,
+            prefix_len: 1,
+            n_groups: 8,
+        }
+    }
+}
+
+impl MiningConfig {
+    pub fn new(min_sup: u32) -> Self {
+        Self {
+            min_sup,
+            ..Self::default()
+        }
+    }
+
+    pub fn with_min_sup(mut self, min_sup: u32) -> Self {
+        self.min_sup = min_sup;
+        self
+    }
+
+    pub fn with_tidset(mut self, repr: TidsetRepr) -> Self {
+        self.tidset = repr;
+        self
+    }
+
+    pub fn with_partitioning(mut self, strategy: PartitionStrategy) -> Self {
+        self.partitioning = strategy;
+        self
+    }
+
+    pub fn with_p(mut self, p: usize) -> Self {
+        self.p = p.max(1);
+        self
+    }
+
+    pub fn with_tri_matrix(mut self, on: bool) -> Self {
+        self.tri_matrix = on;
+        self
+    }
+
+    pub fn with_prefix_len(mut self, k: usize) -> Self {
+        assert!((1..=2).contains(&k), "prefix_len must be 1 or 2");
+        self.prefix_len = k;
+        self
+    }
+
+    pub fn with_n_groups(mut self, g: usize) -> Self {
+        self.n_groups = g.max(1);
+        self
+    }
+}
+
+// ----------------------------------------------------------------- trait
+
+/// A frequent-itemset mining engine. Implementations must be pure
+/// functions of `(txns, cfg)` up to timing: every engine registered in
+/// the [`EngineRegistry`] is held to the sequential oracle by the
+/// cross-engine agreement suite (`tests/engine_registry.rs`).
+pub trait FimEngine: Send + Sync {
+    /// Canonical registry name (kebab-case, e.g. `"eclat-v4"`).
+    fn name(&self) -> &'static str;
+
+    /// Display label for tables and bench series (e.g. `"EclatV4"`).
+    fn label(&self) -> &'static str {
+        self.name()
+    }
+
+    /// Alternate lookup spellings (matched case-insensitively).
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// One-line description for `--help` and docs.
+    fn describe(&self) -> &'static str {
+        ""
+    }
+
+    /// Mine the transactions RDD under `cfg`. Transactions must be
+    /// normalized (sorted + deduplicated items).
+    fn mine(
+        &self,
+        sc: &SparkletContext,
+        txns: &Rdd<Transaction>,
+        cfg: &MiningConfig,
+    ) -> MiningResult;
+}
+
+// -------------------------------------------------------- builtin engines
+
+/// One of the paper's RDD-Eclat variants (plus the §6 fusion) as an
+/// engine.
+pub struct EclatEngine {
+    variant: EclatVariant,
+}
+
+impl EclatEngine {
+    pub fn new(variant: EclatVariant) -> Self {
+        Self { variant }
+    }
+
+    pub fn variant(&self) -> EclatVariant {
+        self.variant
+    }
+}
+
+impl FimEngine for EclatEngine {
+    fn name(&self) -> &'static str {
+        match self.variant {
+            EclatVariant::V1 => "eclat-v1",
+            EclatVariant::V2 => "eclat-v2",
+            EclatVariant::V3 => "eclat-v3",
+            EclatVariant::V4 => "eclat-v4",
+            EclatVariant::V5 => "eclat-v5",
+            EclatVariant::V6Fused => "eclat-v6",
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        self.variant.name()
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        match self.variant {
+            EclatVariant::V1 => &["v1"],
+            EclatVariant::V2 => &["v2"],
+            EclatVariant::V3 => &["v3"],
+            EclatVariant::V4 => &["v4"],
+            EclatVariant::V5 => &["v5"],
+            EclatVariant::V6Fused => &["v6", "v6-fused", "fused"],
+        }
+    }
+
+    fn describe(&self) -> &'static str {
+        match self.variant {
+            EclatVariant::V1 => "RDD-Eclat V1: groupByKey vertical DB, per-class Bottom-Up",
+            EclatVariant::V2 => "RDD-Eclat V2: V1 + broadcast-trie transaction filtering",
+            EclatVariant::V3 => "RDD-Eclat V3: V2 with hashmap-accumulator vertical DB",
+            EclatVariant::V4 => "RDD-Eclat V4: V3 + hashPartitioner(p) class placement",
+            EclatVariant::V5 => "RDD-Eclat V5: V3 + reverseHashPartitioner(p) placement",
+            EclatVariant::V6Fused => {
+                "fused §6 future work: 2-prefix classes + LPT-weighted placement"
+            }
+        }
+    }
+
+    fn mine(
+        &self,
+        sc: &SparkletContext,
+        txns: &Rdd<Transaction>,
+        cfg: &MiningConfig,
+    ) -> MiningResult {
+        mine_eclat(sc, txns, self.variant, cfg)
+    }
+}
+
+/// RDD-Apriori (YAFIM), the paper's main baseline.
+pub struct AprioriEngine;
+
+impl FimEngine for AprioriEngine {
+    fn name(&self) -> &'static str {
+        "apriori"
+    }
+
+    fn label(&self) -> &'static str {
+        "RDD-Apriori"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["yafim", "rdd-apriori"]
+    }
+
+    fn describe(&self) -> &'static str {
+        "RDD-Apriori (YAFIM): per-level candidate broadcast + database re-scan"
+    }
+
+    fn mine(
+        &self,
+        sc: &SparkletContext,
+        txns: &Rdd<Transaction>,
+        cfg: &MiningConfig,
+    ) -> MiningResult {
+        mine_apriori_rdd(sc, txns, cfg.min_sup)
+    }
+}
+
+/// Parallel FP-Growth (PFP/DFPS shape), the third baseline family.
+pub struct FpGrowthEngine;
+
+impl FimEngine for FpGrowthEngine {
+    fn name(&self) -> &'static str {
+        "fpgrowth"
+    }
+
+    fn label(&self) -> &'static str {
+        "RDD-FPGrowth"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["fp-growth", "pfp", "rdd-fpgrowth"]
+    }
+
+    fn describe(&self) -> &'static str {
+        "parallel FP-Growth (PFP): item-group shards, per-group FP-trees"
+    }
+
+    fn mine(
+        &self,
+        sc: &SparkletContext,
+        txns: &Rdd<Transaction>,
+        cfg: &MiningConfig,
+    ) -> MiningResult {
+        mine_fpgrowth_rdd(sc, txns, cfg.min_sup, cfg.n_groups)
+    }
+}
+
+/// The sequential correctness oracle as an engine: single-threaded Eclat
+/// on the driver, generic over the tidset representation (`Auto`
+/// resolves to tid lists here — there is no distributed phase to size
+/// against).
+pub struct SequentialEngine;
+
+impl FimEngine for SequentialEngine {
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+
+    fn label(&self) -> &'static str {
+        "Sequential"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["seq", "oracle"]
+    }
+
+    fn describe(&self) -> &'static str {
+        "single-threaded Eclat oracle (driver-side, no RDD stages)"
+    }
+
+    fn mine(
+        &self,
+        _sc: &SparkletContext,
+        txns: &Rdd<Transaction>,
+        cfg: &MiningConfig,
+    ) -> MiningResult {
+        let db = txns.collect();
+        match cfg.tidset {
+            TidsetRepr::Bitmap => eclat_sequential_with::<BitmapTidset>(&db, cfg.min_sup),
+            TidsetRepr::Vec | TidsetRepr::Auto => {
+                eclat_sequential_with::<VecTidset>(&db, cfg.min_sup)
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- registry
+
+/// The static engine registry. Builtins register once here; additional
+/// backends call [`EngineRegistry::register`] and immediately appear in
+/// every consumer (CLI, bench sweep, experiments, agreement tests).
+pub struct EngineRegistry;
+
+type EngineList = Vec<Arc<dyn FimEngine>>;
+
+static REGISTRY: OnceLock<Mutex<EngineList>> = OnceLock::new();
+
+fn builtin_engines() -> EngineList {
+    let mut engines: EngineList = Vec::new();
+    for variant in EclatVariant::all_with_fused() {
+        engines.push(Arc::new(EclatEngine::new(variant)));
+    }
+    engines.push(Arc::new(AprioriEngine));
+    engines.push(Arc::new(FpGrowthEngine));
+    engines.push(Arc::new(SequentialEngine));
+    engines
+}
+
+fn registry() -> &'static Mutex<EngineList> {
+    REGISTRY.get_or_init(|| Mutex::new(builtin_engines()))
+}
+
+/// Case/punctuation-insensitive name key ("EclatV4" == "eclat-v4").
+fn normalize(name: &str) -> String {
+    name.chars()
+        .filter(|c| *c != '-' && *c != '_')
+        .flat_map(|c| c.to_lowercase())
+        .collect()
+}
+
+impl EngineRegistry {
+    /// Canonical names of all registered engines, in registration order.
+    pub fn names() -> Vec<&'static str> {
+        registry().lock().unwrap().iter().map(|e| e.name()).collect()
+    }
+
+    /// All registered engines.
+    pub fn engines() -> Vec<Arc<dyn FimEngine>> {
+        registry().lock().unwrap().clone()
+    }
+
+    /// Look an engine up by canonical name or alias, case-insensitively
+    /// and ignoring `-`/`_` ("EclatV4", "eclat-v4" and "v4" all match).
+    /// Canonical names win over aliases, so an engine registered under a
+    /// name that collides with another engine's alias stays reachable.
+    pub fn get(name: &str) -> Option<Arc<dyn FimEngine>> {
+        let key = normalize(name);
+        let reg = registry().lock().unwrap();
+        reg.iter()
+            .find(|e| normalize(e.name()) == key)
+            .or_else(|| {
+                reg.iter()
+                    .find(|e| e.aliases().iter().any(|a| normalize(a) == key))
+            })
+            .cloned()
+    }
+
+    /// Register an engine (replacing any engine with the same canonical
+    /// name). This is the one-line hook future backends use.
+    pub fn register(engine: Arc<dyn FimEngine>) {
+        let mut reg = registry().lock().unwrap();
+        let key = normalize(engine.name());
+        reg.retain(|e| normalize(e.name()) != key);
+        reg.push(engine);
+    }
+
+    /// Closest registered name/alias to a misspelled input, if any is
+    /// plausibly near.
+    pub fn suggest(name: &str) -> Option<&'static str> {
+        let reg = registry().lock().unwrap();
+        let candidates: Vec<&'static str> = reg
+            .iter()
+            .flat_map(|e| std::iter::once(e.name()).chain(e.aliases().iter().copied()))
+            .collect();
+        closest(&name.to_lowercase(), candidates, 3)
+    }
+
+    /// `name — description` lines for `--help`.
+    pub fn describe_all() -> String {
+        let reg = registry().lock().unwrap();
+        let mut out = String::new();
+        for e in reg.iter() {
+            out.push_str(&format!("  {:<12} {}\n", e.name(), e.describe()));
+        }
+        out
+    }
+}
+
+// ----------------------------------------------------------------- error
+
+/// Typed errors of the unified API.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FimError {
+    /// The session named an engine the registry does not know.
+    UnknownEngine {
+        name: String,
+        suggestion: Option<String>,
+    },
+}
+
+impl std::fmt::Display for FimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::UnknownEngine { name, suggestion } => {
+                write!(f, "unknown engine {name:?}")?;
+                if let Some(s) = suggestion {
+                    write!(f, " — did you mean {s:?}?")?;
+                }
+                write!(f, " (registered: {})", EngineRegistry::names().join(", "))
+            }
+        }
+    }
+}
+
+impl std::error::Error for FimError {}
+
+// ------------------------------------------------------------ post stages
+
+/// Result post-stages, chained in order on the mined itemsets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PostStage {
+    /// Keep only closed itemsets.
+    Closed,
+    /// Keep only maximal itemsets.
+    Maximal,
+    /// Keep the k highest-support itemsets.
+    TopK(usize),
+}
+
+impl PostStage {
+    fn apply(self, result: &MiningResult) -> MiningResult {
+        match self {
+            Self::Closed => postprocess::closed_itemsets(result),
+            Self::Maximal => postprocess::maximal_itemsets(result),
+            Self::TopK(k) => postprocess::top_k(result, k),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- report
+
+/// What one session run produced: the itemsets, optional rules, and the
+/// per-stage engine metrics recorded while the mine ran.
+#[derive(Debug, Clone)]
+pub struct MiningReport {
+    /// Canonical engine name ("eclat-v4").
+    pub engine: &'static str,
+    /// Display label ("EclatV4").
+    pub label: &'static str,
+    /// Absolute min_sup the run used (after fraction resolution).
+    pub min_sup: u32,
+    /// Transaction count, when the session had to measure it (fractional
+    /// min_sup or rule generation).
+    pub n_transactions: Option<usize>,
+    /// Requested tidset representation.
+    pub tidset: TidsetRepr,
+    /// The mined itemsets (after post-stages).
+    pub result: MiningResult,
+    /// Association rules, when the session asked for them.
+    pub rules: Option<Vec<Rule>>,
+    /// Wall time of the mine (excluding post-stages), milliseconds.
+    pub wall_ms: f64,
+    /// Engine stages recorded during the mine, in execution order.
+    pub stages: Vec<StageMetrics>,
+}
+
+impl MiningReport {
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn shuffle_records(&self) -> u64 {
+        self.stages.iter().map(|s| s.shuffle_records).sum()
+    }
+
+    pub fn shuffle_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| s.shuffle_bytes).sum()
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} itemsets (max length {}) in {:.1} ms — {} stages, \
+             shuffle {} records / ~{} bytes",
+            self.label,
+            self.result.len(),
+            self.result.max_length(),
+            self.wall_ms,
+            self.n_stages(),
+            self.shuffle_records(),
+            self.shuffle_bytes(),
+        )
+    }
+}
+
+// --------------------------------------------------------------- session
+
+/// Builder for one mining run: engine (by registry name) × config axes ×
+/// post-stage pipeline. Cheap to clone; `run` can be called repeatedly.
+#[derive(Debug, Clone)]
+pub struct MiningSession {
+    engine: String,
+    cfg: MiningConfig,
+    min_sup_frac: Option<f64>,
+    post: Vec<PostStage>,
+    min_conf: Option<f64>,
+}
+
+impl MiningSession {
+    pub fn new(engine: impl Into<String>) -> Self {
+        Self {
+            engine: engine.into(),
+            cfg: MiningConfig::default(),
+            min_sup_frac: None,
+            post: Vec::new(),
+            min_conf: None,
+        }
+    }
+
+    /// Absolute minimum support count.
+    pub fn min_sup(mut self, min_sup: u32) -> Self {
+        self.cfg.min_sup = min_sup;
+        self.min_sup_frac = None;
+        self
+    }
+
+    /// Relative minimum support (fraction of |D|, resolved at run time).
+    pub fn min_sup_frac(mut self, frac: f64) -> Self {
+        self.min_sup_frac = Some(frac);
+        self
+    }
+
+    pub fn tidset(mut self, repr: TidsetRepr) -> Self {
+        self.cfg.tidset = repr;
+        self
+    }
+
+    pub fn partitioning(mut self, strategy: PartitionStrategy) -> Self {
+        self.cfg.partitioning = strategy;
+        self
+    }
+
+    pub fn p(mut self, p: usize) -> Self {
+        self.cfg.p = p.max(1);
+        self
+    }
+
+    pub fn tri_matrix(mut self, on: bool) -> Self {
+        self.cfg.tri_matrix = on;
+        self
+    }
+
+    pub fn prefix_len(mut self, k: usize) -> Self {
+        self.cfg = self.cfg.with_prefix_len(k);
+        self
+    }
+
+    pub fn n_groups(mut self, g: usize) -> Self {
+        self.cfg.n_groups = g.max(1);
+        self
+    }
+
+    /// Replace the whole config at once (axes set earlier are lost).
+    pub fn config(mut self, cfg: MiningConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Append a post-stage (chained in call order).
+    pub fn post(mut self, stage: PostStage) -> Self {
+        self.post.push(stage);
+        self
+    }
+
+    /// Also generate association rules at this confidence threshold.
+    /// Rules always derive from the *full* mining result, even when
+    /// post-stages condense `report.result` (rule generation needs the
+    /// anti-monotone subset supports a condensed result drops).
+    pub fn rules(mut self, min_conf: f64) -> Self {
+        self.min_conf = Some(min_conf);
+        self
+    }
+
+    pub fn engine_name(&self) -> &str {
+        &self.engine
+    }
+
+    pub fn mining_config(&self) -> &MiningConfig {
+        &self.cfg
+    }
+
+    /// Run on a transactions RDD (items must be sorted + deduplicated;
+    /// `transactions_from_lines` and [`MiningSession::run_vec`] both
+    /// normalize).
+    pub fn run(
+        &self,
+        sc: &SparkletContext,
+        txns: &Rdd<Transaction>,
+    ) -> Result<MiningReport, FimError> {
+        self.run_with_known_count(sc, txns, None)
+    }
+
+    /// `run`, with |D| supplied by a caller that already knows it (so
+    /// fractional min_sup / rule lift don't cost an extra count job).
+    fn run_with_known_count(
+        &self,
+        sc: &SparkletContext,
+        txns: &Rdd<Transaction>,
+        known_n: Option<usize>,
+    ) -> Result<MiningReport, FimError> {
+        let engine = EngineRegistry::get(&self.engine).ok_or_else(|| FimError::UnknownEngine {
+            name: self.engine.clone(),
+            suggestion: EngineRegistry::suggest(&self.engine).map(str::to_string),
+        })?;
+        let mut cfg = self.cfg.clone();
+        // |D| is only measured when something needs it (fractional
+        // min_sup, rule lift) — counting costs a job.
+        let n_transactions = if self.min_sup_frac.is_some() || self.min_conf.is_some() {
+            Some(known_n.unwrap_or_else(|| txns.count()))
+        } else {
+            None
+        };
+        if let Some(frac) = self.min_sup_frac {
+            cfg.min_sup = abs_min_sup(frac, n_transactions.unwrap_or(0));
+        }
+        let stage_mark = sc.metrics().stages().len();
+        let t0 = Instant::now();
+        let mined = engine.mine(sc, txns, &cfg);
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let all_stages = sc.metrics().stages();
+        let stages = all_stages
+            .get(stage_mark.min(all_stages.len())..)
+            .map(|s| s.to_vec())
+            .unwrap_or_default();
+        // Rules derive from the FULL result: generate_rules looks up
+        // antecedent/consequent supports anti-monotonically, and a
+        // condensed (closed/maximal/top-k) result would miss them.
+        let rules = self
+            .min_conf
+            .map(|conf| generate_rules(&mined, conf, n_transactions.unwrap_or(0)));
+        let mut result = mined;
+        for stage in &self.post {
+            result = stage.apply(&result);
+        }
+        Ok(MiningReport {
+            engine: engine.name(),
+            label: engine.label(),
+            min_sup: cfg.min_sup,
+            n_transactions,
+            tidset: cfg.tidset,
+            result,
+            rules,
+            wall_ms,
+            stages,
+        })
+    }
+
+    /// Run on an in-memory database: parallelize over the context's
+    /// default parallelism, normalize transactions, mine.
+    pub fn run_vec(
+        &self,
+        sc: &SparkletContext,
+        txns: &[Transaction],
+    ) -> Result<MiningReport, FimError> {
+        let parts = sc.default_parallelism().max(1);
+        let rdd = sc.parallelize(txns.to_vec(), parts).map(|mut t| {
+            t.sort_unstable();
+            t.dedup();
+            t
+        });
+        self.run_with_known_count(sc, &rdd, Some(txns.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fim::sequential::eclat_sequential;
+
+    fn demo_db() -> Vec<Transaction> {
+        vec![
+            vec![1, 2, 5],
+            vec![2, 4],
+            vec![2, 3],
+            vec![1, 2, 4],
+            vec![1, 3],
+            vec![2, 3],
+            vec![1, 3],
+            vec![1, 2, 3, 5],
+            vec![1, 2, 3],
+        ]
+    }
+
+    #[test]
+    fn registry_resolves_names_and_aliases() {
+        for name in [
+            "eclat-v1", "eclat-v5", "eclat-v6", "apriori", "fpgrowth", "sequential",
+        ] {
+            assert!(EngineRegistry::get(name).is_some(), "{name}");
+        }
+        // aliases and spelling variants
+        assert_eq!(EngineRegistry::get("v4").unwrap().name(), "eclat-v4");
+        assert_eq!(EngineRegistry::get("EclatV4").unwrap().name(), "eclat-v4");
+        assert_eq!(EngineRegistry::get("YAFIM").unwrap().name(), "apriori");
+        assert_eq!(EngineRegistry::get("fp-growth").unwrap().name(), "fpgrowth");
+        assert_eq!(EngineRegistry::get("oracle").unwrap().name(), "sequential");
+        assert!(EngineRegistry::get("nope").is_none());
+    }
+
+    #[test]
+    fn registry_names_cover_the_paper_family() {
+        let names = EngineRegistry::names();
+        for want in [
+            "eclat-v1", "eclat-v2", "eclat-v3", "eclat-v4", "eclat-v5",
+        ] {
+            assert!(names.contains(&want), "missing {want}");
+        }
+    }
+
+    #[test]
+    fn unknown_engine_error_suggests() {
+        let sc = SparkletContext::local(2);
+        let err = MiningSession::new("eclat-v9")
+            .min_sup(2)
+            .run_vec(&sc, &demo_db())
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown engine"), "{msg}");
+        assert!(msg.contains("did you mean"), "{msg}");
+    }
+
+    #[test]
+    fn every_builtin_engine_matches_oracle_both_reprs() {
+        let sc = SparkletContext::local(2);
+        let oracle = eclat_sequential(&demo_db(), 2);
+        for name in EngineRegistry::names() {
+            for repr in [TidsetRepr::Vec, TidsetRepr::Bitmap] {
+                let report = MiningSession::new(name)
+                    .min_sup(2)
+                    .tidset(repr)
+                    .p(3)
+                    .run_vec(&sc, &demo_db())
+                    .unwrap();
+                assert!(
+                    report.result.same_as(&oracle),
+                    "{name} tidset={}",
+                    repr.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn partition_strategies_are_orthogonal_to_results() {
+        let sc = SparkletContext::local(2);
+        let oracle = eclat_sequential(&demo_db(), 2);
+        for strategy in [
+            PartitionStrategy::EngineDefault,
+            PartitionStrategy::Ranked,
+            PartitionStrategy::Hash,
+            PartitionStrategy::ReverseHash,
+            PartitionStrategy::Weighted,
+        ] {
+            let report = MiningSession::new("eclat-v3")
+                .min_sup(2)
+                .partitioning(strategy)
+                .p(3)
+                .run_vec(&sc, &demo_db())
+                .unwrap();
+            assert!(report.result.same_as(&oracle), "{}", strategy.name());
+        }
+    }
+
+    #[test]
+    fn auto_repr_resolves_by_density() {
+        // dense: every item in half the transactions
+        assert_eq!(
+            TidsetRepr::Auto.resolve(500, 10, 100),
+            TidsetRepr::Bitmap
+        );
+        // sparse: avg support 1 out of 10_000
+        assert_eq!(TidsetRepr::Auto.resolve(10, 10, 10_000), TidsetRepr::Vec);
+        // fixed reprs pass through
+        assert_eq!(TidsetRepr::Vec.resolve(500, 10, 100), TidsetRepr::Vec);
+        assert_eq!(
+            TidsetRepr::Bitmap.resolve(1, 10, 10_000),
+            TidsetRepr::Bitmap
+        );
+        // degenerate inputs
+        assert_eq!(TidsetRepr::Auto.resolve(0, 0, 0), TidsetRepr::Vec);
+        // and a real mine under Auto stays exact
+        let sc = SparkletContext::local(2);
+        let report = MiningSession::new("eclat-v5")
+            .min_sup(2)
+            .tidset(TidsetRepr::Auto)
+            .run_vec(&sc, &demo_db())
+            .unwrap();
+        assert!(report.result.same_as(&eclat_sequential(&demo_db(), 2)));
+    }
+
+    #[test]
+    fn post_stage_pipeline_applies_in_order() {
+        let sc = SparkletContext::local(2);
+        let full = MiningSession::new("eclat-v4")
+            .min_sup(2)
+            .run_vec(&sc, &demo_db())
+            .unwrap()
+            .result;
+        let closed = MiningSession::new("eclat-v4")
+            .min_sup(2)
+            .post(PostStage::Closed)
+            .run_vec(&sc, &demo_db())
+            .unwrap()
+            .result;
+        assert!(closed.same_as(&postprocess::closed_itemsets(&full)));
+        let top3 = MiningSession::new("eclat-v4")
+            .min_sup(2)
+            .post(PostStage::Maximal)
+            .post(PostStage::TopK(3))
+            .run_vec(&sc, &demo_db())
+            .unwrap()
+            .result;
+        assert!(top3.len() <= 3);
+    }
+
+    #[test]
+    fn rules_ride_along() {
+        let sc = SparkletContext::local(2);
+        let report = MiningSession::new("eclat-v4")
+            .min_sup(2)
+            .rules(0.5)
+            .run_vec(&sc, &demo_db())
+            .unwrap();
+        let rules = report.rules.as_ref().unwrap();
+        assert!(!rules.is_empty());
+        assert!(rules.iter().all(|r| r.confidence >= 0.5));
+        assert_eq!(report.n_transactions, Some(demo_db().len()));
+        // Rules survive post-stage condensation: they derive from the
+        // full result, not the maximal-filtered one.
+        let condensed = MiningSession::new("eclat-v4")
+            .min_sup(2)
+            .post(PostStage::Maximal)
+            .rules(0.5)
+            .run_vec(&sc, &demo_db())
+            .unwrap();
+        let condensed_rules = condensed.rules.as_ref().unwrap();
+        assert_eq!(condensed_rules.len(), rules.len());
+        assert!(condensed_rules.iter().all(|r| !r.lift.is_nan()));
+    }
+
+    #[test]
+    fn report_carries_stage_metrics() {
+        let sc = SparkletContext::local(2);
+        let before = sc.metrics().stages().len();
+        let report = MiningSession::new("eclat-v1")
+            .min_sup(2)
+            .run_vec(&sc, &demo_db())
+            .unwrap();
+        assert!(report.n_stages() > 0, "eclat runs stages");
+        assert!(report.wall_ms >= 0.0);
+        // only the stages of *this* run, not the context's history
+        assert_eq!(
+            sc.metrics().stages().len(),
+            before + report.n_stages()
+        );
+        assert_eq!(report.engine, "eclat-v1");
+        assert_eq!(report.label, "EclatV1");
+        assert!(report.summary().contains("EclatV1"));
+    }
+
+    #[test]
+    fn fractional_min_sup_resolves_at_run_time() {
+        let sc = SparkletContext::local(2);
+        let report = MiningSession::new("eclat-v3")
+            .min_sup_frac(0.5)
+            .run_vec(&sc, &demo_db())
+            .unwrap();
+        // ceil(0.5 * 9) = 5
+        assert_eq!(report.min_sup, 5);
+        assert!(report
+            .result
+            .same_as(&eclat_sequential(&demo_db(), 5)));
+    }
+
+    #[test]
+    fn custom_engine_registers_in_one_line() {
+        // A correct "new backend": delegates to the oracle. Registering
+        // it makes it addressable by the session API immediately.
+        struct MirrorOracle;
+        impl FimEngine for MirrorOracle {
+            fn name(&self) -> &'static str {
+                "mirror-oracle"
+            }
+            fn mine(
+                &self,
+                _sc: &SparkletContext,
+                txns: &Rdd<Transaction>,
+                cfg: &MiningConfig,
+            ) -> MiningResult {
+                eclat_sequential(&txns.collect(), cfg.min_sup)
+            }
+        }
+        EngineRegistry::register(Arc::new(MirrorOracle));
+        let sc = SparkletContext::local(2);
+        let report = MiningSession::new("mirror-oracle")
+            .min_sup(2)
+            .run_vec(&sc, &demo_db())
+            .unwrap();
+        assert!(report.result.same_as(&eclat_sequential(&demo_db(), 2)));
+    }
+
+    #[test]
+    fn axis_parsers() {
+        assert_eq!(TidsetRepr::parse("bitmap").unwrap(), TidsetRepr::Bitmap);
+        assert_eq!(TidsetRepr::parse("VEC").unwrap(), TidsetRepr::Vec);
+        assert_eq!(TidsetRepr::parse("auto").unwrap(), TidsetRepr::Auto);
+        assert!(TidsetRepr::parse("trie").is_err());
+        assert_eq!(
+            PartitionStrategy::parse("weighted").unwrap(),
+            PartitionStrategy::Weighted
+        );
+        assert_eq!(
+            PartitionStrategy::parse("reverse-hash").unwrap(),
+            PartitionStrategy::ReverseHash
+        );
+        assert!(PartitionStrategy::parse("zigzag").is_err());
+    }
+}

@@ -274,27 +274,22 @@ pub fn mine_fpgrowth_rdd(
     MiningResult::new(mined.collect())
 }
 
-/// Convenience: mine an in-memory database.
-pub fn mine_fpgrowth_rdd_vec(
-    sc: &SparkletContext,
-    txns: Vec<Transaction>,
-    min_sup: u32,
-) -> MiningResult {
-    let parts = sc.default_parallelism();
-    let groups = sc.default_parallelism() * 2;
-    let rdd = sc.parallelize(txns, parts).map(|mut t| {
-        t.sort_unstable();
-        t.dedup();
-        t
-    });
-    mine_fpgrowth_rdd(sc, &rdd, min_sup, groups)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fim::engine::MiningSession;
     use crate::fim::sequential::eclat_sequential;
     use crate::util::prop::{forall, gen};
+
+    /// Mine an in-memory database through the unified session API.
+    fn mine_vec(sc: &SparkletContext, txns: Vec<Transaction>, min_sup: u32) -> MiningResult {
+        MiningSession::new("fpgrowth")
+            .min_sup(min_sup)
+            .n_groups(sc.default_parallelism() * 2)
+            .run_vec(sc, &txns)
+            .unwrap()
+            .result
+    }
 
     fn demo_db() -> Vec<Transaction> {
         vec![
@@ -351,7 +346,7 @@ mod tests {
     fn rdd_pfp_matches_sequential_on_demo() {
         let sc = SparkletContext::local(3);
         for min_sup in [1u32, 2, 3] {
-            let got = mine_fpgrowth_rdd_vec(&sc, demo_db(), min_sup);
+            let got = mine_vec(&sc, demo_db(), min_sup);
             let want = fpgrowth_sequential(&demo_db(), min_sup);
             assert!(got.same_as(&want), "min_sup={min_sup}");
         }
@@ -395,6 +390,6 @@ mod tests {
         assert!(fpgrowth_sequential(&[], 1).is_empty());
         assert!(fpgrowth_sequential(&demo_db(), 100).is_empty());
         let sc = SparkletContext::local(2);
-        assert!(mine_fpgrowth_rdd_vec(&sc, demo_db(), 100).is_empty());
+        assert!(mine_vec(&sc, demo_db(), 100).is_empty());
     }
 }

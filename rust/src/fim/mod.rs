@@ -4,12 +4,15 @@
 //! [`eqclass`]), the sequential oracles ([`sequential`]), the five
 //! RDD-Eclat variants ([`eclat`]) and the RDD-Apriori / YAFIM baseline
 //! ([`apriori`]), the paper's equivalence-class partitioners
-//! ([`partitioners`]), association-rule generation ([`rules`]), and the
+//! ([`partitioners`]), association-rule generation ([`rules`]), the
 //! incremental sliding-window miner for the streaming layer
-//! ([`streaming`]).
+//! ([`streaming`]) — all composed behind the unified [`engine`] API:
+//! [`engine::FimEngine`], the static [`engine::EngineRegistry`], and the
+//! builder-driven [`engine::MiningSession`].
 
 pub mod apriori;
 pub mod eclat;
+pub mod engine;
 pub mod eqclass;
 pub mod fpgrowth;
 pub mod postprocess;
@@ -22,7 +25,11 @@ pub mod trie;
 pub mod trimatrix;
 pub mod types;
 
-pub use eclat::{mine_eclat, EclatConfig, EclatVariant};
-pub use streaming::{IncrementalEclat, StreamingEclatConfig};
+pub use eclat::{mine_eclat, EclatVariant};
+pub use engine::{
+    EngineRegistry, FimEngine, FimError, MiningConfig, MiningReport, MiningSession,
+    PartitionStrategy, PostStage, TidsetRepr,
+};
+pub use streaming::{IncrementalEclat, StreamingEclatConfig, StreamingError};
 pub use tidset::{BitmapTidset, TidOps, VecTidset};
 pub use types::{FrequentItemset, Item, MiningResult, Transaction};

@@ -70,6 +70,21 @@ pub fn closed_itemsets(result: &MiningResult) -> MiningResult {
     MiningResult::new(closed)
 }
 
+/// The `k` highest-support itemsets (ties broken toward shorter, then
+/// lexicographically smaller itemsets, so the cut is deterministic).
+/// A `MiningSession` post-stage for dashboards that only want headliners.
+pub fn top_k(result: &MiningResult, k: usize) -> MiningResult {
+    let mut itemsets = result.itemsets.clone();
+    itemsets.sort_by(|a, b| {
+        b.support
+            .cmp(&a.support)
+            .then(a.items.len().cmp(&b.items.len()))
+            .then(a.items.cmp(&b.items))
+    });
+    itemsets.truncate(k);
+    MiningResult::new(itemsets)
+}
+
 /// Compression ratio of a condensed representation (|condensed| / |full|).
 pub fn compression_ratio(full: &MiningResult, condensed: &MiningResult) -> f64 {
     if full.is_empty() {
@@ -179,6 +194,26 @@ mod tests {
                 f.items
             );
         }
+    }
+
+    #[test]
+    fn top_k_selects_highest_supports_deterministically() {
+        let full = eclat_sequential(&demo_db(), 2);
+        let top = top_k(&full, 5);
+        assert_eq!(top.len(), 5);
+        let cutoff = top.itemsets.iter().map(|f| f.support).min().unwrap();
+        // nothing outside the top-k strictly beats anything inside it
+        let excluded_max = full
+            .itemsets
+            .iter()
+            .filter(|f| !top.itemsets.contains(f))
+            .map(|f| f.support)
+            .max()
+            .unwrap();
+        assert!(excluded_max <= cutoff);
+        // k >= |full| is the identity (as a set)
+        assert!(top_k(&full, 10_000).same_as(&full));
+        assert!(top_k(&full, 0).is_empty());
     }
 
     #[test]

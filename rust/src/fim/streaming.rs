@@ -29,7 +29,10 @@
 //! across a stream — the cache-absence bound above is relative to it.
 //!
 //! Transaction ids are `u32` and globally monotone; a stream is limited
-//! to ~4.3 B transactions before the counter would wrap.
+//! to ~4.3 B transactions before the counter would wrap —
+//! [`IncrementalEclat::push_batch`] returns
+//! [`StreamingError::TidOverflow`] at that boundary instead of wrapping
+//! and silently corrupting the sorted-tid invariant.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Mutex};
@@ -37,9 +40,35 @@ use std::sync::{Arc, Mutex};
 use crate::sparklet::streaming::DStream;
 use crate::util::hash::FxHashMap;
 
-use super::eclat::{mine_eclat_vec, EclatConfig};
+use super::engine::MiningSession;
 use super::tidset::VecTidset;
 use super::types::{FrequentItemset, Item, MiningResult, Transaction};
+
+/// Typed failures of the streaming miner.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StreamingError {
+    /// Ingesting the batch would exhaust the `u32` transaction-id space
+    /// (the stream has seen ~4.3 B transactions). `next_tid` is the
+    /// first id the batch would have used; `batch_len` the batch size
+    /// that no longer fits.
+    TidOverflow { next_tid: u32, batch_len: usize },
+}
+
+impl std::fmt::Display for StreamingError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::TidOverflow { next_tid, batch_len } => write!(
+                f,
+                "streaming tid space exhausted: batch of {batch_len} transactions \
+                 does not fit above tid {next_tid} (u32 transaction ids cap a stream \
+                 at {} transactions)",
+                u32::MAX
+            ),
+        }
+    }
+}
+
+impl std::error::Error for StreamingError {}
 
 /// Parameters of a streaming mine: absolute support threshold plus the
 /// window geometry in batches.
@@ -165,14 +194,19 @@ impl IncrementalEclat {
 
     /// Ingest one batch: assign global tids and fold the batch's vertical
     /// representation into the per-item window tidsets.
-    pub fn push_batch(&mut self, txns: &[Transaction]) {
+    ///
+    /// Fails with [`StreamingError::TidOverflow`] at the documented
+    /// ~4.3 B-transaction limit instead of wrapping and silently
+    /// corrupting the sorted-tid invariant; on error the miner state is
+    /// untouched, so callers can checkpoint/rotate and continue.
+    pub fn push_batch(&mut self, txns: &[Transaction]) -> Result<(), StreamingError> {
         let start = self.next_tid;
-        // Fail loudly at the documented ~4.3 B-transaction limit instead
-        // of wrapping and silently corrupting the sorted-tid invariant.
-        let len = u32::try_from(txns.len()).expect("batch exceeds u32 transaction ids");
-        let end = start
-            .checked_add(len)
-            .expect("streaming tid space exhausted (u32 transaction ids)");
+        let overflow = || StreamingError::TidOverflow {
+            next_tid: self.next_tid,
+            batch_len: txns.len(),
+        };
+        let len = u32::try_from(txns.len()).map_err(|_| overflow())?;
+        let end = start.checked_add(len).ok_or_else(overflow)?;
         for (i, t) in txns.iter().enumerate() {
             let tid = start + i as u32;
             let mut items = t.clone();
@@ -185,6 +219,7 @@ impl IncrementalEclat {
         self.next_tid = end;
         self.batch_ranges.push_back((start, len));
         self.batches_pushed += 1;
+        Ok(())
     }
 
     /// Mine the current window (the last `cfg.window` ingested batches),
@@ -359,7 +394,8 @@ pub fn attach_incremental_eclat(
     stream.foreach_rdd(move |t, rdd| {
         let batch = rdd.collect();
         let mut m = handle.lock().unwrap();
-        m.push_batch(&batch);
+        m.push_batch(&batch)
+            .unwrap_or_else(|e| panic!("streaming ingest failed: {e}"));
         // Slide cadence counts *pushed batches*, not global ticks: a
         // source with slide_interval > 1 only delivers a batch at its
         // active ticks.
@@ -390,19 +426,24 @@ pub struct CheckedWindow<'a> {
 
 /// [`attach_incremental_eclat`] plus a per-window cross-check: the raw
 /// batches of the current window are retained, re-mined from scratch
-/// with batch RDD-Eclat (`mine_eclat_vec` on the stream's engine, with
-/// the given `eclat` config), and asserted identical to the incremental
+/// through the given [`MiningSession`] (on the stream's engine — any
+/// registered engine works), and asserted identical to the incremental
 /// result before `report` is called. This is the one implementation of
 /// the verification scaffold the CLI `stream` command and the
 /// `streaming_clickstream` example share.
+///
+/// The session must carry an *absolute* `min_sup` equal to the
+/// streaming config's (a window is mined many times; fractional
+/// supports would re-resolve against every window).
 pub fn attach_checked_incremental_eclat(
     stream: &DStream<Transaction>,
     cfg: StreamingEclatConfig,
-    eclat: EclatConfig,
+    session: MiningSession,
     report: impl Fn(&CheckedWindow<'_>) + Send + Sync + 'static,
 ) -> Arc<Mutex<IncrementalEclat>> {
     assert_eq!(
-        eclat.min_sup, cfg.min_sup,
+        session.mining_config().min_sup,
+        cfg.min_sup,
         "incremental and batch mines must share one min_sup"
     );
     let sc = stream.stream_context().spark().clone();
@@ -426,7 +467,10 @@ pub fn attach_checked_incremental_eclat(
             history.lock().unwrap().iter().flatten().cloned().collect();
         let n_txns = window_txns.len();
         let t0 = std::time::Instant::now();
-        let full = mine_eclat_vec(&sc, window_txns, &eclat);
+        let full = session
+            .run_vec(&sc, &window_txns)
+            .unwrap_or_else(|e| panic!("window cross-check session failed: {e}"))
+            .result;
         let full_ms = t0.elapsed().as_secs_f64() * 1e3;
         assert!(
             inc.same_as(&full),
@@ -461,7 +505,7 @@ mod tests {
     fn single_window_matches_sequential() {
         let mut inc = IncrementalEclat::new(StreamingEclatConfig::new(2, 1, 1));
         let txns = batch(&[&[1, 2, 5], &[2, 4], &[2, 3], &[1, 2, 4], &[1, 3]]);
-        inc.push_batch(&txns);
+        inc.push_batch(&txns).unwrap();
         let got = inc.mine_window();
         let want = eclat_sequential(&txns, 2);
         assert!(got.same_as(&want), "got {:?}", got.canonical());
@@ -479,7 +523,7 @@ mod tests {
         for (window, slide) in [(2usize, 1usize), (3, 1), (3, 2), (2, 2), (1, 1), (2, 3)] {
             let mut inc = IncrementalEclat::new(StreamingEclatConfig::new(2, window, slide));
             for (t, b) in batches.iter().enumerate() {
-                inc.push_batch(b);
+                inc.push_batch(b).unwrap();
                 if (t + 1) % slide == 0 {
                     let got = inc.mine_window();
                     let want = eclat_sequential(&window_txns(&batches, t, window), 2);
@@ -501,7 +545,7 @@ mod tests {
         let mk = |seed: u32| batch(&[&[1, 2, 3], &[1, 2], &[2, 3], &[seed % 7 + 10, 1]]);
         let mut inc = IncrementalEclat::new(StreamingEclatConfig::new(3, 4, 1));
         for t in 0..8u32 {
-            inc.push_batch(&mk(t));
+            inc.push_batch(&mk(t)).unwrap();
             inc.mine_window();
         }
         let stats = inc.stats();
@@ -517,7 +561,7 @@ mod tests {
             .collect();
         let mut inc = IncrementalEclat::new(StreamingEclatConfig::new(2, 1, 2));
         for (t, b) in batches.iter().enumerate() {
-            inc.push_batch(b);
+            inc.push_batch(b).unwrap();
             if (t + 1) % 2 == 0 {
                 let got = inc.mine_window();
                 let want = eclat_sequential(&window_txns(&batches, t, 1), 2);
@@ -529,15 +573,41 @@ mod tests {
     #[test]
     fn empty_batches_and_empty_windows() {
         let mut inc = IncrementalEclat::new(StreamingEclatConfig::new(1, 2, 1));
-        inc.push_batch(&[]);
+        inc.push_batch(&[]).unwrap();
         assert!(inc.mine_window().is_empty());
-        inc.push_batch(&batch(&[&[4, 5]]));
+        inc.push_batch(&batch(&[&[4, 5]])).unwrap();
         let got = inc.mine_window();
         assert_eq!(got.canonical().len(), 3); // {4}, {5}, {4 5}
-        inc.push_batch(&[]);
-        inc.push_batch(&[]);
+        inc.push_batch(&[]).unwrap();
+        inc.push_batch(&[]).unwrap();
         // window of the last 2 batches is now empty again
         assert!(inc.mine_window().is_empty());
+    }
+
+    #[test]
+    fn tid_overflow_is_a_typed_error_at_the_boundary() {
+        let mut inc = IncrementalEclat::new(StreamingEclatConfig::new(1, 2, 1));
+        // Jump to the edge of the tid space (same-module access).
+        inc.next_tid = u32::MAX - 1;
+        // One transaction still fits: it takes the final tid u32::MAX - 1.
+        inc.push_batch(&batch(&[&[1, 2]])).unwrap();
+        assert_eq!(inc.next_tid, u32::MAX);
+        // The next transaction would need tid u32::MAX + 1 — typed error,
+        // state untouched.
+        let err = inc.push_batch(&batch(&[&[3]])).unwrap_err();
+        assert_eq!(
+            err,
+            StreamingError::TidOverflow {
+                next_tid: u32::MAX,
+                batch_len: 1
+            }
+        );
+        assert!(err.to_string().contains("tid space exhausted"), "{err}");
+        assert_eq!(inc.next_tid, u32::MAX);
+        assert_eq!(inc.batches_pushed(), 1);
+        // Empty batches still fit at the boundary (they consume no tids).
+        inc.push_batch(&[]).unwrap();
+        assert_eq!(inc.batches_pushed(), 2);
     }
 
     #[test]

@@ -3,43 +3,76 @@
 //! Commands:
 //!   table1                         regenerate Table 1 (dataset properties)
 //!   fig --id N [--panel a|b]       regenerate Fig N (1..6)
-//!   mine --dataset D --min-sup F   run one algorithm on one dataset
-//!        [--variant v1..v5|apriori] [--cores N] [--p N] [--scale F]
 //!   claims --id N                  run Fig N and check the paper's claims
+//!   mine --dataset D --min-sup F --engine NAME --tidset vec|bitmap|auto
+//!                                  one mining session (any registered engine)
+//!   bench --dataset D --min-sup F  sweep the engine registry, emit BENCH_fim.json
+//!   rules --dataset D --min-conf F mine + derive association rules
+//!   generate --dataset D --out P   write a generated dataset (FIMI format)
 //!   stream --dataset D --min-sup F --window N --slide N
 //!                                  micro-batch sliding-window mining
 //!   xla-smoke                      load + execute the AOT artifacts
 //!   all                            table1 + every figure (long)
-//!   help
+//!   help                           (or `<command> --help` for per-command flags)
+//!
+//! Every command validates its flags against a spec allowlist — unknown
+//! or misspelled flags fail with a suggestion instead of silently
+//! running with defaults. Engine names come from the `EngineRegistry`,
+//! so newly registered engines are immediately addressable.
 //!
 //! Shared env overrides: REPRO_SCALE, REPRO_SEED, REPRO_CORES,
 //! REPRO_BENCH_REPS, REPRO_BENCH_WARMUP, REPRO_ARTIFACTS.
 
 use anyhow::{bail, Result};
 
-use rdd_eclat::cli::Args;
+use rdd_eclat::cli::{find_command, Args, CommandSpec, FlagSpec};
 use rdd_eclat::coordinator::{experiments, report, ExperimentConfig};
 use rdd_eclat::data::Dataset;
-use rdd_eclat::fim::eclat::EclatVariant;
+use rdd_eclat::fim::engine::{
+    EngineRegistry, FimError, MiningSession, PartitionStrategy, PostStage, TidsetRepr,
+};
 use rdd_eclat::fim::types::abs_min_sup;
+use rdd_eclat::sparklet::SparkletContext;
 
 fn main() -> Result<()> {
+    let specs = command_specs();
     let args = match Args::from_env() {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
-            print_help();
+            print_help(&specs);
             std::process::exit(2);
         }
     };
+    if args.command == "help" {
+        print_help(&specs);
+        return Ok(());
+    }
+    let spec = match find_command(&specs, &args.command) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            print_help(&specs);
+            std::process::exit(2);
+        }
+    };
+    if args.wants_help() {
+        println!("{}", spec.render_help());
+        return Ok(());
+    }
+    if let Err(e) = args.validate(spec) {
+        eprintln!("error: {e}");
+        std::process::exit(2);
+    }
+
     let mut cfg = ExperimentConfig::default();
-    if let Some(scale) = args.get_parse::<f64>("scale").map_err(anyhow::Error::msg)? {
+    if let Some(scale) = parsed::<f64>(&args, "scale")? {
         cfg.scale = scale;
     }
-    if let Some(cores) = args.get_parse::<usize>("cores").map_err(anyhow::Error::msg)? {
+    if let Some(cores) = parsed::<usize>(&args, "cores")? {
         cfg.cores = cores;
     }
-    if let Some(p) = args.get_parse::<usize>("p").map_err(anyhow::Error::msg)? {
+    if let Some(p) = parsed::<usize>(&args, "p")? {
         cfg.p = p;
     }
 
@@ -48,6 +81,7 @@ fn main() -> Result<()> {
         "fig" => run_fig(&args, &cfg)?,
         "claims" => run_claims(&args, &cfg)?,
         "mine" => run_mine(&args, &cfg)?,
+        "bench" => run_bench(&args, &cfg)?,
         "generate" => run_generate(&args, &cfg)?,
         "rules" => run_rules(&args, &cfg)?,
         "stream" => run_stream(&args, &cfg)?,
@@ -58,10 +92,126 @@ fn main() -> Result<()> {
                 run_fig_id(id, None, &cfg)?;
             }
         }
-        _ => print_help(),
+        other => bail!("unhandled command {other} (spec/dispatch mismatch)"),
     }
     Ok(())
 }
+
+fn parsed<T: std::str::FromStr>(args: &Args, name: &str) -> Result<Option<T>> {
+    args.get_parse(name).map_err(anyhow::Error::msg)
+}
+
+// ------------------------------------------------------------ specs/help
+
+fn shared_flags() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec::new("scale", "F", "dataset scale factor (default REPRO_SCALE or 0.25)"),
+        FlagSpec::new("cores", "N", "executor cores (default REPRO_CORES or machine)"),
+        FlagSpec::new("p", "N", "class partitions for hash/reverse-hash/weighted (default 10)"),
+    ]
+}
+
+/// Per-command flag allowlists. Engine- and axis-valued flags derive
+/// their accepted values from the `EngineRegistry` and the axis parsers,
+/// so registering an engine extends the CLI without touching this table.
+fn command_specs() -> Vec<CommandSpec> {
+    let engines = EngineRegistry::names().join("|");
+    let engine_flag = || FlagSpec::new("engine", "NAME", format!("engine ({engines})"));
+    let dataset_flag = || FlagSpec::new("dataset", "D", "dataset (bms1|bms2|t10|t40)");
+    let minsup_flag = || FlagSpec::new("min-sup", "F", "relative minimum support (fraction of |D|)");
+    // The axis flags `session_from_args` consumes — every command that
+    // builds a session through it must allowlist all of these, or the
+    // validator would reject flags the handler supports.
+    let session_axis_flags = || {
+        vec![
+            engine_flag(),
+            FlagSpec::new("variant", "NAME", "legacy spelling of --engine (v1..v5 etc.)"),
+            FlagSpec::new("tidset", "R", "tidset representation (vec|bitmap|auto)"),
+            FlagSpec::new(
+                "partitioner",
+                "S",
+                "class placement (engine|ranked|hash|reverse-hash|weighted)",
+            ),
+            FlagSpec::new("prefix-len", "K", "equivalence-class prefix length (1|2)"),
+            FlagSpec::new("groups", "G", "PFP group shards (fpgrowth engine)"),
+            FlagSpec::new("post", "S", "post-stage (closed|maximal|top=K)"),
+        ]
+    };
+    let mut mine_flags = vec![
+        dataset_flag(),
+        minsup_flag(),
+        FlagSpec::new("tri-matrix", "on|off", "triangular-matrix Phase-2 (default: per dataset)"),
+    ];
+    mine_flags.extend(session_axis_flags());
+    mine_flags.extend(shared_flags());
+    let mut bench_flags = vec![
+        dataset_flag(),
+        minsup_flag(),
+        FlagSpec::new("engines", "CSV", "engines to sweep (default: all registered)"),
+        FlagSpec::new("out", "PATH", "machine-readable output (default BENCH_fim.json)"),
+    ];
+    bench_flags.extend(shared_flags());
+    let mut rules_flags = vec![
+        dataset_flag(),
+        FlagSpec::new("input", "PATH", "mine a FIMI file instead of a generated dataset"),
+        minsup_flag(),
+        FlagSpec::new("min-conf", "F", "minimum rule confidence (default 0.5)"),
+        FlagSpec::new("top", "N", "rules to print (default 20)"),
+    ];
+    rules_flags.extend(session_axis_flags());
+    rules_flags.extend(shared_flags());
+    let mut stream_flags = vec![
+        dataset_flag(),
+        minsup_flag(),
+        FlagSpec::new("window", "N", "window length in batches (default 4)"),
+        FlagSpec::new("slide", "N", "slide length in batches (default 2)"),
+        FlagSpec::new("batches", "N", "batches to run (default 10)"),
+        FlagSpec::new("batch-size", "N", "transactions per batch (default 2000)"),
+    ];
+    stream_flags.extend(session_axis_flags());
+    stream_flags.extend(shared_flags());
+    let mut fig_flags = vec![
+        FlagSpec::new("id", "N", "figure number (1..6)"),
+        FlagSpec::new("panel", "a|b", "panel for figs 1-4 (default: both)"),
+    ];
+    fig_flags.extend(shared_flags());
+    let mut claims_flags = vec![FlagSpec::new("id", "N", "figure number (1..6, default 3)")];
+    claims_flags.extend(shared_flags());
+    let mut generate_flags = vec![
+        dataset_flag(),
+        FlagSpec::new("out", "PATH", "output path (default dataset.txt)"),
+        FlagSpec::new("seed", "N", "generator seed (default REPRO_SEED)"),
+    ];
+    generate_flags.extend(shared_flags());
+
+    vec![
+        CommandSpec::new("table1", "dataset properties (Table 1)", shared_flags()),
+        CommandSpec::new("fig", "regenerate figure N in 1..6", fig_flags),
+        CommandSpec::new("claims", "figure N + paper-claim checks", claims_flags),
+        CommandSpec::new("mine", "one mining session through the unified API", mine_flags),
+        CommandSpec::new("bench", "sweep the engine registry; emit BENCH_fim.json", bench_flags),
+        CommandSpec::new("rules", "mine + derive association rules", rules_flags),
+        CommandSpec::new("generate", "write a generated dataset (FIMI format)", generate_flags),
+        CommandSpec::new("stream", "micro-batch sliding-window mining", stream_flags),
+        CommandSpec::new("xla-smoke", "verify the XLA/PJRT artifact path", Vec::new()),
+        CommandSpec::new("all", "table1 + every figure (long)", shared_flags()),
+        CommandSpec::new("help", "this overview", Vec::new()),
+    ]
+}
+
+fn print_help(specs: &[CommandSpec]) {
+    println!("repro — RDD-Eclat reproduction (see README.md)\n");
+    println!("USAGE: repro <command> [flags]   (repro <command> --help for flags)\n");
+    println!("COMMANDS:");
+    for s in specs {
+        println!("  {:<12} {}", s.name, s.about);
+    }
+    println!("\nENGINES (mine/bench/rules/stream --engine):");
+    print!("{}", EngineRegistry::describe_all());
+    println!("\nENV: REPRO_SCALE REPRO_SEED REPRO_CORES REPRO_BENCH_REPS");
+}
+
+// -------------------------------------------------------------- commands
 
 fn parse_dataset(name: &str) -> Result<Dataset> {
     Ok(match name.to_lowercase().as_str() {
@@ -84,10 +234,7 @@ fn fig_dataset(id: usize) -> Result<Dataset> {
 }
 
 fn run_fig(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
-    let id: usize = args
-        .get_parse("id")
-        .map_err(anyhow::Error::msg)?
-        .ok_or_else(|| anyhow::anyhow!("--id 1..6 required"))?;
+    let id: usize = parsed(args, "id")?.ok_or_else(|| anyhow::anyhow!("--id 1..6 required"))?;
     let panel = args.get("panel").map(|s| s.to_string());
     run_fig_id(id, panel, cfg)
 }
@@ -116,10 +263,7 @@ fn run_fig_id(id: usize, panel: Option<String>, cfg: &ExperimentConfig) -> Resul
 }
 
 fn run_claims(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
-    let id: usize = args
-        .get_parse("id")
-        .map_err(anyhow::Error::msg)?
-        .unwrap_or(3);
+    let id: usize = parsed(args, "id")?.unwrap_or(3);
     match id {
         1..=4 => {
             let d = fig_dataset(id)?;
@@ -153,45 +297,173 @@ fn run_claims(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
     Ok(())
 }
 
+/// Resolve `--engine` (with `--variant` as the legacy spelling) against
+/// the registry, failing with the registry's own suggestion-bearing
+/// error on unknown names.
+fn engine_from_args(args: &Args, default: &str) -> Result<String> {
+    let name = args
+        .get("engine")
+        .or_else(|| args.get("variant"))
+        .unwrap_or(default);
+    match EngineRegistry::get(name) {
+        Some(e) => Ok(e.name().to_string()),
+        None => bail!(FimError::UnknownEngine {
+            name: name.to_string(),
+            suggestion: EngineRegistry::suggest(name).map(str::to_string),
+        }),
+    }
+}
+
+fn parse_post(s: &str) -> Result<PostStage> {
+    let lower = s.to_lowercase();
+    if let Some(k) = lower.strip_prefix("top=").or_else(|| lower.strip_prefix("top:")) {
+        let k: usize = k
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--post top=K: cannot parse {k:?}"))?;
+        return Ok(PostStage::TopK(k));
+    }
+    match lower.as_str() {
+        "closed" => Ok(PostStage::Closed),
+        "maximal" => Ok(PostStage::Maximal),
+        other => bail!("unknown post-stage {other:?} (closed|maximal|top=K)"),
+    }
+}
+
+/// Build a `MiningSession` from the axis flags shared by mine-like
+/// commands.
+fn session_from_args(args: &Args, cfg: &ExperimentConfig, default_engine: &str) -> Result<MiningSession> {
+    let engine = engine_from_args(args, default_engine)?;
+    let mut session = MiningSession::new(engine).p(cfg.p);
+    if let Some(repr) = args.get("tidset") {
+        session = session.tidset(TidsetRepr::parse(repr).map_err(anyhow::Error::msg)?);
+    }
+    if let Some(s) = args.get("partitioner") {
+        session = session.partitioning(PartitionStrategy::parse(s).map_err(anyhow::Error::msg)?);
+    }
+    if let Some(k) = parsed::<usize>(args, "prefix-len")? {
+        if !(1..=2).contains(&k) {
+            bail!("--prefix-len must be 1 or 2");
+        }
+        session = session.prefix_len(k);
+    }
+    if let Some(g) = parsed::<usize>(args, "groups")? {
+        session = session.n_groups(g);
+    }
+    if let Some(post) = args.get("post") {
+        session = session.post(parse_post(post)?);
+    }
+    Ok(session)
+}
+
 fn run_mine(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
     let dataset = parse_dataset(args.get_or("dataset", "t10"))?;
-    let min_sup_frac: f64 = args
-        .get_parse("min-sup")
-        .map_err(anyhow::Error::msg)?
-        .unwrap_or(0.01);
-    let variant = args.get_or("variant", "v4").to_lowercase();
+    let min_sup_frac: f64 = parsed(args, "min-sup")?.unwrap_or(0.01);
+    let tri_matrix = match args.get("tri-matrix") {
+        Some("on") | Some("true") => true,
+        Some("off") | Some("false") => false,
+        Some(other) => bail!("--tri-matrix must be on|off, got {other:?}"),
+        // bare `--tri-matrix` means on; only full absence falls back to
+        // the dataset's paper default
+        None if args.flag("tri-matrix") => true,
+        None => dataset.tri_matrix_mode(),
+    };
+    let session = session_from_args(args, cfg, "eclat-v4")?
+        .min_sup_frac(min_sup_frac)
+        .tri_matrix(tri_matrix);
+    let txns = dataset.generate_scaled(cfg.seed, cfg.scale);
+    println!(
+        "mining {} ({} txns, scale {}) at min_sup {} with engine {} on {} cores",
+        dataset.name(),
+        txns.len(),
+        cfg.scale,
+        min_sup_frac,
+        session.engine_name(),
+        cfg.cores
+    );
+    let sc = SparkletContext::local(cfg.cores);
+    let report = session.run_vec(&sc, &txns)?;
+    println!("{}", report.summary());
+    let hist = report.result.histogram();
+    for (k, count) in hist.iter().enumerate() {
+        println!("  L{}: {count}", k + 1);
+    }
+    if !report.stages.is_empty() {
+        println!("per-phase stages:");
+        for (i, s) in report.stages.iter().enumerate() {
+            println!(
+                "  stage {i:>2} {:<11} {:>3} tasks {:>9.1} ms  shuffle {:>7} rec / ~{:>9} B",
+                format!("{:?}", s.kind),
+                s.num_tasks,
+                s.wall.as_secs_f64() * 1e3,
+                s.shuffle_records,
+                s.shuffle_bytes
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Sweep engines over one dataset/support point and write the
+/// machine-readable `BENCH_fim.json` (the perf-trajectory artifact CI
+/// and later PRs diff against).
+fn run_bench(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
+    let dataset = parse_dataset(args.get_or("dataset", "t10"))?;
+    let min_sup_frac: f64 = parsed(args, "min-sup")?.unwrap_or(0.01);
+    let out_path = args.get_or("out", "BENCH_fim.json").to_string();
+    let engines: Vec<String> = match args.get("engines") {
+        None => experiments::registry_roster().iter().map(|s| s.to_string()).collect(),
+        Some("all") => experiments::registry_roster().iter().map(|s| s.to_string()).collect(),
+        Some(csv) => csv.split(',').map(|s| s.trim().to_string()).collect(),
+    };
     let txns = dataset.generate_scaled(cfg.seed, cfg.scale);
     let min_sup = abs_min_sup(min_sup_frac, txns.len());
-    let algo = match variant.as_str() {
-        "apriori" => experiments::Algo::Apriori,
-        "v1" => experiments::Algo::Eclat(EclatVariant::V1),
-        "v2" => experiments::Algo::Eclat(EclatVariant::V2),
-        "v3" => experiments::Algo::Eclat(EclatVariant::V3),
-        "v4" => experiments::Algo::Eclat(EclatVariant::V4),
-        "v5" => experiments::Algo::Eclat(EclatVariant::V5),
-        other => bail!("unknown variant {other}"),
-    };
     println!(
-        "mining {} ({} txns, scale {}) at min_sup {} ({} abs) with {} on {} cores",
+        "bench: {} ({} txns, scale {}) at min_sup {} ({} abs), {} engines, {} cores",
         dataset.name(),
         txns.len(),
         cfg.scale,
         min_sup_frac,
         min_sup,
-        algo.name(),
+        engines.len(),
         cfg.cores
     );
-    let (result, ms) = experiments::run_algo(algo, &txns, min_sup, dataset.tri_matrix_mode(), cfg);
-    println!(
-        "found {} frequent itemsets (max length {}) in {:.1} ms",
-        result.len(),
-        result.max_length(),
-        ms
-    );
-    let hist = result.histogram();
-    for (k, count) in hist.iter().enumerate() {
-        println!("  L{}: {count}", k + 1);
+    let mut rows: Vec<String> = Vec::new();
+    for name in &engines {
+        let sc = SparkletContext::local(cfg.cores);
+        let report = MiningSession::new(name.as_str())
+            .min_sup(min_sup)
+            .tri_matrix(dataset.tri_matrix_mode())
+            .p(cfg.p)
+            .run_vec(&sc, &txns)?;
+        println!(
+            "  {:<14} {:>7} itemsets {:>9.1} ms  {:>3} stages  shuffle {:>8} rec / ~{:>10} B",
+            report.label,
+            report.result.len(),
+            report.wall_ms,
+            report.n_stages(),
+            report.shuffle_records(),
+            report.shuffle_bytes()
+        );
+        rows.push(format!(
+            "  {{\"engine\": \"{}\", \"label\": \"{}\", \"dataset\": \"{}\", \
+             \"min_sup\": {}, \"min_sup_abs\": {}, \"transactions\": {}, \
+             \"itemsets\": {}, \"wall_ms\": {:.3}, \"stages\": {}, \
+             \"shuffle_records\": {}, \"shuffle_bytes\": {}}}",
+            report.engine,
+            report.label,
+            dataset.name(),
+            min_sup_frac,
+            min_sup,
+            txns.len(),
+            report.result.len(),
+            report.wall_ms,
+            report.n_stages(),
+            report.shuffle_records(),
+            report.shuffle_bytes()
+        ));
     }
+    std::fs::write(&out_path, format!("[\n{}\n]\n", rows.join(",\n")))?;
+    println!("wrote {out_path} ({} engines)", rows.len());
     Ok(())
 }
 
@@ -199,12 +471,7 @@ fn run_mine(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
 fn run_generate(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
     let dataset = parse_dataset(args.get_or("dataset", "t10"))?;
     let out = args.get_or("out", "dataset.txt").to_string();
-    let txns = dataset.generate_scaled(
-        args.get_parse::<u64>("seed")
-            .map_err(anyhow::Error::msg)?
-            .unwrap_or(cfg.seed),
-        cfg.scale,
-    );
+    let txns = dataset.generate_scaled(parsed(args, "seed")?.unwrap_or(cfg.seed), cfg.scale);
     rdd_eclat::data::write_transactions(&out, &txns)?;
     let stats = rdd_eclat::data::DatasetStats::compute(&txns);
     println!("wrote {out}: {stats}");
@@ -212,39 +479,25 @@ fn run_generate(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
 }
 
 /// Mine + derive association rules from a dataset (generated or a file
-/// via --input).
+/// via --input) — a session with rule generation attached.
 fn run_rules(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
-    use rdd_eclat::fim::eclat::{mine_eclat_vec, EclatConfig};
-    use rdd_eclat::fim::rules::generate_rules;
-    use rdd_eclat::sparklet::SparkletContext;
     let txns = if let Some(path) = args.get("input") {
         rdd_eclat::data::read_transactions(path)?
     } else {
         parse_dataset(args.get_or("dataset", "t10"))?.generate_scaled(cfg.seed, cfg.scale)
     };
-    let min_sup_frac: f64 = args
-        .get_parse("min-sup")
-        .map_err(anyhow::Error::msg)?
-        .unwrap_or(0.01);
-    let min_conf: f64 = args
-        .get_parse("min-conf")
-        .map_err(anyhow::Error::msg)?
-        .unwrap_or(0.5);
-    let top: usize = args
-        .get_parse("top")
-        .map_err(anyhow::Error::msg)?
-        .unwrap_or(20);
-    let min_sup = abs_min_sup(min_sup_frac, txns.len());
+    let min_sup_frac: f64 = parsed(args, "min-sup")?.unwrap_or(0.01);
+    let min_conf: f64 = parsed(args, "min-conf")?.unwrap_or(0.5);
+    let top: usize = parsed(args, "top")?.unwrap_or(20);
+    let session = session_from_args(args, cfg, "eclat-v5")?
+        .min_sup_frac(min_sup_frac)
+        .rules(min_conf);
     let sc = SparkletContext::local(cfg.cores);
-    let result = mine_eclat_vec(
-        &sc,
-        txns.clone(),
-        &EclatConfig::new(EclatVariant::V5, min_sup).with_p(cfg.p),
-    );
-    let rules = generate_rules(&result, min_conf, txns.len());
+    let report = session.run_vec(&sc, &txns)?;
+    let rules = report.rules.as_deref().unwrap_or(&[]);
     println!(
         "{} itemsets, {} rules (min_sup={min_sup_frac}, min_conf={min_conf}); top {top}:",
-        result.len(),
+        report.result.len(),
         rules.len()
     );
     for r in rules.iter().take(top) {
@@ -255,38 +508,26 @@ fn run_rules(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
 
 /// Micro-batch streaming mine: a generator-driven DStream of transaction
 /// batches, sliding-window incremental Eclat per window, checked and
-/// timed against a from-scratch re-mine of the same window.
+/// timed against a from-scratch re-mine (through the unified session,
+/// on any registered engine) of the same window.
 fn run_stream(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
-    use rdd_eclat::fim::eclat::EclatConfig;
     use rdd_eclat::fim::streaming::{attach_checked_incremental_eclat, StreamingEclatConfig};
-    use rdd_eclat::sparklet::{SparkletContext, StreamContext};
+    use rdd_eclat::sparklet::StreamContext;
 
     let dataset = parse_dataset(args.get_or("dataset", "bms2"))?;
-    let min_sup_frac: f64 = args
-        .get_parse("min-sup")
-        .map_err(anyhow::Error::msg)?
-        .unwrap_or(0.005);
-    let window: usize = args
-        .get_parse("window")
-        .map_err(anyhow::Error::msg)?
-        .unwrap_or(4);
-    let slide: usize = args
-        .get_parse("slide")
-        .map_err(anyhow::Error::msg)?
-        .unwrap_or(2);
-    let n_batches: usize = args
-        .get_parse("batches")
-        .map_err(anyhow::Error::msg)?
-        .unwrap_or(10);
-    let batch_size: usize = args
-        .get_parse("batch-size")
-        .map_err(anyhow::Error::msg)?
-        .unwrap_or(2_000);
+    let min_sup_frac: f64 = parsed(args, "min-sup")?.unwrap_or(0.005);
+    let window: usize = parsed(args, "window")?.unwrap_or(4);
+    let slide: usize = parsed(args, "slide")?.unwrap_or(2);
+    let n_batches: usize = parsed(args, "batches")?.unwrap_or(10);
+    let batch_size: usize = parsed(args, "batch-size")?.unwrap_or(2_000);
 
     let min_sup = abs_min_sup(min_sup_frac, window * batch_size);
+    let session = session_from_args(args, cfg, "eclat-v5")?
+        .min_sup(min_sup)
+        .tri_matrix(dataset.tri_matrix_mode());
     println!(
         "streaming {}: {} batches x {} txns, window {} slide {} (batches), \
-         min_sup {} ({} abs/window), {} cores",
+         min_sup {} ({} abs/window), cross-check engine {}, {} cores",
         dataset.name(),
         n_batches,
         batch_size,
@@ -294,6 +535,7 @@ fn run_stream(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
         slide,
         min_sup_frac,
         min_sup,
+        session.engine_name(),
         cfg.cores
     );
 
@@ -308,8 +550,7 @@ fn run_stream(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
     let miner = attach_checked_incremental_eclat(
         &source,
         StreamingEclatConfig::new(min_sup, window, slide),
-        EclatConfig::new(EclatVariant::V5, min_sup)
-            .with_tri_matrix(dataset.tri_matrix_mode()),
+        session,
         |w| {
             println!(
                 "  window @t={:<3} {:>6} txns  {:>6} itemsets  incremental {:>8.1} ms  \
@@ -354,25 +595,4 @@ fn xla_smoke() -> Result<()> {
     assert_eq!(inter[0].count(), 67);
     println!("xla-smoke OK");
     Ok(())
-}
-
-fn print_help() {
-    println!(
-        "repro — RDD-Eclat reproduction (see README.md)\n\
-         \n\
-         USAGE: repro <command> [flags]\n\
-         \n\
-         COMMANDS:\n\
-           table1                       dataset properties (Table 1)\n\
-           fig --id N [--panel a|b]     regenerate figure N in 1..6\n\
-           claims --id N                figure N + paper-claim checks\n\
-           mine --dataset D --min-sup F --variant V   one mining run\n\
-           stream --dataset D --min-sup F --window N --slide N\n\
-                  --batches N --batch-size N          micro-batch sliding-window mine\n\
-           xla-smoke                    verify the XLA/PJRT artifact path\n\
-           all                          everything (long)\n\
-         \n\
-         FLAGS: --scale F  --cores N  --p N\n\
-         ENV:   REPRO_SCALE REPRO_SEED REPRO_CORES REPRO_BENCH_REPS"
-    );
 }

@@ -8,6 +8,7 @@ pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod text;
 pub mod timer;
 
 pub use bitset::Bitmap;

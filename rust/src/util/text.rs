@@ -1,0 +1,76 @@
+//! Small text helpers for CLI/registry diagnostics.
+
+/// Levenshtein edit distance (insert/delete/substitute, unit costs).
+/// Used for "did you mean ...?" suggestions on unknown engine names and
+/// misspelled CLI flags.
+pub fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    if a.is_empty() {
+        return b.len();
+    }
+    if b.is_empty() {
+        return a.len();
+    }
+    // One-row DP.
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Closest candidate to `input` by edit distance, if any is within
+/// `max_distance`. Ties resolve to the earliest candidate.
+pub fn closest<'a>(
+    input: &str,
+    candidates: impl IntoIterator<Item = &'a str>,
+    max_distance: usize,
+) -> Option<&'a str> {
+    let mut best: Option<(&'a str, usize)> = None;
+    for c in candidates {
+        let d = edit_distance(input, c);
+        let better = match best {
+            None => true,
+            Some((_, best_d)) => d < best_d,
+        };
+        if d <= max_distance && better {
+            best = Some((c, d));
+        }
+    }
+    best.map(|(c, _)| c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distance_basics() {
+        assert_eq!(edit_distance("", ""), 0);
+        assert_eq!(edit_distance("abc", "abc"), 0);
+        assert_eq!(edit_distance("abc", ""), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(edit_distance("min-supp", "min-sup"), 1);
+    }
+
+    #[test]
+    fn closest_respects_threshold() {
+        let cands = ["min-sup", "dataset", "engine"];
+        assert_eq!(closest("min-supp", cands, 2), Some("min-sup"));
+        assert_eq!(closest("engin", cands, 2), Some("engine"));
+        assert_eq!(closest("zzzzzz", cands, 2), None);
+    }
+
+    #[test]
+    fn closest_prefers_smaller_distance() {
+        let cands = ["vec", "bitmap", "auto"];
+        assert_eq!(closest("vecc", cands, 3), Some("vec"));
+    }
+}

@@ -1,0 +1,164 @@
+//! Registry-driven cross-engine agreement: **every** registered engine ×
+//! both tidset representations × weighted/fixed partitioning must return
+//! exactly the sequential oracle's itemsets on random databases.
+//!
+//! This subsumes the per-algorithm agreement checks: an engine added to
+//! the `EngineRegistry` is automatically held to the oracle here with no
+//! test changes — which is the point of registering engines once.
+
+use std::sync::Arc;
+
+use rdd_eclat::fim::engine::{
+    EngineRegistry, FimEngine, MiningConfig, MiningSession, PartitionStrategy, PostStage,
+    TidsetRepr,
+};
+use rdd_eclat::fim::sequential::eclat_sequential;
+use rdd_eclat::fim::types::{MiningResult, Transaction};
+use rdd_eclat::sparklet::{Rdd, SparkletContext};
+use rdd_eclat::util::prop::{forall, gen};
+
+#[test]
+fn registry_exposes_the_full_paper_family() {
+    let names = EngineRegistry::names();
+    for want in [
+        "eclat-v1",
+        "eclat-v2",
+        "eclat-v3",
+        "eclat-v4",
+        "eclat-v5",
+        "eclat-v6",
+        "apriori",
+        "fpgrowth",
+        "sequential",
+    ] {
+        assert!(names.contains(&want), "registry missing {want}: {names:?}");
+    }
+}
+
+#[test]
+fn prop_full_registry_agrees_with_oracle_across_axes() {
+    let sc = SparkletContext::local(2);
+    forall(6, gen::database(20, 8, 0.35), |db| {
+        let oracle = eclat_sequential(db, 2);
+        for engine in EngineRegistry::names() {
+            for repr in [TidsetRepr::Vec, TidsetRepr::Bitmap] {
+                for strategy in [PartitionStrategy::Weighted, PartitionStrategy::EngineDefault] {
+                    let got = MiningSession::new(engine)
+                        .min_sup(2)
+                        .tidset(repr)
+                        .partitioning(strategy)
+                        .p(3)
+                        .run_vec(&sc, db)
+                        .unwrap();
+                    if !got.result.same_as(&oracle) {
+                        eprintln!(
+                            "{engine} tidset={} partitioning={}: {} itemsets, want {}",
+                            repr.name(),
+                            strategy.name(),
+                            got.result.len(),
+                            oracle.len()
+                        );
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn auto_tidset_is_exact_for_every_engine() {
+    let sc = SparkletContext::local(2);
+    forall(4, gen::database(18, 7, 0.4), |db| {
+        let oracle = eclat_sequential(db, 2);
+        EngineRegistry::names().into_iter().all(|engine| {
+            MiningSession::new(engine)
+                .min_sup(2)
+                .tidset(TidsetRepr::Auto)
+                .run_vec(&sc, db)
+                .unwrap()
+                .result
+                .same_as(&oracle)
+        })
+    });
+}
+
+#[test]
+fn newly_registered_engine_joins_the_agreement_sweep() {
+    // A "new backend" registered in one line: it must immediately be
+    // addressable and held to the oracle by the same sweep loop.
+    struct OracleBackend;
+    impl FimEngine for OracleBackend {
+        fn name(&self) -> &'static str {
+            "test-oracle-backend"
+        }
+        fn mine(
+            &self,
+            _sc: &SparkletContext,
+            txns: &Rdd<Transaction>,
+            cfg: &MiningConfig,
+        ) -> MiningResult {
+            eclat_sequential(&txns.collect(), cfg.min_sup)
+        }
+    }
+    EngineRegistry::register(Arc::new(OracleBackend));
+    assert!(EngineRegistry::names().contains(&"test-oracle-backend"));
+    let sc = SparkletContext::local(2);
+    let db: Vec<Transaction> = vec![vec![1, 2], vec![1, 2, 3], vec![2, 3], vec![1, 3]];
+    for engine in EngineRegistry::names() {
+        let got = MiningSession::new(engine)
+            .min_sup(2)
+            .run_vec(&sc, &db)
+            .unwrap();
+        assert!(
+            got.result.same_as(&eclat_sequential(&db, 2)),
+            "{engine} disagrees after registration"
+        );
+    }
+}
+
+#[test]
+fn post_stages_compose_on_any_engine() {
+    let sc = SparkletContext::local(2);
+    let db: Vec<Transaction> = vec![
+        vec![1, 2, 3],
+        vec![1, 2, 3],
+        vec![1, 2],
+        vec![2, 3],
+        vec![1, 3],
+    ];
+    for engine in ["eclat-v4", "apriori", "fpgrowth"] {
+        let full = MiningSession::new(engine)
+            .min_sup(2)
+            .run_vec(&sc, &db)
+            .unwrap()
+            .result;
+        let maximal = MiningSession::new(engine)
+            .min_sup(2)
+            .post(PostStage::Maximal)
+            .run_vec(&sc, &db)
+            .unwrap()
+            .result;
+        assert!(maximal.len() <= full.len(), "{engine}");
+        let top2 = MiningSession::new(engine)
+            .min_sup(2)
+            .post(PostStage::TopK(2))
+            .run_vec(&sc, &db)
+            .unwrap()
+            .result;
+        assert_eq!(top2.len(), 2, "{engine}");
+    }
+}
+
+#[test]
+fn unknown_engine_fails_with_suggestion_not_defaults() {
+    let sc = SparkletContext::local(2);
+    let err = MiningSession::new("eclat_v44")
+        .min_sup(2)
+        .run_vec(&sc, &[vec![1, 2]])
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("unknown engine"), "{msg}");
+    assert!(msg.contains("did you mean"), "{msg}");
+}

@@ -1,13 +1,15 @@
 //! Cross-algorithm correctness: every distributed algorithm must return
 //! exactly the itemsets of the sequential oracles, across datasets,
-//! supports, partitionings, and engine configurations.
+//! supports, partitionings, and engine configurations — all driven
+//! through the unified `MiningSession` API.
 
 use rdd_eclat::data::Dataset;
-use rdd_eclat::fim::apriori::mine_apriori_rdd_vec;
-use rdd_eclat::fim::eclat::{mine_eclat_vec, EclatConfig, EclatVariant};
+use rdd_eclat::fim::engine::MiningSession;
 use rdd_eclat::fim::sequential::{apriori_sequential, eclat_sequential};
 use rdd_eclat::fim::types::abs_min_sup;
 use rdd_eclat::sparklet::{SparkletConf, SparkletContext};
+
+const ECLAT_ENGINES: [&str; 5] = ["eclat-v1", "eclat-v2", "eclat-v3", "eclat-v4", "eclat-v5"];
 
 #[test]
 fn variants_match_oracle_on_t10_sample() {
@@ -16,13 +18,19 @@ fn variants_match_oracle_on_t10_sample() {
     let oracle = eclat_sequential(&txns, min_sup);
     assert!(!oracle.is_empty());
     let sc = SparkletContext::local(3);
-    for v in EclatVariant::all() {
-        let cfg = EclatConfig::new(v, min_sup).with_tri_matrix(true);
-        let got = mine_eclat_vec(&sc, txns.clone(), &cfg);
-        assert!(got.same_as(&oracle), "{}", v.name());
+    for engine in ECLAT_ENGINES {
+        let got = MiningSession::new(engine)
+            .min_sup(min_sup)
+            .tri_matrix(true)
+            .run_vec(&sc, &txns)
+            .unwrap();
+        assert!(got.result.same_as(&oracle), "{engine}");
     }
-    let apriori = mine_apriori_rdd_vec(&sc, txns.clone(), min_sup);
-    assert!(apriori.same_as(&oracle), "rdd-apriori");
+    let apriori = MiningSession::new("apriori")
+        .min_sup(min_sup)
+        .run_vec(&sc, &txns)
+        .unwrap();
+    assert!(apriori.result.same_as(&oracle), "rdd-apriori");
 }
 
 #[test]
@@ -31,10 +39,13 @@ fn variants_match_oracle_on_bms_sample_no_trimatrix() {
     let min_sup = abs_min_sup(0.002, txns.len());
     let oracle = eclat_sequential(&txns, min_sup);
     let sc = SparkletContext::local(2);
-    for v in EclatVariant::all() {
-        let cfg = EclatConfig::new(v, min_sup).with_tri_matrix(false);
-        let got = mine_eclat_vec(&sc, txns.clone(), &cfg);
-        assert!(got.same_as(&oracle), "{}", v.name());
+    for engine in ECLAT_ENGINES {
+        let got = MiningSession::new(engine)
+            .min_sup(min_sup)
+            .tri_matrix(false)
+            .run_vec(&sc, &txns)
+            .unwrap();
+        assert!(got.result.same_as(&oracle), "{engine}");
     }
 }
 
@@ -51,9 +62,12 @@ fn deep_itemsets_on_t40_sample() {
         oracle.max_length()
     );
     let sc = SparkletContext::local(2);
-    for v in [EclatVariant::V1, EclatVariant::V4] {
-        let got = mine_eclat_vec(&sc, txns.clone(), &EclatConfig::new(v, min_sup));
-        assert!(got.same_as(&oracle), "{}", v.name());
+    for engine in ["eclat-v1", "eclat-v4"] {
+        let got = MiningSession::new(engine)
+            .min_sup(min_sup)
+            .run_vec(&sc, &txns)
+            .unwrap();
+        assert!(got.result.same_as(&oracle), "{engine}");
     }
     let apriori = apriori_sequential(&txns, min_sup);
     assert!(apriori.same_as(&oracle));
@@ -67,9 +81,12 @@ fn result_invariant_to_cores_and_partitions() {
     for cores in [1usize, 2, 7] {
         let sc = SparkletContext::local(cores);
         for p in [1usize, 3, 16] {
-            let cfg = EclatConfig::new(EclatVariant::V5, min_sup).with_p(p);
-            let got = mine_eclat_vec(&sc, txns.clone(), &cfg);
-            assert!(got.same_as(&base), "cores={cores} p={p}");
+            let got = MiningSession::new("eclat-v5")
+                .min_sup(min_sup)
+                .p(p)
+                .run_vec(&sc, &txns)
+                .unwrap();
+            assert!(got.result.same_as(&base), "cores={cores} p={p}");
         }
     }
 }
@@ -89,9 +106,12 @@ fn mining_survives_failure_injection() {
         .with_failure_injection(0.3, 777)
         .with_max_task_failures(8);
     let sc = SparkletContext::new(conf);
-    let cfg = EclatConfig::new(EclatVariant::V2, min_sup).with_tri_matrix(false);
-    let got = mine_eclat_vec(&sc, txns.clone(), &cfg);
-    assert!(got.same_as(&oracle));
+    let got = MiningSession::new("eclat-v2")
+        .min_sup(min_sup)
+        .tri_matrix(false)
+        .run_vec(&sc, &txns)
+        .unwrap();
+    assert!(got.result.same_as(&oracle));
     assert!(
         sc.metrics().total_retries() > 0,
         "injection should have fired"
@@ -108,13 +128,16 @@ fn apriori_survives_failure_injection() {
         .with_failure_injection(0.3, 999)
         .with_max_task_failures(8);
     let sc = SparkletContext::new(conf);
-    let got = mine_apriori_rdd_vec(&sc, txns.clone(), min_sup);
-    assert!(got.same_as(&oracle));
+    let got = MiningSession::new("apriori")
+        .min_sup(min_sup)
+        .run_vec(&sc, &txns)
+        .unwrap();
+    assert!(got.result.same_as(&oracle));
 }
 
 #[test]
 fn file_roundtrip_mine() {
-    // write -> textFile -> mine == in-memory mine
+    // write -> textFile -> MiningSession::run on the lines RDD == oracle
     use rdd_eclat::data::write_transactions;
     use rdd_eclat::fim::eclat::transactions_from_lines;
     let txns = Dataset::Bms2.generate_scaled(8, 0.01);
@@ -126,9 +149,12 @@ fn file_roundtrip_mine() {
     let sc = SparkletContext::local(2);
     let lines = sc.text_file(path.to_str().unwrap(), 2).unwrap();
     let rdd = transactions_from_lines(&lines);
-    let cfg = EclatConfig::new(EclatVariant::V3, min_sup).with_tri_matrix(false);
-    let got = rdd_eclat::fim::eclat::mine_eclat(&sc, &rdd, &cfg);
-    assert!(got.same_as(&eclat_sequential(&txns, min_sup)));
+    let got = MiningSession::new("eclat-v3")
+        .min_sup(min_sup)
+        .tri_matrix(false)
+        .run(&sc, &rdd)
+        .unwrap();
+    assert!(got.result.same_as(&eclat_sequential(&txns, min_sup)));
 }
 
 #[test]
@@ -137,12 +163,11 @@ fn supports_are_exact_counts() {
     let txns = Dataset::T10I4D100K.generate_scaled(2, 0.005);
     let min_sup = abs_min_sup(0.02, txns.len());
     let sc = SparkletContext::local(2);
-    let got = mine_eclat_vec(
-        &sc,
-        txns.clone(),
-        &EclatConfig::new(EclatVariant::V4, min_sup),
-    );
-    for f in got.itemsets.iter().take(50) {
+    let got = MiningSession::new("eclat-v4")
+        .min_sup(min_sup)
+        .run_vec(&sc, &txns)
+        .unwrap();
+    for f in got.result.itemsets.iter().take(50) {
         let brute = txns
             .iter()
             .filter(|t| f.items.iter().all(|i| t.binary_search(i).is_ok()))

@@ -2,8 +2,7 @@
 //! proptest is unavailable offline): distributed == sequential, FIM
 //! invariants, RDD semantics vs Vec oracles.
 
-use rdd_eclat::fim::apriori::mine_apriori_rdd_vec;
-use rdd_eclat::fim::eclat::{mine_eclat_vec, EclatConfig, EclatVariant};
+use rdd_eclat::fim::engine::MiningSession;
 use rdd_eclat::fim::sequential::{apriori_sequential, eclat_sequential};
 use rdd_eclat::sparklet::{PairRdd, SparkletContext};
 use rdd_eclat::util::prop::{forall, forall_shrink, gen};
@@ -17,10 +16,17 @@ fn prop_every_variant_equals_oracle() {
         |db| gen::shrink_database(db),
         |db| {
             let oracle = eclat_sequential(db, 2);
-            EclatVariant::all().into_iter().all(|v| {
-                let cfg = EclatConfig::new(v, 2).with_p(3);
-                mine_eclat_vec(&sc, db.clone(), &cfg).same_as(&oracle)
-            })
+            ["eclat-v1", "eclat-v2", "eclat-v3", "eclat-v4", "eclat-v5"]
+                .into_iter()
+                .all(|engine| {
+                    MiningSession::new(engine)
+                        .min_sup(2)
+                        .p(3)
+                        .run_vec(&sc, db)
+                        .unwrap()
+                        .result
+                        .same_as(&oracle)
+                })
         },
     );
 }
@@ -30,9 +36,11 @@ fn prop_rdd_apriori_equals_sequential() {
     let sc = SparkletContext::local(3);
     forall(25, gen::database(25, 8, 0.4), |db| {
         for min_sup in [1u32, 2, 3] {
-            if !mine_apriori_rdd_vec(&sc, db.clone(), min_sup)
-                .same_as(&apriori_sequential(db, min_sup))
-            {
+            let got = MiningSession::new("apriori")
+                .min_sup(min_sup)
+                .run_vec(&sc, db)
+                .unwrap();
+            if !got.result.same_as(&apriori_sequential(db, min_sup)) {
                 return false;
             }
         }
@@ -63,11 +71,12 @@ fn prop_supports_at_least_min_sup() {
 fn prop_transaction_order_irrelevant() {
     // Mining a permuted database yields the same itemsets.
     let sc = SparkletContext::local(2);
+    let session = MiningSession::new("eclat-v4").min_sup(2);
     forall(20, gen::database(25, 8, 0.35), |db| {
         let mut shuffled = db.clone();
         shuffled.reverse();
-        let a = mine_eclat_vec(&sc, db.clone(), &EclatConfig::new(EclatVariant::V4, 2));
-        let b = mine_eclat_vec(&sc, shuffled, &EclatConfig::new(EclatVariant::V4, 2));
+        let a = session.run_vec(&sc, db).unwrap().result;
+        let b = session.run_vec(&sc, &shuffled).unwrap().result;
         a.same_as(&b)
     });
 }

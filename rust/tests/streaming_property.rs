@@ -4,7 +4,7 @@
 //! concatenated transactions — across all window/slide combinations
 //! (overlapping, tumbling, and gapped windows) and support thresholds.
 
-use rdd_eclat::fim::eclat::{mine_eclat_vec, EclatConfig, EclatVariant};
+use rdd_eclat::fim::engine::MiningSession;
 use rdd_eclat::fim::sequential::eclat_sequential;
 use rdd_eclat::fim::streaming::{IncrementalEclat, StreamingEclatConfig};
 use rdd_eclat::fim::Transaction;
@@ -49,17 +49,17 @@ fn incremental_matches_full_mine_for_all_window_slide_combos() {
             for slide in 1..=n {
                 let mut inc =
                     IncrementalEclat::new(StreamingEclatConfig::new(*min_sup, window, slide));
+                let session = MiningSession::new("eclat-v4").min_sup(*min_sup).p(3);
                 for (t, b) in batches.iter().enumerate() {
-                    inc.push_batch(b);
+                    inc.push_batch(b).unwrap();
                     if (t + 1) % slide != 0 {
                         continue;
                     }
                     let got = inc.mine_window();
-                    let want = mine_eclat_vec(
-                        &sc,
-                        window_txns(batches, t, window),
-                        &EclatConfig::new(EclatVariant::V4, *min_sup).with_p(3),
-                    );
+                    let want = session
+                        .run_vec(&sc, &window_txns(batches, t, window))
+                        .unwrap()
+                        .result;
                     if !got.same_as(&want) {
                         eprintln!(
                             "mismatch: min_sup={min_sup} window={window} slide={slide} t={t}\n\
@@ -99,7 +99,7 @@ fn incremental_matches_sequential_oracle_on_long_overlapping_stream() {
     let (window, slide, min_sup) = (6usize, 1usize, 3u32);
     let mut inc = IncrementalEclat::new(StreamingEclatConfig::new(min_sup, window, slide));
     for (t, b) in batches.iter().enumerate() {
-        inc.push_batch(b);
+        inc.push_batch(b).unwrap();
         let got = inc.mine_window();
         let want = eclat_sequential(&window_txns(&batches, t, window), min_sup);
         assert!(got.same_as(&want), "t={t}: {:?}", got.canonical());
