@@ -14,6 +14,23 @@ cargo build --release
 echo "== cargo test -q"
 cargo test -q
 
+echo "== bench smoke (regenerates BENCH_fim.json on a tiny dataset)"
+# Keeps the perf-trajectory artifact green: a tiny-scale sweep of every
+# registered engine x executor backend must run and emit parseable
+# JSON. BENCH_SMOKE_SCALE overrides the dataset scale (default 0.02,
+# ~2k transactions).
+REPRO_SCALE="${BENCH_SMOKE_SCALE:-0.02}" cargo run --release --quiet -- \
+    bench --dataset t10 --min-sup 0.02 --out BENCH_fim.json
+python3 - <<'EOF'
+import json
+rows = json.load(open("BENCH_fim.json"))
+assert rows, "bench smoke wrote an empty BENCH_fim.json"
+assert all("engine" in r and "backend" in r and "wall_ms" in r for r in rows), rows[:1]
+backends = {r["backend"] for r in rows}
+assert {"fifo", "work-stealing", "sequential"} <= backends, backends
+print(f"BENCH_fim.json OK: {len(rows)} rows, backends: {sorted(backends)}")
+EOF
+
 echo "== cargo clippy --all-targets -- -D warnings"
 if cargo clippy --version >/dev/null 2>&1; then
     # Advisory by default (same policy as rustfmt below: lint drift

@@ -17,6 +17,7 @@ use rdd_eclat::fim::engine::MiningSession;
 use rdd_eclat::fim::streaming::{IncrementalEclat, StreamingEclatConfig};
 use rdd_eclat::fim::types::abs_min_sup;
 use rdd_eclat::fim::Transaction;
+use rdd_eclat::sparklet::metrics::StageKind;
 use rdd_eclat::sparklet::SparkletContext;
 
 const WINDOW: usize = 8; // batches per window
@@ -49,7 +50,10 @@ fn main() {
             )
         };
 
-        let mut miner = IncrementalEclat::new(StreamingEclatConfig::new(min_sup, WINDOW, slide));
+        // Wired to the context: on a multi-core executor, window
+        // re-mining dispatches one task per top-level equivalence class.
+        let mut miner = IncrementalEclat::new(StreamingEclatConfig::new(min_sup, WINDOW, slide))
+            .with_context(sc.clone());
         let mut history: VecDeque<Vec<Transaction>> = VecDeque::new();
         let mut inc_ms: Vec<f64> = Vec::new();
         let mut full_ms: Vec<f64> = Vec::new();
@@ -129,6 +133,30 @@ fn main() {
             overlap < 50.0 || inc < full,
             "incremental median ({inc:.1} ms) not below full re-mine ({full:.1} ms) \
              at {overlap:.0}% overlap"
+        );
+    }
+
+    // Border recomputation went through the executor: on multi-core
+    // runs the StageMetrics must show >1 concurrent task per window.
+    let streaming: Vec<_> = sc
+        .metrics()
+        .stages()
+        .into_iter()
+        .filter(|s| s.kind == StageKind::Streaming)
+        .collect();
+    if let Some(max_tasks) = streaming.iter().map(|s| s.num_tasks).max() {
+        println!(
+            "border recomputation: {} windows via executor '{}', \
+             up to {max_tasks} concurrent tasks/window, {} steals",
+            streaming.len(),
+            streaming.first().map(|s| s.backend).unwrap_or("?"),
+            streaming.iter().map(|s| s.steals).sum::<usize>()
+        );
+    }
+    if sc.executor().cores() > 1 {
+        assert!(
+            streaming.iter().any(|s| s.num_tasks > 1),
+            "multi-core run never dispatched >1 border-recomputation task"
         );
     }
 }

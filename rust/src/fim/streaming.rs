@@ -33,11 +33,28 @@
 //! [`IncrementalEclat::push_batch`] returns
 //! [`StreamingError::TidOverflow`] at that boundary instead of wrapping
 //! and silently corrupting the sorted-tid invariant.
+//!
+//! **Execution.** A miner given a [`SparkletContext`] (via
+//! [`IncrementalEclat::with_context`]; `attach_incremental_eclat` wires
+//! the stream's own context automatically) dispatches window re-mining
+//! through the context's executor backend: one task per top-level
+//! equivalence class, submitted as a `TaskSet` so border-candidate
+//! recomputation for independent classes runs concurrently instead of
+//! on the driver thread. The window's vertical tidsets move into a
+//! shared read-only snapshot (no copies), and each dispatched window
+//! records a `StageKind::Streaming` entry in the context's
+//! `StageMetrics`. Without a context (or on a single-core executor)
+//! the driver-side sequential path runs, bit-identical.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
 
+use crate::sparklet::executor::TaskSet;
+use crate::sparklet::metrics::{StageKind, StageMetrics};
 use crate::sparklet::streaming::DStream;
+use crate::sparklet::SparkletContext;
 use crate::util::hash::FxHashMap;
 
 use super::engine::MiningSession;
@@ -137,6 +154,10 @@ pub struct IncrementalEclat {
     prev_hi: u32,
     has_mined: bool,
     stats: StreamStats,
+    /// When set (and the executor has >1 core), window re-mining
+    /// dispatches one task per top-level equivalence class through the
+    /// context's executor backend instead of the driver thread.
+    ctx: Option<SparkletContext>,
 }
 
 /// Immutable per-window mining context.
@@ -163,7 +184,21 @@ impl IncrementalEclat {
             prev_hi: 0,
             has_mined: false,
             stats: StreamStats::default(),
+            ctx: None,
         }
+    }
+
+    /// Route window re-mining through the context's executor backend
+    /// (one concurrent task per top-level equivalence class). A
+    /// single-core executor keeps the sequential driver path.
+    pub fn with_context(mut self, sc: SparkletContext) -> Self {
+        self.set_context(sc);
+        self
+    }
+
+    /// See [`IncrementalEclat::with_context`].
+    pub fn set_context(&mut self, sc: SparkletContext) {
+        self.ctx = Some(sc);
     }
 
     pub fn config(&self) -> &StreamingEclatConfig {
@@ -246,6 +281,28 @@ impl IncrementalEclat {
             !tids.is_empty()
         });
 
+        // With a multi-core executor wired in and at least two frequent
+        // items (one top-level class per non-final item), re-mine the
+        // window through the executor instead of the driver thread.
+        // The cheap backend check gates the frequent-item scan so
+        // context-less miners pay nothing extra here.
+        let multi_core = self
+            .ctx
+            .as_ref()
+            .is_some_and(|sc| sc.executor().cores() > 1);
+        if multi_core {
+            let min_sup = self.cfg.min_sup as usize;
+            let frequent_items = self
+                .window_items
+                .values()
+                .filter(|tids| tids.len() >= min_sup)
+                .count();
+            if frequent_items >= 2 {
+                let sc = self.ctx.clone().expect("checked above");
+                return self.mine_window_parallel(&sc, lo, hi);
+            }
+        }
+
         let ctx = WindowCtx {
             min_sup: self.cfg.min_sup as usize,
             lo,
@@ -291,6 +348,183 @@ impl IncrementalEclat {
         self.stats.windows += 1;
         MiningResult::new(out)
     }
+
+    /// The executor-dispatched twin of the sequential tail of
+    /// [`IncrementalEclat::mine_window`]: one task per top-level
+    /// equivalence class, all in flight on the context's backend at
+    /// once. Produces the identical itemset sequence (classes merge in
+    /// processing order) and the same lattice cache for the next slide.
+    fn mine_window_parallel(&mut self, sc: &SparkletContext, lo: u32, hi: u32) -> MiningResult {
+        let wall = Instant::now();
+        let min_sup = self.cfg.min_sup as usize;
+        let new_lo = if self.has_mined {
+            self.prev_hi.clamp(lo, hi)
+        } else {
+            lo
+        };
+        let first_window = !self.has_mined;
+
+        // Move the vertical DB and previous-window lattice into a
+        // shared read-only snapshot: tasks need `'static` borrows, and
+        // copying the 1-item tidsets per window would make every mine
+        // O(window) — moving them costs nothing and they come back out
+        // of the snapshot below.
+        let window_items = std::mem::take(&mut self.window_items);
+        let old = std::mem::take(&mut self.lattice);
+
+        let mut singles: Vec<(Item, usize)> = window_items
+            .iter()
+            .filter(|(_, tids)| tids.len() >= min_sup)
+            .map(|(&item, tids)| (item, tids.len()))
+            .collect();
+        singles.sort_by_key(|&(item, len)| (len, item));
+        let order: Vec<Item> = singles.iter().map(|&(item, _)| item).collect();
+        let mut out: Vec<FrequentItemset> = singles
+            .iter()
+            .map(|&(item, len)| FrequentItemset::new(vec![item], len as u32))
+            .collect();
+
+        let snapshot = Arc::new(WindowSnapshot {
+            window_items,
+            old,
+            order,
+            min_sup,
+            lo,
+            new_lo,
+            first_window,
+        });
+
+        // One task per top-level class; the final item's class has an
+        // empty tail and no candidates, so it is skipped.
+        let n_classes = snapshot.order.len().saturating_sub(1);
+        let (tx, rx) = mpsc::channel();
+        let mut taskset = TaskSet::new(
+            0x57A3_0000u64 ^ self.stats.windows as u64,
+            format!("stream-border-recompute/window{}", self.stats.windows),
+        );
+        for class in 0..n_classes {
+            let snap = Arc::clone(&snapshot);
+            let tx = tx.clone();
+            taskset.push(move || {
+                let t0 = Instant::now();
+                let outcome = catch_unwind(AssertUnwindSafe(|| mine_top_class(&snap, class)));
+                let ms = t0.elapsed().as_secs_f64() * 1e3;
+                let _ = tx.send((class, ms, outcome));
+            });
+        }
+        drop(tx);
+        let num_tasks = taskset.len();
+        let handle = sc.executor().submit(taskset);
+        let exec_stats = handle.wait();
+
+        let mut per_class: Vec<Option<ClassMine>> = (0..n_classes).map(|_| None).collect();
+        let mut task_millis = vec![0.0f64; n_classes];
+        let mut panic_payload: Option<Box<dyn std::any::Any + Send>> = None;
+        for (class, ms, outcome) in rx.try_iter() {
+            task_millis[class] = ms;
+            match outcome {
+                Ok(mined) => per_class[class] = Some(mined),
+                Err(payload) => panic_payload = Some(payload),
+            }
+        }
+        if let Some(payload) = panic_payload {
+            // Re-raise the task panic on the driver — but first put the
+            // moved-out vertical DB and lattice back, so a caller that
+            // catches the unwind is left with the sequential path's
+            // failure state (previous window intact), not an empty
+            // miner that silently returns wrong results.
+            drop(per_class);
+            let snapshot = Arc::try_unwrap(snapshot).unwrap_or_else(|arc| (*arc).clone());
+            self.window_items = snapshot.window_items;
+            self.lattice = snapshot.old;
+            std::panic::resume_unwind(payload);
+        }
+
+        let mut new_lattice: FxHashMap<Vec<Item>, Vec<u32>> = FxHashMap::default();
+        for mined in per_class.into_iter() {
+            let mined = mined.expect("border-recompute task result missing");
+            out.extend(mined.out);
+            new_lattice.extend(mined.lattice);
+            self.stats.cache_hits += mined.stats.cache_hits;
+            self.stats.delta_pruned += mined.stats.delta_pruned;
+            self.stats.recomputed += mined.stats.recomputed;
+        }
+
+        if sc.conf().collect_metrics {
+            sc.metrics().record(StageMetrics {
+                kind: StageKind::Streaming,
+                rdd_id: usize::MAX,
+                num_tasks,
+                wall: wall.elapsed(),
+                task_millis,
+                retries: 0,
+                shuffle_records: 0,
+                shuffle_bytes: 0,
+                backend: sc.executor().name(),
+                steals: exec_stats.steals,
+                queue_wait_ms: exec_stats.queue_wait_ms,
+            });
+        }
+
+        // Recover the vertical DB from the snapshot without copying
+        // (every task dropped its clone on completion; the clone
+        // fallback is belt-and-braces).
+        let snapshot = Arc::try_unwrap(snapshot).unwrap_or_else(|arc| (*arc).clone());
+        self.window_items = snapshot.window_items;
+        self.lattice = new_lattice;
+        self.prev_hi = hi;
+        self.has_mined = true;
+        self.stats.windows += 1;
+        MiningResult::new(out)
+    }
+}
+
+/// Immutable view of one window, shared read-only across the executor
+/// tasks of [`IncrementalEclat::mine_window_parallel`].
+#[derive(Clone)]
+struct WindowSnapshot {
+    /// Per-item window tidsets (moved out of the miner for the mine).
+    window_items: FxHashMap<Item, Vec<u32>>,
+    /// Previous window's lattice cache.
+    old: FxHashMap<Vec<Item>, Vec<u32>>,
+    /// Frequent 1-items in processing order (support asc, then item).
+    order: Vec<Item>,
+    min_sup: usize,
+    lo: u32,
+    new_lo: u32,
+    first_window: bool,
+}
+
+/// What one top-level-class task produced.
+struct ClassMine {
+    out: Vec<FrequentItemset>,
+    lattice: FxHashMap<Vec<Item>, Vec<u32>>,
+    stats: StreamStats,
+}
+
+/// Mine the top-level equivalence class rooted at `order[class]` — the
+/// unit of work one executor task performs.
+fn mine_top_class(snap: &WindowSnapshot, class: usize) -> ClassMine {
+    let ctx = WindowCtx {
+        min_sup: snap.min_sup,
+        lo: snap.lo,
+        new_lo: snap.new_lo,
+        old: &snap.old,
+        first_window: snap.first_window,
+    };
+    let members: Vec<(Item, &[u32])> = snap.order[class..]
+        .iter()
+        .map(|item| (*item, snap.window_items[item].as_slice()))
+        .collect();
+    let mut out = Vec::new();
+    let mut lattice = FxHashMap::default();
+    let mut stats = StreamStats::default();
+    mine_member(&ctx, &[], &members, 0, &mut lattice, &mut out, &mut stats);
+    ClassMine {
+        out,
+        lattice,
+        stats,
+    }
 }
 
 /// Bottom-Up over an equivalence class, with cache-aware candidate
@@ -305,36 +539,53 @@ fn mine_class(
     stats: &mut StreamStats,
 ) {
     for i in 0..members.len() {
-        let (item_i, ts_i) = members[i];
-        let mut child_prefix = prefix.to_vec();
-        child_prefix.push(item_i);
-        let mut child_owned: Vec<(Item, Vec<Item>, Vec<u32>)> = Vec::new();
-        for &(item_j, ts_j) in &members[i + 1..] {
-            let mut key = child_prefix.clone();
-            key.push(item_j);
-            key.sort_unstable();
-            if let Some(tids) = candidate_tidset(ctx, &key, ts_i, ts_j, stats) {
-                if tids.len() >= ctx.min_sup {
-                    out.push(FrequentItemset::new(key.clone(), tids.len() as u32));
-                    child_owned.push((item_j, key, tids));
-                }
+        mine_member(ctx, prefix, members, i, new_lattice, out, stats);
+    }
+}
+
+/// One iteration of the Bottom-Up loop: expand `members[i]` against the
+/// tail `members[i + 1..]`, recurse into the child class, then publish
+/// the child tidsets to the next-window lattice. Split out of
+/// [`mine_class`] so the parallel window path can make a top-level
+/// iteration the unit of one executor task.
+fn mine_member(
+    ctx: &WindowCtx<'_>,
+    prefix: &[Item],
+    members: &[(Item, &[u32])],
+    i: usize,
+    new_lattice: &mut FxHashMap<Vec<Item>, Vec<u32>>,
+    out: &mut Vec<FrequentItemset>,
+    stats: &mut StreamStats,
+) {
+    let (item_i, ts_i) = members[i];
+    let mut child_prefix = prefix.to_vec();
+    child_prefix.push(item_i);
+    let mut child_owned: Vec<(Item, Vec<Item>, Vec<u32>)> = Vec::new();
+    for &(item_j, ts_j) in &members[i + 1..] {
+        let mut key = child_prefix.clone();
+        key.push(item_j);
+        key.sort_unstable();
+        if let Some(tids) = candidate_tidset(ctx, &key, ts_i, ts_j, stats) {
+            if tids.len() >= ctx.min_sup {
+                out.push(FrequentItemset::new(key.clone(), tids.len() as u32));
+                child_owned.push((item_j, key, tids));
             }
         }
-        if !child_owned.is_empty() {
-            let child_members: Vec<(Item, &[u32])> = child_owned
-                .iter()
-                .map(|(item, _, tids)| (*item, tids.as_slice()))
-                .collect();
-            mine_class(ctx, &child_prefix, &child_members, new_lattice, out, stats);
-        }
-        // Move the class's keys and tidsets into the next-window lattice
-        // cache only after the subtree is mined: the cache is write-only
-        // during a mine (lookups go to `ctx.old`), so deferring the
-        // inserts lets the recursion borrow the tidsets instead of
-        // cloning each one.
-        for (_, key, tids) in child_owned {
-            new_lattice.insert(key, tids);
-        }
+    }
+    if !child_owned.is_empty() {
+        let child_members: Vec<(Item, &[u32])> = child_owned
+            .iter()
+            .map(|(item, _, tids)| (*item, tids.as_slice()))
+            .collect();
+        mine_class(ctx, &child_prefix, &child_members, new_lattice, out, stats);
+    }
+    // Move the class's keys and tidsets into the next-window lattice
+    // cache only after the subtree is mined: the cache is write-only
+    // during a mine (lookups go to `ctx.old`), so deferring the
+    // inserts lets the recursion borrow the tidsets instead of
+    // cloning each one.
+    for (_, key, tids) in child_owned {
+        new_lattice.insert(key, tids);
     }
 }
 
@@ -383,13 +634,18 @@ fn candidate_tidset(
 /// incremental mine's wall time in milliseconds (for comparison against
 /// a from-scratch re-mine). Returns the shared miner handle (for stats
 /// inspection after the run). The sink runs while the miner lock is
-/// held — don't lock the returned handle from inside it.
+/// held — don't lock the returned handle from inside it. The miner is
+/// wired to the stream's `SparkletContext`, so on a multi-core executor
+/// window re-mining dispatches concurrent border-recomputation tasks.
 pub fn attach_incremental_eclat(
     stream: &DStream<Transaction>,
     cfg: StreamingEclatConfig,
     sink: impl Fn(usize, &MiningResult, f64) + Send + Sync + 'static,
 ) -> Arc<Mutex<IncrementalEclat>> {
-    let miner = Arc::new(Mutex::new(IncrementalEclat::new(cfg.clone())));
+    let miner = Arc::new(Mutex::new(
+        IncrementalEclat::new(cfg.clone())
+            .with_context(stream.stream_context().spark().clone()),
+    ));
     let handle = Arc::clone(&miner);
     stream.foreach_rdd(move |t, rdd| {
         let batch = rdd.collect();
@@ -633,5 +889,71 @@ mod tests {
             let want = eclat_sequential(&window_txns(&batches, *t, cfg.window), cfg.min_sup);
             assert!(r.same_as(&want), "window at tick {t}");
         }
+    }
+
+    #[test]
+    fn parallel_border_recompute_matches_driver_path() {
+        use crate::sparklet::metrics::StageKind;
+
+        let sc = crate::sparklet::SparkletContext::local(2);
+        let cfg = StreamingEclatConfig::new(2, 3, 1);
+        let mut par = IncrementalEclat::new(cfg.clone()).with_context(sc.clone());
+        let mut seq = IncrementalEclat::new(cfg);
+        let batches: Vec<Vec<Transaction>> = (0..6u32)
+            .map(|t| batch(&[&[1, 2, 3], &[1, 2], &[2, 3], &[1, t % 4 + 4], &[2, 4]]))
+            .collect();
+        for b in &batches {
+            par.push_batch(b).unwrap();
+            seq.push_batch(b).unwrap();
+            let got = par.mine_window();
+            let want = seq.mine_window();
+            assert!(
+                got.same_as(&want),
+                "executor-dispatched and driver paths disagree"
+            );
+        }
+        // Work counters agree too (same candidates, same cache story).
+        assert_eq!(par.stats().windows, seq.stats().windows);
+        assert_eq!(par.stats().cache_hits, seq.stats().cache_hits);
+        assert_eq!(par.stats().recomputed, seq.stats().recomputed);
+        // The recomputation went through the executor, with >1 task in
+        // flight per window — the StageMetrics evidence.
+        let streaming: Vec<_> = sc
+            .metrics()
+            .stages()
+            .into_iter()
+            .filter(|s| s.kind == StageKind::Streaming)
+            .collect();
+        assert!(!streaming.is_empty(), "no streaming stages recorded");
+        assert!(
+            streaming.iter().any(|s| s.num_tasks > 1),
+            "border recomputation never dispatched >1 concurrent task"
+        );
+        assert!(streaming.iter().all(|s| s.backend == "fifo"));
+    }
+
+    #[test]
+    fn single_core_executor_keeps_the_driver_path() {
+        use crate::sparklet::metrics::StageKind;
+        use crate::sparklet::SparkletConf;
+
+        let conf = SparkletConf::new("seq-stream")
+            .with_cores(2)
+            .unwrap()
+            .with_executor_backend("sequential")
+            .unwrap();
+        let sc = crate::sparklet::SparkletContext::new(conf);
+        let mut inc =
+            IncrementalEclat::new(StreamingEclatConfig::new(2, 2, 1)).with_context(sc.clone());
+        let txns = batch(&[&[1, 2, 5], &[2, 4], &[2, 3], &[1, 2, 4], &[1, 3]]);
+        inc.push_batch(&txns).unwrap();
+        let got = inc.mine_window();
+        assert!(got.same_as(&eclat_sequential(&txns, 2)));
+        // cores() == 1 ⇒ no executor dispatch happened.
+        assert!(sc
+            .metrics()
+            .stages()
+            .iter()
+            .all(|s| s.kind != StageKind::Streaming));
     }
 }

@@ -6,7 +6,7 @@
 //!   claims --id N                  run Fig N and check the paper's claims
 //!   mine --dataset D --min-sup F --engine NAME --tidset vec|bitmap|auto
 //!                                  one mining session (any registered engine)
-//!   bench --dataset D --min-sup F  sweep the engine registry, emit BENCH_fim.json
+//!   bench --dataset D --min-sup F  sweep engines x executor backends, emit BENCH_fim.json
 //!   rules --dataset D --min-conf F mine + derive association rules
 //!   generate --dataset D --out P   write a generated dataset (FIMI format)
 //!   stream --dataset D --min-sup F --window N --slide N
@@ -17,11 +17,14 @@
 //!
 //! Every command validates its flags against a spec allowlist — unknown
 //! or misspelled flags fail with a suggestion instead of silently
-//! running with defaults. Engine names come from the `EngineRegistry`,
-//! so newly registered engines are immediately addressable.
+//! running with defaults. Engine names come from the `EngineRegistry`
+//! and executor backend names from the `ExecutorRegistry`, so newly
+//! registered engines/backends are immediately addressable.
 //!
 //! Shared env overrides: REPRO_SCALE, REPRO_SEED, REPRO_CORES,
-//! REPRO_BENCH_REPS, REPRO_BENCH_WARMUP, REPRO_ARTIFACTS.
+//! REPRO_BENCH_REPS, REPRO_BENCH_WARMUP, REPRO_ARTIFACTS, plus the
+//! engine-level SPARKLET_CORES / SPARKLET_BACKEND /
+//! SPARKLET_SHUFFLE_PARTITIONS (explicit flags win over env).
 
 use anyhow::{bail, Result};
 
@@ -32,7 +35,8 @@ use rdd_eclat::fim::engine::{
     EngineRegistry, FimError, MiningSession, PartitionStrategy, PostStage, TidsetRepr,
 };
 use rdd_eclat::fim::types::abs_min_sup;
-use rdd_eclat::sparklet::SparkletContext;
+use rdd_eclat::sparklet::metrics::StageKind;
+use rdd_eclat::sparklet::{ExecutorRegistry, SparkletConf, SparkletContext};
 
 fn main() -> Result<()> {
     let specs = command_specs();
@@ -117,6 +121,8 @@ fn shared_flags() -> Vec<FlagSpec> {
 fn command_specs() -> Vec<CommandSpec> {
     let engines = EngineRegistry::names().join("|");
     let engine_flag = || FlagSpec::new("engine", "NAME", format!("engine ({engines})"));
+    let executors = ExecutorRegistry::names().join("|");
+    let executor_flag = || FlagSpec::new("executor", "B", format!("executor backend ({executors})"));
     let dataset_flag = || FlagSpec::new("dataset", "D", "dataset (bms1|bms2|t10|t40)");
     let minsup_flag = || FlagSpec::new("min-sup", "F", "relative minimum support (fraction of |D|)");
     // The axis flags `session_from_args` consumes — every command that
@@ -141,6 +147,7 @@ fn command_specs() -> Vec<CommandSpec> {
         dataset_flag(),
         minsup_flag(),
         FlagSpec::new("tri-matrix", "on|off", "triangular-matrix Phase-2 (default: per dataset)"),
+        executor_flag(),
     ];
     mine_flags.extend(session_axis_flags());
     mine_flags.extend(shared_flags());
@@ -148,6 +155,7 @@ fn command_specs() -> Vec<CommandSpec> {
         dataset_flag(),
         minsup_flag(),
         FlagSpec::new("engines", "CSV", "engines to sweep (default: all registered)"),
+        executor_flag(),
         FlagSpec::new("out", "PATH", "machine-readable output (default BENCH_fim.json)"),
     ];
     bench_flags.extend(shared_flags());
@@ -167,6 +175,7 @@ fn command_specs() -> Vec<CommandSpec> {
         FlagSpec::new("slide", "N", "slide length in batches (default 2)"),
         FlagSpec::new("batches", "N", "batches to run (default 10)"),
         FlagSpec::new("batch-size", "N", "transactions per batch (default 2000)"),
+        executor_flag(),
     ];
     stream_flags.extend(session_axis_flags());
     stream_flags.extend(shared_flags());
@@ -189,7 +198,7 @@ fn command_specs() -> Vec<CommandSpec> {
         CommandSpec::new("fig", "regenerate figure N in 1..6", fig_flags),
         CommandSpec::new("claims", "figure N + paper-claim checks", claims_flags),
         CommandSpec::new("mine", "one mining session through the unified API", mine_flags),
-        CommandSpec::new("bench", "sweep the engine registry; emit BENCH_fim.json", bench_flags),
+        CommandSpec::new("bench", "sweep engines x executor backends; emit BENCH_fim.json", bench_flags),
         CommandSpec::new("rules", "mine + derive association rules", rules_flags),
         CommandSpec::new("generate", "write a generated dataset (FIMI format)", generate_flags),
         CommandSpec::new("stream", "micro-batch sliding-window mining", stream_flags),
@@ -208,7 +217,12 @@ fn print_help(specs: &[CommandSpec]) {
     }
     println!("\nENGINES (mine/bench/rules/stream --engine):");
     print!("{}", EngineRegistry::describe_all());
-    println!("\nENV: REPRO_SCALE REPRO_SEED REPRO_CORES REPRO_BENCH_REPS");
+    println!("\nEXECUTORS (mine/bench/stream --executor):");
+    print!("{}", ExecutorRegistry::describe_all());
+    println!(
+        "\nENV: REPRO_SCALE REPRO_SEED REPRO_CORES REPRO_BENCH_REPS \
+         SPARKLET_CORES SPARKLET_BACKEND SPARKLET_SHUFFLE_PARTITIONS"
+    );
 }
 
 // -------------------------------------------------------------- commands
@@ -297,6 +311,36 @@ fn run_claims(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
     Ok(())
 }
 
+/// Engine configuration shared by the mine-like commands. Precedence,
+/// weakest first: `REPRO_CORES`/machine default, `SPARKLET_*` env
+/// overrides, explicit `--cores`/`--executor` flags. Every value is
+/// validated (typed `ConfError`s, not asserts).
+fn conf_from_args(args: &Args, cfg: &ExperimentConfig) -> Result<SparkletConf> {
+    let mut conf = SparkletConf::new("repro").with_cores(cfg.cores.max(1))?;
+    conf = conf.with_env_overrides()?;
+    if let Some(cores) = parsed::<usize>(args, "cores")? {
+        // The flag beats SPARKLET_CORES, but with_cores also resets
+        // shuffle_partitions — preserve an explicit
+        // SPARKLET_SHUFFLE_PARTITIONS override across it.
+        let env_partitions = std::env::var("SPARKLET_SHUFFLE_PARTITIONS")
+            .ok()
+            .filter(|v| !v.is_empty())
+            .map(|_| conf.shuffle_partitions);
+        conf = conf.with_cores(cores)?;
+        if let Some(partitions) = env_partitions {
+            conf = conf.with_shuffle_partitions(partitions)?;
+        }
+    }
+    if let Some(backend) = args.get("executor") {
+        conf = conf.with_executor_backend(backend)?;
+    }
+    Ok(conf)
+}
+
+fn context_from_args(args: &Args, cfg: &ExperimentConfig) -> Result<SparkletContext> {
+    Ok(SparkletContext::try_new(conf_from_args(args, cfg)?)?)
+}
+
 /// Resolve `--engine` (with `--variant` as the legacy spelling) against
 /// the registry, failing with the registry's own suggestion-bearing
 /// error on unknown names.
@@ -371,16 +415,17 @@ fn run_mine(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
         .min_sup_frac(min_sup_frac)
         .tri_matrix(tri_matrix);
     let txns = dataset.generate_scaled(cfg.seed, cfg.scale);
+    let sc = context_from_args(args, cfg)?;
     println!(
-        "mining {} ({} txns, scale {}) at min_sup {} with engine {} on {} cores",
+        "mining {} ({} txns, scale {}) at min_sup {} with engine {} on {} cores ({} executor)",
         dataset.name(),
         txns.len(),
         cfg.scale,
         min_sup_frac,
         session.engine_name(),
-        cfg.cores
+        sc.executor().cores(),
+        sc.executor().name()
     );
-    let sc = SparkletContext::local(cfg.cores);
     let report = session.run_vec(&sc, &txns)?;
     println!("{}", report.summary());
     let hist = report.result.histogram();
@@ -391,21 +436,25 @@ fn run_mine(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
         println!("per-phase stages:");
         for (i, s) in report.stages.iter().enumerate() {
             println!(
-                "  stage {i:>2} {:<11} {:>3} tasks {:>9.1} ms  shuffle {:>7} rec / ~{:>9} B",
+                "  stage {i:>2} {:<11} {:>3} tasks {:>9.1} ms  shuffle {:>7} rec / ~{:>9} B  \
+                 {:>3} steals  {:>7.1} ms queued",
                 format!("{:?}", s.kind),
                 s.num_tasks,
                 s.wall.as_secs_f64() * 1e3,
                 s.shuffle_records,
-                s.shuffle_bytes
+                s.shuffle_bytes,
+                s.steals,
+                s.queue_wait_ms
             );
         }
     }
     Ok(())
 }
 
-/// Sweep engines over one dataset/support point and write the
-/// machine-readable `BENCH_fim.json` (the perf-trajectory artifact CI
-/// and later PRs diff against).
+/// Sweep engines × executor backends over one dataset/support point and
+/// write the machine-readable `BENCH_fim.json` (the perf-trajectory
+/// artifact CI and later PRs diff against). `--executor` restricts the
+/// sweep to one backend; the default sweeps every registered backend.
 fn run_bench(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
     let dataset = parse_dataset(args.get_or("dataset", "t10"))?;
     let min_sup_frac: f64 = parsed(args, "min-sup")?.unwrap_or(0.01);
@@ -415,55 +464,87 @@ fn run_bench(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
         Some("all") => experiments::registry_roster().iter().map(|s| s.to_string()).collect(),
         Some(csv) => csv.split(',').map(|s| s.trim().to_string()).collect(),
     };
+    // `--executor` (or, absent that, SPARKLET_BACKEND) restricts the
+    // sweep to one backend — validated through the conf builder so
+    // unknown names fail with the registry's suggestion-bearing error.
+    let restrict = args
+        .get("executor")
+        .map(str::to_string)
+        .or_else(|| std::env::var("SPARKLET_BACKEND").ok().filter(|v| !v.is_empty()));
+    let backends: Vec<String> = match restrict {
+        Some(name) => vec![
+            SparkletConf::default()
+                .with_executor_backend(&name)?
+                .executor_backend,
+        ],
+        None => ExecutorRegistry::names().iter().map(|s| s.to_string()).collect(),
+    };
     let txns = dataset.generate_scaled(cfg.seed, cfg.scale);
     let min_sup = abs_min_sup(min_sup_frac, txns.len());
     println!(
-        "bench: {} ({} txns, scale {}) at min_sup {} ({} abs), {} engines, {} cores",
+        "bench: {} ({} txns, scale {}) at min_sup {} ({} abs), {} engines x {} backends, {} cores",
         dataset.name(),
         txns.len(),
         cfg.scale,
         min_sup_frac,
         min_sup,
         engines.len(),
+        backends.len(),
         cfg.cores
     );
     let mut rows: Vec<String> = Vec::new();
-    for name in &engines {
-        let sc = SparkletContext::local(cfg.cores);
-        let report = MiningSession::new(name.as_str())
-            .min_sup(min_sup)
-            .tri_matrix(dataset.tri_matrix_mode())
-            .p(cfg.p)
-            .run_vec(&sc, &txns)?;
-        println!(
-            "  {:<14} {:>7} itemsets {:>9.1} ms  {:>3} stages  shuffle {:>8} rec / ~{:>10} B",
-            report.label,
-            report.result.len(),
-            report.wall_ms,
-            report.n_stages(),
-            report.shuffle_records(),
-            report.shuffle_bytes()
-        );
-        rows.push(format!(
-            "  {{\"engine\": \"{}\", \"label\": \"{}\", \"dataset\": \"{}\", \
-             \"min_sup\": {}, \"min_sup_abs\": {}, \"transactions\": {}, \
-             \"itemsets\": {}, \"wall_ms\": {:.3}, \"stages\": {}, \
-             \"shuffle_records\": {}, \"shuffle_bytes\": {}}}",
-            report.engine,
-            report.label,
-            dataset.name(),
-            min_sup_frac,
-            min_sup,
-            txns.len(),
-            report.result.len(),
-            report.wall_ms,
-            report.n_stages(),
-            report.shuffle_records(),
-            report.shuffle_bytes()
-        ));
+    for backend in &backends {
+        for name in &engines {
+            let conf = conf_from_args(args, cfg)?.with_executor_backend(backend)?;
+            let sc = SparkletContext::try_new(conf)?;
+            let report = MiningSession::new(name.as_str())
+                .min_sup(min_sup)
+                .tri_matrix(dataset.tri_matrix_mode())
+                .p(cfg.p)
+                .run_vec(&sc, &txns)?;
+            let steals: usize = report.stages.iter().map(|s| s.steals).sum();
+            let queue_wait_ms: f64 = report.stages.iter().map(|s| s.queue_wait_ms).sum();
+            println!(
+                "  {:<14} {:<14} {:>7} itemsets {:>9.1} ms  {:>3} stages  \
+                 shuffle {:>8} rec / ~{:>10} B  {:>4} steals",
+                backend,
+                report.label,
+                report.result.len(),
+                report.wall_ms,
+                report.n_stages(),
+                report.shuffle_records(),
+                report.shuffle_bytes(),
+                steals
+            );
+            rows.push(format!(
+                "  {{\"engine\": \"{}\", \"label\": \"{}\", \"backend\": \"{}\", \
+                 \"dataset\": \"{}\", \"min_sup\": {}, \"min_sup_abs\": {}, \
+                 \"transactions\": {}, \"itemsets\": {}, \"wall_ms\": {:.3}, \
+                 \"stages\": {}, \"shuffle_records\": {}, \"shuffle_bytes\": {}, \
+                 \"steals\": {}, \"queue_wait_ms\": {:.3}}}",
+                report.engine,
+                report.label,
+                backend,
+                dataset.name(),
+                min_sup_frac,
+                min_sup,
+                txns.len(),
+                report.result.len(),
+                report.wall_ms,
+                report.n_stages(),
+                report.shuffle_records(),
+                report.shuffle_bytes(),
+                steals,
+                queue_wait_ms
+            ));
+        }
     }
     std::fs::write(&out_path, format!("[\n{}\n]\n", rows.join(",\n")))?;
-    println!("wrote {out_path} ({} engines)", rows.len());
+    println!(
+        "wrote {out_path} ({} engines x {} backends)",
+        engines.len(),
+        backends.len()
+    );
     Ok(())
 }
 
@@ -492,7 +573,7 @@ fn run_rules(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
     let session = session_from_args(args, cfg, "eclat-v5")?
         .min_sup_frac(min_sup_frac)
         .rules(min_conf);
-    let sc = SparkletContext::local(cfg.cores);
+    let sc = context_from_args(args, cfg)?;
     let report = session.run_vec(&sc, &txns)?;
     let rules = report.rules.as_deref().unwrap_or(&[]);
     println!(
@@ -525,9 +606,10 @@ fn run_stream(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
     let session = session_from_args(args, cfg, "eclat-v5")?
         .min_sup(min_sup)
         .tri_matrix(dataset.tri_matrix_mode());
+    let sc = context_from_args(args, cfg)?;
     println!(
         "streaming {}: {} batches x {} txns, window {} slide {} (batches), \
-         min_sup {} ({} abs/window), cross-check engine {}, {} cores",
+         min_sup {} ({} abs/window), cross-check engine {}, {} cores ({} executor)",
         dataset.name(),
         n_batches,
         batch_size,
@@ -536,10 +618,9 @@ fn run_stream(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
         min_sup_frac,
         min_sup,
         session.engine_name(),
-        cfg.cores
+        sc.executor().cores(),
+        sc.executor().name()
     );
-
-    let sc = SparkletContext::local(cfg.cores);
     let ssc = StreamContext::new(sc.clone());
     let batch_scale = batch_size as f64 / dataset.table1_row().0 as f64;
     let seed = cfg.seed;
@@ -567,6 +648,24 @@ fn run_stream(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
     ssc.run_batches(n_batches);
 
     println!("incremental miner: {}", miner.lock().unwrap().stats());
+    // The incremental miner's border recomputation runs through the
+    // executor: show how many tasks each window had in flight.
+    let streaming: Vec<_> = sc
+        .metrics()
+        .stages()
+        .into_iter()
+        .filter(|s| s.kind == StageKind::Streaming)
+        .collect();
+    if let Some(max_tasks) = streaming.iter().map(|s| s.num_tasks).max() {
+        println!(
+            "border recomputation: {} windows through executor '{}', \
+             up to {} concurrent tasks/window, {} steals",
+            streaming.len(),
+            streaming.first().map(|s| s.backend).unwrap_or("?"),
+            max_tasks,
+            streaming.iter().map(|s| s.steals).sum::<usize>()
+        );
+    }
     println!("engine: {}", sc.metrics().report());
     Ok(())
 }

@@ -1,4 +1,54 @@
 //! Engine configuration — the `SparkConf` analog.
+//!
+//! Builders validate instead of `assert!`ing: a bad value (zero cores,
+//! unknown executor backend, garbage in a `SPARKLET_*` env var) comes
+//! back as a typed [`ConfError`] the caller can surface, not a process
+//! abort.
+
+use super::executor::{ExecutorError, ExecutorRegistry};
+
+/// Typed configuration errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ConfError {
+    /// `executor_cores` must be >= 1.
+    InvalidCores { value: String },
+    /// `shuffle_partitions` must be >= 1.
+    InvalidShufflePartitions { value: String },
+    /// The named executor backend is not in the `ExecutorRegistry`
+    /// (the registry's own error, with its did-you-mean suggestion).
+    Backend(ExecutorError),
+    /// A `SPARKLET_*` environment override did not parse.
+    InvalidEnv {
+        var: &'static str,
+        value: String,
+        reason: String,
+    },
+}
+
+impl From<ExecutorError> for ConfError {
+    fn from(e: ExecutorError) -> Self {
+        Self::Backend(e)
+    }
+}
+
+impl std::fmt::Display for ConfError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::InvalidCores { value } => {
+                write!(f, "executor_cores must be >= 1 (got {value})")
+            }
+            Self::InvalidShufflePartitions { value } => {
+                write!(f, "shuffle_partitions must be >= 1 (got {value})")
+            }
+            Self::Backend(e) => e.fmt(f),
+            Self::InvalidEnv { var, value, reason } => {
+                write!(f, "invalid {var}={value:?}: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfError {}
 
 /// Configuration for a [`super::SparkletContext`].
 #[derive(Debug, Clone)]
@@ -8,6 +58,10 @@ pub struct SparkletConf {
     /// Worker threads in the executor pool — `spark.executor.cores`.
     /// Also the default parallelism for `parallelize` and shuffles.
     pub executor_cores: usize,
+    /// Executor backend name, resolved against the `ExecutorRegistry`
+    /// when the context is built (`fifo` | `work-stealing` |
+    /// `sequential`, plus anything registered later).
+    pub executor_backend: String,
     /// Default number of shuffle partitions (when a partitioner is not
     /// given explicitly). `spark.sql.shuffle.partitions` analog.
     pub shuffle_partitions: usize,
@@ -30,6 +84,7 @@ impl Default for SparkletConf {
         Self {
             app_name: "sparklet-app".into(),
             executor_cores: cores,
+            executor_backend: "fifo".into(),
             shuffle_partitions: cores,
             max_task_failures: 4,
             task_failure_rate: 0.0,
@@ -47,16 +102,42 @@ impl SparkletConf {
         }
     }
 
-    pub fn with_cores(mut self, cores: usize) -> Self {
-        assert!(cores > 0);
-        self.executor_cores = cores;
-        self.shuffle_partitions = cores;
-        self
+    /// Defaults with the `SPARKLET_*` environment overrides applied.
+    pub fn from_env() -> Result<Self, ConfError> {
+        Self::default().with_env_overrides()
     }
 
-    pub fn with_shuffle_partitions(mut self, n: usize) -> Self {
+    /// Set executor cores (also resets `shuffle_partitions` to match).
+    pub fn with_cores(mut self, cores: usize) -> Result<Self, ConfError> {
+        if cores == 0 {
+            return Err(ConfError::InvalidCores { value: "0".into() });
+        }
+        self.executor_cores = cores;
+        self.shuffle_partitions = cores;
+        Ok(self)
+    }
+
+    /// Select the executor backend by registry name (canonicalized, so
+    /// aliases like `ws` or `seq` work).
+    pub fn with_executor_backend(mut self, name: &str) -> Result<Self, ConfError> {
+        match ExecutorRegistry::canonical(name) {
+            Some(canonical) => {
+                self.executor_backend = canonical.to_string();
+                Ok(self)
+            }
+            None => Err(ConfError::Backend(ExecutorError::UnknownBackend {
+                name: name.to_string(),
+                suggestion: ExecutorRegistry::suggest(name),
+            })),
+        }
+    }
+
+    pub fn with_shuffle_partitions(mut self, n: usize) -> Result<Self, ConfError> {
+        if n == 0 {
+            return Err(ConfError::InvalidShufflePartitions { value: "0".into() });
+        }
         self.shuffle_partitions = n;
-        self
+        Ok(self)
     }
 
     pub fn with_failure_injection(mut self, rate: f64, seed: u64) -> Self {
@@ -69,6 +150,47 @@ impl SparkletConf {
         self.max_task_failures = n.max(1);
         self
     }
+
+    /// Apply the `SPARKLET_CORES`, `SPARKLET_BACKEND`, and
+    /// `SPARKLET_SHUFFLE_PARTITIONS` environment overrides on top of
+    /// the current values (empty/unset variables are ignored). Cores
+    /// are applied before shuffle partitions, so setting both honours
+    /// the explicit partition count.
+    pub fn with_env_overrides(mut self) -> Result<Self, ConfError> {
+        if let Some(cores) = env_usize("SPARKLET_CORES")? {
+            self = self.with_cores(cores)?;
+        }
+        if let Some(name) = env_str("SPARKLET_BACKEND") {
+            self = self.with_executor_backend(&name)?;
+        }
+        if let Some(n) = env_usize("SPARKLET_SHUFFLE_PARTITIONS")? {
+            self = self.with_shuffle_partitions(n)?;
+        }
+        Ok(self)
+    }
+}
+
+fn env_str(var: &'static str) -> Option<String> {
+    std::env::var(var).ok().filter(|v| !v.is_empty())
+}
+
+fn env_usize(var: &'static str) -> Result<Option<usize>, ConfError> {
+    match env_str(var) {
+        None => Ok(None),
+        Some(value) => match value.parse::<usize>() {
+            Ok(0) => Err(ConfError::InvalidEnv {
+                var,
+                value,
+                reason: "must be >= 1".into(),
+            }),
+            Ok(n) => Ok(Some(n)),
+            Err(_) => Err(ConfError::InvalidEnv {
+                var,
+                value,
+                reason: "not an unsigned integer".into(),
+            }),
+        },
+    }
 }
 
 #[cfg(test)]
@@ -79,6 +201,7 @@ mod tests {
     fn defaults_sane() {
         let c = SparkletConf::default();
         assert!(c.executor_cores >= 1);
+        assert_eq!(c.executor_backend, "fifo");
         assert_eq!(c.task_failure_rate, 0.0);
         assert!(c.max_task_failures >= 1);
     }
@@ -87,12 +210,94 @@ mod tests {
     fn builders_chain() {
         let c = SparkletConf::new("t")
             .with_cores(3)
+            .unwrap()
             .with_shuffle_partitions(7)
+            .unwrap()
+            .with_executor_backend("work-stealing")
+            .unwrap()
             .with_failure_injection(0.5, 9)
             .with_max_task_failures(2);
         assert_eq!(c.executor_cores, 3);
         assert_eq!(c.shuffle_partitions, 7);
+        assert_eq!(c.executor_backend, "work-stealing");
         assert_eq!(c.task_failure_rate, 0.5);
         assert_eq!(c.max_task_failures, 2);
+    }
+
+    #[test]
+    fn zero_values_are_errors_not_aborts() {
+        let err = SparkletConf::default().with_cores(0).unwrap_err();
+        assert!(matches!(err, ConfError::InvalidCores { .. }));
+        assert!(err.to_string().contains("executor_cores"), "{err}");
+        let err = SparkletConf::default()
+            .with_shuffle_partitions(0)
+            .unwrap_err();
+        assert!(matches!(err, ConfError::InvalidShufflePartitions { .. }));
+    }
+
+    #[test]
+    fn backend_names_validate_with_suggestions() {
+        // Aliases canonicalize.
+        let c = SparkletConf::default().with_executor_backend("ws").unwrap();
+        assert_eq!(c.executor_backend, "work-stealing");
+        let c = SparkletConf::default().with_executor_backend("seq").unwrap();
+        assert_eq!(c.executor_backend, "sequential");
+        // Unknown names fail with a suggestion.
+        let err = SparkletConf::default()
+            .with_executor_backend("fifa")
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown executor backend"), "{msg}");
+        assert!(msg.contains("did you mean"), "{msg}");
+    }
+
+    #[test]
+    fn env_overrides_apply_and_validate() {
+        // One test touches all three vars sequentially: env is
+        // process-global, so splitting this across #[test] fns would
+        // race under the parallel test runner.
+        let clear = || {
+            std::env::remove_var("SPARKLET_CORES");
+            std::env::remove_var("SPARKLET_BACKEND");
+            std::env::remove_var("SPARKLET_SHUFFLE_PARTITIONS");
+        };
+        clear();
+
+        // Unset vars leave the conf untouched.
+        let base = SparkletConf::new("env").with_cores(2).unwrap();
+        let same = base.clone().with_env_overrides().unwrap();
+        assert_eq!(same.executor_cores, 2);
+        assert_eq!(same.executor_backend, "fifo");
+
+        // Valid overrides apply; explicit partitions beat the cores reset.
+        std::env::set_var("SPARKLET_CORES", "3");
+        std::env::set_var("SPARKLET_BACKEND", "steal");
+        std::env::set_var("SPARKLET_SHUFFLE_PARTITIONS", "11");
+        let c = base.clone().with_env_overrides().unwrap();
+        assert_eq!(c.executor_cores, 3);
+        assert_eq!(c.executor_backend, "work-stealing");
+        assert_eq!(c.shuffle_partitions, 11);
+
+        // Garbage values are typed errors, not panics.
+        std::env::set_var("SPARKLET_CORES", "many");
+        let err = base.clone().with_env_overrides().unwrap_err();
+        assert!(
+            matches!(err, ConfError::InvalidEnv { var: "SPARKLET_CORES", .. }),
+            "{err}"
+        );
+        std::env::set_var("SPARKLET_CORES", "0");
+        let err = base.clone().with_env_overrides().unwrap_err();
+        assert!(err.to_string().contains("must be >= 1"), "{err}");
+        std::env::set_var("SPARKLET_CORES", "2");
+        std::env::set_var("SPARKLET_BACKEND", "tokio");
+        let err = base.clone().with_env_overrides().unwrap_err();
+        assert!(matches!(err, ConfError::Backend(_)), "{err}");
+
+        // Empty values count as unset.
+        std::env::set_var("SPARKLET_BACKEND", "");
+        let c = base.clone().with_env_overrides().unwrap();
+        assert_eq!(c.executor_backend, "fifo");
+
+        clear();
     }
 }

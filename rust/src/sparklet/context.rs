@@ -6,16 +6,16 @@ use std::sync::Arc;
 use super::accumulator::{AccumValue, Accumulator};
 use super::broadcast::{Broadcast, BroadcastRegistry};
 use super::cache::CacheManager;
-use super::conf::SparkletConf;
+use super::conf::{ConfError, SparkletConf};
+use super::executor::{ExecutorBackend, ExecutorRegistry};
 use super::metrics::MetricsRegistry;
 use super::rdd::{Data, Rdd};
 use super::shuffle::ShuffleManager;
 use super::transforms::ParallelCollection;
-use crate::util::ThreadPool;
 
 struct ContextInner {
     conf: SparkletConf,
-    pool: ThreadPool,
+    executor: Arc<dyn ExecutorBackend>,
     shuffle: ShuffleManager,
     cache: CacheManager,
     broadcasts: BroadcastRegistry,
@@ -24,26 +24,42 @@ struct ContextInner {
 }
 
 /// Cheap-to-clone handle on the engine. Dropping the last handle joins
-/// the executor pool.
+/// the executor backend's workers.
 #[derive(Clone)]
 pub struct SparkletContext {
     inner: Arc<ContextInner>,
 }
 
 impl SparkletContext {
+    /// Build a context, resolving `conf.executor_backend` against the
+    /// `ExecutorRegistry`. Panics on an unknown backend — use
+    /// [`SparkletContext::try_new`] (or the validating
+    /// `SparkletConf::with_executor_backend` builder) for the error
+    /// path.
     pub fn new(conf: SparkletConf) -> Self {
-        let pool = ThreadPool::new(conf.executor_cores);
-        Self {
+        Self::try_new(conf).unwrap_or_else(|e| panic!("invalid SparkletConf: {e}"))
+    }
+
+    /// `new`, with configuration problems surfaced as [`ConfError`].
+    pub fn try_new(conf: SparkletConf) -> Result<Self, ConfError> {
+        let executor = ExecutorRegistry::create(&conf.executor_backend, conf.executor_cores)
+            .map_err(ConfError::Backend)?;
+        let metrics = MetricsRegistry::new();
+        {
+            let ex = Arc::clone(&executor);
+            metrics.set_active_source(move || ex.active());
+        }
+        Ok(Self {
             inner: Arc::new(ContextInner {
-                pool,
+                executor,
                 shuffle: ShuffleManager::new(),
                 cache: CacheManager::new(),
                 broadcasts: BroadcastRegistry::default(),
-                metrics: MetricsRegistry::new(),
+                metrics,
                 next_rdd_id: AtomicUsize::new(0),
                 conf,
             }),
-        }
+        })
     }
 
     /// Context with default configuration (all cores).
@@ -51,22 +67,28 @@ impl SparkletContext {
         Self::new(SparkletConf::default())
     }
 
-    /// Local context with `cores` executor threads.
+    /// Local context with `cores` executor threads (panics on 0 cores;
+    /// the conf builder has the validating path).
     pub fn local(cores: usize) -> Self {
-        Self::new(SparkletConf::default().with_cores(cores))
+        let conf = SparkletConf::default()
+            .with_cores(cores)
+            .unwrap_or_else(|e| panic!("{e}"));
+        Self::new(conf)
     }
 
     pub fn conf(&self) -> &SparkletConf {
         &self.inner.conf
     }
 
-    /// `sc.defaultParallelism()` — number of executor cores.
+    /// `sc.defaultParallelism()` — worker parallelism of the executor
+    /// backend (1 for `sequential`, regardless of configured cores).
     pub fn default_parallelism(&self) -> usize {
-        self.inner.conf.executor_cores
+        self.inner.executor.cores().max(1)
     }
 
-    pub(crate) fn pool(&self) -> &ThreadPool {
-        &self.inner.pool
+    /// The execution backend stages are submitted to.
+    pub fn executor(&self) -> &Arc<dyn ExecutorBackend> {
+        &self.inner.executor
     }
 
     pub fn shuffle_manager(&self) -> &ShuffleManager {
@@ -168,6 +190,22 @@ mod tests {
     fn default_parallelism_is_cores() {
         let sc = SparkletContext::local(3);
         assert_eq!(sc.default_parallelism(), 3);
+        assert_eq!(sc.executor().name(), "fifo");
+    }
+
+    #[test]
+    fn try_new_rejects_unknown_backend() {
+        // The field is public; a raw string bypassing the validating
+        // builder still fails typed, not with a process abort.
+        let conf = SparkletConf {
+            executor_backend: "bogus".into(),
+            ..Default::default()
+        };
+        let err = SparkletContext::try_new(conf).unwrap_err();
+        assert!(
+            err.to_string().contains("unknown executor backend"),
+            "{err}"
+        );
     }
 
     #[test]

@@ -1,0 +1,799 @@
+//! Pluggable execution backends — the layer between the DAG scheduler
+//! and the worker threads.
+//!
+//! The scheduler no longer talks to a thread pool directly: it builds a
+//! first-class [`TaskSet`] (one boxed closure per partition, plus a
+//! [`StageDesc`]) and submits it to whatever [`ExecutorBackend`] the
+//! context was configured with. Submission is asynchronous — `submit`
+//! returns a [`JobHandle`] immediately, so several task sets can be in
+//! flight at once (the streaming miner exploits this to recompute
+//! border candidates concurrently) — and every handle reports
+//! [`TaskSetStats`]: how many tasks were stolen across workers and how
+//! long tasks sat queued before a worker picked them up. Both counters
+//! flow into [`super::metrics::StageMetrics`].
+//!
+//! Three backends ship, registered behind the string-keyed
+//! [`ExecutorRegistry`] (mirroring `fim::engine::EngineRegistry`, so a
+//! future multi-process backend is a one-line registration):
+//!
+//! * `fifo` — a shared FIFO queue over a fixed [`ThreadPool`]; today's
+//!   behaviour, and the default.
+//! * `work-stealing` — per-worker deques with idle-worker stealing.
+//!   Eclat equivalence classes are heavily skewed (one class can hold
+//!   most of the lattice), so a worker that drew short classes steals
+//!   the long class's backlog instead of idling.
+//! * `sequential` — runs every task inline on the submitting thread in
+//!   submission order: deterministic, single-threaded, the right
+//!   substrate for reproducible tests and debugging.
+//!
+//! Result delivery stays the submitter's concern: task closures capture
+//! their own channels. The backend only guarantees that every task runs
+//! exactly once (panics included — a panicking task is caught so worker
+//! threads survive and the handle still completes; the submitter's own
+//! `catch_unwind` is what turns the panic into a retryable error).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle as ThreadHandle;
+use std::time::Instant;
+
+use crate::util::text::closest;
+use crate::util::ThreadPool;
+
+/// A unit of work. Tasks deliver results through channels they capture;
+/// the executor only runs them.
+pub type TaskFn = Box<dyn FnOnce() + Send + 'static>;
+
+pub(crate) use crate::util::pool::panic_message;
+
+// ------------------------------------------------------------ descriptors
+
+/// What a [`TaskSet`] is for — carried into logs and metrics.
+#[derive(Debug, Clone)]
+pub struct StageDesc {
+    /// Scheduler stage tag (ties executor diagnostics to stages).
+    pub stage_tag: u64,
+    /// Human-readable stage name, e.g. `"ShuffleMap/rdd3/attempt0"`.
+    pub name: String,
+}
+
+/// A first-class description of one stage's tasks, built by the
+/// scheduler (or any other driver-side submitter) and handed to an
+/// [`ExecutorBackend`].
+pub struct TaskSet {
+    /// Descriptor for diagnostics.
+    pub stage: StageDesc,
+    tasks: Vec<TaskFn>,
+}
+
+impl TaskSet {
+    pub fn new(stage_tag: u64, name: impl Into<String>) -> Self {
+        Self {
+            stage: StageDesc {
+                stage_tag,
+                name: name.into(),
+            },
+            tasks: Vec::new(),
+        }
+    }
+
+    /// Append one task.
+    pub fn push(&mut self, task: impl FnOnce() + Send + 'static) {
+        self.tasks.push(Box::new(task));
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+
+    fn into_parts(self) -> (StageDesc, Vec<TaskFn>) {
+        (self.stage, self.tasks)
+    }
+}
+
+// ------------------------------------------------------------- job handle
+
+/// Execution counters of one task set, reported by [`JobHandle::wait`]
+/// and recorded into `StageMetrics`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TaskSetStats {
+    /// Tasks executed by a worker other than the one they were queued
+    /// on (always 0 for `fifo` and `sequential`).
+    pub steals: usize,
+    /// Total time tasks spent queued before a worker picked them up,
+    /// in milliseconds (summed over tasks).
+    pub queue_wait_ms: f64,
+}
+
+struct JobState {
+    total: usize,
+    done: Mutex<usize>,
+    all_done: Condvar,
+    steals: AtomicUsize,
+    queue_wait_us: AtomicU64,
+}
+
+impl JobState {
+    fn new(total: usize) -> Self {
+        Self {
+            total,
+            done: Mutex::new(0),
+            all_done: Condvar::new(),
+            steals: AtomicUsize::new(0),
+            queue_wait_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Mark one task complete (runs even when the task panicked, so a
+    /// handle can never hang).
+    fn finish_task(&self) {
+        let mut done = self.done.lock().unwrap();
+        *done += 1;
+        if *done >= self.total {
+            self.all_done.notify_all();
+        }
+    }
+
+    fn stats(&self) -> TaskSetStats {
+        TaskSetStats {
+            steals: self.steals.load(Ordering::Relaxed),
+            queue_wait_ms: self.queue_wait_us.load(Ordering::Relaxed) as f64 / 1e3,
+        }
+    }
+}
+
+/// Asynchronous handle on a submitted [`TaskSet`]. Dropping the handle
+/// does *not* cancel the tasks; `wait` blocks until every task has run.
+pub struct JobHandle {
+    state: Arc<JobState>,
+    stage: StageDesc,
+}
+
+impl JobHandle {
+    fn new(state: Arc<JobState>, stage: StageDesc) -> Self {
+        Self { state, stage }
+    }
+
+    pub fn stage(&self) -> &StageDesc {
+        &self.stage
+    }
+
+    /// Have all tasks of the set finished?
+    pub fn is_complete(&self) -> bool {
+        *self.state.done.lock().unwrap() >= self.state.total
+    }
+
+    /// Block until every task of the set has run, then return the set's
+    /// execution counters.
+    pub fn wait(&self) -> TaskSetStats {
+        let mut done = self.state.done.lock().unwrap();
+        while *done < self.state.total {
+            done = self.state.all_done.wait(done).unwrap();
+        }
+        drop(done);
+        self.state.stats()
+    }
+}
+
+// ----------------------------------------------------------------- trait
+
+/// An execution substrate tasks are submitted to. Implementations must
+/// run every task of a submitted set exactly once and survive task
+/// panics.
+pub trait ExecutorBackend: Send + Sync {
+    /// Canonical registry name (kebab-case, e.g. `"work-stealing"`).
+    fn name(&self) -> &'static str;
+
+    /// Worker parallelism (1 for `sequential`).
+    fn cores(&self) -> usize;
+
+    /// Submit a task set for execution. Returns immediately; use the
+    /// returned [`JobHandle`] to await completion. Multiple submitted
+    /// sets may be in flight concurrently.
+    fn submit(&self, tasks: TaskSet) -> JobHandle;
+
+    /// Tasks currently executing (metrics gauge; best-effort).
+    fn active(&self) -> usize {
+        0
+    }
+}
+
+/// Shared per-task bookkeeping: record queue wait, run under
+/// `catch_unwind`, mark the job state done.
+fn run_task(task: TaskFn, state: &JobState, enqueued: Instant, stolen: bool) {
+    state
+        .queue_wait_us
+        .fetch_add(enqueued.elapsed().as_micros() as u64, Ordering::Relaxed);
+    if stolen {
+        state.steals.fetch_add(1, Ordering::Relaxed);
+    }
+    let _ = catch_unwind(AssertUnwindSafe(task));
+    state.finish_task();
+}
+
+// ------------------------------------------------------------------ fifo
+
+/// Today's executor: a shared FIFO queue drained by a fixed
+/// [`ThreadPool`] ("one executor JVM, `threads` = executor cores").
+pub struct FifoBackend {
+    pool: ThreadPool,
+}
+
+impl FifoBackend {
+    pub fn new(cores: usize) -> Self {
+        Self {
+            pool: ThreadPool::new(cores.max(1)),
+        }
+    }
+}
+
+impl ExecutorBackend for FifoBackend {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn cores(&self) -> usize {
+        self.pool.size()
+    }
+
+    fn active(&self) -> usize {
+        self.pool.active()
+    }
+
+    fn submit(&self, tasks: TaskSet) -> JobHandle {
+        let (stage, tasks) = tasks.into_parts();
+        let state = Arc::new(JobState::new(tasks.len()));
+        for task in tasks {
+            let st = Arc::clone(&state);
+            let enqueued = Instant::now();
+            self.pool.execute(move || run_task(task, &st, enqueued, false));
+        }
+        JobHandle::new(state, stage)
+    }
+}
+
+// -------------------------------------------------------------- sequential
+
+/// Deterministic single-thread backend: tasks run inline on the
+/// submitting thread, in submission order. `submit` returns an
+/// already-completed handle.
+#[derive(Default)]
+pub struct SequentialBackend {
+    active: AtomicUsize,
+}
+
+impl SequentialBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl ExecutorBackend for SequentialBackend {
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+
+    fn cores(&self) -> usize {
+        1
+    }
+
+    fn active(&self) -> usize {
+        self.active.load(Ordering::Relaxed)
+    }
+
+    fn submit(&self, tasks: TaskSet) -> JobHandle {
+        let (stage, tasks) = tasks.into_parts();
+        let state = Arc::new(JobState::new(tasks.len()));
+        for task in tasks {
+            self.active.fetch_add(1, Ordering::Relaxed);
+            run_task(task, &state, Instant::now(), false);
+            self.active.fetch_sub(1, Ordering::Relaxed);
+        }
+        JobHandle::new(state, stage)
+    }
+}
+
+// ----------------------------------------------------------- work-stealing
+
+struct WorkItem {
+    task: TaskFn,
+    state: Arc<JobState>,
+    enqueued: Instant,
+}
+
+struct StealShared {
+    /// One deque per worker. Owners pop the front (submission order);
+    /// thieves pop the back, so a thief and the owner contend on
+    /// opposite ends of the deque.
+    queues: Vec<Mutex<VecDeque<WorkItem>>>,
+    /// Queued-but-not-started items. Guards the sleep/wake protocol:
+    /// submitters increment under this lock before notifying, workers
+    /// only sleep after seeing 0 under it, so wakeups cannot be lost.
+    pending: Mutex<usize>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    active: AtomicUsize,
+}
+
+/// Per-worker deques with idle-worker stealing. Better than `fifo`
+/// when task durations are skewed: short-task workers drain their own
+/// deque and then steal the long tail instead of idling behind a
+/// single shared queue's head-of-line order.
+pub struct WorkStealingBackend {
+    shared: Arc<StealShared>,
+    workers: Vec<ThreadHandle<()>>,
+    next: AtomicUsize,
+    size: usize,
+}
+
+impl WorkStealingBackend {
+    pub fn new(cores: usize) -> Self {
+        let size = cores.max(1);
+        let shared = Arc::new(StealShared {
+            queues: (0..size).map(|_| Mutex::new(VecDeque::new())).collect(),
+            pending: Mutex::new(0),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+        });
+        let workers = (0..size)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("sparklet-steal-{i}"))
+                    .spawn(move || steal_worker_loop(shared, i))
+                    .expect("spawn work-stealing worker")
+            })
+            .collect();
+        Self {
+            shared,
+            workers,
+            next: AtomicUsize::new(0),
+            size,
+        }
+    }
+}
+
+/// Pop from the worker's own deque, else steal from another's tail.
+/// Returns the item and whether it was stolen.
+fn take_item(shared: &StealShared, me: usize) -> Option<(WorkItem, bool)> {
+    if let Some(item) = shared.queues[me].lock().unwrap().pop_front() {
+        return Some((item, false));
+    }
+    let n = shared.queues.len();
+    for off in 1..n {
+        let victim = (me + off) % n;
+        if let Some(item) = shared.queues[victim].lock().unwrap().pop_back() {
+            return Some((item, true));
+        }
+    }
+    None
+}
+
+fn steal_worker_loop(shared: Arc<StealShared>, me: usize) {
+    loop {
+        match take_item(&shared, me) {
+            Some((item, stolen)) => {
+                *shared.pending.lock().unwrap() -= 1;
+                shared.active.fetch_add(1, Ordering::Relaxed);
+                run_task(item.task, &item.state, item.enqueued, stolen);
+                shared.active.fetch_sub(1, Ordering::Relaxed);
+            }
+            None => {
+                let pending = shared.pending.lock().unwrap();
+                if *pending == 0 {
+                    if shared.shutdown.load(Ordering::Acquire) {
+                        return;
+                    }
+                    // Sleep until a submitter (who increments `pending`
+                    // under this same lock) notifies. A wakeup with no
+                    // item left (another worker raced us) just loops.
+                    let _guard = shared.available.wait(pending).unwrap();
+                }
+                // pending > 0 but the scan found nothing: another worker
+                // holds the item in flight — retry the scan.
+            }
+        }
+    }
+}
+
+impl ExecutorBackend for WorkStealingBackend {
+    fn name(&self) -> &'static str {
+        "work-stealing"
+    }
+
+    fn cores(&self) -> usize {
+        self.size
+    }
+
+    fn active(&self) -> usize {
+        self.shared.active.load(Ordering::Relaxed)
+    }
+
+    fn submit(&self, tasks: TaskSet) -> JobHandle {
+        let (stage, tasks) = tasks.into_parts();
+        let state = Arc::new(JobState::new(tasks.len()));
+        for task in tasks {
+            let slot = self.next.fetch_add(1, Ordering::Relaxed) % self.size;
+            let item = WorkItem {
+                task,
+                state: Arc::clone(&state),
+                enqueued: Instant::now(),
+            };
+            // Increment `pending` *before* the item becomes visible: a
+            // racing worker that pops it decrements immediately, and the
+            // counter must never underflow.
+            *self.shared.pending.lock().unwrap() += 1;
+            self.shared.queues[slot].lock().unwrap().push_back(item);
+            self.shared.available.notify_one();
+        }
+        JobHandle::new(state, stage)
+    }
+}
+
+impl Drop for WorkStealingBackend {
+    fn drop(&mut self) {
+        {
+            // Store + notify under the `pending` lock: a worker that
+            // just saw shutdown=false re-acquires this lock before it
+            // can sleep, so the notify cannot fall between its check
+            // and its wait (lost wakeup ⇒ join would hang).
+            let _pending = self.shared.pending.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::Release);
+            self.shared.available.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+// -------------------------------------------------------------- registry
+
+/// Factory building a backend for a given core count.
+pub type BackendFactory = Arc<dyn Fn(usize) -> Arc<dyn ExecutorBackend> + Send + Sync>;
+
+struct BackendEntry {
+    name: &'static str,
+    aliases: &'static [&'static str],
+    describe: &'static str,
+    factory: BackendFactory,
+}
+
+static EXECUTORS: OnceLock<Mutex<Vec<BackendEntry>>> = OnceLock::new();
+
+fn builtin_backends() -> Vec<BackendEntry> {
+    vec![
+        BackendEntry {
+            name: "fifo",
+            aliases: &["pool", "threadpool"],
+            describe: "shared FIFO queue over a fixed thread pool (default)",
+            factory: Arc::new(|cores| Arc::new(FifoBackend::new(cores))),
+        },
+        BackendEntry {
+            name: "work-stealing",
+            aliases: &["steal", "ws", "workstealing"],
+            describe: "per-worker deques with idle-worker stealing (skew-tolerant)",
+            factory: Arc::new(|cores| Arc::new(WorkStealingBackend::new(cores))),
+        },
+        BackendEntry {
+            name: "sequential",
+            aliases: &["seq", "inline"],
+            describe: "deterministic single-thread inline execution (tests/debugging)",
+            factory: Arc::new(|_| Arc::new(SequentialBackend::new())),
+        },
+    ]
+}
+
+fn executors() -> &'static Mutex<Vec<BackendEntry>> {
+    EXECUTORS.get_or_init(|| Mutex::new(builtin_backends()))
+}
+
+/// Case/punctuation-insensitive lookup key ("WorkStealing" ==
+/// "work-stealing"), same normalization as the engine registry.
+fn normalize(name: &str) -> String {
+    name.chars()
+        .filter(|c| *c != '-' && *c != '_')
+        .flat_map(|c| c.to_lowercase())
+        .collect()
+}
+
+/// Typed executor-layer errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExecutorError {
+    /// The named backend is not registered.
+    UnknownBackend {
+        name: String,
+        suggestion: Option<String>,
+    },
+}
+
+impl std::fmt::Display for ExecutorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::UnknownBackend { name, suggestion } => {
+                write!(f, "unknown executor backend {name:?}")?;
+                if let Some(s) = suggestion {
+                    write!(f, " — did you mean {s:?}?")?;
+                }
+                write!(f, " (registered: {})", ExecutorRegistry::names().join(", "))
+            }
+        }
+    }
+}
+
+impl std::error::Error for ExecutorError {}
+
+/// The static backend registry: name → factory, mirroring
+/// `EngineRegistry`. Additional backends (e.g. a multi-process
+/// executor) call [`ExecutorRegistry::register`] once and immediately
+/// become addressable from `SparkletConf`, the CLI `--executor` flag,
+/// the bench sweep, and the cross-backend test suites.
+pub struct ExecutorRegistry;
+
+impl ExecutorRegistry {
+    /// Canonical names of all registered backends, in registration
+    /// order.
+    pub fn names() -> Vec<&'static str> {
+        executors().lock().unwrap().iter().map(|e| e.name).collect()
+    }
+
+    /// Resolve a (possibly aliased/misspelled-case) name to its
+    /// canonical registered form.
+    pub fn canonical(name: &str) -> Option<&'static str> {
+        let key = normalize(name);
+        let reg = executors().lock().unwrap();
+        reg.iter()
+            .find(|e| normalize(e.name) == key)
+            .or_else(|| {
+                reg.iter()
+                    .find(|e| e.aliases.iter().any(|a| normalize(a) == key))
+            })
+            .map(|e| e.name)
+    }
+
+    /// Build a backend instance by name for `cores` workers.
+    pub fn create(name: &str, cores: usize) -> Result<Arc<dyn ExecutorBackend>, ExecutorError> {
+        let key = normalize(name);
+        let reg = executors().lock().unwrap();
+        let entry = reg
+            .iter()
+            .find(|e| normalize(e.name) == key)
+            .or_else(|| {
+                reg.iter()
+                    .find(|e| e.aliases.iter().any(|a| normalize(a) == key))
+            })
+            .ok_or_else(|| ExecutorError::UnknownBackend {
+                name: name.to_string(),
+                suggestion: Self::suggest_locked(&reg, name),
+            })?;
+        Ok((entry.factory)(cores))
+    }
+
+    /// Register a backend factory (replacing any same-name entry) —
+    /// the one-line hook future backends use.
+    pub fn register(
+        name: &'static str,
+        describe: &'static str,
+        factory: impl Fn(usize) -> Arc<dyn ExecutorBackend> + Send + Sync + 'static,
+    ) {
+        let mut reg = executors().lock().unwrap();
+        let key = normalize(name);
+        reg.retain(|e| normalize(e.name) != key);
+        reg.push(BackendEntry {
+            name,
+            aliases: &[],
+            describe,
+            factory: Arc::new(factory),
+        });
+    }
+
+    fn suggest_locked(reg: &[BackendEntry], name: &str) -> Option<String> {
+        let candidates: Vec<&'static str> = reg
+            .iter()
+            .flat_map(|e| std::iter::once(e.name).chain(e.aliases.iter().copied()))
+            .collect();
+        closest(&name.to_lowercase(), candidates, 3).map(str::to_string)
+    }
+
+    /// Closest registered name/alias to a misspelled input.
+    pub fn suggest(name: &str) -> Option<String> {
+        Self::suggest_locked(&executors().lock().unwrap(), name)
+    }
+
+    /// `name — description` lines for `--help`.
+    pub fn describe_all() -> String {
+        let reg = executors().lock().unwrap();
+        let mut out = String::new();
+        for e in reg.iter() {
+            out.push_str(&format!("  {:<14} {}\n", e.name, e.describe));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    /// The built-in backends by name. Sibling tests iterate this fixed
+    /// list rather than `ExecutorRegistry::names()`: the registry is
+    /// process-global and `custom_backend_registers_in_one_line`
+    /// mutates it concurrently, which would make names()-driven
+    /// coverage order-dependent.
+    const BUILTINS: [&str; 3] = ["fifo", "work-stealing", "sequential"];
+
+    fn backend(name: &str, cores: usize) -> Arc<dyn ExecutorBackend> {
+        ExecutorRegistry::create(name, cores).unwrap()
+    }
+
+    /// Run n squaring tasks through a backend and collect results.
+    fn run_squares(ex: &dyn ExecutorBackend, n: usize) -> Vec<usize> {
+        let (tx, rx) = channel();
+        let mut ts = TaskSet::new(1, "squares");
+        for i in 0..n {
+            let tx = tx.clone();
+            ts.push(move || {
+                let _ = tx.send((i, i * i));
+            });
+        }
+        drop(tx);
+        let handle = ex.submit(ts);
+        let stats = handle.wait();
+        assert!(handle.is_complete());
+        assert!(stats.queue_wait_ms >= 0.0);
+        let mut out = vec![0usize; n];
+        for (i, sq) in rx.try_iter() {
+            out[i] = sq;
+        }
+        out
+    }
+
+    #[test]
+    fn every_builtin_backend_runs_all_tasks() {
+        for name in BUILTINS {
+            let ex = backend(name, 3);
+            let got = run_squares(ex.as_ref(), 50);
+            let want: Vec<usize> = (0..50).map(|i| i * i).collect();
+            assert_eq!(got, want, "{name}");
+        }
+    }
+
+    #[test]
+    fn handles_are_asynchronous_and_concurrent() {
+        // Two task sets in flight at once on one backend; both complete.
+        for name in ["fifo", "work-stealing"] {
+            let ex = backend(name, 2);
+            let (tx, rx) = channel();
+            let mut a = TaskSet::new(1, "a");
+            let mut b = TaskSet::new(2, "b");
+            for i in 0..8 {
+                let txa = tx.clone();
+                a.push(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    let _ = txa.send(("a", i));
+                });
+                let txb = tx.clone();
+                b.push(move || {
+                    let _ = txb.send(("b", i));
+                });
+            }
+            drop(tx);
+            let ha = ex.submit(a);
+            let hb = ex.submit(b); // submitted before ha completes
+            hb.wait();
+            ha.wait();
+            let got: Vec<_> = rx.try_iter().collect();
+            assert_eq!(got.len(), 16, "{name}");
+        }
+    }
+
+    #[test]
+    fn sequential_backend_is_deterministic_submission_order() {
+        let ex = backend("sequential", 4); // cores ignored
+        assert_eq!(ex.cores(), 1);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mut ts = TaskSet::new(1, "order");
+        for i in 0..20 {
+            let order = Arc::clone(&order);
+            ts.push(move || order.lock().unwrap().push(i));
+        }
+        // Handle is already complete when submit returns.
+        let handle = ex.submit(ts);
+        assert!(handle.is_complete());
+        handle.wait();
+        assert_eq!(*order.lock().unwrap(), (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn work_stealing_steals_under_skew() {
+        // Round-robin puts the long tasks on worker 0's deque; worker 1
+        // drains its short tasks and must steal from worker 0's tail.
+        let ex = WorkStealingBackend::new(2);
+        let mut ts = TaskSet::new(1, "skew");
+        for i in 0..10 {
+            ts.push(move || {
+                // Even submissions (worker 0's deque) are the slow ones.
+                let ms = if i % 2 == 0 { 30 } else { 1 };
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+            });
+        }
+        let stats = ex.submit(ts).wait();
+        assert!(stats.steals > 0, "no steals under skew: {stats:?}");
+    }
+
+    #[test]
+    fn panicking_task_completes_the_handle_and_workers_survive() {
+        for name in BUILTINS {
+            let ex = backend(name, 2);
+            let mut ts = TaskSet::new(1, "boom");
+            ts.push(|| panic!("boom"));
+            ts.push(|| {});
+            let stats = ex.submit(ts).wait(); // must not hang
+            assert!(stats.queue_wait_ms >= 0.0);
+            // Backend still works afterwards.
+            let got = run_squares(ex.as_ref(), 4);
+            assert_eq!(got, vec![0, 1, 4, 9], "{name}");
+        }
+    }
+
+    #[test]
+    fn registry_lookup_aliases_and_suggestions() {
+        assert_eq!(ExecutorRegistry::canonical("fifo"), Some("fifo"));
+        assert_eq!(ExecutorRegistry::canonical("WS"), Some("work-stealing"));
+        assert_eq!(
+            ExecutorRegistry::canonical("WorkStealing"),
+            Some("work-stealing")
+        );
+        assert_eq!(ExecutorRegistry::canonical("seq"), Some("sequential"));
+        assert_eq!(ExecutorRegistry::canonical("tokio"), None);
+        let err = ExecutorRegistry::create("work-staling", 2).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown executor backend"), "{msg}");
+        assert!(msg.contains("did you mean"), "{msg}");
+        assert!(msg.contains("work-stealing"), "{msg}");
+    }
+
+    #[test]
+    fn custom_backend_registers_in_one_line() {
+        ExecutorRegistry::register("test-inline", "unit-test backend", |_| {
+            Arc::new(SequentialBackend::new())
+        });
+        assert!(ExecutorRegistry::names().contains(&"test-inline"));
+        let ex = backend("test-inline", 8);
+        assert_eq!(run_squares(ex.as_ref(), 5), vec![0, 1, 4, 9, 16]);
+    }
+
+    #[test]
+    fn queue_wait_is_measured_when_workers_are_busy() {
+        let ex = FifoBackend::new(1);
+        let mut ts = TaskSet::new(1, "wait");
+        for _ in 0..4 {
+            ts.push(|| std::thread::sleep(std::time::Duration::from_millis(10)));
+        }
+        let stats = ex.submit(ts).wait();
+        // With one worker, tasks 2..4 each waited >= ~10ms.
+        assert!(
+            stats.queue_wait_ms >= 10.0,
+            "queue wait not measured: {stats:?}"
+        );
+    }
+
+    #[test]
+    fn empty_task_set_completes_immediately() {
+        for name in BUILTINS {
+            let ex = backend(name, 2);
+            let handle = ex.submit(TaskSet::new(9, "empty"));
+            assert!(handle.is_complete(), "{name}");
+            assert_eq!(handle.wait(), TaskSetStats::default());
+            assert_eq!(handle.stage().stage_tag, 9);
+        }
+    }
+}

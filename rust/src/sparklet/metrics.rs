@@ -1,6 +1,7 @@
-//! Per-stage execution metrics (timings, task counts, retries).
+//! Per-stage execution metrics (timings, task counts, retries, executor
+//! backend counters).
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// What kind of stage produced the metrics.
@@ -8,6 +9,9 @@ use std::time::Duration;
 pub enum StageKind {
     ShuffleMap,
     Result,
+    /// A driver-submitted streaming task set (e.g. the incremental
+    /// miner's border-candidate recomputation) — no RDD behind it.
+    Streaming,
 }
 
 #[derive(Debug, Clone)]
@@ -24,6 +28,14 @@ pub struct StageMetrics {
     /// Estimated shuffle bytes written while this stage ran (records ×
     /// static record size — see `ShuffleManager::bytes_written`).
     pub shuffle_bytes: u64,
+    /// Executor backend that ran the stage's task set.
+    pub backend: &'static str,
+    /// Tasks executed by a worker other than the one they were queued
+    /// on (work-stealing backend; 0 elsewhere).
+    pub steals: usize,
+    /// Total time the stage's tasks sat queued before a worker picked
+    /// them up, milliseconds.
+    pub queue_wait_ms: f64,
 }
 
 impl StageMetrics {
@@ -40,6 +52,9 @@ impl StageMetrics {
 #[derive(Default)]
 pub struct MetricsRegistry {
     stages: Mutex<Vec<StageMetrics>>,
+    /// Gauge probing the executor's currently-running task count
+    /// (wired by the context; surfaces `ThreadPool::active` & co.).
+    active_source: Mutex<Option<Arc<dyn Fn() -> usize + Send + Sync>>>,
 }
 
 impl MetricsRegistry {
@@ -49,6 +64,23 @@ impl MetricsRegistry {
 
     pub fn record(&self, m: StageMetrics) {
         self.stages.lock().unwrap().push(m);
+    }
+
+    /// Wire the live active-task gauge (called by the context with the
+    /// executor backend's `active()`).
+    pub fn set_active_source(&self, f: impl Fn() -> usize + Send + Sync + 'static) {
+        *self.active_source.lock().unwrap() = Some(Arc::new(f));
+    }
+
+    /// Tasks executing right now, per the wired gauge (0 when unwired).
+    pub fn active_tasks(&self) -> usize {
+        let probe = self.active_source.lock().unwrap().clone();
+        probe.map(|f| f()).unwrap_or(0)
+    }
+
+    /// Total cross-worker task steals across all recorded stages.
+    pub fn total_steals(&self) -> usize {
+        self.stages.lock().unwrap().iter().map(|s| s.steals).sum()
     }
 
     pub fn stages(&self) -> Vec<StageMetrics> {
@@ -80,29 +112,37 @@ impl MetricsRegistry {
             .sum()
     }
 
-    /// One-line human-readable report of the recorded stages.
+    /// One-line human-readable report of the recorded stages, plus the
+    /// live active-task gauge.
     pub fn report(&self) -> String {
         let stages = self.stages.lock().unwrap();
         let mut maps = 0usize;
+        let mut streaming = 0usize;
         let mut retries = 0usize;
+        let mut steals = 0usize;
         let mut records = 0u64;
         let mut bytes = 0u64;
         let mut wall_ms = 0.0f64;
         for s in stages.iter() {
-            if s.kind == StageKind::ShuffleMap {
-                maps += 1;
+            match s.kind {
+                StageKind::ShuffleMap => maps += 1,
+                StageKind::Streaming => streaming += 1,
+                StageKind::Result => {}
             }
             retries += s.retries;
+            steals += s.steals;
             records += s.shuffle_records;
             bytes += s.shuffle_bytes;
             wall_ms += s.wall.as_secs_f64() * 1e3;
         }
+        let n = stages.len();
+        drop(stages);
         format!(
-            "{} stages ({} map, {} result), {wall_ms:.1} ms wall, {retries} retries, \
-             shuffle: {records} records / ~{bytes} bytes",
-            stages.len(),
-            maps,
-            stages.len() - maps,
+            "{n} stages ({maps} map, {} result, {streaming} streaming), {wall_ms:.1} ms wall, \
+             {retries} retries, {steals} steals, shuffle: {records} records / ~{bytes} bytes, \
+             {} tasks active",
+            n - maps - streaming,
+            self.active_tasks(),
         )
     }
 
@@ -174,6 +214,9 @@ mod tests {
             retries,
             shuffle_records: 0,
             shuffle_bytes: 0,
+            backend: "fifo",
+            steals: 0,
+            queue_wait_ms: 0.0,
         }
     }
 
@@ -200,6 +243,24 @@ mod tests {
         let report = r.report();
         assert!(report.contains("100 records"), "{report}");
         assert!(report.contains("1600 bytes"), "{report}");
+    }
+
+    #[test]
+    fn report_surfaces_steals_streaming_and_active_gauge() {
+        let r = MetricsRegistry::new();
+        assert_eq!(r.active_tasks(), 0, "unwired gauge reads 0");
+        r.set_active_source(|| 3);
+        let mut m = stage(StageKind::Streaming, 5, vec![5.0, 5.0], 0);
+        m.backend = "work-stealing";
+        m.steals = 4;
+        m.queue_wait_ms = 1.5;
+        r.record(m);
+        assert_eq!(r.total_steals(), 4);
+        assert_eq!(r.active_tasks(), 3);
+        let report = r.report();
+        assert!(report.contains("1 streaming"), "{report}");
+        assert!(report.contains("4 steals"), "{report}");
+        assert!(report.contains("3 tasks active"), "{report}");
     }
 
     #[test]

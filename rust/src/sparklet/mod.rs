@@ -4,11 +4,14 @@
 //! datasets with lazy transformations, wide/narrow dependencies, a DAG
 //! scheduler that splits stages at shuffle boundaries, a hash shuffle,
 //! broadcast variables, accumulators, partition caching, and lineage
-//! based recomputation. "Executor cores" are worker threads of a fixed
-//! pool, so the paper's Fig. 5 core-scaling sweep maps directly onto
-//! `SparkletConf::executor_cores`. The [`streaming`] submodule layers a
-//! Spark-Streaming-style micro-batch model (DStreams, windows, state)
-//! on top of the same scheduler.
+//! based recomputation. "Executor cores" are worker threads of a
+//! pluggable [`executor::ExecutorBackend`] (`fifo` | `work-stealing` |
+//! `sequential`), so the paper's Fig. 5 core-scaling sweep maps
+//! directly onto `SparkletConf::executor_cores` while the execution
+//! substrate itself is a swappable axis
+//! (`SparkletConf::with_executor_backend`, CLI `--executor`). The
+//! [`streaming`] submodule layers a Spark-Streaming-style micro-batch
+//! model (DStreams, windows, state) on top of the same scheduler.
 //!
 //! Design notes
 //! * RDDs are typed (`Rdd<T>`); the scheduler sees the DAG through the
@@ -26,6 +29,7 @@ pub mod broadcast;
 pub mod cache;
 pub mod conf;
 pub mod context;
+pub mod executor;
 pub mod metrics;
 pub mod pair;
 pub mod partitioner;
@@ -37,8 +41,11 @@ pub mod transforms;
 
 pub use accumulator::Accumulator;
 pub use broadcast::Broadcast;
-pub use conf::SparkletConf;
+pub use conf::{ConfError, SparkletConf};
 pub use context::SparkletContext;
+pub use executor::{
+    ExecutorBackend, ExecutorError, ExecutorRegistry, JobHandle, TaskSet, TaskSetStats,
+};
 pub use pair::PairRdd;
 pub use partitioner::{HashPartitioner, Partitioner, RangePartitioner};
 pub use rdd::{Data, Rdd, TaskContext};

@@ -1,5 +1,6 @@
-//! DAG scheduler: stage splitting at shuffle boundaries, task submission
-//! to the executor pool, retries from lineage, failure injection.
+//! DAG scheduler: stage splitting at shuffle boundaries, task-set
+//! submission to the pluggable executor backend, retries from lineage,
+//! failure injection.
 //!
 //! A job is: (target RDD, per-partition result function). Execution:
 //!  1. Walk the dependency DAG; for every incomplete shuffle dependency
@@ -7,15 +8,22 @@
 //!     per parent partition — then mark the shuffle complete.
 //!  2. Run the *result stage*: one task per target partition applying the
 //!     result function.
-//! Task failures (panics or injected faults) are retried up to
-//! `max_task_failures` times; because `compute` is pure over lineage,
-//! a retry recomputes exactly what was lost — Spark's recovery model.
+//! Each stage becomes a [`TaskSet`] submitted to the context's
+//! [`ExecutorBackend`](super::executor::ExecutorBackend); the returned
+//! `JobHandle` is awaited and its steal/queue-wait counters land in the
+//! stage's [`StageMetrics`]. Task failures (panics or injected faults)
+//! are retried up to `max_task_failures` times; because `compute` is
+//! pure over lineage, a retry recomputes exactly what was lost —
+//! Spark's recovery model.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Instant;
 
 use super::context::SparkletContext;
+use super::executor::{panic_message, TaskSet};
 use super::metrics::{StageKind, StageMetrics};
 use super::pair::ShuffleDepObj;
 use super::rdd::{materialize, Data, Dep, DepNode, Rdd, TaskContext};
@@ -56,31 +64,49 @@ fn run_stage<U: Send + 'static>(
     let mut task_millis = vec![0.0f64; num_tasks];
     let mut pending: Vec<usize> = (0..num_tasks).collect();
     let mut retries = 0usize;
+    let mut steals = 0usize;
+    let mut queue_wait_ms = 0.0f64;
     let max_attempts = ctx.conf().max_task_failures;
 
     for attempt in 0..max_attempts {
         if pending.is_empty() {
             break;
         }
-        let jobs: Vec<_> = pending
-            .iter()
-            .map(|&part| {
-                let run = Arc::clone(&run);
-                let ctx2 = ctx.clone();
-                move || {
+        // Build the stage's task set. Each task catches its own panic
+        // and reports `(partition, outcome)` through the channel; the
+        // executor only has to run the closures.
+        let mut taskset = TaskSet::new(stage_tag, format!("{kind:?}/rdd{rdd_id}/attempt{attempt}"));
+        let (tx, rx) = channel::<(usize, Result<(U, f64), String>)>();
+        for &part in &pending {
+            let run = Arc::clone(&run);
+            let ctx2 = ctx.clone();
+            let tx = tx.clone();
+            taskset.push(move || {
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
                     if injected_failure(&ctx2, stage_tag, part, attempt) {
                         panic!("injected task failure (stage {stage_tag}, part {part})");
                     }
                     let t = Instant::now();
                     let out = run(part, attempt);
                     (out, t.elapsed().as_secs_f64() * 1e3)
-                }
-            })
-            .collect();
-        let outcomes = ctx.pool().run_all(jobs);
+                }))
+                .map_err(|e| panic_message(e.as_ref()));
+                let _ = tx.send((part, outcome));
+            });
+        }
+        drop(tx);
+        let handle = ctx.executor().submit(taskset);
+        let stats = handle.wait();
+        steals += stats.steals;
+        queue_wait_ms += stats.queue_wait_ms;
+
+        let mut outcomes: HashMap<usize, Result<(U, f64), String>> = rx.try_iter().collect();
         let mut still_pending = Vec::new();
-        for (&part, outcome) in pending.iter().zip(outcomes) {
-            match outcome {
+        for &part in &pending {
+            match outcomes
+                .remove(&part)
+                .unwrap_or_else(|| Err("executor dropped the task's result".into()))
+            {
                 Ok((out, ms)) => {
                     results[part] = Some(out);
                     task_millis[part] = ms;
@@ -112,6 +138,9 @@ fn run_stage<U: Send + 'static>(
             retries,
             shuffle_records: ctx.shuffle_manager().records_written() - records_before,
             shuffle_bytes: ctx.shuffle_manager().bytes_written() - bytes_before,
+            backend: ctx.executor().name(),
+            steals,
+            queue_wait_ms,
         });
     }
 

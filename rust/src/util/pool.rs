@@ -73,7 +73,6 @@ impl ThreadPool {
         T: Send + 'static,
         F: FnOnce() -> T + Send + 'static,
     {
-        let n = jobs.len();
         let receivers: Vec<Receiver<Result<T, String>>> = jobs
             .into_iter()
             .map(|job| {
@@ -92,19 +91,20 @@ impl ThreadPool {
                 rx.recv()
                     .unwrap_or_else(|_| Err("worker dropped result channel".into()))
             })
-            .collect::<Vec<_>>()
-            .into_iter()
-            .take(n)
             .collect()
     }
 
-    /// Number of jobs currently executing (for metrics).
+    /// Number of jobs currently executing — surfaced as the
+    /// active-tasks gauge in `MetricsRegistry::report` via the fifo
+    /// executor backend.
     pub fn active(&self) -> usize {
         self.shared.active.load(Ordering::Relaxed)
     }
 }
 
-fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
+/// Extract a human-readable message from a caught panic payload (shared
+/// with the executor backends via `sparklet::executor`).
+pub(crate) fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = e.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = e.downcast_ref::<String>() {
@@ -136,8 +136,15 @@ fn worker_loop(shared: Arc<Shared>) {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        self.shared.shutdown.store(true, Ordering::Release);
-        self.shared.available.notify_all();
+        {
+            // Store + notify under the queue lock: a worker that just
+            // saw shutdown=false holds this lock until it enters
+            // `wait`, so the notify cannot slip into that window and
+            // leave it asleep forever (join would hang).
+            let _queue = self.shared.queue.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::Release);
+            self.shared.available.notify_all();
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }

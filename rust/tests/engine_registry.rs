@@ -14,7 +14,7 @@ use rdd_eclat::fim::engine::{
 };
 use rdd_eclat::fim::sequential::eclat_sequential;
 use rdd_eclat::fim::types::{MiningResult, Transaction};
-use rdd_eclat::sparklet::{Rdd, SparkletContext};
+use rdd_eclat::sparklet::{ExecutorRegistry, Rdd, SparkletConf, SparkletContext};
 use rdd_eclat::util::prop::{forall, gen};
 
 #[test]
@@ -65,6 +65,45 @@ fn prop_full_registry_agrees_with_oracle_across_axes() {
         }
         true
     });
+}
+
+#[test]
+fn prop_engines_agree_with_oracle_under_every_executor_backend() {
+    // The executor axis joins the sweep: every registered engine ×
+    // both tidset representations × every registered executor backend
+    // must equal the sequential oracle. A backend registered later is
+    // automatically held to the oracle here, mirroring how engines are.
+    for backend in ExecutorRegistry::names() {
+        let conf = SparkletConf::new("backend-sweep")
+            .with_cores(2)
+            .unwrap()
+            .with_executor_backend(backend)
+            .unwrap();
+        let sc = SparkletContext::new(conf);
+        forall(3, gen::database(16, 7, 0.35), |db| {
+            let oracle = eclat_sequential(db, 2);
+            for engine in EngineRegistry::names() {
+                for repr in [TidsetRepr::Vec, TidsetRepr::Bitmap] {
+                    let got = MiningSession::new(engine)
+                        .min_sup(2)
+                        .tidset(repr)
+                        .p(3)
+                        .run_vec(&sc, db)
+                        .unwrap();
+                    if !got.result.same_as(&oracle) {
+                        eprintln!(
+                            "{engine} tidset={} backend={backend}: {} itemsets, want {}",
+                            repr.name(),
+                            got.result.len(),
+                            oracle.len()
+                        );
+                        return false;
+                    }
+                }
+            }
+            true
+        });
+    }
 }
 
 #[test]

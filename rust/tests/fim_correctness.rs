@@ -103,6 +103,7 @@ fn mining_survives_failure_injection() {
     let oracle = eclat_sequential(&txns, min_sup);
     let conf = SparkletConf::new("faulty-mine")
         .with_cores(4)
+        .unwrap()
         .with_failure_injection(0.3, 777)
         .with_max_task_failures(8);
     let sc = SparkletContext::new(conf);
@@ -125,6 +126,7 @@ fn apriori_survives_failure_injection() {
     let oracle = apriori_sequential(&txns, min_sup);
     let conf = SparkletConf::new("faulty-apriori")
         .with_cores(3)
+        .unwrap()
         .with_failure_injection(0.3, 999)
         .with_max_task_failures(8);
     let sc = SparkletContext::new(conf);

@@ -5,11 +5,20 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use rdd_eclat::sparklet::{
-    pair::Aggregator, HashPartitioner, PairRdd, SparkletConf, SparkletContext,
+    pair::Aggregator, ExecutorRegistry, HashPartitioner, PairRdd, SparkletConf, SparkletContext,
 };
 
 fn sc(cores: usize) -> SparkletContext {
     SparkletContext::local(cores)
+}
+
+fn sc_with_backend(cores: usize, backend: &str) -> SparkletContext {
+    let conf = SparkletConf::new("backend-test")
+        .with_cores(cores)
+        .unwrap()
+        .with_executor_backend(backend)
+        .unwrap();
+    SparkletContext::new(conf)
 }
 
 #[test]
@@ -208,6 +217,7 @@ fn caching_avoids_recompute() {
 fn failure_injection_recovers_via_lineage() {
     let conf = SparkletConf::new("faulty")
         .with_cores(4)
+        .unwrap()
         .with_failure_injection(0.5, 1234)
         .with_max_task_failures(6);
     let sc = SparkletContext::new(conf);
@@ -226,6 +236,106 @@ fn failure_injection_recovers_via_lineage() {
         sc.metrics().total_retries() > 0,
         "failure injection should have caused retries"
     );
+}
+
+#[test]
+fn failure_injection_recovers_on_every_backend() {
+    // The retry-from-lineage property must hold regardless of the
+    // execution substrate: for every registered executor backend and a
+    // spread of injection seeds, a multi-stage shuffle job converges to
+    // the oracle sum and the injected faults really fired.
+    for backend in ExecutorRegistry::names() {
+        for seed in [7u64, 1234, 9999] {
+            let conf = SparkletConf::new("faulty")
+                .with_cores(4)
+                .unwrap()
+                .with_executor_backend(backend)
+                .unwrap()
+                .with_failure_injection(0.4, seed)
+                .with_max_task_failures(8);
+            let sc = SparkletContext::new(conf);
+            let sum: u64 = sc
+                .parallelize((0..5_000u64).collect::<Vec<_>>(), 12)
+                .map(|x| x * 3)
+                .map_to_pair(|x| (x % 5, x))
+                .reduce_by_key(|a, b| a + b)
+                .values()
+                .collect()
+                .iter()
+                .sum();
+            assert_eq!(
+                sum,
+                (0..5_000u64).map(|x| x * 3).sum::<u64>(),
+                "{backend} seed {seed}"
+            );
+            assert!(
+                sc.metrics().total_retries() > 0,
+                "{backend} seed {seed}: injection never fired"
+            );
+        }
+    }
+}
+
+#[test]
+fn shuffle_pipeline_agrees_across_backends() {
+    // Same two-shuffle job on every backend: identical results, and
+    // every recorded stage is tagged with the backend that ran it.
+    let mut outputs = Vec::new();
+    for backend in ExecutorRegistry::names() {
+        let sc = sc_with_backend(3, backend);
+        let mut got = sc
+            .parallelize((0..2_000u64).collect::<Vec<_>>(), 7)
+            .map_to_pair(|x| (x % 13, x))
+            .reduce_by_key(|a, b| a + b)
+            .map_to_pair(|(k, sum)| (sum % 3, k))
+            .group_by_key()
+            .collect();
+        got.sort_by_key(|(k, _)| *k);
+        for (_, vs) in got.iter_mut() {
+            vs.sort_unstable();
+        }
+        let stages = sc.metrics().stages();
+        assert!(!stages.is_empty(), "{backend}");
+        assert!(
+            stages.iter().all(|s| s.backend == backend),
+            "{backend}: stage tagged with wrong backend"
+        );
+        outputs.push((backend, got));
+    }
+    for pair in outputs.windows(2) {
+        assert_eq!(
+            pair[0].1, pair[1].1,
+            "{} and {} disagree",
+            pair[0].0, pair[1].0
+        );
+    }
+}
+
+#[test]
+fn stage_metrics_carry_executor_counters() {
+    let sc = sc_with_backend(2, "work-stealing");
+    let _ = sc
+        .parallelize((0..500u32).collect::<Vec<_>>(), 8)
+        .map_to_pair(|x| (x % 3, x))
+        .reduce_by_key(|a, b| a + b)
+        .collect();
+    let stages = sc.metrics().stages();
+    assert!(stages.iter().all(|s| s.backend == "work-stealing"));
+    assert!(stages.iter().all(|s| s.queue_wait_ms >= 0.0));
+    // The report surfaces the executor gauge and steal totals.
+    let report = sc.metrics().report();
+    assert!(report.contains("steals"), "{report}");
+    assert!(report.contains("tasks active"), "{report}");
+}
+
+#[test]
+fn sequential_backend_caps_parallelism_at_one() {
+    let sc = sc_with_backend(4, "sequential");
+    assert_eq!(sc.default_parallelism(), 1);
+    assert_eq!(sc.executor().name(), "sequential");
+    // Jobs still run correctly, just single-threaded.
+    let data: Vec<u32> = (0..100).collect();
+    assert_eq!(sc.parallelize(data.clone(), 5).collect(), data);
 }
 
 #[test]

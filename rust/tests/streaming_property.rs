@@ -47,8 +47,13 @@ fn incremental_matches_full_mine_for_all_window_slide_combos() {
         let n = batches.len();
         for window in 1..=n {
             for slide in 1..=n {
+                // Wired to the 2-core context: windows with >= 2
+                // frequent items re-mine through the executor (one task
+                // per class), the rest on the driver — both paths are
+                // held to the from-scratch oracle here.
                 let mut inc =
-                    IncrementalEclat::new(StreamingEclatConfig::new(*min_sup, window, slide));
+                    IncrementalEclat::new(StreamingEclatConfig::new(*min_sup, window, slide))
+                        .with_context(sc.clone());
                 let session = MiningSession::new("eclat-v4").min_sup(*min_sup).p(3);
                 for (t, b) in batches.iter().enumerate() {
                     inc.push_batch(b).unwrap();
