@@ -28,8 +28,33 @@ assert rows, "bench smoke wrote an empty BENCH_fim.json"
 assert all("engine" in r and "backend" in r and "wall_ms" in r for r in rows), rows[:1]
 backends = {r["backend"] for r in rows}
 assert {"fifo", "work-stealing", "sequential"} <= backends, backends
-print(f"BENCH_fim.json OK: {len(rows)} rows, backends: {sorted(backends)}")
+# kernel counters: present and non-negative integers on every row
+counters = [
+    "kernel_intersections",
+    "kernel_early_aborts",
+    "kernel_repr_switches",
+    "kernel_bytes_allocated",
+]
+for r in rows:
+    assert "tidset" in r, r
+    for k in counters:
+        assert k in r, (k, r)
+        assert isinstance(r[k], int) and r[k] >= 0, (k, r[k])
+# the tidset sweep must cover the full representation axis
+tidsets = {r["tidset"] for r in rows}
+assert {"vec", "bitmap", "diffset", "hybrid"} <= tidsets, tidsets
+print(
+    f"BENCH_fim.json OK: {len(rows)} rows, backends: {sorted(backends)}, "
+    f"tidsets: {sorted(tidsets)}"
+)
 EOF
+
+echo "== micro-bench smoke (diffset kernel)"
+# One-rep pass over the intersection + Bottom-Up micro-benches so
+# diffset-kernel regressions surface as wall-time deltas in the
+# uploaded bench-results artifact.
+REPRO_BENCH_REPS=1 REPRO_BENCH_WARMUP=0 REPRO_MICRO_ONLY=intersect,bottom-up \
+    cargo bench --bench micro
 
 echo "== cargo clippy --all-targets -- -D warnings"
 if cargo clippy --version >/dev/null 2>&1; then

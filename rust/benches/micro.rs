@@ -8,7 +8,7 @@
 //!  * Bottom-Up recursion on a synthetic dense class
 
 use rdd_eclat::fim::eqclass::{bottom_up, EquivalenceClass};
-use rdd_eclat::fim::tidset::{BitmapTidset, TidOps, VecTidset};
+use rdd_eclat::fim::tidset::{BitmapTidset, DiffTidset, HybridTidset, TidOps, VecTidset};
 use rdd_eclat::fim::trie::ItemTrie;
 use rdd_eclat::fim::trimatrix::TriMatrix;
 use rdd_eclat::sparklet::{PairRdd, SparkletContext};
@@ -16,11 +16,27 @@ use rdd_eclat::util::bench::BenchSuite;
 use rdd_eclat::util::SplitMix64;
 
 fn main() {
-    intersection_bench();
-    trimatrix_bench();
-    trie_bench();
-    shuffle_bench();
-    bottom_up_bench();
+    // REPRO_MICRO_ONLY=intersect,bottom-up runs a subset — the CI bench
+    // smoke uses it so diffset-kernel regressions surface as wall-time
+    // deltas in the uploaded bench-results artifact without paying for
+    // the full suite.
+    let only = std::env::var("REPRO_MICRO_ONLY").unwrap_or_default();
+    let run = |name: &str| only.is_empty() || only.split(',').any(|s| s.trim() == name);
+    if run("intersect") {
+        intersection_bench();
+    }
+    if run("trimatrix") {
+        trimatrix_bench();
+    }
+    if run("trie") {
+        trie_bench();
+    }
+    if run("shuffle") {
+        shuffle_bench();
+    }
+    if run("bottom-up") {
+        bottom_up_bench();
+    }
 }
 
 fn random_tids(rng: &mut SplitMix64, universe: usize, density: f64) -> Vec<u32> {
@@ -52,6 +68,32 @@ fn intersection_bench() {
     });
     suite.measure("bitmap-and-alloc", "case", 3.0, || {
         std::hint::black_box(ba.intersect(&bb));
+    });
+
+    // Diffset kernel on a dense class: two members at ~80% of the
+    // prefix support — the subtraction walks the small diffsets while
+    // the vec merge walks the full tidsets (the dEclat win case).
+    let dense_universe = 50_000;
+    let base = random_tids(&mut rng, dense_universe, 0.8);
+    let keep = |rng: &mut SplitMix64, frac: f64| -> Vec<u32> {
+        base.iter().copied().filter(|_| rng.gen_bool(frac)).collect()
+    };
+    let (x, y) = (keep(&mut rng, 0.8), keep(&mut rng, 0.8));
+    let dp = DiffTidset::from_tids(&base, dense_universe);
+    let dx = dp.intersect(&DiffTidset::from_tids(&x, dense_universe));
+    let dy = dp.intersect(&DiffTidset::from_tids(&y, dense_universe));
+    suite.measure("diffset-subtract-dense", "case", 4.0, || {
+        std::hint::black_box(dx.intersect_support(&dy));
+    });
+    let vx = VecTidset::from_tids(&x, dense_universe);
+    let vy = VecTidset::from_tids(&y, dense_universe);
+    suite.measure("vec-merge-dense", "case", 5.0, || {
+        std::hint::black_box(vx.intersect_support(&vy));
+    });
+    // fused bounded+materializing walk into a reused buffer (no alloc)
+    let mut scratch = DiffTidset::empty();
+    suite.measure("diffset-into-min-dense", "case", 6.0, || {
+        std::hint::black_box(dx.intersect_into_min(&dy, 1, &mut scratch));
     });
     suite.finish();
 }
@@ -127,31 +169,58 @@ fn shuffle_bench() {
 }
 
 fn bottom_up_bench() {
-    let mut suite = BenchSuite::new("micro_bottom_up", "Bottom-Up recursion on a dense class");
+    let mut suite = BenchSuite::new(
+        "micro_bottom_up",
+        "Bottom-Up recursion on a dense class, per tidset representation",
+    );
     let mut rng = SplitMix64::new(4);
     let universe = 20_000;
     // one class with 40 members over a correlated tid universe — deep
-    // recursion territory
+    // recursion territory; regenerate per representation from the same
+    // tid lists so the four series mine identical lattices
     let base = random_tids(&mut rng, universe, 0.4);
-    let members: Vec<(u32, VecTidset)> = (0..40u32)
-        .map(|i| {
-            let tids: Vec<u32> = base
-                .iter()
+    let member_tids: Vec<Vec<u32>> = (0..40u32)
+        .map(|_| {
+            base.iter()
                 .copied()
                 .filter(|_| rng.gen_bool(0.8))
-                .collect();
-            (i, VecTidset::from_tids(&tids, universe))
+                .collect()
         })
         .collect();
-    let class = EquivalenceClass {
-        prefix: vec![999],
-        members,
-    };
+    fn class_of<TS: TidOps>(member_tids: &[Vec<u32>], universe: usize) -> EquivalenceClass<TS> {
+        EquivalenceClass {
+            prefix: vec![999],
+            members: member_tids
+                .iter()
+                .enumerate()
+                .map(|(i, tids)| (i as u32, TS::from_tids(tids, universe)))
+                .collect(),
+        }
+    }
+    let vec_class = class_of::<VecTidset>(&member_tids, universe);
+    let bitmap_class = class_of::<BitmapTidset>(&member_tids, universe);
+    let diff_class = class_of::<DiffTidset>(&member_tids, universe);
+    let hybrid_class = class_of::<HybridTidset>(&member_tids, universe);
     for &min_sup_frac in &[0.35f64, 0.3] {
         let min_sup = (universe as f64 * min_sup_frac) as u32;
-        suite.measure("bottom-up-40-members", "min_sup", min_sup_frac, || {
+        suite.measure("vec", "min_sup", min_sup_frac, || {
             let mut out = Vec::new();
-            bottom_up(&class, min_sup, &mut out);
+            bottom_up(&vec_class, min_sup, &mut out);
+            std::hint::black_box(out.len());
+        });
+        suite.measure("bitmap", "min_sup", min_sup_frac, || {
+            let mut out = Vec::new();
+            bottom_up(&bitmap_class, min_sup, &mut out);
+            std::hint::black_box(out.len());
+        });
+        suite.measure("diffset", "min_sup", min_sup_frac, || {
+            let mut out = Vec::new();
+            bottom_up(&diff_class, min_sup, &mut out);
+            std::hint::black_box(out.len());
+        });
+        suite.measure("hybrid", "min_sup", min_sup_frac, || {
+            let mut out = Vec::new();
+            bottom_up(&hybrid_class, min_sup, &mut out);
             std::hint::black_box(out.len());
         });
     }

@@ -27,7 +27,7 @@ use crate::util::hash::FxHashMap;
 use super::engine::{MiningConfig, PartitionStrategy, TidsetRepr};
 use super::eqclass::{bottom_up, build_classes, EquivalenceClass};
 use super::partitioners;
-use super::tidset::{BitmapTidset, TidOps, VecTidset};
+use super::tidset::{BitmapTidset, DiffTidset, HybridTidset, TidOps, VecTidset};
 use super::trie::ItemTrie;
 use super::trimatrix::TriMatrix;
 use super::types::{FrequentItemset, Item, MiningResult, Transaction};
@@ -299,26 +299,47 @@ fn phase_classes_repr(
     prefix_len: usize,
     out: &mut Vec<FrequentItemset>,
 ) {
+    /// Materialize the vertical database in the resolved representation.
+    fn to_repr<TS: TidOps>(vertical_tids: Vec<(Item, Vec<u32>)>, n_txns: usize) -> Vec<(Item, TS)> {
+        vertical_tids
+            .into_iter()
+            .map(|(item, tids)| (item, TS::from_tids(&tids, n_txns)))
+            .collect()
+    }
     let total_tids: usize = vertical_tids.iter().map(|(_, tids)| tids.len()).sum();
     match cfg.tidset.resolve(total_tids, vertical_tids.len(), n_txns) {
-        TidsetRepr::Bitmap => {
-            let vertical: Vec<(Item, BitmapTidset)> = vertical_tids
-                .into_iter()
-                .map(|(item, tids)| (item, BitmapTidset::from_tids(&tids, n_txns)))
-                .collect();
-            out.extend(phase_classes(
-                sc, vertical, cfg.min_sup, tri, strategy, prefix_len,
-            ));
-        }
-        _ => {
-            let vertical: Vec<(Item, VecTidset)> = vertical_tids
-                .into_iter()
-                .map(|(item, tids)| (item, VecTidset::from_tids(&tids, n_txns)))
-                .collect();
-            out.extend(phase_classes(
-                sc, vertical, cfg.min_sup, tri, strategy, prefix_len,
-            ));
-        }
+        TidsetRepr::Bitmap => out.extend(phase_classes(
+            sc,
+            to_repr::<BitmapTidset>(vertical_tids, n_txns),
+            cfg.min_sup,
+            tri,
+            strategy,
+            prefix_len,
+        )),
+        TidsetRepr::Diffset => out.extend(phase_classes(
+            sc,
+            to_repr::<DiffTidset>(vertical_tids, n_txns),
+            cfg.min_sup,
+            tri,
+            strategy,
+            prefix_len,
+        )),
+        TidsetRepr::Hybrid => out.extend(phase_classes(
+            sc,
+            to_repr::<HybridTidset>(vertical_tids, n_txns),
+            cfg.min_sup,
+            tri,
+            strategy,
+            prefix_len,
+        )),
+        TidsetRepr::Vec | TidsetRepr::Auto => out.extend(phase_classes(
+            sc,
+            to_repr::<VecTidset>(vertical_tids, n_txns),
+            cfg.min_sup,
+            tri,
+            strategy,
+            prefix_len,
+        )),
     }
 }
 
@@ -485,11 +506,18 @@ mod tests {
     }
 
     #[test]
-    fn bitmap_and_auto_reprs_match_oracle() {
+    fn non_vec_reprs_match_oracle() {
         let sc = SparkletContext::local(2);
         let oracle = eclat_sequential(&demo_db(), 2);
-        for variant in EclatVariant::all() {
-            for repr in [TidsetRepr::Bitmap, TidsetRepr::Auto] {
+        // all_with_fused: V6's 2-prefix decomposition must also hold
+        // under the diffset and hybrid kernels
+        for variant in EclatVariant::all_with_fused() {
+            for repr in [
+                TidsetRepr::Bitmap,
+                TidsetRepr::Diffset,
+                TidsetRepr::Hybrid,
+                TidsetRepr::Auto,
+            ] {
                 let cfg = MiningConfig::new(2).with_tidset(repr);
                 let got = mine_vec(&sc, demo_db(), variant, &cfg);
                 assert!(got.same_as(&oracle), "{} {}", variant.name(), repr.name());

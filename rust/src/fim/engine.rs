@@ -39,7 +39,7 @@ use super::fpgrowth::mine_fpgrowth_rdd;
 use super::postprocess;
 use super::rules::{generate_rules, Rule};
 use super::sequential::eclat_sequential_with;
-use super::tidset::{BitmapTidset, VecTidset};
+use super::tidset::{kernel, BitmapTidset, DiffTidset, HybridTidset, KernelStats, VecTidset};
 use super::types::{abs_min_sup, MiningResult, Transaction};
 
 // ------------------------------------------------------------------ axes
@@ -52,6 +52,14 @@ pub enum TidsetRepr {
     /// Packed `u32` bitmaps (AND + popcount) — the layout the XLA
     /// artifact consumes.
     Bitmap,
+    /// Zaki's dEclat diffsets: below the root level each member stores
+    /// `d(PX) = t(P) \ t(PX)`, turning the dominant intersection into a
+    /// cheap subtraction. The win case is dense datasets.
+    Diffset,
+    /// Per-class adaptive: every equivalence class re-measures its
+    /// density and switches Vec ↔ Bitmap ↔ Diffset at class
+    /// boundaries, so skewed datasets get the right kernel everywhere.
+    Hybrid,
     /// Pick per run by measured vertical-database density: bitmaps win
     /// once the average tidset is dense enough that word-parallel AND
     /// beats the element-wise merge.
@@ -59,16 +67,17 @@ pub enum TidsetRepr {
 }
 
 impl TidsetRepr {
-    /// Density at/above which `Auto` selects [`TidsetRepr::Bitmap`]. A
-    /// bitmap spends `n_txns / 32` words per tidset regardless of
-    /// support, a tid list one word per occurrence; with the galloping
-    /// fast path on the vec side the break-even sits around 1/64.
-    pub const AUTO_DENSITY_THRESHOLD: f64 = 1.0 / 64.0;
+    /// Density at/above which `Auto` selects [`TidsetRepr::Bitmap`] —
+    /// the same break-even [`HybridTidset`] applies per class
+    /// (see `tidset::DENSE_THRESHOLD` for the derivation).
+    pub const AUTO_DENSITY_THRESHOLD: f64 = crate::fim::tidset::DENSE_THRESHOLD;
 
     pub fn name(&self) -> &'static str {
         match self {
             Self::Vec => "vec",
             Self::Bitmap => "bitmap",
+            Self::Diffset => "diffset",
+            Self::Hybrid => "hybrid",
             Self::Auto => "auto",
         }
     }
@@ -77,17 +86,25 @@ impl TidsetRepr {
         match s.to_lowercase().as_str() {
             "vec" | "veclist" | "tidlist" | "list" => Ok(Self::Vec),
             "bitmap" | "bits" | "bitset" => Ok(Self::Bitmap),
+            "diffset" | "diff" | "dset" | "declat" => Ok(Self::Diffset),
+            "hybrid" | "adaptive" => Ok(Self::Hybrid),
             "auto" => Ok(Self::Auto),
             other => Err(format!(
-                "unknown tidset representation {other:?} (vec|bitmap|auto)"
+                "unknown tidset representation {other:?} (vec|bitmap|diffset|hybrid|auto)"
             )),
         }
     }
 
+    /// All concrete (non-`Auto`) representations, in bench-sweep order.
+    pub fn all_concrete() -> [TidsetRepr; 4] {
+        [Self::Vec, Self::Bitmap, Self::Diffset, Self::Hybrid]
+    }
+
     /// Resolve `Auto` against a measured vertical database:
     /// `total_tids` item occurrences spread over `n_items` frequent
-    /// items and `n_txns` transactions. Fixed representations pass
-    /// through unchanged.
+    /// items and `n_txns` transactions. Fixed representations
+    /// (including `Diffset` and `Hybrid`, which adapt per class on
+    /// their own) pass through unchanged.
     pub fn resolve(self, total_tids: usize, n_items: usize, n_txns: usize) -> TidsetRepr {
         match self {
             Self::Auto => {
@@ -256,6 +273,16 @@ pub trait FimEngine: Send + Sync {
         ""
     }
 
+    /// Whether the engine's hot path reads [`MiningConfig::tidset`] —
+    /// drives the bench's tidset-representation sweep (engines that
+    /// ignore the axis get one vec row instead of identical rows per
+    /// representation). Defaults to `true` so a newly registered
+    /// vertical-layout engine joins the kernel perf trajectory without
+    /// extra wiring; representation-blind engines override to `false`.
+    fn tidset_sensitive(&self) -> bool {
+        true
+    }
+
     /// Mine the transactions RDD under `cfg`. Transactions must be
     /// normalized (sorted + deduplicated items).
     fn mine(
@@ -354,6 +381,10 @@ impl FimEngine for AprioriEngine {
         "RDD-Apriori (YAFIM): per-level candidate broadcast + database re-scan"
     }
 
+    fn tidset_sensitive(&self) -> bool {
+        false // horizontal layout: never touches tidsets
+    }
+
     fn mine(
         &self,
         sc: &SparkletContext,
@@ -382,6 +413,10 @@ impl FimEngine for FpGrowthEngine {
 
     fn describe(&self) -> &'static str {
         "parallel FP-Growth (PFP): item-group shards, per-group FP-trees"
+    }
+
+    fn tidset_sensitive(&self) -> bool {
+        false // FP-tree layout: never touches tidsets
     }
 
     fn mine(
@@ -426,6 +461,8 @@ impl FimEngine for SequentialEngine {
         let db = txns.collect();
         match cfg.tidset {
             TidsetRepr::Bitmap => eclat_sequential_with::<BitmapTidset>(&db, cfg.min_sup),
+            TidsetRepr::Diffset => eclat_sequential_with::<DiffTidset>(&db, cfg.min_sup),
+            TidsetRepr::Hybrid => eclat_sequential_with::<HybridTidset>(&db, cfg.min_sup),
             TidsetRepr::Vec | TidsetRepr::Auto => {
                 eclat_sequential_with::<VecTidset>(&db, cfg.min_sup)
             }
@@ -601,6 +638,12 @@ pub struct MiningReport {
     pub wall_ms: f64,
     /// Engine stages recorded during the mine, in execution order.
     pub stages: Vec<StageMetrics>,
+    /// Kernel work counters (intersections, early aborts, representation
+    /// switches, bytes allocated) snapshotted around the mine. The
+    /// counters are process-global, so concurrent sessions in the same
+    /// process bleed into each other's deltas — exact for the CLI and
+    /// bench, indicative under parallel test runs.
+    pub kernel: KernelStats,
 }
 
 impl MiningReport {
@@ -620,7 +663,8 @@ impl MiningReport {
     pub fn summary(&self) -> String {
         format!(
             "{}: {} itemsets (max length {}) in {:.1} ms — {} stages, \
-             shuffle {} records / ~{} bytes",
+             shuffle {} records / ~{} bytes, kernel {} ∩ \
+             ({} early-aborts, {} repr switches)",
             self.label,
             self.result.len(),
             self.result.max_length(),
@@ -628,6 +672,9 @@ impl MiningReport {
             self.n_stages(),
             self.shuffle_records(),
             self.shuffle_bytes(),
+            self.kernel.intersections,
+            self.kernel.early_aborts,
+            self.kernel.repr_switches,
         )
     }
 }
@@ -763,9 +810,11 @@ impl MiningSession {
             cfg.min_sup = abs_min_sup(frac, n_transactions.unwrap_or(0));
         }
         let stage_mark = sc.metrics().stages().len();
+        let kernel_mark = kernel::snapshot();
         let t0 = Instant::now();
         let mined = engine.mine(sc, txns, &cfg);
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let kernel_stats = kernel::snapshot().since(&kernel_mark);
         let all_stages = sc.metrics().stages();
         let stages = all_stages
             .get(stage_mark.min(all_stages.len())..)
@@ -791,6 +840,7 @@ impl MiningSession {
             rules,
             wall_ms,
             stages,
+            kernel: kernel_stats,
         })
     }
 
@@ -844,6 +894,11 @@ mod tests {
         assert_eq!(EngineRegistry::get("fp-growth").unwrap().name(), "fpgrowth");
         assert_eq!(EngineRegistry::get("oracle").unwrap().name(), "sequential");
         assert!(EngineRegistry::get("nope").is_none());
+        // tidset sensitivity drives the bench repr sweep
+        assert!(EngineRegistry::get("eclat-v4").unwrap().tidset_sensitive());
+        assert!(EngineRegistry::get("sequential").unwrap().tidset_sensitive());
+        assert!(!EngineRegistry::get("apriori").unwrap().tidset_sensitive());
+        assert!(!EngineRegistry::get("fpgrowth").unwrap().tidset_sensitive());
     }
 
     #[test]
@@ -869,11 +924,11 @@ mod tests {
     }
 
     #[test]
-    fn every_builtin_engine_matches_oracle_both_reprs() {
+    fn every_builtin_engine_matches_oracle_all_reprs() {
         let sc = SparkletContext::local(2);
         let oracle = eclat_sequential(&demo_db(), 2);
         for name in EngineRegistry::names() {
-            for repr in [TidsetRepr::Vec, TidsetRepr::Bitmap] {
+            for repr in TidsetRepr::all_concrete() {
                 let report = MiningSession::new(name)
                     .min_sup(2)
                     .tidset(repr)
@@ -1049,11 +1104,41 @@ mod tests {
     }
 
     #[test]
+    fn kernel_stats_ride_along_in_reports() {
+        let sc = SparkletContext::local(2);
+        for repr in TidsetRepr::all_concrete() {
+            let report = MiningSession::new("eclat-v4")
+                .min_sup(2)
+                .tidset(repr)
+                .run_vec(&sc, &demo_db())
+                .unwrap();
+            // the demo db always pays at least one kernel intersection
+            assert!(
+                report.kernel.intersections > 0,
+                "{}: {:?}",
+                repr.name(),
+                report.kernel
+            );
+            assert!(report.summary().contains("kernel"));
+        }
+    }
+
+    #[test]
     fn axis_parsers() {
         assert_eq!(TidsetRepr::parse("bitmap").unwrap(), TidsetRepr::Bitmap);
         assert_eq!(TidsetRepr::parse("VEC").unwrap(), TidsetRepr::Vec);
         assert_eq!(TidsetRepr::parse("auto").unwrap(), TidsetRepr::Auto);
+        assert_eq!(TidsetRepr::parse("diffset").unwrap(), TidsetRepr::Diffset);
+        assert_eq!(TidsetRepr::parse("dEclat").unwrap(), TidsetRepr::Diffset);
+        assert_eq!(TidsetRepr::parse("hybrid").unwrap(), TidsetRepr::Hybrid);
+        assert_eq!(TidsetRepr::parse("adaptive").unwrap(), TidsetRepr::Hybrid);
         assert!(TidsetRepr::parse("trie").is_err());
+        // fixed adaptive reprs pass through Auto resolution unchanged
+        assert_eq!(
+            TidsetRepr::Diffset.resolve(500, 10, 100),
+            TidsetRepr::Diffset
+        );
+        assert_eq!(TidsetRepr::Hybrid.resolve(1, 10, 10_000), TidsetRepr::Hybrid);
         assert_eq!(
             PartitionStrategy::parse("weighted").unwrap(),
             PartitionStrategy::Weighted

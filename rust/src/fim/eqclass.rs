@@ -27,6 +27,16 @@ impl<TS> EquivalenceClass<TS> {
     }
 }
 
+/// Reusable buffers for the Bottom-Up recursion (arena-style): spare
+/// tidset values whose internal storage `intersect_into_min` overwrites,
+/// and spare (emptied) member vectors for child classes. Together with
+/// the explicit push/pop prefix stack this amortizes the old
+/// clone-per-member recursion's allocations to zero once warm.
+struct BottomUpScratch<TS> {
+    tidsets: Vec<TS>,
+    member_vecs: Vec<Vec<(Item, TS)>>,
+}
+
 /// Algorithm 1: Bottom-Up(EC_k). Appends every frequent itemset derived
 /// from `class` (sizes `prefix.len() + 2` and deeper) to `out`.
 pub fn bottom_up<TS: TidOps>(
@@ -34,30 +44,60 @@ pub fn bottom_up<TS: TidOps>(
     min_sup: u32,
     out: &mut Vec<FrequentItemset>,
 ) {
-    for i in 0..class.members.len() {
-        let (item_i, ref ts_i) = class.members[i];
-        let mut next_prefix = class.prefix.clone();
-        next_prefix.push(item_i);
-        let mut next_members: Vec<(Item, TS)> = Vec::new();
-        for (item_j, ts_j) in &class.members[i + 1..] {
-            // §Perf O5+O6: bounded count-only probe first — failing
-            // candidates (the majority at low min_sup) abort early and
-            // never allocate a tidset.
-            if let Some(sup) = ts_i.intersect_support_min(ts_j, min_sup) {
-                let ts_ij = ts_i.intersect(ts_j);
-                let mut items = next_prefix.clone();
-                items.push(*item_j);
-                out.push(FrequentItemset::new(items, sup));
-                next_members.push((*item_j, ts_ij));
+    let mut prefix = class.prefix.clone();
+    let mut scratch = BottomUpScratch {
+        tidsets: Vec::new(),
+        member_vecs: Vec::new(),
+    };
+    bottom_up_rec(&class.members, &mut prefix, 1, min_sup, out, &mut scratch);
+    debug_assert_eq!(prefix, class.prefix, "prefix stack must be balanced");
+}
+
+/// One recursion level over an explicit prefix stack. Instead of cloning
+/// the prefix per member and allocating a fresh tidset per candidate
+/// (the old shape), the prefix is pushed/popped in place and candidate
+/// tidsets are materialized into pool-recycled buffers by the fused
+/// bounded walk (`intersect_into_min`) — failed candidates hand their
+/// buffer straight back to the pool.
+fn bottom_up_rec<TS: TidOps>(
+    members: &[(Item, TS)],
+    prefix: &mut Vec<Item>,
+    depth: usize,
+    min_sup: u32,
+    out: &mut Vec<FrequentItemset>,
+    scratch: &mut BottomUpScratch<TS>,
+) {
+    for i in 0..members.len() {
+        let (item_i, ref ts_i) = members[i];
+        prefix.push(item_i);
+        let mut next_members = scratch.member_vecs.pop().unwrap_or_default();
+        debug_assert!(next_members.is_empty());
+        for (item_j, ts_j) in &members[i + 1..] {
+            // §Perf O5+O6+O8: one fused walk applies the min_sup bound
+            // AND materializes the survivor — no count-then-rewalk, no
+            // allocation (the buffer comes from the pool).
+            let mut ts_ij = scratch.tidsets.pop().unwrap_or_else(TS::empty);
+            match ts_i.intersect_into_min(ts_j, min_sup, &mut ts_ij) {
+                Some(sup) => {
+                    let mut items = Vec::with_capacity(prefix.len() + 1);
+                    items.extend_from_slice(prefix);
+                    items.push(*item_j);
+                    out.push(FrequentItemset::new(items, sup));
+                    next_members.push((*item_j, ts_ij));
+                }
+                None => scratch.tidsets.push(ts_ij),
             }
         }
         if !next_members.is_empty() {
-            let next = EquivalenceClass {
-                prefix: next_prefix,
-                members: next_members,
-            };
-            bottom_up(&next, min_sup, out);
+            // adaptive representations re-measure the fresh class here
+            TS::adapt_class(ts_i, &mut next_members, depth);
+            bottom_up_rec(&next_members, prefix, depth + 1, min_sup, out, scratch);
         }
+        scratch
+            .tidsets
+            .extend(next_members.drain(..).map(|(_, ts)| ts));
+        scratch.member_vecs.push(next_members);
+        prefix.pop();
     }
 }
 
@@ -80,31 +120,33 @@ pub fn build_classes<TS: TidOps>(
 ) -> Vec<(usize, EquivalenceClass<TS>)> {
     let n = vertical.len();
     let mut classes = Vec::new();
+    let mut spare: Vec<TS> = Vec::new();
     for i in 0..n.saturating_sub(1) {
         let (item_i, ref ts_i) = vertical[i];
         let mut members: Vec<(Item, TS)> = Vec::new();
         for (item_j, ts_j) in &vertical[i + 1..] {
             if let Some(m) = tri_matrix {
                 // tri-matrix pre-filter: survivors are frequent by
-                // construction, so materialize directly.
+                // construction (the fused walk below never aborts).
                 if m.get_support(rank_of(item_i), rank_of(*item_j)) < min_sup {
                     continue;
                 }
-            } else {
-                // §Perf O5+O6: no matrix (BMS mode) — bounded count-only
-                // probe so infrequent pairs abort early, no allocation.
-                if ts_i.intersect_support_min(ts_j, min_sup).is_none() {
-                    continue;
-                }
             }
-            let ts_ij = ts_i.intersect(ts_j);
-            let sup = ts_ij.support() as u32;
-            if sup >= min_sup {
-                two_itemsets.push(FrequentItemset::new(vec![item_i, *item_j], sup));
-                members.push((*item_j, ts_ij));
+            // §Perf O5+O6+O8: one fused walk — the bounded probe and the
+            // materialization used to be two passes over both sets for
+            // every survivor; now each pair is walked exactly once, and
+            // failing candidates recycle their buffer.
+            let mut ts_ij = spare.pop().unwrap_or_else(TS::empty);
+            match ts_i.intersect_into_min(ts_j, min_sup, &mut ts_ij) {
+                Some(sup) => {
+                    two_itemsets.push(FrequentItemset::new(vec![item_i, *item_j], sup));
+                    members.push((*item_j, ts_ij));
+                }
+                None => spare.push(ts_ij),
             }
         }
         if !members.is_empty() {
+            TS::adapt_class(ts_i, &mut members, 0);
             classes.push((
                 i,
                 EquivalenceClass {
@@ -132,6 +174,7 @@ pub fn decompose_to_prefix2<TS: TidOps>(
 ) -> Vec<(usize, EquivalenceClass<TS>)> {
     let mut out = Vec::new();
     let mut rank = 0usize;
+    let mut spare: Vec<TS> = Vec::new();
     for (_, class) in classes {
         for i in 0..class.members.len() {
             let (item_i, ref ts_i) = class.members[i];
@@ -139,16 +182,20 @@ pub fn decompose_to_prefix2<TS: TidOps>(
             prefix.push(item_i);
             let mut members: Vec<(Item, TS)> = Vec::new();
             for (item_j, ts_j) in &class.members[i + 1..] {
-                // §Perf O5+O6
-                if let Some(sup) = ts_i.intersect_support_min(ts_j, min_sup) {
-                    let ts_ij = ts_i.intersect(ts_j);
-                    let mut items = prefix.clone();
-                    items.push(*item_j);
-                    three_itemsets.push(FrequentItemset::new(items, sup));
-                    members.push((*item_j, ts_ij));
+                // §Perf O5+O6+O8: fused bounded+materializing walk
+                let mut ts_ij = spare.pop().unwrap_or_else(TS::empty);
+                match ts_i.intersect_into_min(ts_j, min_sup, &mut ts_ij) {
+                    Some(sup) => {
+                        let mut items = prefix.clone();
+                        items.push(*item_j);
+                        three_itemsets.push(FrequentItemset::new(items, sup));
+                        members.push((*item_j, ts_ij));
+                    }
+                    None => spare.push(ts_ij),
                 }
             }
             if !members.is_empty() {
+                TS::adapt_class(ts_i, &mut members, 1);
                 out.push((
                     rank,
                     EquivalenceClass {
@@ -246,6 +293,67 @@ mod tests {
                 all.iter().map(|f| (f.items.clone(), f.support)).collect();
             assert_eq!(got, brute_force(&txns, min_sup), "min_sup={min_sup}");
             assert_eq!(got.len(), all.len(), "duplicates at min_sup={min_sup}");
+        }
+    }
+
+    /// Run vertical-conversion → build_classes → bottom_up under any
+    /// representation and return the canonical itemset set.
+    fn mine_with<TS: TidOps>(
+        txns: &[Vec<Item>],
+        min_sup: u32,
+    ) -> std::collections::BTreeSet<(Vec<Item>, u32)> {
+        let n = txns.len();
+        let mut vertical: Vec<(Item, TS)> = Vec::new();
+        let mut items: Vec<Item> = txns.iter().flatten().copied().collect();
+        items.sort_unstable();
+        items.dedup();
+        for item in items {
+            let tids: Vec<u32> = txns
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| t.contains(&item))
+                .map(|(i, _)| i as u32)
+                .collect();
+            if tids.len() as u32 >= min_sup {
+                vertical.push((item, TS::from_tids(&tids, n)));
+            }
+        }
+        vertical.sort_by_key(|(item, ts)| (ts.support(), *item));
+        let mut all: Vec<FrequentItemset> = vertical
+            .iter()
+            .map(|(item, ts)| FrequentItemset::new(vec![*item], ts.support() as u32))
+            .collect();
+        let mut twos = Vec::new();
+        let classes = build_classes(&vertical, min_sup, None, |i| i, &mut twos);
+        all.extend(twos);
+        for (_, c) in &classes {
+            bottom_up(c, min_sup, &mut all);
+        }
+        all.iter().map(|f| (f.items.clone(), f.support)).collect()
+    }
+
+    #[test]
+    fn all_representations_mine_identically() {
+        use crate::fim::tidset::{BitmapTidset, DiffTidset, HybridTidset};
+        let txns: Vec<Vec<Item>> = vec![
+            vec![0, 1, 2],
+            vec![1, 2, 3],
+            vec![0, 1, 3],
+            vec![0, 1, 2, 3],
+            vec![1, 2],
+            vec![0, 3],
+        ];
+        // plus a universe-dense db (all diffsets empty) and a skewed one
+        let dense: Vec<Vec<Item>> = vec![vec![1, 2, 3, 4]; 5];
+        let mut skewed = txns.clone();
+        skewed.extend(vec![vec![0, 1, 2, 3]; 8]);
+        for db in [&txns, &dense, &skewed] {
+            for min_sup in 1..=4u32 {
+                let want = mine_with::<VecTidset>(db, min_sup);
+                assert_eq!(mine_with::<BitmapTidset>(db, min_sup), want, "bitmap ms={min_sup}");
+                assert_eq!(mine_with::<DiffTidset>(db, min_sup), want, "diffset ms={min_sup}");
+                assert_eq!(mine_with::<HybridTidset>(db, min_sup), want, "hybrid ms={min_sup}");
+            }
         }
     }
 

@@ -31,5 +31,7 @@ pub use engine::{
     PartitionStrategy, PostStage, TidsetRepr,
 };
 pub use streaming::{IncrementalEclat, StreamingEclatConfig, StreamingError};
-pub use tidset::{BitmapTidset, TidOps, VecTidset};
+pub use tidset::{
+    kernel, BitmapTidset, DiffTidset, HybridTidset, KernelStats, TidOps, VecTidset,
+};
 pub use types::{FrequentItemset, Item, MiningResult, Transaction};

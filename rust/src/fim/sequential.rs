@@ -151,7 +151,7 @@ pub fn apriori_sequential(txns: &[Transaction], min_sup: u32) -> MiningResult {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fim::tidset::BitmapTidset;
+    use crate::fim::tidset::{BitmapTidset, DiffTidset, HybridTidset};
     use crate::util::prop::{forall, gen};
 
     fn demo_db() -> Vec<Transaction> {
@@ -194,11 +194,64 @@ mod tests {
     }
 
     #[test]
-    fn bitmap_representation_identical() {
+    fn all_representations_identical() {
         for min_sup in 1..=4u32 {
             let v = eclat_sequential_with::<VecTidset>(&demo_db(), min_sup);
             let b = eclat_sequential_with::<BitmapTidset>(&demo_db(), min_sup);
-            assert!(v.same_as(&b), "min_sup={min_sup}");
+            let d = eclat_sequential_with::<DiffTidset>(&demo_db(), min_sup);
+            let h = eclat_sequential_with::<HybridTidset>(&demo_db(), min_sup);
+            assert!(v.same_as(&b), "bitmap min_sup={min_sup}");
+            assert!(v.same_as(&d), "diffset min_sup={min_sup}");
+            assert!(v.same_as(&h), "hybrid min_sup={min_sup}");
+        }
+    }
+
+    #[test]
+    fn property_diffset_supports_equal_tidset_supports() {
+        // ISSUE-4 property: on random databases every diffset-computed
+        // support equals the tidset-computed one — same_as compares the
+        // full (itemset, support) sets, so one disagreeing support fails.
+        forall(30, gen::database(25, 8, 0.5), |db| {
+            for min_sup in [1u32, 2, 3] {
+                let v = eclat_sequential_with::<VecTidset>(db, min_sup);
+                if !v.same_as(&eclat_sequential_with::<DiffTidset>(db, min_sup)) {
+                    return false;
+                }
+                if !v.same_as(&eclat_sequential_with::<HybridTidset>(db, min_sup)) {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn diffset_edges_universe_dense_and_empty_diffsets() {
+        // universe-dense: identical transactions ⇒ every tidset is the
+        // whole universe and every diffset is empty (support survives
+        // purely through the dEclat subtraction bookkeeping)
+        let dense: Vec<Transaction> = vec![vec![1, 2, 3, 4]; 6];
+        for min_sup in [1u32, 3, 6, 7] {
+            let v = eclat_sequential_with::<VecTidset>(&dense, min_sup);
+            let d = eclat_sequential_with::<DiffTidset>(&dense, min_sup);
+            let h = eclat_sequential_with::<HybridTidset>(&dense, min_sup);
+            assert!(v.same_as(&d), "dense min_sup={min_sup}");
+            assert!(v.same_as(&h), "dense min_sup={min_sup}");
+            if min_sup <= 6 {
+                // 4 items: 2^4 - 1 itemsets, all with support 6
+                assert_eq!(v.len(), 15, "min_sup={min_sup}");
+            } else {
+                assert!(v.is_empty());
+            }
+        }
+        // one divergent transaction: diffsets of size exactly 1 at the
+        // border, empty elsewhere
+        let mut nearly = dense.clone();
+        nearly.push(vec![1, 2]);
+        for min_sup in [1u32, 6, 7] {
+            let v = eclat_sequential_with::<VecTidset>(&nearly, min_sup);
+            let d = eclat_sequential_with::<DiffTidset>(&nearly, min_sup);
+            assert!(v.same_as(&d), "nearly-dense min_sup={min_sup}");
         }
     }
 

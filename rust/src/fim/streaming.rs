@@ -333,6 +333,7 @@ impl IncrementalEclat {
             .collect();
 
         let mut new_lattice: FxHashMap<Vec<Item>, Vec<u32>> = FxHashMap::default();
+        let mut scratch = Vec::new();
         mine_class(
             &ctx,
             &[],
@@ -340,6 +341,7 @@ impl IncrementalEclat {
             &mut new_lattice,
             &mut out,
             &mut self.stats,
+            &mut scratch,
         );
 
         self.lattice = new_lattice;
@@ -519,7 +521,17 @@ fn mine_top_class(snap: &WindowSnapshot, class: usize) -> ClassMine {
     let mut out = Vec::new();
     let mut lattice = FxHashMap::default();
     let mut stats = StreamStats::default();
-    mine_member(&ctx, &[], &members, 0, &mut lattice, &mut out, &mut stats);
+    let mut scratch = Vec::new();
+    mine_member(
+        &ctx,
+        &[],
+        &members,
+        0,
+        &mut lattice,
+        &mut out,
+        &mut stats,
+        &mut scratch,
+    );
     ClassMine {
         out,
         lattice,
@@ -530,6 +542,7 @@ fn mine_top_class(snap: &WindowSnapshot, class: usize) -> ClassMine {
 /// Bottom-Up over an equivalence class, with cache-aware candidate
 /// tidset construction. `members` carry exact current-window tidsets,
 /// borrowed from the vertical DB (top level) or the owned child sets.
+#[allow(clippy::too_many_arguments)]
 fn mine_class(
     ctx: &WindowCtx<'_>,
     prefix: &[Item],
@@ -537,9 +550,10 @@ fn mine_class(
     new_lattice: &mut FxHashMap<Vec<Item>, Vec<u32>>,
     out: &mut Vec<FrequentItemset>,
     stats: &mut StreamStats,
+    scratch: &mut Vec<u32>,
 ) {
     for i in 0..members.len() {
-        mine_member(ctx, prefix, members, i, new_lattice, out, stats);
+        mine_member(ctx, prefix, members, i, new_lattice, out, stats, scratch);
     }
 }
 
@@ -548,6 +562,7 @@ fn mine_class(
 /// the child tidsets to the next-window lattice. Split out of
 /// [`mine_class`] so the parallel window path can make a top-level
 /// iteration the unit of one executor task.
+#[allow(clippy::too_many_arguments)]
 fn mine_member(
     ctx: &WindowCtx<'_>,
     prefix: &[Item],
@@ -556,6 +571,7 @@ fn mine_member(
     new_lattice: &mut FxHashMap<Vec<Item>, Vec<u32>>,
     out: &mut Vec<FrequentItemset>,
     stats: &mut StreamStats,
+    scratch: &mut Vec<u32>,
 ) {
     let (item_i, ts_i) = members[i];
     let mut child_prefix = prefix.to_vec();
@@ -565,7 +581,7 @@ fn mine_member(
         let mut key = child_prefix.clone();
         key.push(item_j);
         key.sort_unstable();
-        if let Some(tids) = candidate_tidset(ctx, &key, ts_i, ts_j, stats) {
+        if let Some(tids) = candidate_tidset(ctx, &key, ts_i, ts_j, stats, scratch) {
             if tids.len() >= ctx.min_sup {
                 out.push(FrequentItemset::new(key.clone(), tids.len() as u32));
                 child_owned.push((item_j, key, tids));
@@ -577,7 +593,15 @@ fn mine_member(
             .iter()
             .map(|(item, _, tids)| (*item, tids.as_slice()))
             .collect();
-        mine_class(ctx, &child_prefix, &child_members, new_lattice, out, stats);
+        mine_class(
+            ctx,
+            &child_prefix,
+            &child_members,
+            new_lattice,
+            out,
+            stats,
+            scratch,
+        );
     }
     // Move the class's keys and tidsets into the next-window lattice
     // cache only after the subtree is mined: the cache is write-only
@@ -591,27 +615,30 @@ fn mine_member(
 
 /// Exact window tidset of the candidate `key` = members i ∪ j, or `None`
 /// when the delta probe proves it infrequent without touching the kept
-/// region.
+/// region. The delta (new-region) intersection lands in `scratch` —
+/// the one reusable buffer of the whole window mine — so only owned
+/// candidate tidsets are allocated, never the probe.
 fn candidate_tidset(
     ctx: &WindowCtx<'_>,
     key: &[Item],
     ts_i: &[u32],
     ts_j: &[u32],
     stats: &mut StreamStats,
+    scratch: &mut Vec<u32>,
 ) -> Option<Vec<u32>> {
     let si = ts_i.partition_point(|&t| t < ctx.new_lo);
     let sj = ts_j.partition_point(|&t| t < ctx.new_lo);
-    let new_part = VecTidset::intersect_sorted(&ts_i[si..], &ts_j[sj..]);
+    VecTidset::intersect_sorted_into(&ts_i[si..], &ts_j[sj..], scratch);
     if let Some(cached) = ctx.old.get(key) {
         // Frequent last window: kept region = cached tids surviving
         // expiry (cached holds only tids < new_lo by construction).
         stats.cache_hits += 1;
         let cut = cached.partition_point(|&t| t < ctx.lo);
-        let mut tids = Vec::with_capacity(cached.len() - cut + new_part.len());
+        let mut tids = Vec::with_capacity(cached.len() - cut + scratch.len());
         tids.extend_from_slice(&cached[cut..]);
-        tids.extend_from_slice(&new_part);
+        tids.extend_from_slice(scratch);
         Some(tids)
-    } else if !ctx.first_window && new_part.is_empty() {
+    } else if !ctx.first_window && scratch.is_empty() {
         // Infrequent last window (sup ≤ min_sup − 1) and no new
         // occurrences: sup over the kept region alone cannot have grown,
         // so the candidate — and by anti-monotonicity its whole subtree —
@@ -623,7 +650,7 @@ fn candidate_tidset(
         // (or very first window) — pay the full kept-region intersection.
         stats.recomputed += 1;
         let mut tids = VecTidset::intersect_sorted(&ts_i[..si], &ts_j[..sj]);
-        tids.extend_from_slice(&new_part);
+        tids.extend_from_slice(scratch);
         Some(tids)
     }
 }

@@ -1,7 +1,7 @@
 //! Tidset representations and the intersection kernel.
 //!
-//! Eclat's inner loop is `tidset(A_i) ∩ tidset(A_j)`. Two representations
-//! are provided behind [`TidOps`]:
+//! Eclat's inner loop is `tidset(A_i) ∩ tidset(A_j)`. Four
+//! representations are provided behind [`TidOps`]:
 //!
 //! * [`VecTidset`] — sorted `Vec<u32>` of transaction ids, the textbook
 //!   (and SPMF) representation the paper uses. Intersection is a linear
@@ -9,20 +9,154 @@
 //! * [`BitmapTidset`] — packed `u32` bitmaps (AND + popcount), the
 //!   representation the XLA artifact consumes, so the native and
 //!   accelerated paths share exact layout semantics.
+//! * [`DiffTidset`] — Zaki's dEclat diffsets: below the root level a
+//!   member `PX` stores `d(PX) = t(P) \ t(PX)` relative to its class
+//!   prefix `P`, plus its absolute support, so the recursion step is a
+//!   set *subtraction* `d(PXY) = d(PY) \ d(PX)` with
+//!   `support(PXY) = support(PX) − |d(PXY)|`. On dense datasets the
+//!   diffsets are far smaller than the tidsets they replace, and they
+//!   only shrink as the recursion deepens.
+//! * [`HybridTidset`] — per-class adaptive: every freshly built
+//!   equivalence class re-measures its density and flips its members
+//!   Vec ↔ Bitmap ↔ Diffset at the class boundary
+//!   ([`TidOps::adapt_class`]), so skewed datasets (sparse tails, dense
+//!   heads) get the right kernel in every sub-lattice instead of one
+//!   run-global compromise.
 //!
-//! The mining code is generic over `TidOps`; the ablation bench compares
-//! the two (EXPERIMENTS.md §Ablations).
+//! The mining code is generic over `TidOps`; every representation is
+//! held to the same sequential oracle by the cross-engine agreement
+//! suite. The [`kernel`] module keeps process-global work counters
+//! (intersections, early aborts, representation switches, bytes
+//! allocated) that `MiningReport` snapshots per run and the `bench`
+//! command emits per `BENCH_fim.json` row.
 
 use crate::util::Bitmap;
+
+use super::types::Item;
+
+/// Size ratio at which the sorted-merge kernels switch to galloping
+/// (binary-searching the larger side): when one operand is more than
+/// `GALLOP_RATIO`× longer than the other, a per-element binary search of
+/// the large side beats the linear merge. 32 keeps the switch safely
+/// past the point where the log₂ factor of the search is amortized.
+pub const GALLOP_RATIO: usize = 32;
+
+/// Density (average tidset cardinality / universe) at/above which
+/// bitmaps beat tid lists: a bitmap spends `universe / 32` words per
+/// tidset regardless of support, a tid list one word per occurrence;
+/// with the galloping fast path on the vec side the break-even sits
+/// around 1/64.
+pub const DENSE_THRESHOLD: f64 = 1.0 / 64.0;
+
+/// Relative support (average member support / prefix support) at/above
+/// which [`HybridTidset`] flips a freshly built class to diffsets: at
+/// 1/2 the diffset `d(PX) = t(P) \ t(PX)` is no larger than the tidset
+/// it replaces, and it only shrinks as the recursion deepens.
+pub const DIFFSET_SWITCH_RATIO: f64 = 0.5;
+
+// ------------------------------------------------------- kernel counters
+
+/// Snapshot of the process-global kernel work counters — see [`kernel`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KernelStats {
+    /// Intersection kernel invocations (all variants: materializing,
+    /// count-only, bounded).
+    pub intersections: u64,
+    /// Bounded walks cut short by the infeasibility bound (the candidate
+    /// could no longer reach `min_sup` / stay within the diffset budget).
+    pub early_aborts: u64,
+    /// Equivalence classes whose representation was switched (Hybrid
+    /// Vec ↔ Bitmap ↔ Diffset conversions at class boundaries).
+    pub repr_switches: u64,
+    /// Bytes of fresh tidset storage allocated by non-reusing kernel
+    /// calls. The scratch-pool paths (`intersect_into_min`) add nothing
+    /// here — that drop is the allocation-free recursion's signal.
+    pub bytes_allocated: u64,
+}
+
+impl KernelStats {
+    /// Counter deltas since an `earlier` snapshot (wrapping, so a
+    /// long-lived process never produces bogus negative deltas).
+    pub fn since(&self, earlier: &KernelStats) -> KernelStats {
+        KernelStats {
+            intersections: self.intersections.wrapping_sub(earlier.intersections),
+            early_aborts: self.early_aborts.wrapping_sub(earlier.early_aborts),
+            repr_switches: self.repr_switches.wrapping_sub(earlier.repr_switches),
+            bytes_allocated: self.bytes_allocated.wrapping_sub(earlier.bytes_allocated),
+        }
+    }
+}
+
+/// Process-global kernel work counters.
+///
+/// The counters are relaxed atomics bumped once per kernel call (never
+/// per element), so the hot loops stay tight. They are *process*-global:
+/// a `MiningReport` snapshot taken around a mine includes the kernel
+/// work of any session running concurrently in the same process —
+/// exact per-run attribution would need thread-local plumbing through
+/// every executor backend for no decision-making gain.
+pub mod kernel {
+    use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+    use super::KernelStats;
+
+    /// One counter per cache line: four adjacent `AtomicU64`s would
+    /// share a line and executor threads incrementing *different*
+    /// counters would still ping-pong it through the whole Bottom-Up
+    /// phase. (Each increment also accompanies an O(set) walk, so the
+    /// remaining same-counter traffic is well amortized.)
+    #[repr(align(64))]
+    struct PaddedCounter(AtomicU64);
+
+    static INTERSECTIONS: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+    static EARLY_ABORTS: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+    static REPR_SWITCHES: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+    static BYTES_ALLOCATED: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+
+    /// Current counter values.
+    pub fn snapshot() -> KernelStats {
+        KernelStats {
+            intersections: INTERSECTIONS.0.load(Relaxed),
+            early_aborts: EARLY_ABORTS.0.load(Relaxed),
+            repr_switches: REPR_SWITCHES.0.load(Relaxed),
+            bytes_allocated: BYTES_ALLOCATED.0.load(Relaxed),
+        }
+    }
+
+    #[inline]
+    pub(crate) fn intersection() {
+        INTERSECTIONS.0.fetch_add(1, Relaxed);
+    }
+
+    #[inline]
+    pub(crate) fn early_abort() {
+        EARLY_ABORTS.0.fetch_add(1, Relaxed);
+    }
+
+    #[inline]
+    pub(crate) fn repr_switch() {
+        REPR_SWITCHES.0.fetch_add(1, Relaxed);
+    }
+
+    #[inline]
+    pub(crate) fn bytes(n: usize) {
+        BYTES_ALLOCATED.0.fetch_add(n as u64, Relaxed);
+    }
+}
+
+// ----------------------------------------------------------------- trait
 
 /// Operations a tidset representation must support.
 pub trait TidOps: Clone + Send + Sync + 'static {
     /// Build from a sorted, deduplicated tid list; `universe` is the
     /// total transaction count (bitmap capacity).
     fn from_tids(tids: &[u32], universe: usize) -> Self;
+    /// An empty placeholder whose storage `intersect_into_min`
+    /// overwrites — how the Bottom-Up scratch pool seeds new buffers.
+    fn empty() -> Self;
     /// Number of transactions containing the itemset.
     fn support(&self) -> usize;
-    /// Intersection.
+    /// Intersection into a fresh value.
     fn intersect(&self, other: &Self) -> Self;
     /// Support of the intersection without materializing it (used when
     /// the candidate fails min_sup and the tidset would be discarded).
@@ -31,12 +165,551 @@ pub trait TidOps: Clone + Send + Sync + 'static {
     /// remaining elements cannot reach `min_sup` (§Perf O6 — the
     /// dominant savings in triMatrixMode=false datasets, where most of
     /// the O(n²) candidate pairs are hopeless).
+    ///
+    /// Since the fused-walk migration the mining hot paths call
+    /// [`TidOps::intersect_into_min`] instead; this count-only variant
+    /// stays as the default basis of that fusion, as the test oracle
+    /// the bounded walks are checked against, and for callers that
+    /// genuinely never materialize (probes, planners).
     fn intersect_support_min(&self, other: &Self, min_sup: u32) -> Option<u32> {
         let s = self.intersect_support(other) as u32;
         (s >= min_sup).then_some(s)
     }
-    /// Recover the sorted tid list (tests / output).
+    /// The fused hot path (§Perf O8): one walk that *both* applies the
+    /// `min_sup` infeasibility bound and materializes the survivor into
+    /// `out`, reusing `out`'s storage. On `None` the contents of `out`
+    /// are unspecified but its storage stays reusable — callers recycle
+    /// it through a scratch pool. Default: probe then materialize (two
+    /// walks); every built-in representation overrides with a single
+    /// walk.
+    fn intersect_into_min(&self, other: &Self, min_sup: u32, out: &mut Self) -> Option<u32> {
+        let sup = self.intersect_support_min(other, min_sup)?;
+        *out = self.intersect(other);
+        Some(sup)
+    }
+    /// Hook invoked whenever the Bottom-Up search finishes building an
+    /// equivalence class: `prefix` is the class prefix's tidset, and
+    /// `members` the freshly materialized member tidsets. Adaptive
+    /// representations ([`HybridTidset`]) re-measure the class here and
+    /// convert members in place; fixed representations keep the default
+    /// no-op. `depth` is 0 for the top-level classes built from the
+    /// vertical database.
+    fn adapt_class(_prefix: &Self, _members: &mut [(Item, Self)], _depth: usize) {}
+    /// Recover the sorted tid list (tests / output). May panic for
+    /// representations that cannot materialize tids without their class
+    /// context (diffsets below the root) — the mining kernel never
+    /// calls it on such values.
     fn to_tids(&self) -> Vec<u32>;
+}
+
+// --------------------------------------------- raw sorted-slice kernels
+
+/// Merge-intersect `a ∩ b` into `out` (cleared first), galloping when
+/// the sizes are skewed by more than [`GALLOP_RATIO`].
+fn merge_intersect_into(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+    out.clear();
+    if a.len() * GALLOP_RATIO < b.len() {
+        gallop_intersect_into(a, b, out);
+        return;
+    }
+    if b.len() * GALLOP_RATIO < a.len() {
+        gallop_intersect_into(b, a, out);
+        return;
+    }
+    // Branch-light two-pointer merge (§Perf O2): advancing both cursors
+    // arithmetically instead of a 3-way branch lets the compiler keep
+    // the loop tight; bounds checks are elided by the loop condition.
+    out.reserve(a.len().min(b.len()));
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        let (x, y) = (a[i], b[j]);
+        if x == y {
+            out.push(x);
+        }
+        i += (x <= y) as usize;
+        j += (y <= x) as usize;
+    }
+}
+
+/// For |small| ≪ |large|: binary-search each element of the small side
+/// in the remaining suffix of the large side.
+fn gallop_intersect_into(small: &[u32], large: &[u32], out: &mut Vec<u32>) {
+    let mut lo = 0usize;
+    for &x in small {
+        if lo >= large.len() {
+            break;
+        }
+        match large[lo..].binary_search(&x) {
+            Ok(pos) => {
+                out.push(x);
+                lo += pos + 1;
+            }
+            Err(pos) => lo += pos,
+        }
+    }
+}
+
+/// Count-only merge (§Perf O3): |a ∩ b| without allocating or writing
+/// the result.
+fn merge_count(a: &[u32], b: &[u32]) -> usize {
+    if a.len() * GALLOP_RATIO < b.len() {
+        return gallop_count(a, b);
+    }
+    if b.len() * GALLOP_RATIO < a.len() {
+        return gallop_count(b, a);
+    }
+    let mut count = 0usize;
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        let (x, y) = (a[i], b[j]);
+        count += (x == y) as usize;
+        i += (x <= y) as usize;
+        j += (y <= x) as usize;
+    }
+    count
+}
+
+fn gallop_count(small: &[u32], large: &[u32]) -> usize {
+    let mut count = 0usize;
+    let mut lo = 0usize;
+    for &x in small {
+        if lo >= large.len() {
+            break;
+        }
+        match large[lo..].binary_search(&x) {
+            Ok(pos) => {
+                count += 1;
+                lo += pos + 1;
+            }
+            Err(pos) => lo += pos,
+        }
+    }
+    count
+}
+
+/// Count `|a ∩ b|` with the infeasibility bound: `None` as soon as the
+/// remaining elements cannot lift the count to `need` (recorded as a
+/// kernel early abort), or when the finished count falls short.
+fn merge_count_min(a: &[u32], b: &[u32], need: usize) -> Option<u32> {
+    if a.len().min(b.len()) < need {
+        kernel::early_abort();
+        return None;
+    }
+    if a.len() * GALLOP_RATIO < b.len() {
+        return gallop_count_min(a, b, need);
+    }
+    if b.len() * GALLOP_RATIO < a.len() {
+        return gallop_count_min(b, a, need);
+    }
+    let mut count = 0usize;
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        // infeasibility bound: even matching every remaining element of
+        // the shorter side cannot reach min_sup
+        if count + (a.len() - i).min(b.len() - j) < need {
+            kernel::early_abort();
+            return None;
+        }
+        let (x, y) = (a[i], b[j]);
+        count += (x == y) as usize;
+        i += (x <= y) as usize;
+        j += (y <= x) as usize;
+    }
+    (count >= need).then_some(count as u32)
+}
+
+fn gallop_count_min(small: &[u32], large: &[u32], need: usize) -> Option<u32> {
+    let mut count = 0usize;
+    let mut lo = 0usize;
+    for (k, &x) in small.iter().enumerate() {
+        if count + (small.len() - k) < need {
+            kernel::early_abort();
+            return None;
+        }
+        if lo >= large.len() {
+            break;
+        }
+        match large[lo..].binary_search(&x) {
+            Ok(pos) => {
+                count += 1;
+                lo += pos + 1;
+            }
+            Err(pos) => lo += pos,
+        }
+    }
+    (count >= need).then_some(count as u32)
+}
+
+/// The fused bounded+materializing merge: `a ∩ b` into `out`, aborting
+/// once `need` is infeasible.
+fn merge_intersect_min_into(a: &[u32], b: &[u32], need: usize, out: &mut Vec<u32>) -> Option<u32> {
+    out.clear();
+    if a.len().min(b.len()) < need {
+        kernel::early_abort();
+        return None;
+    }
+    if a.len() * GALLOP_RATIO < b.len() {
+        return gallop_intersect_min_into(a, b, need, out);
+    }
+    if b.len() * GALLOP_RATIO < a.len() {
+        return gallop_intersect_min_into(b, a, need, out);
+    }
+    out.reserve(a.len().min(b.len()));
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        if out.len() + (a.len() - i).min(b.len() - j) < need {
+            kernel::early_abort();
+            return None;
+        }
+        let (x, y) = (a[i], b[j]);
+        if x == y {
+            out.push(x);
+        }
+        i += (x <= y) as usize;
+        j += (y <= x) as usize;
+    }
+    let sup = out.len();
+    (sup >= need).then_some(sup as u32)
+}
+
+fn gallop_intersect_min_into(
+    small: &[u32],
+    large: &[u32],
+    need: usize,
+    out: &mut Vec<u32>,
+) -> Option<u32> {
+    let mut lo = 0usize;
+    for (k, &x) in small.iter().enumerate() {
+        if out.len() + (small.len() - k) < need {
+            kernel::early_abort();
+            return None;
+        }
+        if lo >= large.len() {
+            break;
+        }
+        match large[lo..].binary_search(&x) {
+            Ok(pos) => {
+                out.push(x);
+                lo += pos + 1;
+            }
+            Err(pos) => lo += pos,
+        }
+    }
+    let sup = out.len();
+    (sup >= need).then_some(sup as u32)
+}
+
+/// Set difference `a \ b` into `out` (cleared first).
+fn merge_difference_into(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+    out.clear();
+    if a.len() * GALLOP_RATIO < b.len() {
+        gallop_difference_into(a, b, out);
+        return;
+    }
+    out.reserve(a.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        let (x, y) = (a[i], b[j]);
+        if x < y {
+            out.push(x);
+            i += 1;
+        } else if y < x {
+            j += 1;
+        } else {
+            i += 1;
+            j += 1;
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+}
+
+fn gallop_difference_into(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+    let mut lo = 0usize;
+    for (k, &x) in a.iter().enumerate() {
+        if lo >= b.len() {
+            out.extend_from_slice(&a[k..]);
+            return;
+        }
+        match b[lo..].binary_search(&x) {
+            Ok(pos) => lo += pos + 1,
+            Err(pos) => {
+                lo += pos;
+                out.push(x);
+            }
+        }
+    }
+}
+
+/// `|a \ b|` without materializing.
+fn merge_difference_count(a: &[u32], b: &[u32]) -> usize {
+    if a.len() * GALLOP_RATIO < b.len() {
+        let mut count = 0usize;
+        let mut lo = 0usize;
+        for (k, &x) in a.iter().enumerate() {
+            if lo >= b.len() {
+                count += a.len() - k;
+                break;
+            }
+            match b[lo..].binary_search(&x) {
+                Ok(pos) => lo += pos + 1,
+                Err(pos) => {
+                    lo += pos;
+                    count += 1;
+                }
+            }
+        }
+        return count;
+    }
+    let mut count = 0usize;
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        let (x, y) = (a[i], b[j]);
+        if x < y {
+            count += 1;
+            i += 1;
+        } else if y < x {
+            j += 1;
+        } else {
+            i += 1;
+            j += 1;
+        }
+    }
+    count + (a.len() - i)
+}
+
+/// `|a \ b|` with the dEclat budget: `None` (a kernel early abort) once
+/// the difference exceeds `budget`, because
+/// `support = support(prefix member) − |difference|` would fall below
+/// `min_sup`.
+fn merge_difference_count_max(a: &[u32], b: &[u32], budget: usize) -> Option<usize> {
+    // even if every b element cancels an a element, |a \ b| ≥ |a| − |b|
+    if a.len().saturating_sub(b.len()) > budget {
+        kernel::early_abort();
+        return None;
+    }
+    let mut count = 0usize;
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        let (x, y) = (a[i], b[j]);
+        if x < y {
+            if count >= budget {
+                kernel::early_abort();
+                return None;
+            }
+            count += 1;
+            i += 1;
+        } else if y < x {
+            j += 1;
+        } else {
+            i += 1;
+            j += 1;
+        }
+    }
+    if count + (a.len() - i) > budget {
+        kernel::early_abort();
+        return None;
+    }
+    Some(count + (a.len() - i))
+}
+
+/// The fused bounded+materializing difference: `a \ b` into `out`,
+/// aborting once the difference exceeds `budget`.
+fn merge_difference_max_into(
+    a: &[u32],
+    b: &[u32],
+    budget: usize,
+    out: &mut Vec<u32>,
+) -> Option<usize> {
+    out.clear();
+    if a.len().saturating_sub(b.len()) > budget {
+        kernel::early_abort();
+        return None;
+    }
+    if a.len() * GALLOP_RATIO < b.len() {
+        let mut lo = 0usize;
+        for (k, &x) in a.iter().enumerate() {
+            if lo >= b.len() {
+                if out.len() + (a.len() - k) > budget {
+                    kernel::early_abort();
+                    return None;
+                }
+                out.extend_from_slice(&a[k..]);
+                break;
+            }
+            match b[lo..].binary_search(&x) {
+                Ok(pos) => lo += pos + 1,
+                Err(pos) => {
+                    lo += pos;
+                    if out.len() >= budget {
+                        kernel::early_abort();
+                        return None;
+                    }
+                    out.push(x);
+                }
+            }
+        }
+        return Some(out.len());
+    }
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        let (x, y) = (a[i], b[j]);
+        if x < y {
+            if out.len() >= budget {
+                kernel::early_abort();
+                return None;
+            }
+            out.push(x);
+            i += 1;
+        } else if y < x {
+            j += 1;
+        } else {
+            i += 1;
+            j += 1;
+        }
+    }
+    if out.len() + (a.len() - i) > budget {
+        kernel::early_abort();
+        return None;
+    }
+    out.extend_from_slice(&a[i..]);
+    Some(out.len())
+}
+
+// The dEclat recursion step, shared by [`DiffTidset`] and the diffset
+// arms of [`HybridTidset`] so the support arithmetic exists exactly
+// once: members `PX` (diffs `da`, support `sa`) and `PY` (diffs `db`)
+// of one class combine as `d(PXY) = d(PY) \ d(PX)` with
+// `support(PXY) = support(PX) − |d(PXY)|`.
+
+/// Materializing dEclat step.
+fn diff_step(da: &[u32], sa: u32, db: &[u32]) -> (Vec<u32>, u32) {
+    let mut diffs = Vec::new();
+    merge_difference_into(db, da, &mut diffs);
+    let support = sa - diffs.len() as u32;
+    kernel::bytes(4 * diffs.len());
+    (diffs, support)
+}
+
+/// Count-only dEclat step.
+fn diff_step_support(da: &[u32], sa: u32, db: &[u32]) -> usize {
+    sa as usize - merge_difference_count(db, da)
+}
+
+/// Bounded count-only dEclat step: `None` once `min_sup` is infeasible
+/// (the diffset budget is `support(PX) − min_sup`).
+fn diff_step_support_min(da: &[u32], sa: u32, db: &[u32], need: usize) -> Option<u32> {
+    let sa = sa as usize;
+    if sa < need {
+        kernel::early_abort();
+        return None;
+    }
+    merge_difference_count_max(db, da, sa - need).map(|d| (sa - d) as u32)
+}
+
+/// Bounded materializing dEclat step into `buf`.
+fn diff_step_into_min(
+    da: &[u32],
+    sa: u32,
+    db: &[u32],
+    need: usize,
+    buf: &mut Vec<u32>,
+) -> Option<u32> {
+    let sa = sa as usize;
+    if sa < need {
+        kernel::early_abort();
+        return None;
+    }
+    merge_difference_max_into(db, da, sa - need, buf).map(|d| (sa - d) as u32)
+}
+
+/// The dEclat class-building step: root tid lists `a`, `b` combine as
+/// `d = a \ b` with `support = |a| − |d|` (bounded, materializing).
+fn diff_root_into_min(a: &[u32], b: &[u32], need: usize, buf: &mut Vec<u32>) -> Option<u32> {
+    if a.len() < need {
+        kernel::early_abort();
+        return None;
+    }
+    merge_difference_max_into(a, b, a.len() - need, buf).map(|d| (a.len() - d) as u32)
+}
+
+/// Bounded materializing bitmap AND, shared by [`BitmapTidset`] and the
+/// bitmap arms of [`HybridTidset`]: a bound-abort (`None` from
+/// [`Bitmap::and_into_min`]) counts as a kernel early abort; a
+/// *completed* AND below `need` is a plain failed candidate.
+fn bitmap_and_into_min(a: &Bitmap, b: &Bitmap, need: usize, out: &mut Bitmap) -> Option<u32> {
+    match a.and_into_min(b, need, out) {
+        None => {
+            kernel::early_abort();
+            None
+        }
+        Some(count) => (count >= need).then_some(count as u32),
+    }
+}
+
+/// Bitmap AND popcount with the remaining-popcount bound, probed every
+/// 8 words: abort when the remaining words — even all-ones — cannot
+/// lift the count to `need`.
+fn bitmap_count_min(a: &Bitmap, b: &Bitmap, need: usize) -> Option<u32> {
+    let (aw, bw) = (a.words(), b.words());
+    let n = aw.len().min(bw.len());
+    let mut count = 0usize;
+    for (i, (&wa, &wb)) in aw.iter().zip(bw).enumerate() {
+        count += (wa & wb).count_ones() as usize;
+        if i & 7 == 7 && count + (n - i - 1) * 32 < need {
+            kernel::early_abort();
+            return None;
+        }
+    }
+    (count >= need).then_some(count as u32)
+}
+
+/// Membership-filter intersection for mixed tid-list × bitmap operands:
+/// keep the tids set in `bits`.
+fn filter_by_bitmap_into(tids: &[u32], bits: &Bitmap, out: &mut Vec<u32>) {
+    out.clear();
+    out.extend(tids.iter().copied().filter(|&t| bits.get(t as usize)));
+}
+
+/// Bounded membership-filter intersection.
+fn filter_by_bitmap_min_into(
+    tids: &[u32],
+    bits: &Bitmap,
+    need: usize,
+    out: &mut Vec<u32>,
+) -> Option<u32> {
+    out.clear();
+    if tids.len() < need {
+        kernel::early_abort();
+        return None;
+    }
+    for (k, &t) in tids.iter().enumerate() {
+        if out.len() + (tids.len() - k) < need {
+            kernel::early_abort();
+            return None;
+        }
+        if bits.get(t as usize) {
+            out.push(t);
+        }
+    }
+    let sup = out.len();
+    (sup >= need).then_some(sup as u32)
+}
+
+/// Count-only bounded membership filter.
+fn filter_by_bitmap_count_min(tids: &[u32], bits: &Bitmap, need: usize) -> Option<u32> {
+    if tids.len() < need {
+        kernel::early_abort();
+        return None;
+    }
+    let mut count = 0usize;
+    for (k, &t) in tids.iter().enumerate() {
+        if count + (tids.len() - k) < need {
+            kernel::early_abort();
+            return None;
+        }
+        count += bits.get(t as usize) as usize;
+    }
+    (count >= need).then_some(count as u32)
 }
 
 // ------------------------------------------------------------- VecTidset
@@ -57,93 +730,19 @@ impl VecTidset {
     /// incremental streaming miner, which intersects tid-range *slices*
     /// (kept / newly-arrived regions) of window tidsets.
     pub fn intersect_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
-        Self::merge_intersect(a, b)
-    }
-
-    /// Linear merge intersection into a fresh vec.
-    fn merge_intersect(a: &[u32], b: &[u32]) -> Vec<u32> {
-        // Galloping when sizes are very skewed: binary-search the larger.
-        if a.len() * 32 < b.len() {
-            return Self::gallop_intersect(a, b);
-        }
-        if b.len() * 32 < a.len() {
-            return Self::gallop_intersect(b, a);
-        }
-        // Branch-light two-pointer merge (§Perf O2): advancing both
-        // cursors arithmetically instead of a 3-way branch lets the
-        // compiler keep the loop tight; bounds checks are elided by the
-        // loop condition.
-        let mut out = Vec::with_capacity(a.len().min(b.len()));
-        let (mut i, mut j) = (0usize, 0usize);
-        while i < a.len() && j < b.len() {
-            let (x, y) = (a[i], b[j]);
-            if x == y {
-                out.push(x);
-            }
-            i += (x <= y) as usize;
-            j += (y <= x) as usize;
-        }
+        kernel::intersection();
+        let mut out = Vec::new();
+        merge_intersect_into(a, b, &mut out);
+        kernel::bytes(4 * out.len());
         out
     }
 
-    /// Count-only merge (§Perf O3): support of the intersection without
-    /// allocating or writing the result — the min_sup-check fast path.
-    fn merge_count(a: &[u32], b: &[u32]) -> usize {
-        if a.len() * 32 < b.len() {
-            return Self::gallop_count(a, b);
-        }
-        if b.len() * 32 < a.len() {
-            return Self::gallop_count(b, a);
-        }
-        let mut count = 0usize;
-        let (mut i, mut j) = (0usize, 0usize);
-        while i < a.len() && j < b.len() {
-            let (x, y) = (a[i], b[j]);
-            count += (x == y) as usize;
-            i += (x <= y) as usize;
-            j += (y <= x) as usize;
-        }
-        count
-    }
-
-    fn gallop_count(small: &[u32], large: &[u32]) -> usize {
-        let mut count = 0usize;
-        let mut lo = 0usize;
-        for &x in small {
-            match large[lo..].binary_search(&x) {
-                Ok(pos) => {
-                    count += 1;
-                    lo += pos + 1;
-                }
-                Err(pos) => lo += pos,
-            }
-            if lo >= large.len() {
-                break;
-            }
-        }
-        count
-    }
-
-    /// For |small| << |large|: binary search each element of the small
-    /// side in the remaining suffix of the large side.
-    fn gallop_intersect(small: &[u32], large: &[u32]) -> Vec<u32> {
-        let mut out = Vec::with_capacity(small.len());
-        let mut lo = 0usize;
-        for &x in small {
-            match large[lo..].binary_search(&x) {
-                Ok(pos) => {
-                    out.push(x);
-                    lo += pos + 1;
-                }
-                Err(pos) => {
-                    lo += pos;
-                }
-            }
-            if lo >= large.len() {
-                break;
-            }
-        }
-        out
+    /// [`VecTidset::intersect_sorted`] into a caller-provided scratch
+    /// buffer (cleared first) — the allocation-free twin the streaming
+    /// lattice cache reuses per candidate.
+    pub fn intersect_sorted_into(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+        kernel::intersection();
+        merge_intersect_into(a, b, out);
     }
 }
 
@@ -155,40 +754,35 @@ impl TidOps for VecTidset {
         }
     }
 
+    fn empty() -> Self {
+        Self { tids: Vec::new() }
+    }
+
     fn support(&self) -> usize {
         self.tids.len()
     }
 
     fn intersect(&self, other: &Self) -> Self {
-        Self {
-            tids: Self::merge_intersect(&self.tids, &other.tids),
-        }
+        kernel::intersection();
+        let mut tids = Vec::new();
+        merge_intersect_into(&self.tids, &other.tids, &mut tids);
+        kernel::bytes(4 * tids.len());
+        Self { tids }
     }
 
     fn intersect_support(&self, other: &Self) -> usize {
-        Self::merge_count(&self.tids, &other.tids)
+        kernel::intersection();
+        merge_count(&self.tids, &other.tids)
     }
 
     fn intersect_support_min(&self, other: &Self, min_sup: u32) -> Option<u32> {
-        let (a, b) = (&self.tids[..], &other.tids[..]);
-        let need = min_sup as usize;
-        if a.len().min(b.len()) < need {
-            return None; // can never reach min_sup
-        }
-        let mut count = 0usize;
-        let (mut i, mut j) = (0usize, 0usize);
-        while i < a.len() && j < b.len() {
-            // infeasibility bound: even matching every remaining element
-            // of the shorter side cannot reach min_sup
-            if count + (a.len() - i).min(b.len() - j) < need {
-                return None;
-            }
-            let (x, y) = (a[i], b[j]);
-            count += (x == y) as usize;
-            i += (x <= y) as usize;
-            j += (y <= x) as usize;
-        }
-        (count >= need).then_some(count as u32)
+        kernel::intersection();
+        merge_count_min(&self.tids, &other.tids, min_sup as usize)
+    }
+
+    fn intersect_into_min(&self, other: &Self, min_sup: u32, out: &mut Self) -> Option<u32> {
+        kernel::intersection();
+        merge_intersect_min_into(&self.tids, &other.tids, min_sup as usize, &mut out.tids)
     }
 
     fn to_tids(&self) -> Vec<u32> {
@@ -217,22 +811,467 @@ impl TidOps for BitmapTidset {
         }
     }
 
+    fn empty() -> Self {
+        Self {
+            bits: Bitmap::new(0),
+        }
+    }
+
     fn support(&self) -> usize {
         self.bits.count()
     }
 
     fn intersect(&self, other: &Self) -> Self {
+        kernel::intersection();
+        kernel::bytes(4 * self.bits.words().len());
         Self {
             bits: self.bits.and(&other.bits),
         }
     }
 
     fn intersect_support(&self, other: &Self) -> usize {
+        kernel::intersection();
         self.bits.and_count(&other.bits)
+    }
+
+    /// Word-level early abort on the remaining-popcount bound (instead
+    /// of counting the full AND).
+    fn intersect_support_min(&self, other: &Self, min_sup: u32) -> Option<u32> {
+        kernel::intersection();
+        bitmap_count_min(&self.bits, &other.bits, min_sup as usize)
+    }
+
+    fn intersect_into_min(&self, other: &Self, min_sup: u32, out: &mut Self) -> Option<u32> {
+        kernel::intersection();
+        bitmap_and_into_min(&self.bits, &other.bits, min_sup as usize, &mut out.bits)
     }
 
     fn to_tids(&self) -> Vec<u32> {
         self.bits.to_tids()
+    }
+}
+
+// ------------------------------------------------------------- DiffTidset
+
+/// Zaki's dEclat representation. Root-level values (built by
+/// [`TidOps::from_tids`]) are plain sorted tid lists; the first
+/// intersection of the class-building level switches to diffsets —
+/// `t(i) ∩ t(j)` is stored as `d = t(i) \ t(j)` with
+/// `support = |t(i)| − |d|` — and every deeper intersection is the
+/// subtraction `d(PXY) = d(PY) \ d(PX)`.
+///
+/// Invariant: intersections only combine values of the same level
+/// (root × root, or two diffsets relative to the same class prefix) —
+/// exactly what the equivalence-class recursion produces.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DiffTidset {
+    /// Root level (vertical database): a plain sorted tid list.
+    Tids(Vec<u32>),
+    /// Inside an equivalence class: the member `PX` as
+    /// `d(PX) = t(P) \ t(PX)` relative to the class prefix `P`, plus
+    /// its absolute support.
+    Diff { diffs: Vec<u32>, support: u32 },
+}
+
+impl DiffTidset {
+    /// Whether this value has switched to the diffset form.
+    pub fn is_diffset(&self) -> bool {
+        matches!(self, Self::Diff { .. })
+    }
+}
+
+impl TidOps for DiffTidset {
+    fn from_tids(tids: &[u32], _universe: usize) -> Self {
+        debug_assert!(tids.windows(2).all(|w| w[0] < w[1]), "tids must be sorted+unique");
+        Self::Tids(tids.to_vec())
+    }
+
+    fn empty() -> Self {
+        Self::Tids(Vec::new())
+    }
+
+    fn support(&self) -> usize {
+        match self {
+            Self::Tids(t) => t.len(),
+            Self::Diff { support, .. } => *support as usize,
+        }
+    }
+
+    fn intersect(&self, other: &Self) -> Self {
+        kernel::intersection();
+        match (self, other) {
+            (Self::Tids(a), Self::Tids(b)) => {
+                // root step: d = a \ b, support = |a| − |d|
+                let mut diffs = Vec::new();
+                merge_difference_into(a, b, &mut diffs);
+                let support = (a.len() - diffs.len()) as u32;
+                kernel::bytes(4 * diffs.len());
+                Self::Diff { diffs, support }
+            }
+            (Self::Diff { diffs: da, support: sa }, Self::Diff { diffs: db, .. }) => {
+                let (diffs, support) = diff_step(da, *sa, db);
+                Self::Diff { diffs, support }
+            }
+            _ => unreachable!("dEclat intersections stay within one class level"),
+        }
+    }
+
+    fn intersect_support(&self, other: &Self) -> usize {
+        kernel::intersection();
+        match (self, other) {
+            (Self::Tids(a), Self::Tids(b)) => merge_count(a, b),
+            (Self::Diff { diffs: da, support: sa }, Self::Diff { diffs: db, .. }) => {
+                diff_step_support(da, *sa, db)
+            }
+            _ => unreachable!("dEclat intersections stay within one class level"),
+        }
+    }
+
+    fn intersect_support_min(&self, other: &Self, min_sup: u32) -> Option<u32> {
+        kernel::intersection();
+        let need = min_sup as usize;
+        match (self, other) {
+            (Self::Tids(a), Self::Tids(b)) => merge_count_min(a, b, need),
+            (Self::Diff { diffs: da, support: sa }, Self::Diff { diffs: db, .. }) => {
+                diff_step_support_min(da, *sa, db, need)
+            }
+            _ => unreachable!("dEclat intersections stay within one class level"),
+        }
+    }
+
+    fn intersect_into_min(&self, other: &Self, min_sup: u32, out: &mut Self) -> Option<u32> {
+        kernel::intersection();
+        let need = min_sup as usize;
+        // Reuse out's backing vec regardless of which variant it held.
+        let mut buf = match std::mem::replace(out, Self::Tids(Vec::new())) {
+            Self::Tids(v) | Self::Diff { diffs: v, .. } => v,
+        };
+        let outcome: Option<u32> = match (self, other) {
+            (Self::Tids(a), Self::Tids(b)) => diff_root_into_min(a, b, need, &mut buf),
+            (Self::Diff { diffs: da, support: sa }, Self::Diff { diffs: db, .. }) => {
+                diff_step_into_min(da, *sa, db, need, &mut buf)
+            }
+            _ => unreachable!("dEclat intersections stay within one class level"),
+        };
+        match outcome {
+            Some(sup) => {
+                *out = Self::Diff {
+                    diffs: buf,
+                    support: sup,
+                };
+                Some(sup)
+            }
+            None => {
+                // keep the storage reusable for the next candidate
+                *out = Self::Tids(buf);
+                None
+            }
+        }
+    }
+
+    fn to_tids(&self) -> Vec<u32> {
+        match self {
+            Self::Tids(t) => t.clone(),
+            Self::Diff { .. } => panic!(
+                "DiffTidset below the root level cannot materialize tids \
+                 (diffsets are relative to their class prefix)"
+            ),
+        }
+    }
+}
+
+// ----------------------------------------------------------- HybridTidset
+
+/// Per-class adaptive representation: starts as a tid list or bitmap
+/// (chosen per item by density), and re-decides at every equivalence
+/// class boundary ([`TidOps::adapt_class`]) — flipping the whole class
+/// Vec ↔ Bitmap by measured class density, or to diffsets once the
+/// members' relative support crosses [`DIFFSET_SWITCH_RATIO`]. The
+/// diffset switch is one-way: diffsets only shrink down a subtree.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HybridTidset {
+    universe: u32,
+    repr: HybridRepr,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum HybridRepr {
+    Tids(Vec<u32>),
+    Bits(Bitmap),
+    Diff { diffs: Vec<u32>, support: u32 },
+}
+
+impl HybridTidset {
+    /// The active representation, for tests and bench labels.
+    pub fn repr_name(&self) -> &'static str {
+        match self.repr {
+            HybridRepr::Tids(_) => "tids",
+            HybridRepr::Bits(_) => "bits",
+            HybridRepr::Diff { .. } => "diff",
+        }
+    }
+
+    /// Pull a reusable `Vec<u32>` out of a scratch value.
+    fn take_vec(out: &mut Self) -> Vec<u32> {
+        match &mut out.repr {
+            HybridRepr::Tids(v) | HybridRepr::Diff { diffs: v, .. } => std::mem::take(v),
+            HybridRepr::Bits(_) => Vec::new(),
+        }
+    }
+
+    /// Pull a reusable `Bitmap` out of a scratch value.
+    fn take_bits(out: &mut Self) -> Bitmap {
+        match &mut out.repr {
+            HybridRepr::Bits(b) => std::mem::replace(b, Bitmap::new(0)),
+            _ => Bitmap::new(0),
+        }
+    }
+}
+
+impl TidOps for HybridTidset {
+    fn from_tids(tids: &[u32], universe: usize) -> Self {
+        debug_assert!(tids.windows(2).all(|w| w[0] < w[1]), "tids must be sorted+unique");
+        let dense =
+            universe > 0 && tids.len() as f64 / universe as f64 >= DENSE_THRESHOLD;
+        let repr = if dense {
+            HybridRepr::Bits(Bitmap::from_sorted_tids(tids, universe))
+        } else {
+            HybridRepr::Tids(tids.to_vec())
+        };
+        Self {
+            universe: universe as u32,
+            repr,
+        }
+    }
+
+    fn empty() -> Self {
+        Self {
+            universe: 0,
+            repr: HybridRepr::Tids(Vec::new()),
+        }
+    }
+
+    fn support(&self) -> usize {
+        match &self.repr {
+            HybridRepr::Tids(t) => t.len(),
+            HybridRepr::Bits(b) => b.count(),
+            HybridRepr::Diff { support, .. } => *support as usize,
+        }
+    }
+
+    fn intersect(&self, other: &Self) -> Self {
+        kernel::intersection();
+        let repr = match (&self.repr, &other.repr) {
+            (HybridRepr::Tids(a), HybridRepr::Tids(b)) => {
+                let mut v = Vec::new();
+                merge_intersect_into(a, b, &mut v);
+                kernel::bytes(4 * v.len());
+                HybridRepr::Tids(v)
+            }
+            (HybridRepr::Bits(a), HybridRepr::Bits(b)) => {
+                kernel::bytes(4 * a.words().len());
+                HybridRepr::Bits(a.and(b))
+            }
+            (HybridRepr::Tids(t), HybridRepr::Bits(b))
+            | (HybridRepr::Bits(b), HybridRepr::Tids(t)) => {
+                let mut v = Vec::new();
+                filter_by_bitmap_into(t, b, &mut v);
+                kernel::bytes(4 * v.len());
+                HybridRepr::Tids(v)
+            }
+            (
+                HybridRepr::Diff { diffs: da, support: sa },
+                HybridRepr::Diff { diffs: db, .. },
+            ) => {
+                let (diffs, support) = diff_step(da, *sa, db);
+                HybridRepr::Diff { diffs, support }
+            }
+            _ => unreachable!("hybrid diffset members only meet within their own class"),
+        };
+        Self {
+            universe: self.universe,
+            repr,
+        }
+    }
+
+    fn intersect_support(&self, other: &Self) -> usize {
+        kernel::intersection();
+        match (&self.repr, &other.repr) {
+            (HybridRepr::Tids(a), HybridRepr::Tids(b)) => merge_count(a, b),
+            (HybridRepr::Bits(a), HybridRepr::Bits(b)) => a.and_count(b),
+            (HybridRepr::Tids(t), HybridRepr::Bits(b))
+            | (HybridRepr::Bits(b), HybridRepr::Tids(t)) => {
+                t.iter().filter(|&&x| b.get(x as usize)).count()
+            }
+            (
+                HybridRepr::Diff { diffs: da, support: sa },
+                HybridRepr::Diff { diffs: db, .. },
+            ) => diff_step_support(da, *sa, db),
+            _ => unreachable!("hybrid diffset members only meet within their own class"),
+        }
+    }
+
+    fn intersect_support_min(&self, other: &Self, min_sup: u32) -> Option<u32> {
+        kernel::intersection();
+        let need = min_sup as usize;
+        match (&self.repr, &other.repr) {
+            (HybridRepr::Tids(a), HybridRepr::Tids(b)) => merge_count_min(a, b, need),
+            (HybridRepr::Bits(a), HybridRepr::Bits(b)) => bitmap_count_min(a, b, need),
+            (HybridRepr::Tids(t), HybridRepr::Bits(b))
+            | (HybridRepr::Bits(b), HybridRepr::Tids(t)) => {
+                filter_by_bitmap_count_min(t, b, need)
+            }
+            (
+                HybridRepr::Diff { diffs: da, support: sa },
+                HybridRepr::Diff { diffs: db, .. },
+            ) => diff_step_support_min(da, *sa, db, need),
+            _ => unreachable!("hybrid diffset members only meet within their own class"),
+        }
+    }
+
+    fn intersect_into_min(&self, other: &Self, min_sup: u32, out: &mut Self) -> Option<u32> {
+        kernel::intersection();
+        let need = min_sup as usize;
+        out.universe = self.universe;
+        match (&self.repr, &other.repr) {
+            (HybridRepr::Tids(a), HybridRepr::Tids(b)) => {
+                let mut v = Self::take_vec(out);
+                let r = merge_intersect_min_into(a, b, need, &mut v);
+                out.repr = HybridRepr::Tids(v);
+                r
+            }
+            (HybridRepr::Bits(a), HybridRepr::Bits(b)) => {
+                let mut bits = Self::take_bits(out);
+                let r = bitmap_and_into_min(a, b, need, &mut bits);
+                out.repr = HybridRepr::Bits(bits);
+                r
+            }
+            (HybridRepr::Tids(t), HybridRepr::Bits(b))
+            | (HybridRepr::Bits(b), HybridRepr::Tids(t)) => {
+                let mut v = Self::take_vec(out);
+                let r = filter_by_bitmap_min_into(t, b, need, &mut v);
+                out.repr = HybridRepr::Tids(v);
+                r
+            }
+            (
+                HybridRepr::Diff { diffs: da, support: sa },
+                HybridRepr::Diff { diffs: db, .. },
+            ) => {
+                let mut v = Self::take_vec(out);
+                match diff_step_into_min(da, *sa, db, need, &mut v) {
+                    Some(sup) => {
+                        out.repr = HybridRepr::Diff {
+                            diffs: v,
+                            support: sup,
+                        };
+                        Some(sup)
+                    }
+                    None => {
+                        out.repr = HybridRepr::Tids(v);
+                        None
+                    }
+                }
+            }
+            _ => unreachable!("hybrid diffset members only meet within their own class"),
+        }
+    }
+
+    /// Per-class re-measurement: flip the freshly built class to
+    /// diffsets when the members' relative support crosses
+    /// [`DIFFSET_SWITCH_RATIO`] (they would be smaller than the tidsets
+    /// they replace), otherwise pick Vec vs Bitmap by the class's
+    /// measured density. Classes already in diffset form stay there —
+    /// diffsets cannot be materialized back without their prefix chain,
+    /// and they only shrink as the recursion deepens.
+    fn adapt_class(prefix: &Self, members: &mut [(Item, Self)], _depth: usize) {
+        if members.is_empty()
+            || members
+                .iter()
+                .any(|(_, ts)| matches!(ts.repr, HybridRepr::Diff { .. }))
+        {
+            return;
+        }
+        let universe = members[0].1.universe.max(1) as usize;
+        let psup = prefix.support();
+        let total: usize = members.iter().map(|(_, ts)| ts.support()).sum();
+        let avg = total as f64 / members.len() as f64;
+        if psup > 0 && avg >= DIFFSET_SWITCH_RATIO * psup as f64 {
+            // members sit close to the prefix: diffsets relative to it
+            // are smaller than the tidsets (|d| = sup(P) − sup(PX)).
+            // Borrow the prefix tids in place (materialize only for a
+            // bitmap prefix) and take each member's storage instead of
+            // cloning full tid vectors that die on the next line.
+            let ptids_storage: Vec<u32>;
+            let ptids: &[u32] = match &prefix.repr {
+                HybridRepr::Tids(t) => t,
+                HybridRepr::Bits(b) => {
+                    ptids_storage = b.to_tids();
+                    kernel::bytes(4 * ptids_storage.len());
+                    &ptids_storage
+                }
+                // a diffset prefix implies diffset members, handled above
+                HybridRepr::Diff { .. } => return,
+            };
+            for (_, ts) in members.iter_mut() {
+                let support = ts.support() as u32;
+                let repr = std::mem::replace(&mut ts.repr, HybridRepr::Tids(Vec::new()));
+                let diffs = match repr {
+                    HybridRepr::Tids(mtids) => {
+                        let mut d =
+                            Vec::with_capacity(ptids.len().saturating_sub(mtids.len()));
+                        merge_difference_into(ptids, &mtids, &mut d);
+                        d
+                    }
+                    HybridRepr::Bits(b) => {
+                        // diffset straight off the bitmap: prefix tids
+                        // whose member bit is unset
+                        let mut d = Vec::with_capacity(
+                            ptids.len().saturating_sub(support as usize),
+                        );
+                        d.extend(ptids.iter().copied().filter(|&t| !b.get(t as usize)));
+                        d
+                    }
+                    HybridRepr::Diff { .. } => unreachable!("diffset members handled above"),
+                };
+                kernel::bytes(4 * diffs.len());
+                ts.repr = HybridRepr::Diff { diffs, support };
+            }
+            kernel::repr_switch();
+            return;
+        }
+        let want_bits = avg / universe as f64 >= DENSE_THRESHOLD;
+        let mut switched = false;
+        for (_, ts) in members.iter_mut() {
+            let repr = std::mem::replace(&mut ts.repr, HybridRepr::Tids(Vec::new()));
+            ts.repr = match (repr, want_bits) {
+                (HybridRepr::Tids(t), true) => {
+                    switched = true;
+                    kernel::bytes(4 * universe.div_ceil(32));
+                    HybridRepr::Bits(Bitmap::from_sorted_tids(&t, universe))
+                }
+                (HybridRepr::Bits(b), false) => {
+                    switched = true;
+                    let t = b.to_tids();
+                    kernel::bytes(4 * t.len());
+                    HybridRepr::Tids(t)
+                }
+                (r, _) => r,
+            };
+        }
+        if switched {
+            kernel::repr_switch();
+        }
+    }
+
+    fn to_tids(&self) -> Vec<u32> {
+        match &self.repr {
+            HybridRepr::Tids(t) => t.clone(),
+            HybridRepr::Bits(b) => b.to_tids(),
+            HybridRepr::Diff { .. } => panic!(
+                "HybridTidset in diffset form cannot materialize tids \
+                 (diffsets are relative to their class prefix)"
+            ),
+        }
     }
 }
 
@@ -247,6 +1286,14 @@ mod tests {
             .collect()
     }
 
+    fn set_intersect(a: &[u32], b: &[u32]) -> Vec<u32> {
+        a.iter().filter(|x| b.binary_search(x).is_ok()).copied().collect()
+    }
+
+    fn set_difference(a: &[u32], b: &[u32]) -> Vec<u32> {
+        a.iter().filter(|x| b.binary_search(x).is_err()).copied().collect()
+    }
+
     #[test]
     fn vec_and_bitmap_agree_with_set_oracle() {
         let mut rng = SplitMix64::new(0xFACE);
@@ -254,7 +1301,7 @@ mod tests {
             let universe = 1 + rng.gen_range(600);
             let a = random_sorted(&mut rng, universe, 0.3);
             let b = random_sorted(&mut rng, universe, 0.3);
-            let oracle: Vec<u32> = a.iter().filter(|x| b.binary_search(x).is_ok()).copied().collect();
+            let oracle = set_intersect(&a, &b);
 
             let va = VecTidset::from_tids(&a, universe);
             let vb = VecTidset::from_tids(&b, universe);
@@ -274,11 +1321,7 @@ mod tests {
         let universe = 100_000;
         let big = random_sorted(&mut rng, universe, 0.5);
         let small: Vec<u32> = vec![3, 77, 500, 9999, 50_000, 99_999];
-        let oracle: Vec<u32> = small
-            .iter()
-            .filter(|x| big.binary_search(x).is_ok())
-            .copied()
-            .collect();
+        let oracle = set_intersect(&small, &big);
         let vs = VecTidset::from_tids(&small, universe);
         let vb = VecTidset::from_tids(&big, universe);
         assert_eq!(vs.intersect(&vb).to_tids(), oracle);
@@ -304,5 +1347,268 @@ mod tests {
         let ba = BitmapTidset::from_tids(&[1, 3, 5], 10);
         let bb = BitmapTidset::from_tids(&[0, 2, 4], 10);
         assert_eq!(ba.intersect(&bb).support(), 0);
+    }
+
+    #[test]
+    fn difference_kernels_match_set_oracle() {
+        let mut rng = SplitMix64::new(0xD1FF);
+        for _ in 0..60 {
+            let universe = 1 + rng.gen_range(400);
+            let a = random_sorted(&mut rng, universe, 0.4);
+            let b = random_sorted(&mut rng, universe, 0.4);
+            let oracle = set_difference(&a, &b);
+            let mut out = Vec::new();
+            merge_difference_into(&a, &b, &mut out);
+            assert_eq!(out, oracle);
+            assert_eq!(merge_difference_count(&a, &b), oracle.len());
+            // bounded variants agree when the budget is generous…
+            assert_eq!(
+                merge_difference_count_max(&a, &b, oracle.len()),
+                Some(oracle.len())
+            );
+            let mut bounded = Vec::new();
+            assert_eq!(
+                merge_difference_max_into(&a, &b, oracle.len(), &mut bounded),
+                Some(oracle.len())
+            );
+            assert_eq!(bounded, oracle);
+            // …and abort when it is one short (unless the diff is empty).
+            if !oracle.is_empty() {
+                assert_eq!(merge_difference_count_max(&a, &b, oracle.len() - 1), None);
+                assert_eq!(
+                    merge_difference_max_into(&a, &b, oracle.len() - 1, &mut bounded),
+                    None
+                );
+            }
+        }
+        // gallop path: tiny a against huge b
+        let big: Vec<u32> = (0..50_000).map(|x| x * 2).collect();
+        let small = vec![1u32, 4, 9_999, 20_000, 99_999];
+        let oracle = set_difference(&small, &big);
+        let mut out = Vec::new();
+        merge_difference_into(&small, &big, &mut out);
+        assert_eq!(out, oracle);
+        assert_eq!(merge_difference_count(&small, &big), oracle.len());
+    }
+
+    #[test]
+    fn intersect_into_min_matches_intersect_vec_and_bitmap() {
+        let mut rng = SplitMix64::new(0x1234);
+        for _ in 0..40 {
+            let universe = 1 + rng.gen_range(500);
+            let a = random_sorted(&mut rng, universe, 0.3);
+            let b = random_sorted(&mut rng, universe, 0.3);
+            let oracle = set_intersect(&a, &b);
+            let sup = oracle.len() as u32;
+
+            let va = VecTidset::from_tids(&a, universe);
+            let vb = VecTidset::from_tids(&b, universe);
+            let mut vout = VecTidset::empty();
+            for min_sup in [1u32, sup.max(1), sup + 1] {
+                let got = va.intersect_into_min(&vb, min_sup, &mut vout);
+                if sup >= min_sup {
+                    assert_eq!(got, Some(sup));
+                    assert_eq!(vout.to_tids(), oracle);
+                } else {
+                    assert_eq!(got, None);
+                }
+                assert_eq!(va.intersect_support_min(&vb, min_sup), got);
+            }
+
+            let ba = BitmapTidset::from_tids(&a, universe);
+            let bb = BitmapTidset::from_tids(&b, universe);
+            let mut bout = BitmapTidset::empty();
+            for min_sup in [1u32, sup.max(1), sup + 1] {
+                let got = ba.intersect_into_min(&bb, min_sup, &mut bout);
+                if sup >= min_sup {
+                    assert_eq!(got, Some(sup));
+                    assert_eq!(bout.to_tids(), oracle);
+                } else {
+                    assert_eq!(got, None);
+                }
+                assert_eq!(ba.intersect_support_min(&bb, min_sup), got);
+            }
+        }
+    }
+
+    /// Simulate one equivalence class three levels deep and check every
+    /// diffset-computed support against the tid-list oracle.
+    #[test]
+    fn diffset_supports_equal_tidset_supports() {
+        let mut rng = SplitMix64::new(0xDEC1A7);
+        for round in 0..30 {
+            let universe = 50 + rng.gen_range(300);
+            // dense sets: the dEclat sweet spot
+            let a = random_sorted(&mut rng, universe, 0.7);
+            let b = random_sorted(&mut rng, universe, 0.6);
+            let c = random_sorted(&mut rng, universe, 0.65);
+
+            let (da, db, dc) = (
+                DiffTidset::from_tids(&a, universe),
+                DiffTidset::from_tids(&b, universe),
+                DiffTidset::from_tids(&c, universe),
+            );
+            let ab = set_intersect(&a, &b);
+            let ac = set_intersect(&a, &c);
+            let abc = set_intersect(&ab, &c);
+
+            // class level: t(a)∩t(b), t(a)∩t(c) as diffsets relative to a
+            let m_ab = da.intersect(&db);
+            let m_ac = da.intersect(&dc);
+            assert!(m_ab.is_diffset() && m_ac.is_diffset(), "round {round}");
+            assert_eq!(m_ab.support(), ab.len());
+            assert_eq!(m_ac.support(), ac.len());
+            assert_eq!(da.intersect_support(&db), ab.len());
+
+            // next level: d(abc) = d(ac) \ d(ab), support via subtraction
+            let m_abc = m_ab.intersect(&m_ac);
+            assert_eq!(m_abc.support(), abc.len(), "round {round}");
+            assert_eq!(m_ab.intersect_support(&m_ac), abc.len());
+
+            // bounded variants agree at / above / below the support
+            let sup = abc.len() as u32;
+            for min_sup in [1u32, sup.max(1), sup + 1] {
+                let want = (sup >= min_sup).then_some(sup);
+                assert_eq!(m_ab.intersect_support_min(&m_ac, min_sup), want);
+                let mut out = DiffTidset::empty();
+                assert_eq!(m_ab.intersect_into_min(&m_ac, min_sup, &mut out), want);
+                if let Some(s) = want {
+                    assert_eq!(out.support(), s as usize);
+                    assert!(out.is_diffset());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn diffset_edge_cases_empty_and_universe_dense() {
+        // universe-dense: both items in every transaction → diffsets empty
+        let all: Vec<u32> = (0..64).collect();
+        let da = DiffTidset::from_tids(&all, 64);
+        let db = DiffTidset::from_tids(&all, 64);
+        let m = da.intersect(&db);
+        assert_eq!(m.support(), 64);
+        match &m {
+            DiffTidset::Diff { diffs, support } => {
+                assert!(diffs.is_empty());
+                assert_eq!(*support, 64);
+            }
+            DiffTidset::Tids(_) => panic!("expected diffset form"),
+        }
+        // empty-diffset recursion: support carries through unchanged
+        let deeper = m.intersect(&m.clone());
+        assert_eq!(deeper.support(), 64);
+        // disjoint sets: the diffset is the whole prefix tidset
+        let evens: Vec<u32> = (0..64).step_by(2).collect();
+        let odds: Vec<u32> = (1..64).step_by(2).collect();
+        let de = DiffTidset::from_tids(&evens, 64);
+        let d0 = DiffTidset::from_tids(&odds, 64);
+        let disjoint = de.intersect(&d0);
+        assert_eq!(disjoint.support(), 0);
+        match &disjoint {
+            DiffTidset::Diff { diffs, .. } => assert_eq!(diffs.len(), evens.len()),
+            DiffTidset::Tids(_) => panic!("expected diffset form"),
+        }
+    }
+
+    #[test]
+    fn hybrid_mixed_reprs_agree_with_oracle() {
+        let mut rng = SplitMix64::new(0x5B1D);
+        let universe = 2_000;
+        // dense item → bitmap, sparse item → tid list (below 1/64 density)
+        let dense = random_sorted(&mut rng, universe, 0.4);
+        let sparse = random_sorted(&mut rng, universe, 0.005);
+        let hd = HybridTidset::from_tids(&dense, universe);
+        let hs = HybridTidset::from_tids(&sparse, universe);
+        assert_eq!(hd.repr_name(), "bits");
+        assert_eq!(hs.repr_name(), "tids");
+        let oracle = set_intersect(&dense, &sparse);
+        // mixed-variant intersection, both directions
+        assert_eq!(hd.intersect(&hs).to_tids(), oracle);
+        assert_eq!(hs.intersect(&hd).to_tids(), oracle);
+        assert_eq!(hd.intersect_support(&hs), oracle.len());
+        assert_eq!(hs.intersect_support(&hd), oracle.len());
+        let sup = oracle.len() as u32;
+        for min_sup in [1u32, sup.max(1), sup + 1] {
+            let want = (sup >= min_sup).then_some(sup);
+            assert_eq!(hd.intersect_support_min(&hs, min_sup), want);
+            assert_eq!(hs.intersect_support_min(&hd, min_sup), want);
+            let mut out = HybridTidset::empty();
+            assert_eq!(hs.intersect_into_min(&hd, min_sup, &mut out), want);
+            if want.is_some() {
+                assert_eq!(out.to_tids(), oracle);
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_adapt_class_switches_representations() {
+        // members at ~90% of the prefix support → diffset switch
+        let universe = 1_000;
+        let ptids: Vec<u32> = (0..1_000).collect();
+        let prefix = HybridTidset::from_tids(&ptids, universe);
+        let mut members: Vec<(Item, HybridTidset)> = (0..4u32)
+            .map(|i| {
+                let tids: Vec<u32> = (0..1_000).filter(|t| t % 10 != i).collect();
+                (i, HybridTidset::from_tids(&tids, universe))
+            })
+            .collect();
+        let supports: Vec<usize> = members.iter().map(|(_, ts)| ts.support()).collect();
+        HybridTidset::adapt_class(&prefix, &mut members, 0);
+        for ((_, ts), want) in members.iter().zip(&supports) {
+            assert_eq!(ts.repr_name(), "diff");
+            assert_eq!(ts.support(), *want);
+        }
+        // diffset classes stay diffset
+        let snapshot = members.clone();
+        HybridTidset::adapt_class(&prefix, &mut members, 1);
+        assert_eq!(members, snapshot);
+
+        // a sparse class flips bitmap members back to tid lists
+        let mut sparse_members: Vec<(Item, HybridTidset)> = (0..3u32)
+            .map(|i| {
+                let tids: Vec<u32> = (i..30).step_by(3).collect();
+                // force the bitmap form despite sparseness
+                let mut ts = HybridTidset::from_tids(&tids, universe);
+                ts.repr = HybridRepr::Bits(Bitmap::from_sorted_tids(&tids, universe));
+                (i, ts)
+            })
+            .collect();
+        let sparse_prefix = HybridTidset::from_tids(&(0..1000u32).collect::<Vec<_>>(), universe);
+        HybridTidset::adapt_class(&sparse_prefix, &mut sparse_members, 1);
+        for (_, ts) in &sparse_members {
+            assert_eq!(ts.repr_name(), "tids");
+        }
+    }
+
+    #[test]
+    fn kernel_counters_advance() {
+        let before = kernel::snapshot();
+        let a = VecTidset::from_tids(&(0..100).collect::<Vec<_>>(), 100);
+        let b = VecTidset::from_tids(&(50..100).collect::<Vec<_>>(), 100);
+        let _ = a.intersect(&b);
+        // hopeless bound: needs more than |b|
+        assert_eq!(a.intersect_support_min(&b, 80), None);
+        let delta = kernel::snapshot().since(&before);
+        assert!(delta.intersections >= 2, "{delta:?}");
+        assert!(delta.early_aborts >= 1, "{delta:?}");
+        assert!(delta.bytes_allocated >= 4 * 50, "{delta:?}");
+    }
+
+    #[test]
+    fn bounded_counts_match_unbounded_across_reprs() {
+        let mut rng = SplitMix64::new(0xABCD);
+        for _ in 0..30 {
+            let universe = 64 + rng.gen_range(256);
+            let a = random_sorted(&mut rng, universe, 0.5);
+            let b = random_sorted(&mut rng, universe, 0.5);
+            let sup = set_intersect(&a, &b).len() as u32;
+            let ba = BitmapTidset::from_tids(&a, universe);
+            let bb = BitmapTidset::from_tids(&b, universe);
+            for min_sup in [1u32, sup.max(1), sup + 1, sup + 100] {
+                let want = (sup >= min_sup).then_some(sup);
+                assert_eq!(ba.intersect_support_min(&bb, min_sup), want);
+            }
+        }
     }
 }

@@ -132,7 +132,11 @@ fn command_specs() -> Vec<CommandSpec> {
         vec![
             engine_flag(),
             FlagSpec::new("variant", "NAME", "legacy spelling of --engine (v1..v5 etc.)"),
-            FlagSpec::new("tidset", "R", "tidset representation (vec|bitmap|auto)"),
+            FlagSpec::new(
+                "tidset",
+                "R",
+                "tidset representation (vec|bitmap|diffset|hybrid|auto)",
+            ),
             FlagSpec::new(
                 "partitioner",
                 "S",
@@ -156,6 +160,12 @@ fn command_specs() -> Vec<CommandSpec> {
         minsup_flag(),
         FlagSpec::new("engines", "CSV", "engines to sweep (default: all registered)"),
         executor_flag(),
+        FlagSpec::new(
+            "tidset",
+            "R",
+            "restrict the tidset sweep to one representation \
+             (default: vec|bitmap|diffset|hybrid on the first backend)",
+        ),
         FlagSpec::new("out", "PATH", "machine-readable output (default BENCH_fim.json)"),
     ];
     bench_flags.extend(shared_flags());
@@ -448,6 +458,13 @@ fn run_mine(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
             );
         }
     }
+    println!(
+        "kernel: {} intersections, {} early-aborts, {} repr switches, ~{} B allocated",
+        report.kernel.intersections,
+        report.kernel.early_aborts,
+        report.kernel.repr_switches,
+        report.kernel.bytes_allocated
+    );
     Ok(())
 }
 
@@ -479,6 +496,17 @@ fn run_bench(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
         ],
         None => ExecutorRegistry::names().iter().map(|s| s.to_string()).collect(),
     };
+    // Tidset-representation sweep: on the *first* backend every
+    // tidset-sensitive engine (the Eclat family) runs once per concrete
+    // representation — those are the BENCH_fim.json rows the kernel
+    // perf trajectory tracks (diffset/hybrid vs the seed vec). The
+    // remaining backends and the representation-blind engines
+    // (apriori/fpgrowth) run vec-only. `--tidset R` restricts the whole
+    // sweep to R.
+    let repr_restrict = match args.get("tidset") {
+        Some(r) => Some(TidsetRepr::parse(r).map_err(anyhow::Error::msg)?),
+        None => None,
+    };
     let txns = dataset.generate_scaled(cfg.seed, cfg.scale);
     let min_sup = abs_min_sup(min_sup_frac, txns.len());
     println!(
@@ -493,57 +521,84 @@ fn run_bench(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
         cfg.cores
     );
     let mut rows: Vec<String> = Vec::new();
-    for backend in &backends {
+    for (backend_idx, backend) in backends.iter().enumerate() {
         for name in &engines {
-            let conf = conf_from_args(args, cfg)?.with_executor_backend(backend)?;
-            let sc = SparkletContext::try_new(conf)?;
-            let report = MiningSession::new(name.as_str())
-                .min_sup(min_sup)
-                .tri_matrix(dataset.tri_matrix_mode())
-                .p(cfg.p)
-                .run_vec(&sc, &txns)?;
-            let steals: usize = report.stages.iter().map(|s| s.steals).sum();
-            let queue_wait_ms: f64 = report.stages.iter().map(|s| s.queue_wait_ms).sum();
-            println!(
-                "  {:<14} {:<14} {:>7} itemsets {:>9.1} ms  {:>3} stages  \
-                 shuffle {:>8} rec / ~{:>10} B  {:>4} steals",
-                backend,
-                report.label,
-                report.result.len(),
-                report.wall_ms,
-                report.n_stages(),
-                report.shuffle_records(),
-                report.shuffle_bytes(),
-                steals
-            );
-            rows.push(format!(
-                "  {{\"engine\": \"{}\", \"label\": \"{}\", \"backend\": \"{}\", \
-                 \"dataset\": \"{}\", \"min_sup\": {}, \"min_sup_abs\": {}, \
-                 \"transactions\": {}, \"itemsets\": {}, \"wall_ms\": {:.3}, \
-                 \"stages\": {}, \"shuffle_records\": {}, \"shuffle_bytes\": {}, \
-                 \"steals\": {}, \"queue_wait_ms\": {:.3}}}",
-                report.engine,
-                report.label,
-                backend,
-                dataset.name(),
-                min_sup_frac,
-                min_sup,
-                txns.len(),
-                report.result.len(),
-                report.wall_ms,
-                report.n_stages(),
-                report.shuffle_records(),
-                report.shuffle_bytes(),
-                steals,
-                queue_wait_ms
-            ));
+            // capability-driven, so a newly registered tidset-bearing
+            // engine joins the repr sweep without CLI changes
+            let tidset_sensitive = EngineRegistry::get(name)
+                .map(|e| e.tidset_sensitive())
+                .unwrap_or(false);
+            let reprs: Vec<TidsetRepr> = match repr_restrict {
+                Some(r) => vec![r],
+                None if backend_idx == 0 && tidset_sensitive => {
+                    TidsetRepr::all_concrete().to_vec()
+                }
+                None => vec![TidsetRepr::Vec],
+            };
+            for repr in reprs {
+                let conf = conf_from_args(args, cfg)?.with_executor_backend(backend)?;
+                let sc = SparkletContext::try_new(conf)?;
+                let report = MiningSession::new(name.as_str())
+                    .min_sup(min_sup)
+                    .tidset(repr)
+                    .tri_matrix(dataset.tri_matrix_mode())
+                    .p(cfg.p)
+                    .run_vec(&sc, &txns)?;
+                let steals: usize = report.stages.iter().map(|s| s.steals).sum();
+                let queue_wait_ms: f64 = report.stages.iter().map(|s| s.queue_wait_ms).sum();
+                println!(
+                    "  {:<14} {:<14} {:<8} {:>7} itemsets {:>9.1} ms  {:>3} stages  \
+                     shuffle {:>8} rec / ~{:>10} B  {:>4} steals  {:>9} ∩ / {:>8} aborts",
+                    backend,
+                    report.label,
+                    repr.name(),
+                    report.result.len(),
+                    report.wall_ms,
+                    report.n_stages(),
+                    report.shuffle_records(),
+                    report.shuffle_bytes(),
+                    steals,
+                    report.kernel.intersections,
+                    report.kernel.early_aborts,
+                );
+                rows.push(format!(
+                    "  {{\"engine\": \"{}\", \"label\": \"{}\", \"backend\": \"{}\", \
+                     \"tidset\": \"{}\", \"dataset\": \"{}\", \"min_sup\": {}, \
+                     \"min_sup_abs\": {}, \"transactions\": {}, \"itemsets\": {}, \
+                     \"wall_ms\": {:.3}, \"stages\": {}, \"shuffle_records\": {}, \
+                     \"shuffle_bytes\": {}, \"steals\": {}, \"queue_wait_ms\": {:.3}, \
+                     \"kernel_intersections\": {}, \"kernel_early_aborts\": {}, \
+                     \"kernel_repr_switches\": {}, \"kernel_bytes_allocated\": {}}}",
+                    report.engine,
+                    report.label,
+                    backend,
+                    repr.name(),
+                    dataset.name(),
+                    min_sup_frac,
+                    min_sup,
+                    txns.len(),
+                    report.result.len(),
+                    report.wall_ms,
+                    report.n_stages(),
+                    report.shuffle_records(),
+                    report.shuffle_bytes(),
+                    steals,
+                    queue_wait_ms,
+                    report.kernel.intersections,
+                    report.kernel.early_aborts,
+                    report.kernel.repr_switches,
+                    report.kernel.bytes_allocated,
+                ));
+            }
         }
     }
     std::fs::write(&out_path, format!("[\n{}\n]\n", rows.join(",\n")))?;
     println!(
-        "wrote {out_path} ({} engines x {} backends)",
+        "wrote {out_path} ({} rows: {} engines x {} backends, tidset sweep on {})",
+        rows.len(),
         engines.len(),
-        backends.len()
+        backends.len(),
+        backends.first().map(String::as_str).unwrap_or("-"),
     );
     Ok(())
 }

@@ -19,12 +19,31 @@ impl Bitmap {
         }
     }
 
+    /// Build from a sorted tid list. Fills word-by-word — the bits of
+    /// one 32-tid word accumulate in a register and are stored once —
+    /// instead of paying the div/mod + read-modify-write of [`set`]
+    /// per tid. (`|=` on word changes keeps unsorted input correct
+    /// too; sorted input touches each word exactly once.)
+    ///
+    /// [`set`]: Self::set
     pub fn from_sorted_tids(tids: &[u32], nbits: usize) -> Self {
-        let mut b = Self::new(nbits);
+        debug_assert!(tids.iter().all(|&t| (t as usize) < nbits));
+        let mut words = vec![0u32; nbits.div_ceil(32)];
+        let mut wi = 0usize;
+        let mut acc = 0u32;
         for &t in tids {
-            b.set(t as usize);
+            let w = t as usize / 32;
+            if w != wi {
+                words[wi] |= acc;
+                wi = w;
+                acc = 0;
+            }
+            acc |= 1u32 << (t % 32);
         }
-        b
+        if acc != 0 {
+            words[wi] |= acc;
+        }
+        Self { words, nbits }
     }
 
     #[inline]
@@ -89,6 +108,31 @@ impl Bitmap {
         }
         out.nbits = self.nbits;
         count
+    }
+
+    /// `self & other` into `out` (resized to match) with popcount,
+    /// aborting — returning `None` — as soon as the remaining words,
+    /// even all-ones, cannot lift the count to `need`. `Some(count)`
+    /// means the AND *completed*; the count may still fall short of
+    /// `need` (callers decide). The bound is probed every 8 words so
+    /// the hot loop stays branch-light. On `None`, `out` holds a
+    /// partial result but its storage stays reusable.
+    pub fn and_into_min(&self, other: &Self, need: usize, out: &mut Self) -> Option<usize> {
+        debug_assert_eq!(self.words.len(), other.words.len());
+        let n = self.words.len().min(other.words.len());
+        out.nbits = self.nbits;
+        out.words.clear();
+        out.words.reserve(n);
+        let mut count = 0usize;
+        for (i, (&a, &b)) in self.words.iter().zip(&other.words).enumerate() {
+            let w = a & b;
+            count += w.count_ones() as usize;
+            out.words.push(w);
+            if i & 7 == 7 && count + (n - i - 1) * 32 < need {
+                return None;
+            }
+        }
+        Some(count)
     }
 
     /// Popcount of the intersection without materializing it — used when
@@ -192,6 +236,39 @@ mod tests {
         let tids = vec![1u32, 5, 31, 32, 99];
         let b = Bitmap::from_sorted_tids(&tids, 128);
         assert_eq!(b.to_tids(), tids);
+        // word-boundary edges: first/last bit of a word, last bit overall
+        let edges = vec![0u32, 31, 32, 63, 64, 95, 127];
+        let be = Bitmap::from_sorted_tids(&edges, 128);
+        assert_eq!(be.to_tids(), edges);
+        // matches the set()-built bitmap exactly
+        let mut by_set = Bitmap::new(128);
+        edges.iter().for_each(|&t| by_set.set(t as usize));
+        assert_eq!(be, by_set);
+        // empty input
+        assert!(Bitmap::from_sorted_tids(&[], 77).is_empty());
+    }
+
+    #[test]
+    fn and_into_min_bound_and_completion() {
+        let n = 1024; // 32 words: enough for the every-8-words probe
+        let mut rng = crate::util::SplitMix64::new(0xAB);
+        let a_tids: Vec<u32> = (0..n as u32).filter(|_| rng.gen_bool(0.1)).collect();
+        let b_tids: Vec<u32> = (0..n as u32).filter(|_| rng.gen_bool(0.1)).collect();
+        let a = Bitmap::from_sorted_tids(&a_tids, n);
+        let b = Bitmap::from_sorted_tids(&b_tids, n);
+        let want = a.and_count(&b);
+        let mut out = Bitmap::new(0);
+        // generous need: completes with the exact count and bitmap
+        assert_eq!(a.and_into_min(&b, want, &mut out), Some(want));
+        assert_eq!(out, a.and(&b));
+        // impossible need on sparse maps: the remaining-popcount bound
+        // fires at the first probe (word 7: count + 24*32 < 1000)
+        assert_eq!(a.and_into_min(&b, 1000, &mut out), None);
+        // small maps (< 8 words) never probe but still complete
+        let s1 = Bitmap::from_sorted_tids(&[1, 2, 3], 64);
+        let s2 = Bitmap::from_sorted_tids(&[2, 3, 4], 64);
+        let mut sout = Bitmap::new(0);
+        assert_eq!(s1.and_into_min(&s2, 60, &mut sout), Some(2));
     }
 
     #[test]

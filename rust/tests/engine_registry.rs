@@ -38,10 +38,16 @@ fn registry_exposes_the_full_paper_family() {
 #[test]
 fn prop_full_registry_agrees_with_oracle_across_axes() {
     let sc = SparkletContext::local(2);
-    forall(6, gen::database(20, 8, 0.35), |db| {
+    forall(4, gen::database(20, 8, 0.35), |db| {
         let oracle = eclat_sequential(db, 2);
         for engine in EngineRegistry::names() {
-            for repr in [TidsetRepr::Vec, TidsetRepr::Bitmap] {
+            for repr in [
+                TidsetRepr::Vec,
+                TidsetRepr::Bitmap,
+                TidsetRepr::Diffset,
+                TidsetRepr::Hybrid,
+                TidsetRepr::Auto,
+            ] {
                 for strategy in [PartitionStrategy::Weighted, PartitionStrategy::EngineDefault] {
                     let got = MiningSession::new(engine)
                         .min_sup(2)
@@ -80,10 +86,16 @@ fn prop_engines_agree_with_oracle_under_every_executor_backend() {
             .with_executor_backend(backend)
             .unwrap();
         let sc = SparkletContext::new(conf);
-        forall(3, gen::database(16, 7, 0.35), |db| {
+        forall(2, gen::database(16, 7, 0.35), |db| {
             let oracle = eclat_sequential(db, 2);
             for engine in EngineRegistry::names() {
-                for repr in [TidsetRepr::Vec, TidsetRepr::Bitmap] {
+                for repr in [
+                    TidsetRepr::Vec,
+                    TidsetRepr::Bitmap,
+                    TidsetRepr::Diffset,
+                    TidsetRepr::Hybrid,
+                    TidsetRepr::Auto,
+                ] {
                     let got = MiningSession::new(engine)
                         .min_sup(2)
                         .tidset(repr)
@@ -154,6 +166,39 @@ fn newly_registered_engine_joins_the_agreement_sweep() {
             got.result.same_as(&eclat_sequential(&db, 2)),
             "{engine} disagrees after registration"
         );
+    }
+}
+
+#[test]
+fn kernel_counters_populate_reports_per_repr() {
+    // Every representation reports kernel work; the adaptive ones can
+    // additionally report representation switches on a dense database.
+    let sc = SparkletContext::local(2);
+    let db: Vec<Transaction> = (0..12u32)
+        .map(|i| {
+            let mut t = vec![1, 2, 3, 4, 5];
+            t.push(6 + i % 3);
+            t
+        })
+        .collect();
+    for repr in [
+        TidsetRepr::Vec,
+        TidsetRepr::Bitmap,
+        TidsetRepr::Diffset,
+        TidsetRepr::Hybrid,
+    ] {
+        let report = MiningSession::new("eclat-v3")
+            .min_sup(2)
+            .tidset(repr)
+            .run_vec(&sc, &db)
+            .unwrap();
+        assert!(
+            report.kernel.intersections > 0,
+            "{}: {:?}",
+            repr.name(),
+            report.kernel
+        );
+        assert!(report.result.same_as(&eclat_sequential(&db, 2)), "{}", repr.name());
     }
 }
 

@@ -2,7 +2,7 @@
 //! proptest is unavailable offline): distributed == sequential, FIM
 //! invariants, RDD semantics vs Vec oracles.
 
-use rdd_eclat::fim::engine::MiningSession;
+use rdd_eclat::fim::engine::{MiningSession, TidsetRepr};
 use rdd_eclat::fim::sequential::{apriori_sequential, eclat_sequential};
 use rdd_eclat::sparklet::{PairRdd, SparkletContext};
 use rdd_eclat::util::prop::{forall, forall_shrink, gen};
@@ -29,6 +29,31 @@ fn prop_every_variant_equals_oracle() {
                 })
         },
     );
+}
+
+#[test]
+fn prop_diffset_and_hybrid_kernels_equal_oracle() {
+    // The dEclat subtraction kernel and the per-class adaptive kernel
+    // must be invisible at the result level, across variants including
+    // the 2-prefix fused V6 (whose decomposition also runs diffsets).
+    let sc = SparkletContext::local(2);
+    forall(12, gen::database(25, 8, 0.45), |db| {
+        let oracle = eclat_sequential(db, 2);
+        ["eclat-v2", "eclat-v4", "eclat-v6"].into_iter().all(|engine| {
+            [TidsetRepr::Diffset, TidsetRepr::Hybrid]
+                .into_iter()
+                .all(|repr| {
+                    MiningSession::new(engine)
+                        .min_sup(2)
+                        .tidset(repr)
+                        .p(3)
+                        .run_vec(&sc, db)
+                        .unwrap()
+                        .result
+                        .same_as(&oracle)
+                })
+        })
+    });
 }
 
 #[test]
