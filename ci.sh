@@ -28,25 +28,58 @@ assert rows, "bench smoke wrote an empty BENCH_fim.json"
 assert all("engine" in r and "backend" in r and "wall_ms" in r for r in rows), rows[:1]
 backends = {r["backend"] for r in rows}
 assert {"fifo", "work-stealing", "sequential"} <= backends, backends
-# kernel counters: present and non-negative integers on every row
+# kernel counters + exact shuffle/spill/backpressure fields: present and
+# sane on every row (the serialized-block data plane reports exact
+# bytes, spill counters, and AIMD backpressure state)
 counters = [
     "kernel_intersections",
     "kernel_early_aborts",
     "kernel_repr_switches",
     "kernel_bytes_allocated",
+    "shuffle_bytes",
+    "spilled_blocks",
+    "spill_reloads",
+    "bp_shrinks",
+    "bp_recoveries",
+    "bp_watermark_bytes",
 ]
 for r in rows:
     assert "tidset" in r, r
+    assert "memory_budget_mb" in r and "bp_effective_batch" in r, r
     for k in counters:
         assert k in r, (k, r)
         assert isinstance(r[k], int) and r[k] >= 0, (k, r[k])
 # the tidset sweep must cover the full representation axis
 tidsets = {r["tidset"] for r in rows}
 assert {"vec", "bitmap", "diffset", "hybrid"} <= tidsets, tidsets
+# the streaming backpressure probe row rides along
+probe = [r for r in rows if r["engine"] == "incremental-stream"]
+assert probe, "missing incremental-stream backpressure probe row"
+assert all(r["bp_watermark_bytes"] > 0 for r in probe), probe
 print(
     f"BENCH_fim.json OK: {len(rows)} rows, backends: {sorted(backends)}, "
-    f"tidsets: {sorted(tidsets)}"
+    f"tidsets: {sorted(tidsets)}, bp probe rows: {len(probe)}"
 )
+EOF
+
+echo "== bench smoke under a constrained memory budget (spill path)"
+# One engine, larger dataset slice, 1 MiB shuffle budget: blocks must
+# actually spill to disk and the run must still complete correctly.
+# BENCH_SPILL_SCALE overrides the dataset scale (default 0.5, ~50k
+# transactions — enough serialized shuffle volume to exceed 1 MiB).
+REPRO_SCALE="${BENCH_SPILL_SCALE:-0.5}" SPARKLET_MEMORY_MB=1 cargo run --release --quiet -- \
+    bench --dataset t10 --min-sup 0.02 --engines eclat-v1 --executor fifo \
+    --tidset vec --out BENCH_spill.json
+python3 - <<'EOF'
+import json
+rows = json.load(open("BENCH_spill.json"))
+assert rows, "constrained bench wrote an empty BENCH_spill.json"
+batch = [r for r in rows if r["engine"] != "incremental-stream"]
+assert batch and all(r["memory_budget_mb"] == 1 for r in batch), batch
+spilled = sum(r["spilled_blocks"] for r in rows)
+reloads = sum(r["spill_reloads"] for r in rows)
+assert spilled > 0, f"1 MiB budget never spilled a block: {rows}"
+print(f"spill smoke OK: {spilled} blocks spilled / {reloads} reloads under a 1 MiB budget")
 EOF
 
 echo "== micro-bench smoke (diffset kernel)"

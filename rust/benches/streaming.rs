@@ -14,7 +14,7 @@ use std::collections::VecDeque;
 use rdd_eclat::coordinator::ExperimentConfig;
 use rdd_eclat::data::Dataset;
 use rdd_eclat::fim::engine::MiningSession;
-use rdd_eclat::fim::streaming::{IncrementalEclat, StreamingEclatConfig};
+use rdd_eclat::fim::streaming::{BackpressureConfig, IncrementalEclat, StreamingEclatConfig};
 use rdd_eclat::fim::types::abs_min_sup;
 use rdd_eclat::fim::Transaction;
 use rdd_eclat::sparklet::metrics::StageKind;
@@ -159,4 +159,55 @@ fn main() {
             "multi-core run never dispatched >1 border-recomputation task"
         );
     }
+
+    // Backpressure sweep: synthetic byte inflation per accepted
+    // transaction, increasing pressure left to right. The controller's
+    // steady-state effective batch must shrink as bytes/txn grows.
+    println!("backpressure steady state (offered batch {BATCH_TXNS}, watermark 64 KiB):");
+    let mut prev_limit = usize::MAX;
+    for bytes_per_txn in [16u64, 64, 256] {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use std::sync::Arc;
+        let counter = Arc::new(AtomicU64::new(0));
+        let probe = Arc::clone(&counter);
+        let mut miner = IncrementalEclat::new(
+            StreamingEclatConfig::new(min_sup, WINDOW, WINDOW)
+                .with_backpressure(BackpressureConfig::new(64 * 1024).with_min_batch(64)),
+        )
+        .with_byte_source(move || probe.load(Ordering::Relaxed));
+        let mut last_limit = None;
+        for t in 0..24 {
+            let b = gen_backpressure_batch(t);
+            let out = miner.push_batch(&b).unwrap();
+            counter.fetch_add(bytes_per_txn * out.accepted as u64, Ordering::Relaxed);
+            last_limit = out.effective_limit;
+        }
+        let report = miner.report();
+        let bp = report.backpressure.unwrap();
+        let limit = last_limit.unwrap_or(usize::MAX);
+        println!(
+            "  {bytes_per_txn:>4} B/txn: limit {:>10}  {} shrinks / {} recoveries, \
+             {} deferred",
+            if limit == usize::MAX { "uncapped".to_string() } else { limit.to_string() },
+            bp.shrinks,
+            bp.recoveries,
+            bp.deferred,
+        );
+        assert!(
+            limit <= prev_limit,
+            "more byte pressure must not raise the steady-state limit"
+        );
+        prev_limit = limit;
+    }
+}
+
+/// Deterministic small batch for the backpressure sweep (contents don't
+/// matter — the synthetic byte probe drives the controller).
+fn gen_backpressure_batch(t: usize) -> Vec<Transaction> {
+    (0..BATCH_TXNS)
+        .map(|i| {
+            let x = (t * BATCH_TXNS + i) as u32;
+            vec![x % 7, x % 11 + 7, x % 13 + 18]
+        })
+        .collect()
 }

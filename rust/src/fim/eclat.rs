@@ -21,6 +21,7 @@
 use std::sync::Arc;
 
 use crate::sparklet::accumulator::AccumValue;
+use crate::sparklet::metrics::StageKind;
 use crate::sparklet::{PairRdd, Rdd, SparkletContext};
 use crate::util::hash::FxHashMap;
 
@@ -267,7 +268,12 @@ fn phase_classes<TS: TidOps>(
         Placement::Fixed(p) => p,
         Placement::Weighted(p) => {
             let weights: Vec<usize> = classes.iter().map(|(_, c)| c.weight()).collect();
-            partitioners::weighted_partitioner(&weights, p)
+            // EWMA reweighting hook: per-partition cost feedback from
+            // the previous run/window's recorded stages (task times +
+            // queue wait), so LPT placement learns instead of trusting
+            // static member-count weights alone.
+            let costs = sc.metrics().partition_cost_weights(p);
+            partitioners::weighted_partitioner_with_costs(&weights, p, costs.as_deref())
         }
     };
     let ecs = sc
@@ -280,6 +286,15 @@ fn phase_classes<TS: TidOps>(
         acc
     });
     out.extend(deeper.collect());
+    // Feed the Bottom-Up stage's per-partition execution signal back
+    // into the EWMA the weighted partitioner reads next run. The stage
+    // just recorded by `collect()` is the per-class Result stage.
+    if let Some(stage) = sc.metrics().last_stage() {
+        if stage.kind == StageKind::Result {
+            sc.metrics()
+                .observe_partition_costs(&stage.task_millis, stage.queue_wait_ms);
+        }
+    }
     out
 }
 
@@ -544,6 +559,25 @@ mod tests {
                     variant.name(),
                     strategy.name()
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn weighted_feedback_keeps_results_exact_across_runs() {
+        // Consecutive Weighted runs on one context exercise the EWMA
+        // reweighting hook (run N+1 places classes using run N's
+        // observed per-partition costs); placement must never change
+        // results.
+        let sc = SparkletContext::local(2);
+        let oracle = eclat_sequential(&demo_db(), 2);
+        let cfg = MiningConfig::new(2)
+            .with_partitioning(PartitionStrategy::Weighted)
+            .with_p(3);
+        for run in 0..3 {
+            for variant in [EclatVariant::V3, EclatVariant::V6Fused] {
+                let got = mine_vec(&sc, demo_db(), variant, &cfg);
+                assert!(got.same_as(&oracle), "run {run} {}", variant.name());
             }
         }
     }

@@ -655,15 +655,21 @@ impl MiningReport {
         self.stages.iter().map(|s| s.shuffle_records).sum()
     }
 
+    /// Exact serialized shuffle bytes across the run's stages.
     pub fn shuffle_bytes(&self) -> u64 {
         self.stages.iter().map(|s| s.shuffle_bytes).sum()
+    }
+
+    /// Shuffle blocks spilled to disk under the memory budget.
+    pub fn spilled_blocks(&self) -> u64 {
+        self.stages.iter().map(|s| s.spilled_blocks).sum()
     }
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
             "{}: {} itemsets (max length {}) in {:.1} ms — {} stages, \
-             shuffle {} records / ~{} bytes, kernel {} ∩ \
+             shuffle {} records / {} bytes, kernel {} ∩ \
              ({} early-aborts, {} repr switches)",
             self.label,
             self.result.len(),

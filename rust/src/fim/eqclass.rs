@@ -10,6 +10,7 @@
 use super::tidset::TidOps;
 use super::trimatrix::TriMatrix;
 use super::types::{FrequentItemset, Item};
+use crate::sparklet::serde::{Reader, SerDe, SerDeError};
 
 /// An equivalence class: all member itemsets share `prefix`; a member is
 /// (last item, tidset of `prefix ∪ {item}`).
@@ -24,6 +25,21 @@ impl<TS> EquivalenceClass<TS> {
     /// members generate more candidates (the paper's §4.4 measure).
     pub fn weight(&self) -> usize {
         self.members.len()
+    }
+}
+
+/// Classes are the payload of the Phase-3/4 `partitionBy` shuffle, so
+/// they serialize generically over the tidset representation.
+impl<TS: SerDe> SerDe for EquivalenceClass<TS> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.prefix.encode(out);
+        self.members.encode(out);
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<Self, SerDeError> {
+        Ok(Self {
+            prefix: Vec::decode(r)?,
+            members: Vec::decode(r)?,
+        })
     }
 }
 

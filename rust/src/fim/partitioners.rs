@@ -49,17 +49,47 @@ pub fn reverse_hash_partitioner(p: usize) -> Arc<FnPartitioner<usize>> {
 /// Requires the weights up front (the driver has them after class
 /// construction), returns an explicit rank→partition table.
 pub fn weighted_partitioner(weights: &[usize], p: usize) -> Arc<FnPartitioner<usize>> {
+    weighted_partitioner_with_costs(weights, p, None)
+}
+
+/// [`weighted_partitioner`] with per-partition cost feedback: `costs[m]`
+/// is partition `m`'s observed relative cost per unit of weight
+/// (normalized EWMA from `MetricsRegistry::partition_cost_weights`,
+/// mean 1.0 — fed by the previous run/window's per-stage task times,
+/// queue wait, and steal-induced imbalance). The LPT greedy places each
+/// class on the partition with the smallest *effective* completion time
+/// `(load + weight) × cost`, so a partition that ran hot last time gets
+/// proportionally less work this time. `None` (or a uniform vector)
+/// degrades to plain LPT.
+pub fn weighted_partitioner_with_costs(
+    weights: &[usize],
+    p: usize,
+    costs: Option<&[f64]>,
+) -> Arc<FnPartitioner<usize>> {
     let p = p.max(1);
+    let cost_of = |m: usize| -> f64 {
+        costs
+            .and_then(|c| c.get(m))
+            .copied()
+            .unwrap_or(1.0)
+            .max(1e-6)
+    };
     // LPT: sort class ranks by descending weight, place each on the
-    // least-loaded partition.
+    // partition with the least effective (cost-scaled) completion time.
     let mut order: Vec<usize> = (0..weights.len()).collect();
     order.sort_by_key(|&r| std::cmp::Reverse(weights[r]));
-    let mut load = vec![0usize; p];
+    let mut load = vec![0.0f64; p];
     let mut table = vec![0usize; weights.len()];
     for r in order {
-        let target = (0..p).min_by_key(|&m| load[m]).unwrap();
+        let target = (0..p)
+            .min_by(|&a, &b| {
+                let ta = (load[a] + weights[r] as f64) * cost_of(a);
+                let tb = (load[b] + weights[r] as f64) * cost_of(b);
+                ta.partial_cmp(&tb).unwrap()
+            })
+            .unwrap();
         table[r] = target;
-        load[target] += weights[r];
+        load[target] += weights[r] as f64;
     }
     Arc::new(FnPartitioner::new(p, move |rank: &usize| {
         table.get(*rank).copied().unwrap_or(rank % p)
@@ -147,6 +177,40 @@ mod tests {
         let wb = balance_ratio(&weights, |rank| w.partition(&rank), p);
         assert!(wb <= hb && wb <= rb, "LPT {wb:.3} vs hash {hb:.3} / rev {rb:.3}");
         assert!(wb < 1.2, "LPT should be near-balanced: {wb:.3}");
+    }
+
+    #[test]
+    fn cost_feedback_shifts_load_off_slow_partitions() {
+        // Uniform class weights, but partition 0 observed 3x the cost
+        // per unit of work last run: the cost-aware LPT must hand it
+        // proportionally less weight than the uniform partitions get.
+        let weights = vec![10usize; 30];
+        let p = 3;
+        let costs = vec![3.0, 1.0, 1.0];
+        let w = weighted_partitioner_with_costs(&weights, p, Some(&costs));
+        let mut per_part = vec![0usize; p];
+        for (rank, &wt) in weights.iter().enumerate() {
+            per_part[w.partition(&rank)] += wt;
+        }
+        assert!(
+            per_part[0] < per_part[1] && per_part[0] < per_part[2],
+            "slow partition kept its share: {per_part:?}"
+        );
+        // effective makespan (load x cost) stays near-balanced
+        let eff: Vec<f64> = per_part
+            .iter()
+            .zip(&costs)
+            .map(|(&l, &c)| l as f64 * c)
+            .collect();
+        let max = eff.iter().cloned().fold(0.0, f64::max);
+        let min = eff.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min.max(1.0) < 2.0, "effective loads skewed: {eff:?}");
+        // uniform feedback degrades to plain LPT (identical tables)
+        let plain = weighted_partitioner(&weights, p);
+        let uniform = weighted_partitioner_with_costs(&weights, p, Some(&[1.0, 1.0, 1.0]));
+        for rank in 0..weights.len() {
+            assert_eq!(plain.partition(&rank), uniform.partition(&rank));
+        }
     }
 
     #[test]

@@ -45,6 +45,15 @@
 //! records a `StageKind::Streaming` entry in the context's
 //! `StageMetrics`. Without a context (or on a single-core executor)
 //! the driver-side sequential path runs, bit-identical.
+//!
+//! **Backpressure.** With [`StreamingEclatConfig::with_backpressure`]
+//! the miner runs an AIMD controller on the **exact** shuffle-byte
+//! signal of the serialized block data plane: when the bytes moved per
+//! batch exceed the watermark, [`IncrementalEclat::push_batch`] halves
+//! its effective batch size (deferring — never dropping — the tail to
+//! later pushes) and recovers additively on calm batches. The
+//! controller's counters are surfaced in [`StreamingReport`]
+//! ([`IncrementalEclat::report`]).
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -97,6 +106,12 @@ pub struct StreamingEclatConfig {
     pub window: usize,
     /// Slide length in batches (`slide == window` ⇒ tumbling).
     pub slide: usize,
+    /// Optional AIMD ingest backpressure (off by default — see
+    /// [`BackpressureConfig`]). When on, `push_batch` may defer the tail
+    /// of a batch to later pushes, so windows cover *accepted*
+    /// transactions; cross-check scaffolds that replay raw batches
+    /// require it off.
+    pub backpressure: Option<BackpressureConfig>,
 }
 
 impl StreamingEclatConfig {
@@ -108,6 +123,214 @@ impl StreamingEclatConfig {
             min_sup,
             window,
             slide,
+            backpressure: None,
+        }
+    }
+
+    /// Enable AIMD ingest backpressure.
+    pub fn with_backpressure(mut self, cfg: BackpressureConfig) -> Self {
+        self.backpressure = Some(cfg);
+        self
+    }
+}
+
+/// AIMD backpressure knobs. The controller watches the **exact** shuffle
+/// bytes the engine moved since the previous push (the serialized-block
+/// data plane makes the signal exact, not a `size_of` estimate): when
+/// bytes/batch exceeds `watermark_bytes`, the effective batch size is
+/// halved (multiplicative decrease, floored at `min_batch`); every calm
+/// batch recovers it by `increase_step` (additive increase). Transactions
+/// over the limit are not dropped — they are deferred to later pushes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BackpressureConfig {
+    /// Shuffle bytes per batch above which the controller shrinks.
+    pub watermark_bytes: u64,
+    /// Floor for the effective batch size.
+    pub min_batch: usize,
+    /// Additive recovery per calm batch.
+    pub increase_step: usize,
+}
+
+impl BackpressureConfig {
+    pub fn new(watermark_bytes: u64) -> Self {
+        Self {
+            watermark_bytes,
+            min_batch: 16,
+            increase_step: 16,
+        }
+    }
+
+    pub fn with_min_batch(mut self, n: usize) -> Self {
+        self.min_batch = n.max(1);
+        self
+    }
+
+    pub fn with_increase_step(mut self, n: usize) -> Self {
+        self.increase_step = n.max(1);
+        self
+    }
+}
+
+/// What one `push_batch` call did under backpressure (without it:
+/// everything accepted, nothing deferred, no limit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PushOutcome {
+    /// Transactions ingested by this push (carried-over ones included).
+    pub accepted: usize,
+    /// Transactions deferred to later pushes.
+    pub deferred: usize,
+    /// Current effective batch limit (`None` = uncapped).
+    pub effective_limit: Option<usize>,
+}
+
+/// Backpressure counters surfaced in [`StreamingReport`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct BackpressureStats {
+    /// Multiplicative decreases applied (byte watermark exceeded).
+    pub shrinks: u64,
+    /// Additive increases applied (calm batches while capped).
+    pub recoveries: u64,
+    /// Current effective batch limit (`None` = uncapped).
+    pub effective_limit: Option<usize>,
+    /// Transactions currently deferred.
+    pub deferred: usize,
+    /// Shuffle bytes observed for the last completed batch interval.
+    pub last_bytes_per_batch: u64,
+    /// The configured watermark.
+    pub watermark_bytes: u64,
+}
+
+/// Summary of a streaming mine: work counters plus (when enabled) the
+/// backpressure controller's state.
+#[derive(Debug, Clone)]
+pub struct StreamingReport {
+    pub stats: StreamStats,
+    pub backpressure: Option<BackpressureStats>,
+}
+
+impl std::fmt::Display for StreamingReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.stats)?;
+        if let Some(bp) = &self.backpressure {
+            let limit = match bp.effective_limit {
+                Some(l) => l.to_string(),
+                None => "uncapped".to_string(),
+            };
+            write!(
+                f,
+                "; backpressure: {} shrinks, {} recoveries, batch limit {}, \
+                 {} deferred, {} B/batch (watermark {} B)",
+                bp.shrinks,
+                bp.recoveries,
+                limit,
+                bp.deferred,
+                bp.last_bytes_per_batch,
+                bp.watermark_bytes
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Internal AIMD controller state.
+struct Backpressure {
+    cfg: BackpressureConfig,
+    /// Effective batch limit (`None` = uncapped).
+    limit: Option<usize>,
+    /// Transactions deferred by earlier pushes (FIFO, ingested first).
+    carry: Vec<Transaction>,
+    /// Size of the last accepted batch (basis for the first shrink).
+    last_accepted: usize,
+    /// Byte counter mark at the previous push.
+    bytes_mark: u64,
+    /// Whether `bytes_mark` is primed (first push only observes).
+    primed: bool,
+    last_delta: u64,
+    shrinks: u64,
+    recoveries: u64,
+}
+
+/// One AIMD control decision, computed side-effect-free by
+/// [`Backpressure::plan`] and applied by [`Backpressure::commit`] only
+/// after the push validates — so a `TidOverflow` error really leaves
+/// the miner (controller included) untouched.
+struct ControlPlan {
+    bytes_now: u64,
+    delta: u64,
+    limit: Option<usize>,
+    shrank: bool,
+    recovered: bool,
+}
+
+impl Backpressure {
+    fn new(cfg: BackpressureConfig) -> Self {
+        Self {
+            cfg,
+            limit: None,
+            carry: Vec::new(),
+            last_accepted: 0,
+            bytes_mark: 0,
+            primed: false,
+            last_delta: 0,
+            shrinks: 0,
+            recoveries: 0,
+        }
+    }
+
+    /// Decide the AIMD step for the bytes observed since the last push,
+    /// without mutating any state.
+    fn plan(&self, bytes_now: u64) -> ControlPlan {
+        if !self.primed {
+            return ControlPlan {
+                bytes_now,
+                delta: self.last_delta,
+                limit: self.limit,
+                shrank: false,
+                recovered: false,
+            };
+        }
+        let delta = bytes_now.wrapping_sub(self.bytes_mark);
+        if delta > self.cfg.watermark_bytes {
+            let base = match self.limit {
+                Some(l) => l,
+                None => self.last_accepted.max(self.cfg.min_batch),
+            };
+            ControlPlan {
+                bytes_now,
+                delta,
+                limit: Some((base / 2).max(self.cfg.min_batch)),
+                shrank: true,
+                recovered: false,
+            }
+        } else {
+            ControlPlan {
+                bytes_now,
+                delta,
+                limit: self.limit.map(|l| l.saturating_add(self.cfg.increase_step)),
+                shrank: false,
+                recovered: self.limit.is_some(),
+            }
+        }
+    }
+
+    /// Apply a planned control step (only on a successful push).
+    fn commit(&mut self, plan: &ControlPlan) {
+        self.last_delta = plan.delta;
+        self.limit = plan.limit;
+        self.shrinks += plan.shrank as u64;
+        self.recoveries += plan.recovered as u64;
+        self.bytes_mark = plan.bytes_now;
+        self.primed = true;
+    }
+
+    fn stats(&self) -> BackpressureStats {
+        BackpressureStats {
+            shrinks: self.shrinks,
+            recoveries: self.recoveries,
+            effective_limit: self.limit,
+            deferred: self.carry.len(),
+            last_bytes_per_batch: self.last_delta,
+            watermark_bytes: self.cfg.watermark_bytes,
         }
     }
 }
@@ -158,6 +381,11 @@ pub struct IncrementalEclat {
     /// dispatches one task per top-level equivalence class through the
     /// context's executor backend instead of the driver thread.
     ctx: Option<SparkletContext>,
+    /// AIMD ingest controller (None when backpressure is off).
+    bp: Option<Backpressure>,
+    /// Override for the shuffle-byte probe (tests / synthetic
+    /// workloads); default reads the context's exact shuffle counter.
+    byte_source: Option<Arc<dyn Fn() -> u64 + Send + Sync>>,
 }
 
 /// Immutable per-window mining context.
@@ -174,6 +402,7 @@ struct WindowCtx<'a> {
 
 impl IncrementalEclat {
     pub fn new(cfg: StreamingEclatConfig) -> Self {
+        let bp = cfg.backpressure.clone().map(Backpressure::new);
         Self {
             cfg,
             next_tid: 0,
@@ -185,6 +414,8 @@ impl IncrementalEclat {
             has_mined: false,
             stats: StreamStats::default(),
             ctx: None,
+            bp,
+            byte_source: None,
         }
     }
 
@@ -201,12 +432,39 @@ impl IncrementalEclat {
         self.ctx = Some(sc);
     }
 
+    /// Override where the backpressure controller reads its shuffle-byte
+    /// signal from (default: the wired context's exact
+    /// `ShuffleManager::bytes_written`). The probe must be monotone
+    /// non-decreasing; the controller works on deltas between pushes.
+    pub fn with_byte_source(mut self, f: impl Fn() -> u64 + Send + Sync + 'static) -> Self {
+        self.byte_source = Some(Arc::new(f));
+        self
+    }
+
+    fn shuffle_bytes_now(&self) -> u64 {
+        if let Some(f) = &self.byte_source {
+            f()
+        } else if let Some(sc) = &self.ctx {
+            sc.shuffle_manager().bytes_written()
+        } else {
+            0
+        }
+    }
+
     pub fn config(&self) -> &StreamingEclatConfig {
         &self.cfg
     }
 
     pub fn stats(&self) -> &StreamStats {
         &self.stats
+    }
+
+    /// Work counters plus the backpressure controller's state.
+    pub fn report(&self) -> StreamingReport {
+        StreamingReport {
+            stats: self.stats.clone(),
+            backpressure: self.bp.as_ref().map(Backpressure::stats),
+        }
     }
 
     /// Total batches ingested so far.
@@ -230,31 +488,70 @@ impl IncrementalEclat {
     /// Ingest one batch: assign global tids and fold the batch's vertical
     /// representation into the per-item window tidsets.
     ///
+    /// With backpressure enabled ([`StreamingEclatConfig::with_backpressure`])
+    /// this is also the AIMD control point: the exact shuffle bytes
+    /// observed since the previous push drive a multiplicative shrink /
+    /// additive recovery of the *effective* batch size, and transactions
+    /// past the limit are deferred (FIFO) to later pushes — never
+    /// dropped. The [`PushOutcome`] says what happened.
+    ///
     /// Fails with [`StreamingError::TidOverflow`] at the documented
     /// ~4.3 B-transaction limit instead of wrapping and silently
     /// corrupting the sorted-tid invariant; on error the miner state is
     /// untouched, so callers can checkpoint/rotate and continue.
-    pub fn push_batch(&mut self, txns: &[Transaction]) -> Result<(), StreamingError> {
+    pub fn push_batch(&mut self, txns: &[Transaction]) -> Result<PushOutcome, StreamingError> {
+        // Plan the control step first (side-effect-free): bytes moved
+        // since the previous push are that batch's processing cost (its
+        // mine + downstream jobs). The plan commits only after the push
+        // validates, so an error leaves the controller untouched too.
+        let bytes_now = self.shuffle_bytes_now();
+        let plan = self.bp.as_ref().map(|bp| bp.plan(bytes_now));
+        let limit = plan
+            .as_ref()
+            .map_or(usize::MAX, |p| p.limit.unwrap_or(usize::MAX));
+        let carried = self.bp.as_ref().map_or(0, |bp| bp.carry.len());
+        let accepted = (carried + txns.len()).min(limit);
+
+        // Validate the tid range before touching any state.
         let start = self.next_tid;
         let overflow = || StreamingError::TidOverflow {
-            next_tid: self.next_tid,
-            batch_len: txns.len(),
+            next_tid: start,
+            batch_len: accepted,
         };
-        let len = u32::try_from(txns.len()).map_err(|_| overflow())?;
+        let len = u32::try_from(accepted).map_err(|_| overflow())?;
         let end = start.checked_add(len).ok_or_else(overflow)?;
-        for (i, t) in txns.iter().enumerate() {
-            let tid = start + i as u32;
+
+        let mut ingest = |t: &Transaction, tid: u32| {
             let mut items = t.clone();
             items.sort_unstable();
             items.dedup();
             for item in items {
                 self.window_items.entry(item).or_default().push(tid);
             }
+        };
+        if let Some(bp) = &mut self.bp {
+            bp.commit(plan.as_ref().expect("bp implies a plan"));
+            let mut pending = std::mem::take(&mut bp.carry);
+            pending.extend_from_slice(txns);
+            bp.carry = pending.split_off(accepted);
+            bp.last_accepted = accepted;
+            for (i, t) in pending.iter().enumerate() {
+                ingest(t, start + i as u32);
+            }
+        } else {
+            for (i, t) in txns.iter().enumerate() {
+                ingest(t, start + i as u32);
+            }
         }
+        drop(ingest);
         self.next_tid = end;
         self.batch_ranges.push_back((start, len));
         self.batches_pushed += 1;
-        Ok(())
+        Ok(PushOutcome {
+            accepted,
+            deferred: self.bp.as_ref().map_or(0, |bp| bp.carry.len()),
+            effective_limit: self.bp.as_ref().and_then(|bp| bp.limit),
+        })
     }
 
     /// Mine the current window (the last `cfg.window` ingested batches),
@@ -462,6 +759,7 @@ impl IncrementalEclat {
                 retries: 0,
                 shuffle_records: 0,
                 shuffle_bytes: 0,
+                spilled_blocks: 0,
                 backend: sc.executor().name(),
                 steals: exec_stats.steals,
                 queue_wait_ms: exec_stats.queue_wait_ms,
@@ -677,8 +975,9 @@ pub fn attach_incremental_eclat(
     stream.foreach_rdd(move |t, rdd| {
         let batch = rdd.collect();
         let mut m = handle.lock().unwrap();
-        m.push_batch(&batch)
-            .unwrap_or_else(|e| panic!("streaming ingest failed: {e}"));
+        if let Err(e) = m.push_batch(&batch) {
+            panic!("streaming ingest failed: {e}");
+        }
         // Slide cadence counts *pushed batches*, not global ticks: a
         // source with slide_interval > 1 only delivers a batch at its
         // active ticks.
@@ -728,6 +1027,11 @@ pub fn attach_checked_incremental_eclat(
         session.mining_config().min_sup,
         cfg.min_sup,
         "incremental and batch mines must share one min_sup"
+    );
+    assert!(
+        cfg.backpressure.is_none(),
+        "the checked scaffold replays raw batches; backpressure deferral would \
+         desynchronize the cross-check — use attach_incremental_eclat instead"
     );
     let sc = stream.stream_context().spark().clone();
     // Raw batches of the current window, for the from-scratch re-mine.
@@ -891,6 +1195,83 @@ mod tests {
         // Empty batches still fit at the boundary (they consume no tids).
         inc.push_batch(&[]).unwrap();
         assert_eq!(inc.batches_pushed(), 2);
+    }
+
+    #[test]
+    fn backpressure_shrinks_under_byte_inflation_and_recovers() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+
+        let bytes = Arc::new(AtomicU64::new(0));
+        let probe = Arc::clone(&bytes);
+        let cfg = StreamingEclatConfig::new(1, 2, 1).with_backpressure(
+            BackpressureConfig::new(1_000)
+                .with_min_batch(2)
+                .with_increase_step(3),
+        );
+        let mut inc = IncrementalEclat::new(cfg)
+            .with_byte_source(move || probe.load(Ordering::Relaxed));
+        let big: Vec<Transaction> = (0..8).map(|i| vec![1, 2 + i as u32]).collect();
+
+        // First push primes the byte mark; uncapped, everything lands.
+        let o1 = inc.push_batch(&big).unwrap();
+        assert_eq!(
+            o1,
+            PushOutcome {
+                accepted: 8,
+                deferred: 0,
+                effective_limit: None
+            }
+        );
+
+        // That batch's processing moved 5000 B > the 1000 B watermark:
+        // the next push halves the effective batch (8 -> 4).
+        bytes.fetch_add(5_000, Ordering::Relaxed);
+        let o2 = inc.push_batch(&big).unwrap();
+        assert_eq!(o2.effective_limit, Some(4));
+        assert_eq!(o2.accepted, 4);
+        assert_eq!(o2.deferred, 4, "tail deferred, not dropped");
+
+        // Still hot: shrink again, flooring at min_batch = 2.
+        bytes.fetch_add(5_000, Ordering::Relaxed);
+        let o3 = inc.push_batch(&big).unwrap();
+        assert_eq!(o3.effective_limit, Some(2));
+        assert_eq!(o3.accepted, 2);
+        assert_eq!(o3.deferred, 10);
+
+        // Calm batches (flat byte signal) recover additively and drain
+        // the deferred queue.
+        let mut last = o3;
+        for _ in 0..20 {
+            last = inc.push_batch(&[]).unwrap();
+        }
+        assert_eq!(last.deferred, 0, "carry drained under recovery");
+        assert!(last.effective_limit.unwrap() >= 8, "{last:?}");
+
+        let report = inc.report();
+        let bp = report.backpressure.as_ref().unwrap();
+        assert!(bp.shrinks >= 2, "{bp:?}");
+        assert!(bp.recoveries >= 2, "{bp:?}");
+        assert_eq!(bp.deferred, 0);
+        assert_eq!(bp.watermark_bytes, 1_000);
+        assert!(report.to_string().contains("backpressure"), "{report}");
+
+        // Nothing was lost to deferral: 3 pushes of 8 + 20 empties all
+        // ingested, so a full-stream window mines every transaction.
+        let total: u32 = inc.window_range().1;
+        assert_eq!(total, 24);
+
+        // Without backpressure the report carries no controller state.
+        let plain = IncrementalEclat::new(StreamingEclatConfig::new(1, 2, 1));
+        assert!(plain.report().backpressure.is_none());
+
+        // A failed push leaves the controller untouched: force a tid
+        // overflow under a byte spike that would otherwise shrink.
+        inc.next_tid = u32::MAX;
+        bytes.fetch_add(50_000, Ordering::Relaxed);
+        let before = inc.report().backpressure.unwrap();
+        assert!(inc.push_batch(&big).is_err());
+        let after = inc.report().backpressure.unwrap();
+        assert_eq!(before, after, "TidOverflow mutated the controller");
     }
 
     #[test]

@@ -30,6 +30,7 @@
 //! allocated) that `MiningReport` snapshots per run and the `bench`
 //! command emits per `BENCH_fim.json` row.
 
+use crate::sparklet::serde::{Reader, SerDe, SerDeError};
 use crate::util::Bitmap;
 
 use super::types::Item;
@@ -146,8 +147,10 @@ pub mod kernel {
 
 // ----------------------------------------------------------------- trait
 
-/// Operations a tidset representation must support.
-pub trait TidOps: Clone + Send + Sync + 'static {
+/// Operations a tidset representation must support. `SerDe` is a
+/// supertrait because tidsets cross the shuffle inside serialized
+/// equivalence-class blocks (`partitionBy` in Phase-3/4).
+pub trait TidOps: Clone + Send + Sync + 'static + SerDe {
     /// Build from a sorted, deduplicated tid list; `universe` is the
     /// total transaction count (bitmap capacity).
     fn from_tids(tids: &[u32], universe: usize) -> Self;
@@ -1275,6 +1278,161 @@ impl TidOps for HybridTidset {
     }
 }
 
+// ------------------------------------------------- shuffle serialization
+//
+// Tidsets cross the shuffle inside equivalence-class blocks, so every
+// representation implements the sparklet `SerDe` codec. The encodings
+// mirror the in-memory layouts verbatim (sorted tid lists as `Vec<u32>`,
+// bitmaps as words + bit count, enums as one tag byte) — no conversion
+// on either side.
+
+impl SerDe for Bitmap {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.nbits().encode(out);
+        self.words().len().encode(out);
+        for &w in self.words() {
+            w.encode(out);
+        }
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<Self, SerDeError> {
+        let nbits = usize::decode(r)?;
+        let n_words = usize::decode(r)?;
+        if n_words > r.remaining() / 4 + 1 {
+            return Err(SerDeError::Invalid {
+                what: "bitmap word count (exceeds buffer)",
+            });
+        }
+        let mut words = Vec::with_capacity(n_words);
+        for _ in 0..n_words {
+            words.push(u32::decode(r)?);
+        }
+        Bitmap::try_from_raw(words, nbits).ok_or(SerDeError::Invalid {
+            what: "bitmap word count vs nbits",
+        })
+    }
+}
+
+/// Decode a sorted, deduplicated tid/diff list, rejecting out-of-order
+/// or duplicated entries — the invariant every intersection kernel
+/// assumes. Shared by all representations so corrupt blocks fail the
+/// decode loudly instead of mining wrong supports.
+fn decode_sorted_tids(r: &mut Reader<'_>) -> Result<Vec<u32>, SerDeError> {
+    let tids = Vec::<u32>::decode(r)?;
+    if !tids.windows(2).all(|w| w[0] < w[1]) {
+        return Err(SerDeError::Invalid {
+            what: "tid list (must be sorted+unique)",
+        });
+    }
+    Ok(tids)
+}
+
+impl SerDe for VecTidset {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.tids.encode(out);
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<Self, SerDeError> {
+        Ok(Self {
+            tids: decode_sorted_tids(r)?,
+        })
+    }
+}
+
+impl SerDe for BitmapTidset {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.bits.encode(out);
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<Self, SerDeError> {
+        Ok(Self {
+            bits: Bitmap::decode(r)?,
+        })
+    }
+}
+
+impl SerDe for DiffTidset {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Self::Tids(t) => {
+                out.push(0);
+                t.encode(out);
+            }
+            Self::Diff { diffs, support } => {
+                out.push(1);
+                diffs.encode(out);
+                support.encode(out);
+            }
+        }
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<Self, SerDeError> {
+        match u8::decode(r)? {
+            0 => Ok(Self::Tids(decode_sorted_tids(r)?)),
+            1 => Ok(Self::Diff {
+                diffs: decode_sorted_tids(r)?,
+                support: u32::decode(r)?,
+            }),
+            _ => Err(SerDeError::Invalid {
+                what: "diffset variant tag",
+            }),
+        }
+    }
+}
+
+impl SerDe for HybridRepr {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Self::Tids(t) => {
+                out.push(0);
+                t.encode(out);
+            }
+            Self::Bits(b) => {
+                out.push(1);
+                b.encode(out);
+            }
+            Self::Diff { diffs, support } => {
+                out.push(2);
+                diffs.encode(out);
+                support.encode(out);
+            }
+        }
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<Self, SerDeError> {
+        match u8::decode(r)? {
+            0 => Ok(Self::Tids(decode_sorted_tids(r)?)),
+            1 => Ok(Self::Bits(Bitmap::decode(r)?)),
+            2 => Ok(Self::Diff {
+                diffs: decode_sorted_tids(r)?,
+                support: u32::decode(r)?,
+            }),
+            _ => Err(SerDeError::Invalid {
+                what: "hybrid variant tag",
+            }),
+        }
+    }
+}
+
+impl SerDe for HybridTidset {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.universe.encode(out);
+        self.repr.encode(out);
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<Self, SerDeError> {
+        let universe = u32::decode(r)?;
+        let repr = HybridRepr::decode(r)?;
+        // Cross-field invariants the kernels rely on: a bitmap member's
+        // capacity is exactly the universe, and tids address into it.
+        let consistent = match &repr {
+            HybridRepr::Bits(b) => b.nbits() == universe as usize,
+            HybridRepr::Tids(t) => t.last().is_none_or(|&hi| hi < universe.max(1)),
+            HybridRepr::Diff { .. } => true,
+        };
+        if !consistent {
+            return Err(SerDeError::Invalid {
+                what: "hybrid tidset (repr inconsistent with universe)",
+            });
+        }
+        Ok(Self { universe, repr })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1292,6 +1450,55 @@ mod tests {
 
     fn set_difference(a: &[u32], b: &[u32]) -> Vec<u32> {
         a.iter().filter(|x| b.binary_search(x).is_err()).copied().collect()
+    }
+
+    #[test]
+    fn every_representation_serde_roundtrips() {
+        let mut rng = SplitMix64::new(0x5EDE);
+        for _ in 0..40 {
+            let universe = 1 + rng.gen_range(500);
+            let tids = random_sorted(&mut rng, universe, 0.25);
+            let other = random_sorted(&mut rng, universe, 0.25);
+
+            let v = VecTidset::from_tids(&tids, universe);
+            assert_eq!(VecTidset::from_bytes(&v.to_bytes()).unwrap(), v);
+
+            let b = BitmapTidset::from_tids(&tids, universe);
+            assert_eq!(BitmapTidset::from_bytes(&b.to_bytes()).unwrap(), b);
+
+            // diffset: root form and (when possible) the diff form
+            let d = DiffTidset::from_tids(&tids, universe);
+            assert_eq!(DiffTidset::from_bytes(&d.to_bytes()).unwrap(), d);
+            let d2 = d.intersect(&DiffTidset::from_tids(&other, universe));
+            assert!(d2.is_diffset());
+            assert_eq!(DiffTidset::from_bytes(&d2.to_bytes()).unwrap(), d2);
+
+            let h = HybridTidset::from_tids(&tids, universe);
+            let back = HybridTidset::from_bytes(&h.to_bytes()).unwrap();
+            assert_eq!(back, h);
+            assert_eq!(back.repr_name(), h.repr_name());
+        }
+        // corrupt inputs are typed errors: unsorted tid list, bad tag
+        let mut bad = Vec::new();
+        vec![5u32, 3].encode(&mut bad);
+        assert!(VecTidset::from_bytes(&bad).is_err());
+        assert!(DiffTidset::from_bytes(&[9]).is_err());
+        assert!(HybridTidset::from_bytes(&[0, 0, 0, 0, 9]).is_err());
+        // unsorted payloads are rejected for every list-bearing variant
+        let mut unsorted_root = vec![0u8]; // DiffTidset::Tids tag
+        vec![5u32, 3].encode(&mut unsorted_root);
+        assert!(DiffTidset::from_bytes(&unsorted_root).is_err());
+        let mut unsorted_diff = vec![1u8]; // DiffTidset::Diff tag
+        vec![7u32, 7].encode(&mut unsorted_diff);
+        9u32.encode(&mut unsorted_diff);
+        assert!(DiffTidset::from_bytes(&unsorted_diff).is_err());
+        // hybrid cross-field invariant: bitmap capacity must match the
+        // universe the value claims
+        let mut mismatched = Vec::new();
+        64u32.encode(&mut mismatched); // universe = 64
+        mismatched.push(1u8); // Bits variant
+        Bitmap::from_sorted_tids(&[1, 5], 32).encode(&mut mismatched); // nbits = 32
+        assert!(HybridTidset::from_bytes(&mismatched).is_err());
     }
 
     #[test]

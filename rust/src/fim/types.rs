@@ -2,6 +2,8 @@
 
 use std::collections::BTreeSet;
 
+use crate::sparklet::serde::{Reader, SerDe, SerDeError};
+
 /// An item is an integer token (all four benchmark datasets are
 /// integer-coded; BMS item ids reach into the tens of thousands, which is
 /// exactly why the paper disables the triangular matrix there).
@@ -35,6 +37,21 @@ impl FrequentItemset {
 
     pub fn is_empty(&self) -> bool {
         self.items.is_empty()
+    }
+}
+
+/// Itemsets may ride through shuffles (e.g. distributed post-stages), so
+/// they speak the shuffle codec. Decode re-checks the sorted invariant
+/// through [`FrequentItemset::new`].
+impl SerDe for FrequentItemset {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.items.encode(out);
+        self.support.encode(out);
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<Self, SerDeError> {
+        let items = Vec::decode(r)?;
+        let support = u32::decode(r)?;
+        Ok(Self::new(items, support))
     }
 }
 

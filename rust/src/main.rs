@@ -34,6 +34,8 @@ use rdd_eclat::data::Dataset;
 use rdd_eclat::fim::engine::{
     EngineRegistry, FimError, MiningSession, PartitionStrategy, PostStage, TidsetRepr,
 };
+use rdd_eclat::fim::streaming::BackpressureStats;
+use rdd_eclat::fim::tidset::KernelStats;
 use rdd_eclat::fim::types::abs_min_sup;
 use rdd_eclat::sparklet::metrics::StageKind;
 use rdd_eclat::sparklet::{ExecutorRegistry, SparkletConf, SparkletContext};
@@ -147,11 +149,20 @@ fn command_specs() -> Vec<CommandSpec> {
             FlagSpec::new("post", "S", "post-stage (closed|maximal|top=K)"),
         ]
     };
+    let membudget_flag = || {
+        FlagSpec::new(
+            "memory-budget",
+            "MB",
+            "in-memory shuffle block budget in MiB; colder blocks spill to disk \
+             (default: unlimited, or SPARKLET_MEMORY_MB)",
+        )
+    };
     let mut mine_flags = vec![
         dataset_flag(),
         minsup_flag(),
         FlagSpec::new("tri-matrix", "on|off", "triangular-matrix Phase-2 (default: per dataset)"),
         executor_flag(),
+        membudget_flag(),
     ];
     mine_flags.extend(session_axis_flags());
     mine_flags.extend(shared_flags());
@@ -160,6 +171,7 @@ fn command_specs() -> Vec<CommandSpec> {
         minsup_flag(),
         FlagSpec::new("engines", "CSV", "engines to sweep (default: all registered)"),
         executor_flag(),
+        membudget_flag(),
         FlagSpec::new(
             "tidset",
             "R",
@@ -186,6 +198,7 @@ fn command_specs() -> Vec<CommandSpec> {
         FlagSpec::new("batches", "N", "batches to run (default 10)"),
         FlagSpec::new("batch-size", "N", "transactions per batch (default 2000)"),
         executor_flag(),
+        membudget_flag(),
     ];
     stream_flags.extend(session_axis_flags());
     stream_flags.extend(shared_flags());
@@ -344,6 +357,9 @@ fn conf_from_args(args: &Args, cfg: &ExperimentConfig) -> Result<SparkletConf> {
     if let Some(backend) = args.get("executor") {
         conf = conf.with_executor_backend(backend)?;
     }
+    if let Some(mb) = parsed::<usize>(args, "memory-budget")? {
+        conf = conf.with_memory_budget_mb(mb)?;
+    }
     Ok(conf)
 }
 
@@ -446,13 +462,14 @@ fn run_mine(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
         println!("per-phase stages:");
         for (i, s) in report.stages.iter().enumerate() {
             println!(
-                "  stage {i:>2} {:<11} {:>3} tasks {:>9.1} ms  shuffle {:>7} rec / ~{:>9} B  \
-                 {:>3} steals  {:>7.1} ms queued",
+                "  stage {i:>2} {:<11} {:>3} tasks {:>9.1} ms  shuffle {:>7} rec / {:>9} B  \
+                 {:>3} spilled  {:>3} steals  {:>7.1} ms queued",
                 format!("{:?}", s.kind),
                 s.num_tasks,
                 s.wall.as_secs_f64() * 1e3,
                 s.shuffle_records,
                 s.shuffle_bytes,
+                s.spilled_blocks,
                 s.steals,
                 s.queue_wait_ms
             );
@@ -465,6 +482,7 @@ fn run_mine(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
         report.kernel.repr_switches,
         report.kernel.bytes_allocated
     );
+    println!("shuffle: {}", sc.shuffle_manager().spill_summary());
     Ok(())
 }
 
@@ -546,9 +564,14 @@ fn run_bench(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
                     .run_vec(&sc, &txns)?;
                 let steals: usize = report.stages.iter().map(|s| s.steals).sum();
                 let queue_wait_ms: f64 = report.stages.iter().map(|s| s.queue_wait_ms).sum();
+                // Per-run spill counters (fresh context per row, so the
+                // manager totals are this run's totals — exact bytes).
+                let spilled = sc.shuffle_manager().spilled_blocks();
+                let reloads = sc.shuffle_manager().spill_reloads();
                 println!(
                     "  {:<14} {:<14} {:<8} {:>7} itemsets {:>9.1} ms  {:>3} stages  \
-                     shuffle {:>8} rec / ~{:>10} B  {:>4} steals  {:>9} ∩ / {:>8} aborts",
+                     shuffle {:>8} rec / {:>10} B  {:>4} spilled  {:>4} steals  \
+                     {:>9} ∩ / {:>8} aborts",
                     backend,
                     report.label,
                     repr.name(),
@@ -557,41 +580,53 @@ fn run_bench(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
                     report.n_stages(),
                     report.shuffle_records(),
                     report.shuffle_bytes(),
+                    spilled,
                     steals,
                     report.kernel.intersections,
                     report.kernel.early_aborts,
                 );
-                rows.push(format!(
-                    "  {{\"engine\": \"{}\", \"label\": \"{}\", \"backend\": \"{}\", \
-                     \"tidset\": \"{}\", \"dataset\": \"{}\", \"min_sup\": {}, \
-                     \"min_sup_abs\": {}, \"transactions\": {}, \"itemsets\": {}, \
-                     \"wall_ms\": {:.3}, \"stages\": {}, \"shuffle_records\": {}, \
-                     \"shuffle_bytes\": {}, \"steals\": {}, \"queue_wait_ms\": {:.3}, \
-                     \"kernel_intersections\": {}, \"kernel_early_aborts\": {}, \
-                     \"kernel_repr_switches\": {}, \"kernel_bytes_allocated\": {}}}",
-                    report.engine,
-                    report.label,
-                    backend,
-                    repr.name(),
-                    dataset.name(),
-                    min_sup_frac,
-                    min_sup,
-                    txns.len(),
-                    report.result.len(),
-                    report.wall_ms,
-                    report.n_stages(),
-                    report.shuffle_records(),
-                    report.shuffle_bytes(),
-                    steals,
-                    queue_wait_ms,
-                    report.kernel.intersections,
-                    report.kernel.early_aborts,
-                    report.kernel.repr_switches,
-                    report.kernel.bytes_allocated,
-                ));
+                rows.push(
+                    BenchRow {
+                        engine: report.engine,
+                        label: report.label,
+                        backend,
+                        tidset: repr.name(),
+                        dataset: dataset.name(),
+                        min_sup_frac,
+                        min_sup_abs: min_sup,
+                        transactions: txns.len(),
+                        itemsets: report.result.len(),
+                        wall_ms: report.wall_ms,
+                        stages: report.n_stages(),
+                        shuffle_records: report.shuffle_records(),
+                        shuffle_bytes: report.shuffle_bytes(),
+                        steals,
+                        queue_wait_ms,
+                        kernel: report.kernel,
+                        memory_budget: sc.conf().memory_budget,
+                        spilled_blocks: spilled,
+                        spill_reloads: reloads,
+                        bp: None,
+                    }
+                    .to_json(),
+                );
             }
         }
     }
+    // Streaming backpressure probe: one incremental-miner row on the
+    // first backend, per-batch re-mines driving a live exact-byte
+    // signal through the AIMD controller (bp_* fields are real here,
+    // zero on the batch rows above).
+    let probe_backend = backends.first().map(String::as_str).unwrap_or("fifo");
+    rows.push(bench_stream_probe_row(
+        args,
+        cfg,
+        dataset,
+        &txns,
+        min_sup,
+        min_sup_frac,
+        probe_backend,
+    )?);
     std::fs::write(&out_path, format!("[\n{}\n]\n", rows.join(",\n")))?;
     println!(
         "wrote {out_path} ({} rows: {} engines x {} backends, tidset sweep on {})",
@@ -601,6 +636,180 @@ fn run_bench(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
         backends.first().map(String::as_str).unwrap_or("-"),
     );
     Ok(())
+}
+
+/// One `BENCH_fim.json` row. Single serialization point for the batch
+/// sweep and the streaming probe, so the row schema cannot drift
+/// between them (ci.sh asserts every field on every row).
+struct BenchRow<'a> {
+    engine: &'a str,
+    label: &'a str,
+    backend: &'a str,
+    tidset: &'a str,
+    dataset: &'a str,
+    min_sup_frac: f64,
+    min_sup_abs: u32,
+    transactions: usize,
+    itemsets: usize,
+    wall_ms: f64,
+    stages: usize,
+    shuffle_records: u64,
+    shuffle_bytes: u64,
+    steals: usize,
+    queue_wait_ms: f64,
+    kernel: KernelStats,
+    /// Budget in bytes (as configured); emitted as MiB or null.
+    memory_budget: Option<usize>,
+    spilled_blocks: u64,
+    spill_reloads: u64,
+    /// `None` for batch rows (fields emitted as zeros/null).
+    bp: Option<BackpressureStats>,
+}
+
+impl BenchRow<'_> {
+    fn to_json(&self) -> String {
+        let budget_mb = self
+            .memory_budget
+            .map(|b| (b / (1024 * 1024)).to_string())
+            .unwrap_or_else(|| "null".into());
+        let (bp_shrinks, bp_recoveries, bp_watermark) = self
+            .bp
+            .as_ref()
+            .map_or((0, 0, 0), |bp| (bp.shrinks, bp.recoveries, bp.watermark_bytes));
+        let bp_effective = self
+            .bp
+            .as_ref()
+            .and_then(|bp| bp.effective_limit)
+            .map(|l| l.to_string())
+            .unwrap_or_else(|| "null".into());
+        format!(
+            "  {{\"engine\": \"{}\", \"label\": \"{}\", \"backend\": \"{}\", \
+             \"tidset\": \"{}\", \"dataset\": \"{}\", \"min_sup\": {}, \
+             \"min_sup_abs\": {}, \"transactions\": {}, \"itemsets\": {}, \
+             \"wall_ms\": {:.3}, \"stages\": {}, \"shuffle_records\": {}, \
+             \"shuffle_bytes\": {}, \"steals\": {}, \"queue_wait_ms\": {:.3}, \
+             \"kernel_intersections\": {}, \"kernel_early_aborts\": {}, \
+             \"kernel_repr_switches\": {}, \"kernel_bytes_allocated\": {}, \
+             \"memory_budget_mb\": {}, \"spilled_blocks\": {}, \
+             \"spill_reloads\": {}, \"bp_shrinks\": {}, \"bp_recoveries\": {}, \
+             \"bp_effective_batch\": {}, \"bp_watermark_bytes\": {}}}",
+            self.engine,
+            self.label,
+            self.backend,
+            self.tidset,
+            self.dataset,
+            self.min_sup_frac,
+            self.min_sup_abs,
+            self.transactions,
+            self.itemsets,
+            self.wall_ms,
+            self.stages,
+            self.shuffle_records,
+            self.shuffle_bytes,
+            self.steals,
+            self.queue_wait_ms,
+            self.kernel.intersections,
+            self.kernel.early_aborts,
+            self.kernel.repr_switches,
+            self.kernel.bytes_allocated,
+            budget_mb,
+            self.spilled_blocks,
+            self.spill_reloads,
+            bp_shrinks,
+            bp_recoveries,
+            bp_effective,
+            bp_watermark,
+        )
+    }
+}
+
+/// One `BENCH_fim.json` row from a streaming run with backpressure: the
+/// dataset is replayed as micro-batches into an `IncrementalEclat`
+/// whose AIMD controller watches the context's exact shuffle-byte
+/// counter, fed by a per-batch batch re-mine through the session API.
+#[allow(clippy::too_many_arguments)]
+fn bench_stream_probe_row(
+    args: &Args,
+    cfg: &ExperimentConfig,
+    dataset: Dataset,
+    txns: &[rdd_eclat::fim::Transaction],
+    min_sup: u32,
+    min_sup_frac: f64,
+    backend: &str,
+) -> Result<String> {
+    use rdd_eclat::fim::streaming::{
+        BackpressureConfig, IncrementalEclat, StreamingEclatConfig,
+    };
+    use rdd_eclat::fim::tidset::kernel;
+
+    let conf = conf_from_args(args, cfg)?.with_executor_backend(backend)?;
+    let sc = SparkletContext::try_new(conf)?;
+    let watermark = 32 * 1024u64;
+    let bcfg = StreamingEclatConfig::new(min_sup.max(1), 4, 2)
+        .with_backpressure(BackpressureConfig::new(watermark));
+    let mut miner = IncrementalEclat::new(bcfg).with_context(sc.clone());
+    let session = MiningSession::new("eclat-v3")
+        .min_sup(min_sup.max(1))
+        .tri_matrix(dataset.tri_matrix_mode())
+        .p(cfg.p);
+
+    let kernel_mark = kernel::snapshot();
+    let t0 = std::time::Instant::now();
+    let chunk_len = (txns.len() / 8).max(1);
+    let mut itemsets = 0usize;
+    let mut windows = 0usize;
+    for (i, chunk) in txns.chunks(chunk_len).enumerate() {
+        let _ = miner.push_batch(chunk)?;
+        // the per-batch re-mine is the probe's shuffle-byte workload
+        let _ = session.run_vec(&sc, chunk)?;
+        if (i + 1) % 2 == 0 {
+            itemsets = miner.mine_window().len();
+            windows += 1;
+        }
+    }
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let kernel_stats = kernel::snapshot().since(&kernel_mark);
+    let report = miner.report();
+    let bp = report.backpressure.expect("probe runs with backpressure");
+    let stages = sc.metrics().stages();
+    let steals: usize = stages.iter().map(|s| s.steals).sum();
+    let queue_wait_ms: f64 = stages.iter().map(|s| s.queue_wait_ms).sum();
+    println!(
+        "  {:<14} {:<14} {:<8} {:>7} itemsets {:>9.1} ms  {windows} windows  \
+         bp: {} shrinks / {} recoveries, {} B/batch (watermark {} B)",
+        backend,
+        "IncrementalBP",
+        "vec",
+        itemsets,
+        wall_ms,
+        bp.shrinks,
+        bp.recoveries,
+        bp.last_bytes_per_batch,
+        bp.watermark_bytes,
+    );
+    Ok(BenchRow {
+        engine: "incremental-stream",
+        label: "IncrementalBP",
+        backend,
+        tidset: "vec",
+        dataset: dataset.name(),
+        min_sup_frac,
+        min_sup_abs: min_sup,
+        transactions: txns.len(),
+        itemsets,
+        wall_ms,
+        stages: stages.len(),
+        shuffle_records: sc.metrics().total_shuffle_records(),
+        shuffle_bytes: sc.metrics().total_shuffle_bytes(),
+        steals,
+        queue_wait_ms,
+        kernel: kernel_stats,
+        memory_budget: sc.conf().memory_budget,
+        spilled_blocks: sc.shuffle_manager().spilled_blocks(),
+        spill_reloads: sc.shuffle_manager().spill_reloads(),
+        bp: Some(bp),
+    }
+    .to_json())
 }
 
 /// Write a generated benchmark dataset to disk in FIMI format.
@@ -702,7 +911,8 @@ fn run_stream(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
     );
     ssc.run_batches(n_batches);
 
-    println!("incremental miner: {}", miner.lock().unwrap().stats());
+    println!("incremental miner: {}", miner.lock().unwrap().report());
+    println!("shuffle: {}", sc.shuffle_manager().spill_summary());
     // The incremental miner's border recomputation runs through the
     // executor: show how many tasks each window had in flight.
     let streaming: Vec<_> = sc

@@ -14,6 +14,8 @@ pub enum ConfError {
     InvalidCores { value: String },
     /// `shuffle_partitions` must be >= 1.
     InvalidShufflePartitions { value: String },
+    /// `memory_budget` must be >= 1 (use `None` for unlimited).
+    InvalidMemoryBudget { value: String },
     /// The named executor backend is not in the `ExecutorRegistry`
     /// (the registry's own error, with its did-you-mean suggestion).
     Backend(ExecutorError),
@@ -39,6 +41,9 @@ impl std::fmt::Display for ConfError {
             }
             Self::InvalidShufflePartitions { value } => {
                 write!(f, "shuffle_partitions must be >= 1 (got {value})")
+            }
+            Self::InvalidMemoryBudget { value } => {
+                write!(f, "memory budget must be >= 1 MiB (got {value})")
             }
             Self::Backend(e) => e.fmt(f),
             Self::InvalidEnv { var, value, reason } => {
@@ -74,6 +79,18 @@ pub struct SparkletConf {
     pub failure_seed: u64,
     /// Capture per-stage metrics (cheap; on by default).
     pub collect_metrics: bool,
+    /// In-memory shuffle block budget in **bytes** (`None` = unlimited).
+    /// When the resident serialized blocks exceed it, the coldest are
+    /// LRU-spilled to temp files and reloaded transparently on fetch.
+    /// Set via [`SparkletConf::with_memory_budget_mb`], the
+    /// `SPARKLET_MEMORY_MB` env override, or the CLI `--memory-budget`.
+    pub memory_budget: Option<usize>,
+    /// Shared-nothing assertion mode: the shuffle verifies every block
+    /// handed to a reduce task is an exclusively-owned byte buffer (no
+    /// `Arc`-shared payload crosses a stage boundary) and every written
+    /// block reconstructs from its bytes alone. Defaults to on in debug
+    /// builds; `SPARKLET_SHARED_NOTHING=0|1` overrides.
+    pub shared_nothing: bool,
 }
 
 impl Default for SparkletConf {
@@ -90,6 +107,8 @@ impl Default for SparkletConf {
             task_failure_rate: 0.0,
             failure_seed: 0,
             collect_metrics: true,
+            memory_budget: None,
+            shared_nothing: cfg!(debug_assertions),
         }
     }
 }
@@ -151,11 +170,38 @@ impl SparkletConf {
         self
     }
 
-    /// Apply the `SPARKLET_CORES`, `SPARKLET_BACKEND`, and
-    /// `SPARKLET_SHUFFLE_PARTITIONS` environment overrides on top of
-    /// the current values (empty/unset variables are ignored). Cores
-    /// are applied before shuffle partitions, so setting both honours
-    /// the explicit partition count.
+    /// Cap the in-memory shuffle block set at `mb` MiB (0 is an error;
+    /// unset means unlimited).
+    pub fn with_memory_budget_mb(mut self, mb: usize) -> Result<Self, ConfError> {
+        if mb == 0 {
+            return Err(ConfError::InvalidMemoryBudget { value: "0".into() });
+        }
+        self.memory_budget = Some(mb * 1024 * 1024);
+        Ok(self)
+    }
+
+    /// Byte-granular budget (tests and tooling; the MiB builder is the
+    /// user-facing knob).
+    pub fn with_memory_budget_bytes(mut self, bytes: usize) -> Result<Self, ConfError> {
+        if bytes == 0 {
+            return Err(ConfError::InvalidMemoryBudget { value: "0".into() });
+        }
+        self.memory_budget = Some(bytes);
+        Ok(self)
+    }
+
+    /// Toggle the shared-nothing shuffle assertions.
+    pub fn with_shared_nothing(mut self, on: bool) -> Self {
+        self.shared_nothing = on;
+        self
+    }
+
+    /// Apply the `SPARKLET_CORES`, `SPARKLET_BACKEND`,
+    /// `SPARKLET_SHUFFLE_PARTITIONS`, `SPARKLET_MEMORY_MB`, and
+    /// `SPARKLET_SHARED_NOTHING` environment overrides on top of the
+    /// current values (empty/unset variables are ignored). Cores are
+    /// applied before shuffle partitions, so setting both honours the
+    /// explicit partition count.
     pub fn with_env_overrides(mut self) -> Result<Self, ConfError> {
         if let Some(cores) = env_usize("SPARKLET_CORES")? {
             self = self.with_cores(cores)?;
@@ -166,12 +212,33 @@ impl SparkletConf {
         if let Some(n) = env_usize("SPARKLET_SHUFFLE_PARTITIONS")? {
             self = self.with_shuffle_partitions(n)?;
         }
+        if let Some(mb) = env_usize("SPARKLET_MEMORY_MB")? {
+            self = self.with_memory_budget_mb(mb)?;
+        }
+        if let Some(on) = env_bool("SPARKLET_SHARED_NOTHING")? {
+            self = self.with_shared_nothing(on);
+        }
         Ok(self)
     }
 }
 
 fn env_str(var: &'static str) -> Option<String> {
     std::env::var(var).ok().filter(|v| !v.is_empty())
+}
+
+fn env_bool(var: &'static str) -> Result<Option<bool>, ConfError> {
+    match env_str(var) {
+        None => Ok(None),
+        Some(value) => match value.to_lowercase().as_str() {
+            "1" | "true" | "on" | "yes" => Ok(Some(true)),
+            "0" | "false" | "off" | "no" => Ok(Some(false)),
+            _ => Err(ConfError::InvalidEnv {
+                var,
+                value,
+                reason: "not a boolean (use 0/1)".into(),
+            }),
+        },
+    }
 }
 
 fn env_usize(var: &'static str) -> Result<Option<usize>, ConfError> {
@@ -233,6 +300,25 @@ mod tests {
             .with_shuffle_partitions(0)
             .unwrap_err();
         assert!(matches!(err, ConfError::InvalidShufflePartitions { .. }));
+        let err = SparkletConf::default().with_memory_budget_mb(0).unwrap_err();
+        assert!(matches!(err, ConfError::InvalidMemoryBudget { .. }));
+        let err = SparkletConf::default()
+            .with_memory_budget_bytes(0)
+            .unwrap_err();
+        assert!(matches!(err, ConfError::InvalidMemoryBudget { .. }));
+    }
+
+    #[test]
+    fn memory_budget_and_shared_nothing_builders() {
+        let c = SparkletConf::default();
+        assert_eq!(c.memory_budget, None, "unlimited by default");
+        let c = c.with_memory_budget_mb(64).unwrap();
+        assert_eq!(c.memory_budget, Some(64 * 1024 * 1024));
+        let c = c.with_memory_budget_bytes(4096).unwrap();
+        assert_eq!(c.memory_budget, Some(4096));
+        let c = c.with_shared_nothing(true);
+        assert!(c.shared_nothing);
+        assert!(!c.with_shared_nothing(false).shared_nothing);
     }
 
     #[test]
@@ -260,6 +346,8 @@ mod tests {
             std::env::remove_var("SPARKLET_CORES");
             std::env::remove_var("SPARKLET_BACKEND");
             std::env::remove_var("SPARKLET_SHUFFLE_PARTITIONS");
+            std::env::remove_var("SPARKLET_MEMORY_MB");
+            std::env::remove_var("SPARKLET_SHARED_NOTHING");
         };
         clear();
 
@@ -297,6 +385,29 @@ mod tests {
         std::env::set_var("SPARKLET_BACKEND", "");
         let c = base.clone().with_env_overrides().unwrap();
         assert_eq!(c.executor_backend, "fifo");
+
+        // Memory budget + shared-nothing overrides.
+        std::env::set_var("SPARKLET_MEMORY_MB", "2");
+        std::env::set_var("SPARKLET_SHARED_NOTHING", "0");
+        let c = base.clone().with_env_overrides().unwrap();
+        assert_eq!(c.memory_budget, Some(2 * 1024 * 1024));
+        assert!(!c.shared_nothing);
+        std::env::set_var("SPARKLET_SHARED_NOTHING", "true");
+        let c = base.clone().with_env_overrides().unwrap();
+        assert!(c.shared_nothing);
+        std::env::set_var("SPARKLET_MEMORY_MB", "0");
+        let err = base.clone().with_env_overrides().unwrap_err();
+        assert!(
+            matches!(err, ConfError::InvalidEnv { var: "SPARKLET_MEMORY_MB", .. }),
+            "{err}"
+        );
+        std::env::set_var("SPARKLET_MEMORY_MB", "2");
+        std::env::set_var("SPARKLET_SHARED_NOTHING", "maybe");
+        let err = base.clone().with_env_overrides().unwrap_err();
+        assert!(
+            matches!(err, ConfError::InvalidEnv { var: "SPARKLET_SHARED_NOTHING", .. }),
+            "{err}"
+        );
 
         clear();
     }

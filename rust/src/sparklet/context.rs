@@ -49,10 +49,11 @@ impl SparkletContext {
             let ex = Arc::clone(&executor);
             metrics.set_active_source(move || ex.active());
         }
+        let shuffle = ShuffleManager::with_conf(conf.memory_budget, conf.shared_nothing);
         Ok(Self {
             inner: Arc::new(ContextInner {
                 executor,
-                shuffle: ShuffleManager::new(),
+                shuffle,
                 cache: CacheManager::new(),
                 broadcasts: BroadcastRegistry::default(),
                 metrics,

@@ -25,9 +25,12 @@ pub struct StageMetrics {
     /// Shuffle records written while this stage ran (map stages; 0 for
     /// pure result stages).
     pub shuffle_records: u64,
-    /// Estimated shuffle bytes written while this stage ran (records ×
-    /// static record size — see `ShuffleManager::bytes_written`).
+    /// **Exact** serialized shuffle bytes written while this stage ran
+    /// (sum of block lengths — see `ShuffleManager::bytes_written`).
     pub shuffle_bytes: u64,
+    /// Shuffle blocks spilled to disk under the memory budget while
+    /// this stage ran.
+    pub spilled_blocks: u64,
     /// Executor backend that ran the stage's task set.
     pub backend: &'static str,
     /// Tasks executed by a worker other than the one they were queued
@@ -48,6 +51,10 @@ impl StageMetrics {
     }
 }
 
+/// EWMA smoothing factor for the per-partition cost feedback (higher =
+/// faster adaptation to the latest run).
+pub const PARTITION_COST_EWMA_ALPHA: f64 = 0.4;
+
 /// Registry of all stages run by a context.
 #[derive(Default)]
 pub struct MetricsRegistry {
@@ -55,6 +62,10 @@ pub struct MetricsRegistry {
     /// Gauge probing the executor's currently-running task count
     /// (wired by the context; surfaces `ThreadPool::active` & co.).
     active_source: Mutex<Option<Arc<dyn Fn() -> usize + Send + Sync>>>,
+    /// EWMA of per-partition cost (task ms + amortized queue wait) from
+    /// observed stages — the feedback `PartitionStrategy::Weighted`
+    /// reads so class placement learns from the previous run/window.
+    ewma_partition_ms: Mutex<Vec<f64>>,
 }
 
 impl MetricsRegistry {
@@ -83,8 +94,62 @@ impl MetricsRegistry {
         self.stages.lock().unwrap().iter().map(|s| s.steals).sum()
     }
 
+    /// Total shuffle blocks spilled across all recorded stages.
+    pub fn total_spilled_blocks(&self) -> u64 {
+        self.stages
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| s.spilled_blocks)
+            .sum()
+    }
+
+    /// Fold one stage's per-partition execution signal (task wall ms
+    /// plus the stage's queue wait amortized over its tasks) into the
+    /// EWMA the weighted partitioner reads. Observations whose task
+    /// count differs from the stored vector reset it — the placement
+    /// geometry changed, so old per-partition history is meaningless.
+    pub fn observe_partition_costs(&self, task_millis: &[f64], queue_wait_ms: f64) {
+        let n = task_millis.len();
+        if n == 0 {
+            return;
+        }
+        let share = queue_wait_ms / n as f64;
+        let mut ewma = self.ewma_partition_ms.lock().unwrap();
+        if ewma.len() != n {
+            *ewma = task_millis.iter().map(|&t| t + share).collect();
+            return;
+        }
+        for (e, &t) in ewma.iter_mut().zip(task_millis) {
+            *e = PARTITION_COST_EWMA_ALPHA * (t + share)
+                + (1.0 - PARTITION_COST_EWMA_ALPHA) * *e;
+        }
+    }
+
+    /// Normalized per-partition relative cost (mean 1.0) for a `p`-way
+    /// placement, or `None` when there is no usable history (never
+    /// observed, different partition count, or all-zero costs).
+    pub fn partition_cost_weights(&self, p: usize) -> Option<Vec<f64>> {
+        let ewma = self.ewma_partition_ms.lock().unwrap();
+        if ewma.len() != p || p == 0 {
+            return None;
+        }
+        let mean: f64 = ewma.iter().sum::<f64>() / p as f64;
+        if mean <= 0.0 {
+            return None;
+        }
+        Some(ewma.iter().map(|&e| (e / mean).max(f64::EPSILON)).collect())
+    }
+
     pub fn stages(&self) -> Vec<StageMetrics> {
         self.stages.lock().unwrap().clone()
+    }
+
+    /// The most recently recorded stage, cloning only that entry (the
+    /// per-mine feedback path reads this once per run — `stages()`
+    /// would clone the context's whole history every time).
+    pub fn last_stage(&self) -> Option<StageMetrics> {
+        self.stages.lock().unwrap().last().cloned()
     }
 
     pub fn total_retries(&self) -> usize {
@@ -101,8 +166,8 @@ impl MetricsRegistry {
             .sum()
     }
 
-    /// Total estimated shuffle bytes written across all recorded stages
-    /// — the volume signal streaming backpressure decisions read.
+    /// Total exact shuffle bytes written across all recorded stages —
+    /// the volume signal streaming backpressure decisions read.
     pub fn total_shuffle_bytes(&self) -> u64 {
         self.stages
             .lock()
@@ -122,6 +187,7 @@ impl MetricsRegistry {
         let mut steals = 0usize;
         let mut records = 0u64;
         let mut bytes = 0u64;
+        let mut spilled = 0u64;
         let mut wall_ms = 0.0f64;
         for s in stages.iter() {
             match s.kind {
@@ -133,14 +199,15 @@ impl MetricsRegistry {
             steals += s.steals;
             records += s.shuffle_records;
             bytes += s.shuffle_bytes;
+            spilled += s.spilled_blocks;
             wall_ms += s.wall.as_secs_f64() * 1e3;
         }
         let n = stages.len();
         drop(stages);
         format!(
             "{n} stages ({maps} map, {} result, {streaming} streaming), {wall_ms:.1} ms wall, \
-             {retries} retries, {steals} steals, shuffle: {records} records / ~{bytes} bytes, \
-             {} tasks active",
+             {retries} retries, {steals} steals, shuffle: {records} records / {bytes} bytes \
+             ({spilled} blocks spilled), {} tasks active",
             n - maps - streaming,
             self.active_tasks(),
         )
@@ -214,6 +281,7 @@ mod tests {
             retries,
             shuffle_records: 0,
             shuffle_bytes: 0,
+            spilled_blocks: 0,
             backend: "fifo",
             steals: 0,
             queue_wait_ms: 0.0,
@@ -236,13 +304,47 @@ mod tests {
         let mut m = stage(StageKind::ShuffleMap, 5, vec![5.0], 0);
         m.shuffle_records = 100;
         m.shuffle_bytes = 1600;
+        m.spilled_blocks = 3;
         r.record(m);
         r.record(stage(StageKind::Result, 5, vec![5.0], 0));
         assert_eq!(r.total_shuffle_records(), 100);
         assert_eq!(r.total_shuffle_bytes(), 1600);
+        assert_eq!(r.total_spilled_blocks(), 3);
         let report = r.report();
         assert!(report.contains("100 records"), "{report}");
         assert!(report.contains("1600 bytes"), "{report}");
+        assert!(report.contains("3 blocks spilled"), "{report}");
+    }
+
+    #[test]
+    fn partition_cost_ewma_learns_and_normalizes() {
+        let r = MetricsRegistry::new();
+        // no history yet
+        assert_eq!(r.partition_cost_weights(2), None);
+        // first observation seeds the EWMA directly
+        r.observe_partition_costs(&[30.0, 10.0], 0.0);
+        let w = r.partition_cost_weights(2).unwrap();
+        assert!((w[0] - 1.5).abs() < 1e-9 && (w[1] - 0.5).abs() < 1e-9, "{w:?}");
+        assert!((w.iter().sum::<f64>() / 2.0 - 1.0).abs() < 1e-9, "mean 1");
+        // later observations fold in with the EWMA alpha
+        r.observe_partition_costs(&[10.0, 10.0], 0.0);
+        let w2 = r.partition_cost_weights(2).unwrap();
+        assert!(w2[0] > 1.0 && w2[0] < w[0], "moves toward balance: {w2:?}");
+        // queue wait is amortized over the partitions
+        r.observe_partition_costs(&[0.0, 0.0], 20.0);
+        assert!(r.partition_cost_weights(2).is_some());
+        // geometry change resets; mismatched p reads as no history
+        assert_eq!(r.partition_cost_weights(3), None);
+        r.observe_partition_costs(&[1.0, 2.0, 3.0], 0.0);
+        assert_eq!(r.partition_cost_weights(2), None);
+        assert_eq!(r.partition_cost_weights(3).unwrap().len(), 3);
+        // all-zero history is unusable
+        let z = MetricsRegistry::new();
+        z.observe_partition_costs(&[0.0, 0.0], 0.0);
+        assert_eq!(z.partition_cost_weights(2), None);
+        // empty observation is a no-op
+        z.observe_partition_costs(&[], 5.0);
+        assert_eq!(z.partition_cost_weights(0), None);
     }
 
     #[test]

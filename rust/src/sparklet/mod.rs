@@ -2,9 +2,10 @@
 //!
 //! The substrate the RDD-Eclat paper assumes: resilient distributed
 //! datasets with lazy transformations, wide/narrow dependencies, a DAG
-//! scheduler that splits stages at shuffle boundaries, a hash shuffle,
-//! broadcast variables, accumulators, partition caching, and lineage
-//! based recomputation. "Executor cores" are worker threads of a
+//! scheduler that splits stages at shuffle boundaries, a serialized
+//! block shuffle ([`serde`] codec + [`block`] memory-budgeted store
+//! with disk spill), broadcast variables, accumulators, partition
+//! caching, and lineage based recomputation. "Executor cores" are worker threads of a
 //! pluggable [`executor::ExecutorBackend`] (`fifo` | `work-stealing` |
 //! `sequential`), so the paper's Fig. 5 core-scaling sweep maps
 //! directly onto `SparkletConf::executor_cores` while the execution
@@ -25,6 +26,7 @@
 //!   retries from lineage, which is exactly Spark's recovery story.
 
 pub mod accumulator;
+pub mod block;
 pub mod broadcast;
 pub mod cache;
 pub mod conf;
@@ -35,14 +37,18 @@ pub mod pair;
 pub mod partitioner;
 pub mod rdd;
 pub mod scheduler;
+pub mod serde;
 pub mod shuffle;
 pub mod streaming;
 pub mod transforms;
 
 pub use accumulator::Accumulator;
+pub use block::{BlockId, BlockStore, ShuffleBlock};
 pub use broadcast::Broadcast;
 pub use conf::{ConfError, SparkletConf};
 pub use context::SparkletContext;
+pub use serde::{SerDe, SerDeError};
+pub use shuffle::ShuffleError;
 pub use executor::{
     ExecutorBackend, ExecutorError, ExecutorRegistry, JobHandle, TaskSet, TaskSetStats,
 };

@@ -4,6 +4,15 @@
 //! the partitioner, and (optionally) a map-side combine aggregator. The
 //! scheduler only sees the object-safe [`ShuffleDepObj`] — `run_map_task`
 //! is type-erased, so the DAG walk never needs the key/value types.
+//!
+//! Everything that crosses the boundary is **serialized**: map tasks
+//! encode each bucket into an owned byte block
+//! ([`super::serde::encode_records`]) and reduce tasks decode it back,
+//! so shuffle byte accounting is exact, blocks can spill to disk under
+//! the memory budget, and no `Arc`-shared payload survives a stage
+//! boundary (asserted in shared-nothing mode). The price is a `SerDe`
+//! bound on shuffled key/value/combiner types — narrow transformations
+//! stay bound-free.
 
 use std::hash::Hash;
 use std::sync::Arc;
@@ -11,6 +20,8 @@ use std::sync::Arc;
 use super::context::SparkletContext;
 use super::partitioner::{FnPartitioner, HashPartitioner, Partitioner, RangePartitioner};
 use super::rdd::{materialize, Data, Dep, DepNode, Rdd, RddBase, TaskContext};
+use super::serde::{decode_records, encode_records, SerDe};
+use super::shuffle::ShuffleManager;
 use crate::util::hash::FxHashMap;
 
 /// Object-safe view of a shuffle dependency for the scheduler.
@@ -60,8 +71,8 @@ impl<K, V, C> Clone for Aggregator<K, V, C> {
     }
 }
 
-/// A wide dependency: parent pair-RDD → partitioned buckets.
-pub struct ShuffleDependency<K: Data + Hash + Eq, V: Data, C: Data> {
+/// A wide dependency: parent pair-RDD → partitioned, serialized blocks.
+pub struct ShuffleDependency<K: Data + Hash + Eq + SerDe, V: Data + SerDe, C: Data + SerDe> {
     shuffle_id: usize,
     parent: Arc<dyn RddBase<(K, V)>>,
     partitioner: Arc<dyn Partitioner<K>>,
@@ -69,7 +80,7 @@ pub struct ShuffleDependency<K: Data + Hash + Eq, V: Data, C: Data> {
     map_side_combine: bool,
 }
 
-impl<K: Data + Hash + Eq, V: Data, C: Data> ShuffleDependency<K, V, C> {
+impl<K: Data + Hash + Eq + SerDe, V: Data + SerDe, C: Data + SerDe> ShuffleDependency<K, V, C> {
     pub fn new(
         ctx: &SparkletContext,
         parent: Arc<dyn RddBase<(K, V)>>,
@@ -91,7 +102,67 @@ impl<K: Data + Hash + Eq, V: Data, C: Data> ShuffleDependency<K, V, C> {
     }
 }
 
-impl<K: Data + Hash + Eq, V: Data, C: Data> ShuffleDepObj for ShuffleDependency<K, V, C> {
+/// Serialize each non-empty bucket and register it with the shuffle
+/// manager. Under shared-nothing mode every block is decode-verified
+/// right after encoding: the block must reconstruct from its bytes
+/// alone (self-contained, process-boundary-ready), which is what rules
+/// out any `Arc`-shared payload escaping the map side.
+fn write_buckets<T: SerDe>(
+    mgr: &ShuffleManager,
+    shuffle_id: usize,
+    map_part: usize,
+    buckets: Vec<Vec<T>>,
+    shared_nothing: bool,
+) {
+    for (p, bucket) in buckets.into_iter().enumerate() {
+        if bucket.is_empty() {
+            continue;
+        }
+        let n = bucket.len();
+        let bytes = encode_records(&bucket);
+        if shared_nothing {
+            let verified = decode_records::<T>(&bytes).unwrap_or_else(|e| {
+                panic!(
+                    "shared-nothing check: shuffle {shuffle_id} map {map_part} -> reduce {p} \
+                     block does not reconstruct from its bytes: {e}"
+                )
+            });
+            assert_eq!(
+                verified.len(),
+                n,
+                "shared-nothing check: record count drift in shuffle {shuffle_id} block"
+            );
+        }
+        mgr.write_block(shuffle_id, p, map_part, bytes, n);
+    }
+}
+
+/// Fetch and decode every block of a reduce partition, invoking `sink`
+/// per record. Fetch-before-completion and corrupt blocks both panic:
+/// inside a task, a panic is a task failure the scheduler surfaces.
+fn read_blocks<T: SerDe>(
+    mgr: &ShuffleManager,
+    shuffle_id: usize,
+    reduce_part: usize,
+    mut sink: impl FnMut(T),
+) {
+    let blocks = mgr
+        .fetch(shuffle_id, reduce_part)
+        .unwrap_or_else(|e| panic!("shuffle fetch failed: {e}"));
+    for block in blocks {
+        let records: Vec<T> = decode_records(&block.bytes).unwrap_or_else(|e| {
+            panic!("corrupt shuffle block (shuffle {shuffle_id}, reduce {reduce_part}): {e}")
+        });
+        debug_assert_eq!(records.len(), block.records, "block record count drift");
+        for rec in records {
+            sink(rec);
+        }
+    }
+}
+
+impl<K: Data + Hash + Eq + SerDe, V: Data + SerDe, C: Data + SerDe> ShuffleDepObj
+    for ShuffleDependency<K, V, C>
+{
     fn shuffle_id(&self) -> usize {
         self.shuffle_id
     }
@@ -112,9 +183,10 @@ impl<K: Data + Hash + Eq, V: Data, C: Data> ShuffleDepObj for ShuffleDependency<
         let records = materialize(&self.parent, map_part, ctx);
         let nr = self.num_reduce_partitions();
         let mgr = ctx.context().shuffle_manager();
+        let shared_nothing = ctx.context().conf().shared_nothing;
         if self.map_side_combine {
             let agg = self.aggregator.as_ref().unwrap();
-            // Combine locally, then bucket combiners.
+            // Combine locally, then bucket and serialize combiners.
             let mut combined: FxHashMap<K, C> = FxHashMap::default();
             for (k, v) in records {
                 match combined.get_mut(&k) {
@@ -129,22 +201,14 @@ impl<K: Data + Hash + Eq, V: Data, C: Data> ShuffleDepObj for ShuffleDependency<
                 let p = self.partitioner.partition(&k);
                 buckets[p].push((k, c));
             }
-            for (p, bucket) in buckets.into_iter().enumerate() {
-                let n = bucket.len();
-                let bytes = n * std::mem::size_of::<(K, C)>();
-                mgr.write_bucket(self.shuffle_id, p, Arc::new(bucket), n, bytes);
-            }
+            write_buckets(mgr, self.shuffle_id, map_part, buckets, shared_nothing);
         } else {
             let mut buckets: Vec<Vec<(K, V)>> = (0..nr).map(|_| Vec::new()).collect();
             for (k, v) in records {
                 let p = self.partitioner.partition(&k);
                 buckets[p].push((k, v));
             }
-            for (p, bucket) in buckets.into_iter().enumerate() {
-                let n = bucket.len();
-                let bytes = n * std::mem::size_of::<(K, V)>();
-                mgr.write_bucket(self.shuffle_id, p, Arc::new(bucket), n, bytes);
-            }
+            write_buckets(mgr, self.shuffle_id, map_part, buckets, shared_nothing);
         }
     }
 }
@@ -152,13 +216,15 @@ impl<K: Data + Hash + Eq, V: Data, C: Data> ShuffleDepObj for ShuffleDependency<
 // -------------------------------------------------------------- ShuffledRdd
 
 /// Post-shuffle RDD with combine semantics: output is `(K, C)`.
-pub struct ShuffledRdd<K: Data + Hash + Eq, V: Data, C: Data> {
+pub struct ShuffledRdd<K: Data + Hash + Eq + SerDe, V: Data + SerDe, C: Data + SerDe> {
     id: usize,
     ctx: SparkletContext,
     dep: Arc<ShuffleDependency<K, V, C>>,
 }
 
-impl<K: Data + Hash + Eq, V: Data, C: Data> DepNode for ShuffledRdd<K, V, C> {
+impl<K: Data + Hash + Eq + SerDe, V: Data + SerDe, C: Data + SerDe> DepNode
+    for ShuffledRdd<K, V, C>
+{
     fn node_id(&self) -> usize {
         self.id
     }
@@ -172,7 +238,9 @@ impl<K: Data + Hash + Eq, V: Data, C: Data> DepNode for ShuffledRdd<K, V, C> {
     }
 }
 
-impl<K: Data + Hash + Eq, V: Data, C: Data> RddBase<(K, C)> for ShuffledRdd<K, V, C> {
+impl<K: Data + Hash + Eq + SerDe, V: Data + SerDe, C: Data + SerDe> RddBase<(K, C)>
+    for ShuffledRdd<K, V, C>
+{
     fn id(&self) -> usize {
         self.id
     }
@@ -184,35 +252,26 @@ impl<K: Data + Hash + Eq, V: Data, C: Data> RddBase<(K, C)> for ShuffledRdd<K, V
     }
     fn compute(&self, part: usize, ctx: &TaskContext) -> Vec<(K, C)> {
         let mgr = ctx.context().shuffle_manager();
-        let buckets = mgr.fetch(self.dep.shuffle_id, part);
         let agg = self.dep.aggregator.as_ref().expect("shuffled rdd aggregator");
         let mut merged: FxHashMap<K, C> = FxHashMap::default();
         if self.dep.map_side_combine {
-            for b in buckets {
-                let bucket = b
-                    .downcast_ref::<Vec<(K, C)>>()
-                    .expect("combiner bucket type");
-                for (k, c) in bucket.iter().cloned() {
-                    match merged.get_mut(&k) {
-                        Some(acc) => (agg.merge_combiners)(acc, c),
-                        None => {
-                            merged.insert(k, c);
-                        }
+            read_blocks::<(K, C)>(mgr, self.dep.shuffle_id, part, |(k, c)| {
+                match merged.get_mut(&k) {
+                    Some(acc) => (agg.merge_combiners)(acc, c),
+                    None => {
+                        merged.insert(k, c);
                     }
                 }
-            }
+            });
         } else {
-            for b in buckets {
-                let bucket = b.downcast_ref::<Vec<(K, V)>>().expect("value bucket type");
-                for (k, v) in bucket.iter().cloned() {
-                    match merged.get_mut(&k) {
-                        Some(acc) => (agg.merge_value)(acc, v),
-                        None => {
-                            merged.insert(k, (agg.create)(v));
-                        }
+            read_blocks::<(K, V)>(mgr, self.dep.shuffle_id, part, |(k, v)| {
+                match merged.get_mut(&k) {
+                    Some(acc) => (agg.merge_value)(acc, v),
+                    None => {
+                        merged.insert(k, (agg.create)(v));
                     }
                 }
-            }
+            });
         }
         merged.into_iter().collect()
     }
@@ -222,13 +281,13 @@ impl<K: Data + Hash + Eq, V: Data, C: Data> RddBase<(K, C)> for ShuffledRdd<K, V
 
 /// Post-shuffle RDD *without* aggregation: `partitionBy` — records land on
 /// the partition their key hashes to, values untouched.
-pub struct PartitionedRdd<K: Data + Hash + Eq, V: Data> {
+pub struct PartitionedRdd<K: Data + Hash + Eq + SerDe, V: Data + SerDe> {
     id: usize,
     ctx: SparkletContext,
     dep: Arc<ShuffleDependency<K, V, V>>,
 }
 
-impl<K: Data + Hash + Eq, V: Data> DepNode for PartitionedRdd<K, V> {
+impl<K: Data + Hash + Eq + SerDe, V: Data + SerDe> DepNode for PartitionedRdd<K, V> {
     fn node_id(&self) -> usize {
         self.id
     }
@@ -242,7 +301,7 @@ impl<K: Data + Hash + Eq, V: Data> DepNode for PartitionedRdd<K, V> {
     }
 }
 
-impl<K: Data + Hash + Eq, V: Data> RddBase<(K, V)> for PartitionedRdd<K, V> {
+impl<K: Data + Hash + Eq + SerDe, V: Data + SerDe> RddBase<(K, V)> for PartitionedRdd<K, V> {
     fn id(&self) -> usize {
         self.id
     }
@@ -255,10 +314,7 @@ impl<K: Data + Hash + Eq, V: Data> RddBase<(K, V)> for PartitionedRdd<K, V> {
     fn compute(&self, part: usize, ctx: &TaskContext) -> Vec<(K, V)> {
         let mgr = ctx.context().shuffle_manager();
         let mut out = Vec::new();
-        for b in mgr.fetch(self.dep.shuffle_id, part) {
-            let bucket = b.downcast_ref::<Vec<(K, V)>>().expect("bucket type");
-            out.extend(bucket.iter().cloned());
-        }
+        read_blocks::<(K, V)>(mgr, self.dep.shuffle_id, part, |kv| out.push(kv));
         out
     }
 }
@@ -266,9 +322,11 @@ impl<K: Data + Hash + Eq, V: Data> RddBase<(K, V)> for PartitionedRdd<K, V> {
 // ------------------------------------------------------------ PairRdd trait
 
 /// Key-value operations on `Rdd<(K, V)>` — the `JavaPairRDD` surface the
-/// paper's pseudo-code uses.
-pub trait PairRdd<K: Data + Hash + Eq, V: Data> {
-    fn combine_by_key<C: Data>(
+/// paper's pseudo-code uses. All of these (except the narrow
+/// projections) cross a shuffle, so keys, values, and combiners must be
+/// [`SerDe`].
+pub trait PairRdd<K: Data + Hash + Eq + SerDe, V: Data + SerDe> {
+    fn combine_by_key<C: Data + SerDe>(
         &self,
         aggregator: Aggregator<K, V, C>,
         partitioner: Arc<dyn Partitioner<K>>,
@@ -303,11 +361,11 @@ pub trait PairRdd<K: Data + Hash + Eq, V: Data> {
     where
         K: Ord;
 
-    fn join<W: Data>(&self, other: &Rdd<(K, W)>) -> Rdd<(K, (V, W))>;
+    fn join<W: Data + SerDe>(&self, other: &Rdd<(K, W)>) -> Rdd<(K, (V, W))>;
 
     /// Spark's `aggregateByKey`: zero value + per-value merge + combiner
     /// merge (map-side combined).
-    fn aggregate_by_key<C: Data>(
+    fn aggregate_by_key<C: Data + SerDe>(
         &self,
         zero: C,
         seq_op: impl Fn(&mut C, V) + Send + Sync + 'static,
@@ -322,11 +380,11 @@ pub trait PairRdd<K: Data + Hash + Eq, V: Data> {
     ) -> Rdd<(K, V)>;
 
     /// Group both RDDs by key in one pass (Spark's `cogroup`).
-    fn cogroup<W: Data>(&self, other: &Rdd<(K, W)>) -> Rdd<(K, (Vec<V>, Vec<W>))>;
+    fn cogroup<W: Data + SerDe>(&self, other: &Rdd<(K, W)>) -> Rdd<(K, (Vec<V>, Vec<W>))>;
 }
 
-impl<K: Data + Hash + Eq, V: Data> PairRdd<K, V> for Rdd<(K, V)> {
-    fn combine_by_key<C: Data>(
+impl<K: Data + Hash + Eq + SerDe, V: Data + SerDe> PairRdd<K, V> for Rdd<(K, V)> {
+    fn combine_by_key<C: Data + SerDe>(
         &self,
         aggregator: Aggregator<K, V, C>,
         partitioner: Arc<dyn Partitioner<K>>,
@@ -455,7 +513,7 @@ impl<K: Data + Hash + Eq, V: Data> PairRdd<K, V> for Rdd<(K, V)> {
             })
     }
 
-    fn join<W: Data>(&self, other: &Rdd<(K, W)>) -> Rdd<(K, (V, W))> {
+    fn join<W: Data + SerDe>(&self, other: &Rdd<(K, W)>) -> Rdd<(K, (V, W))> {
         self.cogroup(other).flat_map(|(k, (vs, ws))| {
             let mut out = Vec::with_capacity(vs.len() * ws.len());
             for v in &vs {
@@ -467,7 +525,7 @@ impl<K: Data + Hash + Eq, V: Data> PairRdd<K, V> for Rdd<(K, V)> {
         })
     }
 
-    fn aggregate_by_key<C: Data>(
+    fn aggregate_by_key<C: Data + SerDe>(
         &self,
         zero: C,
         seq_op: impl Fn(&mut C, V) + Send + Sync + 'static,
@@ -508,7 +566,7 @@ impl<K: Data + Hash + Eq, V: Data> PairRdd<K, V> for Rdd<(K, V)> {
         )
     }
 
-    fn cogroup<W: Data>(&self, other: &Rdd<(K, W)>) -> Rdd<(K, (Vec<V>, Vec<W>))> {
+    fn cogroup<W: Data + SerDe>(&self, other: &Rdd<(K, W)>) -> Rdd<(K, (Vec<V>, Vec<W>))> {
         // Tag sides, union, group once; split per key.
         let left = self.map_values(|v| (Some(v), None::<W>));
         let right = other.map_values(|w| (None::<V>, Some(w)));

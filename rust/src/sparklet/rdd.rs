@@ -5,6 +5,7 @@ use std::sync::Arc;
 
 use super::context::SparkletContext;
 use super::pair::ShuffleDepObj;
+use super::serde::SerDe;
 
 /// Element types storable in an RDD. Blanket-implemented.
 pub trait Data: Clone + Send + Sync + 'static {}
@@ -167,10 +168,11 @@ impl<T: Data> Rdd<T> {
         super::transforms::coalesce(self, n)
     }
 
-    /// Redistribute into `n` partitions via a round-robin shuffle.
+    /// Redistribute into `n` partitions via a round-robin shuffle
+    /// (wide, so the element type must be serializable).
     pub fn repartition(&self, n: usize) -> Rdd<T>
     where
-        T: std::hash::Hash + Eq,
+        T: std::hash::Hash + Eq + SerDe,
     {
         super::transforms::repartition(self, n)
     }
@@ -275,7 +277,7 @@ impl<T: Data> Rdd<T> {
     /// Count occurrences of each distinct value (`countByValue`).
     pub fn count_by_value(&self) -> std::collections::HashMap<T, usize>
     where
-        T: std::hash::Hash + Eq,
+        T: std::hash::Hash + Eq + SerDe,
     {
         use super::pair::PairRdd;
         self.map_to_pair(|x| (x, 1usize))

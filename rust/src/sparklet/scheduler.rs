@@ -60,6 +60,7 @@ fn run_stage<U: Send + 'static>(
     // (the driver runs stages sequentially, so deltas don't interleave).
     let records_before = ctx.shuffle_manager().records_written();
     let bytes_before = ctx.shuffle_manager().bytes_written();
+    let spilled_before = ctx.shuffle_manager().spilled_blocks();
     let mut results: Vec<Option<U>> = (0..num_tasks).map(|_| None).collect();
     let mut task_millis = vec![0.0f64; num_tasks];
     let mut pending: Vec<usize> = (0..num_tasks).collect();
@@ -138,6 +139,7 @@ fn run_stage<U: Send + 'static>(
             retries,
             shuffle_records: ctx.shuffle_manager().records_written() - records_before,
             shuffle_bytes: ctx.shuffle_manager().bytes_written() - bytes_before,
+            spilled_blocks: ctx.shuffle_manager().spilled_blocks() - spilled_before,
             backend: ctx.executor().name(),
             steals,
             queue_wait_ms,

@@ -1,83 +1,193 @@
-//! In-memory hash shuffle — the wide-dependency data plane.
+//! Serialized block shuffle — the wide-dependency data plane.
 //!
-//! Map tasks partition their output into `num_reduce` buckets and
-//! register each bucket here; reduce tasks fetch and concatenate the
-//! buckets for their partition. Buckets are type-erased (`Box<dyn Any>`)
-//! because the shuffle manager is shared across all shuffles of a
-//! context; the typed shuffle dependency downcasts on read.
+//! Map tasks partition their output into `num_reduce` buckets, serialize
+//! each bucket through the [`super::serde`] codec, and register the
+//! resulting byte block here; reduce tasks fetch and deserialize the
+//! blocks for their partition. Payloads crossing a stage boundary are
+//! **owned bytes** — no `Arc<dyn Any>` sharing — which makes
+//! `bytes_written` exact (serialized sizes, not `size_of` estimates),
+//! lets the [`BlockStore`] spill cold blocks to disk under a memory
+//! budget, and is the stepping stone to a multi-process executor
+//! backend (a block is already transport-ready).
+//!
+//! Fetching a shuffle whose map stage has not been marked completed is a
+//! typed [`ShuffleError::MapStageIncomplete`] — a scheduler ordering bug
+//! fails loudly instead of reading as "zero records".
 
-use std::any::Any;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::fmt;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-type Bucket = Arc<dyn Any + Send + Sync>;
+use super::block::{BlockId, BlockStore, ShuffleBlock};
+
+/// Typed shuffle failures.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ShuffleError {
+    /// A reduce task asked for a shuffle whose map stage has not been
+    /// marked completed — the scheduler must run (and complete) the map
+    /// stage first, so this is always an ordering bug, never "no data".
+    MapStageIncomplete {
+        shuffle_id: usize,
+        reduce_part: usize,
+    },
+    /// The block index knows the id but the store lost the payload
+    /// (e.g. a spill file vanished between index and store lookups).
+    MissingBlock { id: BlockId },
+}
+
+impl fmt::Display for ShuffleError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::MapStageIncomplete {
+                shuffle_id,
+                reduce_part,
+            } => write!(
+                f,
+                "shuffle {shuffle_id} fetched for reduce partition {reduce_part} before its \
+                 map stage completed (scheduler ordering bug)"
+            ),
+            Self::MissingBlock { id } => write!(f, "shuffle block {id} missing from the store"),
+        }
+    }
+}
+
+impl std::error::Error for ShuffleError {}
 
 /// Shuffle data + completion registry for one context.
-#[derive(Default)]
 pub struct ShuffleManager {
-    /// (shuffle_id, reduce_partition) -> one bucket per completed map task.
-    buckets: Mutex<HashMap<(usize, usize), Vec<Bucket>>>,
+    store: BlockStore,
+    /// (shuffle_id, reduce_partition) -> ids of the blocks written for it.
+    index: Mutex<HashMap<(usize, usize), Vec<BlockId>>>,
     /// Shuffle ids whose map stage has fully completed.
-    completed: Mutex<std::collections::HashSet<usize>>,
+    completed: Mutex<HashSet<usize>>,
     next_shuffle_id: AtomicUsize,
     /// Total records moved through the shuffle (metrics).
     records_written: AtomicU64,
-    /// Estimated bytes moved through the shuffle: records × the static
-    /// size of the record type (heap payloads like `Vec` count as their
-    /// header only — an estimate, but a monotone, cheap one; enough for
-    /// backpressure decisions in the streaming layer).
+    /// Exact bytes moved through the shuffle: the serialized length of
+    /// every block written (retried map tasks count again — this is a
+    /// "bytes moved" meter, mirroring Spark's shuffle write metric).
     bytes_written: AtomicU64,
+    /// Shared-nothing assertion mode (`SparkletConf::shared_nothing`):
+    /// `fetch` verifies the store's byte buffers are exclusively owned
+    /// at hand-out — no map-side `Arc` alias survived serialization.
+    shared_nothing: bool,
+}
+
+impl Default for ShuffleManager {
+    fn default() -> Self {
+        Self::with_conf(None, cfg!(debug_assertions))
+    }
 }
 
 impl ShuffleManager {
+    /// Unlimited memory budget, shared-nothing checks in debug builds.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// `memory_budget`: in-memory block budget in bytes (`None` =
+    /// unlimited). `shared_nothing`: enable the exclusive-ownership
+    /// assertion on fetch.
+    pub fn with_conf(memory_budget: Option<usize>, shared_nothing: bool) -> Self {
+        Self {
+            store: BlockStore::new(memory_budget),
+            index: Mutex::new(HashMap::new()),
+            completed: Mutex::new(HashSet::new()),
+            next_shuffle_id: AtomicUsize::new(0),
+            records_written: AtomicU64::new(0),
+            bytes_written: AtomicU64::new(0),
+            shared_nothing,
+        }
     }
 
     pub fn new_shuffle_id(&self) -> usize {
         self.next_shuffle_id.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Write one map task's bucket for `reduce_part`. `records` is the
-    /// bucket length and `bytes` the estimated payload size (records ×
-    /// size hint), both tracked for metrics.
-    pub fn write_bucket(
+    /// Register one map task's serialized bucket for `reduce_part`.
+    /// `records` is the bucket's record count; the byte cost is exactly
+    /// `bytes.len()`. Writing the same (shuffle, reduce, map) triple
+    /// again (a retried map task) overwrites — retries are idempotent.
+    pub fn write_block(
         &self,
         shuffle_id: usize,
         reduce_part: usize,
-        bucket: Bucket,
+        map_part: usize,
+        bytes: Vec<u8>,
         records: usize,
-        bytes: usize,
     ) {
         self.records_written
             .fetch_add(records as u64, Ordering::Relaxed);
-        self.bytes_written.fetch_add(bytes as u64, Ordering::Relaxed);
-        self.buckets
-            .lock()
-            .unwrap()
-            .entry((shuffle_id, reduce_part))
-            .or_default()
-            .push(bucket);
+        self.bytes_written
+            .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        let id = BlockId {
+            shuffle_id,
+            reduce_part,
+            map_part,
+        };
+        {
+            let mut index = self.index.lock().unwrap();
+            let ids = index.entry((shuffle_id, reduce_part)).or_default();
+            if !ids.contains(&id) {
+                ids.push(id);
+            }
+        }
+        self.store.put(id, bytes, records);
     }
 
-    /// Fetch all buckets for a reduce partition (empty if none).
-    pub fn fetch(&self, shuffle_id: usize, reduce_part: usize) -> Vec<Bucket> {
-        self.buckets
+    /// Fetch all blocks for a reduce partition (possibly spilled ones,
+    /// reloaded transparently). An empty `Vec` is a legitimate "no
+    /// records hashed here"; asking before the map stage completed is a
+    /// typed error.
+    pub fn fetch(
+        &self,
+        shuffle_id: usize,
+        reduce_part: usize,
+    ) -> Result<Vec<ShuffleBlock>, ShuffleError> {
+        if !self.is_completed(shuffle_id) {
+            return Err(ShuffleError::MapStageIncomplete {
+                shuffle_id,
+                reduce_part,
+            });
+        }
+        let ids = self
+            .index
             .lock()
             .unwrap()
             .get(&(shuffle_id, reduce_part))
             .cloned()
-            .unwrap_or_default()
+            .unwrap_or_default();
+        let mut out = Vec::with_capacity(ids.len());
+        for id in ids {
+            let block = self
+                .store
+                .get(&id)
+                .ok_or(ShuffleError::MissingBlock { id })?;
+            if self.shared_nothing {
+                // The store holds one Arc, we hold one: anything above 2
+                // means a payload is aliased across the stage boundary
+                // (a just-spilled block legitimately reads 1).
+                let owners = Arc::strong_count(&block.bytes);
+                assert!(
+                    owners <= 2,
+                    "shared-nothing violation: block {id} bytes have {owners} owners at fetch"
+                );
+            }
+            out.push(block);
+        }
+        Ok(out)
     }
 
-    /// Clear any partial buckets for a shuffle (before re-running its map
-    /// stage after a failure, so retries don't double-write).
+    /// Clear any partial blocks for a shuffle (before re-running its map
+    /// stage after a failure, so retries start clean) — spilled blocks
+    /// included, their files deleted.
     pub fn clear_shuffle(&self, shuffle_id: usize) {
-        self.buckets
+        self.index
             .lock()
             .unwrap()
             .retain(|(sid, _), _| *sid != shuffle_id);
+        self.store.remove_where(|id| id.shuffle_id == shuffle_id);
         self.completed.lock().unwrap().remove(&shuffle_id);
     }
 
@@ -93,41 +203,151 @@ impl ShuffleManager {
         self.records_written.load(Ordering::Relaxed)
     }
 
-    /// Estimated bytes written through the shuffle (see `bytes_written`
-    /// field note: static record size × records).
+    /// Exact serialized bytes written through the shuffle.
     pub fn bytes_written(&self) -> u64 {
         self.bytes_written.load(Ordering::Relaxed)
     }
 
+    /// Blocks spilled to disk under the memory budget.
+    pub fn spilled_blocks(&self) -> u64 {
+        self.store.spilled_blocks()
+    }
+
+    /// Spilled blocks reloaded on fetch.
+    pub fn spill_reloads(&self) -> u64 {
+        self.store.reloaded_blocks()
+    }
+
+    /// Total bytes written to spill files.
+    pub fn spilled_bytes(&self) -> u64 {
+        self.store.spilled_bytes()
+    }
+
+    /// Human-readable spill line for CLI output.
+    pub fn spill_summary(&self) -> String {
+        let budget = self.store.budget();
+        let budget = if budget == usize::MAX {
+            "unlimited".to_string()
+        } else {
+            format!("{} B", budget)
+        };
+        format!(
+            "memory budget {budget}: {} blocks spilled ({} B), {} reloads, {} B resident",
+            self.spilled_blocks(),
+            self.spilled_bytes(),
+            self.spill_reloads(),
+            self.store.mem_bytes(),
+        )
+    }
+
     /// Drop all shuffle data (job teardown / memory reclamation).
     pub fn clear_all(&self) {
-        self.buckets.lock().unwrap().clear();
+        self.index.lock().unwrap().clear();
+        self.store.clear();
         self.completed.lock().unwrap().clear();
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::serde::{decode_records, encode_records};
     use super::*;
 
+    fn block_of(recs: &[(u32, String)]) -> (Vec<u8>, usize) {
+        (encode_records(recs), recs.len())
+    }
+
     #[test]
-    fn write_fetch_roundtrip() {
+    fn write_fetch_roundtrip_with_exact_bytes() {
         let m = ShuffleManager::new();
         let sid = m.new_shuffle_id();
-        let rec = std::mem::size_of::<(u32, &str)>();
-        m.write_bucket(sid, 0, Arc::new(vec![(1u32, "a")]), 1, rec);
-        m.write_bucket(sid, 0, Arc::new(vec![(2u32, "b")]), 1, rec);
-        m.write_bucket(sid, 1, Arc::new(vec![(3u32, "c")]), 1, rec);
-        let got = m.fetch(sid, 0);
+        let a = vec![(1u32, "a".to_string())];
+        let b = vec![(2u32, "b".to_string())];
+        let c = vec![(3u32, "c".to_string())];
+        let (ba, na) = block_of(&a);
+        let (bb, nb) = block_of(&b);
+        let (bc, nc) = block_of(&c);
+        let exact = (ba.len() + bb.len() + bc.len()) as u64;
+        m.write_block(sid, 0, 0, ba, na);
+        m.write_block(sid, 0, 1, bb, nb);
+        m.write_block(sid, 1, 2, bc, nc);
+        m.mark_completed(sid);
+        let got = m.fetch(sid, 0).unwrap();
         assert_eq!(got.len(), 2);
-        let first = got[0]
-            .downcast_ref::<Vec<(u32, &str)>>()
-            .expect("type roundtrip");
-        assert_eq!(first, &vec![(1u32, "a")]);
-        assert_eq!(m.fetch(sid, 1).len(), 1);
-        assert_eq!(m.fetch(sid, 2).len(), 0);
+        let first: Vec<(u32, String)> = decode_records(&got[0].bytes).unwrap();
+        assert_eq!(first, a);
+        assert_eq!(got[0].records, 1);
+        assert_eq!(m.fetch(sid, 1).unwrap().len(), 1);
+        assert_eq!(m.fetch(sid, 2).unwrap().len(), 0, "empty partition is Ok");
         assert_eq!(m.records_written(), 3);
-        assert_eq!(m.bytes_written(), 3 * rec as u64);
+        assert_eq!(m.bytes_written(), exact, "byte accounting is exact");
+    }
+
+    #[test]
+    fn fetch_before_completion_is_a_typed_error() {
+        let m = ShuffleManager::new();
+        let sid = m.new_shuffle_id();
+        let (bytes, n) = block_of(&[(1u32, "x".to_string())]);
+        m.write_block(sid, 0, 0, bytes, n);
+        let err = m.fetch(sid, 0).unwrap_err();
+        assert_eq!(
+            err,
+            ShuffleError::MapStageIncomplete {
+                shuffle_id: sid,
+                reduce_part: 0
+            }
+        );
+        assert!(err.to_string().contains("before its map stage"), "{err}");
+        // completing flips it to Ok; clearing flips it back to Err
+        m.mark_completed(sid);
+        assert_eq!(m.fetch(sid, 0).unwrap().len(), 1);
+        m.clear_shuffle(sid);
+        assert!(matches!(
+            m.fetch(sid, 0),
+            Err(ShuffleError::MapStageIncomplete { .. })
+        ));
+    }
+
+    #[test]
+    fn retried_map_task_overwrites_not_duplicates() {
+        let m = ShuffleManager::new();
+        let sid = m.new_shuffle_id();
+        let (b1, n1) = block_of(&[(1u32, "first".to_string())]);
+        m.write_block(sid, 0, 0, b1, n1);
+        let retry = vec![(1u32, "retry".to_string()), (2, "extra".to_string())];
+        let (b2, n2) = block_of(&retry);
+        m.write_block(sid, 0, 0, b2, n2);
+        m.mark_completed(sid);
+        let got = m.fetch(sid, 0).unwrap();
+        assert_eq!(got.len(), 1, "same (shuffle,reduce,map) triple overwrote");
+        let recs: Vec<(u32, String)> = decode_records(&got[0].bytes).unwrap();
+        assert_eq!(recs, retry);
+    }
+
+    #[test]
+    fn clear_shuffle_scopes_to_id_even_when_spilled() {
+        // 1-byte budget: every block lives on disk immediately.
+        let m = ShuffleManager::with_conf(Some(1), true);
+        let a = m.new_shuffle_id();
+        let b = m.new_shuffle_id();
+        let (ba, na) = block_of(&[(1u32, "a".to_string())]);
+        let (bb, nb) = block_of(&[(2u32, "b".to_string())]);
+        m.write_block(a, 0, 0, ba, na);
+        m.write_block(b, 0, 0, bb, nb);
+        assert!(m.spilled_blocks() >= 2, "budget of 1 byte spills all");
+        m.mark_completed(a);
+        m.mark_completed(b);
+        m.clear_shuffle(a);
+        assert!(matches!(
+            m.fetch(a, 0),
+            Err(ShuffleError::MapStageIncomplete { .. })
+        ));
+        // b survives a's clear and reloads from its spill file
+        let got = m.fetch(b, 0).unwrap();
+        let recs: Vec<(u32, String)> = decode_records(&got[0].bytes).unwrap();
+        assert_eq!(recs, vec![(2u32, "b".to_string())]);
+        assert!(m.spill_reloads() >= 1);
+        assert!(m.spill_summary().contains("spilled"), "{}", m.spill_summary());
     }
 
     #[test]
@@ -139,18 +359,6 @@ mod tests {
         assert!(m.is_completed(sid));
         m.clear_shuffle(sid);
         assert!(!m.is_completed(sid));
-    }
-
-    #[test]
-    fn clear_shuffle_scopes_to_id() {
-        let m = ShuffleManager::new();
-        let a = m.new_shuffle_id();
-        let b = m.new_shuffle_id();
-        m.write_bucket(a, 0, Arc::new(vec![1u32]), 1, 4);
-        m.write_bucket(b, 0, Arc::new(vec![2u32]), 1, 4);
-        m.clear_shuffle(a);
-        assert_eq!(m.fetch(a, 0).len(), 0);
-        assert_eq!(m.fetch(b, 0).len(), 1);
     }
 
     #[test]

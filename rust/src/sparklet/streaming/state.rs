@@ -15,9 +15,11 @@ use std::sync::{Arc, Mutex};
 use super::dstream::DStream;
 use crate::sparklet::pair::PairRdd;
 use crate::sparklet::rdd::Data;
+use crate::sparklet::serde::SerDe;
 
-/// `updateStateByKey` on pair DStreams.
-pub trait StatefulDStream<K: Data + Hash + Eq, V: Data> {
+/// `updateStateByKey` on pair DStreams. Keys, values, and state cross
+/// the cogroup shuffle, so all three must be [`SerDe`].
+pub trait StatefulDStream<K: Data + Hash + Eq + SerDe, V: Data + SerDe> {
     /// For every key with new values this batch (or existing state), call
     /// `update(new_values, previous_state)`; `None` drops the key. The
     /// returned stream emits the full state each batch.
@@ -25,15 +27,15 @@ pub trait StatefulDStream<K: Data + Hash + Eq, V: Data> {
     /// Stateful streams are forward-only: asking for a batch older than
     /// the last one computed (after its memo entry was evicted) panics,
     /// since past states are not retained.
-    fn update_state_by_key<S: Data>(
+    fn update_state_by_key<S: Data + SerDe>(
         &self,
         num_partitions: usize,
         update: impl Fn(Vec<V>, Option<S>) -> Option<S> + Send + Sync + 'static,
     ) -> DStream<(K, S)>;
 }
 
-impl<K: Data + Hash + Eq, V: Data> StatefulDStream<K, V> for DStream<(K, V)> {
-    fn update_state_by_key<S: Data>(
+impl<K: Data + Hash + Eq + SerDe, V: Data + SerDe> StatefulDStream<K, V> for DStream<(K, V)> {
+    fn update_state_by_key<S: Data + SerDe>(
         &self,
         num_partitions: usize,
         update: impl Fn(Vec<V>, Option<S>) -> Option<S> + Send + Sync + 'static,
@@ -103,9 +105,9 @@ mod tests {
     fn running_counts_per_key() {
         let ssc = StreamContext::new(SparkletContext::local(2));
         let batches = vec![
-            vec![("a", 1u32), ("b", 1)],
-            vec![("a", 1), ("a", 1)],
-            vec![("c", 5)],
+            vec![('a', 1u32), ('b', 1)],
+            vec![('a', 1), ('a', 1)],
+            vec![('c', 5)],
         ];
         let s = ssc.queue_stream(batches, 2);
         let counts = s.update_state_by_key(4, |vals: Vec<u32>, prev: Option<u32>| {
@@ -116,17 +118,17 @@ mod tests {
             v.sort();
             v
         };
-        assert_eq!(collect_sorted(0), vec![("a", 1), ("b", 1)]);
-        assert_eq!(collect_sorted(1), vec![("a", 3), ("b", 1)]);
-        assert_eq!(collect_sorted(2), vec![("a", 3), ("b", 1), ("c", 5)]);
+        assert_eq!(collect_sorted(0), vec![('a', 1), ('b', 1)]);
+        assert_eq!(collect_sorted(1), vec![('a', 3), ('b', 1)]);
+        assert_eq!(collect_sorted(2), vec![('a', 3), ('b', 1), ('c', 5)]);
     }
 
     #[test]
     fn returning_none_drops_keys() {
         let ssc = StreamContext::new(SparkletContext::local(2));
         let batches = vec![
-            vec![("keep", 1u32), ("drop", 1)],
-            vec![("drop", 1)],
+            vec![("keep".to_string(), 1u32), ("drop".to_string(), 1)],
+            vec![("drop".to_string(), 1)],
             vec![],
         ];
         let s = ssc.queue_stream(batches, 2);
@@ -137,15 +139,15 @@ mod tests {
         });
         let mut t1 = st.rdd(1).collect();
         t1.sort();
-        assert_eq!(t1, vec![("keep", 1)]);
+        assert_eq!(t1, vec![("keep".to_string(), 1)]);
         // State persists through empty batches.
-        assert_eq!(st.rdd(2).collect(), vec![("keep", 1)]);
+        assert_eq!(st.rdd(2).collect(), vec![("keep".to_string(), 1)]);
     }
 
     #[test]
     fn state_over_windowed_stream_counts_each_record_once() {
         let ssc = StreamContext::new(SparkletContext::local(2));
-        let src = ssc.generator_stream(1, |_| vec![("k", 1u32)]);
+        let src = ssc.generator_stream(1, |_| vec![('k', 1u32)]);
         // Tumbling-2 parent emits only at ticks 1, 3, ...: the state must
         // fold exactly those batches (4 records by t=3), not the partial
         // inactive-tick windows as well.
@@ -154,17 +156,17 @@ mod tests {
             .update_state_by_key(2, |vals: Vec<u32>, prev: Option<u32>| {
                 Some(prev.unwrap_or(0) + vals.iter().sum::<u32>())
             });
-        assert_eq!(st.rdd(3).collect(), vec![("k", 4)]);
+        assert_eq!(st.rdd(3).collect(), vec![('k', 4)]);
     }
 
     #[test]
     fn state_advances_through_skipped_queries() {
         let ssc = StreamContext::new(SparkletContext::local(2));
-        let s = ssc.generator_stream(1, |t| vec![("k", t as u32)]);
+        let s = ssc.generator_stream(1, |t| vec![('k', t as u32)]);
         let st = s.update_state_by_key(2, |vals: Vec<u32>, prev: Option<u32>| {
             Some(prev.unwrap_or(0) + vals.iter().sum::<u32>())
         });
         // Jump straight to batch 3: batches 0..=3 must all be applied.
-        assert_eq!(st.rdd(3).collect(), vec![("k", 0 + 1 + 2 + 3)]);
+        assert_eq!(st.rdd(3).collect(), vec![('k', 0 + 1 + 2 + 3)]);
     }
 }

@@ -9,6 +9,7 @@ use std::sync::Arc;
 
 use super::context::SparkletContext;
 use super::rdd::{materialize, Data, Dep, DepNode, Rdd, RddBase, TaskContext};
+use super::serde::SerDe;
 use crate::util::SplitMix64;
 
 // ------------------------------------------------------------------ sources
@@ -373,7 +374,7 @@ pub fn coalesce<T: Data>(rdd: &Rdd<T>, n: usize) -> Rdd<T> {
 
 /// Round-robin repartition (wide): tag with a rotating key, hash-shuffle,
 /// strip the tag.
-pub fn repartition<T: Data + std::hash::Hash + Eq>(rdd: &Rdd<T>, n: usize) -> Rdd<T> {
+pub fn repartition<T: Data + std::hash::Hash + Eq + SerDe>(rdd: &Rdd<T>, n: usize) -> Rdd<T> {
     use super::pair::PairRdd;
     let n = n.max(1);
     let tagged = rdd.map_partitions(move |part, items| {

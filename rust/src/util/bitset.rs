@@ -46,6 +46,12 @@ impl Bitmap {
         Self { words, nbits }
     }
 
+    /// Rebuild from raw parts (the shuffle SerDe decode path). `None`
+    /// when the word count does not match `nbits` — corrupt input.
+    pub fn try_from_raw(words: Vec<u32>, nbits: usize) -> Option<Self> {
+        (words.len() == nbits.div_ceil(32)).then_some(Self { words, nbits })
+    }
+
     #[inline]
     pub fn nbits(&self) -> usize {
         self.nbits

@@ -77,7 +77,7 @@ fn group_by_key_groups_everything() {
 #[test]
 fn partition_by_routes_keys() {
     let sc = sc(4);
-    let pairs: Vec<(usize, &'static str)> = (0..100).map(|i| (i, "x")).collect();
+    let pairs: Vec<(usize, String)> = (0..100).map(|i| (i, "x".to_string())).collect();
     let part = Arc::new(HashPartitioner::new(5));
     let p2 = Arc::clone(&part);
     let rdd = sc.parallelize(pairs, 4).partition_by(part);
@@ -181,11 +181,21 @@ fn sort_by_key_total_order() {
 #[test]
 fn join_matches_nested_loop() {
     let sc = sc(2);
-    let left = sc.parallelize(vec![(1u8, "a"), (2, "b"), (1, "c")], 2);
+    let left = sc.parallelize(
+        vec![
+            (1u8, "a".to_string()),
+            (2, "b".to_string()),
+            (1, "c".to_string()),
+        ],
+        2,
+    );
     let right = sc.parallelize(vec![(1u8, 10u32), (3, 30)], 2);
     let mut got = left.join(&right).collect();
-    got.sort_by_key(|(k, (v, w))| (*k, v.to_string(), *w));
-    assert_eq!(got, vec![(1, ("a", 10)), (1, ("c", 10))]);
+    got.sort_by_key(|(k, (v, w))| (*k, v.clone(), *w));
+    assert_eq!(
+        got,
+        vec![(1, ("a".to_string(), 10)), (1, ("c".to_string(), 10))]
+    );
 }
 
 #[test]
@@ -464,7 +474,14 @@ fn fold_by_key_max() {
 #[test]
 fn cogroup_collects_both_sides() {
     let sc = sc(2);
-    let a = sc.parallelize(vec![(1u8, "x"), (1, "y"), (2, "z")], 2);
+    let a = sc.parallelize(
+        vec![
+            (1u8, "x".to_string()),
+            (1, "y".to_string()),
+            (2, "z".to_string()),
+        ],
+        2,
+    );
     let b = sc.parallelize(vec![(1u8, 10u32), (3, 30)], 2);
     let mut got = a.cogroup(&b).collect();
     got.sort_by_key(|(k, _)| *k);
@@ -473,9 +490,9 @@ fn cogroup_collects_both_sides() {
     assert_eq!(*k1, 1);
     let mut vs1 = vs1.clone();
     vs1.sort();
-    assert_eq!(vs1, vec!["x", "y"]);
+    assert_eq!(vs1, vec!["x".to_string(), "y".to_string()]);
     assert_eq!(ws1, &vec![10]);
-    assert_eq!(got[1], (2, (vec!["z"], vec![])));
+    assert_eq!(got[1], (2, (vec!["z".to_string()], vec![])));
     assert_eq!(got[2], (3, (vec![], vec![30])));
 }
 
@@ -490,6 +507,99 @@ fn count_by_value_and_take_ordered() {
     let rdd2 = sc.parallelize((0..100u32).rev().collect::<Vec<_>>(), 5);
     assert_eq!(rdd2.take_ordered(4), vec![0, 1, 2, 3]);
     assert_eq!(rdd2.top(3), vec![99, 98, 97]);
+}
+
+#[test]
+fn constrained_budget_spills_and_stays_correct() {
+    // A 4 KiB budget forces the wordcount-style shuffle to spill blocks
+    // to disk; results must be oracle-identical and the spill counters
+    // must show both spills and transparent reloads.
+    let conf = SparkletConf::new("spill")
+        .with_cores(3)
+        .unwrap()
+        .with_memory_budget_bytes(4 * 1024)
+        .unwrap()
+        .with_shared_nothing(true);
+    let sc = SparkletContext::new(conf);
+    let pairs: Vec<(u32, u64)> = (0..20_000).map(|i| (i % 257, 1u64)).collect();
+    let mut oracle: HashMap<u32, u64> = HashMap::new();
+    for (k, v) in &pairs {
+        *oracle.entry(*k).or_insert(0) += v;
+    }
+    let got = sc
+        .parallelize(pairs, 6)
+        .reduce_by_key(|a, b| a + b)
+        .collect_as_map();
+    assert_eq!(got, oracle);
+    assert!(
+        sc.shuffle_manager().spilled_blocks() > 0,
+        "budget never spilled: {}",
+        sc.shuffle_manager().spill_summary()
+    );
+    assert!(
+        sc.shuffle_manager().spill_reloads() > 0,
+        "reduce side never reloaded a spilled block"
+    );
+    // the spill delta landed in the per-stage metrics
+    assert!(sc.metrics().total_spilled_blocks() > 0);
+    // exact byte accounting: bytes_written equals the stage-level sum
+    assert_eq!(
+        sc.metrics().total_shuffle_bytes(),
+        sc.shuffle_manager().bytes_written()
+    );
+}
+
+#[test]
+fn retry_from_lineage_with_spilled_blocks() {
+    // Failure injection + a tiny budget: map-stage retries re-run over a
+    // shuffle whose surviving blocks sit on disk; clear_shuffle must
+    // wipe spilled state cleanly so the job still converges.
+    for seed in [3u64, 77] {
+        let conf = SparkletConf::new("spill-retry")
+            .with_cores(4)
+            .unwrap()
+            .with_memory_budget_bytes(2 * 1024)
+            .unwrap()
+            .with_failure_injection(0.4, seed)
+            .with_max_task_failures(8);
+        let sc = SparkletContext::new(conf);
+        let sum: u64 = sc
+            .parallelize((0..8_000u64).collect::<Vec<_>>(), 10)
+            .map_to_pair(|x| (x % 7, x))
+            .reduce_by_key(|a, b| a + b)
+            .values()
+            .collect()
+            .iter()
+            .sum();
+        assert_eq!(sum, (0..8_000u64).sum::<u64>(), "seed {seed}");
+        assert!(sc.metrics().total_retries() > 0, "seed {seed}: no retries");
+        assert!(
+            sc.shuffle_manager().spilled_blocks() > 0,
+            "seed {seed}: nothing spilled"
+        );
+    }
+}
+
+#[test]
+fn shared_nothing_mode_verifies_serialized_boundary() {
+    // With the assertion mode on, every block is decode-verified on
+    // write and ownership-checked on fetch; a two-shuffle pipeline runs
+    // clean end-to-end.
+    let conf = SparkletConf::new("shared-nothing")
+        .with_cores(2)
+        .unwrap()
+        .with_shared_nothing(true);
+    let sc = SparkletContext::new(conf);
+    let mut got = sc
+        .parallelize((0..500u64).collect::<Vec<_>>(), 4)
+        .map_to_pair(|x| (x % 9, x))
+        .reduce_by_key(|a, b| a + b)
+        .map_to_pair(|(k, v)| (v % 2, k))
+        .group_by_key()
+        .collect();
+    got.sort_by_key(|(k, _)| *k);
+    let total: u64 = got.iter().map(|(_, ks)| ks.len() as u64).sum();
+    assert_eq!(total, 9);
 }
 
 #[test]

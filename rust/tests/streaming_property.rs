@@ -6,7 +6,7 @@
 
 use rdd_eclat::fim::engine::MiningSession;
 use rdd_eclat::fim::sequential::eclat_sequential;
-use rdd_eclat::fim::streaming::{IncrementalEclat, StreamingEclatConfig};
+use rdd_eclat::fim::streaming::{BackpressureConfig, IncrementalEclat, StreamingEclatConfig};
 use rdd_eclat::fim::Transaction;
 use rdd_eclat::sparklet::SparkletContext;
 use rdd_eclat::util::prop::forall;
@@ -79,6 +79,104 @@ fn incremental_matches_full_mine_for_all_window_slide_combos() {
         }
         true
     });
+}
+
+/// A small random transaction for the backpressure stream.
+fn bp_txn(rng: &mut SplitMix64) -> Transaction {
+    let width = 1 + rng.gen_range(4);
+    let mut t: Vec<u32> = (0..width).map(|_| rng.gen_range(6) as u32).collect();
+    t.sort_unstable();
+    t.dedup();
+    t
+}
+
+#[test]
+fn backpressure_property_shrinks_under_inflation_recovers_and_stays_exact() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    // Random offered-batch sizes and a byte-inflation factor: while the
+    // synthetic workload inflates shuffle bytes past the watermark the
+    // effective batch limit must shrink below the offered batch size;
+    // once the signal calms it must recover additively and drain every
+    // deferred transaction; and throughout, each window mine must equal
+    // the sequential oracle over the *accepted* stream (mirrored here
+    // through the same FIFO the miner uses — deferral reorders nothing).
+    forall(
+        8,
+        |r: &mut SplitMix64| {
+            let sizes: Vec<usize> = (0..10).map(|_| 4 + r.gen_range(8)).collect();
+            let factor = 2_000 + r.gen_range(2_000) as u64;
+            (sizes, factor)
+        },
+        |(sizes, factor)| {
+            let bytes = Arc::new(AtomicU64::new(0));
+            let probe = Arc::clone(&bytes);
+            let (min_sup, window) = (1u32, 3usize);
+            let cfg = StreamingEclatConfig::new(min_sup, window, 1).with_backpressure(
+                BackpressureConfig::new(4_000)
+                    .with_min_batch(2)
+                    .with_increase_step(4),
+            );
+            let mut inc = IncrementalEclat::new(cfg)
+                .with_byte_source(move || probe.load(Ordering::Relaxed));
+
+            let mut rng = SplitMix64::new(0xB4C4);
+            let mut pending: std::collections::VecDeque<Transaction> = Default::default();
+            let mut groups: Vec<Vec<Transaction>> = Vec::new();
+            let mut min_limit_seen = usize::MAX;
+
+            // Hot phase: every accepted transaction inflates the byte
+            // signal, driving the controller past the watermark.
+            for &n in sizes {
+                let batch: Vec<Transaction> = (0..n).map(|_| bp_txn(&mut rng)).collect();
+                pending.extend(batch.iter().cloned());
+                let out = inc.push_batch(&batch).unwrap();
+                let group: Vec<Transaction> =
+                    (0..out.accepted).map(|_| pending.pop_front().unwrap()).collect();
+                groups.push(group);
+                if let Some(l) = out.effective_limit {
+                    min_limit_seen = min_limit_seen.min(l);
+                }
+                let got = inc.mine_window();
+                let w: Vec<Transaction> = groups[groups.len().saturating_sub(window)..]
+                    .iter()
+                    .flatten()
+                    .cloned()
+                    .collect();
+                if !got.same_as(&eclat_sequential(&w, min_sup)) {
+                    eprintln!("window mismatch during hot phase (n={n})");
+                    return false;
+                }
+                bytes.fetch_add(factor * out.accepted as u64, Ordering::Relaxed);
+            }
+            let max_batch = *sizes.iter().max().unwrap();
+            if min_limit_seen >= max_batch {
+                eprintln!("limit never shrank below the offered batch ({min_limit_seen} >= {max_batch})");
+                return false;
+            }
+
+            // Calm phase: flat byte signal -> additive recovery drains
+            // the deferred queue and lifts the limit back up.
+            let mut last_deferred = usize::MAX;
+            let mut last_limit = 0usize;
+            for _ in 0..40 {
+                let out = inc.push_batch(&[]).unwrap();
+                let group: Vec<Transaction> =
+                    (0..out.accepted).map(|_| pending.pop_front().unwrap()).collect();
+                groups.push(group);
+                last_deferred = out.deferred;
+                last_limit = out.effective_limit.unwrap_or(usize::MAX);
+            }
+            let report = inc.report();
+            let bp = report.backpressure.as_ref().unwrap();
+            last_deferred == 0
+                && pending.is_empty()
+                && last_limit > min_limit_seen
+                && bp.shrinks >= 1
+                && bp.recoveries >= 1
+        },
+    );
 }
 
 #[test]
