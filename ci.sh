@@ -43,12 +43,19 @@ counters = [
     "bp_recoveries",
     "bp_watermark_bytes",
 ]
+# task-duration distribution fields from the event subsystem: present
+# and sane on every row (p50 <= p95 <= p99, skew >= 0)
+percentiles = ["task_p50_ms", "task_p95_ms", "task_p99_ms", "task_skew"]
 for r in rows:
     assert "tidset" in r, r
     assert "memory_budget_mb" in r and "bp_effective_batch" in r, r
     for k in counters:
         assert k in r, (k, r)
         assert isinstance(r[k], int) and r[k] >= 0, (k, r[k])
+    for k in percentiles:
+        assert k in r, (k, r)
+        assert isinstance(r[k], (int, float)) and r[k] >= 0, (k, r[k])
+    assert r["task_p50_ms"] <= r["task_p95_ms"] <= r["task_p99_ms"], r
 # the tidset sweep must cover the full representation axis
 tidsets = {r["tidset"] for r in rows}
 assert {"vec", "bitmap", "diffset", "hybrid"} <= tidsets, tidsets
@@ -81,6 +88,51 @@ reloads = sum(r["spill_reloads"] for r in rows)
 assert spilled > 0, f"1 MiB budget never spilled a block: {rows}"
 print(f"spill smoke OK: {spilled} blocks spilled / {reloads} reloads under a 1 MiB budget")
 EOF
+
+echo "== event-log smoke (mine --event-log + timeline replay)"
+# A tiny mine persists its scheduler/task/shuffle events as JSONL; every
+# line must parse, timestamps must be monotone, job/stage/task spans
+# must balance, and the timeline command must replay the log offline.
+REPRO_SCALE=0.02 cargo run --release --quiet -- \
+    mine --dataset t10 --min-sup 0.02 --engine eclat-v1 \
+    --event-log EVENTS_mine.jsonl
+python3 - <<'EOF'
+import json
+lines = [l for l in open("EVENTS_mine.jsonl") if l.strip()]
+assert lines, "mine --event-log wrote an empty log"
+events = [json.loads(l) for l in lines]  # every line is valid JSON
+last_t = -1.0
+open_jobs, open_stages, open_tasks = set(), set(), set()
+starts = ends = 0
+for e in events:
+    assert "t_ms" in e and "type" in e, e
+    assert e["t_ms"] >= last_t, f"timestamps went backwards at {e}"
+    last_t = e["t_ms"]
+    t = e["type"]
+    if t == "JobStart":
+        open_jobs.add(e["job"])
+    elif t == "JobEnd":
+        open_jobs.remove(e["job"])
+    elif t == "StageSubmitted":
+        assert e["job"] in open_jobs, f"stage outside job span: {e}"
+        open_stages.add(e["stage"])
+    elif t == "StageCompleted":
+        open_stages.remove(e["stage"])
+    elif t == "TaskStart":
+        assert e["stage"] in open_stages, f"task outside stage span: {e}"
+        open_tasks.add((e["stage"], e["task"], e["attempt"]))
+        starts += 1
+    elif t == "TaskEnd":
+        open_tasks.remove((e["stage"], e["task"], e["attempt"]))
+        ends += 1
+assert not open_jobs and not open_stages and not open_tasks, (
+    open_jobs, open_stages, open_tasks)
+assert starts == ends > 0, (starts, ends)
+kinds = {e["type"] for e in events}
+assert "KernelSnapshot" in kinds, kinds
+print(f"EVENTS_mine.jsonl OK: {len(events)} events, {starts} tasks, kinds: {sorted(kinds)}")
+EOF
+cargo run --release --quiet -- timeline --log EVENTS_mine.jsonl | head -40
 
 echo "== micro-bench smoke (diffset kernel)"
 # One-rep pass over the intersection + Bottom-Up micro-benches so

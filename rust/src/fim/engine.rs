@@ -29,6 +29,7 @@
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
+use crate::sparklet::events::{self, SparkletEvent};
 use crate::sparklet::metrics::StageMetrics;
 use crate::sparklet::{Rdd, SparkletContext};
 use crate::util::text::closest;
@@ -665,12 +666,30 @@ impl MiningReport {
         self.stages.iter().map(|s| s.spilled_blocks).sum()
     }
 
+    /// (p50, p95, p99) task durations in ms across the run's stages
+    /// (all zeros when no tasks were timed).
+    pub fn task_percentiles(&self) -> (f64, f64, f64) {
+        (
+            events::aggregate_task_quantile(&self.stages, 0.50),
+            events::aggregate_task_quantile(&self.stages, 0.95),
+            events::aggregate_task_quantile(&self.stages, 0.99),
+        )
+    }
+
+    /// Skew factor: max/median task duration across the run's stages
+    /// (1.0 = balanced, 0 when unmeasured).
+    pub fn skew_factor(&self) -> f64 {
+        events::aggregate_skew(&self.stages)
+    }
+
     /// One-line human summary.
     pub fn summary(&self) -> String {
+        let (_, p95, _) = self.task_percentiles();
         format!(
             "{}: {} itemsets (max length {}) in {:.1} ms — {} stages, \
              shuffle {} records / {} bytes, kernel {} ∩ \
-             ({} early-aborts, {} repr switches)",
+             ({} early-aborts, {} repr switches), \
+             p95 task {:.1} ms / skew {:.1}x",
             self.label,
             self.result.len(),
             self.result.max_length(),
@@ -681,6 +700,8 @@ impl MiningReport {
             self.kernel.intersections,
             self.kernel.early_aborts,
             self.kernel.repr_switches,
+            p95,
+            self.skew_factor(),
         )
     }
 }
@@ -821,6 +842,15 @@ impl MiningSession {
         let mined = engine.mine(sc, txns, &cfg);
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
         let kernel_stats = kernel::snapshot().since(&kernel_mark);
+        // The per-session kernel delta goes onto the event bus so an
+        // event log attributes kernel work to the run that did it (the
+        // same cross-thread caveat as `MiningReport::kernel` applies).
+        sc.events().emit(SparkletEvent::KernelSnapshot {
+            intersections: kernel_stats.intersections,
+            early_aborts: kernel_stats.early_aborts,
+            repr_switches: kernel_stats.repr_switches,
+            bytes_allocated: kernel_stats.bytes_allocated,
+        });
         let all_stages = sc.metrics().stages();
         let stages = all_stages
             .get(stage_mark.min(all_stages.len())..)

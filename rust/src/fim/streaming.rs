@@ -60,6 +60,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
+use crate::sparklet::events::SparkletEvent;
 use crate::sparklet::executor::TaskSet;
 use crate::sparklet::metrics::{StageKind, StageMetrics};
 use crate::sparklet::streaming::DStream;
@@ -521,6 +522,16 @@ impl IncrementalEclat {
         let len = u32::try_from(accepted).map_err(|_| overflow())?;
         let end = start.checked_add(len).ok_or_else(overflow)?;
 
+        // Validation passed — the push will succeed, so the batch span
+        // opens here (nothing is emitted for a TidOverflow error).
+        let batch_idx = self.batches_pushed;
+        if let Some(sc) = &self.ctx {
+            sc.events().emit(SparkletEvent::StreamBatchSubmitted {
+                batch: batch_idx,
+                offered: txns.len(),
+            });
+        }
+
         let mut ingest = |t: &Transaction, tid: u32| {
             let mut items = t.clone();
             items.sort_unstable();
@@ -547,9 +558,27 @@ impl IncrementalEclat {
         self.next_tid = end;
         self.batch_ranges.push_back((start, len));
         self.batches_pushed += 1;
+        let deferred = self.bp.as_ref().map_or(0, |bp| bp.carry.len());
+        if let Some(sc) = &self.ctx {
+            if let Some(p) = plan.as_ref() {
+                if p.shrank || p.recovered {
+                    sc.events().emit(SparkletEvent::BackpressureTransition {
+                        shrank: p.shrank,
+                        recovered: p.recovered,
+                        effective_limit: p.limit,
+                        bytes_delta: p.delta,
+                    });
+                }
+            }
+            sc.events().emit(SparkletEvent::StreamBatchCompleted {
+                batch: batch_idx,
+                accepted,
+                deferred,
+            });
+        }
         Ok(PushOutcome {
             accepted,
-            deferred: self.bp.as_ref().map_or(0, |bp| bp.carry.len()),
+            deferred,
             effective_limit: self.bp.as_ref().and_then(|bp| bp.limit),
         })
     }
@@ -696,18 +725,41 @@ impl IncrementalEclat {
         // One task per top-level class; the final item's class has an
         // empty tail and no candidates, so it is skipped.
         let n_classes = snapshot.order.len().saturating_sub(1);
+        let stage_tag = 0x57A3_0000u64 ^ self.stats.windows as u64;
+        let stage_name = format!("stream-border-recompute/window{}", self.stats.windows);
+        let job_id = sc.events().next_job_id();
+        sc.events().emit(SparkletEvent::JobStart { job_id });
+        sc.events().emit(SparkletEvent::StageSubmitted {
+            job_id,
+            stage_tag,
+            kind: StageKind::Streaming,
+            name: stage_name.clone(),
+            num_tasks: n_classes,
+        });
         let (tx, rx) = mpsc::channel();
-        let mut taskset = TaskSet::new(
-            0x57A3_0000u64 ^ self.stats.windows as u64,
-            format!("stream-border-recompute/window{}", self.stats.windows),
-        );
+        let mut taskset = TaskSet::new(stage_tag, stage_name);
         for class in 0..n_classes {
             let snap = Arc::clone(&snapshot);
             let tx = tx.clone();
+            let bus = Arc::clone(sc.events());
             taskset.push(move || {
+                bus.emit(SparkletEvent::TaskStart {
+                    job_id,
+                    stage_tag,
+                    task: class,
+                    attempt: 0,
+                });
                 let t0 = Instant::now();
                 let outcome = catch_unwind(AssertUnwindSafe(|| mine_top_class(&snap, class)));
                 let ms = t0.elapsed().as_secs_f64() * 1e3;
+                bus.emit(SparkletEvent::TaskEnd {
+                    job_id,
+                    stage_tag,
+                    task: class,
+                    attempt: 0,
+                    ok: outcome.is_ok(),
+                    run_ms: ms,
+                });
                 let _ = tx.send((class, ms, outcome));
             });
         }
@@ -749,8 +801,14 @@ impl IncrementalEclat {
             self.stats.recomputed += mined.stats.recomputed;
         }
 
-        if sc.conf().collect_metrics {
-            sc.metrics().record(StageMetrics {
+        // Like the DAG scheduler: StageCompleted always goes out, the
+        // MetricsListener (subscribed iff `collect_metrics`) decides
+        // whether it lands in the registry; the flush makes it visible
+        // before mine_window returns.
+        sc.events().emit(SparkletEvent::StageCompleted {
+            job_id,
+            stage_tag,
+            metrics: StageMetrics {
                 kind: StageKind::Streaming,
                 rdd_id: usize::MAX,
                 num_tasks,
@@ -763,8 +821,10 @@ impl IncrementalEclat {
                 backend: sc.executor().name(),
                 steals: exec_stats.steals,
                 queue_wait_ms: exec_stats.queue_wait_ms,
-            });
-        }
+            },
+        });
+        sc.events().emit(SparkletEvent::JobEnd { job_id });
+        sc.events().flush();
 
         // Recover the vertical DB from the snapshot without copying
         // (every task dropped its clone on completion; the clone

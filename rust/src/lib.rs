@@ -19,6 +19,9 @@
 //!   support-count primitives to the mining hot path.
 //! * [`coordinator`] — experiment drivers that regenerate every table
 //!   and figure of the paper's evaluation section.
+//! * [`timeline`] — offline replay of a persisted event log
+//!   (`--event-log` JSONL) into a per-stage text Gantt with task
+//!   percentiles, skew, and spill/backpressure annotations.
 //! * [`util`] — in-tree substrate (thread pool, RNG, bitmaps, bench and
 //!   property-test harnesses) since the build is fully offline.
 
@@ -28,4 +31,5 @@ pub mod data;
 pub mod fim;
 pub mod runtime;
 pub mod sparklet;
+pub mod timeline;
 pub mod util;

@@ -11,6 +11,7 @@
 //!   generate --dataset D --out P   write a generated dataset (FIMI format)
 //!   stream --dataset D --min-sup F --window N --slide N
 //!                                  micro-batch sliding-window mining
+//!   timeline --log PATH            replay an --event-log JSONL into a text Gantt
 //!   xla-smoke                      load + execute the AOT artifacts
 //!   all                            table1 + every figure (long)
 //!   help                           (or `<command> --help` for per-command flags)
@@ -70,6 +71,13 @@ fn main() -> Result<()> {
         eprintln!("error: {e}");
         std::process::exit(2);
     }
+    // The EventLogWriter appends (bench opens many short-lived contexts
+    // against one log), so the CLI truncates the file exactly once per
+    // invocation — each run's log starts clean.
+    if let Some(path) = args.get("event-log") {
+        std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("cannot create event log {path:?}: {e}"))?;
+    }
 
     let mut cfg = ExperimentConfig::default();
     if let Some(scale) = parsed::<f64>(&args, "scale")? {
@@ -91,6 +99,7 @@ fn main() -> Result<()> {
         "generate" => run_generate(&args, &cfg)?,
         "rules" => run_rules(&args, &cfg)?,
         "stream" => run_stream(&args, &cfg)?,
+        "timeline" => run_timeline(&args)?,
         "xla-smoke" => xla_smoke()?,
         "all" => {
             println!("{}", experiments::table1(&cfg));
@@ -157,12 +166,20 @@ fn command_specs() -> Vec<CommandSpec> {
              (default: unlimited, or SPARKLET_MEMORY_MB)",
         )
     };
+    let eventlog_flag = || {
+        FlagSpec::new(
+            "event-log",
+            "PATH",
+            "persist scheduler/task/shuffle events as JSONL (replay with `timeline`)",
+        )
+    };
     let mut mine_flags = vec![
         dataset_flag(),
         minsup_flag(),
         FlagSpec::new("tri-matrix", "on|off", "triangular-matrix Phase-2 (default: per dataset)"),
         executor_flag(),
         membudget_flag(),
+        eventlog_flag(),
     ];
     mine_flags.extend(session_axis_flags());
     mine_flags.extend(shared_flags());
@@ -179,6 +196,7 @@ fn command_specs() -> Vec<CommandSpec> {
              (default: vec|bitmap|diffset|hybrid on the first backend)",
         ),
         FlagSpec::new("out", "PATH", "machine-readable output (default BENCH_fim.json)"),
+        eventlog_flag(),
     ];
     bench_flags.extend(shared_flags());
     let mut rules_flags = vec![
@@ -199,6 +217,7 @@ fn command_specs() -> Vec<CommandSpec> {
         FlagSpec::new("batch-size", "N", "transactions per batch (default 2000)"),
         executor_flag(),
         membudget_flag(),
+        eventlog_flag(),
     ];
     stream_flags.extend(session_axis_flags());
     stream_flags.extend(shared_flags());
@@ -215,6 +234,14 @@ fn command_specs() -> Vec<CommandSpec> {
         FlagSpec::new("seed", "N", "generator seed (default REPRO_SEED)"),
     ];
     generate_flags.extend(shared_flags());
+    let timeline_flags = vec![
+        FlagSpec::new("log", "PATH", "event log to replay (written by --event-log)"),
+        FlagSpec::new(
+            "width",
+            "N",
+            "Gantt bar width in characters (default 40, clamped to 10..200)",
+        ),
+    ];
 
     vec![
         CommandSpec::new("table1", "dataset properties (Table 1)", shared_flags()),
@@ -225,6 +252,7 @@ fn command_specs() -> Vec<CommandSpec> {
         CommandSpec::new("rules", "mine + derive association rules", rules_flags),
         CommandSpec::new("generate", "write a generated dataset (FIMI format)", generate_flags),
         CommandSpec::new("stream", "micro-batch sliding-window mining", stream_flags),
+        CommandSpec::new("timeline", "replay an --event-log JSONL into a text Gantt", timeline_flags),
         CommandSpec::new("xla-smoke", "verify the XLA/PJRT artifact path", Vec::new()),
         CommandSpec::new("all", "table1 + every figure (long)", shared_flags()),
         CommandSpec::new("help", "this overview", Vec::new()),
@@ -359,6 +387,9 @@ fn conf_from_args(args: &Args, cfg: &ExperimentConfig) -> Result<SparkletConf> {
     }
     if let Some(mb) = parsed::<usize>(args, "memory-budget")? {
         conf = conf.with_memory_budget_mb(mb)?;
+    }
+    if let Some(path) = args.get("event-log") {
+        conf = conf.with_event_log(path);
     }
     Ok(conf)
 }
@@ -602,6 +633,8 @@ fn run_bench(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
                         shuffle_bytes: report.shuffle_bytes(),
                         steals,
                         queue_wait_ms,
+                        task_percentiles: report.task_percentiles(),
+                        task_skew: report.skew_factor(),
                         kernel: report.kernel,
                         memory_budget: sc.conf().memory_budget,
                         spilled_blocks: spilled,
@@ -657,6 +690,11 @@ struct BenchRow<'a> {
     shuffle_bytes: u64,
     steals: usize,
     queue_wait_ms: f64,
+    /// Task-duration distribution across every stage of the run:
+    /// (p50, p95, p99) in ms plus max/median skew — the load-balance
+    /// signal the perf trajectory tracks alongside wall time.
+    task_percentiles: (f64, f64, f64),
+    task_skew: f64,
     kernel: KernelStats,
     /// Budget in bytes (as configured); emitted as MiB or null.
     memory_budget: Option<usize>,
@@ -688,6 +726,8 @@ impl BenchRow<'_> {
              \"min_sup_abs\": {}, \"transactions\": {}, \"itemsets\": {}, \
              \"wall_ms\": {:.3}, \"stages\": {}, \"shuffle_records\": {}, \
              \"shuffle_bytes\": {}, \"steals\": {}, \"queue_wait_ms\": {:.3}, \
+             \"task_p50_ms\": {:.3}, \"task_p95_ms\": {:.3}, \
+             \"task_p99_ms\": {:.3}, \"task_skew\": {:.3}, \
              \"kernel_intersections\": {}, \"kernel_early_aborts\": {}, \
              \"kernel_repr_switches\": {}, \"kernel_bytes_allocated\": {}, \
              \"memory_budget_mb\": {}, \"spilled_blocks\": {}, \
@@ -708,6 +748,10 @@ impl BenchRow<'_> {
             self.shuffle_bytes,
             self.steals,
             self.queue_wait_ms,
+            self.task_percentiles.0,
+            self.task_percentiles.1,
+            self.task_percentiles.2,
+            self.task_skew,
             self.kernel.intersections,
             self.kernel.early_aborts,
             self.kernel.repr_switches,
@@ -774,6 +818,13 @@ fn bench_stream_probe_row(
     let stages = sc.metrics().stages();
     let steals: usize = stages.iter().map(|s| s.steals).sum();
     let queue_wait_ms: f64 = stages.iter().map(|s| s.queue_wait_ms).sum();
+    use rdd_eclat::sparklet::events::{aggregate_skew, aggregate_task_quantile};
+    let task_percentiles = (
+        aggregate_task_quantile(&stages, 0.50),
+        aggregate_task_quantile(&stages, 0.95),
+        aggregate_task_quantile(&stages, 0.99),
+    );
+    let task_skew = aggregate_skew(&stages);
     println!(
         "  {:<14} {:<14} {:<8} {:>7} itemsets {:>9.1} ms  {windows} windows  \
          bp: {} shrinks / {} recoveries, {} B/batch (watermark {} B)",
@@ -803,6 +854,8 @@ fn bench_stream_probe_row(
         shuffle_bytes: sc.metrics().total_shuffle_bytes(),
         steals,
         queue_wait_ms,
+        task_percentiles,
+        task_skew,
         kernel: kernel_stats,
         memory_budget: sc.conf().memory_budget,
         spilled_blocks: sc.shuffle_manager().spilled_blocks(),
@@ -932,6 +985,19 @@ fn run_stream(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
         );
     }
     println!("engine: {}", sc.metrics().report());
+    Ok(())
+}
+
+/// Replay a persisted `--event-log` JSONL offline: per-stage text Gantt
+/// with task percentiles, skew, stragglers, queue-wait vs run split, and
+/// spill/backpressure annotations. Pure log processing — no mining run.
+fn run_timeline(args: &Args) -> Result<()> {
+    let path = args
+        .get("log")
+        .ok_or_else(|| anyhow::anyhow!("--log PATH required (written by --event-log)"))?;
+    let width: usize = parsed(args, "width")?.unwrap_or(rdd_eclat::timeline::DEFAULT_WIDTH);
+    let rendered = rdd_eclat::timeline::render_file(path, width).map_err(anyhow::Error::msg)?;
+    print!("{rendered}");
     Ok(())
 }
 

@@ -85,6 +85,12 @@ struct Inner {
 /// Counter used to give each store in the process a unique spill dir.
 static STORE_SEQ: AtomicU64 = AtomicU64::new(0);
 
+/// Observer for block IO: `(block, bytes, is_reload)` — `false` for a
+/// spill to disk, `true` for a reload on fetch. Fired *after* the store
+/// lock is released, so the callback may do arbitrary work (the context
+/// routes it onto the event bus).
+pub type BlockIoHook = Arc<dyn Fn(BlockId, usize, bool) + Send + Sync>;
+
 /// Memory-budgeted block storage with LRU spill-to-disk.
 pub struct BlockStore {
     /// In-memory budget in bytes (`usize::MAX` = unlimited).
@@ -94,6 +100,7 @@ pub struct BlockStore {
     spilled_blocks: AtomicU64,
     reloaded_blocks: AtomicU64,
     spilled_bytes: AtomicU64,
+    hook: Mutex<Option<BlockIoHook>>,
 }
 
 impl BlockStore {
@@ -111,75 +118,104 @@ impl BlockStore {
             spilled_blocks: AtomicU64::new(0),
             reloaded_blocks: AtomicU64::new(0),
             spilled_bytes: AtomicU64::new(0),
+            hook: Mutex::new(None),
+        }
+    }
+
+    /// Install the spill/reload observer (replacing any previous one).
+    pub fn set_spill_hook(&self, hook: BlockIoHook) {
+        *self.hook.lock().unwrap() = Some(hook);
+    }
+
+    /// Fire collected notifications outside the store lock.
+    fn fire_hook(&self, fired: &[(BlockId, usize, bool)]) {
+        if fired.is_empty() {
+            return;
+        }
+        let hook = self.hook.lock().unwrap().clone();
+        if let Some(hook) = hook {
+            for &(id, bytes, reload) in fired {
+                hook(id, bytes, reload);
+            }
         }
     }
 
     /// Insert (or overwrite) a block, then enforce the memory budget.
     pub fn put(&self, id: BlockId, bytes: Vec<u8>, records: usize) {
         let len = bytes.len();
-        let mut inner = self.inner.lock().unwrap();
-        inner.clock += 1;
-        let entry = Entry {
-            records,
-            len,
-            last_use: inner.clock,
-            slot: Slot::Mem(Arc::new(bytes)),
-        };
-        if let Some(old) = inner.blocks.insert(id, entry) {
-            match old.slot {
-                Slot::Mem(_) => inner.mem_bytes -= old.len,
-                Slot::Spilled(path) => {
-                    let _ = std::fs::remove_file(path);
+        let mut fired = Vec::new();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.clock += 1;
+            let entry = Entry {
+                records,
+                len,
+                last_use: inner.clock,
+                slot: Slot::Mem(Arc::new(bytes)),
+            };
+            if let Some(old) = inner.blocks.insert(id, entry) {
+                match old.slot {
+                    Slot::Mem(_) => inner.mem_bytes -= old.len,
+                    Slot::Spilled(path) => {
+                        let _ = std::fs::remove_file(path);
+                    }
                 }
             }
+            inner.mem_bytes += len;
+            self.enforce_budget(&mut inner, &mut fired);
         }
-        inner.mem_bytes += len;
-        self.enforce_budget(&mut inner);
+        self.fire_hook(&fired);
     }
 
     /// Fetch a block, transparently reloading it from disk if it was
     /// spilled (the reload re-admits it under the budget, which may in
     /// turn spill colder blocks). `None` if the id was never written.
     pub fn get(&self, id: &BlockId) -> Option<ShuffleBlock> {
-        let mut inner = self.inner.lock().unwrap();
-        inner.clock += 1;
-        let clock = inner.clock;
-        let entry = inner.blocks.get_mut(id)?;
-        entry.last_use = clock;
-        let records = entry.records;
-        let spilled_path = match &entry.slot {
-            Slot::Spilled(p) => Some(p.clone()),
-            Slot::Mem(_) => None,
-        };
-        let (bytes, readmitted) = match spilled_path {
-            None => {
-                let Slot::Mem(b) = &entry.slot else {
-                    unreachable!("checked above")
-                };
-                (Arc::clone(b), 0)
+        let mut fired = Vec::new();
+        let block = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.clock += 1;
+            let clock = inner.clock;
+            let entry = inner.blocks.get_mut(id)?;
+            entry.last_use = clock;
+            let records = entry.records;
+            let spilled_path = match &entry.slot {
+                Slot::Spilled(p) => Some(p.clone()),
+                Slot::Mem(_) => None,
+            };
+            let (bytes, readmitted) = match spilled_path {
+                None => {
+                    let Slot::Mem(b) = &entry.slot else {
+                        unreachable!("checked above")
+                    };
+                    (Arc::clone(b), 0)
+                }
+                Some(path) => {
+                    let data = std::fs::read(&path).unwrap_or_else(|e| {
+                        panic!("shuffle spill file {} unreadable: {e}", path.display())
+                    });
+                    assert_eq!(
+                        data.len(),
+                        entry.len,
+                        "spill file length drift for block {id}"
+                    );
+                    let _ = std::fs::remove_file(&path);
+                    let arc = Arc::new(data);
+                    entry.slot = Slot::Mem(Arc::clone(&arc));
+                    self.reloaded_blocks.fetch_add(1, Ordering::Relaxed);
+                    let len = entry.len;
+                    fired.push((*id, len, true));
+                    (arc, len)
+                }
+            };
+            if readmitted > 0 {
+                inner.mem_bytes += readmitted;
+                self.enforce_budget(&mut inner, &mut fired);
             }
-            Some(path) => {
-                let data = std::fs::read(&path).unwrap_or_else(|e| {
-                    panic!("shuffle spill file {} unreadable: {e}", path.display())
-                });
-                assert_eq!(
-                    data.len(),
-                    entry.len,
-                    "spill file length drift for block {id}"
-                );
-                let _ = std::fs::remove_file(&path);
-                let arc = Arc::new(data);
-                entry.slot = Slot::Mem(Arc::clone(&arc));
-                self.reloaded_blocks.fetch_add(1, Ordering::Relaxed);
-                let len = entry.len;
-                (arc, len)
-            }
+            Some(ShuffleBlock { bytes, records })
         };
-        if readmitted > 0 {
-            inner.mem_bytes += readmitted;
-            self.enforce_budget(&mut inner);
-        }
-        Some(ShuffleBlock { bytes, records })
+        self.fire_hook(&fired);
+        block
     }
 
     /// Drop every block whose id matches `pred`, deleting spill files.
@@ -230,8 +266,10 @@ impl BlockStore {
 
     /// LRU-spill cold blocks until the resident set fits the budget.
     /// File IO happens under the store lock — acceptable at this
-    /// engine's scale, and it keeps the accounting race-free.
-    fn enforce_budget(&self, inner: &mut Inner) {
+    /// engine's scale, and it keeps the accounting race-free. Spill
+    /// notifications are collected into `fired` for the caller to
+    /// deliver once the lock is released.
+    fn enforce_budget(&self, inner: &mut Inner, fired: &mut Vec<(BlockId, usize, bool)>) {
         while inner.mem_bytes > self.budget {
             let victim = inner
                 .blocks
@@ -258,6 +296,7 @@ impl BlockStore {
                     inner.mem_bytes -= len;
                     self.spilled_blocks.fetch_add(1, Ordering::Relaxed);
                     self.spilled_bytes.fetch_add(len as u64, Ordering::Relaxed);
+                    fired.push((id, len, false));
                 }
                 Err(e) => {
                     log::warn!("spill of block {id} to {} failed: {e}", path.display());
@@ -367,6 +406,24 @@ mod tests {
         let b = store.get(&id(0, 0, 0)).unwrap();
         assert_eq!(b.records, 2);
         assert_eq!(b.len(), 300);
+    }
+
+    #[test]
+    fn spill_hook_sees_spills_and_reloads() {
+        let store = BlockStore::new(Some(1500));
+        let seen: Arc<Mutex<Vec<(BlockId, usize, bool)>>> = Arc::default();
+        let sink = Arc::clone(&seen);
+        store.set_spill_hook(Arc::new(move |id, bytes, reload| {
+            sink.lock().unwrap().push((id, bytes, reload));
+        }));
+        store.put(id(0, 0, 0), payload(0, 1000), 1);
+        store.put(id(0, 1, 0), payload(1, 1000), 1); // evicts block 0
+        let spills: Vec<_> = seen.lock().unwrap().clone();
+        assert_eq!(spills, vec![(id(0, 0, 0), 1000, false)]);
+        let _ = store.get(&id(0, 0, 0)).unwrap(); // reload (+ evict other)
+        let all = seen.lock().unwrap().clone();
+        assert!(all.contains(&(id(0, 0, 0), 1000, true)), "{all:?}");
+        assert!(all.contains(&(id(0, 1, 0), 1000, false)), "{all:?}");
     }
 
     #[test]

@@ -25,6 +25,8 @@ pub enum ConfError {
         value: String,
         reason: String,
     },
+    /// The `event_log` path could not be opened for appending.
+    EventLog { path: String, reason: String },
 }
 
 impl From<ExecutorError> for ConfError {
@@ -48,6 +50,9 @@ impl std::fmt::Display for ConfError {
             Self::Backend(e) => e.fmt(f),
             Self::InvalidEnv { var, value, reason } => {
                 write!(f, "invalid {var}={value:?}: {reason}")
+            }
+            Self::EventLog { path, reason } => {
+                write!(f, "cannot open event log {path:?}: {reason}")
             }
         }
     }
@@ -85,6 +90,13 @@ pub struct SparkletConf {
     /// Set via [`SparkletConf::with_memory_budget_mb`], the
     /// `SPARKLET_MEMORY_MB` env override, or the CLI `--memory-budget`.
     pub memory_budget: Option<usize>,
+    /// Persist the structured event stream ([`super::events`]) as JSONL
+    /// to this path. The file is opened in **append** mode when the
+    /// context is built (so the contexts of a bench sweep share one
+    /// log); CLI handlers truncate it once per invocation. `None`
+    /// disables persistence — the in-process [`super::EventBus`] runs
+    /// either way.
+    pub event_log: Option<String>,
     /// Shared-nothing assertion mode: the shuffle verifies every block
     /// handed to a reduce task is an exclusively-owned byte buffer (no
     /// `Arc`-shared payload crosses a stage boundary) and every written
@@ -108,6 +120,7 @@ impl Default for SparkletConf {
             failure_seed: 0,
             collect_metrics: true,
             memory_budget: None,
+            event_log: None,
             shared_nothing: cfg!(debug_assertions),
         }
     }
@@ -188,6 +201,15 @@ impl SparkletConf {
         }
         self.memory_budget = Some(bytes);
         Ok(self)
+    }
+
+    /// Persist the event stream as JSONL at `path` (appending). Path
+    /// problems surface as `ConfError::EventLog` when the context is
+    /// built, not here — the file is only opened by
+    /// `SparkletContext::try_new`.
+    pub fn with_event_log(mut self, path: &str) -> Self {
+        self.event_log = Some(path.to_string());
+        self
     }
 
     /// Toggle the shared-nothing shuffle assertions.
@@ -319,6 +341,19 @@ mod tests {
         let c = c.with_shared_nothing(true);
         assert!(c.shared_nothing);
         assert!(!c.with_shared_nothing(false).shared_nothing);
+    }
+
+    #[test]
+    fn event_log_builder_sets_path() {
+        let c = SparkletConf::default();
+        assert_eq!(c.event_log, None, "off by default");
+        let c = c.with_event_log("/tmp/events.jsonl");
+        assert_eq!(c.event_log.as_deref(), Some("/tmp/events.jsonl"));
+        let err = ConfError::EventLog {
+            path: "/nope/events.jsonl".into(),
+            reason: "denied".into(),
+        };
+        assert!(err.to_string().contains("cannot open event log"), "{err}");
     }
 
     #[test]

@@ -7,6 +7,7 @@ use super::accumulator::{AccumValue, Accumulator};
 use super::broadcast::{Broadcast, BroadcastRegistry};
 use super::cache::CacheManager;
 use super::conf::{ConfError, SparkletConf};
+use super::events::{EventBus, EventLogWriter, MetricsListener, SparkletEvent};
 use super::executor::{ExecutorBackend, ExecutorRegistry};
 use super::metrics::MetricsRegistry;
 use super::rdd::{Data, Rdd};
@@ -19,7 +20,8 @@ struct ContextInner {
     shuffle: ShuffleManager,
     cache: CacheManager,
     broadcasts: BroadcastRegistry,
-    metrics: MetricsRegistry,
+    metrics: Arc<MetricsRegistry>,
+    events: Arc<EventBus>,
     next_rdd_id: AtomicUsize,
 }
 
@@ -44,12 +46,37 @@ impl SparkletContext {
     pub fn try_new(conf: SparkletConf) -> Result<Self, ConfError> {
         let executor = ExecutorRegistry::create(&conf.executor_backend, conf.executor_cores)
             .map_err(ConfError::Backend)?;
-        let metrics = MetricsRegistry::new();
+        let metrics = Arc::new(MetricsRegistry::new());
         {
             let ex = Arc::clone(&executor);
             metrics.set_active_source(move || ex.active());
         }
+        // Every emission path goes through the bus; the registry is
+        // just its first listener, so StageMetrics aggregation is a
+        // pure derivation of the event stream. `collect_metrics: false`
+        // now means "don't subscribe the registry", not "don't emit".
+        let events = Arc::new(EventBus::new());
+        if conf.collect_metrics {
+            events.register(Arc::new(MetricsListener::new(Arc::clone(&metrics))));
+        }
+        if let Some(path) = &conf.event_log {
+            let writer = EventLogWriter::append(path).map_err(|e| ConfError::EventLog {
+                path: path.clone(),
+                reason: e.to_string(),
+            })?;
+            events.register(Arc::new(writer));
+        }
         let shuffle = ShuffleManager::with_conf(conf.memory_budget, conf.shared_nothing);
+        {
+            let bus = Arc::clone(&events);
+            shuffle.set_spill_hook(Arc::new(move |block, bytes, reloaded| {
+                bus.emit(if reloaded {
+                    SparkletEvent::ShuffleBlockReloaded { block, bytes }
+                } else {
+                    SparkletEvent::ShuffleBlockSpilled { block, bytes }
+                });
+            }));
+        }
         Ok(Self {
             inner: Arc::new(ContextInner {
                 executor,
@@ -57,6 +84,7 @@ impl SparkletContext {
                 cache: CacheManager::new(),
                 broadcasts: BroadcastRegistry::default(),
                 metrics,
+                events,
                 next_rdd_id: AtomicUsize::new(0),
                 conf,
             }),
@@ -102,6 +130,11 @@ impl SparkletContext {
 
     pub fn metrics(&self) -> &MetricsRegistry {
         &self.inner.metrics
+    }
+
+    /// The context's event bus — register listeners or emit directly.
+    pub fn events(&self) -> &Arc<EventBus> {
+        &self.inner.events
     }
 
     pub(crate) fn new_rdd_id(&self) -> usize {

@@ -1,0 +1,1035 @@
+//! Structured event bus — the `ListenerBus` / event-log analog.
+//!
+//! Every layer of the engine announces what it is doing as a
+//! [`SparkletEvent`]: the DAG scheduler (job/stage spans), the task
+//! closures running on whichever [`super::executor::ExecutorBackend`]
+//! the context was built with (task spans), the shuffle's
+//! [`super::block::BlockStore`] (spill/reload), and the streaming miner
+//! (batch ingest, AIMD backpressure transitions). Events fan out
+//! through the context's [`EventBus`] to registered [`EventListener`]s:
+//!
+//! * [`MetricsListener`] — feeds `StageCompleted` events into the
+//!   context's [`MetricsRegistry`], so `StageMetrics` aggregation is
+//!   derived from the event stream instead of hand-threaded calls.
+//! * [`EventLogWriter`] — persists the run as JSONL (one flat JSON
+//!   object per line, hand-rolled like the rest of the zero-dep
+//!   [`super::serde`] discipline). The `timeline` CLI command replays
+//!   such a log offline into a per-stage Gantt (`crate::timeline`).
+//! * [`CollectingListener`] — an in-memory sink for tests.
+//!
+//! Delivery model: `emit` stamps a monotonic timestamp *under the queue
+//! lock* (so queue order == timestamp order), enqueues into a bounded
+//! buffer, and the emitting thread opportunistically drains the queue.
+//! Only one thread drains at a time; events enqueued while the buffer
+//! is full are counted in [`EventBus::dropped`] rather than blocking a
+//! worker. Each listener call is wrapped in `catch_unwind`, so a
+//! panicking listener never takes down the scheduler — it just loses
+//! that delivery. [`EventBus::flush`] blocks until the queue is empty
+//! and is called at stage boundaries, which is what guarantees the
+//! metrics registry is up to date when `run_stage` returns.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::Write;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::block::BlockId;
+use super::metrics::{MetricsRegistry, StageKind, StageMetrics};
+use crate::util::stats;
+
+/// One engine event. Span pairs (`JobStart`/`JobEnd`,
+/// `StageSubmitted`/`StageCompleted`, `TaskStart`/`TaskEnd`) nest:
+/// stage spans inside their job span, task spans inside their stage
+/// span — the queue preserves emission order, so a replayer can rely
+/// on balanced nesting in a clean run's log.
+#[derive(Debug, Clone)]
+pub enum SparkletEvent {
+    /// A scheduler job (one action) began.
+    JobStart { job_id: u64 },
+    /// The job's result stage finished.
+    JobEnd { job_id: u64 },
+    /// A stage's task set is about to be submitted to the executor.
+    StageSubmitted {
+        job_id: u64,
+        stage_tag: u64,
+        kind: StageKind,
+        name: String,
+        num_tasks: usize,
+    },
+    /// A stage finished (all attempts); carries the full per-stage
+    /// metrics, which is what [`MetricsListener`] records.
+    StageCompleted {
+        job_id: u64,
+        stage_tag: u64,
+        metrics: StageMetrics,
+    },
+    /// One task began executing on a worker (emitted from the task
+    /// closure, i.e. on whatever backend thread runs it).
+    TaskStart {
+        job_id: u64,
+        stage_tag: u64,
+        task: usize,
+        attempt: usize,
+    },
+    /// The task finished (`ok: false` = panic or injected failure; the
+    /// scheduler will retry it from lineage).
+    TaskEnd {
+        job_id: u64,
+        stage_tag: u64,
+        task: usize,
+        attempt: usize,
+        ok: bool,
+        run_ms: f64,
+    },
+    /// The block store LRU-spilled a shuffle block to disk.
+    ShuffleBlockSpilled { block: BlockId, bytes: usize },
+    /// A spilled block was transparently reloaded on fetch.
+    ShuffleBlockReloaded { block: BlockId, bytes: usize },
+    /// The streaming miner was offered one micro-batch.
+    StreamBatchSubmitted { batch: usize, offered: usize },
+    /// The batch was ingested (`deferred` transactions carried to later
+    /// pushes by the backpressure controller — never dropped).
+    StreamBatchCompleted {
+        batch: usize,
+        accepted: usize,
+        deferred: usize,
+    },
+    /// The AIMD backpressure controller changed its effective batch
+    /// limit (multiplicative shrink or additive recovery).
+    BackpressureTransition {
+        shrank: bool,
+        recovered: bool,
+        effective_limit: Option<usize>,
+        bytes_delta: u64,
+    },
+    /// Per-session delta of the `fim::tidset::kernel` work counters
+    /// (before/after snapshot around one mining session). The counters
+    /// themselves are process-global, so sessions running concurrently
+    /// on other threads bleed into each other's deltas — exact for the
+    /// CLI and bench (one session at a time), indicative elsewhere.
+    KernelSnapshot {
+        intersections: u64,
+        early_aborts: u64,
+        repr_switches: u64,
+        bytes_allocated: u64,
+    },
+}
+
+impl SparkletEvent {
+    /// The event's `type` tag as written to the JSONL log.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Self::JobStart { .. } => "JobStart",
+            Self::JobEnd { .. } => "JobEnd",
+            Self::StageSubmitted { .. } => "StageSubmitted",
+            Self::StageCompleted { .. } => "StageCompleted",
+            Self::TaskStart { .. } => "TaskStart",
+            Self::TaskEnd { .. } => "TaskEnd",
+            Self::ShuffleBlockSpilled { .. } => "ShuffleBlockSpilled",
+            Self::ShuffleBlockReloaded { .. } => "ShuffleBlockReloaded",
+            Self::StreamBatchSubmitted { .. } => "StreamBatchSubmitted",
+            Self::StreamBatchCompleted { .. } => "StreamBatchCompleted",
+            Self::BackpressureTransition { .. } => "BackpressureTransition",
+            Self::KernelSnapshot { .. } => "KernelSnapshot",
+        }
+    }
+
+    /// One flat JSON object (no nesting, no arrays — the whole schema
+    /// is scalar-valued so [`parse_json_line`] stays trivial). Stage
+    /// tags are hex strings: they are bit-pattern tags, not counts, and
+    /// a u64 does not survive a round-trip through an f64 number.
+    pub fn to_json_line(&self, t_ms: f64) -> String {
+        let mut s = format!("{{\"t_ms\": {t_ms:.3}, \"type\": \"{}\"", self.type_name());
+        match self {
+            Self::JobStart { job_id } | Self::JobEnd { job_id } => {
+                push_field(&mut s, "job", &job_id.to_string());
+            }
+            Self::StageSubmitted {
+                job_id,
+                stage_tag,
+                kind,
+                name,
+                num_tasks,
+            } => {
+                push_field(&mut s, "job", &job_id.to_string());
+                push_str_field(&mut s, "stage", &format!("{stage_tag:x}"));
+                push_str_field(&mut s, "kind", &format!("{kind:?}"));
+                push_str_field(&mut s, "name", name);
+                push_field(&mut s, "num_tasks", &num_tasks.to_string());
+            }
+            Self::StageCompleted {
+                job_id,
+                stage_tag,
+                metrics: m,
+            } => {
+                push_field(&mut s, "job", &job_id.to_string());
+                push_str_field(&mut s, "stage", &format!("{stage_tag:x}"));
+                push_str_field(&mut s, "kind", &format!("{:?}", m.kind));
+                push_str_field(&mut s, "backend", m.backend);
+                push_field(&mut s, "num_tasks", &m.num_tasks.to_string());
+                push_field(&mut s, "wall_ms", &format!("{:.3}", m.wall.as_secs_f64() * 1e3));
+                push_field(&mut s, "retries", &m.retries.to_string());
+                push_field(&mut s, "steals", &m.steals.to_string());
+                push_field(&mut s, "queue_wait_ms", &format!("{:.3}", m.queue_wait_ms));
+                push_field(&mut s, "shuffle_records", &m.shuffle_records.to_string());
+                push_field(&mut s, "shuffle_bytes", &m.shuffle_bytes.to_string());
+                push_field(&mut s, "spilled_blocks", &m.spilled_blocks.to_string());
+                push_field(&mut s, "task_p50_ms", &format!("{:.3}", m.task_quantile(0.50)));
+                push_field(&mut s, "task_p95_ms", &format!("{:.3}", m.task_quantile(0.95)));
+                push_field(&mut s, "task_p99_ms", &format!("{:.3}", m.task_quantile(0.99)));
+                push_field(&mut s, "skew", &format!("{:.3}", m.skew()));
+            }
+            Self::TaskStart {
+                job_id,
+                stage_tag,
+                task,
+                attempt,
+            } => {
+                push_field(&mut s, "job", &job_id.to_string());
+                push_str_field(&mut s, "stage", &format!("{stage_tag:x}"));
+                push_field(&mut s, "task", &task.to_string());
+                push_field(&mut s, "attempt", &attempt.to_string());
+            }
+            Self::TaskEnd {
+                job_id,
+                stage_tag,
+                task,
+                attempt,
+                ok,
+                run_ms,
+            } => {
+                push_field(&mut s, "job", &job_id.to_string());
+                push_str_field(&mut s, "stage", &format!("{stage_tag:x}"));
+                push_field(&mut s, "task", &task.to_string());
+                push_field(&mut s, "attempt", &attempt.to_string());
+                push_field(&mut s, "ok", if *ok { "true" } else { "false" });
+                push_field(&mut s, "run_ms", &format!("{run_ms:.3}"));
+            }
+            Self::ShuffleBlockSpilled { block, bytes }
+            | Self::ShuffleBlockReloaded { block, bytes } => {
+                push_str_field(&mut s, "block", &block.to_string());
+                push_field(&mut s, "bytes", &bytes.to_string());
+            }
+            Self::StreamBatchSubmitted { batch, offered } => {
+                push_field(&mut s, "batch", &batch.to_string());
+                push_field(&mut s, "offered", &offered.to_string());
+            }
+            Self::StreamBatchCompleted {
+                batch,
+                accepted,
+                deferred,
+            } => {
+                push_field(&mut s, "batch", &batch.to_string());
+                push_field(&mut s, "accepted", &accepted.to_string());
+                push_field(&mut s, "deferred", &deferred.to_string());
+            }
+            Self::BackpressureTransition {
+                shrank,
+                recovered,
+                effective_limit,
+                bytes_delta,
+            } => {
+                push_field(&mut s, "shrank", if *shrank { "true" } else { "false" });
+                push_field(&mut s, "recovered", if *recovered { "true" } else { "false" });
+                let limit = effective_limit
+                    .map(|l| l.to_string())
+                    .unwrap_or_else(|| "null".into());
+                push_field(&mut s, "effective_limit", &limit);
+                push_field(&mut s, "bytes_delta", &bytes_delta.to_string());
+            }
+            Self::KernelSnapshot {
+                intersections,
+                early_aborts,
+                repr_switches,
+                bytes_allocated,
+            } => {
+                push_field(&mut s, "intersections", &intersections.to_string());
+                push_field(&mut s, "early_aborts", &early_aborts.to_string());
+                push_field(&mut s, "repr_switches", &repr_switches.to_string());
+                push_field(&mut s, "bytes_allocated", &bytes_allocated.to_string());
+            }
+        }
+        s.push('}');
+        s
+    }
+}
+
+fn push_field(s: &mut String, key: &str, raw: &str) {
+    s.push_str(", \"");
+    s.push_str(key);
+    s.push_str("\": ");
+    s.push_str(raw);
+}
+
+fn push_str_field(s: &mut String, key: &str, value: &str) {
+    s.push_str(", \"");
+    s.push_str(key);
+    s.push_str("\": \"");
+    s.push_str(&json_escape(value));
+    s.push('"');
+}
+
+/// Escape a string for a JSON string literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------- listeners
+
+/// A bus subscriber. `on_event` runs on whichever thread is draining
+/// the queue (usually the emitter); it must not call back into the bus
+/// or the block store. Panics are isolated by the bus.
+pub trait EventListener: Send + Sync {
+    fn on_event(&self, t_ms: f64, event: &SparkletEvent);
+}
+
+/// The first listener every context registers (when
+/// `SparkletConf::collect_metrics` is on): folds `StageCompleted`
+/// events into the context's [`MetricsRegistry`], making the registry a
+/// pure derivation of the event stream.
+pub struct MetricsListener {
+    registry: Arc<MetricsRegistry>,
+}
+
+impl MetricsListener {
+    pub fn new(registry: Arc<MetricsRegistry>) -> Self {
+        Self { registry }
+    }
+}
+
+impl EventListener for MetricsListener {
+    fn on_event(&self, _t_ms: f64, event: &SparkletEvent) {
+        if let SparkletEvent::StageCompleted { metrics, .. } = event {
+            self.registry.record(metrics.clone());
+        }
+    }
+}
+
+/// Persists the event stream as JSONL (one [`SparkletEvent::to_json_line`]
+/// per line). Opens in append mode so the several short-lived contexts
+/// of a bench sweep share one log; the CLI truncates the file once per
+/// invocation. Writes are unbuffered — every line is durable as soon as
+/// the event is delivered, so a crashed run still leaves a usable log.
+pub struct EventLogWriter {
+    file: Mutex<std::fs::File>,
+}
+
+impl EventLogWriter {
+    /// Open `path` for appending (creating it if needed).
+    pub fn append(path: &str) -> std::io::Result<Self> {
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        Ok(Self {
+            file: Mutex::new(file),
+        })
+    }
+}
+
+impl EventListener for EventLogWriter {
+    fn on_event(&self, t_ms: f64, event: &SparkletEvent) {
+        let mut line = event.to_json_line(t_ms);
+        line.push('\n');
+        let mut file = self.file.lock().unwrap();
+        if let Err(e) = file.write_all(line.as_bytes()) {
+            log::warn!("event log write failed: {e}");
+        }
+    }
+}
+
+/// In-memory sink for tests: records every delivery in order.
+#[derive(Clone, Default)]
+pub struct CollectingListener {
+    events: Arc<Mutex<Vec<(f64, SparkletEvent)>>>,
+}
+
+impl CollectingListener {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Everything delivered so far, in delivery order.
+    pub fn snapshot(&self) -> Vec<(f64, SparkletEvent)> {
+        self.events.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.lock().unwrap().is_empty()
+    }
+}
+
+impl EventListener for CollectingListener {
+    fn on_event(&self, t_ms: f64, event: &SparkletEvent) {
+        self.events.lock().unwrap().push((t_ms, event.clone()));
+    }
+}
+
+// ------------------------------------------------------------------ bus
+
+/// Default bounded-buffer capacity (events, not bytes). Sized far above
+/// what accumulates between the per-stage `flush` calls; overflow costs
+/// a dropped event, never a blocked worker.
+pub const DEFAULT_EVENT_CAPACITY: usize = 1 << 16;
+
+/// The fan-out hub. One per [`super::context::SparkletContext`];
+/// cheap handles via `Arc`.
+pub struct EventBus {
+    /// Monotonic time origin; all event timestamps are ms since this.
+    start: Instant,
+    queue: Mutex<VecDeque<(f64, SparkletEvent)>>,
+    capacity: usize,
+    /// Held by the (single) draining thread. `emit` try-locks it: if
+    /// another thread is already draining, the emitter leaves its event
+    /// in the queue and returns.
+    draining: Mutex<()>,
+    listeners: Mutex<Vec<Arc<dyn EventListener>>>,
+    emitted: AtomicU64,
+    dropped: AtomicU64,
+    next_job: AtomicU64,
+}
+
+impl Default for EventBus {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_EVENT_CAPACITY)
+    }
+}
+
+impl EventBus {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            start: Instant::now(),
+            queue: Mutex::new(VecDeque::new()),
+            capacity: capacity.max(1),
+            draining: Mutex::new(()),
+            listeners: Mutex::new(Vec::new()),
+            emitted: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            next_job: AtomicU64::new(0),
+        }
+    }
+
+    /// Subscribe a listener (delivery order = registration order).
+    pub fn register(&self, listener: Arc<dyn EventListener>) {
+        self.listeners.lock().unwrap().push(listener);
+    }
+
+    /// Allocate the next job span id.
+    pub fn next_job_id(&self) -> u64 {
+        self.next_job.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Milliseconds since the bus (≈ context) was created.
+    pub fn now_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    /// Events accepted into the queue since creation.
+    pub fn emitted(&self) -> u64 {
+        self.emitted.load(Ordering::Relaxed)
+    }
+
+    /// Events discarded because the bounded buffer was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Publish one event. The timestamp is taken under the queue lock,
+    /// so delivery order and timestamp order agree globally — the JSONL
+    /// log is monotone by construction. Never blocks on a slow drainer:
+    /// a full buffer drops the event (counted) instead.
+    pub fn emit(&self, event: SparkletEvent) {
+        {
+            let mut q = self.queue.lock().unwrap();
+            if q.len() >= self.capacity {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            let t_ms = self.now_ms();
+            q.push_back((t_ms, event));
+        }
+        self.emitted.fetch_add(1, Ordering::Relaxed);
+        self.drain(false);
+    }
+
+    /// Block until every queued event has been delivered (including
+    /// waiting out a concurrent drainer). Called at stage boundaries so
+    /// synchronous readers (the scheduler's callers) observe a
+    /// fully-updated metrics registry.
+    pub fn flush(&self) {
+        self.drain(true);
+    }
+
+    /// Deliver queued events. `blocking` waits for the drain lock;
+    /// non-blocking emitters skip out if another thread already drains.
+    fn drain(&self, blocking: bool) {
+        loop {
+            {
+                let _guard = if blocking {
+                    self.draining.lock().unwrap()
+                } else {
+                    match self.draining.try_lock() {
+                        Ok(g) => g,
+                        Err(_) => return, // current drainer will pick it up or we re-check below
+                    }
+                };
+                loop {
+                    let next = self.queue.lock().unwrap().pop_front();
+                    let Some((t_ms, event)) = next else { break };
+                    let listeners = self.listeners.lock().unwrap().clone();
+                    for l in listeners {
+                        // A panicking listener loses this delivery and
+                        // nothing else — the scheduler never sees it.
+                        if catch_unwind(AssertUnwindSafe(|| l.on_event(t_ms, &event))).is_err() {
+                            log::warn!("event listener panicked on {}", event.type_name());
+                        }
+                    }
+                }
+            }
+            // Re-check after releasing the drain lock: an emitter may
+            // have enqueued after our empty check and bounced off the
+            // held lock — its event must not be stranded.
+            if self.queue.lock().unwrap().is_empty() {
+                return;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------- JSONL line parser
+
+/// A scalar JSON value — the only shapes the event-log schema uses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+impl JsonValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Self::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Self::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+}
+
+/// Parse one flat JSON object (`{"k": v, ...}` with scalar values) as
+/// written by [`SparkletEvent::to_json_line`]. Not a general JSON
+/// parser — nested objects/arrays are a parse error, which doubles as a
+/// schema guard for the log format.
+pub fn parse_json_line(line: &str) -> Result<HashMap<String, JsonValue>, String> {
+    let mut chars = line.trim().char_indices().peekable();
+    let bytes = line.trim();
+    let mut out = HashMap::new();
+    let err = |msg: &str, pos: usize| format!("{msg} at byte {pos} in {bytes:?}");
+
+    fn skip_ws(chars: &mut std::iter::Peekable<std::str::CharIndices<'_>>) {
+        while matches!(chars.peek(), Some((_, c)) if c.is_whitespace()) {
+            chars.next();
+        }
+    }
+
+    fn parse_string(
+        chars: &mut std::iter::Peekable<std::str::CharIndices<'_>>,
+    ) -> Result<String, String> {
+        match chars.next() {
+            Some((_, '"')) => {}
+            other => return Err(format!("expected string, got {other:?}")),
+        }
+        let mut s = String::new();
+        loop {
+            match chars.next() {
+                None => return Err("unterminated string".into()),
+                Some((_, '"')) => return Ok(s),
+                Some((_, '\\')) => match chars.next() {
+                    Some((_, '"')) => s.push('"'),
+                    Some((_, '\\')) => s.push('\\'),
+                    Some((_, '/')) => s.push('/'),
+                    Some((_, 'n')) => s.push('\n'),
+                    Some((_, 't')) => s.push('\t'),
+                    Some((_, 'r')) => s.push('\r'),
+                    Some((_, 'u')) => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let (_, c) = chars.next().ok_or("truncated \\u escape")?;
+                            code = code * 16
+                                + c.to_digit(16).ok_or_else(|| format!("bad hex {c:?}"))?;
+                        }
+                        s.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                    }
+                    other => return Err(format!("bad escape {other:?}")),
+                },
+                Some((_, c)) => s.push(c),
+            }
+        }
+    }
+
+    skip_ws(&mut chars);
+    match chars.next() {
+        Some((_, '{')) => {}
+        other => return Err(err(&format!("expected '{{', got {other:?}"), 0)),
+    }
+    skip_ws(&mut chars);
+    if matches!(chars.peek(), Some((_, '}'))) {
+        chars.next();
+        return Ok(out);
+    }
+    loop {
+        skip_ws(&mut chars);
+        let key = parse_string(&mut chars)?;
+        skip_ws(&mut chars);
+        match chars.next() {
+            Some((_, ':')) => {}
+            other => return Err(format!("expected ':' after key {key:?}, got {other:?}")),
+        }
+        skip_ws(&mut chars);
+        let value = match chars.peek() {
+            Some((_, '"')) => JsonValue::Str(parse_string(&mut chars)?),
+            Some((pos, c)) if *c == 't' || *c == 'f' || *c == 'n' => {
+                let pos = *pos;
+                let rest = &bytes[pos..];
+                if rest.starts_with("true") {
+                    for _ in 0..4 {
+                        chars.next();
+                    }
+                    JsonValue::Bool(true)
+                } else if rest.starts_with("false") {
+                    for _ in 0..5 {
+                        chars.next();
+                    }
+                    JsonValue::Bool(false)
+                } else if rest.starts_with("null") {
+                    for _ in 0..4 {
+                        chars.next();
+                    }
+                    JsonValue::Null
+                } else {
+                    return Err(err("bad literal", pos));
+                }
+            }
+            Some((pos, c)) if *c == '-' || c.is_ascii_digit() => {
+                let start = *pos;
+                let mut end = start;
+                while let Some((p, c)) = chars.peek() {
+                    if c.is_ascii_digit() || matches!(c, '-' | '+' | '.' | 'e' | 'E') {
+                        end = p + c.len_utf8();
+                        chars.next();
+                    } else {
+                        break;
+                    }
+                }
+                let n: f64 = bytes[start..end]
+                    .parse()
+                    .map_err(|e| err(&format!("bad number: {e}"), start))?;
+                JsonValue::Num(n)
+            }
+            other => return Err(format!("unexpected value start {other:?} for key {key:?}")),
+        };
+        out.insert(key, value);
+        skip_ws(&mut chars);
+        match chars.next() {
+            Some((_, ',')) => continue,
+            Some((_, '}')) => break,
+            other => return Err(format!("expected ',' or '}}', got {other:?}")),
+        }
+    }
+    skip_ws(&mut chars);
+    if let Some((pos, c)) = chars.next() {
+        return Err(err(&format!("trailing content {c:?}"), pos));
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------ aggregate task stats
+
+/// q-quantile over every task duration of `stages` (0 when no tasks).
+pub fn aggregate_task_quantile(stages: &[StageMetrics], q: f64) -> f64 {
+    let all: Vec<f64> = stages
+        .iter()
+        .flat_map(|s| s.task_millis.iter().copied())
+        .collect();
+    if all.is_empty() {
+        0.0
+    } else {
+        stats::quantile(&all, q)
+    }
+}
+
+/// Global skew factor: max/median over every task of `stages` (1.0 =
+/// perfectly balanced, 0 when unmeasured).
+pub fn aggregate_skew(stages: &[StageMetrics]) -> f64 {
+    let all: Vec<f64> = stages
+        .iter()
+        .flat_map(|s| s.task_millis.iter().copied())
+        .collect();
+    let med = stats::median(&all);
+    if med <= 0.0 {
+        0.0
+    } else {
+        stats::max(&all) / med
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn stage_metrics(tasks: Vec<f64>) -> StageMetrics {
+        StageMetrics {
+            kind: StageKind::Result,
+            rdd_id: 3,
+            num_tasks: tasks.len(),
+            wall: Duration::from_millis(10),
+            task_millis: tasks,
+            retries: 1,
+            shuffle_records: 7,
+            shuffle_bytes: 256,
+            spilled_blocks: 2,
+            backend: "fifo",
+            steals: 0,
+            queue_wait_ms: 1.5,
+        }
+    }
+
+    fn all_event_shapes() -> Vec<SparkletEvent> {
+        vec![
+            SparkletEvent::JobStart { job_id: 1 },
+            SparkletEvent::JobEnd { job_id: 1 },
+            SparkletEvent::StageSubmitted {
+                job_id: 1,
+                stage_tag: 0x5A5A_0001,
+                kind: StageKind::ShuffleMap,
+                name: "ShuffleMap/rdd2 \"quoted\"\npath".into(),
+                num_tasks: 4,
+            },
+            SparkletEvent::StageCompleted {
+                job_id: 1,
+                stage_tag: 0x5A5A_0001,
+                metrics: stage_metrics(vec![1.0, 2.0, 9.0]),
+            },
+            SparkletEvent::TaskStart {
+                job_id: 1,
+                stage_tag: 0x5A5A_0001,
+                task: 2,
+                attempt: 0,
+            },
+            SparkletEvent::TaskEnd {
+                job_id: 1,
+                stage_tag: 0x5A5A_0001,
+                task: 2,
+                attempt: 0,
+                ok: true,
+                run_ms: 3.25,
+            },
+            SparkletEvent::ShuffleBlockSpilled {
+                block: BlockId {
+                    shuffle_id: 0,
+                    reduce_part: 1,
+                    map_part: 2,
+                },
+                bytes: 4096,
+            },
+            SparkletEvent::ShuffleBlockReloaded {
+                block: BlockId {
+                    shuffle_id: 0,
+                    reduce_part: 1,
+                    map_part: 2,
+                },
+                bytes: 4096,
+            },
+            SparkletEvent::StreamBatchSubmitted {
+                batch: 5,
+                offered: 100,
+            },
+            SparkletEvent::StreamBatchCompleted {
+                batch: 5,
+                accepted: 80,
+                deferred: 20,
+            },
+            SparkletEvent::BackpressureTransition {
+                shrank: true,
+                recovered: false,
+                effective_limit: Some(48),
+                bytes_delta: 9000,
+            },
+            SparkletEvent::BackpressureTransition {
+                shrank: false,
+                recovered: true,
+                effective_limit: None,
+                bytes_delta: 12,
+            },
+            SparkletEvent::KernelSnapshot {
+                intersections: 10,
+                early_aborts: 2,
+                repr_switches: 1,
+                bytes_allocated: 640,
+            },
+        ]
+    }
+
+    #[test]
+    fn every_event_shape_serializes_and_parses_back() {
+        for ev in all_event_shapes() {
+            let line = ev.to_json_line(12.5);
+            let obj = parse_json_line(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(
+                obj["type"].as_str().unwrap(),
+                ev.type_name(),
+                "{line}"
+            );
+            assert!((obj["t_ms"].as_f64().unwrap() - 12.5).abs() < 1e-9, "{line}");
+        }
+    }
+
+    #[test]
+    fn stage_completed_line_carries_percentiles_and_skew() {
+        let ev = SparkletEvent::StageCompleted {
+            job_id: 0,
+            stage_tag: 0xA11C_0003,
+            metrics: stage_metrics(vec![1.0, 2.0, 10.0]),
+        };
+        let obj = parse_json_line(&ev.to_json_line(0.0)).unwrap();
+        assert_eq!(obj["stage"].as_str().unwrap(), "a11c0003");
+        assert_eq!(obj["kind"].as_str().unwrap(), "Result");
+        assert_eq!(obj["shuffle_bytes"].as_f64().unwrap(), 256.0);
+        // median 2.0, max 10.0 -> skew 5
+        assert!((obj["skew"].as_f64().unwrap() - 5.0).abs() < 1e-6);
+        assert!((obj["task_p50_ms"].as_f64().unwrap() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn escape_roundtrips_through_parser() {
+        let nasty = "a\"b\\c\nd\te\u{1}f";
+        let line = format!("{{\"k\": \"{}\"}}", json_escape(nasty));
+        let obj = parse_json_line(&line).unwrap();
+        assert_eq!(obj["k"].as_str().unwrap(), nasty);
+    }
+
+    #[test]
+    fn parser_rejects_non_flat_json() {
+        assert!(parse_json_line("{\"a\": [1, 2]}").is_err());
+        assert!(parse_json_line("{\"a\": {\"b\": 1}}").is_err());
+        assert!(parse_json_line("not json").is_err());
+        assert!(parse_json_line("{\"a\": 1} trailing").is_err());
+        assert!(parse_json_line("{}").unwrap().is_empty());
+    }
+
+    #[test]
+    fn bus_delivers_in_emission_order_with_monotone_timestamps() {
+        let bus = EventBus::new();
+        let sink = CollectingListener::new();
+        bus.register(Arc::new(sink.clone()));
+        for i in 0..100 {
+            bus.emit(SparkletEvent::JobStart { job_id: i });
+        }
+        bus.flush();
+        let got = sink.snapshot();
+        assert_eq!(got.len(), 100);
+        for (i, (_, ev)) in got.iter().enumerate() {
+            match ev {
+                SparkletEvent::JobStart { job_id } => assert_eq!(*job_id, i as u64),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        for pair in got.windows(2) {
+            assert!(pair[0].0 <= pair[1].0, "timestamps not monotone");
+        }
+        assert_eq!(bus.emitted(), 100);
+        assert_eq!(bus.dropped(), 0);
+    }
+
+    #[test]
+    fn bounded_buffer_drops_and_counts_instead_of_blocking() {
+        // No listeners and a held drain lock would be needed to pile up
+        // the queue; simpler: capacity 1 and a listener that emits...
+        // cannot re-enter. Instead: hold the drain lock from this
+        // thread by never registering listeners and filling the queue
+        // faster than it drains is racy — so test the bound directly by
+        // locking the drain mutex through a dummy guard.
+        let bus = Arc::new(EventBus::with_capacity(4));
+        let guard = bus.draining.lock().unwrap();
+        for i in 0..10 {
+            bus.emit(SparkletEvent::JobStart { job_id: i });
+        }
+        drop(guard);
+        bus.flush();
+        assert_eq!(bus.emitted(), 4, "only capacity events accepted");
+        assert_eq!(bus.dropped(), 6, "overflow counted, not blocked");
+    }
+
+    #[test]
+    fn panicking_listener_is_isolated() {
+        struct Bomb;
+        impl EventListener for Bomb {
+            fn on_event(&self, _t: f64, _e: &SparkletEvent) {
+                panic!("listener bomb");
+            }
+        }
+        let bus = EventBus::new();
+        let sink = CollectingListener::new();
+        bus.register(Arc::new(Bomb));
+        bus.register(Arc::new(sink.clone()));
+        bus.emit(SparkletEvent::JobStart { job_id: 9 });
+        bus.flush();
+        // The bomb fired first and panicked; the second listener still
+        // received the event and the emitter survived.
+        assert_eq!(sink.len(), 1);
+    }
+
+    #[test]
+    fn concurrent_emitters_never_lose_events() {
+        let bus = Arc::new(EventBus::new());
+        let sink = CollectingListener::new();
+        bus.register(Arc::new(sink.clone()));
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let bus = Arc::clone(&bus);
+                std::thread::spawn(move || {
+                    for i in 0..250 {
+                        bus.emit(SparkletEvent::TaskStart {
+                            job_id: t,
+                            stage_tag: 1,
+                            task: i,
+                            attempt: 0,
+                        });
+                        bus.emit(SparkletEvent::TaskEnd {
+                            job_id: t,
+                            stage_tag: 1,
+                            task: i,
+                            attempt: 0,
+                            ok: true,
+                            run_ms: 0.0,
+                        });
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        bus.flush();
+        let got = sink.snapshot();
+        assert_eq!(got.len(), 2000);
+        assert_eq!(bus.dropped(), 0);
+        // Per-emitter order is preserved: each thread's TaskStart(i)
+        // precedes its TaskEnd(i).
+        for t in 0..4u64 {
+            let mut started = std::collections::HashSet::new();
+            for (_, ev) in &got {
+                match ev {
+                    SparkletEvent::TaskStart { job_id, task, .. } if *job_id == t => {
+                        started.insert(*task);
+                    }
+                    SparkletEvent::TaskEnd { job_id, task, .. } if *job_id == t => {
+                        assert!(started.contains(task), "end before start for {t}/{task}");
+                    }
+                    _ => {}
+                }
+            }
+        }
+        // Timestamps are globally monotone in delivery order.
+        for pair in got.windows(2) {
+            assert!(pair[0].0 <= pair[1].0);
+        }
+    }
+
+    #[test]
+    fn metrics_listener_records_stage_completed_only() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let bus = EventBus::new();
+        bus.register(Arc::new(MetricsListener::new(Arc::clone(&reg))));
+        bus.emit(SparkletEvent::JobStart { job_id: 0 });
+        bus.emit(SparkletEvent::StageCompleted {
+            job_id: 0,
+            stage_tag: 7,
+            metrics: stage_metrics(vec![1.0, 3.0]),
+        });
+        bus.emit(SparkletEvent::JobEnd { job_id: 0 });
+        bus.flush();
+        let stages = reg.stages();
+        assert_eq!(stages.len(), 1);
+        assert_eq!(stages[0].shuffle_bytes, 256);
+        assert_eq!(stages[0].num_tasks, 2);
+    }
+
+    #[test]
+    fn event_log_writer_appends_parseable_lines() {
+        let path = std::env::temp_dir().join(format!(
+            "sparklet-events-test-{}.jsonl",
+            std::process::id()
+        ));
+        let path_str = path.to_str().unwrap();
+        let _ = std::fs::remove_file(&path);
+        {
+            let bus = EventBus::new();
+            bus.register(Arc::new(EventLogWriter::append(path_str).unwrap()));
+            for ev in all_event_shapes() {
+                bus.emit(ev);
+            }
+            bus.flush();
+        }
+        let content = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = content.lines().filter(|l| !l.trim().is_empty()).collect();
+        assert_eq!(lines.len(), all_event_shapes().len());
+        let mut last_t = f64::MIN;
+        for line in &lines {
+            let obj = parse_json_line(line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            let t = obj["t_ms"].as_f64().unwrap();
+            assert!(t >= last_t, "non-monotone log");
+            last_t = t;
+        }
+        // Append mode: a second writer extends rather than truncates.
+        {
+            let bus = EventBus::new();
+            bus.register(Arc::new(EventLogWriter::append(path_str).unwrap()));
+            bus.emit(SparkletEvent::JobStart { job_id: 42 });
+            bus.flush();
+        }
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(content.lines().count(), lines.len() + 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn aggregate_quantiles_and_skew() {
+        let stages = vec![stage_metrics(vec![1.0, 2.0]), stage_metrics(vec![3.0, 10.0])];
+        assert!((aggregate_task_quantile(&stages, 0.5) - 2.5).abs() < 1e-9);
+        assert_eq!(aggregate_task_quantile(&[], 0.5), 0.0);
+        // median 2.5, max 10 -> skew 4
+        assert!((aggregate_skew(&stages) - 4.0).abs() < 1e-9);
+        assert_eq!(aggregate_skew(&[stage_metrics(vec![0.0, 0.0])]), 0.0);
+    }
+}

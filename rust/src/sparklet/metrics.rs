@@ -49,6 +49,26 @@ impl StageMetrics {
     pub fn total_task_ms(&self) -> f64 {
         self.task_millis.iter().sum()
     }
+
+    /// q-quantile of this stage's task durations (0 when no tasks).
+    pub fn task_quantile(&self, q: f64) -> f64 {
+        if self.task_millis.is_empty() {
+            0.0
+        } else {
+            crate::util::stats::quantile(&self.task_millis, q)
+        }
+    }
+
+    /// Skew factor: max/median task duration. 1.0 = perfectly balanced,
+    /// 0 when unmeasured (no tasks, or all-zero timings).
+    pub fn skew(&self) -> f64 {
+        let med = crate::util::stats::median(&self.task_millis);
+        if med <= 0.0 {
+            0.0
+        } else {
+            self.max_task_ms() / med
+        }
+    }
 }
 
 /// EWMA smoothing factor for the per-partition cost feedback (higher =
@@ -203,11 +223,26 @@ impl MetricsRegistry {
             wall_ms += s.wall.as_secs_f64() * 1e3;
         }
         let n = stages.len();
+        let all_tasks: Vec<f64> = stages
+            .iter()
+            .flat_map(|s| s.task_millis.iter().copied())
+            .collect();
         drop(stages);
+        let p95 = if all_tasks.is_empty() {
+            0.0
+        } else {
+            crate::util::stats::quantile(&all_tasks, 0.95)
+        };
+        let med = crate::util::stats::median(&all_tasks);
+        let skew = if med <= 0.0 {
+            0.0
+        } else {
+            crate::util::stats::max(&all_tasks) / med
+        };
         format!(
             "{n} stages ({maps} map, {} result, {streaming} streaming), {wall_ms:.1} ms wall, \
              {retries} retries, {steals} steals, shuffle: {records} records / {bytes} bytes \
-             ({spilled} blocks spilled), {} tasks active",
+             ({spilled} blocks spilled), p95 task {p95:.1} ms / skew {skew:.1}x, {} tasks active",
             n - maps - streaming,
             self.active_tasks(),
         )
@@ -363,6 +398,32 @@ mod tests {
         assert!(report.contains("1 streaming"), "{report}");
         assert!(report.contains("4 steals"), "{report}");
         assert!(report.contains("3 tasks active"), "{report}");
+    }
+
+    #[test]
+    fn per_stage_quantiles_and_skew() {
+        let m = stage(StageKind::Result, 10, vec![1.0, 2.0, 3.0, 12.0], 0);
+        assert!((m.task_quantile(0.5) - 2.5).abs() < 1e-9);
+        assert_eq!(m.task_quantile(1.0), 12.0);
+        // median 2.5, max 12 -> skew 4.8
+        assert!((m.skew() - 4.8).abs() < 1e-9);
+        let empty = stage(StageKind::Result, 0, vec![], 0);
+        assert_eq!(empty.task_quantile(0.5), 0.0);
+        assert_eq!(empty.skew(), 0.0);
+        assert_eq!(stage(StageKind::Result, 0, vec![0.0, 0.0], 0).skew(), 0.0);
+    }
+
+    #[test]
+    fn report_surfaces_p95_and_skew() {
+        let r = MetricsRegistry::new();
+        r.record(stage(StageKind::Result, 10, vec![1.0, 1.0, 1.0, 4.0], 0));
+        let report = r.report();
+        // median 1.0, max 4.0 -> skew 4.0x
+        assert!(report.contains("skew 4.0x"), "{report}");
+        assert!(report.contains("p95 task"), "{report}");
+        // empty registry still renders (zeros, no NaN)
+        let report = MetricsRegistry::new().report();
+        assert!(report.contains("p95 task 0.0 ms / skew 0.0x"), "{report}");
     }
 
     #[test]

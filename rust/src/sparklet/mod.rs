@@ -31,6 +31,7 @@ pub mod broadcast;
 pub mod cache;
 pub mod conf;
 pub mod context;
+pub mod events;
 pub mod executor;
 pub mod metrics;
 pub mod pair;
@@ -47,6 +48,9 @@ pub use block::{BlockId, BlockStore, ShuffleBlock};
 pub use broadcast::Broadcast;
 pub use conf::{ConfError, SparkletConf};
 pub use context::SparkletContext;
+pub use events::{
+    CollectingListener, EventBus, EventListener, EventLogWriter, MetricsListener, SparkletEvent,
+};
 pub use serde::{SerDe, SerDeError};
 pub use shuffle::ShuffleError;
 pub use executor::{

@@ -23,6 +23,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use super::context::SparkletContext;
+use super::events::SparkletEvent;
 use super::executor::{panic_message, TaskSet};
 use super::metrics::{StageKind, StageMetrics};
 use super::pair::ShuffleDepObj;
@@ -49,6 +50,7 @@ fn injected_failure(ctx: &SparkletContext, stage_tag: u64, part: usize, attempt:
 /// safe to re-execute for the same partition.
 fn run_stage<U: Send + 'static>(
     ctx: &SparkletContext,
+    job_id: u64,
     kind: StageKind,
     rdd_id: usize,
     stage_tag: u64,
@@ -56,6 +58,13 @@ fn run_stage<U: Send + 'static>(
     run: Arc<dyn Fn(usize, usize) -> U + Send + Sync>,
 ) -> Vec<U> {
     let wall = Instant::now();
+    ctx.events().emit(SparkletEvent::StageSubmitted {
+        job_id,
+        stage_tag,
+        kind,
+        name: format!("{kind:?}/rdd{rdd_id}"),
+        num_tasks,
+    });
     // Snapshot shuffle-volume counters so the stage records its delta
     // (the driver runs stages sequentially, so deltas don't interleave).
     let records_before = ctx.shuffle_manager().records_written();
@@ -83,6 +92,15 @@ fn run_stage<U: Send + 'static>(
             let ctx2 = ctx.clone();
             let tx = tx.clone();
             taskset.push(move || {
+                // Task spans are emitted from inside the closure, i.e.
+                // on whichever executor backend thread runs it — every
+                // backend traces the same way for free.
+                ctx2.events().emit(SparkletEvent::TaskStart {
+                    job_id,
+                    stage_tag,
+                    task: part,
+                    attempt,
+                });
                 let outcome = catch_unwind(AssertUnwindSafe(|| {
                     if injected_failure(&ctx2, stage_tag, part, attempt) {
                         panic!("injected task failure (stage {stage_tag}, part {part})");
@@ -92,6 +110,14 @@ fn run_stage<U: Send + 'static>(
                     (out, t.elapsed().as_secs_f64() * 1e3)
                 }))
                 .map_err(|e| panic_message(e.as_ref()));
+                ctx2.events().emit(SparkletEvent::TaskEnd {
+                    job_id,
+                    stage_tag,
+                    task: part,
+                    attempt,
+                    ok: outcome.is_ok(),
+                    run_ms: outcome.as_ref().map(|(_, ms)| *ms).unwrap_or(0.0),
+                });
                 let _ = tx.send((part, outcome));
             });
         }
@@ -129,8 +155,15 @@ fn run_stage<U: Send + 'static>(
         );
     }
 
-    if ctx.conf().collect_metrics {
-        ctx.metrics().record(StageMetrics {
+    // StageCompleted always goes out; whether it lands in the metrics
+    // registry depends on whether `collect_metrics` subscribed the
+    // MetricsListener at context build. The flush makes the registry
+    // update visible before run_stage returns (synchronous readers like
+    // the partition-cost model depend on that).
+    ctx.events().emit(SparkletEvent::StageCompleted {
+        job_id,
+        stage_tag,
+        metrics: StageMetrics {
             kind,
             rdd_id,
             num_tasks,
@@ -143,21 +176,27 @@ fn run_stage<U: Send + 'static>(
             backend: ctx.executor().name(),
             steals,
             queue_wait_ms,
-        });
-    }
+        },
+    });
+    ctx.events().flush();
 
     results.into_iter().map(|r| r.unwrap()).collect()
 }
 
 /// Recursively ensure every shuffle dependency reachable from `node` has
 /// completed its map stage (running grandparent shuffles first).
-fn ensure_shuffles(ctx: &SparkletContext, node: &Arc<dyn DepNode>, visited: &mut HashSet<usize>) {
+fn ensure_shuffles(
+    ctx: &SparkletContext,
+    job_id: u64,
+    node: &Arc<dyn DepNode>,
+    visited: &mut HashSet<usize>,
+) {
     if !visited.insert(node.node_id()) {
         return;
     }
     for dep in node.node_deps() {
         match dep {
-            Dep::Narrow(parent) => ensure_shuffles(ctx, &parent, visited),
+            Dep::Narrow(parent) => ensure_shuffles(ctx, job_id, &parent, visited),
             Dep::Shuffle(sd) => {
                 let mgr = ctx.shuffle_manager();
                 if mgr.is_completed(sd.shuffle_id()) {
@@ -165,14 +204,14 @@ fn ensure_shuffles(ctx: &SparkletContext, node: &Arc<dyn DepNode>, visited: &mut
                 }
                 // Parents of the map stage first.
                 let parent = sd.parent_node();
-                ensure_shuffles(ctx, &parent, visited);
-                run_map_stage(ctx, &sd);
+                ensure_shuffles(ctx, job_id, &parent, visited);
+                run_map_stage(ctx, job_id, &sd);
             }
         }
     }
 }
 
-fn run_map_stage(ctx: &SparkletContext, sd: &Arc<dyn ShuffleDepObj>) {
+fn run_map_stage(ctx: &SparkletContext, job_id: u64, sd: &Arc<dyn ShuffleDepObj>) {
     let mgr = ctx.shuffle_manager();
     // Clear any partial output from a previous failed run of this stage.
     mgr.clear_shuffle(sd.shuffle_id());
@@ -182,6 +221,7 @@ fn run_map_stage(ctx: &SparkletContext, sd: &Arc<dyn ShuffleDepObj>) {
     let stage_tag = 0x5A5A_0000u64 ^ sd.shuffle_id() as u64;
     run_stage::<()>(
         ctx,
+        job_id,
         StageKind::ShuffleMap,
         usize::MAX,
         stage_tag,
@@ -200,18 +240,23 @@ pub fn run_job<T: Data, U: Send + 'static>(
     rdd: &Rdd<T>,
     func: impl Fn(usize, Vec<T>) -> U + Send + Sync + 'static,
 ) -> Vec<U> {
+    // One job span per action; map stages nest inside it.
+    let job_id = ctx.events().next_job_id();
+    ctx.events().emit(SparkletEvent::JobStart { job_id });
+
     // Stage 0..k-1: shuffle map stages in dependency order.
     let node = rdd.as_node();
     let mut visited = HashSet::new();
-    ensure_shuffles(ctx, &node, &mut visited);
+    ensure_shuffles(ctx, job_id, &node, &mut visited);
 
     // Result stage.
     let base = Arc::clone(&rdd.base);
     let ctx2 = ctx.clone();
     let func = Arc::new(func);
     let stage_tag = 0xA11C_0000u64 ^ rdd.id() as u64;
-    run_stage(
+    let out = run_stage(
         ctx,
+        job_id,
         StageKind::Result,
         rdd.id(),
         stage_tag,
@@ -221,5 +266,8 @@ pub fn run_job<T: Data, U: Send + 'static>(
             let data = materialize(&base, part, &tc);
             func(part, data)
         }),
-    )
+    );
+    ctx.events().emit(SparkletEvent::JobEnd { job_id });
+    ctx.events().flush();
+    out
 }

@@ -213,6 +213,12 @@ impl ShuffleManager {
         self.store.spilled_blocks()
     }
 
+    /// Install the block spill/reload observer on the underlying store
+    /// (the context routes it onto the event bus).
+    pub fn set_spill_hook(&self, hook: super::block::BlockIoHook) {
+        self.store.set_spill_hook(hook);
+    }
+
     /// Spilled blocks reloaded on fetch.
     pub fn spill_reloads(&self) -> u64 {
         self.store.reloaded_blocks()

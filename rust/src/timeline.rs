@@ -1,0 +1,680 @@
+//! Offline replay of a persisted event log (`--event-log` JSONL) into a
+//! per-stage text Gantt plus task-duration statistics — the `timeline`
+//! CLI command. The Spark-UI analog for a headless engine: record a run
+//! once, inspect skew/stragglers/spills after the fact, diff across
+//! runs.
+//!
+//! The replayer consumes the flat JSONL schema written by
+//! [`crate::sparklet::events::SparkletEvent::to_json_line`] and is
+//! deliberately tolerant: unknown event types are counted and skipped
+//! (forward compatibility), and a truncated trailing line — a run
+//! killed mid-write — is reported but does not abort the replay.
+
+use std::collections::BTreeMap;
+
+use crate::sparklet::events::{parse_json_line, JsonValue};
+use crate::util::stats;
+
+/// One task attempt's span as reconstructed from TaskStart/TaskEnd.
+#[derive(Debug, Clone, Default)]
+pub struct TaskSpan {
+    pub start: Option<f64>,
+    pub end: Option<f64>,
+    pub ok: bool,
+    /// Pure run time reported by TaskEnd (excludes queue wait), ms.
+    pub run_ms: f64,
+}
+
+/// One stage's reconstructed view: span, tasks, and the summary fields
+/// carried by its StageCompleted event.
+#[derive(Debug, Clone)]
+pub struct StageView {
+    pub job: u64,
+    /// Stage tag as the hex string from the log.
+    pub tag: String,
+    pub kind: String,
+    pub name: String,
+    pub backend: String,
+    pub submitted: Option<f64>,
+    pub completed: Option<f64>,
+    pub num_tasks: usize,
+    pub wall_ms: f64,
+    pub retries: usize,
+    pub steals: usize,
+    pub queue_wait_ms: f64,
+    pub shuffle_records: u64,
+    pub shuffle_bytes: u64,
+    pub spilled_blocks: u64,
+    /// Task spans keyed by (task index, attempt).
+    pub tasks: BTreeMap<(usize, usize), TaskSpan>,
+    /// Spill/reload/backpressure annotations whose timestamp falls
+    /// inside this stage's span, as `(t_ms, text)`.
+    pub annotations: Vec<(f64, String)>,
+}
+
+impl StageView {
+    fn new(job: u64, tag: String) -> Self {
+        Self {
+            job,
+            tag,
+            kind: String::new(),
+            name: String::new(),
+            backend: String::new(),
+            submitted: None,
+            completed: None,
+            num_tasks: 0,
+            wall_ms: 0.0,
+            retries: 0,
+            steals: 0,
+            queue_wait_ms: 0.0,
+            shuffle_records: 0,
+            shuffle_bytes: 0,
+            spilled_blocks: 0,
+            tasks: BTreeMap::new(),
+            annotations: Vec::new(),
+        }
+    }
+
+    /// Task durations in ms: the TaskEnd `run_ms` when present, else the
+    /// start→end span.
+    pub fn durations(&self) -> Vec<f64> {
+        self.tasks
+            .values()
+            .filter_map(|t| {
+                if t.run_ms > 0.0 {
+                    Some(t.run_ms)
+                } else {
+                    match (t.start, t.end) {
+                        (Some(s), Some(e)) => Some((e - s).max(0.0)),
+                        _ => None,
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+/// The reconstructed run: stages in submission order plus the stream /
+/// shuffle / kernel side channels.
+#[derive(Debug, Clone, Default)]
+pub struct Replay {
+    pub stages: Vec<StageView>,
+    pub jobs: Vec<u64>,
+    pub job_ends: usize,
+    pub task_starts: usize,
+    pub task_ends: usize,
+    pub spills: usize,
+    pub reloads: usize,
+    pub stream_batches: usize,
+    pub bp_transitions: usize,
+    pub kernel_snapshots: usize,
+    /// Events with an unrecognized `type` (skipped, forward-compat).
+    pub unknown_events: usize,
+    /// Lines that failed to parse, as `(line_number, error)`.
+    pub bad_lines: Vec<(usize, String)>,
+    /// Annotations that matched no stage span.
+    pub orphan_annotations: Vec<(f64, String)>,
+}
+
+impl Replay {
+    pub fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Distinct task attempts seen across all stages.
+    pub fn n_tasks(&self) -> usize {
+        self.stages.iter().map(|s| s.tasks.len()).sum()
+    }
+}
+
+fn num(obj: &std::collections::HashMap<String, JsonValue>, key: &str) -> f64 {
+    obj.get(key).and_then(JsonValue::as_f64).unwrap_or(0.0)
+}
+
+fn text(obj: &std::collections::HashMap<String, JsonValue>, key: &str) -> String {
+    obj.get(key)
+        .and_then(JsonValue::as_str)
+        .unwrap_or("")
+        .to_string()
+}
+
+/// Replay a JSONL event log into a [`Replay`]. Only a log with *no*
+/// parseable lines at all is an error; individually broken lines are
+/// collected in [`Replay::bad_lines`].
+pub fn replay(log: &str) -> Result<Replay, String> {
+    let mut rp = Replay::default();
+    // (job, tag) -> index into rp.stages, insertion-ordered.
+    let mut index: BTreeMap<(u64, String), usize> = BTreeMap::new();
+    let mut annotations: Vec<(f64, String)> = Vec::new();
+    let mut parsed_any = false;
+
+    for (lineno, line) in log.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let obj = match parse_json_line(line) {
+            Ok(o) => o,
+            Err(e) => {
+                rp.bad_lines.push((lineno + 1, e));
+                continue;
+            }
+        };
+        parsed_any = true;
+        let t_ms = num(&obj, "t_ms");
+        let job = num(&obj, "job") as u64;
+        let tag = text(&obj, "stage");
+        let mut stage_entry = |rp: &mut Replay| -> usize {
+            *index.entry((job, tag.clone())).or_insert_with(|| {
+                rp.stages.push(StageView::new(job, tag.clone()));
+                rp.stages.len() - 1
+            })
+        };
+        match text(&obj, "type").as_str() {
+            "JobStart" => rp.jobs.push(job),
+            "JobEnd" => rp.job_ends += 1,
+            "StageSubmitted" => {
+                let i = stage_entry(&mut rp);
+                let s = &mut rp.stages[i];
+                s.submitted = Some(t_ms);
+                s.kind = text(&obj, "kind");
+                s.name = text(&obj, "name");
+                s.num_tasks = num(&obj, "num_tasks") as usize;
+            }
+            "StageCompleted" => {
+                let i = stage_entry(&mut rp);
+                let s = &mut rp.stages[i];
+                s.completed = Some(t_ms);
+                s.kind = text(&obj, "kind");
+                s.backend = text(&obj, "backend");
+                s.num_tasks = num(&obj, "num_tasks") as usize;
+                s.wall_ms = num(&obj, "wall_ms");
+                s.retries = num(&obj, "retries") as usize;
+                s.steals = num(&obj, "steals") as usize;
+                s.queue_wait_ms = num(&obj, "queue_wait_ms");
+                s.shuffle_records = num(&obj, "shuffle_records") as u64;
+                s.shuffle_bytes = num(&obj, "shuffle_bytes") as u64;
+                s.spilled_blocks = num(&obj, "spilled_blocks") as u64;
+            }
+            "TaskStart" => {
+                rp.task_starts += 1;
+                let i = stage_entry(&mut rp);
+                let key = (num(&obj, "task") as usize, num(&obj, "attempt") as usize);
+                rp.stages[i].tasks.entry(key).or_default().start = Some(t_ms);
+            }
+            "TaskEnd" => {
+                rp.task_ends += 1;
+                let i = stage_entry(&mut rp);
+                let key = (num(&obj, "task") as usize, num(&obj, "attempt") as usize);
+                let span = rp.stages[i].tasks.entry(key).or_default();
+                span.end = Some(t_ms);
+                span.ok = matches!(obj.get("ok"), Some(JsonValue::Bool(true)));
+                span.run_ms = num(&obj, "run_ms");
+            }
+            "ShuffleBlockSpilled" => {
+                rp.spills += 1;
+                annotations.push((
+                    t_ms,
+                    format!("spill {} ({} B)", text(&obj, "block"), num(&obj, "bytes")),
+                ));
+            }
+            "ShuffleBlockReloaded" => {
+                rp.reloads += 1;
+                annotations.push((
+                    t_ms,
+                    format!("reload {} ({} B)", text(&obj, "block"), num(&obj, "bytes")),
+                ));
+            }
+            "StreamBatchSubmitted" => {}
+            "StreamBatchCompleted" => {
+                rp.stream_batches += 1;
+                annotations.push((
+                    t_ms,
+                    format!(
+                        "stream batch {}: {} accepted, {} deferred",
+                        num(&obj, "batch"),
+                        num(&obj, "accepted"),
+                        num(&obj, "deferred"),
+                    ),
+                ));
+            }
+            "BackpressureTransition" => {
+                rp.bp_transitions += 1;
+                let dir = if matches!(obj.get("shrank"), Some(JsonValue::Bool(true))) {
+                    "shrink"
+                } else {
+                    "recover"
+                };
+                let limit = match obj.get("effective_limit") {
+                    Some(JsonValue::Num(n)) => format!("{n}"),
+                    _ => "uncapped".into(),
+                };
+                annotations.push((
+                    t_ms,
+                    format!(
+                        "backpressure {dir} -> limit {limit} ({} B/batch)",
+                        num(&obj, "bytes_delta"),
+                    ),
+                ));
+            }
+            "KernelSnapshot" => {
+                rp.kernel_snapshots += 1;
+                annotations.push((
+                    t_ms,
+                    format!(
+                        "kernel: {} ∩, {} early-aborts, {} repr switches",
+                        num(&obj, "intersections"),
+                        num(&obj, "early_aborts"),
+                        num(&obj, "repr_switches"),
+                    ),
+                ));
+            }
+            _ => rp.unknown_events += 1,
+        }
+    }
+
+    if !parsed_any {
+        return Err(match rp.bad_lines.first() {
+            Some((n, e)) => format!("no parseable events (first error, line {n}: {e})"),
+            None => "empty event log".into(),
+        });
+    }
+
+    // Attach each annotation to the stage whose span contains it.
+    for (t, text) in annotations {
+        let hit = rp.stages.iter_mut().find(|s| {
+            matches!((s.span_start(), s.span_end()), (Some(a), Some(b)) if t >= a && t <= b)
+        });
+        match hit {
+            Some(stage) => stage.annotations.push((t, text)),
+            None => rp.orphan_annotations.push((t, text)),
+        }
+    }
+    Ok(rp)
+}
+
+impl StageView {
+    /// Earliest timestamp of the stage (submission or first task start).
+    pub fn span_start(&self) -> Option<f64> {
+        let first_task = self
+            .tasks
+            .values()
+            .filter_map(|t| t.start)
+            .fold(f64::INFINITY, f64::min);
+        match (self.submitted, first_task.is_finite().then_some(first_task)) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    /// Latest timestamp of the stage (completion or last task end).
+    pub fn span_end(&self) -> Option<f64> {
+        let last_task = self
+            .tasks
+            .values()
+            .filter_map(|t| t.end)
+            .fold(f64::NEG_INFINITY, f64::max);
+        match (self.completed, last_task.is_finite().then_some(last_task)) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        }
+    }
+}
+
+/// Default Gantt bar width in characters.
+pub const DEFAULT_WIDTH: usize = 40;
+
+/// Render the replayed run as text: one Gantt block per stage (bars
+/// scaled to the stage's own span), a stats block (p50/p95/p99, skew,
+/// stragglers, queue-wait vs run split), inline spill/backpressure
+/// annotations, and a run footer.
+pub fn render(rp: &Replay, width: usize) -> String {
+    let width = width.clamp(10, 200);
+    let mut out = String::new();
+    for s in &rp.stages {
+        render_stage(&mut out, s, width);
+    }
+    if !rp.orphan_annotations.is_empty() {
+        out.push_str("outside any stage span:\n");
+        for (t, a) in &rp.orphan_annotations {
+            out.push_str(&format!("  [{t:9.3} ms] {a}\n"));
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "run: {} jobs, {} stages, {} tasks ({} starts / {} ends), \
+         {} spills / {} reloads, {} stream batches, {} backpressure transitions\n",
+        rp.n_jobs(),
+        rp.n_stages(),
+        rp.n_tasks(),
+        rp.task_starts,
+        rp.task_ends,
+        rp.spills,
+        rp.reloads,
+        rp.stream_batches,
+        rp.bp_transitions,
+    ));
+    if !rp.bad_lines.is_empty() {
+        let (n, e) = &rp.bad_lines[0];
+        out.push_str(&format!(
+            "warning: {} unparseable line(s), first at line {n}: {e}\n",
+            rp.bad_lines.len()
+        ));
+    }
+    if rp.unknown_events > 0 {
+        out.push_str(&format!(
+            "warning: {} event(s) of unknown type skipped\n",
+            rp.unknown_events
+        ));
+    }
+    out
+}
+
+fn render_stage(out: &mut String, s: &StageView, width: usize) {
+    let name = if s.name.is_empty() {
+        format!("{}?", s.kind)
+    } else {
+        s.name.clone()
+    };
+    out.push_str(&format!(
+        "stage {name} [{}] job {} — {} tasks, {:.1} ms wall, backend {}{}\n",
+        s.tag,
+        s.job,
+        s.num_tasks,
+        s.wall_ms,
+        if s.backend.is_empty() { "?" } else { &s.backend },
+        if s.retries > 0 {
+            format!(", {} retries", s.retries)
+        } else {
+            String::new()
+        },
+    ));
+
+    let (t0, t1) = match (s.span_start(), s.span_end()) {
+        (Some(a), Some(b)) if b > a => (a, b),
+        (Some(a), _) => (a, a + 1e-6),
+        _ => (0.0, 1e-6),
+    };
+    let scale = width as f64 / (t1 - t0);
+    for (&(task, attempt), span) in &s.tasks {
+        let (Some(start), Some(end)) = (span.start, span.end) else {
+            out.push_str(&format!(
+                "  t{task}.{attempt} {:width$} (incomplete span)\n",
+                "",
+                width = width
+            ));
+            continue;
+        };
+        let off = (((start - t0) * scale) as usize).min(width.saturating_sub(1));
+        let len = (((end - start) * scale).ceil() as usize)
+            .max(1)
+            .min(width - off);
+        let mut bar = String::new();
+        bar.push_str(&"·".repeat(off));
+        bar.push_str(&"█".repeat(len));
+        bar.push_str(&"·".repeat(width - off - len));
+        let flag = if span.ok { ' ' } else { '!' };
+        out.push_str(&format!(
+            "  t{task}.{attempt}{flag}|{bar}| {:.3} ms\n",
+            span.run_ms.max(end - start)
+        ));
+    }
+
+    let durs = s.durations();
+    if !durs.is_empty() {
+        let med = stats::median(&durs);
+        let skew = if med > 0.0 {
+            stats::max(&durs) / med
+        } else {
+            0.0
+        };
+        out.push_str(&format!(
+            "  p50 {:.3} ms  p95 {:.3} ms  p99 {:.3} ms  skew {:.1}x\n",
+            stats::quantile(&durs, 0.50),
+            stats::quantile(&durs, 0.95),
+            stats::quantile(&durs, 0.99),
+            skew,
+        ));
+        let run_total: f64 = durs.iter().sum();
+        out.push_str(&format!(
+            "  queue-wait {:.3} ms vs run {:.3} ms",
+            s.queue_wait_ms, run_total
+        ));
+        if s.steals > 0 {
+            out.push_str(&format!("  ({} steals)", s.steals));
+        }
+        out.push('\n');
+        if med > 0.0 {
+            let stragglers: Vec<String> = s
+                .tasks
+                .iter()
+                .filter_map(|(&(task, _), span)| {
+                    let d = if span.run_ms > 0.0 {
+                        span.run_ms
+                    } else {
+                        match (span.start, span.end) {
+                            (Some(a), Some(b)) => (b - a).max(0.0),
+                            _ => return None,
+                        }
+                    };
+                    (d > 2.0 * med).then(|| format!("t{task} ({d:.3} ms, {:.1}x)", d / med))
+                })
+                .collect();
+            if !stragglers.is_empty() {
+                out.push_str(&format!("  stragglers: {}\n", stragglers.join(", ")));
+            }
+        }
+    }
+    if s.shuffle_records > 0 || s.spilled_blocks > 0 {
+        out.push_str(&format!(
+            "  shuffle {} records / {} bytes, {} blocks spilled\n",
+            s.shuffle_records, s.shuffle_bytes, s.spilled_blocks
+        ));
+    }
+    for (t, a) in &s.annotations {
+        out.push_str(&format!("  [{t:9.3} ms] {a}\n"));
+    }
+    out.push('\n');
+}
+
+/// Replay `path` and render it — the `timeline` CLI entry point.
+pub fn render_file(path: &str, width: usize) -> Result<String, String> {
+    let log = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read event log {path:?}: {e}"))?;
+    let rp = replay(&log)?;
+    Ok(render(&rp, width))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparklet::events::SparkletEvent;
+    use crate::sparklet::metrics::{StageKind, StageMetrics};
+    use std::time::Duration;
+
+    fn synthetic_log() -> String {
+        let mut t = 0.0;
+        let mut lines = Vec::new();
+        let mut push = |ev: SparkletEvent, lines: &mut Vec<String>| {
+            t += 1.0;
+            lines.push(ev.to_json_line(t));
+        };
+        push(SparkletEvent::JobStart { job_id: 0 }, &mut lines);
+        push(
+            SparkletEvent::StageSubmitted {
+                job_id: 0,
+                stage_tag: 0xA11C_0001,
+                kind: StageKind::Result,
+                name: "Result/rdd1".into(),
+                num_tasks: 3,
+            },
+            &mut lines,
+        );
+        for task in 0..3usize {
+            push(
+                SparkletEvent::TaskStart {
+                    job_id: 0,
+                    stage_tag: 0xA11C_0001,
+                    task,
+                    attempt: 0,
+                },
+                &mut lines,
+            );
+            push(
+                SparkletEvent::TaskEnd {
+                    job_id: 0,
+                    stage_tag: 0xA11C_0001,
+                    task,
+                    attempt: 0,
+                    ok: true,
+                    run_ms: 1.0 + task as f64 * 4.0,
+                },
+                &mut lines,
+            );
+        }
+        push(
+            SparkletEvent::ShuffleBlockSpilled {
+                block: crate::sparklet::BlockId {
+                    shuffle_id: 0,
+                    reduce_part: 1,
+                    map_part: 2,
+                },
+                bytes: 128,
+            },
+            &mut lines,
+        );
+        push(
+            SparkletEvent::StageCompleted {
+                job_id: 0,
+                stage_tag: 0xA11C_0001,
+                metrics: StageMetrics {
+                    kind: StageKind::Result,
+                    rdd_id: 1,
+                    num_tasks: 3,
+                    wall: Duration::from_millis(9),
+                    task_millis: vec![1.0, 5.0, 9.0],
+                    retries: 0,
+                    shuffle_records: 12,
+                    shuffle_bytes: 512,
+                    spilled_blocks: 1,
+                    backend: "fifo",
+                    steals: 0,
+                    queue_wait_ms: 0.5,
+                },
+            },
+            &mut lines,
+        );
+        push(SparkletEvent::JobEnd { job_id: 0 }, &mut lines);
+        lines.join("\n") + "\n"
+    }
+
+    #[test]
+    fn replay_reconstructs_counts_and_spans() {
+        let rp = replay(&synthetic_log()).unwrap();
+        assert_eq!(rp.n_jobs(), 1);
+        assert_eq!(rp.job_ends, 1);
+        assert_eq!(rp.n_stages(), 1);
+        assert_eq!(rp.n_tasks(), 3);
+        assert_eq!(rp.task_starts, 3);
+        assert_eq!(rp.task_ends, 3);
+        assert_eq!(rp.spills, 1);
+        assert!(rp.bad_lines.is_empty());
+        let s = &rp.stages[0];
+        assert_eq!(s.tag, "a11c0001");
+        assert_eq!(s.kind, "Result");
+        assert_eq!(s.num_tasks, 3);
+        assert_eq!(s.shuffle_bytes, 512);
+        assert!(s.submitted.unwrap() < s.completed.unwrap());
+        // the spill annotation landed inside the stage span
+        assert_eq!(s.annotations.len(), 1);
+        assert!(s.annotations[0].1.contains("spill"), "{:?}", s.annotations);
+        assert!(rp.orphan_annotations.is_empty());
+    }
+
+    #[test]
+    fn render_shows_gantt_stats_and_stragglers() {
+        let rp = replay(&synthetic_log()).unwrap();
+        let text = render(&rp, 40);
+        assert!(text.contains("stage Result/rdd1 [a11c0001]"), "{text}");
+        assert!(text.contains("█"), "{text}");
+        assert!(text.contains("p50"), "{text}");
+        assert!(text.contains("p95"), "{text}");
+        assert!(text.contains("p99"), "{text}");
+        assert!(text.contains("skew"), "{text}");
+        // durations 1/5/9: median 5, max 9 -> no >2x straggler; widen:
+        assert!(text.contains("queue-wait"), "{text}");
+        assert!(text.contains("spill"), "{text}");
+        assert!(text.contains("run: 1 jobs, 1 stages, 3 tasks"), "{text}");
+    }
+
+    #[test]
+    fn straggler_detection_flags_dominant_task() {
+        // 4 tasks, one 10x the median.
+        let mut log = String::new();
+        log.push_str(&SparkletEvent::JobStart { job_id: 0 }.to_json_line(0.0));
+        log.push('\n');
+        for (task, run_ms) in [(0usize, 1.0f64), (1, 1.0), (2, 1.0), (3, 10.0)] {
+            log.push_str(
+                &SparkletEvent::TaskStart {
+                    job_id: 0,
+                    stage_tag: 7,
+                    task,
+                    attempt: 0,
+                }
+                .to_json_line(1.0),
+            );
+            log.push('\n');
+            log.push_str(
+                &SparkletEvent::TaskEnd {
+                    job_id: 0,
+                    stage_tag: 7,
+                    task,
+                    attempt: 0,
+                    ok: true,
+                    run_ms,
+                }
+                .to_json_line(1.0 + run_ms),
+            );
+            log.push('\n');
+        }
+        let rp = replay(&log).unwrap();
+        let text = render(&rp, 40);
+        assert!(text.contains("stragglers: t3"), "{text}");
+        assert!(text.contains("skew 10.0x"), "{text}");
+    }
+
+    #[test]
+    fn broken_lines_are_collected_not_fatal() {
+        let mut log = synthetic_log();
+        log.push_str("{\"t_ms\": 99.0, \"type\": \"FutureEvent\", \"x\": 1}\n");
+        log.push_str("{\"truncated\n");
+        let rp = replay(&log).unwrap();
+        assert_eq!(rp.unknown_events, 1);
+        assert_eq!(rp.bad_lines.len(), 1);
+        let text = render(&rp, 40);
+        assert!(text.contains("unparseable"), "{text}");
+        assert!(text.contains("unknown type"), "{text}");
+    }
+
+    #[test]
+    fn empty_or_garbage_logs_error() {
+        assert!(replay("").is_err());
+        assert!(replay("not json at all\n").is_err());
+    }
+
+    #[test]
+    fn render_file_roundtrip() {
+        let path = std::env::temp_dir().join(format!(
+            "sparklet-timeline-test-{}.jsonl",
+            std::process::id()
+        ));
+        std::fs::write(&path, synthetic_log()).unwrap();
+        let text = render_file(path.to_str().unwrap(), 40).unwrap();
+        assert!(text.contains("run: 1 jobs"), "{text}");
+        std::fs::remove_file(&path).unwrap();
+        assert!(render_file(path.to_str().unwrap(), 40).is_err());
+    }
+}

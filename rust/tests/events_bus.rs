@@ -1,0 +1,207 @@
+//! Integration tests for the event bus: ordering invariants under every
+//! executor backend, listener isolation during real jobs, bus-derived
+//! metrics vs the shuffle counters, and golden event-log replay through
+//! the `timeline` module.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use rdd_eclat::sparklet::{
+    CollectingListener, EventListener, ExecutorRegistry, SparkletConf, SparkletContext,
+    SparkletEvent,
+};
+use rdd_eclat::timeline;
+
+fn sc_with_backend(cores: usize, backend: &str) -> SparkletContext {
+    let conf = SparkletConf::new("events-test")
+        .with_cores(cores)
+        .unwrap()
+        .with_executor_backend(backend)
+        .unwrap();
+    SparkletContext::new(conf)
+}
+
+/// One two-shuffle job, oracle-checked so callers know the workload
+/// really ran.
+fn run_shuffle_job(sc: &SparkletContext) {
+    let sum: u64 = sc
+        .parallelize((0..2_000u64).collect::<Vec<_>>(), 8)
+        .map_to_pair(|x| (x % 13, x))
+        .reduce_by_key(|a, b| a + b)
+        .map_to_pair(|(_, s)| (s % 3, s))
+        .reduce_by_key(|a, b| a + b)
+        .values()
+        .collect()
+        .iter()
+        .sum();
+    assert_eq!(sum, (0..2_000u64).sum::<u64>());
+}
+
+#[test]
+fn every_backend_preserves_span_ordering() {
+    // Task events are emitted from the task closures, i.e. from whatever
+    // thread the backend runs them on (fifo workers, work-stealing
+    // workers, or the caller for sequential). Regardless of backend the
+    // delivered sequence must satisfy the span invariants: timestamps
+    // monotone, JobStart before JobEnd, StageSubmitted before the
+    // stage's tasks, TaskStart before the matching TaskEnd, and
+    // StageCompleted carrying as many tasks as actually ended.
+    for backend in ExecutorRegistry::names() {
+        let sc = sc_with_backend(3, backend);
+        let collector = CollectingListener::new();
+        sc.events().register(Arc::new(collector.clone()));
+        run_shuffle_job(&sc);
+
+        let events = collector.snapshot();
+        assert!(!events.is_empty(), "{backend}: no events delivered");
+        let mut last_t = f64::NEG_INFINITY;
+        let mut open_jobs: HashSet<u64> = HashSet::new();
+        let mut submitted: HashSet<u64> = HashSet::new();
+        let mut open_tasks: HashSet<(u64, usize, usize)> = HashSet::new();
+        let mut starts = 0usize;
+        let mut ends = 0usize;
+        for (t, e) in &events {
+            assert!(*t >= last_t, "{backend}: timestamps went backwards");
+            last_t = *t;
+            match e {
+                SparkletEvent::JobStart { job_id } => {
+                    assert!(open_jobs.insert(*job_id), "{backend}: job {job_id} reopened");
+                }
+                SparkletEvent::JobEnd { job_id } => {
+                    assert!(
+                        open_jobs.remove(job_id),
+                        "{backend}: JobEnd {job_id} without JobStart"
+                    );
+                }
+                SparkletEvent::StageSubmitted { job_id, stage_tag, num_tasks, .. } => {
+                    assert!(open_jobs.contains(job_id), "{backend}: stage outside job span");
+                    assert!(*num_tasks > 0, "{backend}: empty stage submitted");
+                    submitted.insert(*stage_tag);
+                }
+                SparkletEvent::TaskStart { stage_tag, task, attempt, .. } => {
+                    assert!(
+                        submitted.contains(stage_tag),
+                        "{backend}: task before its StageSubmitted"
+                    );
+                    assert!(
+                        open_tasks.insert((*stage_tag, *task, *attempt)),
+                        "{backend}: duplicate TaskStart"
+                    );
+                    starts += 1;
+                }
+                SparkletEvent::TaskEnd { stage_tag, task, attempt, ok, .. } => {
+                    assert!(
+                        open_tasks.remove(&(*stage_tag, *task, *attempt)),
+                        "{backend}: TaskEnd without TaskStart"
+                    );
+                    assert!(*ok, "{backend}: unexpected task failure");
+                    ends += 1;
+                }
+                SparkletEvent::StageCompleted { stage_tag, metrics, .. } => {
+                    assert!(
+                        submitted.contains(stage_tag),
+                        "{backend}: StageCompleted before StageSubmitted"
+                    );
+                    assert!(metrics.num_tasks > 0, "{backend}: completed stage has no tasks");
+                }
+                _ => {}
+            }
+        }
+        assert!(open_jobs.is_empty(), "{backend}: unbalanced job spans");
+        assert!(open_tasks.is_empty(), "{backend}: unbalanced task spans");
+        assert!(starts > 0 && starts == ends, "{backend}: {starts} starts / {ends} ends");
+    }
+}
+
+#[test]
+fn bus_derived_metrics_match_shuffle_counters() {
+    // The MetricsRegistry is now fed exclusively through the bus
+    // (StageCompleted -> MetricsListener). Its aggregate totals must
+    // still equal the shuffle manager's own exact byte counter, and the
+    // StageCompleted events a second listener sees must sum to the same
+    // figures — one source of truth, two subscribers.
+    let sc = sc_with_backend(4, "fifo");
+    let collector = CollectingListener::new();
+    sc.events().register(Arc::new(collector.clone()));
+    run_shuffle_job(&sc);
+
+    assert_eq!(
+        sc.metrics().total_shuffle_bytes(),
+        sc.shuffle_manager().bytes_written()
+    );
+    let (mut bytes, mut records) = (0u64, 0u64);
+    for (_, e) in collector.snapshot() {
+        if let SparkletEvent::StageCompleted { metrics, .. } = e {
+            bytes += metrics.shuffle_bytes;
+            records += metrics.shuffle_records;
+        }
+    }
+    assert_eq!(bytes, sc.metrics().total_shuffle_bytes());
+    assert_eq!(records, sc.metrics().total_shuffle_records());
+}
+
+#[test]
+fn panicking_listener_does_not_break_the_job() {
+    struct Bomb;
+    impl EventListener for Bomb {
+        fn on_event(&self, _t: f64, _e: &SparkletEvent) {
+            panic!("listener bomb");
+        }
+    }
+    let sc = sc_with_backend(3, "work-stealing");
+    let collector = CollectingListener::new();
+    sc.events().register(Arc::new(Bomb));
+    sc.events().register(Arc::new(collector.clone()));
+    // The job must complete correctly and the well-behaved listener must
+    // still receive every event despite the bomb firing on each one.
+    run_shuffle_job(&sc);
+    assert!(!collector.is_empty());
+    assert_eq!(sc.events().dropped(), 0);
+    assert!(sc.metrics().stages().len() >= 2);
+}
+
+#[test]
+fn golden_event_log_replays_to_exact_counts() {
+    // Record a real run to JSONL via the conf-wired EventLogWriter, then
+    // replay it offline: the timeline must reproduce the exact job,
+    // stage, and task counts a live listener observed.
+    let path = std::env::temp_dir().join("sparklet_events_golden.jsonl");
+    let _ = std::fs::remove_file(&path); // writer appends; start clean
+    let conf = SparkletConf::new("golden")
+        .with_cores(3)
+        .unwrap()
+        .with_event_log(path.to_str().unwrap());
+    let sc = SparkletContext::try_new(conf).unwrap();
+    let collector = CollectingListener::new();
+    sc.events().register(Arc::new(collector.clone()));
+    run_shuffle_job(&sc);
+    run_shuffle_job(&sc); // two jobs -> multiple job spans in one log
+
+    let (mut jobs, mut stages, mut starts, mut ends) = (0usize, 0usize, 0usize, 0usize);
+    for (_, e) in collector.snapshot() {
+        match e {
+            SparkletEvent::JobStart { .. } => jobs += 1,
+            SparkletEvent::StageCompleted { .. } => stages += 1,
+            SparkletEvent::TaskStart { .. } => starts += 1,
+            SparkletEvent::TaskEnd { .. } => ends += 1,
+            _ => {}
+        }
+    }
+
+    let log = std::fs::read_to_string(&path).unwrap();
+    let rp = timeline::replay(&log).unwrap();
+    assert!(rp.bad_lines.is_empty(), "unparseable lines: {:?}", rp.bad_lines);
+    assert_eq!(rp.n_jobs(), jobs);
+    assert_eq!(rp.n_stages(), stages);
+    assert_eq!(rp.task_starts, starts);
+    assert_eq!(rp.task_ends, ends);
+    assert_eq!(rp.n_tasks(), ends, "every ended task attempt reconstructed");
+    assert_eq!(rp.unknown_events, 0);
+
+    // And the human rendering carries the stats the log encodes.
+    let rendered = timeline::render(&rp, 40);
+    assert!(rendered.contains("p50"), "{rendered}");
+    assert!(rendered.contains("skew"), "{rendered}");
+    assert!(rendered.contains(&format!("{} jobs", jobs)), "{rendered}");
+    let _ = std::fs::remove_file(&path);
+}
