@@ -134,6 +134,37 @@ print(f"EVENTS_mine.jsonl OK: {len(events)} events, {starts} tasks, kinds: {sort
 EOF
 cargo run --release --quiet -- timeline --log EVENTS_mine.jsonl | head -40
 
+echo "== multi-process smoke (mine --executor multi-process + worker fleet)"
+# The same tiny mine on the multi-process backend: the driver must fork
+# and register >= 2 worker processes, tasks must carry worker ids,
+# workers must fetch shuffle blocks from the driver, and the itemset
+# histogram must be identical to a sequential-backend run (remote
+# bottom-up == in-process oracle).
+REPRO_SCALE=0.02 cargo run --release --quiet -- \
+    mine --dataset t10 --min-sup 0.02 --engine eclat-v1 \
+    --executor sequential > MINE_seq.txt
+REPRO_SCALE=0.02 SPARKLET_WORKERS=2 cargo run --release --quiet -- \
+    mine --dataset t10 --min-sup 0.02 --engine eclat-v1 \
+    --executor multi-process --event-log EVENTS_mp.jsonl > MINE_mp.txt
+python3 - <<'EOF'
+import json, re
+events = [json.loads(l) for l in open("EVENTS_mp.jsonl") if l.strip()]
+workers = {e["worker"] for e in events if e["type"] == "WorkerRegistered"}
+assert len(workers) >= 2, f"want >= 2 registered workers, got {workers}"
+assert any(e["type"] == "TaskEnd" and e.get("worker") for e in events), \
+    "no task span carries a worker id"
+fetches = sum(1 for e in events if e["type"] == "RemoteFetch")
+assert fetches > 0, "workers never fetched shuffle blocks from the driver"
+def histogram(path):
+    return [l for l in open(path) if re.match(r"\s+L\d+: \d+", l)]
+seq, mp = histogram("MINE_seq.txt"), histogram("MINE_mp.txt")
+assert seq and seq == mp, f"itemset histograms diverge:\nseq={seq}\nmp={mp}"
+print(f"multi-process smoke OK: workers {sorted(workers)}, "
+      f"{fetches} remote fetches, histogram identical to sequential")
+EOF
+# replay the multi-process log: task bars must group into worker lanes
+cargo run --release --quiet -- timeline --log EVENTS_mp.jsonl | head -40
+
 echo "== micro-bench smoke (diffset kernel)"
 # One-rep pass over the intersection + Bottom-Up micro-benches so
 # diffset-kernel regressions surface as wall-time deltas in the

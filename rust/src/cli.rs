@@ -8,6 +8,12 @@
 //! edit-distance suggestion instead of silently running with defaults
 //! (the old behaviour: `--min-supp 0.01` used to mine at the default
 //! support). Every command also answers `--help` from its spec.
+//!
+//! One command never reaches this layer: `repro worker ...`, the hidden
+//! entry point the multi-process executor backend execs for its worker
+//! fleet, is intercepted in `main()` before spec validation — it is
+//! machine-addressed (socket path, worker id) and not part of the
+//! user-facing grammar, so it does not appear in help or suggestions.
 
 use std::collections::HashMap;
 

@@ -1,0 +1,230 @@
+//! Distributed Bottom-Up: the FIM reduce phase as registered task
+//! descriptors, so the `multi-process` executor can ship it to worker
+//! processes.
+//!
+//! The paper's Phase-3/4 reduce stage — `partitionBy(partitioner)` +
+//! `flatMap(Bottom-Up)` — is a closure in the in-process engine, which
+//! cannot cross a process boundary. This module registers the same
+//! computation under stable string keys (one per tidset
+//! representation):
+//!
+//! | key | tidset kernel |
+//! |-----|---------------|
+//! | `fim.bottomup.vec`     | [`VecTidset`] |
+//! | `fim.bottomup.bitmap`  | [`BitmapTidset`] |
+//! | `fim.bottomup.diffset` | [`DiffTidset`] |
+//! | `fim.bottomup.hybrid`  | [`HybridTidset`] |
+//!
+//! The payload is 24 bytes — `(shuffle_id, reduce_part, min_sup)` as
+//! little-endian u64s. A worker fetches the reduce partition's shuffled
+//! blocks (each a PR-5 record frame of `(rank, EquivalenceClass)`
+//! pairs) over the transport, runs the allocation-free Bottom-Up, and
+//! returns the frequent itemsets as one encoded record frame. Both
+//! driver (local fallback path of `run_described_job`) and every
+//! worker process must call [`register_tasks`] before mining — the key
+//! string is all that crosses the wire.
+
+use crate::fim::eqclass::{bottom_up, EquivalenceClass};
+use crate::fim::tidset::{BitmapTidset, DiffTidset, HybridTidset, TidOps, VecTidset};
+use crate::fim::types::FrequentItemset;
+use crate::sparklet::scheduler::run_described_job;
+use crate::sparklet::serde::{decode_records, encode_records};
+use crate::sparklet::transport::{TaskEnv, TaskRegistry};
+use crate::sparklet::{Data, Rdd, SparkletContext};
+
+/// Registry key for a tidset representation, or `None` for a type the
+/// distributed tier has no kernel for (callers fall back to the
+/// in-process closure path).
+pub fn task_key<TS: TidOps>() -> Option<&'static str> {
+    use std::any::TypeId;
+    let t = TypeId::of::<TS>();
+    if t == TypeId::of::<VecTidset>() {
+        Some("fim.bottomup.vec")
+    } else if t == TypeId::of::<BitmapTidset>() {
+        Some("fim.bottomup.bitmap")
+    } else if t == TypeId::of::<DiffTidset>() {
+        Some("fim.bottomup.diffset")
+    } else if t == TypeId::of::<HybridTidset>() {
+        Some("fim.bottomup.hybrid")
+    } else {
+        None
+    }
+}
+
+fn encode_payload(shuffle_id: usize, reduce_part: usize, min_sup: u32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(24);
+    out.extend_from_slice(&(shuffle_id as u64).to_le_bytes());
+    out.extend_from_slice(&(reduce_part as u64).to_le_bytes());
+    out.extend_from_slice(&(min_sup as u64).to_le_bytes());
+    out
+}
+
+fn decode_payload(payload: &[u8]) -> Result<(usize, usize, u32), String> {
+    if payload.len() != 24 {
+        return Err(format!(
+            "bottom-up payload must be 24 bytes, got {}",
+            payload.len()
+        ));
+    }
+    let word = |i: usize| {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&payload[i * 8..(i + 1) * 8]);
+        u64::from_le_bytes(b)
+    };
+    let min_sup = u32::try_from(word(2)).map_err(|_| "min_sup exceeds u32".to_string())?;
+    Ok((word(0) as usize, word(1) as usize, min_sup))
+}
+
+/// The task body: fetch one reduce partition's equivalence classes,
+/// mine them, return the itemsets. Generic over the tidset kernel;
+/// monomorphized once per registered key.
+fn bottom_up_task<TS: TidOps>(env: &TaskEnv<'_>, payload: &[u8]) -> Result<Vec<u8>, String> {
+    let (shuffle_id, reduce_part, min_sup) = decode_payload(payload)?;
+    let blocks = env.fetch_blocks(shuffle_id, reduce_part)?;
+    let mut out: Vec<FrequentItemset> = Vec::new();
+    for (id, bytes, _records) in &blocks {
+        let classes: Vec<(usize, EquivalenceClass<TS>)> = decode_records(bytes)
+            .map_err(|e| format!("cannot decode shuffle block {id}: {e}"))?;
+        for (_, ec) in &classes {
+            bottom_up(ec, min_sup, &mut out);
+        }
+    }
+    Ok(encode_records(&out))
+}
+
+/// Register the four Bottom-Up kernels in the process-global
+/// [`TaskRegistry`]. Idempotent; called at startup by the driver and by
+/// every worker process (`main.rs` does both), and lazily by the
+/// distributed mining path itself.
+pub fn register_tasks() {
+    TaskRegistry::register("fim.bottomup.vec", bottom_up_task::<VecTidset>);
+    TaskRegistry::register("fim.bottomup.bitmap", bottom_up_task::<BitmapTidset>);
+    TaskRegistry::register("fim.bottomup.diffset", bottom_up_task::<DiffTidset>);
+    TaskRegistry::register("fim.bottomup.hybrid", bottom_up_task::<HybridTidset>);
+}
+
+/// Run the Bottom-Up phase of `ecs` (a class RDD sitting directly on
+/// its `partitionBy` shuffle boundary) through the described-task path:
+/// one descriptor per reduce partition, dispatched to worker processes
+/// when the backend supports it, or run driver-local otherwise.
+pub fn bottom_up_described<TS: TidOps>(
+    sc: &SparkletContext,
+    ecs: &Rdd<(usize, EquivalenceClass<TS>)>,
+    min_sup: u32,
+) -> Option<Vec<FrequentItemset>>
+where
+    (usize, EquivalenceClass<TS>): Data,
+{
+    let key = task_key::<TS>()?;
+    register_tasks();
+    let parts = run_described_job(sc, ecs, key, move |shuffle_id, part| {
+        encode_payload(shuffle_id, part, min_sup)
+    });
+    let mut out = Vec::new();
+    for (part, bytes) in parts.iter().enumerate() {
+        let found: Vec<FrequentItemset> = decode_records(bytes)
+            .unwrap_or_else(|e| panic!("partition {part} returned an undecodable result: {e}"));
+        out.extend(found);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparklet::transport::BlockFetcher;
+
+    #[test]
+    fn payload_round_trips() {
+        let p = encode_payload(7, 3, 42);
+        assert_eq!(p.len(), 24);
+        assert_eq!(decode_payload(&p).unwrap(), (7, 3, 42));
+        assert!(decode_payload(&p[..23]).is_err());
+        assert!(decode_payload(&[]).is_err());
+    }
+
+    #[test]
+    fn task_keys_cover_all_kernels() {
+        register_tasks();
+        assert_eq!(task_key::<VecTidset>(), Some("fim.bottomup.vec"));
+        assert_eq!(task_key::<BitmapTidset>(), Some("fim.bottomup.bitmap"));
+        assert_eq!(task_key::<DiffTidset>(), Some("fim.bottomup.diffset"));
+        assert_eq!(task_key::<HybridTidset>(), Some("fim.bottomup.hybrid"));
+        for key in [
+            "fim.bottomup.vec",
+            "fim.bottomup.bitmap",
+            "fim.bottomup.diffset",
+            "fim.bottomup.hybrid",
+        ] {
+            assert!(TaskRegistry::get(key).is_some(), "{key} not registered");
+        }
+    }
+
+    /// In-memory fetcher feeding hand-encoded class blocks to the task.
+    struct FakeFetcher {
+        blocks: Vec<Vec<u8>>,
+    }
+
+    impl BlockFetcher for FakeFetcher {
+        fn fetch_blocks(
+            &self,
+            shuffle_id: usize,
+            reduce_part: usize,
+        ) -> Result<Vec<crate::sparklet::transport::WireBlock>, String> {
+            Ok(self
+                .blocks
+                .iter()
+                .enumerate()
+                .map(|(i, b)| {
+                    (
+                        crate::sparklet::BlockId {
+                            shuffle_id,
+                            reduce_part,
+                            map_part: i,
+                        },
+                        b.clone(),
+                        1,
+                    )
+                })
+                .collect())
+        }
+    }
+
+    #[test]
+    fn bottom_up_task_mines_encoded_classes() {
+        // One class {1}: members {1,2},{1,3} with tids such that
+        // {1,2} has support 2, {1,3} support 2, {1,2,3} support 1.
+        let class = EquivalenceClass::<VecTidset> {
+            prefix: vec![1],
+            members: vec![
+                (2, VecTidset::from_tids(&[0, 1], 4)),
+                (3, VecTidset::from_tids(&[1, 3], 4)),
+            ],
+        };
+        let block = encode_records(&[(0usize, class)]);
+        let fetcher = FakeFetcher {
+            blocks: vec![block],
+        };
+        let env = TaskEnv::new(&fetcher);
+        let result = bottom_up_task::<VecTidset>(&env, &encode_payload(0, 0, 2)).unwrap();
+        let found: Vec<FrequentItemset> = decode_records(&result).unwrap();
+        let mut sets: Vec<Vec<crate::fim::types::Item>> =
+            found.iter().map(|f| f.items.clone()).collect();
+        sets.sort();
+        assert_eq!(sets, vec![vec![1, 2], vec![1, 3]]);
+        // min_sup 1 also surfaces the 3-itemset.
+        let result = bottom_up_task::<VecTidset>(&env, &encode_payload(0, 0, 1)).unwrap();
+        let found: Vec<FrequentItemset> = decode_records(&result).unwrap();
+        assert!(found.iter().any(|f| f.items == vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn corrupt_block_is_a_task_error_not_a_panic() {
+        let fetcher = FakeFetcher {
+            blocks: vec![vec![0xFF; 9]],
+        };
+        let env = TaskEnv::new(&fetcher);
+        let err = bottom_up_task::<VecTidset>(&env, &encode_payload(0, 0, 2)).unwrap_err();
+        assert!(err.contains("cannot decode"), "{err}");
+    }
+}

@@ -276,16 +276,28 @@ fn phase_classes<TS: TidOps>(
             partitioners::weighted_partitioner_with_costs(&weights, p, costs.as_deref())
         }
     };
-    let ecs = sc
-        .parallelize(classes, 1)
-        .partition_by(partitioner)
-        .cache();
-    let deeper = ecs.flat_map(move |(_, ec)| {
-        let mut acc = Vec::new();
-        bottom_up(&ec, min_sup, &mut acc);
-        acc
-    });
-    out.extend(deeper.collect());
+    let ecs = sc.parallelize(classes, 1).partition_by(partitioner);
+    // Remote-capable backends (multi-process) can't ship the flat_map
+    // closure; they run the same Bottom-Up as a registered task
+    // descriptor per reduce partition, fetching the shuffled classes
+    // over the transport. Results are identical either way.
+    let remote = if sc.executor().supports_described() {
+        super::distributed::bottom_up_described(sc, &ecs, min_sup)
+    } else {
+        None
+    };
+    match remote {
+        Some(found) => out.extend(found),
+        None => {
+            let ecs = ecs.cache();
+            let deeper = ecs.flat_map(move |(_, ec)| {
+                let mut acc = Vec::new();
+                bottom_up(&ec, min_sup, &mut acc);
+                acc
+            });
+            out.extend(deeper.collect());
+        }
+    }
     // Feed the Bottom-Up stage's per-partition execution signal back
     // into the EWMA the weighted partitioner reads next run. The stage
     // just recorded by `collect()` is the per-class Result stage.

@@ -11,6 +11,7 @@
 //! builder-driven [`engine::MiningSession`].
 
 pub mod apriori;
+pub mod distributed;
 pub mod eclat;
 pub mod engine;
 pub mod eqclass;

@@ -42,6 +42,19 @@ use rdd_eclat::sparklet::metrics::StageKind;
 use rdd_eclat::sparklet::{ExecutorRegistry, SparkletConf, SparkletContext};
 
 fn main() -> Result<()> {
+    // Register the distributed tier before the spec table is built, so
+    // `--executor multi-process` validates and shows up in help.
+    rdd_eclat::sparklet::remote::register_backend();
+    rdd_eclat::fim::distributed::register_tasks();
+    // Hidden worker entry point: `repro worker --socket PATH --id wN
+    // [--heartbeat-ms MS] [--fault SPEC]`, exec'd by the multi-process
+    // backend when it spawns its worker fleet. Intercepted before the
+    // CLI spec layer — it is not a user-facing command and never
+    // returns (the process lives until the driver shuts it down).
+    let raw: Vec<String> = std::env::args().collect();
+    if raw.get(1).map(String::as_str) == Some("worker") {
+        return run_worker(&raw[2..]);
+    }
     let specs = command_specs();
     let args = match Args::from_env() {
         Ok(a) => a,
@@ -114,6 +127,39 @@ fn main() -> Result<()> {
 
 fn parsed<T: std::str::FromStr>(args: &Args, name: &str) -> Result<Option<T>> {
     args.get_parse(name).map_err(anyhow::Error::msg)
+}
+
+/// The multi-process backend's worker process: register the same task
+/// keys the driver uses (the key string is all that crosses the wire),
+/// connect back over the Unix socket, and serve tasks until shutdown.
+fn run_worker(args: &[String]) -> Result<()> {
+    let mut socket: Option<String> = None;
+    let mut id: Option<String> = None;
+    let mut fault: Option<String> = None;
+    let mut heartbeat_ms = 500u64;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--socket" => socket = it.next().cloned(),
+            "--id" => id = it.next().cloned(),
+            "--fault" => fault = it.next().cloned(),
+            "--heartbeat-ms" => {
+                heartbeat_ms = it
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| anyhow::anyhow!("worker: --heartbeat-ms needs a number"))?;
+            }
+            other => bail!("worker: unknown flag {other}"),
+        }
+    }
+    let socket = socket.ok_or_else(|| anyhow::anyhow!("worker: --socket PATH required"))?;
+    let id = id.ok_or_else(|| anyhow::anyhow!("worker: --id NAME required"))?;
+    rdd_eclat::sparklet::remote::worker_main(
+        std::path::Path::new(&socket),
+        &id,
+        fault.as_deref(),
+        heartbeat_ms,
+    )
 }
 
 // ------------------------------------------------------------ specs/help
@@ -543,7 +589,14 @@ fn run_bench(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
                 .with_executor_backend(&name)?
                 .executor_backend,
         ],
-        None => ExecutorRegistry::names().iter().map(|s| s.to_string()).collect(),
+        // The default sweep stays in-process: multi-process spawns a
+        // worker fleet per context, which would dominate the short
+        // bench rows with process startup. Opt in with --executor.
+        None => ExecutorRegistry::names()
+            .iter()
+            .filter(|n| **n != "multi-process")
+            .map(|s| s.to_string())
+            .collect(),
     };
     // Tidset-representation sweep: on the *first* backend every
     // tidset-sensitive engine (the Eclat family) runs once per concrete

@@ -41,6 +41,23 @@ impl fmt::Display for BlockId {
     }
 }
 
+/// Block ids travel in `BlockData` transport frames, so workers can
+/// attribute (and later cache) fetched map output per producing task.
+impl super::serde::SerDe for BlockId {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.shuffle_id.encode(out);
+        self.reduce_part.encode(out);
+        self.map_part.encode(out);
+    }
+    fn decode(r: &mut super::serde::Reader<'_>) -> Result<Self, super::serde::SerDeError> {
+        Ok(Self {
+            shuffle_id: usize::decode(r)?,
+            reduce_part: usize::decode(r)?,
+            map_part: usize::decode(r)?,
+        })
+    }
+}
+
 /// One fetched block: the serialized payload plus its record count.
 /// Cheap to clone (the bytes are shared with the store).
 #[derive(Debug, Clone)]

@@ -27,6 +27,11 @@ pub enum ConfError {
     },
     /// The `event_log` path could not be opened for appending.
     EventLog { path: String, reason: String },
+    /// `multiprocess_workers` must be >= 1.
+    InvalidWorkers { value: String },
+    /// The executor backend failed to start its runtime services (for
+    /// the multi-process backend: socket bind or worker spawn failed).
+    BackendAttach { backend: String, reason: String },
 }
 
 impl From<ExecutorError> for ConfError {
@@ -53,6 +58,12 @@ impl std::fmt::Display for ConfError {
             }
             Self::EventLog { path, reason } => {
                 write!(f, "cannot open event log {path:?}: {reason}")
+            }
+            Self::InvalidWorkers { value } => {
+                write!(f, "multiprocess_workers must be >= 1 (got {value})")
+            }
+            Self::BackendAttach { backend, reason } => {
+                write!(f, "executor backend {backend:?} failed to start: {reason}")
             }
         }
     }
@@ -103,6 +114,30 @@ pub struct SparkletConf {
     /// block reconstructs from its bytes alone. Defaults to on in debug
     /// builds; `SPARKLET_SHARED_NOTHING=0|1` overrides.
     pub shared_nothing: bool,
+    /// Worker processes for the `multi-process` executor backend
+    /// (`SPARKLET_WORKERS`). Ignored by in-process backends.
+    pub multiprocess_workers: usize,
+    /// Directory for the driver's Unix domain socket (`SPARKLET_SOCKET_DIR`;
+    /// `None` = the system temp dir). The backend creates a unique
+    /// per-context socket file inside it and unlinks it on drop.
+    pub socket_dir: Option<String>,
+    /// Worker heartbeat interval in milliseconds (`SPARKLET_HEARTBEAT_MS`).
+    pub heartbeat_ms: u64,
+    /// Driver-side liveness timeout: a worker silent for this long is
+    /// declared lost and its in-flight tasks are reassigned
+    /// (`SPARKLET_WORKER_TIMEOUT_MS`).
+    pub worker_timeout_ms: u64,
+    /// Path of the binary to spawn as a worker (`SPARKLET_WORKER_BINARY`).
+    /// `None` re-execs the current binary. The sentinel `"<thread>"`
+    /// runs workers as in-process threads speaking the same socket
+    /// protocol — used by unit tests, where the current binary is the
+    /// libtest harness and must not be re-exec'd.
+    pub worker_binary: Option<String>,
+    /// Fault injection for the multi-process backend: `"w1:2"` makes
+    /// worker `w1` exit abruptly after completing 2 tasks. Passed to
+    /// the spawned worker via its hidden `--fault` flag; used by the
+    /// kill-a-worker recovery tests.
+    pub worker_fault: Option<String>,
 }
 
 impl Default for SparkletConf {
@@ -122,6 +157,12 @@ impl Default for SparkletConf {
             memory_budget: None,
             event_log: None,
             shared_nothing: cfg!(debug_assertions),
+            multiprocess_workers: 2,
+            socket_dir: None,
+            heartbeat_ms: 500,
+            worker_timeout_ms: 5_000,
+            worker_binary: None,
+            worker_fault: None,
         }
     }
 }
@@ -218,12 +259,49 @@ impl SparkletConf {
         self
     }
 
+    /// Worker process count for the `multi-process` backend.
+    pub fn with_workers(mut self, n: usize) -> Result<Self, ConfError> {
+        if n == 0 {
+            return Err(ConfError::InvalidWorkers { value: "0".into() });
+        }
+        self.multiprocess_workers = n;
+        Ok(self)
+    }
+
+    /// Directory for the driver's Unix domain socket.
+    pub fn with_socket_dir(mut self, dir: &str) -> Self {
+        self.socket_dir = Some(dir.to_string());
+        self
+    }
+
+    /// Heartbeat interval and liveness timeout (both milliseconds).
+    pub fn with_worker_timeouts(mut self, heartbeat_ms: u64, timeout_ms: u64) -> Self {
+        self.heartbeat_ms = heartbeat_ms.max(1);
+        self.worker_timeout_ms = timeout_ms.max(self.heartbeat_ms);
+        self
+    }
+
+    /// Binary to spawn as a worker process (`"<thread>"` = in-process
+    /// thread workers, for tests).
+    pub fn with_worker_binary(mut self, path: &str) -> Self {
+        self.worker_binary = Some(path.to_string());
+        self
+    }
+
+    /// Inject a worker fault: `"<worker-id>:<after-n-tasks>"`.
+    pub fn with_worker_fault(mut self, spec: &str) -> Self {
+        self.worker_fault = Some(spec.to_string());
+        self
+    }
+
     /// Apply the `SPARKLET_CORES`, `SPARKLET_BACKEND`,
-    /// `SPARKLET_SHUFFLE_PARTITIONS`, `SPARKLET_MEMORY_MB`, and
-    /// `SPARKLET_SHARED_NOTHING` environment overrides on top of the
-    /// current values (empty/unset variables are ignored). Cores are
-    /// applied before shuffle partitions, so setting both honours the
-    /// explicit partition count.
+    /// `SPARKLET_SHUFFLE_PARTITIONS`, `SPARKLET_MEMORY_MB`,
+    /// `SPARKLET_SHARED_NOTHING`, `SPARKLET_WORKERS`,
+    /// `SPARKLET_SOCKET_DIR`, `SPARKLET_HEARTBEAT_MS`,
+    /// `SPARKLET_WORKER_TIMEOUT_MS`, and `SPARKLET_WORKER_BINARY`
+    /// environment overrides on top of the current values (empty/unset
+    /// variables are ignored). Cores are applied before shuffle
+    /// partitions, so setting both honours the explicit partition count.
     pub fn with_env_overrides(mut self) -> Result<Self, ConfError> {
         if let Some(cores) = env_usize("SPARKLET_CORES")? {
             self = self.with_cores(cores)?;
@@ -239,6 +317,21 @@ impl SparkletConf {
         }
         if let Some(on) = env_bool("SPARKLET_SHARED_NOTHING")? {
             self = self.with_shared_nothing(on);
+        }
+        if let Some(n) = env_usize("SPARKLET_WORKERS")? {
+            self = self.with_workers(n)?;
+        }
+        if let Some(dir) = env_str("SPARKLET_SOCKET_DIR") {
+            self = self.with_socket_dir(&dir);
+        }
+        if let Some(hb) = env_usize("SPARKLET_HEARTBEAT_MS")? {
+            self.heartbeat_ms = hb as u64;
+        }
+        if let Some(t) = env_usize("SPARKLET_WORKER_TIMEOUT_MS")? {
+            self.worker_timeout_ms = t as u64;
+        }
+        if let Some(bin) = env_str("SPARKLET_WORKER_BINARY") {
+            self = self.with_worker_binary(&bin);
         }
         Ok(self)
     }
@@ -383,6 +476,11 @@ mod tests {
             std::env::remove_var("SPARKLET_SHUFFLE_PARTITIONS");
             std::env::remove_var("SPARKLET_MEMORY_MB");
             std::env::remove_var("SPARKLET_SHARED_NOTHING");
+            std::env::remove_var("SPARKLET_WORKERS");
+            std::env::remove_var("SPARKLET_SOCKET_DIR");
+            std::env::remove_var("SPARKLET_HEARTBEAT_MS");
+            std::env::remove_var("SPARKLET_WORKER_TIMEOUT_MS");
+            std::env::remove_var("SPARKLET_WORKER_BINARY");
         };
         clear();
 
@@ -443,7 +541,55 @@ mod tests {
             matches!(err, ConfError::InvalidEnv { var: "SPARKLET_SHARED_NOTHING", .. }),
             "{err}"
         );
+        std::env::set_var("SPARKLET_SHARED_NOTHING", "1");
+
+        // Multi-process knobs.
+        std::env::set_var("SPARKLET_WORKERS", "3");
+        std::env::set_var("SPARKLET_SOCKET_DIR", "/tmp/sparklet-socks");
+        std::env::set_var("SPARKLET_HEARTBEAT_MS", "100");
+        std::env::set_var("SPARKLET_WORKER_TIMEOUT_MS", "900");
+        std::env::set_var("SPARKLET_WORKER_BINARY", "/usr/bin/true");
+        let c = base.clone().with_env_overrides().unwrap();
+        assert_eq!(c.multiprocess_workers, 3);
+        assert_eq!(c.socket_dir.as_deref(), Some("/tmp/sparklet-socks"));
+        assert_eq!(c.heartbeat_ms, 100);
+        assert_eq!(c.worker_timeout_ms, 900);
+        assert_eq!(c.worker_binary.as_deref(), Some("/usr/bin/true"));
+        std::env::set_var("SPARKLET_WORKERS", "0");
+        let err = base.clone().with_env_overrides().unwrap_err();
+        assert!(
+            matches!(err, ConfError::InvalidEnv { var: "SPARKLET_WORKERS", .. }),
+            "{err}"
+        );
 
         clear();
+    }
+
+    #[test]
+    fn multiprocess_builders_validate() {
+        let c = SparkletConf::default();
+        assert_eq!(c.multiprocess_workers, 2, "two workers by default");
+        assert!(c.worker_timeout_ms >= c.heartbeat_ms);
+        let c = c.with_workers(4).unwrap();
+        assert_eq!(c.multiprocess_workers, 4);
+        let err = SparkletConf::default().with_workers(0).unwrap_err();
+        assert!(matches!(err, ConfError::InvalidWorkers { .. }));
+        assert!(err.to_string().contains("multiprocess_workers"), "{err}");
+        // Timeout is clamped to at least the heartbeat interval.
+        let c = SparkletConf::default().with_worker_timeouts(200, 50);
+        assert_eq!(c.heartbeat_ms, 200);
+        assert_eq!(c.worker_timeout_ms, 200);
+        let c = SparkletConf::default()
+            .with_worker_binary("<thread>")
+            .with_worker_fault("w0:1")
+            .with_socket_dir("/tmp/x");
+        assert_eq!(c.worker_binary.as_deref(), Some("<thread>"));
+        assert_eq!(c.worker_fault.as_deref(), Some("w0:1"));
+        assert_eq!(c.socket_dir.as_deref(), Some("/tmp/x"));
+        let err = ConfError::BackendAttach {
+            backend: "multi-process".into(),
+            reason: "bind failed".into(),
+        };
+        assert!(err.to_string().contains("failed to start"), "{err}");
     }
 }

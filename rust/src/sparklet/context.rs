@@ -17,7 +17,7 @@ use super::transforms::ParallelCollection;
 struct ContextInner {
     conf: SparkletConf,
     executor: Arc<dyn ExecutorBackend>,
-    shuffle: ShuffleManager,
+    shuffle: Arc<ShuffleManager>,
     cache: CacheManager,
     broadcasts: BroadcastRegistry,
     metrics: Arc<MetricsRegistry>,
@@ -66,7 +66,10 @@ impl SparkletContext {
             })?;
             events.register(Arc::new(writer));
         }
-        let shuffle = ShuffleManager::with_conf(conf.memory_budget, conf.shared_nothing);
+        let shuffle = Arc::new(ShuffleManager::with_conf(
+            conf.memory_budget,
+            conf.shared_nothing,
+        ));
         {
             let bus = Arc::clone(&events);
             shuffle.set_spill_hook(Arc::new(move |block, bytes, reloaded| {
@@ -77,6 +80,20 @@ impl SparkletContext {
                 });
             }));
         }
+        // Hand the backend its runtime services. In-process backends
+        // no-op; the multi-process backend binds its socket and spawns
+        // workers here, so a failed spawn surfaces as a ConfError
+        // before any job runs.
+        executor
+            .attach(super::executor::BackendServices {
+                shuffle: Arc::clone(&shuffle),
+                events: Arc::clone(&events),
+                conf: conf.clone(),
+            })
+            .map_err(|reason| ConfError::BackendAttach {
+                backend: conf.executor_backend.clone(),
+                reason,
+            })?;
         Ok(Self {
             inner: Arc::new(ContextInner {
                 executor,
@@ -122,6 +139,12 @@ impl SparkletContext {
 
     pub fn shuffle_manager(&self) -> &ShuffleManager {
         &self.inner.shuffle
+    }
+
+    /// Owned handle on the shuffle manager (the described-task runner
+    /// threads it into closures that outlive `&self`).
+    pub(crate) fn shuffle_arc(&self) -> Arc<ShuffleManager> {
+        Arc::clone(&self.inner.shuffle)
     }
 
     pub fn cache(&self) -> &CacheManager {

@@ -66,12 +66,16 @@ pub enum SparkletEvent {
         metrics: StageMetrics,
     },
     /// One task began executing on a worker (emitted from the task
-    /// closure, i.e. on whatever backend thread runs it).
+    /// closure, i.e. on whatever backend thread runs it). `worker` is
+    /// `None` for in-process backends and the worker id (`"w0"`, ...)
+    /// when the task ran on a remote worker process — the `timeline`
+    /// replayer groups task spans into per-worker lanes by this field.
     TaskStart {
         job_id: u64,
         stage_tag: u64,
         task: usize,
         attempt: usize,
+        worker: Option<String>,
     },
     /// The task finished (`ok: false` = panic or injected failure; the
     /// scheduler will retry it from lineage).
@@ -82,6 +86,22 @@ pub enum SparkletEvent {
         attempt: usize,
         ok: bool,
         run_ms: f64,
+        worker: Option<String>,
+    },
+    /// A worker process completed its `RegisterWorker` handshake with
+    /// the multi-process executor backend.
+    WorkerRegistered { worker: String, pid: u32 },
+    /// A worker died (EOF on its socket) or missed heartbeats; its
+    /// in-flight tasks are failed and retried on surviving workers.
+    WorkerLost { worker: String, reason: String },
+    /// The driver served shuffle blocks to a remote worker over the
+    /// transport (one event per `FetchBlock` request).
+    RemoteFetch {
+        worker: String,
+        shuffle_id: usize,
+        reduce_part: usize,
+        blocks: usize,
+        bytes: usize,
     },
     /// The block store LRU-spilled a shuffle block to disk.
     ShuffleBlockSpilled { block: BlockId, bytes: usize },
@@ -127,6 +147,9 @@ impl SparkletEvent {
             Self::StageCompleted { .. } => "StageCompleted",
             Self::TaskStart { .. } => "TaskStart",
             Self::TaskEnd { .. } => "TaskEnd",
+            Self::WorkerRegistered { .. } => "WorkerRegistered",
+            Self::WorkerLost { .. } => "WorkerLost",
+            Self::RemoteFetch { .. } => "RemoteFetch",
             Self::ShuffleBlockSpilled { .. } => "ShuffleBlockSpilled",
             Self::ShuffleBlockReloaded { .. } => "ShuffleBlockReloaded",
             Self::StreamBatchSubmitted { .. } => "StreamBatchSubmitted",
@@ -186,11 +209,15 @@ impl SparkletEvent {
                 stage_tag,
                 task,
                 attempt,
+                worker,
             } => {
                 push_field(&mut s, "job", &job_id.to_string());
                 push_str_field(&mut s, "stage", &format!("{stage_tag:x}"));
                 push_field(&mut s, "task", &task.to_string());
                 push_field(&mut s, "attempt", &attempt.to_string());
+                if let Some(w) = worker {
+                    push_str_field(&mut s, "worker", w);
+                }
             }
             Self::TaskEnd {
                 job_id,
@@ -199,6 +226,7 @@ impl SparkletEvent {
                 attempt,
                 ok,
                 run_ms,
+                worker,
             } => {
                 push_field(&mut s, "job", &job_id.to_string());
                 push_str_field(&mut s, "stage", &format!("{stage_tag:x}"));
@@ -206,6 +234,30 @@ impl SparkletEvent {
                 push_field(&mut s, "attempt", &attempt.to_string());
                 push_field(&mut s, "ok", if *ok { "true" } else { "false" });
                 push_field(&mut s, "run_ms", &format!("{run_ms:.3}"));
+                if let Some(w) = worker {
+                    push_str_field(&mut s, "worker", w);
+                }
+            }
+            Self::WorkerRegistered { worker, pid } => {
+                push_str_field(&mut s, "worker", worker);
+                push_field(&mut s, "pid", &pid.to_string());
+            }
+            Self::WorkerLost { worker, reason } => {
+                push_str_field(&mut s, "worker", worker);
+                push_str_field(&mut s, "reason", reason);
+            }
+            Self::RemoteFetch {
+                worker,
+                shuffle_id,
+                reduce_part,
+                blocks,
+                bytes,
+            } => {
+                push_str_field(&mut s, "worker", worker);
+                push_field(&mut s, "shuffle_id", &shuffle_id.to_string());
+                push_field(&mut s, "reduce_part", &reduce_part.to_string());
+                push_field(&mut s, "blocks", &blocks.to_string());
+                push_field(&mut s, "bytes", &bytes.to_string());
             }
             Self::ShuffleBlockSpilled { block, bytes }
             | Self::ShuffleBlockReloaded { block, bytes } => {
@@ -745,6 +797,7 @@ mod tests {
                 stage_tag: 0x5A5A_0001,
                 task: 2,
                 attempt: 0,
+                worker: None,
             },
             SparkletEvent::TaskEnd {
                 job_id: 1,
@@ -753,6 +806,22 @@ mod tests {
                 attempt: 0,
                 ok: true,
                 run_ms: 3.25,
+                worker: Some("w1".into()),
+            },
+            SparkletEvent::WorkerRegistered {
+                worker: "w0".into(),
+                pid: 4321,
+            },
+            SparkletEvent::WorkerLost {
+                worker: "w0".into(),
+                reason: "socket closed".into(),
+            },
+            SparkletEvent::RemoteFetch {
+                worker: "w1".into(),
+                shuffle_id: 0,
+                reduce_part: 3,
+                blocks: 4,
+                bytes: 8192,
             },
             SparkletEvent::ShuffleBlockSpilled {
                 block: BlockId {
@@ -828,6 +897,30 @@ mod tests {
         // median 2.0, max 10.0 -> skew 5
         assert!((obj["skew"].as_f64().unwrap() - 5.0).abs() < 1e-6);
         assert!((obj["task_p50_ms"].as_f64().unwrap() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn worker_field_appears_only_on_remote_task_spans() {
+        let local = SparkletEvent::TaskStart {
+            job_id: 0,
+            stage_tag: 1,
+            task: 0,
+            attempt: 0,
+            worker: None,
+        };
+        let obj = parse_json_line(&local.to_json_line(0.0)).unwrap();
+        assert!(!obj.contains_key("worker"), "local span must omit worker");
+        let remote = SparkletEvent::TaskEnd {
+            job_id: 0,
+            stage_tag: 1,
+            task: 0,
+            attempt: 0,
+            ok: true,
+            run_ms: 1.0,
+            worker: Some("w3".into()),
+        };
+        let obj = parse_json_line(&remote.to_json_line(0.0)).unwrap();
+        assert_eq!(obj["worker"].as_str().unwrap(), "w3");
     }
 
     #[test]
@@ -924,6 +1017,7 @@ mod tests {
                             stage_tag: 1,
                             task: i,
                             attempt: 0,
+                            worker: None,
                         });
                         bus.emit(SparkletEvent::TaskEnd {
                             job_id: t,
@@ -932,6 +1026,7 @@ mod tests {
                             attempt: 0,
                             ok: true,
                             run_ms: 0.0,
+                            worker: None,
                         });
                     }
                 })

@@ -42,9 +42,63 @@ use std::time::Instant;
 use crate::util::text::closest;
 use crate::util::ThreadPool;
 
+use super::transport::TaskDescriptor;
+
 /// A unit of work. Tasks deliver results through channels they capture;
 /// the executor only runs them.
 pub type TaskFn = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion callback for a described task: the serialized result (or
+/// task error) plus the remote-measured run time in milliseconds.
+pub type DescribedSink = Box<dyn FnOnce(Result<Vec<u8>, String>, f64) + Send + 'static>;
+
+/// One task inside a [`TaskSet`]: either an in-memory closure (the
+/// in-process backends' native currency) or a serialized
+/// [`TaskDescriptor`] a remote-capable backend can ship to a worker
+/// process.
+pub enum Task {
+    Closure(TaskFn),
+    Described {
+        desc: TaskDescriptor,
+        on_result: DescribedSink,
+    },
+}
+
+impl Task {
+    /// Degrade to a plain closure for backends without remote dispatch.
+    /// The scheduler only emits `Described` tasks to backends that
+    /// report [`ExecutorBackend::supports_described`], so hitting this
+    /// on a described task means a backend contract violation — it
+    /// completes the task with a typed error (feeding the normal retry
+    /// accounting) instead of hanging the job or panicking a worker.
+    fn into_runnable(self, backend: &'static str) -> TaskFn {
+        match self {
+            Self::Closure(f) => f,
+            Self::Described { desc, on_result } => Box::new(move || {
+                on_result(
+                    Err(format!(
+                        "backend '{backend}' cannot execute described task \
+                         (stage {:x}, part {}, key '{}')",
+                        desc.stage_tag, desc.part, desc.key
+                    )),
+                    0.0,
+                )
+            }),
+        }
+    }
+}
+
+/// Handles the driver gives an [`ExecutorBackend`] at context creation
+/// ([`ExecutorBackend::attach`]): the shuffle manager whose blocks the
+/// backend serves to remote workers, the event bus for
+/// worker-lifecycle events, and the resolved configuration (worker
+/// count, socket dir, heartbeat/timeout knobs).
+#[derive(Clone)]
+pub struct BackendServices {
+    pub shuffle: Arc<super::shuffle::ShuffleManager>,
+    pub events: Arc<super::events::EventBus>,
+    pub conf: super::conf::SparkletConf,
+}
 
 pub(crate) use crate::util::pool::panic_message;
 
@@ -65,7 +119,7 @@ pub struct StageDesc {
 pub struct TaskSet {
     /// Descriptor for diagnostics.
     pub stage: StageDesc,
-    tasks: Vec<TaskFn>,
+    tasks: Vec<Task>,
 }
 
 impl TaskSet {
@@ -79,9 +133,24 @@ impl TaskSet {
         }
     }
 
-    /// Append one task.
+    /// Append one closure task.
     pub fn push(&mut self, task: impl FnOnce() + Send + 'static) {
-        self.tasks.push(Box::new(task));
+        self.tasks.push(Task::Closure(Box::new(task)));
+    }
+
+    /// Append one serialized task descriptor. Only meaningful on
+    /// backends reporting [`ExecutorBackend::supports_described`];
+    /// elsewhere it completes with an error (see
+    /// [`Task::into_runnable`]).
+    pub fn push_described(
+        &mut self,
+        desc: TaskDescriptor,
+        on_result: impl FnOnce(Result<Vec<u8>, String>, f64) + Send + 'static,
+    ) {
+        self.tasks.push(Task::Described {
+            desc,
+            on_result: Box::new(on_result),
+        });
     }
 
     pub fn len(&self) -> usize {
@@ -92,7 +161,7 @@ impl TaskSet {
         self.tasks.is_empty()
     }
 
-    fn into_parts(self) -> (StageDesc, Vec<TaskFn>) {
+    pub(crate) fn into_parts(self) -> (StageDesc, Vec<Task>) {
         (self.stage, self.tasks)
     }
 }
@@ -111,7 +180,7 @@ pub struct TaskSetStats {
     pub queue_wait_ms: f64,
 }
 
-struct JobState {
+pub(crate) struct JobState {
     total: usize,
     done: Mutex<usize>,
     all_done: Condvar,
@@ -120,7 +189,7 @@ struct JobState {
 }
 
 impl JobState {
-    fn new(total: usize) -> Self {
+    pub(crate) fn new(total: usize) -> Self {
         Self {
             total,
             done: Mutex::new(0),
@@ -132,7 +201,7 @@ impl JobState {
 
     /// Mark one task complete (runs even when the task panicked, so a
     /// handle can never hang).
-    fn finish_task(&self) {
+    pub(crate) fn finish_task(&self) {
         let mut done = self.done.lock().unwrap();
         *done += 1;
         if *done >= self.total {
@@ -156,7 +225,7 @@ pub struct JobHandle {
 }
 
 impl JobHandle {
-    fn new(state: Arc<JobState>, stage: StageDesc) -> Self {
+    pub(crate) fn new(state: Arc<JobState>, stage: StageDesc) -> Self {
         Self { state, stage }
     }
 
@@ -201,6 +270,22 @@ pub trait ExecutorBackend: Send + Sync {
     /// Tasks currently executing (metrics gauge; best-effort).
     fn active(&self) -> usize {
         0
+    }
+
+    /// Can this backend execute serialized [`TaskDescriptor`]s
+    /// (dispatching them to remote workers)? The scheduler degrades
+    /// described stages to local closures when this is `false`.
+    fn supports_described(&self) -> bool {
+        false
+    }
+
+    /// Late-binding hook called once by the context after the shuffle
+    /// manager and event bus exist: remote-capable backends spawn and
+    /// register their workers here. The default is a no-op so
+    /// in-process backends stay untouched.
+    fn attach(&self, services: BackendServices) -> Result<(), String> {
+        let _ = services;
+        Ok(())
     }
 }
 
@@ -250,6 +335,7 @@ impl ExecutorBackend for FifoBackend {
         let (stage, tasks) = tasks.into_parts();
         let state = Arc::new(JobState::new(tasks.len()));
         for task in tasks {
+            let task = task.into_runnable("fifo");
             let st = Arc::clone(&state);
             let enqueued = Instant::now();
             self.pool.execute(move || run_task(task, &st, enqueued, false));
@@ -291,6 +377,7 @@ impl ExecutorBackend for SequentialBackend {
         let (stage, tasks) = tasks.into_parts();
         let state = Arc::new(JobState::new(tasks.len()));
         for task in tasks {
+            let task = task.into_runnable("sequential");
             self.active.fetch_add(1, Ordering::Relaxed);
             run_task(task, &state, Instant::now(), false);
             self.active.fetch_sub(1, Ordering::Relaxed);
@@ -422,7 +509,7 @@ impl ExecutorBackend for WorkStealingBackend {
         for task in tasks {
             let slot = self.next.fetch_add(1, Ordering::Relaxed) % self.size;
             let item = WorkItem {
-                task,
+                task: task.into_runnable("work-stealing"),
                 state: Arc::clone(&state),
                 enqueued: Instant::now(),
             };
@@ -784,6 +871,35 @@ mod tests {
             stats.queue_wait_ms >= 10.0,
             "queue wait not measured: {stats:?}"
         );
+    }
+
+    #[test]
+    fn described_task_on_local_backend_completes_with_typed_error() {
+        // Local backends can't ship descriptors to workers; they must
+        // complete the task with an error (never hang the handle).
+        for name in BUILTINS {
+            let ex = backend(name, 2);
+            let (tx, rx) = channel();
+            let mut ts = TaskSet::new(3, "described");
+            ts.push_described(
+                TaskDescriptor {
+                    job_id: 1,
+                    stage_tag: 3,
+                    part: 0,
+                    attempt: 0,
+                    key: "nope".into(),
+                    payload: vec![],
+                },
+                move |result, run_ms| {
+                    let _ = tx.send((result, run_ms));
+                },
+            );
+            ex.submit(ts).wait();
+            let (result, _) = rx.try_iter().next().expect("sink must be called");
+            let err = result.unwrap_err();
+            assert!(err.contains(name), "{name}: {err}");
+            assert!(err.contains("described task"), "{name}: {err}");
+        }
     }
 
     #[test]

@@ -37,11 +37,13 @@ pub mod metrics;
 pub mod pair;
 pub mod partitioner;
 pub mod rdd;
+pub mod remote;
 pub mod scheduler;
 pub mod serde;
 pub mod shuffle;
 pub mod streaming;
 pub mod transforms;
+pub mod transport;
 
 pub use accumulator::Accumulator;
 pub use block::{BlockId, BlockStore, ShuffleBlock};
@@ -59,4 +61,6 @@ pub use executor::{
 pub use pair::PairRdd;
 pub use partitioner::{HashPartitioner, Partitioner, RangePartitioner};
 pub use rdd::{Data, Rdd, TaskContext};
+pub use remote::{MultiProcessBackend, THREAD_WORKERS};
 pub use streaming::{DStream, StatefulDStream, StreamContext};
+pub use transport::{Message, TaskDescriptor, TaskRegistry, TransportError};

@@ -1,0 +1,1199 @@
+//! The `multi-process` executor backend — N worker *processes* over the
+//! [`super::transport`] protocol, plus the worker-side entry point.
+//!
+//! Topology is driver-centric, mirroring the paper's Spark deployment
+//! (one driver, executors registering back):
+//!
+//! ```text
+//!   driver process                         worker processes
+//!   ┌───────────────────────────┐          ┌──────────────┐
+//!   │ MultiProcessBackend       │◄────────►│ worker_loop  │ w0
+//!   │  acceptor ── reader/worker│  Unix    ├──────────────┤
+//!   │  dispatcher (slot=1 each) │  socket  │ worker_loop  │ w1
+//!   │  BlockStore (map output)  │          └──────────────┘
+//!   └───────────────────────────┘
+//! ```
+//!
+//! * The backend binds a Unix domain socket at attach time and spawns
+//!   `multiprocess_workers` child processes (re-exec of the current
+//!   binary with the hidden `worker` CLI subcommand; tests use the
+//!   `"<thread>"` sentinel to run the same loop on in-process threads).
+//! * Workers connect, send `RegisterWorker`, and heartbeat. The
+//!   dispatcher hands each idle worker one `LaunchTask` frame carrying
+//!   a [`TaskDescriptor`]; the worker resolves the key against its own
+//!   [`TaskRegistry`], fetching shuffle blocks from the driver over the
+//!   same socket (`FetchBlock`/`BlockData`) — no shared memory.
+//! * Map output stays in the driver's `BlockStore`, so a dying worker
+//!   loses only its in-flight reduce task: the dispatcher synthesizes
+//!   `WorkerLost`, fails the task through its [`DescribedSink`], and
+//!   the DAG scheduler's existing retry loop re-dispatches it to a
+//!   surviving worker. When every worker is gone, pending tasks fail
+//!   with a typed error instead of hanging the job.
+//! * Closure tasks (map stages, generic RDD jobs) are not serializable
+//!   and run inline on the driver — the distributed tier is for
+//!   described stages, which is where FIM mining spends its time.
+//!
+//! The backend is **not** in `builtin_backends()`: library test suites
+//! iterate every registered backend and would re-exec the libtest
+//! harness as a worker. `main.rs` (and the integration tests, with an
+//! explicit worker binary) opt in via [`register_backend`].
+
+use std::collections::{HashMap, VecDeque};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::events::SparkletEvent;
+use super::executor::{
+    BackendServices, DescribedSink, ExecutorBackend, ExecutorRegistry, JobHandle, JobState, Task,
+    TaskSet,
+};
+use super::transport::{
+    read_frame, write_frame, BlockFetcher, Message, TaskDescriptor, TaskEnv, TaskRegistry,
+    TransportError, WireBlock,
+};
+
+/// Register the backend under `"multi-process"`. Called once from
+/// `main()` (and explicitly by integration tests); see the module docs
+/// for why this is not a builtin.
+pub fn register_backend() {
+    ExecutorRegistry::register(
+        "multi-process",
+        "N worker processes over a Unix-socket transport (distributed executor)",
+        |cores| Arc::new(MultiProcessBackend::new(cores)),
+    );
+}
+
+// ------------------------------------------------------------- dispatcher
+
+/// A described task in flight through the dispatcher.
+struct RemoteTask {
+    desc: TaskDescriptor,
+    on_result: DescribedSink,
+    state: Arc<JobState>,
+}
+
+/// Dispatcher-thread mailbox.
+enum Control {
+    /// A described task was submitted.
+    Submit(RemoteTask),
+    /// A worker finished its handshake.
+    Registered { worker: String, pid: u32 },
+    /// A worker reported a task outcome.
+    Result {
+        worker: String,
+        result: Result<Vec<u8>, String>,
+        run_ms: f64,
+    },
+    /// A worker's socket closed, errored, or timed out.
+    Dead { worker: String, reason: String },
+    /// Backend drop: fail whatever is left and exit the loop.
+    Exit,
+}
+
+/// Driver-side view of one connected worker.
+struct WorkerConn {
+    writer: Mutex<UnixStream>,
+    /// ms since dispatcher start, updated on every received frame.
+    last_seen_ms: AtomicU64,
+    alive: AtomicBool,
+}
+
+/// Shared state between the dispatcher thread, the acceptor, the
+/// per-worker reader threads, and the liveness checker.
+struct Dispatcher {
+    services: BackendServices,
+    control: Mutex<Sender<Control>>,
+    workers: Mutex<HashMap<String, Arc<WorkerConn>>>,
+    start: Instant,
+    busy: AtomicUsize,
+    registered: AtomicUsize,
+    shutdown: AtomicBool,
+    socket_path: PathBuf,
+    /// Worker processes this backend launched (wait/kill on drop).
+    children: Mutex<Vec<Child>>,
+    /// Acceptor + reader + liveness + thread-mode worker threads.
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Dispatcher {
+    fn now_ms(&self) -> u64 {
+        self.start.elapsed().as_millis() as u64
+    }
+
+    fn send_control(&self, msg: Control) -> Result<(), ()> {
+        self.control.lock().unwrap().send(msg).map_err(|_| ())
+    }
+}
+
+/// Mutable state owned by the dispatcher loop. One slot per worker:
+/// Eclat reduce tasks are long and coarse, so slot=1 keeps dispatch
+/// greedy-balanced without a work-stealing protocol across processes.
+struct LoopState {
+    idle: VecDeque<String>,
+    busy: HashMap<String, RemoteTask>,
+    queue: VecDeque<RemoteTask>,
+    /// Workers that died; once `dead == spawned` no capacity can ever
+    /// return (the backend never respawns), so pending work fails fast.
+    dead: usize,
+    spawned: usize,
+}
+
+impl LoopState {
+    /// Fail a task that never reached a worker (no `TaskStart` was
+    /// emitted, so no `TaskEnd` either — span balance holds).
+    fn complete_unstarted(task: RemoteTask, reason: &str) {
+        (task.on_result)(Err(reason.to_string()), 0.0);
+        task.state.finish_task();
+    }
+
+    fn all_lost(&self) -> bool {
+        self.dead >= self.spawned
+    }
+
+    /// Match idle workers with queued tasks. A failed `LaunchTask`
+    /// write marks the worker dead inline and requeues the task.
+    fn pump(&mut self, disp: &Dispatcher) {
+        while !self.queue.is_empty() {
+            let Some(worker) = self.idle.pop_front() else {
+                return;
+            };
+            let conn = match disp.workers.lock().unwrap().get(&worker) {
+                Some(c) if c.alive.load(Ordering::SeqCst) => Arc::clone(c),
+                _ => continue,
+            };
+            let task = self.queue.pop_front().expect("queue checked non-empty");
+            let launch = Message::LaunchTask {
+                task: task.desc.clone(),
+            };
+            let wrote = {
+                let mut w = conn.writer.lock().unwrap();
+                write_frame(&mut *w, &launch)
+            };
+            match wrote {
+                Ok(()) => {
+                    disp.services.events.emit(SparkletEvent::TaskStart {
+                        job_id: task.desc.job_id,
+                        stage_tag: task.desc.stage_tag,
+                        task: task.desc.part,
+                        attempt: task.desc.attempt,
+                        worker: Some(worker.clone()),
+                    });
+                    disp.busy.fetch_add(1, Ordering::Relaxed);
+                    self.busy.insert(worker, task);
+                }
+                Err(e) => {
+                    self.queue.push_front(task);
+                    self.mark_dead(disp, &worker, &format!("launch write failed: {e}"));
+                }
+            }
+        }
+    }
+
+    /// Idempotent worker-death handling: emit `WorkerLost`, fail the
+    /// in-flight task (the scheduler's retry loop re-dispatches it),
+    /// and — when no worker remains — fail everything still queued.
+    fn mark_dead(&mut self, disp: &Dispatcher, worker: &str, reason: &str) {
+        let Some(conn) = disp.workers.lock().unwrap().get(worker).map(Arc::clone) else {
+            return; // never registered (e.g. the drop-time wakeup connection)
+        };
+        if !conn.alive.swap(false, Ordering::SeqCst) {
+            return; // reader EOF and liveness timeout can race; first wins
+        }
+        self.dead += 1;
+        self.idle.retain(|w| w != worker);
+        disp.services.events.emit(SparkletEvent::WorkerLost {
+            worker: worker.to_string(),
+            reason: reason.to_string(),
+        });
+        if let Some(task) = self.busy.remove(worker) {
+            disp.busy.fetch_sub(1, Ordering::Relaxed);
+            disp.services.events.emit(SparkletEvent::TaskEnd {
+                job_id: task.desc.job_id,
+                stage_tag: task.desc.stage_tag,
+                task: task.desc.part,
+                attempt: task.desc.attempt,
+                ok: false,
+                run_ms: 0.0,
+                worker: Some(worker.to_string()),
+            });
+            (task.on_result)(
+                Err(format!("worker {worker} lost: {reason}")),
+                0.0,
+            );
+            task.state.finish_task();
+        }
+        if self.all_lost() {
+            for task in self.queue.drain(..) {
+                Self::complete_unstarted(task, "all workers lost");
+            }
+        }
+    }
+}
+
+fn dispatcher_loop(disp: Arc<Dispatcher>, rx: Receiver<Control>, spawned: usize) {
+    let mut st = LoopState {
+        idle: VecDeque::new(),
+        busy: HashMap::new(),
+        queue: VecDeque::new(),
+        dead: 0,
+        spawned: spawned.max(1),
+    };
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Control::Exit => break,
+            Control::Registered { worker, pid } => {
+                disp.registered.fetch_add(1, Ordering::Relaxed);
+                disp.services.events.emit(SparkletEvent::WorkerRegistered {
+                    worker: worker.clone(),
+                    pid,
+                });
+                st.idle.push_back(worker);
+                st.pump(&disp);
+            }
+            Control::Submit(task) => {
+                if st.all_lost() {
+                    LoopState::complete_unstarted(task, "all workers lost");
+                    continue;
+                }
+                st.queue.push_back(task);
+                st.pump(&disp);
+            }
+            Control::Result {
+                worker,
+                result,
+                run_ms,
+            } => {
+                let Some(task) = st.busy.remove(&worker) else {
+                    continue; // result for a task already failed via Dead
+                };
+                disp.busy.fetch_sub(1, Ordering::Relaxed);
+                disp.services.events.emit(SparkletEvent::TaskEnd {
+                    job_id: task.desc.job_id,
+                    stage_tag: task.desc.stage_tag,
+                    task: task.desc.part,
+                    attempt: task.desc.attempt,
+                    ok: result.is_ok(),
+                    run_ms,
+                    worker: Some(worker.clone()),
+                });
+                (task.on_result)(result, run_ms);
+                task.state.finish_task();
+                st.idle.push_back(worker);
+                st.pump(&disp);
+            }
+            Control::Dead { worker, reason } => {
+                st.mark_dead(&disp, &worker, &reason);
+            }
+        }
+    }
+    // Backend is going away: no handle may hang on a completed stage.
+    for (_, task) in st.busy.drain() {
+        (task.on_result)(Err("executor shut down".into()), 0.0);
+        task.state.finish_task();
+    }
+    for task in st.queue.drain(..) {
+        LoopState::complete_unstarted(task, "executor shut down");
+    }
+}
+
+/// Accept worker connections until shutdown; one reader thread each.
+fn acceptor_loop(disp: Arc<Dispatcher>, listener: UnixListener) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if disp.shutdown.load(Ordering::SeqCst) {
+                    return; // drop-time wakeup connection
+                }
+                let d = Arc::clone(&disp);
+                let handle = std::thread::Builder::new()
+                    .name("sparklet-remote-reader".into())
+                    .spawn(move || serve_connection(d, stream))
+                    .expect("spawn reader thread");
+                disp.threads.lock().unwrap().push(handle);
+            }
+            Err(_) => {
+                if disp.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Per-worker reader: handshake, then pump frames into the dispatcher.
+/// `FetchBlock` is served directly from this thread — block reads are
+/// independent of dispatch order, and the worker blocks on the reply
+/// anyway (its task is suspended mid-fetch).
+fn serve_connection(disp: Arc<Dispatcher>, stream: UnixStream) {
+    let (worker, pid) = match read_frame(&mut &stream) {
+        Ok(Message::RegisterWorker { worker, pid }) => (worker, pid),
+        _ => return, // not a worker (wakeup ping or protocol garbage)
+    };
+    let writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let conn = Arc::new(WorkerConn {
+        writer: Mutex::new(writer),
+        last_seen_ms: AtomicU64::new(disp.now_ms()),
+        alive: AtomicBool::new(true),
+    });
+    disp.workers
+        .lock()
+        .unwrap()
+        .insert(worker.clone(), Arc::clone(&conn));
+    if disp
+        .send_control(Control::Registered {
+            worker: worker.clone(),
+            pid,
+        })
+        .is_err()
+    {
+        return;
+    }
+    loop {
+        match read_frame(&mut &stream) {
+            Ok(msg) => {
+                conn.last_seen_ms.store(disp.now_ms(), Ordering::Relaxed);
+                match msg {
+                    Message::Heartbeat { .. } => {}
+                    Message::TaskResult { result, run_ms, .. } => {
+                        if disp
+                            .send_control(Control::Result {
+                                worker: worker.clone(),
+                                result,
+                                run_ms,
+                            })
+                            .is_err()
+                        {
+                            return;
+                        }
+                    }
+                    Message::FetchBlock {
+                        shuffle_id,
+                        reduce_part,
+                    } => {
+                        let result = disp
+                            .services
+                            .shuffle
+                            .fetch_serialized(shuffle_id, reduce_part)
+                            .map_err(|e| e.to_string());
+                        let (blocks, bytes) = match &result {
+                            Ok(v) => (v.len(), v.iter().map(|(_, b, _)| b.len()).sum::<usize>()),
+                            Err(_) => (0, 0),
+                        };
+                        disp.services.events.emit(SparkletEvent::RemoteFetch {
+                            worker: worker.clone(),
+                            shuffle_id,
+                            reduce_part,
+                            blocks,
+                            bytes,
+                        });
+                        let reply = Message::BlockData {
+                            shuffle_id,
+                            reduce_part,
+                            result,
+                        };
+                        let wrote = {
+                            let mut w = conn.writer.lock().unwrap();
+                            write_frame(&mut *w, &reply)
+                        };
+                        if wrote.is_err() {
+                            let _ = disp.send_control(Control::Dead {
+                                worker,
+                                reason: "block reply write failed".into(),
+                            });
+                            return;
+                        }
+                    }
+                    // Driver-bound-only frames (or echoes) are ignored;
+                    // the transport already rejected unknown tags.
+                    _ => {}
+                }
+            }
+            Err(TransportError::Closed) => {
+                let _ = disp.send_control(Control::Dead {
+                    worker,
+                    reason: "socket closed".into(),
+                });
+                return;
+            }
+            Err(e) => {
+                let _ = disp.send_control(Control::Dead {
+                    worker,
+                    reason: e.to_string(),
+                });
+                return;
+            }
+        }
+    }
+}
+
+/// Watchdog: declare workers dead after `worker_timeout_ms` of silence.
+fn liveness_loop(disp: Arc<Dispatcher>) {
+    let interval = disp.services.conf.heartbeat_ms.clamp(10, 1_000);
+    let timeout = disp.services.conf.worker_timeout_ms;
+    while !disp.shutdown.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(interval));
+        let now = disp.now_ms();
+        let stale: Vec<String> = disp
+            .workers
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(_, c)| {
+                c.alive.load(Ordering::SeqCst)
+                    && now.saturating_sub(c.last_seen_ms.load(Ordering::Relaxed)) > timeout
+            })
+            .map(|(id, _)| id.clone())
+            .collect();
+        for worker in stale {
+            let _ = disp.send_control(Control::Dead {
+                worker,
+                reason: format!("no heartbeat for {timeout} ms"),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------- backend
+
+static ATTACH_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// The `multi-process` [`ExecutorBackend`]. Built unattached; the
+/// context's [`ExecutorBackend::attach`] call binds the socket and
+/// spawns the workers (so a spawn failure is a `ConfError`, not a
+/// mid-job surprise).
+pub struct MultiProcessBackend {
+    dispatcher: Mutex<Option<Arc<Dispatcher>>>,
+    workers: AtomicUsize,
+    cores_hint: usize,
+}
+
+impl MultiProcessBackend {
+    pub fn new(cores_hint: usize) -> Self {
+        Self {
+            dispatcher: Mutex::new(None),
+            workers: AtomicUsize::new(0),
+            cores_hint: cores_hint.max(1),
+        }
+    }
+
+    fn dispatcher(&self) -> Option<Arc<Dispatcher>> {
+        self.dispatcher.lock().unwrap().clone()
+    }
+}
+
+impl ExecutorBackend for MultiProcessBackend {
+    fn name(&self) -> &'static str {
+        "multi-process"
+    }
+
+    fn cores(&self) -> usize {
+        let n = self.workers.load(Ordering::Relaxed);
+        if n > 0 {
+            n
+        } else {
+            self.cores_hint
+        }
+    }
+
+    fn active(&self) -> usize {
+        self.dispatcher()
+            .map(|d| d.busy.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    fn supports_described(&self) -> bool {
+        true
+    }
+
+    fn attach(&self, services: BackendServices) -> Result<(), String> {
+        let n = services.conf.multiprocess_workers.max(1);
+        let dir = services
+            .conf
+            .socket_dir
+            .clone()
+            .map(PathBuf::from)
+            .unwrap_or_else(std::env::temp_dir);
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| format!("cannot create socket dir {}: {e}", dir.display()))?;
+        let socket_path = dir.join(format!(
+            "sparklet-{}-{}.sock",
+            std::process::id(),
+            ATTACH_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_file(&socket_path);
+        let listener = UnixListener::bind(&socket_path)
+            .map_err(|e| format!("cannot bind {}: {e}", socket_path.display()))?;
+
+        let (tx, rx) = channel();
+        let disp = Arc::new(Dispatcher {
+            services,
+            control: Mutex::new(tx),
+            workers: Mutex::new(HashMap::new()),
+            start: Instant::now(),
+            busy: AtomicUsize::new(0),
+            registered: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            socket_path: socket_path.clone(),
+            children: Mutex::new(Vec::new()),
+            threads: Mutex::new(Vec::new()),
+        });
+
+        let mut threads = Vec::new();
+        {
+            let d = Arc::clone(&disp);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("sparklet-remote-dispatch".into())
+                    .spawn(move || dispatcher_loop(d, rx, n))
+                    .map_err(|e| format!("spawn dispatcher: {e}"))?,
+            );
+        }
+        {
+            let d = Arc::clone(&disp);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("sparklet-remote-accept".into())
+                    .spawn(move || acceptor_loop(d, listener))
+                    .map_err(|e| format!("spawn acceptor: {e}"))?,
+            );
+        }
+        {
+            let d = Arc::clone(&disp);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("sparklet-remote-liveness".into())
+                    .spawn(move || liveness_loop(d))
+                    .map_err(|e| format!("spawn liveness checker: {e}"))?,
+            );
+        }
+
+        let hb = disp.services.conf.heartbeat_ms;
+        let fault = disp.services.conf.worker_fault.clone();
+        let binary = disp.services.conf.worker_binary.clone();
+        for i in 0..n {
+            let id = format!("w{i}");
+            match binary.as_deref() {
+                Some(THREAD_WORKERS) => {
+                    let sock = socket_path.clone();
+                    let fault = fault.clone();
+                    threads.push(
+                        std::thread::Builder::new()
+                            .name(format!("sparklet-worker-{id}"))
+                            .spawn(move || {
+                                let _ =
+                                    worker_loop(&sock, &id, fault.as_deref(), hb, true);
+                            })
+                            .map_err(|e| format!("spawn thread worker {id}: {e}"))?,
+                    );
+                }
+                bin => {
+                    let program = match bin {
+                        Some(p) => PathBuf::from(p),
+                        None => std::env::current_exe()
+                            .map_err(|e| format!("cannot locate current binary: {e}"))?,
+                    };
+                    let mut cmd = Command::new(&program);
+                    cmd.arg("worker")
+                        .arg("--socket")
+                        .arg(&socket_path)
+                        .arg("--id")
+                        .arg(&id)
+                        .arg("--heartbeat-ms")
+                        .arg(hb.to_string());
+                    if let Some(f) = &fault {
+                        cmd.arg("--fault").arg(f);
+                    }
+                    let child = cmd.spawn().map_err(|e| {
+                        format!("cannot spawn worker {id} ({}): {e}", program.display())
+                    })?;
+                    disp.children.lock().unwrap().push(child);
+                }
+            }
+        }
+        disp.threads.lock().unwrap().extend(threads);
+        self.workers.store(n, Ordering::Relaxed);
+        *self.dispatcher.lock().unwrap() = Some(disp);
+        Ok(())
+    }
+
+    fn submit(&self, tasks: TaskSet) -> JobHandle {
+        let (stage, tasks) = tasks.into_parts();
+        let state = Arc::new(JobState::new(tasks.len()));
+        let disp = self.dispatcher();
+        for task in tasks {
+            match task {
+                // Closures are not serializable; they run inline on the
+                // driver (map stages and generic RDD jobs — the
+                // distributed tier is for described reduce stages).
+                Task::Closure(f) => {
+                    let _ = catch_unwind(AssertUnwindSafe(f));
+                    state.finish_task();
+                }
+                Task::Described { desc, on_result } => match &disp {
+                    Some(d) => {
+                        let submitted = d.send_control(Control::Submit(RemoteTask {
+                            desc,
+                            on_result,
+                            state: Arc::clone(&state),
+                        }));
+                        if submitted.is_err() {
+                            // Dispatcher already exited; the Submit never
+                            // arrived, so complete here.
+                            state.finish_task();
+                        }
+                    }
+                    None => {
+                        on_result(
+                            Err("multi-process backend is not attached to a context".into()),
+                            0.0,
+                        );
+                        state.finish_task();
+                    }
+                },
+            }
+        }
+        JobHandle::new(state, stage)
+    }
+}
+
+impl Drop for MultiProcessBackend {
+    fn drop(&mut self) {
+        let Some(disp) = self.dispatcher.lock().unwrap().take() else {
+            return;
+        };
+        disp.shutdown.store(true, Ordering::SeqCst);
+        // Politely stop workers; a broken pipe just means it's dead already.
+        for conn in disp.workers.lock().unwrap().values() {
+            if conn.alive.load(Ordering::SeqCst) {
+                let mut w = conn.writer.lock().unwrap();
+                let _ = write_frame(&mut *w, &Message::Shutdown);
+            }
+        }
+        let _ = disp.send_control(Control::Exit);
+        // Wake the acceptor out of accept() so it can observe shutdown.
+        let _ = UnixStream::connect(&disp.socket_path);
+        // Reap children: give them the Shutdown frame's worth of grace,
+        // then kill — a faulted or hung worker must not leak.
+        for child in disp.children.lock().unwrap().iter_mut() {
+            let deadline = Instant::now() + Duration::from_millis(500);
+            loop {
+                match child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    _ => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        break;
+                    }
+                }
+            }
+        }
+        let handles: Vec<JoinHandle<()>> = disp.threads.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        let _ = std::fs::remove_file(&disp.socket_path);
+    }
+}
+
+// ----------------------------------------------------------------- worker
+
+/// `SparkletConf::worker_binary` sentinel: run workers as in-process
+/// threads over the same socket protocol (tests — the test harness
+/// binary must never be re-exec'd).
+pub const THREAD_WORKERS: &str = "<thread>";
+
+/// Worker-side block fetcher: write `FetchBlock`, then read the
+/// `BlockData` reply off the *main* stream. Safe because the worker is
+/// single-slot: while a task runs (and fetches), the worker's read loop
+/// is suspended inside the task, and the driver sends nothing but the
+/// awaited reply on this socket.
+struct SocketFetcher<'a> {
+    reader: &'a UnixStream,
+    writer: &'a Mutex<UnixStream>,
+}
+
+impl BlockFetcher for SocketFetcher<'_> {
+    fn fetch_blocks(
+        &self,
+        shuffle_id: usize,
+        reduce_part: usize,
+    ) -> Result<Vec<WireBlock>, String> {
+        {
+            let mut w = self.writer.lock().unwrap();
+            write_frame(
+                &mut *w,
+                &Message::FetchBlock {
+                    shuffle_id,
+                    reduce_part,
+                },
+            )
+            .map_err(|e| format!("fetch request failed: {e}"))?;
+        }
+        let mut reader = self.reader;
+        loop {
+            match read_frame(&mut reader).map_err(|e| format!("fetch reply failed: {e}"))? {
+                Message::BlockData {
+                    shuffle_id: sid,
+                    reduce_part: rp,
+                    result,
+                } => {
+                    if sid != shuffle_id || rp != reduce_part {
+                        return Err(format!(
+                            "fetch reply mismatch: asked ({shuffle_id},{reduce_part}), got ({sid},{rp})"
+                        ));
+                    }
+                    return result;
+                }
+                Message::Shutdown => return Err("driver shut down mid-fetch".into()),
+                // Anything else mid-fetch is a protocol violation.
+                other => {
+                    return Err(format!(
+                        "unexpected frame during fetch: {}",
+                        frame_name(&other)
+                    ))
+                }
+            }
+        }
+    }
+}
+
+fn frame_name(msg: &Message) -> &'static str {
+    match msg {
+        Message::RegisterWorker { .. } => "RegisterWorker",
+        Message::LaunchTask { .. } => "LaunchTask",
+        Message::TaskResult { .. } => "TaskResult",
+        Message::FetchBlock { .. } => "FetchBlock",
+        Message::BlockData { .. } => "BlockData",
+        Message::Heartbeat { .. } => "Heartbeat",
+        Message::WorkerLost { .. } => "WorkerLost",
+        Message::Shutdown => "Shutdown",
+    }
+}
+
+/// Parse a `"<worker-id>:<after-n-tasks>"` fault spec against this
+/// worker's id. `Some(n)` = die instead of reporting task `n`'s result.
+fn parse_fault(spec: Option<&str>, my_id: &str) -> Option<usize> {
+    let spec = spec?;
+    let (id, n) = spec.split_once(':')?;
+    if id != my_id {
+        return None;
+    }
+    n.parse().ok().filter(|n| *n >= 1)
+}
+
+/// The worker's event loop. Connects to the driver's socket, registers,
+/// heartbeats from a side thread, and executes `LaunchTask` frames
+/// against the process-global [`TaskRegistry`] (the caller must have
+/// registered the task keys — `main.rs` registers the FIM tasks before
+/// entering this loop).
+///
+/// Returns the process exit code. `in_process` (thread-mode tests)
+/// makes the fault path *return* (dropping the socket, which is what
+/// the driver observes of a died process) instead of calling
+/// `process::exit` — the latter would take the test harness down.
+pub fn worker_loop(
+    socket: &Path,
+    id: &str,
+    fault: Option<&str>,
+    heartbeat_ms: u64,
+    in_process: bool,
+) -> i32 {
+    let stream = match UnixStream::connect(socket) {
+        Ok(s) => s,
+        Err(e) => {
+            log::error!("worker {id}: cannot connect to {}: {e}", socket.display());
+            return 1;
+        }
+    };
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(e) => {
+            log::error!("worker {id}: cannot clone stream: {e}");
+            return 1;
+        }
+    };
+    {
+        let mut w = writer.lock().unwrap();
+        if write_frame(
+            &mut *w,
+            &Message::RegisterWorker {
+                worker: id.to_string(),
+                pid: std::process::id(),
+            },
+        )
+        .is_err()
+        {
+            return 1;
+        }
+    }
+
+    // Heartbeat side thread; stops when the main loop exits (flag) or
+    // the socket dies (write error).
+    let done = Arc::new(AtomicBool::new(false));
+    let hb_handle = {
+        let done = Arc::clone(&done);
+        let writer = Arc::clone(&writer);
+        let id = id.to_string();
+        let interval = heartbeat_ms.clamp(10, 10_000);
+        std::thread::Builder::new()
+            .name(format!("sparklet-hb-{id}"))
+            .spawn(move || {
+                let mut seq = 0u64;
+                loop {
+                    std::thread::sleep(Duration::from_millis(interval));
+                    if done.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    seq += 1;
+                    let beat = Message::Heartbeat {
+                        worker: id.clone(),
+                        seq,
+                    };
+                    let mut w = writer.lock().unwrap();
+                    if write_frame(&mut *w, &beat).is_err() {
+                        return;
+                    }
+                }
+            })
+    };
+
+    let die_after = parse_fault(fault, id);
+    let mut completed = 0usize;
+    let code = loop {
+        match read_frame(&mut &stream) {
+            Ok(Message::LaunchTask { task }) => {
+                let fetcher = SocketFetcher {
+                    reader: &stream,
+                    writer: &writer,
+                };
+                let env = TaskEnv::new(&fetcher);
+                let t = Instant::now();
+                let result = catch_unwind(AssertUnwindSafe(|| TaskRegistry::run(&task, &env)))
+                    .unwrap_or_else(|_| Err(format!("task panicked (key '{}')", task.key)));
+                let run_ms = t.elapsed().as_secs_f64() * 1e3;
+                completed += 1;
+                if die_after.is_some_and(|n| completed >= n) {
+                    // Injected fault: die *instead of* reporting, so the
+                    // driver sees an in-flight task vanish with the
+                    // worker — the recovery path under test.
+                    if in_process {
+                        break 1;
+                    }
+                    std::process::exit(1);
+                }
+                let reply = Message::TaskResult {
+                    job_id: task.job_id,
+                    stage_tag: task.stage_tag,
+                    part: task.part,
+                    attempt: task.attempt,
+                    result,
+                    run_ms,
+                };
+                let mut w = writer.lock().unwrap();
+                if write_frame(&mut *w, &reply).is_err() {
+                    break 1;
+                }
+            }
+            Ok(Message::Shutdown) => break 0,
+            Ok(_) => {} // WorkerLost broadcasts etc. — informational
+            Err(TransportError::Closed) => break 0, // driver gone
+            Err(e) => {
+                log::error!("worker {id}: transport error: {e}");
+                break 1;
+            }
+        }
+    };
+    done.store(true, Ordering::SeqCst);
+    drop(stream);
+    if let Ok(h) = hb_handle {
+        let _ = h.join();
+    }
+    code
+}
+
+/// Process entry point for the hidden `worker` CLI subcommand. The
+/// caller registers `TaskRegistry` keys first, then never returns.
+pub fn worker_main(socket: &Path, id: &str, fault: Option<&str>, heartbeat_ms: u64) -> ! {
+    std::process::exit(worker_loop(socket, id, fault, heartbeat_ms, false))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::conf::SparkletConf;
+    use super::super::context::SparkletContext;
+    use super::super::events::{CollectingListener, SparkletEvent};
+    use super::*;
+    use std::sync::mpsc::channel as mpsc_channel;
+
+    /// Thread-mode conf: workers run in-process over a real socket.
+    fn mp_conf(workers: usize) -> SparkletConf {
+        register_backend();
+        SparkletConf::new("remote-test")
+            .with_workers(workers)
+            .unwrap()
+            .with_worker_binary(THREAD_WORKERS)
+            .with_worker_timeouts(50, 2_000)
+            .with_executor_backend("multi-process")
+            .unwrap()
+    }
+
+    fn register_echo_tasks() {
+        TaskRegistry::register("test.echo", |_env, payload| Ok(payload.to_vec()));
+        TaskRegistry::register("test.fail", |_env, _payload| Err("deliberate".into()));
+    }
+
+    fn submit_echo(sc: &SparkletContext, parts: usize) -> Vec<Vec<u8>> {
+        let (tx, rx) = mpsc_channel();
+        let mut ts = TaskSet::new(7, "echo");
+        for part in 0..parts {
+            let tx = tx.clone();
+            ts.push_described(
+                TaskDescriptor {
+                    job_id: 1,
+                    stage_tag: 7,
+                    part,
+                    attempt: 0,
+                    key: "test.echo".into(),
+                    payload: vec![part as u8; 3],
+                },
+                move |res, _ms| {
+                    let _ = tx.send((part, res));
+                },
+            );
+        }
+        drop(tx);
+        sc.executor().submit(ts).wait();
+        let mut out = vec![Vec::new(); parts];
+        for (part, res) in rx.try_iter() {
+            out[part] = res.unwrap();
+        }
+        out
+    }
+
+    #[test]
+    fn thread_workers_register_and_run_described_tasks() {
+        register_echo_tasks();
+        let sink = CollectingListener::new();
+        // Workers register during attach (inside try_new), before any
+        // listener can be added — so registration is asserted via the
+        // event log, whose writer subscribes before attach runs.
+        let log_path = std::env::temp_dir().join(format!(
+            "sparklet-remote-test-{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&log_path);
+        let mut conf = mp_conf(2);
+        conf.event_log = Some(log_path.to_string_lossy().into_owned());
+        let sc = SparkletContext::try_new(conf).unwrap();
+        sc.events().register(Arc::new(sink.clone()));
+        assert_eq!(sc.executor().name(), "multi-process");
+        assert!(sc.executor().supports_described());
+        let got = submit_echo(&sc, 6);
+        for (part, bytes) in got.iter().enumerate() {
+            assert_eq!(bytes, &vec![part as u8; 3]);
+        }
+        sc.events().flush();
+        let log = std::fs::read_to_string(&log_path).unwrap();
+        for worker in ["\"worker\": \"w0\"", "\"worker\": \"w1\""] {
+            assert!(
+                log.lines()
+                    .any(|l| l.contains("\"type\": \"WorkerRegistered\"") && l.contains(worker)),
+                "missing registration for {worker} in:\n{log}"
+            );
+        }
+        // Task spans carry worker ids.
+        assert!(sink.snapshot().iter().any(|(_, e)| matches!(
+            e,
+            SparkletEvent::TaskEnd { worker: Some(w), ok: true, .. } if w.starts_with('w')
+        )));
+        let _ = std::fs::remove_file(&log_path);
+    }
+
+    #[test]
+    fn task_errors_flow_back_as_results_not_worker_deaths() {
+        register_echo_tasks();
+        let sc = SparkletContext::try_new(mp_conf(1)).unwrap();
+        let (tx, rx) = mpsc_channel();
+        let mut ts = TaskSet::new(8, "fail");
+        ts.push_described(
+            TaskDescriptor {
+                job_id: 1,
+                stage_tag: 8,
+                part: 0,
+                attempt: 0,
+                key: "test.fail".into(),
+                payload: vec![],
+            },
+            move |res, _| {
+                let _ = tx.send(res);
+            },
+        );
+        sc.executor().submit(ts).wait();
+        let err = rx.try_iter().next().unwrap().unwrap_err();
+        assert!(err.contains("deliberate"), "{err}");
+        // The worker survived the failing task and still serves.
+        let got = submit_echo(&sc, 2);
+        assert_eq!(got[1], vec![1u8; 3]);
+    }
+
+    #[test]
+    fn unknown_task_key_reports_registered_keys() {
+        register_echo_tasks();
+        let sc = SparkletContext::try_new(mp_conf(1)).unwrap();
+        let (tx, rx) = mpsc_channel();
+        let mut ts = TaskSet::new(9, "unknown");
+        ts.push_described(
+            TaskDescriptor {
+                job_id: 1,
+                stage_tag: 9,
+                part: 0,
+                attempt: 0,
+                key: "no.such.key".into(),
+                payload: vec![],
+            },
+            move |res, _| {
+                let _ = tx.send(res);
+            },
+        );
+        sc.executor().submit(ts).wait();
+        let err = rx.try_iter().next().unwrap().unwrap_err();
+        assert!(err.contains("no.such.key"), "{err}");
+        assert!(err.contains("test.echo"), "{err}");
+    }
+
+    #[test]
+    fn killed_worker_surfaces_as_worker_lost_and_task_failure() {
+        register_echo_tasks();
+        let sink = CollectingListener::new();
+        // w0 dies instead of answering its first task; w1 survives.
+        let conf = mp_conf(2).with_worker_fault("w0:1");
+        let sc = SparkletContext::try_new(conf).unwrap();
+        sc.events().register(Arc::new(sink.clone()));
+        // Enough tasks that w0 is certain to receive one.
+        let (tx, rx) = mpsc_channel();
+        let mut ts = TaskSet::new(10, "fault");
+        for part in 0..6 {
+            let tx = tx.clone();
+            ts.push_described(
+                TaskDescriptor {
+                    job_id: 1,
+                    stage_tag: 10,
+                    part,
+                    attempt: 0,
+                    key: "test.echo".into(),
+                    payload: vec![part as u8],
+                },
+                move |res, _| {
+                    let _ = tx.send((part, res));
+                },
+            );
+        }
+        drop(tx);
+        sc.executor().submit(ts).wait();
+        let outcomes: Vec<_> = rx.try_iter().collect();
+        assert_eq!(outcomes.len(), 6, "every sink fired — no hang");
+        let failures = outcomes.iter().filter(|(_, r)| r.is_err()).count();
+        assert_eq!(failures, 1, "exactly the in-flight task failed");
+        sc.events().flush();
+        let lost: Vec<String> = sink
+            .snapshot()
+            .iter()
+            .filter_map(|(_, e)| match e {
+                SparkletEvent::WorkerLost { worker, .. } => Some(worker.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(lost, vec!["w0".to_string()]);
+        // The survivor still executes new work.
+        let got = submit_echo(&sc, 2);
+        assert_eq!(got[0], vec![0u8; 3]);
+    }
+
+    #[test]
+    fn all_workers_lost_fails_pending_instead_of_hanging() {
+        register_echo_tasks();
+        let conf = mp_conf(1).with_worker_fault("w0:1");
+        let sc = SparkletContext::try_new(conf).unwrap();
+        let (tx, rx) = mpsc_channel();
+        let mut ts = TaskSet::new(11, "doomed");
+        for part in 0..4 {
+            let tx = tx.clone();
+            ts.push_described(
+                TaskDescriptor {
+                    job_id: 1,
+                    stage_tag: 11,
+                    part,
+                    attempt: 0,
+                    key: "test.echo".into(),
+                    payload: vec![],
+                },
+                move |res, _| {
+                    let _ = tx.send(res);
+                },
+            );
+        }
+        drop(tx);
+        sc.executor().submit(ts).wait(); // must complete, not hang
+        let outcomes: Vec<_> = rx.try_iter().collect();
+        assert_eq!(outcomes.len(), 4);
+        assert!(outcomes.iter().all(|r| r.is_err()));
+        // Later submissions fail fast too.
+        let (tx2, rx2) = mpsc_channel();
+        let mut ts2 = TaskSet::new(12, "late");
+        ts2.push_described(
+            TaskDescriptor {
+                job_id: 2,
+                stage_tag: 12,
+                part: 0,
+                attempt: 0,
+                key: "test.echo".into(),
+                payload: vec![],
+            },
+            move |res, _| {
+                let _ = tx2.send(res);
+            },
+        );
+        sc.executor().submit(ts2).wait();
+        assert!(rx2.try_iter().next().unwrap().is_err());
+    }
+
+    #[test]
+    fn closure_tasks_run_inline_on_the_driver() {
+        let sc = SparkletContext::try_new(mp_conf(1)).unwrap();
+        let (tx, rx) = mpsc_channel();
+        let mut ts = TaskSet::new(13, "closures");
+        for i in 0..5 {
+            let tx = tx.clone();
+            ts.push(move || {
+                let _ = tx.send(i * i);
+            });
+        }
+        drop(tx);
+        sc.executor().submit(ts).wait();
+        let mut got: Vec<i32> = rx.try_iter().collect();
+        got.sort();
+        assert_eq!(got, vec![0, 1, 4, 9, 16]);
+    }
+
+    #[test]
+    fn fault_spec_parses_only_for_the_named_worker() {
+        assert_eq!(parse_fault(Some("w0:2"), "w0"), Some(2));
+        assert_eq!(parse_fault(Some("w0:2"), "w1"), None);
+        assert_eq!(parse_fault(Some("w0:0"), "w0"), None, "0 tasks is no fault");
+        assert_eq!(parse_fault(Some("garbage"), "w0"), None);
+        assert_eq!(parse_fault(None, "w0"), None);
+    }
+}

@@ -28,6 +28,8 @@ use super::executor::{panic_message, TaskSet};
 use super::metrics::{StageKind, StageMetrics};
 use super::pair::ShuffleDepObj;
 use super::rdd::{materialize, Data, Dep, DepNode, Rdd, TaskContext};
+use super::shuffle::LocalBlockFetcher;
+use super::transport::{TaskDescriptor, TaskEnv, TaskRegistry};
 
 /// Deterministic fault-injection coin: should task (stage_tag, part,
 /// attempt) fail? Only first attempts fail so jobs always converge.
@@ -100,6 +102,7 @@ fn run_stage<U: Send + 'static>(
                     stage_tag,
                     task: part,
                     attempt,
+                    worker: None,
                 });
                 let outcome = catch_unwind(AssertUnwindSafe(|| {
                     if injected_failure(&ctx2, stage_tag, part, attempt) {
@@ -117,6 +120,7 @@ fn run_stage<U: Send + 'static>(
                     attempt,
                     ok: outcome.is_ok(),
                     run_ms: outcome.as_ref().map(|(_, ms)| *ms).unwrap_or(0.0),
+                    worker: None,
                 });
                 let _ = tx.send((part, outcome));
             });
@@ -232,6 +236,197 @@ fn run_map_stage(ctx: &SparkletContext, job_id: u64, sd: &Arc<dyn ShuffleDepObj>
         }),
     );
     mgr.mark_completed(sd.shuffle_id());
+}
+
+/// Find the shuffle dependency directly feeding `node`. The described
+/// runner's target is always the output of `partition_by`, so one hop
+/// is enough — no recursive walk.
+fn direct_shuffle_dep(node: &Arc<dyn DepNode>) -> Option<Arc<dyn ShuffleDepObj>> {
+    node.node_deps().into_iter().find_map(|dep| match dep {
+        Dep::Shuffle(sd) => Some(sd),
+        Dep::Narrow(_) => None,
+    })
+}
+
+/// Run a job whose result stage is a *described* task set: instead of
+/// in-memory `Fn` captures, each task is a [`TaskDescriptor`] — stage
+/// identity + a [`TaskRegistry`] key + a serialized partition spec —
+/// that a worker in another process can execute against shuffle blocks
+/// fetched over the transport.
+///
+/// `rdd` must sit directly on a shuffle boundary (a `partition_by`
+/// output): its map stages run on the driver as usual, then one
+/// descriptor per reduce partition is built with
+/// `payload(shuffle_id, part)` and submitted. On a backend without
+/// remote dispatch (`supports_described() == false`) each descriptor is
+/// degraded to a driver-local closure running the same registry entry
+/// against the driver's own block store — identical semantics, one
+/// process.
+///
+/// Failure handling follows `run_stage`: a lost worker fails its
+/// in-flight descriptors, which land back in `pending` and are
+/// re-dispatched (to surviving workers) on the next attempt. Map output
+/// lives in the driver's store, so a worker death never loses map
+/// stages — lineage re-execution is only needed when the *driver*
+/// retries a map task, which the existing path already covers.
+pub fn run_described_job<T: Data>(
+    ctx: &SparkletContext,
+    rdd: &Rdd<T>,
+    key: &str,
+    payload: impl Fn(usize, usize) -> Vec<u8>,
+) -> Vec<Vec<u8>> {
+    let job_id = ctx.events().next_job_id();
+    ctx.events().emit(SparkletEvent::JobStart { job_id });
+
+    let node = rdd.as_node();
+    let mut visited = HashSet::new();
+    ensure_shuffles(ctx, job_id, &node, &mut visited);
+    let sd = direct_shuffle_dep(&node)
+        .expect("run_described_job target must sit directly on a shuffle boundary");
+    let shuffle_id = sd.shuffle_id();
+
+    let kind = StageKind::Result;
+    let stage_tag = 0xA11C_0000u64 ^ rdd.id() as u64;
+    let num_tasks = rdd.num_partitions();
+    let wall = Instant::now();
+    ctx.events().emit(SparkletEvent::StageSubmitted {
+        job_id,
+        stage_tag,
+        kind,
+        name: format!("Described/{key}/rdd{}", rdd.id()),
+        num_tasks,
+    });
+    let records_before = ctx.shuffle_manager().records_written();
+    let bytes_before = ctx.shuffle_manager().bytes_written();
+    let spilled_before = ctx.shuffle_manager().spilled_blocks();
+    let mut results: Vec<Option<Vec<u8>>> = (0..num_tasks).map(|_| None).collect();
+    let mut task_millis = vec![0.0f64; num_tasks];
+    let mut pending: Vec<usize> = (0..num_tasks).collect();
+    let mut retries = 0usize;
+    let mut steals = 0usize;
+    let mut queue_wait_ms = 0.0f64;
+    let max_attempts = ctx.conf().max_task_failures;
+    let remote = ctx.executor().supports_described();
+
+    for attempt in 0..max_attempts {
+        if pending.is_empty() {
+            break;
+        }
+        let mut taskset = TaskSet::new(stage_tag, format!("Described/{key}/attempt{attempt}"));
+        let (tx, rx) = channel::<(usize, Result<(Vec<u8>, f64), String>)>();
+        for &part in &pending {
+            let desc = TaskDescriptor {
+                job_id,
+                stage_tag,
+                part,
+                attempt,
+                key: key.to_string(),
+                payload: payload(shuffle_id, part),
+            };
+            let tx = tx.clone();
+            if remote {
+                // The backend owns dispatch and emits the task spans
+                // (with worker ids) from its driver-side event loop.
+                taskset.push_described(
+                    desc,
+                    Box::new(move |res, ms| {
+                        let _ = tx.send((part, res.map(|bytes| (bytes, ms))));
+                    }),
+                );
+            } else {
+                // Degrade to a driver-local closure over the same
+                // registry entry — the in-process oracle for the
+                // multi-process path.
+                let ctx2 = ctx.clone();
+                taskset.push(move || {
+                    ctx2.events().emit(SparkletEvent::TaskStart {
+                        job_id,
+                        stage_tag,
+                        task: part,
+                        attempt,
+                        worker: None,
+                    });
+                    let outcome = catch_unwind(AssertUnwindSafe(|| {
+                        if injected_failure(&ctx2, stage_tag, part, attempt) {
+                            panic!("injected task failure (stage {stage_tag}, part {part})");
+                        }
+                        let t = Instant::now();
+                        let fetcher = LocalBlockFetcher::new(ctx2.shuffle_arc());
+                        let env = TaskEnv::new(&fetcher);
+                        TaskRegistry::run(&desc, &env)
+                            .map(|bytes| (bytes, t.elapsed().as_secs_f64() * 1e3))
+                    }))
+                    .map_err(|e| panic_message(e.as_ref()))
+                    .and_then(|r| r);
+                    ctx2.events().emit(SparkletEvent::TaskEnd {
+                        job_id,
+                        stage_tag,
+                        task: part,
+                        attempt,
+                        ok: outcome.is_ok(),
+                        run_ms: outcome.as_ref().map(|(_, ms)| *ms).unwrap_or(0.0),
+                        worker: None,
+                    });
+                    let _ = tx.send((part, outcome));
+                });
+            }
+        }
+        drop(tx);
+        let handle = ctx.executor().submit(taskset);
+        let stats = handle.wait();
+        steals += stats.steals;
+        queue_wait_ms += stats.queue_wait_ms;
+
+        let mut outcomes: HashMap<usize, Result<(Vec<u8>, f64), String>> = rx.try_iter().collect();
+        let mut still_pending = Vec::new();
+        for &part in &pending {
+            match outcomes
+                .remove(&part)
+                .unwrap_or_else(|| Err("executor dropped the task's result".into()))
+            {
+                Ok((out, ms)) => {
+                    results[part] = Some(out);
+                    task_millis[part] = ms;
+                }
+                Err(msg) => {
+                    log::warn!("described task {part} failed (attempt {attempt}): {msg}");
+                    retries += 1;
+                    still_pending.push(part);
+                }
+            }
+        }
+        pending = still_pending;
+    }
+
+    if !pending.is_empty() {
+        panic!(
+            "described stage failed: partitions {pending:?} exceeded {} attempts",
+            max_attempts
+        );
+    }
+
+    ctx.events().emit(SparkletEvent::StageCompleted {
+        job_id,
+        stage_tag,
+        metrics: StageMetrics {
+            kind,
+            rdd_id: rdd.id(),
+            num_tasks,
+            wall: wall.elapsed(),
+            task_millis,
+            retries,
+            shuffle_records: ctx.shuffle_manager().records_written() - records_before,
+            shuffle_bytes: ctx.shuffle_manager().bytes_written() - bytes_before,
+            spilled_blocks: ctx.shuffle_manager().spilled_blocks() - spilled_before,
+            backend: ctx.executor().name(),
+            steals,
+            queue_wait_ms,
+        },
+    });
+    ctx.events().emit(SparkletEvent::JobEnd { job_id });
+    ctx.events().flush();
+
+    results.into_iter().map(|r| r.unwrap()).collect()
 }
 
 /// Entry point used by all actions.

@@ -268,6 +268,28 @@ impl<T: SerDe> SerDe for Option<T> {
     }
 }
 
+impl<T: SerDe, E: SerDe> SerDe for Result<T, E> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Ok(x) => {
+                out.push(0);
+                x.encode(out);
+            }
+            Err(e) => {
+                out.push(1);
+                e.encode(out);
+            }
+        }
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<Self, SerDeError> {
+        match u8::decode(r)? {
+            0 => Ok(Ok(T::decode(r)?)),
+            1 => Ok(Err(E::decode(r)?)),
+            _ => Err(SerDeError::Invalid { what: "result tag" }),
+        }
+    }
+}
+
 impl<T: SerDe> SerDe for Box<T> {
     fn encode(&self, out: &mut Vec<u8>) {
         (**self).encode(out);
@@ -391,6 +413,12 @@ mod tests {
         roundtrip((0..10_000u32).collect::<Vec<u32>>());
         roundtrip(Some(42u32));
         roundtrip(None::<String>);
+        roundtrip(Ok::<u32, String>(7));
+        roundtrip(Err::<u32, String>("boom".to_string()));
+        assert!(matches!(
+            Result::<u32, String>::from_bytes(&[9]),
+            Err(SerDeError::Invalid { what: "result tag" })
+        ));
         roundtrip(Box::new(7u64));
         roundtrip((1u32, "x".to_string()));
         roundtrip((1u8, (2u16, 3u32), vec![4u64]));

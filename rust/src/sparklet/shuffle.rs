@@ -252,6 +252,64 @@ impl ShuffleManager {
         self.store.clear();
         self.completed.lock().unwrap().clear();
     }
+
+    /// Fetch a reduce partition as transport-ready `(id, bytes, records)`
+    /// triples — the shape `BlockData` frames carry to remote workers.
+    /// Bytes are copied out of the store's `Arc` buffers: what goes on
+    /// the wire (or into a local described task) is exclusively owned.
+    pub fn fetch_serialized(
+        &self,
+        shuffle_id: usize,
+        reduce_part: usize,
+    ) -> Result<Vec<super::transport::WireBlock>, ShuffleError> {
+        let ids = if self.is_completed(shuffle_id) {
+            self.index
+                .lock()
+                .unwrap()
+                .get(&(shuffle_id, reduce_part))
+                .cloned()
+                .unwrap_or_default()
+        } else {
+            return Err(ShuffleError::MapStageIncomplete {
+                shuffle_id,
+                reduce_part,
+            });
+        };
+        let mut out = Vec::with_capacity(ids.len());
+        for id in ids {
+            let block = self
+                .store
+                .get(&id)
+                .ok_or(ShuffleError::MissingBlock { id })?;
+            out.push((id, block.bytes.to_vec(), block.records));
+        }
+        Ok(out)
+    }
+}
+
+/// [`super::transport::BlockFetcher`] over the driver's own
+/// [`ShuffleManager`] — what a described task uses when it runs on the
+/// driver (local fallback) instead of a remote worker.
+pub struct LocalBlockFetcher {
+    shuffle: Arc<ShuffleManager>,
+}
+
+impl LocalBlockFetcher {
+    pub fn new(shuffle: Arc<ShuffleManager>) -> Self {
+        Self { shuffle }
+    }
+}
+
+impl super::transport::BlockFetcher for LocalBlockFetcher {
+    fn fetch_blocks(
+        &self,
+        shuffle_id: usize,
+        reduce_part: usize,
+    ) -> Result<Vec<super::transport::WireBlock>, String> {
+        self.shuffle
+            .fetch_serialized(shuffle_id, reduce_part)
+            .map_err(|e| e.to_string())
+    }
 }
 
 #[cfg(test)]
@@ -365,6 +423,37 @@ mod tests {
         assert!(m.is_completed(sid));
         m.clear_shuffle(sid);
         assert!(!m.is_completed(sid));
+    }
+
+    #[test]
+    fn fetch_serialized_matches_fetch_and_is_owned() {
+        use super::super::transport::BlockFetcher;
+        let m = Arc::new(ShuffleManager::new());
+        let sid = m.new_shuffle_id();
+        let recs = vec![(1u32, "a".to_string()), (2, "b".to_string())];
+        let (bytes, n) = block_of(&recs);
+        m.write_block(sid, 0, 0, bytes, n);
+        // Before completion: same typed error as fetch.
+        assert!(matches!(
+            m.fetch_serialized(sid, 0),
+            Err(ShuffleError::MapStageIncomplete { .. })
+        ));
+        m.mark_completed(sid);
+        let wire = m.fetch_serialized(sid, 0).unwrap();
+        assert_eq!(wire.len(), 1);
+        let (id, payload, records) = &wire[0];
+        assert_eq!((id.shuffle_id, id.reduce_part, id.map_part), (sid, 0, 0));
+        assert_eq!(*records, 2);
+        let decoded: Vec<(u32, String)> = decode_records(payload).unwrap();
+        assert_eq!(decoded, recs);
+        // The adapter exposes the same data through the trait.
+        let fetcher = LocalBlockFetcher::new(Arc::clone(&m));
+        let via_trait = fetcher.fetch_blocks(sid, 0).unwrap();
+        assert_eq!(via_trait, wire);
+        assert!(fetcher
+            .fetch_blocks(sid + 100, 0)
+            .unwrap_err()
+            .contains("before its map stage"));
     }
 
     #[test]

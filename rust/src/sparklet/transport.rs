@@ -1,0 +1,651 @@
+//! Wire protocol for the multi-process executor backend.
+//!
+//! Everything that crosses the driver↔worker boundary is one
+//! length-prefixed frame: a `u32` little-endian payload length followed
+//! by a [`Message`] encoded with the same zero-dependency [`SerDe`]
+//! codec the shuffle data plane uses. Tasks are not closures on the
+//! wire — they are [`TaskDescriptor`]s (stage identity + a
+//! [`TaskRegistry`] key + an opaque serialized partition spec), so a
+//! worker process that never saw the driver's heap can still execute
+//! them. Shuffle input is pulled on demand: a reduce task running on a
+//! worker sends `FetchBlock` and the driver answers with the serialized
+//! blocks from its `BlockStore` (`BlockData`).
+//!
+//! Decoding never panics: truncated frames, unknown message tags,
+//! oversized lengths, and codec failures all surface as typed
+//! [`TransportError`]s — a malformed peer costs a connection, not the
+//! driver process.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::io::{Read, Write};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::block::BlockId;
+use super::serde::{Reader, SerDe, SerDeError};
+
+/// Upper bound on one frame's payload. Shuffle blocks are the largest
+/// thing shipped; anything past this is a corrupt length prefix, not a
+/// real message, so it is rejected before allocating.
+pub const MAX_FRAME_BYTES: usize = 256 * 1024 * 1024;
+
+/// Typed transport failures. `Closed` is the *orderly* end of a
+/// connection (EOF between frames) — the driver maps it to worker loss.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportError {
+    /// The peer hung up cleanly between frames.
+    Closed,
+    /// Socket-level read/write failure (includes mid-frame truncation).
+    Io(String),
+    /// The payload did not decode as the declared message.
+    Codec(SerDeError),
+    /// A frame carried a message tag this build does not know.
+    UnknownTag(u8),
+    /// The length prefix exceeds [`MAX_FRAME_BYTES`].
+    Oversize { len: usize, max: usize },
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Closed => write!(f, "connection closed"),
+            Self::Io(e) => write!(f, "transport io error: {e}"),
+            Self::Codec(e) => write!(f, "transport codec error: {e}"),
+            Self::UnknownTag(t) => write!(f, "unknown message tag {t}"),
+            Self::Oversize { len, max } => {
+                write!(f, "frame of {len} bytes exceeds the {max}-byte limit")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+impl From<SerDeError> for TransportError {
+    fn from(e: SerDeError) -> Self {
+        Self::Codec(e)
+    }
+}
+
+/// A serialized task: enough identity for events/retry bookkeeping
+/// (`job_id`/`stage_tag`/`part`/`attempt`), the [`TaskRegistry`] key
+/// naming the code to run, and an opaque payload the registered
+/// function decodes itself (e.g. `{shuffle_id, reduce_part, min_sup}`
+/// for the FIM Bottom-Up tasks).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaskDescriptor {
+    pub job_id: u64,
+    pub stage_tag: u64,
+    pub part: usize,
+    pub attempt: usize,
+    pub key: String,
+    pub payload: Vec<u8>,
+}
+
+impl SerDe for TaskDescriptor {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.job_id.encode(out);
+        self.stage_tag.encode(out);
+        self.part.encode(out);
+        self.attempt.encode(out);
+        self.key.encode(out);
+        self.payload.encode(out);
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<Self, SerDeError> {
+        Ok(Self {
+            job_id: u64::decode(r)?,
+            stage_tag: u64::decode(r)?,
+            part: usize::decode(r)?,
+            attempt: usize::decode(r)?,
+            key: String::decode(r)?,
+            payload: Vec::decode(r)?,
+        })
+    }
+}
+
+/// One serialized shuffle block on the wire: identity, payload bytes
+/// (`encode_records` framing, verbatim from the driver's store), and
+/// the record count for integrity checks on the worker side.
+pub type WireBlock = (BlockId, Vec<u8>, usize);
+
+/// The protocol. Tag bytes are part of the wire format — append new
+/// variants, never renumber.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Worker → driver, first frame after connecting.
+    RegisterWorker { worker: String, pid: u32 },
+    /// Driver → worker: run one described task.
+    LaunchTask { task: TaskDescriptor },
+    /// Worker → driver: the outcome of a launched task.
+    TaskResult {
+        job_id: u64,
+        stage_tag: u64,
+        part: usize,
+        attempt: usize,
+        result: Result<Vec<u8>, String>,
+        run_ms: f64,
+    },
+    /// Worker → driver: request every map-output block of one reduce
+    /// partition.
+    FetchBlock { shuffle_id: usize, reduce_part: usize },
+    /// Driver → worker: answer to `FetchBlock`. An `Err` is a
+    /// fetch failure (incomplete map stage, unknown shuffle) the task
+    /// surfaces as its own failure.
+    BlockData {
+        shuffle_id: usize,
+        reduce_part: usize,
+        result: Result<Vec<WireBlock>, String>,
+    },
+    /// Worker → driver liveness beacon.
+    Heartbeat { worker: String, seq: u64 },
+    /// Driver-side notification that a worker died (also synthesized
+    /// internally on EOF/timeout; on the wire it tells surviving
+    /// workers nothing today but keeps the protocol symmetric).
+    WorkerLost { worker: String, reason: String },
+    /// Driver → worker: exit the worker loop cleanly.
+    Shutdown,
+}
+
+const TAG_REGISTER: u8 = 1;
+const TAG_LAUNCH: u8 = 2;
+const TAG_RESULT: u8 = 3;
+const TAG_FETCH: u8 = 4;
+const TAG_BLOCKDATA: u8 = 5;
+const TAG_HEARTBEAT: u8 = 6;
+const TAG_WORKERLOST: u8 = 7;
+const TAG_SHUTDOWN: u8 = 8;
+
+impl Message {
+    /// Encode into a frame payload (tag byte + body).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Self::RegisterWorker { worker, pid } => {
+                out.push(TAG_REGISTER);
+                worker.encode(&mut out);
+                pid.encode(&mut out);
+            }
+            Self::LaunchTask { task } => {
+                out.push(TAG_LAUNCH);
+                task.encode(&mut out);
+            }
+            Self::TaskResult {
+                job_id,
+                stage_tag,
+                part,
+                attempt,
+                result,
+                run_ms,
+            } => {
+                out.push(TAG_RESULT);
+                job_id.encode(&mut out);
+                stage_tag.encode(&mut out);
+                part.encode(&mut out);
+                attempt.encode(&mut out);
+                result.encode(&mut out);
+                run_ms.encode(&mut out);
+            }
+            Self::FetchBlock {
+                shuffle_id,
+                reduce_part,
+            } => {
+                out.push(TAG_FETCH);
+                shuffle_id.encode(&mut out);
+                reduce_part.encode(&mut out);
+            }
+            Self::BlockData {
+                shuffle_id,
+                reduce_part,
+                result,
+            } => {
+                out.push(TAG_BLOCKDATA);
+                shuffle_id.encode(&mut out);
+                reduce_part.encode(&mut out);
+                result.encode(&mut out);
+            }
+            Self::Heartbeat { worker, seq } => {
+                out.push(TAG_HEARTBEAT);
+                worker.encode(&mut out);
+                seq.encode(&mut out);
+            }
+            Self::WorkerLost { worker, reason } => {
+                out.push(TAG_WORKERLOST);
+                worker.encode(&mut out);
+                reason.encode(&mut out);
+            }
+            Self::Shutdown => out.push(TAG_SHUTDOWN),
+        }
+        out
+    }
+
+    /// Decode a frame payload, rejecting trailing bytes and unknown
+    /// tags with typed errors.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, TransportError> {
+        let mut r = Reader::new(bytes);
+        let tag = u8::decode(&mut r)?;
+        let msg = match tag {
+            TAG_REGISTER => Self::RegisterWorker {
+                worker: String::decode(&mut r)?,
+                pid: u32::decode(&mut r)?,
+            },
+            TAG_LAUNCH => Self::LaunchTask {
+                task: TaskDescriptor::decode(&mut r)?,
+            },
+            TAG_RESULT => Self::TaskResult {
+                job_id: u64::decode(&mut r)?,
+                stage_tag: u64::decode(&mut r)?,
+                part: usize::decode(&mut r)?,
+                attempt: usize::decode(&mut r)?,
+                result: Result::decode(&mut r)?,
+                run_ms: f64::decode(&mut r)?,
+            },
+            TAG_FETCH => Self::FetchBlock {
+                shuffle_id: usize::decode(&mut r)?,
+                reduce_part: usize::decode(&mut r)?,
+            },
+            TAG_BLOCKDATA => Self::BlockData {
+                shuffle_id: usize::decode(&mut r)?,
+                reduce_part: usize::decode(&mut r)?,
+                result: Result::decode(&mut r)?,
+            },
+            TAG_HEARTBEAT => Self::Heartbeat {
+                worker: String::decode(&mut r)?,
+                seq: u64::decode(&mut r)?,
+            },
+            TAG_WORKERLOST => Self::WorkerLost {
+                worker: String::decode(&mut r)?,
+                reason: String::decode(&mut r)?,
+            },
+            TAG_SHUTDOWN => Self::Shutdown,
+            other => return Err(TransportError::UnknownTag(other)),
+        };
+        if r.remaining() != 0 {
+            return Err(TransportError::Codec(SerDeError::Trailing {
+                remaining: r.remaining(),
+            }));
+        }
+        Ok(msg)
+    }
+}
+
+/// Write one `u32`-length-prefixed frame and flush it.
+pub fn write_frame(w: &mut impl Write, msg: &Message) -> Result<(), TransportError> {
+    let payload = msg.to_bytes();
+    if payload.len() > MAX_FRAME_BYTES {
+        return Err(TransportError::Oversize {
+            len: payload.len(),
+            max: MAX_FRAME_BYTES,
+        });
+    }
+    let len = payload.len() as u32;
+    let io = |e: std::io::Error| TransportError::Io(e.to_string());
+    w.write_all(&len.to_le_bytes()).map_err(io)?;
+    w.write_all(&payload).map_err(io)?;
+    w.flush().map_err(io)?;
+    Ok(())
+}
+
+/// Read one frame. EOF *before* the length prefix is an orderly
+/// [`TransportError::Closed`]; EOF mid-frame is truncation ([`Io`]).
+///
+/// [`Io`]: TransportError::Io
+pub fn read_frame(r: &mut impl Read) -> Result<Message, TransportError> {
+    let mut len_buf = [0u8; 4];
+    let mut filled = 0usize;
+    while filled < 4 {
+        match r.read(&mut len_buf[filled..]) {
+            Ok(0) if filled == 0 => return Err(TransportError::Closed),
+            Ok(0) => {
+                return Err(TransportError::Io(format!(
+                    "eof inside frame length prefix ({filled}/4 bytes)"
+                )))
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(TransportError::Io(e.to_string())),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(TransportError::Oversize {
+            len,
+            max: MAX_FRAME_BYTES,
+        });
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .map_err(|e| TransportError::Io(format!("eof inside {len}-byte frame payload: {e}")))?;
+    Message::from_bytes(&payload)
+}
+
+// ----------------------------------------------------------- task registry
+
+/// Where a described task gets its shuffle input from. On the driver
+/// this is the local `ShuffleManager`; on a worker it is the socket
+/// (`FetchBlock`/`BlockData` round trip).
+pub trait BlockFetcher {
+    fn fetch_blocks(
+        &self,
+        shuffle_id: usize,
+        reduce_part: usize,
+    ) -> Result<Vec<WireBlock>, String>;
+}
+
+/// Execution environment handed to a registered task function.
+pub struct TaskEnv<'a> {
+    fetcher: &'a dyn BlockFetcher,
+}
+
+impl<'a> TaskEnv<'a> {
+    pub fn new(fetcher: &'a dyn BlockFetcher) -> Self {
+        Self { fetcher }
+    }
+
+    /// All map-output blocks of one reduce partition.
+    pub fn fetch_blocks(
+        &self,
+        shuffle_id: usize,
+        reduce_part: usize,
+    ) -> Result<Vec<WireBlock>, String> {
+        self.fetcher.fetch_blocks(shuffle_id, reduce_part)
+    }
+}
+
+/// A registered task implementation: decode the payload, do the work,
+/// encode the result. Errors are strings — they cross the process
+/// boundary and feed the scheduler's retry accounting.
+pub type RegisteredTaskFn =
+    Arc<dyn Fn(&TaskEnv<'_>, &[u8]) -> Result<Vec<u8>, String> + Send + Sync>;
+
+static TASKS: OnceLock<Mutex<HashMap<String, RegisteredTaskFn>>> = OnceLock::new();
+
+fn tasks() -> &'static Mutex<HashMap<String, RegisteredTaskFn>> {
+    TASKS.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Process-global registry mapping descriptor keys to code. Both the
+/// driver (local fallback, tests) and every worker process must
+/// register the same keys at startup — the key string is the only
+/// thing that crosses the wire.
+pub struct TaskRegistry;
+
+impl TaskRegistry {
+    /// Register (or overwrite — registration is idempotent) a task
+    /// implementation under `key`.
+    pub fn register(
+        key: &str,
+        f: impl Fn(&TaskEnv<'_>, &[u8]) -> Result<Vec<u8>, String> + Send + Sync + 'static,
+    ) {
+        tasks().lock().unwrap().insert(key.to_string(), Arc::new(f));
+    }
+
+    pub fn get(key: &str) -> Option<RegisteredTaskFn> {
+        tasks().lock().unwrap().get(key).cloned()
+    }
+
+    pub fn keys() -> Vec<String> {
+        let mut keys: Vec<String> = tasks().lock().unwrap().keys().cloned().collect();
+        keys.sort();
+        keys
+    }
+
+    /// Execute a descriptor against `env`. An unregistered key is a
+    /// task failure (typed string), not a panic — the scheduler decides
+    /// whether to retry.
+    pub fn run(desc: &TaskDescriptor, env: &TaskEnv<'_>) -> Result<Vec<u8>, String> {
+        match Self::get(&desc.key) {
+            Some(f) => f(env, &desc.payload),
+            None => Err(format!(
+                "no task registered under key '{}' (registered: {})",
+                desc.key,
+                Self::keys().join(", ")
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_descriptor() -> TaskDescriptor {
+        TaskDescriptor {
+            job_id: 7,
+            stage_tag: 0xA11C_0042,
+            part: 3,
+            attempt: 1,
+            key: "fim.bottomup.vec".to_string(),
+            payload: vec![1, 2, 3, 4],
+        }
+    }
+
+    fn all_messages() -> Vec<Message> {
+        vec![
+            Message::RegisterWorker {
+                worker: "w0".into(),
+                pid: 4242,
+            },
+            Message::LaunchTask {
+                task: sample_descriptor(),
+            },
+            Message::TaskResult {
+                job_id: 7,
+                stage_tag: 0xA11C_0042,
+                part: 3,
+                attempt: 1,
+                result: Ok(vec![9, 9]),
+                run_ms: 1.25,
+            },
+            Message::TaskResult {
+                job_id: 7,
+                stage_tag: 1,
+                part: 0,
+                attempt: 2,
+                result: Err("worker exploded".into()),
+                run_ms: 0.0,
+            },
+            Message::FetchBlock {
+                shuffle_id: 5,
+                reduce_part: 2,
+            },
+            Message::BlockData {
+                shuffle_id: 5,
+                reduce_part: 2,
+                result: Ok(vec![(
+                    BlockId {
+                        shuffle_id: 5,
+                        reduce_part: 2,
+                        map_part: 0,
+                    },
+                    vec![0xAB; 16],
+                    3,
+                )]),
+            },
+            Message::BlockData {
+                shuffle_id: 5,
+                reduce_part: 9,
+                result: Err("map stage incomplete".into()),
+            },
+            Message::Heartbeat {
+                worker: "w1".into(),
+                seq: 99,
+            },
+            Message::WorkerLost {
+                worker: "w1".into(),
+                reason: "heartbeat timeout".into(),
+            },
+            Message::Shutdown,
+        ]
+    }
+
+    #[test]
+    fn every_message_roundtrips_through_a_frame() {
+        for msg in all_messages() {
+            let mut wire = Vec::new();
+            write_frame(&mut wire, &msg).unwrap();
+            let back = read_frame(&mut wire.as_slice()).unwrap();
+            assert_eq!(back, msg);
+        }
+    }
+
+    #[test]
+    fn frames_concatenate_on_one_stream() {
+        let msgs = all_messages();
+        let mut wire = Vec::new();
+        for m in &msgs {
+            write_frame(&mut wire, m).unwrap();
+        }
+        let mut cursor = wire.as_slice();
+        for want in &msgs {
+            assert_eq!(&read_frame(&mut cursor).unwrap(), want);
+        }
+        assert_eq!(read_frame(&mut cursor), Err(TransportError::Closed));
+    }
+
+    #[test]
+    fn truncated_frames_are_typed_errors_never_panics() {
+        let mut wire = Vec::new();
+        write_frame(
+            &mut wire,
+            &Message::LaunchTask {
+                task: sample_descriptor(),
+            },
+        )
+        .unwrap();
+        // every possible truncation point
+        for cut in 0..wire.len() {
+            let err = read_frame(&mut &wire[..cut]).unwrap_err();
+            match cut {
+                0 => assert_eq!(err, TransportError::Closed, "cut {cut}"),
+                _ => assert!(
+                    matches!(err, TransportError::Io(_)),
+                    "cut {cut}: {err:?}"
+                ),
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_tag_and_oversize_are_typed() {
+        // unknown tag inside a well-formed frame
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&1u32.to_le_bytes());
+        wire.push(200);
+        assert_eq!(
+            read_frame(&mut wire.as_slice()),
+            Err(TransportError::UnknownTag(200))
+        );
+        // empty payload: no tag byte at all
+        let empty = 0u32.to_le_bytes();
+        assert!(matches!(
+            read_frame(&mut empty.as_slice()),
+            Err(TransportError::Codec(SerDeError::Eof { .. }))
+        ));
+        // corrupt length prefix past the cap
+        let huge = (u32::MAX).to_le_bytes();
+        assert!(matches!(
+            read_frame(&mut huge.as_slice()),
+            Err(TransportError::Oversize { .. })
+        ));
+        // trailing garbage after a valid message
+        let mut payload = Message::Shutdown.to_bytes();
+        payload.push(0xFF);
+        let mut framed = Vec::new();
+        framed.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        framed.extend_from_slice(&payload);
+        assert!(matches!(
+            read_frame(&mut framed.as_slice()),
+            Err(TransportError::Codec(SerDeError::Trailing { remaining: 1 }))
+        ));
+        // corrupt body (bad result tag inside TaskResult)
+        let mut body = Message::TaskResult {
+            job_id: 1,
+            stage_tag: 2,
+            part: 0,
+            attempt: 0,
+            result: Ok(vec![]),
+            run_ms: 0.0,
+        }
+        .to_bytes();
+        body[1 + 8 + 8 + 8 + 8] = 7; // result tag byte
+        let mut framed = Vec::new();
+        framed.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        framed.extend_from_slice(&body);
+        assert!(matches!(
+            read_frame(&mut framed.as_slice()),
+            Err(TransportError::Codec(SerDeError::Invalid { .. }))
+        ));
+    }
+
+    struct MapFetcher(HashMap<(usize, usize), Vec<WireBlock>>);
+    impl BlockFetcher for MapFetcher {
+        fn fetch_blocks(
+            &self,
+            shuffle_id: usize,
+            reduce_part: usize,
+        ) -> Result<Vec<WireBlock>, String> {
+            self.0
+                .get(&(shuffle_id, reduce_part))
+                .cloned()
+                .ok_or_else(|| format!("no blocks for shuffle {shuffle_id}.{reduce_part}"))
+        }
+    }
+
+    #[test]
+    fn registry_runs_registered_keys_and_rejects_unknown() {
+        TaskRegistry::register("test.echo", |_env, payload| Ok(payload.to_vec()));
+        TaskRegistry::register("test.fetch-count", |env, payload| {
+            let (shuffle_id, reduce_part) =
+                <(usize, usize)>::from_bytes(payload).map_err(|e| e.to_string())?;
+            let blocks = env.fetch_blocks(shuffle_id, reduce_part)?;
+            Ok((blocks.len() as u64).to_bytes())
+        });
+        assert!(TaskRegistry::keys().contains(&"test.echo".to_string()));
+
+        let mut blocks = HashMap::new();
+        blocks.insert(
+            (4usize, 0usize),
+            vec![
+                (
+                    BlockId {
+                        shuffle_id: 4,
+                        reduce_part: 0,
+                        map_part: 0,
+                    },
+                    vec![1],
+                    1,
+                ),
+                (
+                    BlockId {
+                        shuffle_id: 4,
+                        reduce_part: 0,
+                        map_part: 1,
+                    },
+                    vec![2],
+                    1,
+                ),
+            ],
+        );
+        let fetcher = MapFetcher(blocks);
+        let env = TaskEnv::new(&fetcher);
+
+        let mut desc = sample_descriptor();
+        desc.key = "test.echo".into();
+        assert_eq!(TaskRegistry::run(&desc, &env), Ok(vec![1, 2, 3, 4]));
+
+        desc.key = "test.fetch-count".into();
+        desc.payload = (4usize, 0usize).to_bytes();
+        let out = TaskRegistry::run(&desc, &env).unwrap();
+        assert_eq!(u64::from_bytes(&out), Ok(2));
+
+        // fetch failure propagates as a task error
+        desc.payload = (9usize, 9usize).to_bytes();
+        assert!(TaskRegistry::run(&desc, &env).unwrap_err().contains("no blocks"));
+
+        // unknown key: typed error listing what IS registered
+        desc.key = "test.nope".into();
+        let err = TaskRegistry::run(&desc, &env).unwrap_err();
+        assert!(err.contains("test.nope") && err.contains("test.echo"), "{err}");
+    }
+
+}

@@ -23,6 +23,10 @@ pub struct TaskSpan {
     pub ok: bool,
     /// Pure run time reported by TaskEnd (excludes queue wait), ms.
     pub run_ms: f64,
+    /// Worker process id (`"w0"`, ...) for tasks dispatched by the
+    /// multi-process executor; empty for in-process execution, which
+    /// renders as the `driver` lane.
+    pub worker: String,
 }
 
 /// One stage's reconstructed view: span, tasks, and the summary fields
@@ -108,6 +112,11 @@ pub struct Replay {
     pub stream_batches: usize,
     pub bp_transitions: usize,
     pub kernel_snapshots: usize,
+    /// Worker ids from WorkerRegistered events, in registration order.
+    pub workers: Vec<String>,
+    pub workers_lost: usize,
+    /// FetchBlock requests the driver served to remote workers.
+    pub remote_fetches: usize,
     /// Events with an unrecognized `type` (skipped, forward-compat).
     pub unknown_events: usize,
     /// Lines that failed to parse, as `(line_number, error)`.
@@ -203,7 +212,9 @@ pub fn replay(log: &str) -> Result<Replay, String> {
                 rp.task_starts += 1;
                 let i = stage_entry(&mut rp);
                 let key = (num(&obj, "task") as usize, num(&obj, "attempt") as usize);
-                rp.stages[i].tasks.entry(key).or_default().start = Some(t_ms);
+                let span = rp.stages[i].tasks.entry(key).or_default();
+                span.start = Some(t_ms);
+                span.worker = text(&obj, "worker");
             }
             "TaskEnd" => {
                 rp.task_ends += 1;
@@ -213,6 +224,10 @@ pub fn replay(log: &str) -> Result<Replay, String> {
                 span.end = Some(t_ms);
                 span.ok = matches!(obj.get("ok"), Some(JsonValue::Bool(true)));
                 span.run_ms = num(&obj, "run_ms");
+                let worker = text(&obj, "worker");
+                if !worker.is_empty() {
+                    span.worker = worker;
+                }
             }
             "ShuffleBlockSpilled" => {
                 rp.spills += 1;
@@ -260,6 +275,21 @@ pub fn replay(log: &str) -> Result<Replay, String> {
                     ),
                 ));
             }
+            "WorkerRegistered" => {
+                rp.workers.push(text(&obj, "worker"));
+            }
+            "WorkerLost" => {
+                rp.workers_lost += 1;
+                annotations.push((
+                    t_ms,
+                    format!(
+                        "worker {} lost: {}",
+                        text(&obj, "worker"),
+                        text(&obj, "reason"),
+                    ),
+                ));
+            }
+            "RemoteFetch" => rp.remote_fetches += 1,
             "KernelSnapshot" => {
                 rp.kernel_snapshots += 1;
                 annotations.push((
@@ -357,6 +387,15 @@ pub fn render(rp: &Replay, width: usize) -> String {
         rp.stream_batches,
         rp.bp_transitions,
     ));
+    if !rp.workers.is_empty() || rp.workers_lost > 0 {
+        out.push_str(&format!(
+            "workers: {} registered ({}), {} lost, {} remote fetches\n",
+            rp.workers.len(),
+            rp.workers.join(", "),
+            rp.workers_lost,
+            rp.remote_fetches,
+        ));
+    }
     if !rp.bad_lines.is_empty() {
         let (n, e) = &rp.bad_lines[0];
         out.push_str(&format!(
@@ -371,6 +410,14 @@ pub fn render(rp: &Replay, width: usize) -> String {
         ));
     }
     out
+}
+
+fn lane_of(span: &TaskSpan) -> &str {
+    if span.worker.is_empty() {
+        "driver"
+    } else {
+        &span.worker
+    }
 }
 
 fn render_stage(out: &mut String, s: &StageView, width: usize) {
@@ -399,28 +446,44 @@ fn render_stage(out: &mut String, s: &StageView, width: usize) {
         _ => (0.0, 1e-6),
     };
     let scale = width as f64 / (t1 - t0);
-    for (&(task, attempt), span) in &s.tasks {
-        let (Some(start), Some(end)) = (span.start, span.end) else {
+    // Group task bars into per-worker lanes when the log carries worker
+    // ids (multi-process runs); in-process runs render as one flat lane.
+    let mut lanes: Vec<&str> = Vec::new();
+    for span in s.tasks.values() {
+        let lane = lane_of(span);
+        if !lanes.contains(&lane) {
+            lanes.push(lane);
+        }
+    }
+    let show_lanes = lanes.iter().any(|l| *l != "driver");
+    let pad = if show_lanes { "    " } else { "  " };
+    for lane in &lanes {
+        if show_lanes {
+            out.push_str(&format!("  lane {lane}:\n"));
+        }
+        for (&(task, attempt), span) in s.tasks.iter().filter(|&(_, sp)| lane_of(sp) == *lane) {
+            let (Some(start), Some(end)) = (span.start, span.end) else {
+                out.push_str(&format!(
+                    "{pad}t{task}.{attempt} {:width$} (incomplete span)\n",
+                    "",
+                    width = width
+                ));
+                continue;
+            };
+            let off = (((start - t0) * scale) as usize).min(width.saturating_sub(1));
+            let len = (((end - start) * scale).ceil() as usize)
+                .max(1)
+                .min(width - off);
+            let mut bar = String::new();
+            bar.push_str(&"·".repeat(off));
+            bar.push_str(&"█".repeat(len));
+            bar.push_str(&"·".repeat(width - off - len));
+            let flag = if span.ok { ' ' } else { '!' };
             out.push_str(&format!(
-                "  t{task}.{attempt} {:width$} (incomplete span)\n",
-                "",
-                width = width
+                "{pad}t{task}.{attempt}{flag}|{bar}| {:.3} ms\n",
+                span.run_ms.max(end - start)
             ));
-            continue;
-        };
-        let off = (((start - t0) * scale) as usize).min(width.saturating_sub(1));
-        let len = (((end - start) * scale).ceil() as usize)
-            .max(1)
-            .min(width - off);
-        let mut bar = String::new();
-        bar.push_str(&"·".repeat(off));
-        bar.push_str(&"█".repeat(len));
-        bar.push_str(&"·".repeat(width - off - len));
-        let flag = if span.ok { ' ' } else { '!' };
-        out.push_str(&format!(
-            "  t{task}.{attempt}{flag}|{bar}| {:.3} ms\n",
-            span.run_ms.max(end - start)
-        ));
+        }
     }
 
     let durs = s.durations();
@@ -520,6 +583,7 @@ mod tests {
                     stage_tag: 0xA11C_0001,
                     task,
                     attempt: 0,
+                    worker: None,
                 },
                 &mut lines,
             );
@@ -531,6 +595,7 @@ mod tests {
                     attempt: 0,
                     ok: true,
                     run_ms: 1.0 + task as f64 * 4.0,
+                    worker: None,
                 },
                 &mut lines,
             );
@@ -623,6 +688,7 @@ mod tests {
                     stage_tag: 7,
                     task,
                     attempt: 0,
+                    worker: None,
                 }
                 .to_json_line(1.0),
             );
@@ -635,6 +701,7 @@ mod tests {
                     attempt: 0,
                     ok: true,
                     run_ms,
+                    worker: None,
                 }
                 .to_json_line(1.0 + run_ms),
             );
@@ -644,6 +711,77 @@ mod tests {
         let text = render(&rp, 40);
         assert!(text.contains("stragglers: t3"), "{text}");
         assert!(text.contains("skew 10.0x"), "{text}");
+    }
+
+    #[test]
+    fn worker_tagged_tasks_render_in_per_worker_lanes() {
+        // Two workers, two tasks each, plus one lost worker: lanes must
+        // group bars by worker id and the footer must summarize the fleet.
+        let mut log = String::new();
+        log.push_str(&SparkletEvent::JobStart { job_id: 0 }.to_json_line(0.0));
+        log.push('\n');
+        for (w, pid) in [("w0", 100u32), ("w1", 101)] {
+            log.push_str(
+                &SparkletEvent::WorkerRegistered {
+                    worker: w.into(),
+                    pid,
+                }
+                .to_json_line(0.5),
+            );
+            log.push('\n');
+        }
+        for task in 0..4usize {
+            let worker = if task % 2 == 0 { "w0" } else { "w1" };
+            log.push_str(
+                &SparkletEvent::TaskStart {
+                    job_id: 0,
+                    stage_tag: 9,
+                    task,
+                    attempt: 0,
+                    worker: Some(worker.into()),
+                }
+                .to_json_line(1.0 + task as f64),
+            );
+            log.push('\n');
+            log.push_str(
+                &SparkletEvent::TaskEnd {
+                    job_id: 0,
+                    stage_tag: 9,
+                    task,
+                    attempt: 0,
+                    ok: true,
+                    run_ms: 2.0,
+                    worker: Some(worker.into()),
+                }
+                .to_json_line(3.0 + task as f64),
+            );
+            log.push('\n');
+        }
+        log.push_str(
+            &SparkletEvent::WorkerLost {
+                worker: "w1".into(),
+                reason: "connection closed".into(),
+            }
+            .to_json_line(6.5),
+        );
+        log.push('\n');
+
+        let rp = replay(&log).unwrap();
+        assert_eq!(rp.workers, vec!["w0".to_string(), "w1".to_string()]);
+        assert_eq!(rp.workers_lost, 1);
+        let text = render(&rp, 40);
+        assert!(text.contains("lane w0:"), "{text}");
+        assert!(text.contains("lane w1:"), "{text}");
+        assert!(
+            text.contains("workers: 2 registered (w0, w1), 1 lost"),
+            "{text}"
+        );
+        assert!(text.contains("worker w1 lost: connection closed"), "{text}");
+
+        // A driver-only log keeps the flat layout: no lane headers.
+        let flat = render(&replay(&synthetic_log()).unwrap(), 40);
+        assert!(!flat.contains("lane "), "{flat}");
+        assert!(!flat.contains("workers:"), "{flat}");
     }
 
     #[test]

@@ -1,0 +1,156 @@
+//! End-to-end tests for the multi-process executor: real worker
+//! processes (the `repro` binary's hidden `worker` subcommand) connected
+//! over unix sockets, remote dispatch of described bottom-up mining
+//! tasks, driver-served shuffle block fetches, and lineage re-execution
+//! when a worker is killed mid-stage.
+//!
+//! The worker binary comes from `CARGO_BIN_EXE_repro` — never
+//! `current_exe()`, which under `cargo test` is the libtest harness and
+//! would fork-bomb the test run.
+
+use std::sync::Arc;
+
+use rdd_eclat::data::Dataset;
+use rdd_eclat::fim::engine::MiningSession;
+use rdd_eclat::fim::sequential::eclat_sequential;
+use rdd_eclat::fim::types::{abs_min_sup, Transaction};
+use rdd_eclat::sparklet::events::{CollectingListener, SparkletEvent};
+use rdd_eclat::sparklet::{SparkletConf, SparkletContext};
+
+fn sample_db() -> (Vec<Transaction>, u32) {
+    let txns = Dataset::T10I4D100K.generate_scaled(42, 0.01); // ~1K txns
+    let min_sup = abs_min_sup(0.02, txns.len());
+    (txns, min_sup)
+}
+
+/// A conf wired to fork real worker processes from the repro binary.
+fn mp_conf(app: &str, workers: usize, event_log: Option<&str>) -> SparkletConf {
+    rdd_eclat::sparklet::remote::register_backend();
+    rdd_eclat::fim::distributed::register_tasks();
+    let mut conf = SparkletConf::new(app)
+        .with_workers(workers)
+        .unwrap()
+        .with_worker_binary(env!("CARGO_BIN_EXE_repro"))
+        .with_executor_backend("multi-process")
+        .unwrap();
+    if let Some(path) = event_log {
+        conf = conf.with_event_log(path);
+    }
+    conf
+}
+
+fn temp_log(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("sparklet-mp-{name}-{}.jsonl", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+#[test]
+fn multi_process_mining_matches_sequential_oracle() {
+    let (txns, min_sup) = sample_db();
+    let oracle = eclat_sequential(&txns, min_sup);
+    assert!(!oracle.is_empty());
+
+    // Sequential-backend run: the single-process reference.
+    let seq_sc = SparkletContext::new(
+        SparkletConf::new("mp-oracle")
+            .with_executor_backend("sequential")
+            .unwrap(),
+    );
+    let seq = MiningSession::new("eclat-v3")
+        .min_sup(min_sup)
+        .p(4)
+        .run_vec(&seq_sc, &txns)
+        .unwrap();
+    assert!(seq.result.same_as(&oracle));
+
+    // Multi-process run: 2 forked workers, bottom-up tasks dispatched
+    // over the socket, shuffle blocks fetched back from the driver.
+    let log = temp_log("mine");
+    let sc = SparkletContext::new(mp_conf("mp-e2e", 2, Some(&log)));
+    assert_eq!(sc.executor().name(), "multi-process");
+    assert!(sc.executor().supports_described());
+    let got = MiningSession::new("eclat-v3")
+        .min_sup(min_sup)
+        .p(4)
+        .run_vec(&sc, &txns)
+        .unwrap();
+    assert!(got.result.same_as(&oracle), "multi-process result diverged");
+    drop(sc); // flush + close the event log
+
+    let events = std::fs::read_to_string(&log).unwrap();
+    let registered = events
+        .lines()
+        .filter(|l| l.contains("\"type\": \"WorkerRegistered\""))
+        .count();
+    assert!(registered >= 2, "want >= 2 worker registrations:\n{events}");
+    assert!(
+        events.contains("Described/fim.bottomup"),
+        "described stage never ran:\n{events}"
+    );
+    assert!(
+        events.contains("\"type\": \"RemoteFetch\""),
+        "workers never fetched shuffle blocks from the driver:\n{events}"
+    );
+    // Task spans carry the worker id that ran them.
+    assert!(
+        events
+            .lines()
+            .any(|l| l.contains("\"type\": \"TaskEnd\"") && l.contains("\"worker\": \"w")),
+        "no task span tagged with a worker id:\n{events}"
+    );
+    std::fs::remove_file(&log).ok();
+}
+
+#[test]
+fn killed_worker_mid_stage_recovers_via_lineage() {
+    let (txns, min_sup) = sample_db();
+    let oracle = eclat_sequential(&txns, min_sup);
+
+    // w0 dies (process exit) instead of reporting its first task result;
+    // the dispatcher must surface WorkerLost, fail the in-flight task,
+    // and the scheduler re-runs it from lineage on the survivor.
+    let conf = mp_conf("mp-fault", 2, None).with_worker_fault("w0:1");
+    let sc = SparkletContext::new(conf);
+    let sink = CollectingListener::new();
+    sc.events().register(Arc::new(sink.clone()));
+
+    let got = MiningSession::new("eclat-v3")
+        .min_sup(min_sup)
+        .p(4)
+        .run_vec(&sc, &txns)
+        .unwrap();
+    assert!(got.result.same_as(&oracle), "post-kill result diverged");
+
+    let lost: Vec<String> = sink
+        .snapshot()
+        .into_iter()
+        .filter_map(|(_, ev)| match ev {
+            SparkletEvent::WorkerLost { worker, .. } => Some(worker),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(lost, vec!["w0".to_string()], "w0 should die exactly once");
+    assert!(
+        sc.metrics().total_retries() > 0,
+        "the killed worker's task should have retried"
+    );
+}
+
+#[test]
+fn closure_stages_still_run_on_the_multi_process_driver() {
+    // Non-described task sets (ordinary RDD closures) execute inline on
+    // the driver: the backend is a superset, not a replacement.
+    let sc = SparkletContext::new(mp_conf("mp-closures", 2, None));
+    let sum: u64 = sc
+        .parallelize((0..1_000u64).collect::<Vec<_>>(), 4)
+        .map(|x| x * 2)
+        .map_to_pair(|x| (x % 7, x))
+        .reduce_by_key(|a, b| a + b)
+        .values()
+        .collect()
+        .iter()
+        .sum();
+    assert_eq!(sum, (0..1_000u64).map(|x| x * 2).sum::<u64>());
+}
