@@ -165,6 +165,102 @@ EOF
 # replay the multi-process log: task bars must group into worker lanes
 cargo run --release --quiet -- timeline --log EVENTS_mp.jsonl | head -40
 
+echo "== serve smoke (long-lived server: cache, subsumption, shedding, shutdown)"
+# A background `serve` on one persistent context answers a miss, an
+# exact repeat, and a subsumed query (higher threshold, filtered from
+# cache); histograms must equal the sequential batch path at both
+# thresholds. A second server under a 1 MiB budget must reject an
+# oversized request with exit 3 (typed Overloaded). Both shut down
+# gracefully via `query --shutdown`, and the event logs must carry
+# balanced Request* spans with cache_hit labels.
+SERVE_SOCK="/tmp/sparklet-serve-$$.sock"
+REPRO_SCALE=0.02 cargo run --release --quiet -- \
+    serve --socket "$SERVE_SOCK" --executor fifo \
+    --event-log EVENTS_serve.jsonl > SERVE_out.txt 2>&1 &
+SERVE_PID=$!
+for _ in $(seq 1 100); do [ -S "$SERVE_SOCK" ] && break; sleep 0.1; done
+[ -S "$SERVE_SOCK" ] || { echo "serve never bound $SERVE_SOCK"; cat SERVE_out.txt; exit 1; }
+cargo run --release --quiet -- query --socket "$SERVE_SOCK" \
+    --dataset t10 --min-sup 0.02 > QUERY_miss.txt
+cargo run --release --quiet -- query --socket "$SERVE_SOCK" \
+    --dataset t10 --min-sup 0.02 > QUERY_exact.txt
+cargo run --release --quiet -- query --socket "$SERVE_SOCK" \
+    --dataset t10 --min-sup 0.05 > QUERY_subsumed.txt
+grep -q "cache: miss" QUERY_miss.txt
+grep -q "cache: exact" QUERY_exact.txt
+grep -q "cache: subsumed" QUERY_subsumed.txt
+# sequential-oracle histograms through the batch path, both thresholds
+REPRO_SCALE=0.02 cargo run --release --quiet -- \
+    mine --dataset t10 --min-sup 0.02 --engine sequential \
+    --executor sequential > MINE_low.txt
+REPRO_SCALE=0.02 cargo run --release --quiet -- \
+    mine --dataset t10 --min-sup 0.05 --engine sequential \
+    --executor sequential > MINE_high.txt
+python3 - <<'EOF'
+import re
+def hist(path):
+    return [l.strip() for l in open(path) if re.match(r"\s+L\d+: \d+", l)]
+miss, exact, sub = hist("QUERY_miss.txt"), hist("QUERY_exact.txt"), hist("QUERY_subsumed.txt")
+low, high = hist("MINE_low.txt"), hist("MINE_high.txt")
+assert miss and miss == exact == low, f"low-threshold histograms diverge:\n{miss}\n{exact}\n{low}"
+assert sub and sub == high, f"subsumed histogram != fresh mine at 0.05:\n{sub}\n{high}"
+print(f"serve histograms OK: {len(low)} lengths at 0.02, {len(high)} at 0.05")
+EOF
+cargo run --release --quiet -- query --socket "$SERVE_SOCK" --shutdown
+wait "$SERVE_PID"
+# rejection under a tiny memory budget: t40 at scale 0.3 estimates far
+# past 1 MiB, so admission must refuse it before mining (exit 3)
+SERVE_SOCK2="/tmp/sparklet-serve2-$$.sock"
+REPRO_SCALE=0.3 cargo run --release --quiet -- \
+    serve --socket "$SERVE_SOCK2" --memory-budget 1 \
+    --event-log EVENTS_serve2.jsonl > SERVE2_out.txt 2>&1 &
+SERVE2_PID=$!
+for _ in $(seq 1 100); do [ -S "$SERVE_SOCK2" ] && break; sleep 0.1; done
+[ -S "$SERVE_SOCK2" ] || { echo "serve never bound $SERVE_SOCK2"; cat SERVE2_out.txt; exit 1; }
+set +e
+cargo run --release --quiet -- query --socket "$SERVE_SOCK2" \
+    --dataset t40 --min-sup 0.1 > QUERY_rejected.txt 2>&1
+rc=$?
+set -e
+if [ "$rc" -ne 3 ]; then
+    echo "expected exit 3 (Overloaded) from the over-budget query, got $rc"
+    cat QUERY_rejected.txt
+    exit 1
+fi
+grep -q "overloaded" QUERY_rejected.txt
+cargo run --release --quiet -- query --socket "$SERVE_SOCK2" --shutdown
+wait "$SERVE2_PID"
+python3 - <<'EOF'
+import json
+def spans(path):
+    events = [json.loads(l) for l in open(path) if l.strip()]
+    reqs = {}
+    for e in events:
+        if not e["type"].startswith("Request"):
+            continue
+        reqs.setdefault(e["request"], []).append(e)
+    for rid, span in reqs.items():
+        types = [e["type"] for e in span]
+        assert types[0] == "RequestReceived", (rid, span)
+        assert types[-1] in ("RequestCompleted", "RequestRejected"), (rid, span)
+        assert types.count("RequestReceived") == 1, (rid, span)
+        if types[-1] == "RequestCompleted":
+            assert "RequestAdmitted" in types, (rid, span)
+    return reqs
+served = spans("EVENTS_serve.jsonl")
+hits = sorted(s[-1]["cache_hit"] for s in served.values()
+              if s[-1]["type"] == "RequestCompleted")
+assert hits == ["exact", "miss", "subsumed"], hits
+shed = spans("EVENTS_serve2.jsonl")
+reasons = [s[-1]["reason"] for s in shed.values()
+           if s[-1]["type"] == "RequestRejected"]
+assert "overloaded" in reasons, (reasons, shed)
+print(f"serve event spans OK: {len(served)} served ({hits}), "
+      f"{len(shed)} on the budgeted server, rejects {reasons}")
+EOF
+# offline replay tallies the request spans in the footer
+cargo run --release --quiet -- timeline --log EVENTS_serve.jsonl | grep "serving:"
+
 echo "== micro-bench smoke (diffset kernel)"
 # One-rep pass over the intersection + Bottom-Up micro-benches so
 # diffset-kernel regressions surface as wall-time deltas in the

@@ -15,15 +15,16 @@
 //! machine-addressed (socket path, worker id) and not part of the
 //! user-facing grammar, so it does not appear in help or suggestions.
 
-use std::collections::HashMap;
-
 use crate::util::text::closest;
 
 /// Parsed command line.
 #[derive(Debug, Clone)]
 pub struct Args {
     pub command: String,
-    flags: HashMap<String, String>,
+    /// `(name, value)` pairs in command-line order. A flag may repeat
+    /// (e.g. `--post closed --post top=5`): [`Args::get`] is last-wins,
+    /// [`Args::get_all`] returns every occurrence.
+    flags: Vec<(String, String)>,
     bools: Vec<String>,
 }
 
@@ -32,16 +33,16 @@ impl Args {
     pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self, String> {
         let mut it = args.into_iter().peekable();
         let command = it.next().unwrap_or_else(|| "help".to_string());
-        let mut flags = HashMap::new();
+        let mut flags = Vec::new();
         let mut bools = Vec::new();
         while let Some(arg) = it.next() {
             let Some(name) = arg.strip_prefix("--") else {
                 return Err(format!("unexpected positional argument: {arg}"));
             };
             if let Some((k, v)) = name.split_once('=') {
-                flags.insert(k.to_string(), v.to_string());
+                flags.push((k.to_string(), v.to_string()));
             } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
-                flags.insert(name.to_string(), it.next().unwrap());
+                flags.push((name.to_string(), it.next().unwrap()));
             } else {
                 bools.push(name.to_string());
             }
@@ -57,8 +58,22 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Last occurrence wins, matching the usual CLI override idiom.
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.flags.get(name).map(|s| s.as_str())
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Every occurrence of a repeatable flag, in command-line order.
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.flags
+            .iter()
+            .filter(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
@@ -84,12 +99,12 @@ impl Args {
         self.flag("help")
     }
 
-    /// Every flag name that appeared on the command line, in no
-    /// particular order.
+    /// Every flag name that appeared on the command line (repeats
+    /// included), in no particular order.
     pub fn flag_names(&self) -> Vec<&str> {
         self.flags
-            .keys()
-            .map(|s| s.as_str())
+            .iter()
+            .map(|(k, _)| k.as_str())
             .chain(self.bools.iter().map(|s| s.as_str()))
             .collect()
     }
@@ -220,6 +235,14 @@ mod tests {
         let a = parse("fig --id=3 --scale=0.5");
         assert_eq!(a.get_parse::<usize>("id").unwrap(), Some(3));
         assert_eq!(a.get_parse::<f64>("scale").unwrap(), Some(0.5));
+    }
+
+    #[test]
+    fn repeated_flags_collect_in_order_and_get_is_last_wins() {
+        let a = parse("query --post closed --post top=5 --min-sup 0.01 --min-sup 0.02");
+        assert_eq!(a.get_all("post"), vec!["closed", "top=5"]);
+        assert_eq!(a.get("min-sup"), Some("0.02"));
+        assert_eq!(a.get_all("missing"), Vec::<&str>::new());
     }
 
     #[test]

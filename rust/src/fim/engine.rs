@@ -605,11 +605,39 @@ pub enum PostStage {
 }
 
 impl PostStage {
-    fn apply(self, result: &MiningResult) -> MiningResult {
+    /// Apply this stage to a result. Public so callers that reuse cached
+    /// *full* results (serve mode) can run post-stages on the response
+    /// path without re-mining.
+    pub fn apply(self, result: &MiningResult) -> MiningResult {
         match self {
             Self::Closed => postprocess::closed_itemsets(result),
             Self::Maximal => postprocess::maximal_itemsets(result),
             Self::TopK(k) => postprocess::top_k(result, k),
+        }
+    }
+
+    /// Parse a CLI/wire spec: `closed`, `maximal`, or `top=K` (also
+    /// `top:K`). Shared by the `mine` flags and the serve protocol.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let spec = spec.trim();
+        match spec {
+            "closed" => Ok(Self::Closed),
+            "maximal" => Ok(Self::Maximal),
+            _ => {
+                let k = spec
+                    .strip_prefix("top=")
+                    .or_else(|| spec.strip_prefix("top:"))
+                    .ok_or_else(|| {
+                        format!("unknown post-stage {spec:?} (use closed|maximal|top=K)")
+                    })?;
+                let k: usize = k
+                    .parse()
+                    .map_err(|_| format!("top-k count {k:?} is not a number"))?;
+                if k == 0 {
+                    return Err("top-k count must be >= 1".into());
+                }
+                Ok(Self::TopK(k))
+            }
         }
     }
 }
@@ -1051,6 +1079,19 @@ mod tests {
             .unwrap()
             .result;
         assert!(top3.len() <= 3);
+    }
+
+    #[test]
+    fn post_stage_parse_accepts_cli_and_wire_specs() {
+        assert_eq!(PostStage::parse("closed"), Ok(PostStage::Closed));
+        assert_eq!(PostStage::parse(" maximal "), Ok(PostStage::Maximal));
+        assert_eq!(PostStage::parse("top=5"), Ok(PostStage::TopK(5)));
+        assert_eq!(PostStage::parse("top:12"), Ok(PostStage::TopK(12)));
+        assert!(PostStage::parse("open").unwrap_err().contains("unknown"));
+        assert!(PostStage::parse("top=zero")
+            .unwrap_err()
+            .contains("not a number"));
+        assert!(PostStage::parse("top=0").unwrap_err().contains(">= 1"));
     }
 
     #[test]

@@ -110,6 +110,21 @@ impl MiningResult {
     pub fn max_length(&self) -> usize {
         self.itemsets.iter().map(|f| f.len()).max().unwrap_or(0)
     }
+
+    /// Restrict to itemsets with support >= `min_sup`. By
+    /// anti-monotonicity this turns a result mined at threshold `s` into
+    /// the exact result for any `s' >= s` — the subsumption rule the
+    /// serve-mode cache exploits (and the property tests verify against
+    /// a fresh mine).
+    pub fn filter_min_sup(&self, min_sup: u32) -> MiningResult {
+        MiningResult::new(
+            self.itemsets
+                .iter()
+                .filter(|f| f.support >= min_sup)
+                .cloned()
+                .collect(),
+        )
+    }
 }
 
 /// Convert a relative minimum support (fraction of |D|) into an absolute
@@ -158,6 +173,22 @@ mod tests {
         ]);
         assert_eq!(r.histogram(), vec![2, 1]);
         assert_eq!(r.max_length(), 2);
+    }
+
+    #[test]
+    fn filter_min_sup_keeps_only_supported() {
+        let r = MiningResult::new(vec![
+            FrequentItemset::new(vec![1], 5),
+            FrequentItemset::new(vec![2], 3),
+            FrequentItemset::new(vec![1, 2], 3),
+            FrequentItemset::new(vec![3], 2),
+        ]);
+        let f = r.filter_min_sup(3);
+        assert_eq!(f.len(), 3);
+        assert!(f.itemsets.iter().all(|i| i.support >= 3));
+        // At the original threshold it's the identity.
+        assert!(r.filter_min_sup(1).same_as(&r));
+        assert!(r.filter_min_sup(100).is_empty());
     }
 
     #[test]

@@ -17,6 +17,9 @@
 //! * [`runtime`] — the XLA/PJRT bridge: loads HLO-text artifacts AOT
 //!   compiled from JAX+Pallas (`python/compile/`) and exposes batched
 //!   support-count primitives to the mining hot path.
+//! * [`serve`] — mining-as-a-service: a long-lived server over one
+//!   persistent context (unix-socket protocol, bounded admission with
+//!   per-tenant load shedding, subsuming result cache).
 //! * [`coordinator`] — experiment drivers that regenerate every table
 //!   and figure of the paper's evaluation section.
 //! * [`timeline`] — offline replay of a persisted event log
@@ -30,6 +33,7 @@ pub mod coordinator;
 pub mod data;
 pub mod fim;
 pub mod runtime;
+pub mod serve;
 pub mod sparklet;
 pub mod timeline;
 pub mod util;

@@ -12,6 +12,8 @@
 //!   stream --dataset D --min-sup F --window N --slide N
 //!                                  micro-batch sliding-window mining
 //!   timeline --log PATH            replay an --event-log JSONL into a text Gantt
+//!   serve --socket PATH            long-lived mining server over a unix socket
+//!   query --socket PATH ...        send one mining request to a running server
 //!   xla-smoke                      load + execute the AOT artifacts
 //!   all                            table1 + every figure (long)
 //!   help                           (or `<command> --help` for per-command flags)
@@ -37,7 +39,7 @@ use rdd_eclat::fim::engine::{
 };
 use rdd_eclat::fim::streaming::BackpressureStats;
 use rdd_eclat::fim::tidset::KernelStats;
-use rdd_eclat::fim::types::abs_min_sup;
+use rdd_eclat::fim::types::{abs_min_sup, MiningResult};
 use rdd_eclat::sparklet::metrics::StageKind;
 use rdd_eclat::sparklet::{ExecutorRegistry, SparkletConf, SparkletContext};
 
@@ -113,6 +115,8 @@ fn main() -> Result<()> {
         "rules" => run_rules(&args, &cfg)?,
         "stream" => run_stream(&args, &cfg)?,
         "timeline" => run_timeline(&args)?,
+        "serve" => run_serve(&args, &cfg)?,
+        "query" => run_query(&args)?,
         "xla-smoke" => xla_smoke()?,
         "all" => {
             println!("{}", experiments::table1(&cfg));
@@ -219,6 +223,20 @@ fn command_specs() -> Vec<CommandSpec> {
             "persist scheduler/task/shuffle events as JSONL (replay with `timeline`)",
         )
     };
+    let eventlog_max_flag = || {
+        FlagSpec::new(
+            "event-log-max-mb",
+            "MB",
+            "rotate the event log to PATH.1 past this size (default: unbounded)",
+        )
+    };
+    let socket_flag = || {
+        FlagSpec::new(
+            "socket",
+            "PATH",
+            "unix socket path (or SPARKLET_SERVE_SOCKET)",
+        )
+    };
     let mut mine_flags = vec![
         dataset_flag(),
         minsup_flag(),
@@ -226,6 +244,7 @@ fn command_specs() -> Vec<CommandSpec> {
         executor_flag(),
         membudget_flag(),
         eventlog_flag(),
+        eventlog_max_flag(),
     ];
     mine_flags.extend(session_axis_flags());
     mine_flags.extend(shared_flags());
@@ -243,6 +262,7 @@ fn command_specs() -> Vec<CommandSpec> {
         ),
         FlagSpec::new("out", "PATH", "machine-readable output (default BENCH_fim.json)"),
         eventlog_flag(),
+        eventlog_max_flag(),
     ];
     bench_flags.extend(shared_flags());
     let mut rules_flags = vec![
@@ -264,6 +284,7 @@ fn command_specs() -> Vec<CommandSpec> {
         executor_flag(),
         membudget_flag(),
         eventlog_flag(),
+        eventlog_max_flag(),
     ];
     stream_flags.extend(session_axis_flags());
     stream_flags.extend(shared_flags());
@@ -288,6 +309,44 @@ fn command_specs() -> Vec<CommandSpec> {
             "Gantt bar width in characters (default 40, clamped to 10..200)",
         ),
     ];
+    let mut serve_flags = vec![
+        socket_flag(),
+        FlagSpec::new(
+            "queue-depth",
+            "N",
+            "admission queue depth before Overloaded rejections (default 16)",
+        ),
+        FlagSpec::new(
+            "tenant-rate",
+            "F",
+            "per-tenant requests/second before Throttled (default 0 = off)",
+        ),
+        FlagSpec::new(
+            "cache-budget",
+            "MB",
+            "result-cache byte budget, LRU-evicted (default: unlimited)",
+        ),
+        executor_flag(),
+        membudget_flag(),
+        eventlog_flag(),
+        eventlog_max_flag(),
+    ];
+    serve_flags.extend(shared_flags());
+    let query_flags = vec![
+        socket_flag(),
+        dataset_flag(),
+        minsup_flag(),
+        engine_flag(),
+        FlagSpec::new(
+            "tidset",
+            "R",
+            "tidset representation (vec|bitmap|diffset|hybrid|auto)",
+        ),
+        FlagSpec::new("post", "S", "post-stage (closed|maximal|top=K); repeatable"),
+        FlagSpec::new("min-conf", "F", "also derive rules at this confidence (default: off)"),
+        FlagSpec::new("tenant", "ID", "tenant id for load shedding (default \"cli\")"),
+        FlagSpec::new("shutdown", "", "ask the server to shut down gracefully"),
+    ];
 
     vec![
         CommandSpec::new("table1", "dataset properties (Table 1)", shared_flags()),
@@ -299,6 +358,8 @@ fn command_specs() -> Vec<CommandSpec> {
         CommandSpec::new("generate", "write a generated dataset (FIMI format)", generate_flags),
         CommandSpec::new("stream", "micro-batch sliding-window mining", stream_flags),
         CommandSpec::new("timeline", "replay an --event-log JSONL into a text Gantt", timeline_flags),
+        CommandSpec::new("serve", "long-lived mining server over a unix socket", serve_flags),
+        CommandSpec::new("query", "send one mining request to a running server", query_flags),
         CommandSpec::new("xla-smoke", "verify the XLA/PJRT artifact path", Vec::new()),
         CommandSpec::new("all", "table1 + every figure (long)", shared_flags()),
         CommandSpec::new("help", "this overview", Vec::new()),
@@ -318,7 +379,8 @@ fn print_help(specs: &[CommandSpec]) {
     print!("{}", ExecutorRegistry::describe_all());
     println!(
         "\nENV: REPRO_SCALE REPRO_SEED REPRO_CORES REPRO_BENCH_REPS \
-         SPARKLET_CORES SPARKLET_BACKEND SPARKLET_SHUFFLE_PARTITIONS"
+         SPARKLET_CORES SPARKLET_BACKEND SPARKLET_SHUFFLE_PARTITIONS \
+         SPARKLET_SERVE_SOCKET"
     );
 }
 
@@ -437,6 +499,9 @@ fn conf_from_args(args: &Args, cfg: &ExperimentConfig) -> Result<SparkletConf> {
     if let Some(path) = args.get("event-log") {
         conf = conf.with_event_log(path);
     }
+    if let Some(mb) = parsed::<usize>(args, "event-log-max-mb")? {
+        conf = conf.with_event_log_max_mb(mb)?;
+    }
     Ok(conf)
 }
 
@@ -462,18 +527,8 @@ fn engine_from_args(args: &Args, default: &str) -> Result<String> {
 }
 
 fn parse_post(s: &str) -> Result<PostStage> {
-    let lower = s.to_lowercase();
-    if let Some(k) = lower.strip_prefix("top=").or_else(|| lower.strip_prefix("top:")) {
-        let k: usize = k
-            .parse()
-            .map_err(|_| anyhow::anyhow!("--post top=K: cannot parse {k:?}"))?;
-        return Ok(PostStage::TopK(k));
-    }
-    match lower.as_str() {
-        "closed" => Ok(PostStage::Closed),
-        "maximal" => Ok(PostStage::Maximal),
-        other => bail!("unknown post-stage {other:?} (closed|maximal|top=K)"),
-    }
+    // One grammar for the CLI and the serve wire protocol.
+    PostStage::parse(s).map_err(|e| anyhow::anyhow!("--post: {e}"))
 }
 
 /// Build a `MiningSession` from the axis flags shared by mine-like
@@ -496,7 +551,7 @@ fn session_from_args(args: &Args, cfg: &ExperimentConfig, default_engine: &str) 
     if let Some(g) = parsed::<usize>(args, "groups")? {
         session = session.n_groups(g);
     }
-    if let Some(post) = args.get("post") {
+    for post in args.get_all("post") {
         session = session.post(parse_post(post)?);
     }
     Ok(session)
@@ -1051,6 +1106,124 @@ fn run_timeline(args: &Args) -> Result<()> {
     let width: usize = parsed(args, "width")?.unwrap_or(rdd_eclat::timeline::DEFAULT_WIDTH);
     let rendered = rdd_eclat::timeline::render_file(path, width).map_err(anyhow::Error::msg)?;
     print!("{rendered}");
+    Ok(())
+}
+
+/// Long-lived mining server: one persistent context, a unix socket, and
+/// the serve pipeline (per-tenant shedding, bounded admission against
+/// the shuffle memory budget, subsuming result cache). Runs until a
+/// `query --shutdown` arrives.
+fn run_serve(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
+    use rdd_eclat::serve::{DatasetResolver, Server};
+
+    let socket = args
+        .get("socket")
+        .map(str::to_string)
+        .or_else(|| std::env::var("SPARKLET_SERVE_SOCKET").ok().filter(|v| !v.is_empty()))
+        .ok_or_else(|| anyhow::anyhow!("--socket PATH required (or SPARKLET_SERVE_SOCKET)"))?;
+    let mut conf = conf_from_args(args, cfg)?.with_serve_socket(&socket);
+    if let Some(n) = parsed::<usize>(args, "queue-depth")? {
+        conf = conf.with_serve_queue_depth(n)?;
+    }
+    if let Some(rate) = parsed::<f64>(args, "tenant-rate")? {
+        conf = conf.with_serve_tenant_rate(rate)?;
+    }
+    if let Some(mb) = parsed::<usize>(args, "cache-budget")? {
+        conf = conf.with_serve_cache_budget_mb(mb)?;
+    }
+    let sc = SparkletContext::try_new(conf)?;
+    // Requests name datasets; the server resolves them through the same
+    // generators as the batch commands (REPRO_SCALE/--scale applies) and
+    // memoizes, so the first query per dataset pays generation once.
+    let seed = cfg.seed;
+    let scale = cfg.scale;
+    let resolver: DatasetResolver = std::sync::Arc::new(move |name: &str| {
+        let dataset = parse_dataset(name).map_err(|e| e.to_string())?;
+        Ok(dataset.generate_scaled(seed, scale))
+    });
+    println!(
+        "serving on {socket}: {} executor, {} cores, queue depth {}, tenant rate {}/s, \
+         cache budget {}, memory budget {}",
+        sc.executor().name(),
+        sc.executor().cores(),
+        sc.conf().serve_queue_depth,
+        sc.conf().serve_tenant_rate,
+        sc.conf()
+            .serve_cache_budget
+            .map(|b| format!("{} MiB", b / (1024 * 1024)))
+            .unwrap_or_else(|| "unlimited".into()),
+        sc.conf()
+            .memory_budget
+            .map(|b| format!("{} MiB", b / (1024 * 1024)))
+            .unwrap_or_else(|| "unlimited".into()),
+    );
+    let server = std::sync::Arc::new(Server::new(sc, resolver));
+    server.run(&socket).map_err(anyhow::Error::msg)?;
+    println!("serve: shut down cleanly");
+    Ok(())
+}
+
+/// One-shot client for a running `serve` instance. Prints the cache
+/// disposition and the itemset histogram (same `L{k}` lines as `mine`,
+/// so outputs diff directly). Exits 3 on Overloaded/Throttled so shell
+/// callers can distinguish load shedding from hard errors.
+fn run_query(args: &Args) -> Result<()> {
+    use rdd_eclat::serve::{ServeError, ServeRequest, ServeResponse};
+    use rdd_eclat::sparklet::transport::{read_frame, write_frame};
+    use std::os::unix::net::UnixStream;
+
+    let socket = args
+        .get("socket")
+        .map(str::to_string)
+        .or_else(|| std::env::var("SPARKLET_SERVE_SOCKET").ok().filter(|v| !v.is_empty()))
+        .ok_or_else(|| anyhow::anyhow!("--socket PATH required (or SPARKLET_SERVE_SOCKET)"))?;
+    let req = ServeRequest {
+        tenant: args.get_or("tenant", "cli").to_string(),
+        dataset: args.get_or("dataset", "t10").to_string(),
+        min_sup_frac: parsed(args, "min-sup")?.unwrap_or(0.01),
+        engine: args.get_or("engine", "eclat-v4").to_string(),
+        tidset: args.get_or("tidset", "auto").to_string(),
+        post: args.get_all("post").iter().map(|s| s.to_string()).collect(),
+        min_conf: parsed(args, "min-conf")?.unwrap_or(0.0),
+        shutdown: args.flag("shutdown"),
+    };
+    let mut stream = UnixStream::connect(&socket)
+        .map_err(|e| anyhow::anyhow!("cannot connect to {socket}: {e} (is `serve` running?)"))?;
+    write_frame(&mut stream, &req.to_message())
+        .map_err(|e| anyhow::anyhow!("send request: {e}"))?;
+    let msg = read_frame(&mut stream).map_err(|e| anyhow::anyhow!("read response: {e}"))?;
+    match ServeResponse::from_message(&msg).map_err(anyhow::Error::msg)? {
+        ServeResponse::ShuttingDown => println!("server acknowledged shutdown"),
+        ServeResponse::Error(e) => {
+            eprintln!("error: {e}");
+            // Load shedding is an operational state, not a caller bug.
+            let code = match e {
+                ServeError::Overloaded { .. } | ServeError::Throttled { .. } => 3,
+                _ => 1,
+            };
+            std::process::exit(code);
+        }
+        ServeResponse::Result(r) => {
+            println!(
+                "cache: {} ({} itemsets at min_sup {} abs over {} txns, {:.1} ms)",
+                r.cache_hit,
+                r.itemsets.len(),
+                r.min_sup_abs,
+                r.n_transactions,
+                r.wall_ms
+            );
+            let hist = MiningResult::new(r.itemsets).histogram();
+            for (k, count) in hist.iter().enumerate() {
+                println!("  L{}: {count}", k + 1);
+            }
+            if !r.rules.is_empty() {
+                println!("rules ({}):", r.rules.len());
+                for rule in &r.rules {
+                    println!("  {rule}");
+                }
+            }
+        }
+    }
     Ok(())
 }
 

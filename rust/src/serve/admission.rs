@@ -1,0 +1,287 @@
+//! Admission control for the serve mode: a bounded FIFO gate that
+//! serializes mining against the shuffle memory budget, and a per-tenant
+//! token-bucket load shedder.
+//!
+//! The gate is deliberately single-slot: one mine runs at a time (each
+//! mine already fans out across every executor core, so concurrent mines
+//! would fight over the same pool and the shared `BlockStore`), while up
+//! to `queue_depth` requests wait their turn in arrival order. Arrivals
+//! beyond that — or whose estimated cost would blow the memory budget on
+//! top of current block + cache usage — are rejected with a typed
+//! [`ServeError::Overloaded`] instead of spilling unboundedly.
+//!
+//! The shedder generalizes the streaming layer's AIMD idea to tenants:
+//! each tenant id gets a token bucket refilled at the configured
+//! requests/second; an empty bucket rejects with
+//! [`ServeError::Throttled`] without consuming a queue slot.
+
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use crate::sparklet::shuffle::ShuffleManager;
+
+use super::protocol::ServeError;
+
+struct GateState {
+    /// Next ticket number to hand out.
+    next_ticket: u64,
+    /// Ticket currently allowed to mine; tickets below it are done.
+    serving: u64,
+}
+
+/// Bounded FIFO admission gate. `admit` either issues a [`Ticket`] or
+/// rejects; `Ticket::wait` blocks until the caller's turn; dropping the
+/// ticket passes the slot to the next waiter.
+pub struct AdmissionGate {
+    queue_depth: usize,
+    state: Mutex<GateState>,
+    turn: Condvar,
+}
+
+impl AdmissionGate {
+    pub fn new(queue_depth: usize) -> Self {
+        Self {
+            queue_depth: queue_depth.max(1),
+            state: Mutex::new(GateState {
+                next_ticket: 0,
+                serving: 0,
+            }),
+            turn: Condvar::new(),
+        }
+    }
+
+    /// Requests currently holding tickets (one mining + the waiters).
+    pub fn in_flight(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        (st.next_ticket - st.serving) as usize
+    }
+
+    /// Try to admit a request whose mine is estimated to cost
+    /// `cost_estimate` bytes of shuffle/working memory. Rejects when the
+    /// wait queue is full, or when the estimate on top of the store's
+    /// current usage (resident blocks + external cache charges) would
+    /// exceed the memory budget.
+    pub fn admit(
+        &self,
+        cost_estimate: usize,
+        shuffle: &ShuffleManager,
+    ) -> Result<Ticket<'_>, ServeError> {
+        let budget = shuffle.memory_budget();
+        if budget != usize::MAX {
+            let used = shuffle.used_bytes();
+            if used.saturating_add(cost_estimate) > budget {
+                return Err(ServeError::Overloaded {
+                    reason: format!(
+                        "estimated cost {cost_estimate} B on top of {used} B in use \
+                         exceeds the {budget} B memory budget"
+                    ),
+                });
+            }
+        }
+        let mut st = self.state.lock().unwrap();
+        let in_flight = (st.next_ticket - st.serving) as usize;
+        // One slot mines; queue_depth more may wait.
+        if in_flight >= self.queue_depth + 1 {
+            return Err(ServeError::Overloaded {
+                reason: format!(
+                    "admission queue full ({} waiting, depth {})",
+                    in_flight - 1,
+                    self.queue_depth
+                ),
+            });
+        }
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        Ok(Ticket { gate: self, ticket })
+    }
+}
+
+/// RAII admission slot: `wait` blocks until this ticket is at the head
+/// of the FIFO; dropping it (after the mine, or on an error path)
+/// advances the gate and wakes the next waiter.
+pub struct Ticket<'a> {
+    gate: &'a AdmissionGate,
+    ticket: u64,
+}
+
+impl Ticket<'_> {
+    /// Block until it is this ticket's turn to mine. Returns the time
+    /// spent queued, in milliseconds.
+    pub fn wait(&self) -> f64 {
+        let start = Instant::now();
+        let mut st = self.gate.state.lock().unwrap();
+        while st.serving != self.ticket {
+            st = self.gate.turn.wait(st).unwrap();
+        }
+        start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+impl Drop for Ticket<'_> {
+    fn drop(&mut self) {
+        let mut st = self.gate.state.lock().unwrap();
+        // Tickets complete in FIFO order (wait() enforces the order and
+        // each holder drops after its turn), so serving == self.ticket
+        // here; max() keeps the gate sane even if a holder drops early
+        // without waiting.
+        st.serving = st.serving.max(self.ticket + 1);
+        drop(st);
+        self.gate.turn.notify_all();
+    }
+}
+
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Per-tenant token-bucket load shedder. Each tenant's bucket refills at
+/// `rate` tokens/second up to a one-second burst; a request costs one
+/// token. `rate <= 0` disables shedding entirely.
+pub struct TenantShedder {
+    rate: f64,
+    burst: f64,
+    buckets: Mutex<HashMap<String, Bucket>>,
+}
+
+impl TenantShedder {
+    pub fn new(rate: f64) -> Self {
+        Self {
+            rate,
+            burst: rate.max(1.0),
+            buckets: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Spend one token from `tenant`'s bucket, or reject.
+    pub fn check(&self, tenant: &str) -> Result<(), ServeError> {
+        self.check_at(tenant, Instant::now())
+    }
+
+    fn check_at(&self, tenant: &str, now: Instant) -> Result<(), ServeError> {
+        if self.rate <= 0.0 {
+            return Ok(());
+        }
+        let mut buckets = self.buckets.lock().unwrap();
+        let bucket = buckets.entry(tenant.to_string()).or_insert(Bucket {
+            tokens: self.burst,
+            last: now,
+        });
+        let elapsed = now.saturating_duration_since(bucket.last).as_secs_f64();
+        bucket.tokens = (bucket.tokens + elapsed * self.rate).min(self.burst);
+        bucket.last = now;
+        if bucket.tokens >= 1.0 {
+            bucket.tokens -= 1.0;
+            Ok(())
+        } else {
+            Err(ServeError::Throttled {
+                tenant: tenant.to_string(),
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::mpsc::channel;
+    use std::time::Duration;
+
+    use super::*;
+
+    #[test]
+    fn gate_bounds_the_queue_and_frees_on_drop() {
+        let shuffle = ShuffleManager::new(); // unlimited budget
+        let gate = AdmissionGate::new(1);
+        let head = gate.admit(0, &shuffle).unwrap(); // mining slot
+        let waiter = gate.admit(0, &shuffle).unwrap(); // the one queue slot
+        assert_eq!(gate.in_flight(), 2);
+        let err = gate.admit(0, &shuffle).unwrap_err();
+        assert!(
+            matches!(err, ServeError::Overloaded { .. }),
+            "third arrival rejects: {err}"
+        );
+        assert!(err.to_string().contains("queue full"), "{err}");
+        drop(head);
+        // The freed slot admits again.
+        let next = gate.admit(0, &shuffle).unwrap();
+        assert_eq!(gate.in_flight(), 2);
+        drop(waiter);
+        drop(next);
+        assert_eq!(gate.in_flight(), 0);
+    }
+
+    #[test]
+    fn gate_serves_in_fifo_order_across_threads() {
+        let shuffle = ShuffleManager::new();
+        let gate = AdmissionGate::new(8);
+        let head = gate.admit(0, &shuffle).unwrap();
+        assert!(head.wait() < 1_000.0, "head of the queue proceeds at once");
+        let second = gate.admit(0, &shuffle).unwrap();
+        let (tx, rx) = channel();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                let queued_ms = second.wait();
+                tx.send(queued_ms).unwrap();
+                drop(second);
+            });
+            // The second ticket cannot proceed while the head is held.
+            assert!(
+                rx.recv_timeout(Duration::from_millis(50)).is_err(),
+                "second ticket ran before the head finished"
+            );
+            drop(head);
+            let queued_ms = rx
+                .recv_timeout(Duration::from_secs(5))
+                .expect("second ticket unblocked after head drop");
+            assert!(queued_ms >= 0.0);
+        });
+        assert_eq!(gate.in_flight(), 0);
+    }
+
+    #[test]
+    fn gate_rejects_when_cost_would_blow_the_budget() {
+        let shuffle = ShuffleManager::with_conf(Some(1000), false);
+        shuffle.charge_external(900);
+        let gate = AdmissionGate::new(4);
+        let err = gate.admit(200, &shuffle).unwrap_err();
+        assert!(matches!(err, ServeError::Overloaded { .. }), "{err}");
+        assert!(err.to_string().contains("memory budget"), "{err}");
+        // A cheap request still fits.
+        let t = gate.admit(50, &shuffle).unwrap();
+        drop(t);
+        // Releasing the external pressure re-opens the door.
+        shuffle.release_external(900);
+        assert!(gate.admit(200, &shuffle).is_ok());
+    }
+
+    #[test]
+    fn shedder_throttles_per_tenant_and_refills() {
+        let shedder = TenantShedder::new(2.0); // burst of 2 tokens
+        let t0 = Instant::now();
+        assert!(shedder.check_at("acme", t0).is_ok());
+        assert!(shedder.check_at("acme", t0).is_ok());
+        let err = shedder.check_at("acme", t0).unwrap_err();
+        assert!(matches!(err, ServeError::Throttled { ref tenant } if tenant == "acme"));
+        // Other tenants are unaffected.
+        assert!(shedder.check_at("globex", t0).is_ok());
+        // Half a second refills one token at 2/s.
+        let later = t0 + Duration::from_millis(500);
+        assert!(shedder.check_at("acme", later).is_ok());
+        assert!(shedder.check_at("acme", later).is_err());
+        // Tokens cap at the burst: a long idle doesn't bank unlimited.
+        let much_later = t0 + Duration::from_secs(60);
+        assert!(shedder.check_at("acme", much_later).is_ok());
+        assert!(shedder.check_at("acme", much_later).is_ok());
+        assert!(shedder.check_at("acme", much_later).is_err());
+    }
+
+    #[test]
+    fn rate_zero_disables_shedding() {
+        let shedder = TenantShedder::new(0.0);
+        let now = Instant::now();
+        for _ in 0..100 {
+            assert!(shedder.check_at("anyone", now).is_ok());
+        }
+    }
+}

@@ -1,0 +1,318 @@
+//! Subsuming result cache for the serve mode.
+//!
+//! Keyed `(dataset, min_sup_abs)` and storing the **full**
+//! un-post-processed itemsets, the cache answers two kinds of queries:
+//!
+//! * **exact** — the same dataset was mined at the same threshold;
+//! * **subsumed** — the dataset was mined at some threshold `s <=` the
+//!   query's `s'`. By anti-monotonicity the cached result filtered to
+//!   `support >= s'` *is* the exact result at `s'`
+//!   ([`MiningResult::filter_min_sup`]), at interactive latency instead
+//!   of a re-mine. When several cached thresholds qualify, the largest
+//!   wins (fewest itemsets to filter).
+//!
+//! The key is engine-agnostic on purpose: every engine produces the same
+//! itemset set (the cross-engine agreement suite guarantees it), so a
+//! result mined by `eclat-v4` answers an `apriori` query.
+//!
+//! Entry bytes are charged as *external* usage against the shuffle
+//! [`BlockStore`](crate::sparklet::BlockStore) accounting
+//! (`charge_external`), so admission control and shuffle spill both see
+//! cache pressure; eviction is LRU against the cache's own byte budget.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+use crate::fim::types::MiningResult;
+use crate::sparklet::shuffle::ShuffleManager;
+
+/// How a lookup was answered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheHit {
+    Exact,
+    Subsumed,
+    Miss,
+}
+
+impl CacheHit {
+    /// The label that rides on `RequestCompleted` events and responses.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Self::Exact => "exact",
+            Self::Subsumed => "subsumed",
+            Self::Miss => "miss",
+        }
+    }
+}
+
+struct CacheEntry {
+    result: MiningResult,
+    n_transactions: u64,
+    bytes: usize,
+    last_use: u64,
+}
+
+struct CacheInner {
+    /// dataset -> (min_sup_abs -> entry); the ordered inner map makes
+    /// the "largest cached threshold <= query" subsumption scan a
+    /// `range(..=s').next_back()`.
+    entries: HashMap<String, BTreeMap<u32, CacheEntry>>,
+    clock: u64,
+    bytes: usize,
+}
+
+/// LRU result cache with byte-budget eviction and external-charge
+/// accounting through the shuffle's `BlockStore`.
+pub struct ResultCache {
+    /// Byte budget (`usize::MAX` = unlimited).
+    budget: usize,
+    shuffle: Arc<ShuffleManager>,
+    inner: Mutex<CacheInner>,
+}
+
+/// Approximate heap bytes of a cached result: items plus per-itemset and
+/// per-entry bookkeeping. An estimate is fine — eviction needs relative
+/// sizes, and the admission check only needs the right order of
+/// magnitude.
+fn result_bytes(result: &MiningResult) -> usize {
+    64 + result
+        .itemsets
+        .iter()
+        .map(|f| f.items.len() * 4 + 32)
+        .sum::<usize>()
+}
+
+impl ResultCache {
+    /// `budget: None` = unlimited. `shuffle` receives the external byte
+    /// charges.
+    pub fn new(budget: Option<usize>, shuffle: Arc<ShuffleManager>) -> Self {
+        Self {
+            budget: budget.unwrap_or(usize::MAX),
+            shuffle,
+            inner: Mutex::new(CacheInner {
+                entries: HashMap::new(),
+                clock: 0,
+                bytes: 0,
+            }),
+        }
+    }
+
+    /// Answer a query at `min_sup` from cache if possible. The returned
+    /// result is already filtered to the query's threshold (identity for
+    /// exact hits); post-stages are the caller's business.
+    pub fn lookup(&self, dataset: &str, min_sup: u32) -> Option<(MiningResult, u64, CacheHit)> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let clock = inner.clock;
+        let by_sup = inner.entries.get_mut(dataset)?;
+        // Any cached threshold <= the query's subsumes it; the largest
+        // such is the cheapest to filter (and exact when equal).
+        let (&cached_sup, entry) = by_sup.range_mut(..=min_sup).next_back()?;
+        entry.last_use = clock;
+        let n = entry.n_transactions;
+        if cached_sup == min_sup {
+            Some((entry.result.clone(), n, CacheHit::Exact))
+        } else {
+            Some((entry.result.filter_min_sup(min_sup), n, CacheHit::Subsumed))
+        }
+    }
+
+    /// Insert a freshly mined **full** result (no post-stages applied),
+    /// then LRU-evict until the cache fits its budget. Overwrites any
+    /// entry at the same key.
+    pub fn insert(
+        &self,
+        dataset: &str,
+        min_sup: u32,
+        result: MiningResult,
+        n_transactions: u64,
+    ) {
+        let bytes = result_bytes(&result);
+        let mut freed = 0usize;
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.clock += 1;
+            let clock = inner.clock;
+            let entry = CacheEntry {
+                result,
+                n_transactions,
+                bytes,
+                last_use: clock,
+            };
+            if let Some(old) = inner
+                .entries
+                .entry(dataset.to_string())
+                .or_default()
+                .insert(min_sup, entry)
+            {
+                inner.bytes -= old.bytes;
+                freed += old.bytes;
+            }
+            inner.bytes += bytes;
+            // LRU eviction down to the budget. The just-inserted entry
+            // has the newest clock, so it only evicts itself when it
+            // alone exceeds the budget — in which case caching it would
+            // be a lie anyway.
+            while inner.bytes > self.budget {
+                let victim = inner
+                    .entries
+                    .iter()
+                    .flat_map(|(ds, by_sup)| {
+                        by_sup.iter().map(move |(&s, e)| (e.last_use, ds.clone(), s))
+                    })
+                    .min()
+                    .map(|(_, ds, s)| (ds, s));
+                let Some((ds, s)) = victim else { break };
+                let by_sup = inner.entries.get_mut(&ds).expect("victim dataset exists");
+                if let Some(old) = by_sup.remove(&s) {
+                    inner.bytes -= old.bytes;
+                    freed += old.bytes;
+                }
+                if inner
+                    .entries
+                    .get(&ds)
+                    .is_some_and(|by_sup| by_sup.is_empty())
+                {
+                    inner.entries.remove(&ds);
+                }
+            }
+        }
+        // Charge/release outside the cache lock; the store takes its own.
+        self.shuffle.charge_external(bytes);
+        if freed > 0 {
+            self.shuffle.release_external(freed);
+        }
+    }
+
+    /// Cached entries across all datasets.
+    pub fn len(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.entries.values().map(|m| m.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes currently cached (the amount charged externally).
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+}
+
+impl Drop for ResultCache {
+    fn drop(&mut self) {
+        let inner = match self.inner.get_mut() {
+            Ok(i) => i,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if inner.bytes > 0 {
+            self.shuffle.release_external(inner.bytes);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::fim::types::FrequentItemset;
+
+    use super::*;
+
+    fn result(supports: &[u32]) -> MiningResult {
+        MiningResult::new(
+            supports
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| FrequentItemset::new(vec![i as u32], s))
+                .collect(),
+        )
+    }
+
+    fn unlimited_cache() -> ResultCache {
+        ResultCache::new(None, Arc::new(ShuffleManager::new()))
+    }
+
+    #[test]
+    fn exact_and_subsumed_lookups() {
+        let cache = unlimited_cache();
+        assert!(cache.lookup("t10", 5).is_none(), "cold cache misses");
+        cache.insert("t10", 3, result(&[3, 4, 5, 9]), 100);
+
+        let (got, n, hit) = cache.lookup("t10", 3).unwrap();
+        assert_eq!(hit, CacheHit::Exact);
+        assert_eq!(n, 100);
+        assert_eq!(got.len(), 4, "exact hit returns the full result");
+
+        let (got, _, hit) = cache.lookup("t10", 5).unwrap();
+        assert_eq!(hit, CacheHit::Subsumed);
+        assert!(got.same_as(&result(&[3, 4, 5, 9]).filter_min_sup(5)));
+        assert_eq!(got.len(), 2);
+
+        // A *lower* threshold is NOT subsumed — the cached mine at 3
+        // knows nothing about itemsets with support 2.
+        assert!(cache.lookup("t10", 2).is_none());
+        // Other datasets don't cross-talk.
+        assert!(cache.lookup("t40", 3).is_none());
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn largest_qualifying_threshold_wins() {
+        let cache = unlimited_cache();
+        cache.insert("d", 2, result(&[2, 3, 4, 5, 6]), 10);
+        cache.insert("d", 5, result(&[5, 6]), 10);
+        // Query at 6: both entries subsume it; the s=5 one is picked and
+        // filtered, giving the same answer with less work.
+        let (got, _, hit) = cache.lookup("d", 6).unwrap();
+        assert_eq!(hit, CacheHit::Subsumed);
+        assert!(got.same_as(&result(&[2, 3, 4, 5, 6]).filter_min_sup(6)));
+        // Query at 5 is exact on the second entry.
+        let (_, _, hit) = cache.lookup("d", 5).unwrap();
+        assert_eq!(hit, CacheHit::Exact);
+        // Query at 3 only the s=2 entry subsumes.
+        let (got, _, hit) = cache.lookup("d", 3).unwrap();
+        assert_eq!(hit, CacheHit::Subsumed);
+        assert_eq!(got.len(), 4);
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget_and_external_accounting() {
+        let shuffle = Arc::new(ShuffleManager::new());
+        let one_entry = result_bytes(&result(&[1; 50]));
+        // Budget fits two entries but not three.
+        let cache = ResultCache::new(Some(2 * one_entry + 10), Arc::clone(&shuffle));
+        cache.insert("a", 1, result(&[1; 50]), 10);
+        cache.insert("b", 1, result(&[1; 50]), 10);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(shuffle.used_bytes(), cache.bytes(), "charges track bytes");
+        // Touch "a" so "b" is the LRU victim.
+        let _ = cache.lookup("a", 1).unwrap();
+        cache.insert("c", 1, result(&[1; 50]), 10);
+        assert_eq!(cache.len(), 2, "third entry evicted one");
+        assert!(cache.lookup("b", 1).is_none(), "the cold entry went");
+        assert!(cache.lookup("a", 1).is_some());
+        assert!(cache.lookup("c", 1).is_some());
+        assert!(cache.bytes() <= 2 * one_entry + 10);
+        assert_eq!(shuffle.used_bytes(), cache.bytes());
+        // Overwriting a key releases the old entry's bytes.
+        cache.insert("a", 1, result(&[2, 2]), 10);
+        assert_eq!(shuffle.used_bytes(), cache.bytes());
+        // Dropping the cache releases everything.
+        drop(cache);
+        assert_eq!(shuffle.used_bytes(), 0);
+    }
+
+    #[test]
+    fn oversized_single_entry_does_not_wedge_the_cache() {
+        let shuffle = Arc::new(ShuffleManager::new());
+        let cache = ResultCache::new(Some(10), Arc::clone(&shuffle));
+        cache.insert("big", 1, result(&[1; 100]), 10);
+        // It evicted itself: nothing cached, nothing charged.
+        assert!(cache.is_empty());
+        assert_eq!(cache.bytes(), 0);
+        assert_eq!(shuffle.used_bytes(), 0);
+        // And the cache still works afterwards for entries that fit...
+        // (none do under a 10-byte budget, so a miss is correct)
+        assert!(cache.lookup("big", 1).is_none());
+    }
+}

@@ -1,0 +1,33 @@
+//! Mining-as-a-service: a long-lived serve mode over one persistent
+//! [`SparkletContext`](crate::sparklet::SparkletContext).
+//!
+//! The `sparklet serve` command binds a unix socket and multiplexes
+//! concurrent mining requests — length-prefixed
+//! [`transport`](crate::sparklet::transport) frames whose
+//! `Request`/`Response` bodies speak the [`protocol`] vocabulary —
+//! onto the registered executor backends, one [`MiningSession`]
+//! (crate::fim::MiningSession) per admitted request. Three layers keep a
+//! heavily-loaded server healthy:
+//!
+//! * [`admission`] — a bounded FIFO gate serializes mining against the
+//!   shuffle memory budget (typed `Overloaded` rejections instead of
+//!   unbounded queueing) and a per-tenant token bucket sheds tenants
+//!   over their request rate (`Throttled`);
+//! * [`cache`] — a subsuming result cache answers exact repeats and any
+//!   query at a *higher* threshold than a cached mine by
+//!   anti-monotonic filtering, with LRU eviction charged against the
+//!   same byte budget as the shuffle `BlockStore`;
+//! * [`server`] — the accept loop, per-connection threads, and the
+//!   socket-free [`Server::handle`] pipeline that emits the
+//!   `RequestReceived` → `RequestAdmitted`/`RequestRejected` →
+//!   `RequestCompleted` span for every request.
+
+pub mod admission;
+pub mod cache;
+pub mod protocol;
+pub mod server;
+
+pub use admission::{AdmissionGate, TenantShedder, Ticket};
+pub use cache::{CacheHit, ResultCache};
+pub use protocol::{ServeError, ServeRequest, ServeResponse, ServeResult};
+pub use server::{DatasetResolver, Server};

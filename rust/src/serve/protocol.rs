@@ -1,0 +1,380 @@
+//! Wire vocabulary of the serve mode.
+//!
+//! A [`ServeRequest`] / [`ServeResponse`] pair rides inside the
+//! transport's opaque `Message::Request` / `Message::Response` envelopes
+//! (`super::super::sparklet::transport`): the transport stays ignorant
+//! of mining vocabulary, and this module owns the body encoding through
+//! the same [`SerDe`] codec the shuffle uses. Like the transport tags,
+//! response/error tag bytes are append-only — add variants, never
+//! renumber.
+
+use crate::fim::types::FrequentItemset;
+use crate::sparklet::serde::{Reader, SerDe, SerDeError};
+use crate::sparklet::transport::Message;
+
+/// One mining request from a client.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeRequest {
+    /// Client-supplied tenant id, the key of the per-tenant load
+    /// shedder (empty string = anonymous, all sharing one bucket).
+    pub tenant: String,
+    /// Dataset reference, resolved server-side (`bms1|bms2|t10|t40`
+    /// for the CLI server; tests inject their own resolver).
+    pub dataset: String,
+    /// Relative minimum support, resolved against the dataset's
+    /// transaction count server-side.
+    pub min_sup_frac: f64,
+    /// Engine registry name ("eclat-v4", "apriori", ...).
+    pub engine: String,
+    /// Tidset representation spec (`vec|bitmap|diffset|hybrid|auto`).
+    pub tidset: String,
+    /// Post-stage specs applied in order (`closed`, `maximal`, `top=K`).
+    pub post: Vec<String>,
+    /// Rule-generation confidence threshold; `<= 0` disables rules.
+    pub min_conf: f64,
+    /// `true` asks the server to stop accepting and exit its accept
+    /// loop after acknowledging with [`ServeResponse::ShuttingDown`].
+    pub shutdown: bool,
+}
+
+impl Default for ServeRequest {
+    fn default() -> Self {
+        Self {
+            tenant: String::new(),
+            dataset: String::new(),
+            min_sup_frac: 0.0,
+            engine: "eclat-v4".into(),
+            tidset: "auto".into(),
+            post: Vec::new(),
+            min_conf: 0.0,
+            shutdown: false,
+        }
+    }
+}
+
+impl SerDe for ServeRequest {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.tenant.encode(out);
+        self.dataset.encode(out);
+        self.min_sup_frac.encode(out);
+        self.engine.encode(out);
+        self.tidset.encode(out);
+        self.post.encode(out);
+        self.min_conf.encode(out);
+        self.shutdown.encode(out);
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<Self, SerDeError> {
+        Ok(Self {
+            tenant: String::decode(r)?,
+            dataset: String::decode(r)?,
+            min_sup_frac: f64::decode(r)?,
+            engine: String::decode(r)?,
+            tidset: String::decode(r)?,
+            post: Vec::decode(r)?,
+            min_conf: f64::decode(r)?,
+            shutdown: bool::decode(r)?,
+        })
+    }
+}
+
+impl ServeRequest {
+    /// Wrap in the transport envelope for framing.
+    pub fn to_message(&self) -> Message {
+        Message::Request {
+            body: self.to_bytes(),
+        }
+    }
+
+    /// Unwrap from the transport envelope.
+    pub fn from_message(msg: &Message) -> Result<Self, String> {
+        match msg {
+            Message::Request { body } => {
+                Self::from_bytes(body).map_err(|e| format!("bad request body: {e}"))
+            }
+            other => Err(format!("expected a Request frame, got {other:?}")),
+        }
+    }
+}
+
+/// A successfully served mine (fresh or from cache).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeResult {
+    /// The itemsets after the request's post-stages.
+    pub itemsets: Vec<FrequentItemset>,
+    /// `exact` | `subsumed` | `miss` — how the cache answered.
+    pub cache_hit: String,
+    /// Absolute min_sup the fraction resolved to.
+    pub min_sup_abs: u32,
+    /// Transaction count of the resolved dataset.
+    pub n_transactions: u64,
+    /// Server-side wall time for this request, milliseconds (cache
+    /// hits report the filter+post time, not the original mine's).
+    pub wall_ms: f64,
+    /// Rendered association rules, when `min_conf > 0`.
+    pub rules: Vec<String>,
+}
+
+impl SerDe for ServeResult {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.itemsets.encode(out);
+        self.cache_hit.encode(out);
+        self.min_sup_abs.encode(out);
+        self.n_transactions.encode(out);
+        self.wall_ms.encode(out);
+        self.rules.encode(out);
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<Self, SerDeError> {
+        Ok(Self {
+            itemsets: Vec::decode(r)?,
+            cache_hit: String::decode(r)?,
+            min_sup_abs: u32::decode(r)?,
+            n_transactions: u64::decode(r)?,
+            wall_ms: f64::decode(r)?,
+            rules: Vec::decode(r)?,
+        })
+    }
+}
+
+/// Typed serve failures, sent back to the client.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Admission refused: the queue is full or the estimated cost would
+    /// blow the memory budget. Back off and retry.
+    Overloaded { reason: String },
+    /// The tenant's token bucket is empty — this tenant is over its
+    /// request rate; other tenants are unaffected.
+    Throttled { tenant: String },
+    /// The request itself is malformed (unknown engine/tidset/post
+    /// stage, bad min_sup, unresolvable dataset). Retrying won't help.
+    BadRequest { reason: String },
+    /// The server failed while processing an admitted request.
+    Internal { reason: String },
+}
+
+const ERR_OVERLOADED: u8 = 1;
+const ERR_THROTTLED: u8 = 2;
+const ERR_BAD_REQUEST: u8 = 3;
+const ERR_INTERNAL: u8 = 4;
+
+impl SerDe for ServeError {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Self::Overloaded { reason } => {
+                out.push(ERR_OVERLOADED);
+                reason.encode(out);
+            }
+            Self::Throttled { tenant } => {
+                out.push(ERR_THROTTLED);
+                tenant.encode(out);
+            }
+            Self::BadRequest { reason } => {
+                out.push(ERR_BAD_REQUEST);
+                reason.encode(out);
+            }
+            Self::Internal { reason } => {
+                out.push(ERR_INTERNAL);
+                reason.encode(out);
+            }
+        }
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<Self, SerDeError> {
+        match u8::decode(r)? {
+            ERR_OVERLOADED => Ok(Self::Overloaded {
+                reason: String::decode(r)?,
+            }),
+            ERR_THROTTLED => Ok(Self::Throttled {
+                tenant: String::decode(r)?,
+            }),
+            ERR_BAD_REQUEST => Ok(Self::BadRequest {
+                reason: String::decode(r)?,
+            }),
+            ERR_INTERNAL => Ok(Self::Internal {
+                reason: String::decode(r)?,
+            }),
+            _ => Err(SerDeError::Invalid {
+                what: "serve error tag",
+            }),
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Overloaded { reason } => write!(f, "overloaded: {reason}"),
+            Self::Throttled { tenant } => {
+                write!(f, "throttled: tenant {tenant:?} is over its request rate")
+            }
+            Self::BadRequest { reason } => write!(f, "bad request: {reason}"),
+            Self::Internal { reason } => write!(f, "internal server error: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// What the server sends back for one request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeResponse {
+    /// The mine (or cache answer) succeeded.
+    Result(ServeResult),
+    /// The request was rejected or failed; see the typed error.
+    Error(ServeError),
+    /// Acknowledgement of a `shutdown: true` request — the server stops
+    /// accepting after sending this.
+    ShuttingDown,
+}
+
+const RESP_RESULT: u8 = 1;
+const RESP_ERROR: u8 = 2;
+const RESP_SHUTTING_DOWN: u8 = 3;
+
+impl SerDe for ServeResponse {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Self::Result(res) => {
+                out.push(RESP_RESULT);
+                res.encode(out);
+            }
+            Self::Error(err) => {
+                out.push(RESP_ERROR);
+                err.encode(out);
+            }
+            Self::ShuttingDown => out.push(RESP_SHUTTING_DOWN),
+        }
+    }
+    fn decode(r: &mut Reader<'_>) -> Result<Self, SerDeError> {
+        match u8::decode(r)? {
+            RESP_RESULT => Ok(Self::Result(ServeResult::decode(r)?)),
+            RESP_ERROR => Ok(Self::Error(ServeError::decode(r)?)),
+            RESP_SHUTTING_DOWN => Ok(Self::ShuttingDown),
+            _ => Err(SerDeError::Invalid {
+                what: "serve response tag",
+            }),
+        }
+    }
+}
+
+impl ServeResponse {
+    /// Wrap in the transport envelope for framing.
+    pub fn to_message(&self) -> Message {
+        Message::Response {
+            body: self.to_bytes(),
+        }
+    }
+
+    /// Unwrap from the transport envelope.
+    pub fn from_message(msg: &Message) -> Result<Self, String> {
+        match msg {
+            Message::Response { body } => {
+                Self::from_bytes(body).map_err(|e| format!("bad response body: {e}"))
+            }
+            other => Err(format!("expected a Response frame, got {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_request() -> ServeRequest {
+        ServeRequest {
+            tenant: "acme".into(),
+            dataset: "t10".into(),
+            min_sup_frac: 0.02,
+            engine: "eclat-v4".into(),
+            tidset: "hybrid".into(),
+            post: vec!["maximal".into(), "top=5".into()],
+            min_conf: 0.6,
+            shutdown: false,
+        }
+    }
+
+    #[test]
+    fn request_roundtrips_through_the_envelope() {
+        let req = sample_request();
+        let msg = req.to_message();
+        let back = ServeRequest::from_message(&msg).unwrap();
+        assert_eq!(back, req);
+        // The transport envelope itself frames losslessly.
+        let bytes = msg.to_bytes();
+        let msg2 = Message::from_bytes(&bytes).unwrap();
+        assert_eq!(ServeRequest::from_message(&msg2).unwrap(), req);
+        // Wrong envelope kind is a typed error, not a panic.
+        let err = ServeRequest::from_message(&Message::Shutdown).unwrap_err();
+        assert!(err.contains("expected a Request"), "{err}");
+    }
+
+    #[test]
+    fn responses_roundtrip_all_variants() {
+        let ok = ServeResponse::Result(ServeResult {
+            itemsets: vec![
+                FrequentItemset::new(vec![1, 2], 7),
+                FrequentItemset::new(vec![3], 9),
+            ],
+            cache_hit: "subsumed".into(),
+            min_sup_abs: 5,
+            n_transactions: 1000,
+            wall_ms: 1.25,
+            rules: vec!["{1} => {2} (sup=7, conf=0.900, lift=1.100)".into()],
+        });
+        let errs = [
+            ServeResponse::Error(ServeError::Overloaded {
+                reason: "queue full".into(),
+            }),
+            ServeResponse::Error(ServeError::Throttled {
+                tenant: "acme".into(),
+            }),
+            ServeResponse::Error(ServeError::BadRequest {
+                reason: "unknown engine".into(),
+            }),
+            ServeResponse::Error(ServeError::Internal {
+                reason: "boom".into(),
+            }),
+            ServeResponse::ShuttingDown,
+        ];
+        for resp in std::iter::once(ok).chain(errs) {
+            let msg = resp.to_message();
+            let bytes = msg.to_bytes();
+            let back = ServeResponse::from_message(&Message::from_bytes(&bytes).unwrap()).unwrap();
+            assert_eq!(back, resp);
+        }
+    }
+
+    #[test]
+    fn corrupt_bodies_fail_typed() {
+        assert!(matches!(
+            ServeResponse::from_bytes(&[99]),
+            Err(SerDeError::Invalid { .. })
+        ));
+        assert!(matches!(
+            ServeError::from_bytes(&[0]),
+            Err(SerDeError::Invalid { .. })
+        ));
+        let err = ServeResponse::from_message(&Message::Response { body: vec![99] }).unwrap_err();
+        assert!(err.contains("bad response body"), "{err}");
+        // Truncated request body.
+        let mut bytes = sample_request().to_bytes();
+        bytes.truncate(bytes.len() - 1);
+        assert!(ServeRequest::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn error_display_names_the_condition() {
+        let e = ServeError::Overloaded {
+            reason: "queue full (depth 16)".into(),
+        };
+        assert!(e.to_string().contains("overloaded"), "{e}");
+        let e = ServeError::Throttled {
+            tenant: "acme".into(),
+        };
+        assert!(e.to_string().contains("acme"), "{e}");
+        let e = ServeError::BadRequest {
+            reason: "nope".into(),
+        };
+        assert!(e.to_string().contains("bad request"), "{e}");
+        let e = ServeError::Internal { reason: "io".into() };
+        assert!(e.to_string().contains("internal"), "{e}");
+    }
+}

@@ -1,0 +1,568 @@
+//! The long-lived mining server.
+//!
+//! One [`Server`] holds one persistent [`SparkletContext`]; each client
+//! connection gets a thread that decodes `Request` frames, runs
+//! [`Server::handle`], and writes `Response` frames back. `handle` is
+//! public and socket-free on purpose — the unit and property tests
+//! drive the full admission/cache/mine pipeline through it without any
+//! IO.
+//!
+//! Request lifecycle on the [`EventBus`](crate::sparklet::EventBus):
+//! every mining request emits `RequestReceived`, then either
+//! `RequestRejected` (reason `throttled` | `bad-request` |
+//! `overloaded` | `internal`) or `RequestAdmitted` followed by a
+//! terminal `RequestCompleted` (with its `cache_hit` label) — so
+//! `--event-log` + `timeline` trace serving for free, and the CI smoke
+//! validates span balance offline.
+
+use std::collections::HashMap;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::fim::engine::{EngineRegistry, MiningSession, PostStage, TidsetRepr};
+use crate::fim::rules::generate_rules;
+use crate::fim::types::{abs_min_sup, MiningResult, Transaction};
+use crate::sparklet::transport::{read_frame, write_frame};
+use crate::sparklet::{SparkletContext, SparkletEvent};
+
+use super::admission::{AdmissionGate, TenantShedder};
+use super::cache::{CacheHit, ResultCache};
+use super::protocol::{ServeError, ServeRequest, ServeResponse, ServeResult};
+
+/// Maps a request's dataset ref to transactions. Injected so the serve
+/// layer stays ignorant of dataset naming: the CLI wires the benchmark
+/// generators in, tests wire synthetic data.
+pub type DatasetResolver = Arc<dyn Fn(&str) -> Result<Vec<Transaction>, String> + Send + Sync>;
+
+/// Rough working-set multiplier over the raw transaction bytes: vertical
+/// tidsets + shuffle blocks + the result run several times the input.
+const COST_EXPANSION: usize = 4;
+
+/// Mining-as-a-service over one persistent context.
+pub struct Server {
+    sc: SparkletContext,
+    resolver: DatasetResolver,
+    cache: ResultCache,
+    gate: AdmissionGate,
+    shedder: TenantShedder,
+    /// Resolved datasets, memoized — repeat queries skip regeneration.
+    datasets: Mutex<HashMap<String, Arc<Vec<Transaction>>>>,
+    next_request: AtomicU64,
+    shutdown: AtomicBool,
+    /// Set by `run` so the shutdown path can wake the acceptor.
+    socket_path: Mutex<Option<String>>,
+}
+
+impl Server {
+    /// Build a server over `sc`, reading the serve knobs
+    /// (`serve_queue_depth`, `serve_tenant_rate`, `serve_cache_budget`)
+    /// from its conf.
+    pub fn new(sc: SparkletContext, resolver: DatasetResolver) -> Self {
+        let conf = sc.conf().clone();
+        let cache = ResultCache::new(conf.serve_cache_budget, sc.shuffle_arc());
+        Self {
+            sc,
+            resolver,
+            cache,
+            gate: AdmissionGate::new(conf.serve_queue_depth),
+            shedder: TenantShedder::new(conf.serve_tenant_rate),
+            datasets: Mutex::new(HashMap::new()),
+            next_request: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            socket_path: Mutex::new(None),
+        }
+    }
+
+    /// The context the server mines on (tests inspect its events/conf).
+    pub fn context(&self) -> &SparkletContext {
+        &self.sc
+    }
+
+    /// Cached results currently held.
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Bytes the result cache currently charges against the memory
+    /// budget — after any request, the shuffle store's `used_bytes`
+    /// must equal exactly this (the leak tests assert it).
+    pub fn cache_bytes(&self) -> usize {
+        self.cache.bytes()
+    }
+
+    /// Handle one request end to end: shed → validate → cache → admit →
+    /// mine → cache-fill, emitting the request span on the event bus.
+    /// Socket-free; the connection threads and the tests both call this.
+    pub fn handle(&self, req: &ServeRequest) -> ServeResponse {
+        if req.shutdown {
+            // Control message, not a mining request: no span events.
+            self.shutdown.store(true, Ordering::SeqCst);
+            return ServeResponse::ShuttingDown;
+        }
+        let request = self.next_request.fetch_add(1, Ordering::Relaxed);
+        let events = Arc::clone(self.sc.events());
+        events.emit(SparkletEvent::RequestReceived {
+            request,
+            tenant: req.tenant.clone(),
+        });
+        let resp = match self.serve_one(request, req) {
+            Ok(result) => {
+                events.emit(SparkletEvent::RequestCompleted {
+                    request,
+                    cache_hit: result.cache_hit.clone(),
+                    itemsets: result.itemsets.len() as u64,
+                    wall_ms: result.wall_ms,
+                });
+                ServeResponse::Result(result)
+            }
+            Err(err) => {
+                events.emit(SparkletEvent::RequestRejected {
+                    request,
+                    reason: reject_reason(&err).into(),
+                });
+                ServeResponse::Error(err)
+            }
+        };
+        // Push the span out to the JSONL log promptly — the CI smoke
+        // tails it while the server is still running.
+        events.flush();
+        resp
+    }
+
+    fn serve_one(&self, request: u64, req: &ServeRequest) -> Result<ServeResult, ServeError> {
+        let started = Instant::now();
+        self.shedder.check(&req.tenant)?;
+
+        // Validate everything before touching the queue: a malformed
+        // request must not cost a slot.
+        if !req.min_sup_frac.is_finite() || req.min_sup_frac <= 0.0 || req.min_sup_frac > 1.0 {
+            return Err(ServeError::BadRequest {
+                reason: format!("min_sup must be in (0, 1], got {}", req.min_sup_frac),
+            });
+        }
+        let tidset =
+            TidsetRepr::parse(&req.tidset).map_err(|reason| ServeError::BadRequest { reason })?;
+        let post: Vec<PostStage> = req
+            .post
+            .iter()
+            .map(|s| PostStage::parse(s))
+            .collect::<Result<_, _>>()
+            .map_err(|reason| ServeError::BadRequest { reason })?;
+        if EngineRegistry::get(&req.engine).is_none() {
+            return Err(ServeError::BadRequest {
+                reason: format!(
+                    "unknown engine {:?} (registered: {})",
+                    req.engine,
+                    EngineRegistry::names().join(", ")
+                ),
+            });
+        }
+        let txns = self.dataset(&req.dataset)?;
+        let n = txns.len();
+        let min_sup_abs = abs_min_sup(req.min_sup_frac, n);
+        let events = self.sc.events();
+
+        // Cache first: hits bypass the admission queue entirely (they
+        // cost a filter, not a mine) but still count as admitted so the
+        // request span stays uniform.
+        if let Some((result, _, hit)) = self.cache.lookup(&req.dataset, min_sup_abs) {
+            events.emit(SparkletEvent::RequestAdmitted {
+                request,
+                queued_ms: 0.0,
+            });
+            return Ok(self.render(result, hit, min_sup_abs, n, started, &post, req.min_conf));
+        }
+
+        let cost = txns.iter().map(|t| t.len()).sum::<usize>() * 4 * COST_EXPANSION;
+        let ticket = self.gate.admit(cost, self.sc.shuffle_manager())?;
+        let queued_ms = ticket.wait();
+        events.emit(SparkletEvent::RequestAdmitted { request, queued_ms });
+
+        // Mine the FULL result — post-stages apply on the response path,
+        // so the cache entry answers any future post-stage combination.
+        let report = MiningSession::new(req.engine.as_str())
+            .min_sup(min_sup_abs)
+            .tidset(tidset)
+            .run_vec(&self.sc, txns.as_slice())
+            .map_err(|e| ServeError::Internal {
+                reason: e.to_string(),
+            })?;
+        // Clear shuffle state while still holding the ticket: mining is
+        // serialized through the gate, so no other request has blocks in
+        // flight, and the persistent context must not leak artifacts
+        // across requests.
+        self.sc.reset_state();
+        drop(ticket);
+
+        self.cache
+            .insert(&req.dataset, min_sup_abs, report.result.clone(), n as u64);
+        Ok(self.render(
+            report.result,
+            CacheHit::Miss,
+            min_sup_abs,
+            n,
+            started,
+            &post,
+            req.min_conf,
+        ))
+    }
+
+    /// Post-stages + rules on the full (or cache-filtered) result.
+    #[allow(clippy::too_many_arguments)]
+    fn render(
+        &self,
+        full: MiningResult,
+        hit: CacheHit,
+        min_sup_abs: u32,
+        n_transactions: usize,
+        started: Instant,
+        post: &[PostStage],
+        min_conf: f64,
+    ) -> ServeResult {
+        // Rules derive from the full result (as in MiningSession), not
+        // the post-stage-condensed view.
+        let rules = if min_conf > 0.0 {
+            generate_rules(&full, min_conf, n_transactions)
+                .iter()
+                .map(|r| r.to_string())
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let mut shown = full;
+        for stage in post {
+            shown = stage.apply(&shown);
+        }
+        ServeResult {
+            itemsets: shown.itemsets,
+            cache_hit: hit.as_str().into(),
+            min_sup_abs,
+            n_transactions: n_transactions as u64,
+            wall_ms: started.elapsed().as_secs_f64() * 1e3,
+            rules,
+        }
+    }
+
+    fn dataset(&self, name: &str) -> Result<Arc<Vec<Transaction>>, ServeError> {
+        if let Some(t) = self.datasets.lock().unwrap().get(name) {
+            return Ok(Arc::clone(t));
+        }
+        // Resolve outside the lock — generation can be slow. A racing
+        // duplicate resolve is wasted work, not a correctness problem.
+        let txns = (self.resolver)(name).map_err(|reason| ServeError::BadRequest { reason })?;
+        let arc = Arc::new(txns);
+        self.datasets
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::clone(&arc));
+        Ok(arc)
+    }
+
+    /// Bind `socket_path` and serve until a shutdown request arrives.
+    /// Each connection gets a thread; frames are length-prefixed
+    /// transport messages carrying the serve protocol bodies.
+    pub fn run(self: &Arc<Self>, socket_path: &str) -> Result<(), String> {
+        let _ = std::fs::remove_file(socket_path);
+        let listener = UnixListener::bind(socket_path)
+            .map_err(|e| format!("cannot bind {socket_path}: {e}"))?;
+        *self.socket_path.lock().unwrap() = Some(socket_path.to_string());
+        let mut handles = Vec::new();
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if self.shutdown.load(Ordering::SeqCst) {
+                        break; // shutdown-time wakeup connection
+                    }
+                    let srv = Arc::clone(self);
+                    let handle = std::thread::Builder::new()
+                        .name("sparklet-serve-conn".into())
+                        .spawn(move || srv.serve_connection(stream))
+                        .map_err(|e| format!("spawn connection thread: {e}"))?;
+                    handles.push(handle);
+                }
+                Err(_) => {
+                    if self.shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                }
+            }
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        let _ = std::fs::remove_file(socket_path);
+        self.sc.events().flush();
+        Ok(())
+    }
+
+    /// Per-connection loop: requests in, responses out, until the peer
+    /// hangs up or asks for shutdown.
+    fn serve_connection(self: Arc<Self>, stream: UnixStream) {
+        let mut reader = match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => return,
+        };
+        let mut writer = stream;
+        loop {
+            let msg = match read_frame(&mut reader) {
+                Ok(m) => m,
+                Err(_) => return, // peer closed (or spoke garbage)
+            };
+            let resp = match ServeRequest::from_message(&msg) {
+                Ok(req) => self.handle(&req),
+                Err(reason) => ServeResponse::Error(ServeError::BadRequest { reason }),
+            };
+            let shutting_down = matches!(resp, ServeResponse::ShuttingDown);
+            let write_ok = write_frame(&mut writer, &resp.to_message()).is_ok();
+            if shutting_down {
+                // Wake the acceptor out of accept() so it can observe
+                // the shutdown flag (mirrors the remote backend's drop).
+                if let Some(path) = self.socket_path.lock().unwrap().clone() {
+                    let _ = UnixStream::connect(&path);
+                }
+                return;
+            }
+            if !write_ok {
+                return;
+            }
+        }
+    }
+}
+
+fn reject_reason(err: &ServeError) -> &'static str {
+    match err {
+        ServeError::Overloaded { .. } => "overloaded",
+        ServeError::Throttled { .. } => "throttled",
+        ServeError::BadRequest { .. } => "bad-request",
+        ServeError::Internal { .. } => "internal",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::fim::sequential::eclat_sequential;
+    use crate::sparklet::{CollectingListener, SparkletConf};
+
+    use super::*;
+
+    /// Deterministic synthetic dataset: item i appears in every
+    /// transaction whose index is a multiple of i+1, so supports are
+    /// n/(i+1)-ish and subsumption thresholds are easy to pick.
+    fn synthetic(n: usize, width: u32) -> Vec<Transaction> {
+        (0..n)
+            .map(|t| (0..width).filter(|&i| t % (i as usize + 1) == 0).collect())
+            .collect()
+    }
+
+    fn test_server(conf: SparkletConf) -> (Arc<Server>, CollectingListener) {
+        let sc = SparkletContext::new(conf);
+        let listener = CollectingListener::new();
+        sc.events().register(Arc::new(listener.clone()));
+        let resolver: DatasetResolver = Arc::new(|name: &str| match name {
+            "synth" => Ok(synthetic(64, 8)),
+            "tiny" => Ok(synthetic(8, 3)),
+            other => Err(format!("unknown dataset {other:?}")),
+        });
+        (Arc::new(Server::new(sc, resolver)), listener)
+    }
+
+    fn request(min_sup_frac: f64) -> ServeRequest {
+        ServeRequest {
+            dataset: "synth".into(),
+            min_sup_frac,
+            ..ServeRequest::default()
+        }
+    }
+
+    fn expect_result(resp: ServeResponse) -> ServeResult {
+        match resp {
+            ServeResponse::Result(r) => r,
+            other => panic!("expected a result, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn miss_then_exact_then_subsumed_all_match_the_oracle() {
+        let conf = SparkletConf::new("serve-test").with_cores(2).unwrap();
+        let (server, _) = test_server(conf);
+        let txns = synthetic(64, 8);
+
+        let first = expect_result(server.handle(&request(0.25)));
+        assert_eq!(first.cache_hit, "miss");
+        let oracle_lo = eclat_sequential(&txns, first.min_sup_abs);
+        assert!(MiningResult::new(first.itemsets.clone()).same_as(&oracle_lo));
+        assert_eq!(server.cache_len(), 1);
+
+        let second = expect_result(server.handle(&request(0.25)));
+        assert_eq!(second.cache_hit, "exact");
+        assert_eq!(second.itemsets, first.itemsets);
+
+        let third = expect_result(server.handle(&request(0.5)));
+        assert_eq!(third.cache_hit, "subsumed");
+        let oracle_hi = eclat_sequential(&txns, third.min_sup_abs);
+        assert!(MiningResult::new(third.itemsets).same_as(&oracle_hi));
+        // A subsumed answer does not create a new cache entry.
+        assert_eq!(server.cache_len(), 1);
+    }
+
+    #[test]
+    fn request_spans_are_balanced_on_the_event_bus() {
+        let conf = SparkletConf::new("serve-events").with_cores(2).unwrap();
+        let (server, listener) = test_server(conf);
+        let _ = expect_result(server.handle(&request(0.25))); // miss
+        let _ = expect_result(server.handle(&request(0.25))); // exact
+        let bad = server.handle(&ServeRequest {
+            dataset: "nope".into(),
+            min_sup_frac: 0.25,
+            ..ServeRequest::default()
+        });
+        assert!(matches!(
+            bad,
+            ServeResponse::Error(ServeError::BadRequest { .. })
+        ));
+
+        let mut received = Vec::new();
+        let mut admitted = Vec::new();
+        let mut completed = Vec::new();
+        let mut rejected = Vec::new();
+        for (_, ev) in listener.snapshot() {
+            match ev {
+                SparkletEvent::RequestReceived { request, .. } => received.push(request),
+                SparkletEvent::RequestAdmitted { request, .. } => admitted.push(request),
+                SparkletEvent::RequestCompleted {
+                    request, cache_hit, ..
+                } => completed.push((request, cache_hit)),
+                SparkletEvent::RequestRejected { request, reason } => {
+                    rejected.push((request, reason))
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(received, vec![0, 1, 2]);
+        assert_eq!(admitted, vec![0, 1], "the bad request never admits");
+        assert_eq!(
+            completed,
+            vec![(0, "miss".to_string()), (1, "exact".to_string())]
+        );
+        assert_eq!(rejected, vec![(2, "bad-request".to_string())]);
+    }
+
+    #[test]
+    fn malformed_requests_reject_typed_without_mining() {
+        let conf = SparkletConf::new("serve-bad").with_cores(2).unwrap();
+        let (server, _) = test_server(conf);
+        let cases = [
+            ServeRequest {
+                min_sup_frac: 0.0,
+                ..request(0.0)
+            },
+            ServeRequest {
+                min_sup_frac: 1.5,
+                ..request(0.25)
+            },
+            ServeRequest {
+                engine: "eclat-v99".into(),
+                ..request(0.25)
+            },
+            ServeRequest {
+                tidset: "trie".into(),
+                ..request(0.25)
+            },
+            ServeRequest {
+                post: vec!["open".into()],
+                ..request(0.25)
+            },
+        ];
+        for req in cases {
+            let resp = server.handle(&req);
+            assert!(
+                matches!(resp, ServeResponse::Error(ServeError::BadRequest { .. })),
+                "{req:?} -> {resp:?}"
+            );
+        }
+        assert_eq!(server.cache_len(), 0, "nothing mined, nothing cached");
+    }
+
+    #[test]
+    fn tenant_rate_throttles_but_cache_path_is_pre_shed() {
+        let conf = SparkletConf::new("serve-shed")
+            .with_cores(2)
+            .unwrap()
+            .with_serve_tenant_rate(1.0)
+            .unwrap();
+        let (server, _) = test_server(conf);
+        let mut req = request(0.25);
+        req.tenant = "acme".into();
+        let _ = expect_result(server.handle(&req));
+        // Burst of 1 at 1 req/s: the immediate repeat throttles even
+        // though it would have been a cache hit (shedding is admission
+        // of the request, not of the work).
+        let resp = server.handle(&req);
+        assert!(
+            matches!(resp, ServeResponse::Error(ServeError::Throttled { ref tenant }) if tenant == "acme"),
+            "{resp:?}"
+        );
+        // A different tenant is unaffected.
+        req.tenant = "globex".into();
+        let r = expect_result(server.handle(&req));
+        assert_eq!(r.cache_hit, "exact");
+    }
+
+    #[test]
+    fn post_stages_and_rules_apply_on_the_cached_path() {
+        let conf = SparkletConf::new("serve-post").with_cores(2).unwrap();
+        let (server, _) = test_server(conf);
+        let full = expect_result(server.handle(&request(0.25)));
+        let mut req = request(0.25);
+        req.post = vec!["top=3".into()];
+        req.min_conf = 0.5;
+        let shaped = expect_result(server.handle(&req));
+        assert_eq!(shaped.cache_hit, "exact", "post-stages don't fork the key");
+        assert!(shaped.itemsets.len() <= 3);
+        assert!(shaped.itemsets.len() < full.itemsets.len());
+        assert!(
+            !shaped.rules.is_empty(),
+            "rules generate from the cached full result"
+        );
+        assert!(shaped.rules.iter().all(|r| r.contains("=>")), "{:?}", shaped.rules);
+    }
+
+    #[test]
+    fn shutdown_request_acks_and_serves_over_a_real_socket() {
+        let conf = SparkletConf::new("serve-sock").with_cores(2).unwrap();
+        let (server, _) = test_server(conf);
+        let path = std::env::temp_dir().join(format!("sparklet-serve-test-{}.sock", std::process::id()));
+        let path_str = path.to_string_lossy().to_string();
+        let srv = Arc::clone(&server);
+        let ps = path_str.clone();
+        let t = std::thread::spawn(move || srv.run(&ps));
+        // Wait for the socket to appear.
+        for _ in 0..200 {
+            if path.exists() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        let mut conn = UnixStream::connect(&path).expect("connect to serve socket");
+        write_frame(&mut conn, &request(0.25).to_message()).unwrap();
+        let resp = ServeResponse::from_message(&read_frame(&mut conn).unwrap()).unwrap();
+        let res = expect_result(resp);
+        assert_eq!(res.cache_hit, "miss");
+        assert!(res.n_transactions > 0);
+        // Shutdown over a second connection: typed ack, then the accept
+        // loop exits and the socket file goes away.
+        let mut conn2 = UnixStream::connect(&path).expect("second connection");
+        let shutdown = ServeRequest {
+            shutdown: true,
+            ..ServeRequest::default()
+        };
+        write_frame(&mut conn2, &shutdown.to_message()).unwrap();
+        let ack = ServeResponse::from_message(&read_frame(&mut conn2).unwrap()).unwrap();
+        assert_eq!(ack, ServeResponse::ShuttingDown);
+        t.join().unwrap().unwrap();
+        assert!(!path.exists(), "socket file removed on exit");
+    }
+}

@@ -117,6 +117,11 @@ pub struct BlockStore {
     spilled_blocks: AtomicU64,
     reloaded_blocks: AtomicU64,
     spilled_bytes: AtomicU64,
+    /// Bytes charged by co-tenants of the budget that don't live in the
+    /// store (the serve-mode result cache). They count against the same
+    /// budget — external pressure LRU-spills shuffle blocks — but can't
+    /// themselves be spilled, only released.
+    external_bytes: AtomicU64,
     hook: Mutex<Option<BlockIoHook>>,
 }
 
@@ -135,6 +140,7 @@ impl BlockStore {
             spilled_blocks: AtomicU64::new(0),
             reloaded_blocks: AtomicU64::new(0),
             spilled_bytes: AtomicU64::new(0),
+            external_bytes: AtomicU64::new(0),
             hook: Mutex::new(None),
         }
     }
@@ -281,13 +287,70 @@ impl BlockStore {
         self.budget
     }
 
+    /// Charge `bytes` of external (non-block) usage against the budget.
+    /// Resident shuffle blocks are LRU-spilled if the combined total now
+    /// exceeds it — external bytes themselves cannot spill.
+    pub fn charge_external(&self, bytes: usize) {
+        self.external_bytes
+            .fetch_add(bytes as u64, Ordering::Relaxed);
+        let mut fired = Vec::new();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            self.enforce_budget(&mut inner, &mut fired);
+        }
+        self.fire_hook(&fired);
+    }
+
+    /// Release previously charged external bytes (saturating — an
+    /// over-release clamps to zero rather than wrapping).
+    pub fn release_external(&self, bytes: usize) {
+        let mut cur = self.external_bytes.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(bytes as u64);
+            match self.external_bytes.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Externally charged bytes currently outstanding.
+    pub fn external_bytes(&self) -> usize {
+        self.external_bytes.load(Ordering::Relaxed) as usize
+    }
+
+    /// Total budget consumption: resident block bytes plus external
+    /// charges. This is the number serve-mode admission compares
+    /// against the budget.
+    pub fn used_bytes(&self) -> usize {
+        let ext = self.external_bytes.load(Ordering::Relaxed) as usize;
+        self.inner.lock().unwrap().mem_bytes.saturating_add(ext)
+    }
+
+    /// Files currently present in the spill directory (0 if nothing has
+    /// ever spilled). The serve-mode leak test asserts this returns to
+    /// its baseline after each request's `clear_shuffle`.
+    pub fn spill_file_count(&self) -> usize {
+        let dir = self.inner.lock().unwrap().spill_dir.clone();
+        match dir {
+            None => 0,
+            Some(dir) => std::fs::read_dir(dir).map(|it| it.count()).unwrap_or(0),
+        }
+    }
+
     /// LRU-spill cold blocks until the resident set fits the budget.
     /// File IO happens under the store lock — acceptable at this
     /// engine's scale, and it keeps the accounting race-free. Spill
     /// notifications are collected into `fired` for the caller to
     /// deliver once the lock is released.
     fn enforce_budget(&self, inner: &mut Inner, fired: &mut Vec<(BlockId, usize, bool)>) {
-        while inner.mem_bytes > self.budget {
+        let external = self.external_bytes.load(Ordering::Relaxed) as usize;
+        while inner.mem_bytes.saturating_add(external) > self.budget {
             let victim = inner
                 .blocks
                 .iter()
@@ -441,6 +504,46 @@ mod tests {
         let all = seen.lock().unwrap().clone();
         assert!(all.contains(&(id(0, 0, 0), 1000, true)), "{all:?}");
         assert!(all.contains(&(id(0, 1, 0), 1000, false)), "{all:?}");
+    }
+
+    #[test]
+    fn external_charges_share_the_budget_and_spill_blocks() {
+        let store = BlockStore::new(Some(2000));
+        store.put(id(0, 0, 0), payload(1, 800), 1);
+        store.put(id(0, 1, 0), payload(2, 800), 1);
+        assert_eq!(store.spilled_blocks(), 0, "1600 B fits a 2000 B budget");
+        assert_eq!(store.used_bytes(), 1600);
+
+        // An external tenant claims 1000 B: combined usage 2600 B blows
+        // the budget, so the coldest block must spill even though no
+        // block was written.
+        store.charge_external(1000);
+        assert_eq!(store.external_bytes(), 1000);
+        assert!(store.spilled_blocks() >= 1, "external pressure spills");
+        assert!(store.mem_bytes() + store.external_bytes() <= 2000);
+        assert!(store.spill_file_count() >= 1);
+
+        // Releasing makes headroom again; spilled blocks still reload.
+        store.release_external(1000);
+        assert_eq!(store.external_bytes(), 0);
+        let b = store.get(&id(0, 0, 0)).unwrap();
+        assert_eq!(b.bytes.as_slice(), payload(1, 800).as_slice());
+
+        // Over-release clamps instead of wrapping.
+        store.release_external(usize::MAX);
+        assert_eq!(store.external_bytes(), 0);
+        assert_eq!(store.used_bytes(), store.mem_bytes());
+    }
+
+    #[test]
+    fn spill_file_count_returns_to_zero_after_clear() {
+        let store = BlockStore::new(Some(1));
+        assert_eq!(store.spill_file_count(), 0, "nothing spilled yet");
+        store.put(id(0, 0, 0), payload(3, 400), 1);
+        store.put(id(0, 1, 0), payload(4, 400), 1);
+        assert_eq!(store.spill_file_count(), 2);
+        store.clear();
+        assert_eq!(store.spill_file_count(), 0, "clear deletes spill files");
     }
 
     #[test]

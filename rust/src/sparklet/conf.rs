@@ -32,6 +32,14 @@ pub enum ConfError {
     /// The executor backend failed to start its runtime services (for
     /// the multi-process backend: socket bind or worker spawn failed).
     BackendAttach { backend: String, reason: String },
+    /// `serve_queue_depth` must be >= 1.
+    InvalidQueueDepth { value: String },
+    /// `serve_tenant_rate` must be finite and >= 0 (0 disables shedding).
+    InvalidTenantRate { value: String },
+    /// `serve_cache_budget` must be >= 1 (use `None` for unlimited).
+    InvalidCacheBudget { value: String },
+    /// `event_log_max_bytes` must be >= 1 (use `None` for uncapped).
+    InvalidEventLogCap { value: String },
 }
 
 impl From<ExecutorError> for ConfError {
@@ -64,6 +72,18 @@ impl std::fmt::Display for ConfError {
             }
             Self::BackendAttach { backend, reason } => {
                 write!(f, "executor backend {backend:?} failed to start: {reason}")
+            }
+            Self::InvalidQueueDepth { value } => {
+                write!(f, "serve_queue_depth must be >= 1 (got {value})")
+            }
+            Self::InvalidTenantRate { value } => {
+                write!(f, "serve_tenant_rate must be finite and >= 0 (got {value})")
+            }
+            Self::InvalidCacheBudget { value } => {
+                write!(f, "serve cache budget must be >= 1 MiB (got {value})")
+            }
+            Self::InvalidEventLogCap { value } => {
+                write!(f, "event log size cap must be >= 1 MiB (got {value})")
             }
         }
     }
@@ -138,6 +158,29 @@ pub struct SparkletConf {
     /// the spawned worker via its hidden `--fault` flag; used by the
     /// kill-a-worker recovery tests.
     pub worker_fault: Option<String>,
+    /// Rotate the event log once it exceeds this many **bytes**: the
+    /// current file is renamed to `<path>.1` (replacing any previous
+    /// generation) and a fresh file is started, bounding a long-lived
+    /// process's log at roughly twice the cap. `None` = never rotate
+    /// (the pre-serve behavior, fine for one-shot CLI runs).
+    pub event_log_max_bytes: Option<u64>,
+    /// Unix socket path the `serve` command listens on
+    /// (`SPARKLET_SERVE_SOCKET`; `None` = derive a default under the
+    /// system temp dir).
+    pub serve_socket: Option<String>,
+    /// Bound on the serve-mode admission queue: at most this many
+    /// requests may wait for the mining slot before new arrivals are
+    /// rejected with `Overloaded` (`SPARKLET_SERVE_QUEUE_DEPTH`).
+    pub serve_queue_depth: usize,
+    /// Per-tenant token-bucket refill rate in requests/second for the
+    /// serve-mode load shedder. `0.0` disables per-tenant shedding
+    /// (`SPARKLET_SERVE_TENANT_RATE`).
+    pub serve_tenant_rate: f64,
+    /// Byte budget for the serve-mode result cache (`None` =
+    /// unlimited). Cached bytes are charged as *external* usage against
+    /// the shuffle `BlockStore` accounting, so admission control sees
+    /// cache pressure too (`SPARKLET_SERVE_CACHE_MB`).
+    pub serve_cache_budget: Option<usize>,
 }
 
 impl Default for SparkletConf {
@@ -163,6 +206,11 @@ impl Default for SparkletConf {
             worker_timeout_ms: 5_000,
             worker_binary: None,
             worker_fault: None,
+            event_log_max_bytes: None,
+            serve_socket: None,
+            serve_queue_depth: 16,
+            serve_tenant_rate: 0.0,
+            serve_cache_budget: None,
         }
     }
 }
@@ -294,11 +342,80 @@ impl SparkletConf {
         self
     }
 
+    /// Rotate the event log to `<path>.1` once it exceeds `mb` MiB
+    /// (0 is an error; unset means never rotate).
+    pub fn with_event_log_max_mb(mut self, mb: usize) -> Result<Self, ConfError> {
+        if mb == 0 {
+            return Err(ConfError::InvalidEventLogCap { value: "0".into() });
+        }
+        self.event_log_max_bytes = Some(mb as u64 * 1024 * 1024);
+        Ok(self)
+    }
+
+    /// Byte-granular rotation cap (tests; the MiB builder is the
+    /// user-facing knob).
+    pub fn with_event_log_max_bytes(mut self, bytes: u64) -> Result<Self, ConfError> {
+        if bytes == 0 {
+            return Err(ConfError::InvalidEventLogCap { value: "0".into() });
+        }
+        self.event_log_max_bytes = Some(bytes);
+        Ok(self)
+    }
+
+    /// Unix socket path for the `serve` command.
+    pub fn with_serve_socket(mut self, path: &str) -> Self {
+        self.serve_socket = Some(path.to_string());
+        self
+    }
+
+    /// Bound the serve-mode admission queue at `n` waiting requests.
+    pub fn with_serve_queue_depth(mut self, n: usize) -> Result<Self, ConfError> {
+        if n == 0 {
+            return Err(ConfError::InvalidQueueDepth { value: "0".into() });
+        }
+        self.serve_queue_depth = n;
+        Ok(self)
+    }
+
+    /// Per-tenant token-bucket rate in requests/second (`0.0` disables
+    /// shedding; negative or non-finite rates are errors).
+    pub fn with_serve_tenant_rate(mut self, rate: f64) -> Result<Self, ConfError> {
+        if !rate.is_finite() || rate < 0.0 {
+            return Err(ConfError::InvalidTenantRate {
+                value: format!("{rate}"),
+            });
+        }
+        self.serve_tenant_rate = rate;
+        Ok(self)
+    }
+
+    /// Cap the serve-mode result cache at `mb` MiB (0 is an error;
+    /// unset means unlimited).
+    pub fn with_serve_cache_budget_mb(mut self, mb: usize) -> Result<Self, ConfError> {
+        if mb == 0 {
+            return Err(ConfError::InvalidCacheBudget { value: "0".into() });
+        }
+        self.serve_cache_budget = Some(mb * 1024 * 1024);
+        Ok(self)
+    }
+
+    /// Byte-granular cache budget (tests and tooling).
+    pub fn with_serve_cache_budget_bytes(mut self, bytes: usize) -> Result<Self, ConfError> {
+        if bytes == 0 {
+            return Err(ConfError::InvalidCacheBudget { value: "0".into() });
+        }
+        self.serve_cache_budget = Some(bytes);
+        Ok(self)
+    }
+
     /// Apply the `SPARKLET_CORES`, `SPARKLET_BACKEND`,
     /// `SPARKLET_SHUFFLE_PARTITIONS`, `SPARKLET_MEMORY_MB`,
     /// `SPARKLET_SHARED_NOTHING`, `SPARKLET_WORKERS`,
     /// `SPARKLET_SOCKET_DIR`, `SPARKLET_HEARTBEAT_MS`,
-    /// `SPARKLET_WORKER_TIMEOUT_MS`, and `SPARKLET_WORKER_BINARY`
+    /// `SPARKLET_WORKER_TIMEOUT_MS`, `SPARKLET_WORKER_BINARY`,
+    /// `SPARKLET_EVENT_LOG_MAX_MB`, `SPARKLET_SERVE_SOCKET`,
+    /// `SPARKLET_SERVE_QUEUE_DEPTH`, `SPARKLET_SERVE_TENANT_RATE`, and
+    /// `SPARKLET_SERVE_CACHE_MB`
     /// environment overrides on top of the current values (empty/unset
     /// variables are ignored). Cores are applied before shuffle
     /// partitions, so setting both honours the explicit partition count.
@@ -333,6 +450,21 @@ impl SparkletConf {
         if let Some(bin) = env_str("SPARKLET_WORKER_BINARY") {
             self = self.with_worker_binary(&bin);
         }
+        if let Some(mb) = env_usize("SPARKLET_EVENT_LOG_MAX_MB")? {
+            self = self.with_event_log_max_mb(mb)?;
+        }
+        if let Some(path) = env_str("SPARKLET_SERVE_SOCKET") {
+            self = self.with_serve_socket(&path);
+        }
+        if let Some(n) = env_usize("SPARKLET_SERVE_QUEUE_DEPTH")? {
+            self = self.with_serve_queue_depth(n)?;
+        }
+        if let Some(rate) = env_f64("SPARKLET_SERVE_TENANT_RATE")? {
+            self = self.with_serve_tenant_rate(rate)?;
+        }
+        if let Some(mb) = env_usize("SPARKLET_SERVE_CACHE_MB")? {
+            self = self.with_serve_cache_budget_mb(mb)?;
+        }
         Ok(self)
     }
 }
@@ -351,6 +483,25 @@ fn env_bool(var: &'static str) -> Result<Option<bool>, ConfError> {
                 var,
                 value,
                 reason: "not a boolean (use 0/1)".into(),
+            }),
+        },
+    }
+}
+
+fn env_f64(var: &'static str) -> Result<Option<f64>, ConfError> {
+    match env_str(var) {
+        None => Ok(None),
+        Some(value) => match value.parse::<f64>() {
+            Ok(v) if v.is_finite() && v >= 0.0 => Ok(Some(v)),
+            Ok(_) => Err(ConfError::InvalidEnv {
+                var,
+                value,
+                reason: "must be finite and >= 0".into(),
+            }),
+            Err(_) => Err(ConfError::InvalidEnv {
+                var,
+                value,
+                reason: "not a number".into(),
             }),
         },
     }
@@ -450,6 +601,62 @@ mod tests {
     }
 
     #[test]
+    fn serve_knobs_default_and_validate() {
+        let c = SparkletConf::default();
+        assert_eq!(c.serve_socket, None);
+        assert_eq!(c.serve_queue_depth, 16);
+        assert_eq!(c.serve_tenant_rate, 0.0, "shedding off by default");
+        assert_eq!(c.serve_cache_budget, None);
+        assert_eq!(c.event_log_max_bytes, None, "no rotation by default");
+
+        let c = c
+            .with_serve_socket("/tmp/s.sock")
+            .with_serve_queue_depth(4)
+            .unwrap()
+            .with_serve_tenant_rate(2.5)
+            .unwrap()
+            .with_serve_cache_budget_mb(8)
+            .unwrap()
+            .with_event_log_max_mb(2)
+            .unwrap();
+        assert_eq!(c.serve_socket.as_deref(), Some("/tmp/s.sock"));
+        assert_eq!(c.serve_queue_depth, 4);
+        assert_eq!(c.serve_tenant_rate, 2.5);
+        assert_eq!(c.serve_cache_budget, Some(8 * 1024 * 1024));
+        assert_eq!(c.event_log_max_bytes, Some(2 * 1024 * 1024));
+        let c = c
+            .with_serve_cache_budget_bytes(4096)
+            .unwrap()
+            .with_event_log_max_bytes(512)
+            .unwrap();
+        assert_eq!(c.serve_cache_budget, Some(4096));
+        assert_eq!(c.event_log_max_bytes, Some(512));
+
+        let err = SparkletConf::default()
+            .with_serve_queue_depth(0)
+            .unwrap_err();
+        assert!(matches!(err, ConfError::InvalidQueueDepth { .. }));
+        assert!(err.to_string().contains("serve_queue_depth"), "{err}");
+        let err = SparkletConf::default()
+            .with_serve_tenant_rate(-1.0)
+            .unwrap_err();
+        assert!(matches!(err, ConfError::InvalidTenantRate { .. }));
+        let err = SparkletConf::default()
+            .with_serve_tenant_rate(f64::NAN)
+            .unwrap_err();
+        assert!(matches!(err, ConfError::InvalidTenantRate { .. }));
+        let err = SparkletConf::default()
+            .with_serve_cache_budget_mb(0)
+            .unwrap_err();
+        assert!(matches!(err, ConfError::InvalidCacheBudget { .. }));
+        let err = SparkletConf::default().with_event_log_max_mb(0).unwrap_err();
+        assert!(matches!(err, ConfError::InvalidEventLogCap { .. }));
+        // Rate 0 is valid — it means "shedding disabled", not "no requests".
+        let c = SparkletConf::default().with_serve_tenant_rate(0.0).unwrap();
+        assert_eq!(c.serve_tenant_rate, 0.0);
+    }
+
+    #[test]
     fn backend_names_validate_with_suggestions() {
         // Aliases canonicalize.
         let c = SparkletConf::default().with_executor_backend("ws").unwrap();
@@ -481,6 +688,11 @@ mod tests {
             std::env::remove_var("SPARKLET_HEARTBEAT_MS");
             std::env::remove_var("SPARKLET_WORKER_TIMEOUT_MS");
             std::env::remove_var("SPARKLET_WORKER_BINARY");
+            std::env::remove_var("SPARKLET_EVENT_LOG_MAX_MB");
+            std::env::remove_var("SPARKLET_SERVE_SOCKET");
+            std::env::remove_var("SPARKLET_SERVE_QUEUE_DEPTH");
+            std::env::remove_var("SPARKLET_SERVE_TENANT_RATE");
+            std::env::remove_var("SPARKLET_SERVE_CACHE_MB");
         };
         clear();
 
@@ -561,6 +773,32 @@ mod tests {
             matches!(err, ConfError::InvalidEnv { var: "SPARKLET_WORKERS", .. }),
             "{err}"
         );
+        std::env::set_var("SPARKLET_WORKERS", "3");
+
+        // Serve + rotation knobs.
+        std::env::set_var("SPARKLET_EVENT_LOG_MAX_MB", "2");
+        std::env::set_var("SPARKLET_SERVE_SOCKET", "/tmp/serve.sock");
+        std::env::set_var("SPARKLET_SERVE_QUEUE_DEPTH", "9");
+        std::env::set_var("SPARKLET_SERVE_TENANT_RATE", "1.5");
+        std::env::set_var("SPARKLET_SERVE_CACHE_MB", "3");
+        let c = base.clone().with_env_overrides().unwrap();
+        assert_eq!(c.event_log_max_bytes, Some(2 * 1024 * 1024));
+        assert_eq!(c.serve_socket.as_deref(), Some("/tmp/serve.sock"));
+        assert_eq!(c.serve_queue_depth, 9);
+        assert_eq!(c.serve_tenant_rate, 1.5);
+        assert_eq!(c.serve_cache_budget, Some(3 * 1024 * 1024));
+        std::env::set_var("SPARKLET_SERVE_TENANT_RATE", "-2");
+        let err = base.clone().with_env_overrides().unwrap_err();
+        assert!(
+            matches!(
+                err,
+                ConfError::InvalidEnv { var: "SPARKLET_SERVE_TENANT_RATE", .. }
+            ),
+            "{err}"
+        );
+        std::env::set_var("SPARKLET_SERVE_TENANT_RATE", "fast");
+        let err = base.clone().with_env_overrides().unwrap_err();
+        assert!(err.to_string().contains("not a number"), "{err}");
 
         clear();
     }

@@ -60,10 +60,12 @@ impl SparkletContext {
             events.register(Arc::new(MetricsListener::new(Arc::clone(&metrics))));
         }
         if let Some(path) = &conf.event_log {
-            let writer = EventLogWriter::append(path).map_err(|e| ConfError::EventLog {
-                path: path.clone(),
-                reason: e.to_string(),
-            })?;
+            let writer = EventLogWriter::with_rotation(path, conf.event_log_max_bytes).map_err(
+                |e| ConfError::EventLog {
+                    path: path.clone(),
+                    reason: e.to_string(),
+                },
+            )?;
             events.register(Arc::new(writer));
         }
         let shuffle = Arc::new(ShuffleManager::with_conf(

@@ -135,6 +135,26 @@ pub enum SparkletEvent {
         repr_switches: u64,
         bytes_allocated: u64,
     },
+    /// Serve mode: a mining request arrived on the socket. Every
+    /// received request is closed by exactly one `RequestRejected` or
+    /// `RequestCompleted` with the same `request` id — the serving
+    /// analog of the Job span pair.
+    RequestReceived { request: u64, tenant: String },
+    /// The request cleared admission control (cache hits are admitted
+    /// trivially with `queued_ms` 0; misses report the FIFO queue wait).
+    RequestAdmitted { request: u64, queued_ms: f64 },
+    /// The request was refused before mining: `reason` is one of
+    /// `overloaded` (queue/budget), `throttled` (per-tenant token
+    /// bucket), or `bad-request`.
+    RequestRejected { request: u64, reason: String },
+    /// The request was answered. `cache_hit` is `exact`, `subsumed`, or
+    /// `miss`.
+    RequestCompleted {
+        request: u64,
+        cache_hit: String,
+        itemsets: u64,
+        wall_ms: f64,
+    },
 }
 
 impl SparkletEvent {
@@ -156,6 +176,10 @@ impl SparkletEvent {
             Self::StreamBatchCompleted { .. } => "StreamBatchCompleted",
             Self::BackpressureTransition { .. } => "BackpressureTransition",
             Self::KernelSnapshot { .. } => "KernelSnapshot",
+            Self::RequestReceived { .. } => "RequestReceived",
+            Self::RequestAdmitted { .. } => "RequestAdmitted",
+            Self::RequestRejected { .. } => "RequestRejected",
+            Self::RequestCompleted { .. } => "RequestCompleted",
         }
     }
 
@@ -302,6 +326,29 @@ impl SparkletEvent {
                 push_field(&mut s, "repr_switches", &repr_switches.to_string());
                 push_field(&mut s, "bytes_allocated", &bytes_allocated.to_string());
             }
+            Self::RequestReceived { request, tenant } => {
+                push_field(&mut s, "request", &request.to_string());
+                push_str_field(&mut s, "tenant", tenant);
+            }
+            Self::RequestAdmitted { request, queued_ms } => {
+                push_field(&mut s, "request", &request.to_string());
+                push_field(&mut s, "queued_ms", &format!("{queued_ms:.3}"));
+            }
+            Self::RequestRejected { request, reason } => {
+                push_field(&mut s, "request", &request.to_string());
+                push_str_field(&mut s, "reason", reason);
+            }
+            Self::RequestCompleted {
+                request,
+                cache_hit,
+                itemsets,
+                wall_ms,
+            } => {
+                push_field(&mut s, "request", &request.to_string());
+                push_str_field(&mut s, "cache_hit", cache_hit);
+                push_field(&mut s, "itemsets", &itemsets.to_string());
+                push_field(&mut s, "wall_ms", &format!("{wall_ms:.3}"));
+            }
         }
         s.push('}');
         s
@@ -376,20 +423,67 @@ impl EventListener for MetricsListener {
 /// of a bench sweep share one log; the CLI truncates the file once per
 /// invocation. Writes are unbuffered — every line is durable as soon as
 /// the event is delivered, so a crashed run still leaves a usable log.
+///
+/// Long-lived processes (serve mode) set a size cap: once appending a
+/// line would push the file past `max_bytes`, the current file is
+/// rotated to `<path>.1` (replacing any previous rotation) and a fresh
+/// file starts. At most two generations exist, so an always-on server's
+/// disk use is bounded at ~2× the cap instead of growing forever.
 pub struct EventLogWriter {
-    file: Mutex<std::fs::File>,
+    path: String,
+    max_bytes: Option<u64>,
+    state: Mutex<WriterState>,
+}
+
+struct WriterState {
+    file: std::fs::File,
+    written: u64,
 }
 
 impl EventLogWriter {
-    /// Open `path` for appending (creating it if needed).
+    /// Open `path` for appending (creating it if needed), no size cap.
     pub fn append(path: &str) -> std::io::Result<Self> {
+        Self::with_rotation(path, None)
+    }
+
+    /// Open `path` for appending with an optional rotation cap in
+    /// bytes. `Some(0)` is treated as the smallest useful cap (every
+    /// line rotates) rather than an error — conf validation rejects 0
+    /// before it gets here.
+    pub fn with_rotation(path: &str, max_bytes: Option<u64>) -> std::io::Result<Self> {
         let file = std::fs::OpenOptions::new()
             .create(true)
             .append(true)
             .open(path)?;
+        // Resume the byte count from the existing file so a writer
+        // attached mid-log still respects the cap.
+        let written = file.metadata().map(|m| m.len()).unwrap_or(0);
         Ok(Self {
-            file: Mutex::new(file),
+            path: path.to_string(),
+            max_bytes,
+            state: Mutex::new(WriterState { file, written }),
         })
+    }
+
+    /// The rotation target: `<path>.1`.
+    pub fn rotated_path(path: &str) -> String {
+        format!("{path}.1")
+    }
+
+    fn rotate(&self, state: &mut WriterState) -> std::io::Result<()> {
+        // Close the handle before renaming (Windows semantics; on Unix
+        // the rename would work anyway, but the swap keeps one code
+        // path). A failed reopen leaves the old handle in place.
+        let fresh = {
+            std::fs::rename(&self.path, Self::rotated_path(&self.path))?;
+            std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&self.path)?
+        };
+        state.file = fresh;
+        state.written = 0;
+        Ok(())
     }
 }
 
@@ -397,9 +491,17 @@ impl EventListener for EventLogWriter {
     fn on_event(&self, t_ms: f64, event: &SparkletEvent) {
         let mut line = event.to_json_line(t_ms);
         line.push('\n');
-        let mut file = self.file.lock().unwrap();
-        if let Err(e) = file.write_all(line.as_bytes()) {
-            log::warn!("event log write failed: {e}");
+        let mut state = self.state.lock().unwrap();
+        if let Some(max) = self.max_bytes {
+            if state.written > 0 && state.written + line.len() as u64 > max {
+                if let Err(e) = self.rotate(&mut state) {
+                    log::warn!("event log rotation failed: {e}");
+                }
+            }
+        }
+        match state.file.write_all(line.as_bytes()) {
+            Ok(()) => state.written += line.len() as u64,
+            Err(e) => log::warn!("event log write failed: {e}"),
         }
     }
 }
@@ -866,6 +968,24 @@ mod tests {
                 repr_switches: 1,
                 bytes_allocated: 640,
             },
+            SparkletEvent::RequestReceived {
+                request: 3,
+                tenant: "acme \"corp\"".into(),
+            },
+            SparkletEvent::RequestAdmitted {
+                request: 3,
+                queued_ms: 1.5,
+            },
+            SparkletEvent::RequestRejected {
+                request: 4,
+                reason: "overloaded".into(),
+            },
+            SparkletEvent::RequestCompleted {
+                request: 3,
+                cache_hit: "subsumed".into(),
+                itemsets: 120,
+                wall_ms: 2.25,
+            },
         ]
     }
 
@@ -1115,6 +1235,72 @@ mod tests {
         }
         let content = std::fs::read_to_string(&path).unwrap();
         assert_eq!(content.lines().count(), lines.len() + 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn event_log_writer_rotates_at_the_size_cap() {
+        let path = std::env::temp_dir().join(format!(
+            "sparklet-events-rotate-test-{}.jsonl",
+            std::process::id()
+        ));
+        let path_str = path.to_str().unwrap().to_string();
+        let rotated = EventLogWriter::rotated_path(&path_str);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&rotated);
+
+        // Cap small enough that a handful of JobStart lines overflow it
+        // (each line is ~45 bytes), large enough to hold a few.
+        let writer = EventLogWriter::with_rotation(&path_str, Some(200)).unwrap();
+        let bus = EventBus::new();
+        bus.register(Arc::new(writer));
+        for i in 0..50 {
+            bus.emit(SparkletEvent::JobStart { job_id: i });
+        }
+        bus.flush();
+
+        // Both generations exist, both under the cap, both parseable,
+        // and no event was lost across the rotation boundary.
+        let live = std::fs::read_to_string(&path).unwrap();
+        let old = std::fs::read_to_string(&rotated).unwrap();
+        assert!(live.len() as u64 <= 200, "live log exceeds cap: {}", live.len());
+        assert!(old.len() as u64 <= 200, "rotated log exceeds cap: {}", old.len());
+        let mut ids = Vec::new();
+        for line in old.lines().chain(live.lines()) {
+            let obj = parse_json_line(line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(obj["type"].as_str().unwrap(), "JobStart");
+            ids.push(obj["job"].as_f64().unwrap() as u64);
+        }
+        // The rotated file only keeps the latest overflowed generation,
+        // so early ids may be gone — but what survives is contiguous
+        // and ends at the last emission.
+        assert_eq!(*ids.last().unwrap(), 49);
+        for pair in ids.windows(2) {
+            assert_eq!(pair[1], pair[0] + 1, "gap inside surviving generations");
+        }
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&rotated);
+    }
+
+    #[test]
+    fn uncapped_writer_never_rotates() {
+        let path = std::env::temp_dir().join(format!(
+            "sparklet-events-norotate-test-{}.jsonl",
+            std::process::id()
+        ));
+        let path_str = path.to_str().unwrap().to_string();
+        let rotated = EventLogWriter::rotated_path(&path_str);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&rotated);
+        let writer = EventLogWriter::append(&path_str).unwrap();
+        let bus = EventBus::new();
+        bus.register(Arc::new(writer));
+        for i in 0..100 {
+            bus.emit(SparkletEvent::JobStart { job_id: i });
+        }
+        bus.flush();
+        assert_eq!(std::fs::read_to_string(&path).unwrap().lines().count(), 100);
+        assert!(!std::path::Path::new(&rotated).exists());
         let _ = std::fs::remove_file(&path);
     }
 

@@ -229,6 +229,33 @@ impl ShuffleManager {
         self.store.spilled_bytes()
     }
 
+    /// Charge external (non-block) bytes — the serve-mode result cache —
+    /// against the store's memory budget.
+    pub fn charge_external(&self, bytes: usize) {
+        self.store.charge_external(bytes);
+    }
+
+    /// Release previously charged external bytes.
+    pub fn release_external(&self, bytes: usize) {
+        self.store.release_external(bytes);
+    }
+
+    /// Combined budget consumption: resident block bytes plus external
+    /// charges (what serve-mode admission compares to the budget).
+    pub fn used_bytes(&self) -> usize {
+        self.store.used_bytes()
+    }
+
+    /// The store's configured budget in bytes (`usize::MAX` = unlimited).
+    pub fn memory_budget(&self) -> usize {
+        self.store.budget()
+    }
+
+    /// Files currently in the spill directory (leak detection).
+    pub fn spill_file_count(&self) -> usize {
+        self.store.spill_file_count()
+    }
+
     /// Human-readable spill line for CLI output.
     pub fn spill_summary(&self) -> String {
         let budget = self.store.budget();

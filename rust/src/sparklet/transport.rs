@@ -144,6 +144,14 @@ pub enum Message {
     WorkerLost { worker: String, reason: String },
     /// Driver → worker: exit the worker loop cleanly.
     Shutdown,
+    /// Client → server (serve mode): one mining request. The body is an
+    /// opaque serve-layer payload (`serve::protocol::ServeRequest`
+    /// bytes) — the transport stays ignorant of mining vocabulary, the
+    /// same way `TaskDescriptor` payloads are opaque to it.
+    Request { body: Vec<u8> },
+    /// Server → client (serve mode): the answer to one `Request`
+    /// (`serve::protocol::ServeResponse` bytes).
+    Response { body: Vec<u8> },
 }
 
 const TAG_REGISTER: u8 = 1;
@@ -154,6 +162,8 @@ const TAG_BLOCKDATA: u8 = 5;
 const TAG_HEARTBEAT: u8 = 6;
 const TAG_WORKERLOST: u8 = 7;
 const TAG_SHUTDOWN: u8 = 8;
+const TAG_REQUEST: u8 = 9;
+const TAG_RESPONSE: u8 = 10;
 
 impl Message {
     /// Encode into a frame payload (tag byte + body).
@@ -214,6 +224,14 @@ impl Message {
                 reason.encode(&mut out);
             }
             Self::Shutdown => out.push(TAG_SHUTDOWN),
+            Self::Request { body } => {
+                out.push(TAG_REQUEST);
+                body.encode(&mut out);
+            }
+            Self::Response { body } => {
+                out.push(TAG_RESPONSE);
+                body.encode(&mut out);
+            }
         }
         out
     }
@@ -257,6 +275,12 @@ impl Message {
                 reason: String::decode(&mut r)?,
             },
             TAG_SHUTDOWN => Self::Shutdown,
+            TAG_REQUEST => Self::Request {
+                body: Vec::decode(&mut r)?,
+            },
+            TAG_RESPONSE => Self::Response {
+                body: Vec::decode(&mut r)?,
+            },
             other => return Err(TransportError::UnknownTag(other)),
         };
         if r.remaining() != 0 {
@@ -475,6 +499,10 @@ mod tests {
                 reason: "heartbeat timeout".into(),
             },
             Message::Shutdown,
+            Message::Request {
+                body: vec![0xDE, 0xAD, 0xBE, 0xEF],
+            },
+            Message::Response { body: Vec::new() },
         ]
     }
 

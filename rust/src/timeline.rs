@@ -117,6 +117,15 @@ pub struct Replay {
     pub workers_lost: usize,
     /// FetchBlock requests the driver served to remote workers.
     pub remote_fetches: usize,
+    /// Serve-mode request spans: RequestReceived counts.
+    pub requests_received: usize,
+    pub requests_admitted: usize,
+    pub requests_rejected: usize,
+    pub requests_completed: usize,
+    /// RequestCompleted `cache_hit` label -> count (exact/subsumed/miss).
+    pub cache_hits: BTreeMap<String, usize>,
+    /// RequestRejected `reason` -> count (overloaded/throttled/...).
+    pub reject_reasons: BTreeMap<String, usize>,
     /// Events with an unrecognized `type` (skipped, forward-compat).
     pub unknown_events: usize,
     /// Lines that failed to parse, as `(line_number, error)`.
@@ -290,6 +299,16 @@ pub fn replay(log: &str) -> Result<Replay, String> {
                 ));
             }
             "RemoteFetch" => rp.remote_fetches += 1,
+            "RequestReceived" => rp.requests_received += 1,
+            "RequestAdmitted" => rp.requests_admitted += 1,
+            "RequestRejected" => {
+                rp.requests_rejected += 1;
+                *rp.reject_reasons.entry(text(&obj, "reason")).or_insert(0) += 1;
+            }
+            "RequestCompleted" => {
+                rp.requests_completed += 1;
+                *rp.cache_hits.entry(text(&obj, "cache_hit")).or_insert(0) += 1;
+            }
             "KernelSnapshot" => {
                 rp.kernel_snapshots += 1;
                 annotations.push((
@@ -387,6 +406,26 @@ pub fn render(rp: &Replay, width: usize) -> String {
         rp.stream_batches,
         rp.bp_transitions,
     ));
+    if rp.requests_received > 0 {
+        let tally = |m: &BTreeMap<String, usize>| -> String {
+            m.iter()
+                .map(|(k, v)| format!("{v} {k}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        out.push_str(&format!(
+            "serving: {} requests received, {} admitted, {} completed ({}), {} rejected",
+            rp.requests_received,
+            rp.requests_admitted,
+            rp.requests_completed,
+            tally(&rp.cache_hits),
+            rp.requests_rejected,
+        ));
+        if !rp.reject_reasons.is_empty() {
+            out.push_str(&format!(" ({})", tally(&rp.reject_reasons)));
+        }
+        out.push('\n');
+    }
     if !rp.workers.is_empty() || rp.workers_lost > 0 {
         out.push_str(&format!(
             "workers: {} registered ({}), {} lost, {} remote fetches\n",
@@ -782,6 +821,77 @@ mod tests {
         let flat = render(&replay(&synthetic_log()).unwrap(), 40);
         assert!(!flat.contains("lane "), "{flat}");
         assert!(!flat.contains("workers:"), "{flat}");
+    }
+
+    #[test]
+    fn serve_request_spans_tally_in_the_footer() {
+        let mut log = String::new();
+        let mut t = 0.0;
+        let mut push = |ev: SparkletEvent, log: &mut String| {
+            t += 1.0;
+            log.push_str(&ev.to_json_line(t));
+            log.push('\n');
+        };
+        // Request 0: miss. Request 1: exact repeat. Request 2: rejected.
+        for (id, hit) in [(0u64, "miss"), (1, "exact")] {
+            push(
+                SparkletEvent::RequestReceived {
+                    request: id,
+                    tenant: "acme".into(),
+                },
+                &mut log,
+            );
+            push(
+                SparkletEvent::RequestAdmitted {
+                    request: id,
+                    queued_ms: 0.0,
+                },
+                &mut log,
+            );
+            push(
+                SparkletEvent::RequestCompleted {
+                    request: id,
+                    cache_hit: hit.into(),
+                    itemsets: 42,
+                    wall_ms: 1.0,
+                },
+                &mut log,
+            );
+        }
+        push(
+            SparkletEvent::RequestReceived {
+                request: 2,
+                tenant: "globex".into(),
+            },
+            &mut log,
+        );
+        push(
+            SparkletEvent::RequestRejected {
+                request: 2,
+                reason: "overloaded".into(),
+            },
+            &mut log,
+        );
+
+        let rp = replay(&log).unwrap();
+        assert_eq!(rp.requests_received, 3);
+        assert_eq!(rp.requests_admitted, 2);
+        assert_eq!(rp.requests_completed, 2);
+        assert_eq!(rp.requests_rejected, 1);
+        assert_eq!(rp.cache_hits.get("miss"), Some(&1));
+        assert_eq!(rp.cache_hits.get("exact"), Some(&1));
+        assert_eq!(rp.reject_reasons.get("overloaded"), Some(&1));
+        assert_eq!(rp.unknown_events, 0, "request events are not unknown");
+        let text = render(&rp, 40);
+        assert!(
+            text.contains("serving: 3 requests received, 2 admitted, 2 completed"),
+            "{text}"
+        );
+        assert!(text.contains("1 exact, 1 miss"), "{text}");
+        assert!(text.contains("1 rejected (1 overloaded)"), "{text}");
+        // Batch-only logs keep their footer unchanged.
+        let flat = render(&replay(&synthetic_log()).unwrap(), 40);
+        assert!(!flat.contains("serving:"), "{flat}");
     }
 
     #[test]

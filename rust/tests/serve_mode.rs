@@ -1,0 +1,204 @@
+//! Serve-mode integration tests: the subsumption property (a cached
+//! mine filtered to a higher threshold IS the fresh mine, across every
+//! tidset representation), concurrent-client agreement with the
+//! sequential oracle, shuffle-artifact hygiene across many requests on
+//! the one persistent context, and typed Overloaded rejection under a
+//! tiny memory budget. Everything drives the public socket-free
+//! `Server::handle` — the wire framing has its own tests in
+//! `serve::protocol` and `serve::server`.
+
+use std::sync::Arc;
+
+use rdd_eclat::fim::sequential::eclat_sequential;
+use rdd_eclat::fim::types::{abs_min_sup, MiningResult, Transaction};
+use rdd_eclat::serve::{DatasetResolver, ServeError, ServeRequest, ServeResponse, ServeResult, Server};
+use rdd_eclat::sparklet::{SparkletConf, SparkletContext};
+
+/// Deterministic pseudo-random database derived purely from `name`, so
+/// the test-side oracle and the server-side resolver agree exactly.
+fn dataset_for(name: &str) -> Vec<Transaction> {
+    let (n, width) = if name == "huge" { (20_000, 10) } else { (48, 10) };
+    let mut state = name
+        .bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3)
+        })
+        .max(1);
+    let mut next = || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    };
+    (0..n)
+        .map(|_| {
+            let mut t: Vec<u32> = (0..width).filter(|_| next() % 100 < 40).collect();
+            if t.is_empty() {
+                t.push(0);
+            }
+            t
+        })
+        .collect()
+}
+
+fn resolver() -> DatasetResolver {
+    Arc::new(|name: &str| {
+        if name == "absent" {
+            return Err(format!("unknown dataset {name:?}"));
+        }
+        Ok(dataset_for(name))
+    })
+}
+
+fn req(dataset: &str, frac: f64, tidset: &str) -> ServeRequest {
+    ServeRequest {
+        tenant: "test".into(),
+        dataset: dataset.into(),
+        min_sup_frac: frac,
+        engine: "eclat-v4".into(),
+        tidset: tidset.into(),
+        post: Vec::new(),
+        min_conf: 0.0,
+        shutdown: false,
+    }
+}
+
+fn result(resp: ServeResponse) -> ServeResult {
+    match resp {
+        ServeResponse::Result(r) => r,
+        other => panic!("expected a result, got {other:?}"),
+    }
+}
+
+/// The tentpole property: seed the cache with one mine at a low
+/// threshold, then every query at `s' >= s` answered by *filtering the
+/// cached result* must equal a fresh sequential mine at `s'` — for every
+/// tidset representation the engines speak.
+#[test]
+fn prop_subsumed_answers_equal_fresh_oracle_across_reprs() {
+    let server = Server::new(SparkletContext::local(2), resolver());
+    for repr in ["vec", "bitmap", "diffset", "hybrid"] {
+        for tag in ["a", "b"] {
+            // Distinct dataset per (repr, tag): every low-threshold mine
+            // is a genuine miss mined with that representation.
+            let name = format!("db-{repr}-{tag}");
+            let txns = dataset_for(&name);
+            let n = txns.len();
+
+            let low = result(server.handle(&req(&name, 0.05, repr)));
+            assert_eq!(low.cache_hit, "miss", "{name} first mine");
+            assert_eq!(low.min_sup_abs, abs_min_sup(0.05, n));
+            let oracle = eclat_sequential(&txns, low.min_sup_abs);
+            assert!(
+                MiningResult::new(low.itemsets).same_as(&oracle),
+                "{name} ({repr}): fresh mine disagrees with the oracle"
+            );
+
+            for hi in [0.1, 0.2, 0.4] {
+                let got = result(server.handle(&req(&name, hi, repr)));
+                assert_eq!(got.cache_hit, "subsumed", "{name} at {hi}");
+                let s_abs = abs_min_sup(hi, n);
+                assert_eq!(got.min_sup_abs, s_abs);
+                let oracle = eclat_sequential(&txns, s_abs);
+                assert!(
+                    MiningResult::new(got.itemsets).same_as(&oracle),
+                    "{name} ({repr}): subsumed answer at {hi} != fresh mine"
+                );
+            }
+        }
+    }
+}
+
+/// N client threads firing a mix of repeat thresholds at one server:
+/// every response (cache hit or fresh mine, in whatever interleaving the
+/// scheduler picks) must equal the sequential oracle, and afterwards the
+/// cache answers every threshold exactly.
+#[test]
+fn concurrent_clients_all_agree_with_the_oracle() {
+    let server = Arc::new(Server::new(SparkletContext::local(4), resolver()));
+    let name = "shared";
+    let txns = dataset_for(name);
+    let n = txns.len();
+    let fracs = [0.05, 0.1, 0.2, 0.05, 0.1, 0.2, 0.05, 0.1];
+    std::thread::scope(|s| {
+        for (i, frac) in fracs.iter().enumerate() {
+            let server = Arc::clone(&server);
+            let txns = &txns;
+            s.spawn(move || {
+                let r = result(server.handle(&req(name, *frac, "auto")));
+                let oracle = eclat_sequential(txns, abs_min_sup(*frac, n));
+                assert!(
+                    MiningResult::new(r.itemsets).same_as(&oracle),
+                    "client {i} at {frac}: served result != oracle (hit: {})",
+                    r.cache_hit
+                );
+            });
+        }
+    });
+    // All three thresholds are cached now (racing duplicate mines are
+    // allowed — same key, same result); repeats must be exact hits.
+    for frac in [0.05, 0.1, 0.2] {
+        let r = result(server.handle(&req(name, frac, "auto")));
+        assert_eq!(r.cache_hit, "exact", "post-race repeat at {frac}");
+    }
+}
+
+/// The persistent context must not accumulate shuffle artifacts across
+/// requests: after every served request, the spill directory is at its
+/// baseline and the block store holds nothing but the result cache's
+/// external charges.
+#[test]
+fn many_requests_leave_no_shuffle_artifacts() {
+    let conf = SparkletConf::new("serve-leak")
+        .with_cores(2)
+        .unwrap()
+        .with_memory_budget_mb(1)
+        .unwrap();
+    let server = Server::new(SparkletContext::new(conf), resolver());
+    let baseline = server.context().shuffle_manager().spill_file_count();
+    for i in 0..40 {
+        let frac = 0.04 + (i % 8) as f64 * 0.03;
+        let name = format!("leak-{}", i % 3);
+        let _ = result(server.handle(&req(&name, frac, "vec")));
+        let sm = server.context().shuffle_manager();
+        assert_eq!(
+            sm.spill_file_count(),
+            baseline,
+            "request {i} left spill files behind"
+        );
+        assert_eq!(
+            sm.used_bytes(),
+            server.cache_bytes(),
+            "request {i} leaked shuffle block memory"
+        );
+    }
+    assert!(server.cache_len() > 0, "the sweep populated the cache");
+}
+
+/// A mine whose estimated working set exceeds the memory budget is
+/// rejected with a typed Overloaded before any work happens.
+#[test]
+fn oversized_request_rejects_overloaded_under_tiny_budget() {
+    let conf = SparkletConf::new("serve-overload")
+        .with_cores(2)
+        .unwrap()
+        .with_memory_budget_mb(1)
+        .unwrap();
+    let server = Server::new(SparkletContext::new(conf), resolver());
+    // "huge" resolves to ~20k transactions: estimated cost > 1 MiB.
+    let resp = server.handle(&req("huge", 0.5, "vec"));
+    match resp {
+        ServeResponse::Error(ServeError::Overloaded { reason }) => {
+            assert!(reason.contains("memory budget"), "{reason}");
+        }
+        other => panic!("expected Overloaded, got {other:?}"),
+    }
+    // A small dataset still serves on the same server.
+    let ok = result(server.handle(&req("small", 0.1, "vec")));
+    assert_eq!(ok.cache_hit, "miss");
+    // And an unresolvable dataset is a BadRequest, not a crash.
+    assert!(matches!(
+        server.handle(&req("absent", 0.1, "vec")),
+        ServeResponse::Error(ServeError::BadRequest { .. })
+    ));
+}
