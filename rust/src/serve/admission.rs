@@ -15,7 +15,7 @@
 //! requests/second; an empty bucket rejects with
 //! [`ServeError::Throttled`] without consuming a queue slot.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
@@ -28,6 +28,18 @@ struct GateState {
     next_ticket: u64,
     /// Ticket currently allowed to mine; tickets below it are done.
     serving: u64,
+    /// Tickets at or above `serving` that completed out of turn (a
+    /// holder dropped before waiting, e.g. its connection died);
+    /// `serving` advances past any contiguous run of these so waiters
+    /// behind an early-dropped ticket are never wedged.
+    done: BTreeSet<u64>,
+}
+
+impl GateState {
+    /// Tickets issued but not yet completed.
+    fn in_flight(&self) -> usize {
+        (self.next_ticket - self.serving) as usize - self.done.len()
+    }
 }
 
 /// Bounded FIFO admission gate. `admit` either issues a [`Ticket`] or
@@ -46,6 +58,7 @@ impl AdmissionGate {
             state: Mutex::new(GateState {
                 next_ticket: 0,
                 serving: 0,
+                done: BTreeSet::new(),
             }),
             turn: Condvar::new(),
         }
@@ -53,8 +66,7 @@ impl AdmissionGate {
 
     /// Requests currently holding tickets (one mining + the waiters).
     pub fn in_flight(&self) -> usize {
-        let st = self.state.lock().unwrap();
-        (st.next_ticket - st.serving) as usize
+        self.state.lock().unwrap().in_flight()
     }
 
     /// Try to admit a request whose mine is estimated to cost
@@ -80,7 +92,7 @@ impl AdmissionGate {
             }
         }
         let mut st = self.state.lock().unwrap();
-        let in_flight = (st.next_ticket - st.serving) as usize;
+        let in_flight = st.in_flight();
         // One slot mines; queue_depth more may wait.
         if in_flight >= self.queue_depth + 1 {
             return Err(ServeError::Overloaded {
@@ -121,11 +133,18 @@ impl Ticket<'_> {
 impl Drop for Ticket<'_> {
     fn drop(&mut self) {
         let mut st = self.gate.state.lock().unwrap();
-        // Tickets complete in FIFO order (wait() enforces the order and
-        // each holder drops after its turn), so serving == self.ticket
-        // here; max() keeps the gate sane even if a holder drops early
-        // without waiting.
-        st.serving = st.serving.max(self.ticket + 1);
+        // Mark this ticket complete, then advance `serving` past every
+        // contiguous completed ticket. In the usual FIFO flow that is a
+        // single step (serving == self.ticket); when a queued holder
+        // drops before its turn, its number parks in `done` until the
+        // tickets ahead of it finish — waiters in between still get
+        // their turn instead of being skipped forever.
+        st.done.insert(self.ticket);
+        let mut serving = st.serving;
+        while st.done.remove(&serving) {
+            serving += 1;
+        }
+        st.serving = serving;
         drop(st);
         self.gate.turn.notify_all();
     }
@@ -159,18 +178,33 @@ impl TenantShedder {
         self.check_at(tenant, Instant::now())
     }
 
+    /// Distinct tenants currently holding buckets. Bounded by the set of
+    /// recently-active tenants, not by every id ever seen: `check_at`
+    /// prunes buckets that have refilled to full burst.
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.lock().unwrap().len()
+    }
+
     fn check_at(&self, tenant: &str, now: Instant) -> Result<(), ServeError> {
         if self.rate <= 0.0 {
             return Ok(());
         }
         let mut buckets = self.buckets.lock().unwrap();
+        // Refill everything to `now`, dropping buckets that reach full
+        // burst — a full bucket is indistinguishable from an absent one,
+        // and client-supplied tenant ids would otherwise grow the map
+        // without bound over a long-lived server's life.
+        let (rate, burst) = (self.rate, self.burst);
+        buckets.retain(|_, b| {
+            let elapsed = now.saturating_duration_since(b.last).as_secs_f64();
+            b.tokens = (b.tokens + elapsed * rate).min(burst);
+            b.last = now;
+            b.tokens < burst
+        });
         let bucket = buckets.entry(tenant.to_string()).or_insert(Bucket {
             tokens: self.burst,
             last: now,
         });
-        let elapsed = now.saturating_duration_since(bucket.last).as_secs_f64();
-        bucket.tokens = (bucket.tokens + elapsed * self.rate).min(self.burst);
-        bucket.last = now;
         if bucket.tokens >= 1.0 {
             bucket.tokens -= 1.0;
             Ok(())
@@ -240,6 +274,26 @@ mod tests {
     }
 
     #[test]
+    fn early_dropped_ticket_does_not_wedge_later_waiters() {
+        let shuffle = ShuffleManager::new();
+        let gate = AdmissionGate::new(8);
+        let head = gate.admit(0, &shuffle).unwrap();
+        let middle = gate.admit(0, &shuffle).unwrap();
+        let tail = gate.admit(0, &shuffle).unwrap();
+        // A queued holder bails before its turn (e.g. its connection
+        // died): the slot frees immediately...
+        drop(middle);
+        assert_eq!(gate.in_flight(), 2);
+        // ...and once the head finishes, serving skips the parked
+        // middle ticket straight to the tail instead of wedging it.
+        drop(head);
+        let queued_ms = tail.wait();
+        assert!(queued_ms < 1_000.0, "tail proceeded at once: {queued_ms}");
+        drop(tail);
+        assert_eq!(gate.in_flight(), 0);
+    }
+
+    #[test]
     fn gate_rejects_when_cost_would_blow_the_budget() {
         let shuffle = ShuffleManager::with_conf(Some(1000), false);
         shuffle.charge_external(900);
@@ -274,6 +328,21 @@ mod tests {
         assert!(shedder.check_at("acme", much_later).is_ok());
         assert!(shedder.check_at("acme", much_later).is_ok());
         assert!(shedder.check_at("acme", much_later).is_err());
+    }
+
+    #[test]
+    fn full_buckets_are_pruned_so_tenant_ids_do_not_accumulate() {
+        let shedder = TenantShedder::new(2.0);
+        let t0 = Instant::now();
+        for i in 0..100 {
+            assert!(shedder.check_at(&format!("tenant-{i}"), t0).is_ok());
+        }
+        assert_eq!(shedder.bucket_count(), 100, "all actively debited");
+        // Once every bucket has refilled to full burst it carries no
+        // state, so the next arrival prunes the lot.
+        let later = t0 + Duration::from_secs(60);
+        assert!(shedder.check_at("fresh", later).is_ok());
+        assert_eq!(shedder.bucket_count(), 1);
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! validates span balance offline.
 
 use std::collections::HashMap;
+use std::net::Shutdown;
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -53,6 +54,12 @@ pub struct Server {
     shutdown: AtomicBool,
     /// Set by `run` so the shutdown path can wake the acceptor.
     socket_path: Mutex<Option<String>>,
+    /// Live connection streams, keyed by connection id. Shutdown must
+    /// force these closed: an idle client blocked in `read_frame` would
+    /// otherwise hold its connection thread — and the `run` loop joining
+    /// it — forever.
+    conns: Mutex<HashMap<u64, UnixStream>>,
+    next_conn: AtomicU64,
 }
 
 impl Server {
@@ -72,6 +79,8 @@ impl Server {
             next_request: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
             socket_path: Mutex::new(None),
+            conns: Mutex::new(HashMap::new()),
+            next_conn: AtomicU64::new(0),
         }
     }
 
@@ -269,17 +278,34 @@ impl Server {
         let listener = UnixListener::bind(socket_path)
             .map_err(|e| format!("cannot bind {socket_path}: {e}"))?;
         *self.socket_path.lock().unwrap() = Some(socket_path.to_string());
-        let mut handles = Vec::new();
+        let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
         loop {
+            // Reap finished connection threads so a long-lived server
+            // doesn't accumulate one handle per connection ever served.
+            let mut i = 0;
+            while i < handles.len() {
+                if handles[i].is_finished() {
+                    let _ = handles.swap_remove(i).join();
+                } else {
+                    i += 1;
+                }
+            }
             match listener.accept() {
                 Ok((stream, _)) => {
                     if self.shutdown.load(Ordering::SeqCst) {
                         break; // shutdown-time wakeup connection
                     }
+                    let conn_id = self.next_conn.fetch_add(1, Ordering::Relaxed);
+                    if let Ok(clone) = stream.try_clone() {
+                        self.conns.lock().unwrap().insert(conn_id, clone);
+                    }
                     let srv = Arc::clone(self);
                     let handle = std::thread::Builder::new()
                         .name("sparklet-serve-conn".into())
-                        .spawn(move || srv.serve_connection(stream))
+                        .spawn(move || {
+                            srv.serve_connection(stream);
+                            srv.conns.lock().unwrap().remove(&conn_id);
+                        })
                         .map_err(|e| format!("spawn connection thread: {e}"))?;
                     handles.push(handle);
                 }
@@ -290,6 +316,13 @@ impl Server {
                 }
             }
         }
+        // Force-close every live connection before joining: an idle
+        // client blocked in read_frame would never send EOF on its own,
+        // and joining its thread without this would deadlock shutdown.
+        // Queued response bytes still drain to the peer first.
+        for (_, s) in self.conns.lock().unwrap().drain() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
         for h in handles {
             let _ = h.join();
         }
@@ -299,8 +332,9 @@ impl Server {
     }
 
     /// Per-connection loop: requests in, responses out, until the peer
-    /// hangs up or asks for shutdown.
-    fn serve_connection(self: Arc<Self>, stream: UnixStream) {
+    /// hangs up, asks for shutdown, or `run`'s shutdown path closes the
+    /// stream under us (read_frame then errors and we return).
+    fn serve_connection(&self, stream: UnixStream) {
         let mut reader = match stream.try_clone() {
             Ok(s) => s,
             Err(_) => return,
@@ -553,7 +587,10 @@ mod tests {
         assert_eq!(res.cache_hit, "miss");
         assert!(res.n_transactions > 0);
         // Shutdown over a second connection: typed ack, then the accept
-        // loop exits and the socket file goes away.
+        // loop exits and the socket file goes away. `conn` stays open
+        // across the shutdown ON PURPOSE — run() must force idle
+        // connections closed instead of joining their threads forever
+        // (the blocked-in-read_frame deadlock this test regresses).
         let mut conn2 = UnixStream::connect(&path).expect("second connection");
         let shutdown = ServeRequest {
             shutdown: true,
@@ -564,5 +601,9 @@ mod tests {
         assert_eq!(ack, ServeResponse::ShuttingDown);
         t.join().unwrap().unwrap();
         assert!(!path.exists(), "socket file removed on exit");
+        assert!(
+            read_frame(&mut conn).is_err(),
+            "server force-closed the idle connection at shutdown"
+        );
     }
 }
