@@ -165,6 +165,37 @@ EOF
 # replay the multi-process log: task bars must group into worker lanes
 cargo run --release --quiet -- timeline --log EVENTS_mp.jsonl | head -40
 
+echo "== chaos smoke (seeded fault plan: spill fault + worker kill, answer identical)"
+# A seeded, replayable fault schedule — the first spill reload fails
+# like an unreadable disk AND worker w0 dies after its first task —
+# must recover through the retry policy and lineage re-execution, and
+# the itemset histogram must be identical to a fault-free sequential
+# run. Scale 0.5 under a 1 MiB budget forces real spill traffic (same
+# sizing as the spill smoke above); the injection-counter proof that
+# the schedule fires lives in rust/tests/crash_anywhere.rs.
+REPRO_SCALE=0.5 cargo run --release --quiet -- \
+    mine --dataset t10 --min-sup 0.02 --engine eclat-v1 \
+    --executor sequential > MINE_chaos_seq.txt
+REPRO_SCALE=0.5 SPARKLET_WORKERS=2 SPARKLET_MEMORY_MB=1 cargo run --release --quiet -- \
+    mine --dataset t10 --min-sup 0.02 --engine eclat-v1 \
+    --executor multi-process \
+    --fault-plan 'seed=7; spill_read:nth=1; worker_kill=w0:1' \
+    --event-log EVENTS_chaos.jsonl > MINE_chaos.txt
+python3 - <<'EOF'
+import json, re
+def hist(path):
+    return [l.strip() for l in open(path) if re.match(r"\s+L\d+: \d+", l)]
+chaos, seq = hist("MINE_chaos.txt"), hist("MINE_chaos_seq.txt")
+assert chaos and chaos == seq, f"chaos histogram diverged from the oracle:\n{chaos}\n{seq}"
+events = [json.loads(l) for l in open("EVENTS_chaos.jsonl") if l.strip()]
+lost = [e["worker"] for e in events if e["type"] == "WorkerLost"]
+assert lost == ["w0"], f"want exactly one injected w0 death, got {lost}"
+retried = any(e["type"] == "TaskStart" and e["attempt"] > 0 for e in events)
+assert retried, "the killed worker's task never retried"
+print(f"chaos smoke OK: w0 killed + spill fault injected, "
+      f"histogram identical to sequential ({len(chaos)} lengths)")
+EOF
+
 echo "== serve smoke (long-lived server: cache, subsumption, shedding, shutdown)"
 # A background `serve` on one persistent context answers a miss, an
 # exact repeat, and a subsumed query (higher threshold, filtered from
@@ -230,6 +261,29 @@ fi
 grep -q "overloaded" QUERY_rejected.txt
 cargo run --release --quiet -- query --socket "$SERVE_SOCK2" --shutdown
 wait "$SERVE2_PID"
+# per-request deadline: a 1 ms budget cannot absorb a fresh mine, so
+# the query is rejected typed (exit 3, same "retry later" class as a
+# shed) and its span ends RequestRejected{reason: deadline}
+SERVE_SOCK3="/tmp/sparklet-serve3-$$.sock"
+REPRO_SCALE=0.02 cargo run --release --quiet -- \
+    serve --socket "$SERVE_SOCK3" --deadline-ms 1 \
+    --event-log EVENTS_serve3.jsonl > SERVE3_out.txt 2>&1 &
+SERVE3_PID=$!
+for _ in $(seq 1 100); do [ -S "$SERVE_SOCK3" ] && break; sleep 0.1; done
+[ -S "$SERVE_SOCK3" ] || { echo "serve never bound $SERVE_SOCK3"; cat SERVE3_out.txt; exit 1; }
+set +e
+cargo run --release --quiet -- query --socket "$SERVE_SOCK3" \
+    --dataset t10 --min-sup 0.02 > QUERY_deadline.txt 2>&1
+rc=$?
+set -e
+if [ "$rc" -ne 3 ]; then
+    echo "expected exit 3 (DeadlineExceeded) from the 1 ms budget query, got $rc"
+    cat QUERY_deadline.txt
+    exit 1
+fi
+grep -qi "deadline" QUERY_deadline.txt
+cargo run --release --quiet -- query --socket "$SERVE_SOCK3" --shutdown
+wait "$SERVE3_PID"
 python3 - <<'EOF'
 import json
 def spans(path):
@@ -255,8 +309,15 @@ shed = spans("EVENTS_serve2.jsonl")
 reasons = [s[-1]["reason"] for s in shed.values()
            if s[-1]["type"] == "RequestRejected"]
 assert "overloaded" in reasons, (reasons, shed)
+# the deadline server's span: Received -> Admitted (the request DID
+# win a slot) -> Rejected with the new typed reason
+dead = spans("EVENTS_serve3.jsonl")
+reasons3 = [s[-1]["reason"] for s in dead.values()
+            if s[-1]["type"] == "RequestRejected"]
+assert "deadline" in reasons3, (reasons3, dead)
 print(f"serve event spans OK: {len(served)} served ({hits}), "
-      f"{len(shed)} on the budgeted server, rejects {reasons}")
+      f"{len(shed)} on the budgeted server, rejects {reasons}, "
+      f"deadline rejects {reasons3}")
 EOF
 # offline replay tallies the request spans in the footer
 cargo run --release --quiet -- timeline --log EVENTS_serve.jsonl | grep "serving:"

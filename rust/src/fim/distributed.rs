@@ -24,6 +24,7 @@
 //! worker process must call [`register_tasks`] before mining — the key
 //! string is all that crosses the wire.
 
+use crate::fim::engine::FimError;
 use crate::fim::eqclass::{bottom_up, EquivalenceClass};
 use crate::fim::tidset::{BitmapTidset, DiffTidset, HybridTidset, TidOps, VecTidset};
 use crate::fim::types::FrequentItemset;
@@ -107,26 +108,38 @@ pub fn register_tasks() {
 /// its `partitionBy` shuffle boundary) through the described-task path:
 /// one descriptor per reduce partition, dispatched to worker processes
 /// when the backend supports it, or run driver-local otherwise.
+///
+/// `Ok(None)` means the tidset type has no registered kernel and the
+/// caller must fall back to the in-process closure path. `Err` carries
+/// the scheduler's typed failure (retries exhausted, deadline exceeded)
+/// or an undecodable partition result.
 pub fn bottom_up_described<TS: TidOps>(
     sc: &SparkletContext,
     ecs: &Rdd<(usize, EquivalenceClass<TS>)>,
     min_sup: u32,
-) -> Option<Vec<FrequentItemset>>
+) -> Result<Option<Vec<FrequentItemset>>, FimError>
 where
     (usize, EquivalenceClass<TS>): Data,
 {
-    let key = task_key::<TS>()?;
+    let Some(key) = task_key::<TS>() else {
+        return Ok(None);
+    };
     register_tasks();
     let parts = run_described_job(sc, ecs, key, move |shuffle_id, part| {
         encode_payload(shuffle_id, part, min_sup)
-    });
+    })
+    .map_err(|e| FimError::Execution {
+        reason: e.to_string(),
+    })?;
     let mut out = Vec::new();
     for (part, bytes) in parts.iter().enumerate() {
-        let found: Vec<FrequentItemset> = decode_records(bytes)
-            .unwrap_or_else(|e| panic!("partition {part} returned an undecodable result: {e}"));
+        let found: Vec<FrequentItemset> =
+            decode_records(bytes).map_err(|e| FimError::Execution {
+                reason: format!("partition {part} returned an undecodable result: {e}"),
+            })?;
         out.extend(found);
     }
-    Some(out)
+    Ok(Some(out))
 }
 
 #[cfg(test)]

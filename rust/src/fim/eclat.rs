@@ -25,7 +25,7 @@ use crate::sparklet::metrics::StageKind;
 use crate::sparklet::{PairRdd, Rdd, SparkletContext};
 use crate::util::hash::FxHashMap;
 
-use super::engine::{MiningConfig, PartitionStrategy, TidsetRepr};
+use super::engine::{FimError, MiningConfig, PartitionStrategy, TidsetRepr};
 use super::eqclass::{bottom_up, build_classes, EquivalenceClass};
 use super::partitioners;
 use super::tidset::{BitmapTidset, DiffTidset, HybridTidset, TidOps, VecTidset};
@@ -252,7 +252,7 @@ fn phase_classes<TS: TidOps>(
     tri_matrix: Option<&TriMatrix>,
     strategy: Placement,
     prefix_len: usize,
-) -> Vec<FrequentItemset> {
+) -> Result<Vec<FrequentItemset>, FimError> {
     let mut out: Vec<FrequentItemset> = Vec::new();
     let mut classes: Vec<(usize, EquivalenceClass<TS>)> =
         build_classes(&vertical, min_sup, tri_matrix, |item| item, &mut out);
@@ -262,7 +262,7 @@ fn phase_classes<TS: TidOps>(
         out.extend(threes);
     }
     if classes.is_empty() {
-        return out;
+        return Ok(out);
     }
     let partitioner = match strategy {
         Placement::Fixed(p) => p,
@@ -282,7 +282,7 @@ fn phase_classes<TS: TidOps>(
     // descriptor per reduce partition, fetching the shuffled classes
     // over the transport. Results are identical either way.
     let remote = if sc.executor().supports_described() {
-        super::distributed::bottom_up_described(sc, &ecs, min_sup)
+        super::distributed::bottom_up_described(sc, &ecs, min_sup)?
     } else {
         None
     };
@@ -307,7 +307,7 @@ fn phase_classes<TS: TidOps>(
                 .observe_partition_costs(&stage.task_millis, stage.queue_wait_ms);
         }
     }
-    out
+    Ok(out)
 }
 
 /// Resolve the tidset-representation axis against the *measured*
@@ -325,7 +325,7 @@ fn phase_classes_repr(
     strategy: Placement,
     prefix_len: usize,
     out: &mut Vec<FrequentItemset>,
-) {
+) -> Result<(), FimError> {
     /// Materialize the vertical database in the resolved representation.
     fn to_repr<TS: TidOps>(vertical_tids: Vec<(Item, Vec<u32>)>, n_txns: usize) -> Vec<(Item, TS)> {
         vertical_tids
@@ -342,7 +342,7 @@ fn phase_classes_repr(
             tri,
             strategy,
             prefix_len,
-        )),
+        )?),
         TidsetRepr::Diffset => out.extend(phase_classes(
             sc,
             to_repr::<DiffTidset>(vertical_tids, n_txns),
@@ -350,7 +350,7 @@ fn phase_classes_repr(
             tri,
             strategy,
             prefix_len,
-        )),
+        )?),
         TidsetRepr::Hybrid => out.extend(phase_classes(
             sc,
             to_repr::<HybridTidset>(vertical_tids, n_txns),
@@ -358,7 +358,7 @@ fn phase_classes_repr(
             tri,
             strategy,
             prefix_len,
-        )),
+        )?),
         TidsetRepr::Vec | TidsetRepr::Auto => out.extend(phase_classes(
             sc,
             to_repr::<VecTidset>(vertical_tids, n_txns),
@@ -366,8 +366,9 @@ fn phase_classes_repr(
             tri,
             strategy,
             prefix_len,
-        )),
+        )?),
     }
+    Ok(())
 }
 
 // -------------------------------------------------------------- variants
@@ -380,14 +381,18 @@ pub fn mine_eclat(
     txns: &Rdd<Transaction>,
     variant: EclatVariant,
     cfg: &MiningConfig,
-) -> MiningResult {
+) -> Result<MiningResult, FimError> {
     match variant {
         EclatVariant::V1 => mine_v1(sc, txns, cfg),
         _ => mine_v2plus(sc, txns, variant, cfg),
     }
 }
 
-fn mine_v1(sc: &SparkletContext, txns: &Rdd<Transaction>, cfg: &MiningConfig) -> MiningResult {
+fn mine_v1(
+    sc: &SparkletContext,
+    txns: &Rdd<Transaction>,
+    cfg: &MiningConfig,
+) -> Result<MiningResult, FimError> {
     let txns = txns.cache();
     // Phase-1
     let (vertical_tids, n_txns) = v1_phase1(&txns, cfg.min_sup);
@@ -397,7 +402,7 @@ fn mine_v1(sc: &SparkletContext, txns: &Rdd<Transaction>, cfg: &MiningConfig) ->
         .collect();
     let n = vertical_tids.len();
     if n < 2 {
-        return MiningResult::new(result);
+        return Ok(MiningResult::new(result));
     }
     // Phase-2: triangular matrix over *raw* item ids (V1 behaviour).
     let tri = if cfg.tri_matrix {
@@ -419,8 +424,8 @@ fn mine_v1(sc: &SparkletContext, txns: &Rdd<Transaction>, cfg: &MiningConfig) ->
         placement(EclatVariant::V1, cfg, n),
         cfg.prefix_len,
         &mut result,
-    );
-    MiningResult::new(result)
+    )?;
+    Ok(MiningResult::new(result))
 }
 
 fn mine_v2plus(
@@ -428,7 +433,7 @@ fn mine_v2plus(
     txns: &Rdd<Transaction>,
     variant: EclatVariant,
     cfg: &MiningConfig,
-) -> MiningResult {
+) -> Result<MiningResult, FimError> {
     let txns = txns.cache();
     // Phase-1 (Algorithm 5)
     let freq_items = v2_phase1(sc, &txns, cfg.min_sup);
@@ -438,7 +443,7 @@ fn mine_v2plus(
         .collect();
     let n = freq_items.len();
     if n < 2 {
-        return MiningResult::new(result);
+        return Ok(MiningResult::new(result));
     }
     // Phase-2 (Algorithm 6): broadcast trieL1, filter transactions.
     let trie_l1 = ItemTrie::from_items(freq_items.iter().map(|(i, _)| *i));
@@ -473,8 +478,8 @@ fn mine_v2plus(
         placement(variant, cfg, n),
         prefix_len,
         &mut result,
-    );
-    MiningResult::new(result)
+    )?;
+    Ok(MiningResult::new(result))
 }
 
 #[cfg(test)]
@@ -496,7 +501,7 @@ mod tests {
             t.dedup();
             t
         });
-        mine_eclat(sc, &rdd, variant, cfg)
+        mine_eclat(sc, &rdd, variant, cfg).expect("in-process mine cannot fail")
     }
 
     fn demo_db() -> Vec<Transaction> {

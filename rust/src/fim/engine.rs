@@ -286,12 +286,19 @@ pub trait FimEngine: Send + Sync {
 
     /// Mine the transactions RDD under `cfg`. Transactions must be
     /// normalized (sorted + deduplicated items).
+    ///
+    /// Recoverable execution failures (retries exhausted against an
+    /// injected fault schedule, a job deadline expiring) surface as
+    /// [`FimError::Execution`]; infallible engines simply wrap their
+    /// result in `Ok`. Panics that escape an engine are additionally
+    /// caught at the [`MiningSession`] boundary and re-typed, so
+    /// session callers never observe an unwinding mine.
     fn mine(
         &self,
         sc: &SparkletContext,
         txns: &Rdd<Transaction>,
         cfg: &MiningConfig,
-    ) -> MiningResult;
+    ) -> Result<MiningResult, FimError>;
 }
 
 // -------------------------------------------------------- builtin engines
@@ -357,7 +364,7 @@ impl FimEngine for EclatEngine {
         sc: &SparkletContext,
         txns: &Rdd<Transaction>,
         cfg: &MiningConfig,
-    ) -> MiningResult {
+    ) -> Result<MiningResult, FimError> {
         mine_eclat(sc, txns, self.variant, cfg)
     }
 }
@@ -391,8 +398,8 @@ impl FimEngine for AprioriEngine {
         sc: &SparkletContext,
         txns: &Rdd<Transaction>,
         cfg: &MiningConfig,
-    ) -> MiningResult {
-        mine_apriori_rdd(sc, txns, cfg.min_sup)
+    ) -> Result<MiningResult, FimError> {
+        Ok(mine_apriori_rdd(sc, txns, cfg.min_sup))
     }
 }
 
@@ -425,8 +432,8 @@ impl FimEngine for FpGrowthEngine {
         sc: &SparkletContext,
         txns: &Rdd<Transaction>,
         cfg: &MiningConfig,
-    ) -> MiningResult {
-        mine_fpgrowth_rdd(sc, txns, cfg.min_sup, cfg.n_groups)
+    ) -> Result<MiningResult, FimError> {
+        Ok(mine_fpgrowth_rdd(sc, txns, cfg.min_sup, cfg.n_groups))
     }
 }
 
@@ -458,16 +465,16 @@ impl FimEngine for SequentialEngine {
         _sc: &SparkletContext,
         txns: &Rdd<Transaction>,
         cfg: &MiningConfig,
-    ) -> MiningResult {
+    ) -> Result<MiningResult, FimError> {
         let db = txns.collect();
-        match cfg.tidset {
+        Ok(match cfg.tidset {
             TidsetRepr::Bitmap => eclat_sequential_with::<BitmapTidset>(&db, cfg.min_sup),
             TidsetRepr::Diffset => eclat_sequential_with::<DiffTidset>(&db, cfg.min_sup),
             TidsetRepr::Hybrid => eclat_sequential_with::<HybridTidset>(&db, cfg.min_sup),
             TidsetRepr::Vec | TidsetRepr::Auto => {
                 eclat_sequential_with::<VecTidset>(&db, cfg.min_sup)
             }
-        }
+        })
     }
 }
 
@@ -573,6 +580,11 @@ pub enum FimError {
         name: String,
         suggestion: Option<String>,
     },
+    /// The mine itself failed after the execution layer gave up:
+    /// retries exhausted against a fault schedule, a job deadline
+    /// expired, or a stage panicked unrecoverably. The reason carries
+    /// the scheduler's typed display (`RetryError` et al.) verbatim.
+    Execution { reason: String },
 }
 
 impl std::fmt::Display for FimError {
@@ -585,6 +597,7 @@ impl std::fmt::Display for FimError {
                 }
                 write!(f, " (registered: {})", EngineRegistry::names().join(", "))
             }
+            Self::Execution { reason } => write!(f, "mining failed: {reason}"),
         }
     }
 }
@@ -867,7 +880,23 @@ impl MiningSession {
         let stage_mark = sc.metrics().stages().len();
         let kernel_mark = kernel::snapshot();
         let t0 = Instant::now();
-        let mined = engine.mine(sc, txns, &cfg);
+        // The unwind boundary of the unified API: engines that surface
+        // failures through panics (the closure-typed `run_stage` path
+        // can't carry a Result through `collect`) are re-typed here, so
+        // a session caller always gets `Err(FimError)`, never an
+        // unwinding mine. Engines that already return typed errors
+        // (the described-task path) pass straight through the `?`.
+        let mined = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine.mine(sc, txns, &cfg)
+        }))
+        .unwrap_or_else(|payload| {
+            let reason = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "engine panicked".to_string());
+            Err(FimError::Execution { reason })
+        })?;
         let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
         let kernel_stats = kernel::snapshot().since(&kernel_mark);
         // The per-session kernel delta goes onto the event bus so an
@@ -1167,8 +1196,8 @@ mod tests {
                 _sc: &SparkletContext,
                 txns: &Rdd<Transaction>,
                 cfg: &MiningConfig,
-            ) -> MiningResult {
-                eclat_sequential(&txns.collect(), cfg.min_sup)
+            ) -> Result<MiningResult, FimError> {
+                Ok(eclat_sequential(&txns.collect(), cfg.min_sup))
             }
         }
         EngineRegistry::register(Arc::new(MirrorOracle));
@@ -1178,6 +1207,63 @@ mod tests {
             .run_vec(&sc, &demo_db())
             .unwrap();
         assert!(report.result.same_as(&eclat_sequential(&demo_db(), 2)));
+    }
+
+    #[test]
+    fn panicking_engine_surfaces_as_typed_execution_error() {
+        // An engine that unwinds (the closure-typed run_stage path
+        // panics on retry exhaustion) must reach the session caller as
+        // Err(FimError::Execution), never as a propagated panic.
+        struct Unwinder;
+        impl FimEngine for Unwinder {
+            fn name(&self) -> &'static str {
+                "test-unwinder"
+            }
+            fn mine(
+                &self,
+                _sc: &SparkletContext,
+                _txns: &Rdd<Transaction>,
+                _cfg: &MiningConfig,
+            ) -> Result<MiningResult, FimError> {
+                panic!("stage deadbeef failed: retries exhausted after 3 attempts: boom");
+            }
+        }
+        EngineRegistry::register(Arc::new(Unwinder));
+        let sc = SparkletContext::local(2);
+        let err = MiningSession::new("test-unwinder")
+            .min_sup(2)
+            .run_vec(&sc, &demo_db())
+            .unwrap_err();
+        match &err {
+            FimError::Execution { reason } => {
+                assert!(reason.contains("retries exhausted"), "{reason}");
+            }
+            other => panic!("want Execution, got {other:?}"),
+        }
+        assert!(err.to_string().contains("mining failed"), "{err}");
+        // An engine returning a typed error passes through untouched.
+        struct TypedFail;
+        impl FimEngine for TypedFail {
+            fn name(&self) -> &'static str {
+                "test-typed-fail"
+            }
+            fn mine(
+                &self,
+                _sc: &SparkletContext,
+                _txns: &Rdd<Transaction>,
+                _cfg: &MiningConfig,
+            ) -> Result<MiningResult, FimError> {
+                Err(FimError::Execution {
+                    reason: "deadline exceeded: 9 ms elapsed against a 5 ms budget".into(),
+                })
+            }
+        }
+        EngineRegistry::register(Arc::new(TypedFail));
+        let err = MiningSession::new("test-typed-fail")
+            .min_sup(2)
+            .run_vec(&sc, &demo_db())
+            .unwrap_err();
+        assert!(err.to_string().contains("deadline exceeded"), "{err}");
     }
 
     #[test]

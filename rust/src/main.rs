@@ -237,6 +237,22 @@ fn command_specs() -> Vec<CommandSpec> {
             "unix socket path (or SPARKLET_SERVE_SOCKET)",
         )
     };
+    let faultplan_flag = || {
+        FlagSpec::new(
+            "fault-plan",
+            "SPEC",
+            "seeded fault-injection plan, e.g. \"seed=7; spill_read:nth=1; worker_kill=w0:2\" \
+             (or SPARKLET_FAULT_PLAN; see README Fault tolerance)",
+        )
+    };
+    let jobdeadline_flag = || {
+        FlagSpec::new(
+            "job-deadline-ms",
+            "MS",
+            "per-job wall-clock deadline; retries stop and the run fails typed past it \
+             (or SPARKLET_JOB_DEADLINE_MS)",
+        )
+    };
     let mut mine_flags = vec![
         dataset_flag(),
         minsup_flag(),
@@ -245,6 +261,8 @@ fn command_specs() -> Vec<CommandSpec> {
         membudget_flag(),
         eventlog_flag(),
         eventlog_max_flag(),
+        faultplan_flag(),
+        jobdeadline_flag(),
     ];
     mine_flags.extend(session_axis_flags());
     mine_flags.extend(shared_flags());
@@ -263,6 +281,8 @@ fn command_specs() -> Vec<CommandSpec> {
         FlagSpec::new("out", "PATH", "machine-readable output (default BENCH_fim.json)"),
         eventlog_flag(),
         eventlog_max_flag(),
+        faultplan_flag(),
+        jobdeadline_flag(),
     ];
     bench_flags.extend(shared_flags());
     let mut rules_flags = vec![
@@ -285,6 +305,8 @@ fn command_specs() -> Vec<CommandSpec> {
         membudget_flag(),
         eventlog_flag(),
         eventlog_max_flag(),
+        faultplan_flag(),
+        jobdeadline_flag(),
     ];
     stream_flags.extend(session_axis_flags());
     stream_flags.extend(shared_flags());
@@ -326,10 +348,18 @@ fn command_specs() -> Vec<CommandSpec> {
             "MB",
             "result-cache byte budget, LRU-evicted (default: unlimited)",
         ),
+        FlagSpec::new(
+            "deadline-ms",
+            "MS",
+            "per-request deadline; requests past it reject typed with exit 3 at the client \
+             (or SPARKLET_SERVE_DEADLINE_MS)",
+        ),
         executor_flag(),
         membudget_flag(),
         eventlog_flag(),
         eventlog_max_flag(),
+        faultplan_flag(),
+        jobdeadline_flag(),
     ];
     serve_flags.extend(shared_flags());
     let query_flags = vec![
@@ -380,7 +410,8 @@ fn print_help(specs: &[CommandSpec]) {
     println!(
         "\nENV: REPRO_SCALE REPRO_SEED REPRO_CORES REPRO_BENCH_REPS \
          SPARKLET_CORES SPARKLET_BACKEND SPARKLET_SHUFFLE_PARTITIONS \
-         SPARKLET_SERVE_SOCKET"
+         SPARKLET_SERVE_SOCKET SPARKLET_FAULT_PLAN SPARKLET_RETRY_BACKOFF_MS \
+         SPARKLET_JOB_DEADLINE_MS SPARKLET_SERVE_DEADLINE_MS"
     );
 }
 
@@ -501,6 +532,12 @@ fn conf_from_args(args: &Args, cfg: &ExperimentConfig) -> Result<SparkletConf> {
     }
     if let Some(mb) = parsed::<usize>(args, "event-log-max-mb")? {
         conf = conf.with_event_log_max_mb(mb)?;
+    }
+    if let Some(spec) = args.get("fault-plan") {
+        conf = conf.with_fault_plan(spec)?;
+    }
+    if let Some(ms) = parsed::<u64>(args, "job-deadline-ms")? {
+        conf = conf.with_job_deadline_ms(ms)?;
     }
     Ok(conf)
 }
@@ -1131,6 +1168,9 @@ fn run_serve(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
     if let Some(mb) = parsed::<usize>(args, "cache-budget")? {
         conf = conf.with_serve_cache_budget_mb(mb)?;
     }
+    if let Some(ms) = parsed::<u64>(args, "deadline-ms")? {
+        conf = conf.with_serve_deadline_ms(ms)?;
+    }
     let sc = SparkletContext::try_new(conf)?;
     // Requests name datasets; the server resolves them through the same
     // generators as the batch commands (REPRO_SCALE/--scale applies) and
@@ -1196,9 +1236,12 @@ fn run_query(args: &Args) -> Result<()> {
         ServeResponse::ShuttingDown => println!("server acknowledged shutdown"),
         ServeResponse::Error(e) => {
             eprintln!("error: {e}");
-            // Load shedding is an operational state, not a caller bug.
+            // Load shedding (and a blown per-request deadline) is an
+            // operational state, not a caller bug.
             let code = match e {
-                ServeError::Overloaded { .. } | ServeError::Throttled { .. } => 3,
+                ServeError::Overloaded { .. }
+                | ServeError::Throttled { .. }
+                | ServeError::DeadlineExceeded { .. } => 3,
                 _ => 1,
             };
             std::process::exit(code);

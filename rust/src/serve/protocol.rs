@@ -149,12 +149,18 @@ pub enum ServeError {
     BadRequest { reason: String },
     /// The server failed while processing an admitted request.
     Internal { reason: String },
+    /// The request blew its per-request deadline
+    /// (`serve_deadline_ms`): queueing plus mining exceeded the budget,
+    /// so the server refuses to return a late answer. The admission
+    /// ticket is released before this is sent.
+    DeadlineExceeded { elapsed_ms: u64, deadline_ms: u64 },
 }
 
 const ERR_OVERLOADED: u8 = 1;
 const ERR_THROTTLED: u8 = 2;
 const ERR_BAD_REQUEST: u8 = 3;
 const ERR_INTERNAL: u8 = 4;
+const ERR_DEADLINE: u8 = 5;
 
 impl SerDe for ServeError {
     fn encode(&self, out: &mut Vec<u8>) {
@@ -175,6 +181,14 @@ impl SerDe for ServeError {
                 out.push(ERR_INTERNAL);
                 reason.encode(out);
             }
+            Self::DeadlineExceeded {
+                elapsed_ms,
+                deadline_ms,
+            } => {
+                out.push(ERR_DEADLINE);
+                elapsed_ms.encode(out);
+                deadline_ms.encode(out);
+            }
         }
     }
     fn decode(r: &mut Reader<'_>) -> Result<Self, SerDeError> {
@@ -190,6 +204,10 @@ impl SerDe for ServeError {
             }),
             ERR_INTERNAL => Ok(Self::Internal {
                 reason: String::decode(r)?,
+            }),
+            ERR_DEADLINE => Ok(Self::DeadlineExceeded {
+                elapsed_ms: u64::decode(r)?,
+                deadline_ms: u64::decode(r)?,
             }),
             _ => Err(SerDeError::Invalid {
                 what: "serve error tag",
@@ -207,6 +225,13 @@ impl std::fmt::Display for ServeError {
             }
             Self::BadRequest { reason } => write!(f, "bad request: {reason}"),
             Self::Internal { reason } => write!(f, "internal server error: {reason}"),
+            Self::DeadlineExceeded {
+                elapsed_ms,
+                deadline_ms,
+            } => write!(
+                f,
+                "deadline exceeded: {elapsed_ms} ms elapsed against a {deadline_ms} ms budget"
+            ),
         }
     }
 }
@@ -332,6 +357,10 @@ mod tests {
             ServeResponse::Error(ServeError::Internal {
                 reason: "boom".into(),
             }),
+            ServeResponse::Error(ServeError::DeadlineExceeded {
+                elapsed_ms: 120,
+                deadline_ms: 100,
+            }),
             ServeResponse::ShuttingDown,
         ];
         for resp in std::iter::once(ok).chain(errs) {
@@ -376,5 +405,12 @@ mod tests {
         assert!(e.to_string().contains("bad request"), "{e}");
         let e = ServeError::Internal { reason: "io".into() };
         assert!(e.to_string().contains("internal"), "{e}");
+        let e = ServeError::DeadlineExceeded {
+            elapsed_ms: 120,
+            deadline_ms: 100,
+        };
+        let s = e.to_string();
+        assert!(s.contains("deadline exceeded"), "{s}");
+        assert!(s.contains("120") && s.contains("100"), "{s}");
     }
 }

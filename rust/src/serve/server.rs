@@ -25,6 +25,7 @@ use std::time::Instant;
 use crate::fim::engine::{EngineRegistry, MiningSession, PostStage, TidsetRepr};
 use crate::fim::rules::generate_rules;
 use crate::fim::types::{abs_min_sup, MiningResult, Transaction};
+use crate::sparklet::faults::FaultSite;
 use crate::sparklet::transport::{read_frame, write_frame};
 use crate::sparklet::{SparkletContext, SparkletEvent};
 
@@ -142,6 +143,7 @@ impl Server {
 
     fn serve_one(&self, request: u64, req: &ServeRequest) -> Result<ServeResult, ServeError> {
         let started = Instant::now();
+        let deadline = self.sc.conf().serve_deadline_ms;
         self.shedder.check(&req.tenant)?;
 
         // Validate everything before touching the queue: a malformed
@@ -181,6 +183,7 @@ impl Server {
                 request,
                 queued_ms: 0.0,
             });
+            check_deadline(started, deadline)?;
             return Ok(self.render(result, hit, min_sup_abs, n, started, &post, req.min_conf));
         }
 
@@ -188,6 +191,10 @@ impl Server {
         let ticket = self.gate.admit(cost, self.sc.shuffle_manager())?;
         let queued_ms = ticket.wait();
         events.emit(SparkletEvent::RequestAdmitted { request, queued_ms });
+        // A request that queued past its budget must not start an
+        // expensive mine; the `?` return drops the ticket, releasing
+        // the admission slot to the next waiter.
+        check_deadline(started, deadline)?;
 
         // Mine the FULL result — post-stages apply on the response path,
         // so the cache entry answers any future post-stage combination.
@@ -205,6 +212,12 @@ impl Server {
         self.sc.reset_state();
         drop(ticket);
 
+        // A mine that finished past the budget is refused too — the
+        // client has already timed out, and returning a late answer
+        // would let slow requests monopolize the response path. The
+        // work is discarded, not cached (nothing may outlive a
+        // rejected request).
+        check_deadline(started, deadline)?;
         self.cache
             .insert(&req.dataset, min_sup_abs, report.result.clone(), n as u64);
         Ok(self.render(
@@ -349,6 +362,15 @@ impl Server {
                 Ok(req) => self.handle(&req),
                 Err(reason) => ServeResponse::Error(ServeError::BadRequest { reason }),
             };
+            // Injected mid-request client disconnect: the request was
+            // fully handled (ticket released, span emitted) but the
+            // peer vanished before the response could be written. The
+            // server must shrug — drop the connection, keep serving
+            // others, leak nothing.
+            if self.sc.faults().should_fail(FaultSite::ServeDisconnect) {
+                let _ = writer.shutdown(Shutdown::Both);
+                return;
+            }
             let shutting_down = matches!(resp, ServeResponse::ShuttingDown);
             let write_ok = write_frame(&mut writer, &resp.to_message()).is_ok();
             if shutting_down {
@@ -372,7 +394,23 @@ fn reject_reason(err: &ServeError) -> &'static str {
         ServeError::Throttled { .. } => "throttled",
         ServeError::BadRequest { .. } => "bad-request",
         ServeError::Internal { .. } => "internal",
+        ServeError::DeadlineExceeded { .. } => "deadline",
     }
+}
+
+/// Reject a request whose service time has already blown its budget.
+/// `None` (no configured deadline) never rejects.
+fn check_deadline(started: Instant, deadline_ms: Option<u64>) -> Result<(), ServeError> {
+    if let Some(budget) = deadline_ms {
+        let elapsed = started.elapsed().as_millis() as u64;
+        if elapsed >= budget {
+            return Err(ServeError::DeadlineExceeded {
+                elapsed_ms: elapsed,
+                deadline_ms: budget,
+            });
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -562,6 +600,60 @@ mod tests {
             "rules generate from the cached full result"
         );
         assert!(shaped.rules.iter().all(|r| r.contains("=>")), "{:?}", shaped.rules);
+    }
+
+    #[test]
+    fn zero_deadline_rejects_typed_and_releases_the_slot() {
+        // A raw 0 ms budget (the builder floor is 1 ms; the field is
+        // public) makes every request blow its deadline at the first
+        // check — deterministic, no sleeps.
+        let conf = SparkletConf {
+            serve_deadline_ms: Some(0),
+            ..SparkletConf::new("serve-deadline").with_cores(2).unwrap()
+        };
+        let (server, listener) = test_server(conf);
+        for _ in 0..2 {
+            // The second request proves the first one's admission
+            // ticket was released — a leaked slot would wedge it in
+            // the queue forever instead of reaching the deadline check.
+            let resp = server.handle(&request(0.25));
+            match resp {
+                ServeResponse::Error(ServeError::DeadlineExceeded { deadline_ms, .. }) => {
+                    assert_eq!(deadline_ms, 0);
+                }
+                other => panic!("expected DeadlineExceeded, got {other:?}"),
+            }
+        }
+        assert_eq!(server.cache_len(), 0, "a rejected mine must not cache");
+        assert_eq!(
+            server.context().shuffle_manager().used_bytes(),
+            0,
+            "no shuffle artifacts survive a deadline rejection"
+        );
+        let rejected: Vec<String> = listener
+            .snapshot()
+            .into_iter()
+            .filter_map(|(_, ev)| match ev {
+                SparkletEvent::RequestRejected { reason, .. } => Some(reason),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(rejected, vec!["deadline".to_string(), "deadline".to_string()]);
+    }
+
+    #[test]
+    fn generous_deadline_does_not_reject() {
+        let conf = SparkletConf::new("serve-deadline-ok")
+            .with_cores(2)
+            .unwrap()
+            .with_serve_deadline_ms(60_000)
+            .unwrap();
+        let (server, _) = test_server(conf);
+        let r = expect_result(server.handle(&request(0.25)));
+        assert_eq!(r.cache_hit, "miss");
+        // The cached path also passes its deadline check.
+        let r = expect_result(server.handle(&request(0.25)));
+        assert_eq!(r.cache_hit, "exact");
     }
 
     #[test]

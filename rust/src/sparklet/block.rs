@@ -20,6 +20,8 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use super::faults::{FaultPlane, FaultSite};
+
 /// Identity of one shuffle block: which shuffle, which reduce partition
 /// it is destined for, and which map task produced it. Keying on the
 /// full triple makes map-task retries idempotent — a re-run *overwrites*
@@ -77,6 +79,46 @@ impl ShuffleBlock {
     }
 }
 
+/// Typed disk-IO failures on the spill/reload path. A broken (or
+/// injected) disk surfaces as a recoverable task error through
+/// [`super::shuffle::ShuffleError`], never as a driver panic: the spill
+/// file and its entry are left in place, so a retry after a transient
+/// fault reloads successfully.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BlockIoError {
+    /// Reading a spilled block back from disk failed.
+    Read {
+        id: BlockId,
+        path: String,
+        reason: String,
+    },
+    /// The spill file's size no longer matches the block's recorded
+    /// length (truncation or corruption on disk).
+    LengthDrift {
+        id: BlockId,
+        expected: usize,
+        got: usize,
+    },
+}
+
+impl fmt::Display for BlockIoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Read { id, path, reason } => {
+                write!(f, "shuffle spill file {path} for block {id} unreadable: {reason}")
+            }
+            Self::LengthDrift { id, expected, got } => {
+                write!(
+                    f,
+                    "spill file length drift for block {id}: expected {expected} B, got {got} B"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for BlockIoError {}
+
 enum Slot {
     Mem(Arc<Vec<u8>>),
     Spilled(PathBuf),
@@ -123,6 +165,9 @@ pub struct BlockStore {
     /// themselves be spilled, only released.
     external_bytes: AtomicU64,
     hook: Mutex<Option<BlockIoHook>>,
+    /// Fault-injection plane for the spill read/write sites. Disarmed
+    /// until the owning context installs its armed plane.
+    faults: Mutex<Arc<FaultPlane>>,
 }
 
 impl BlockStore {
@@ -142,12 +187,22 @@ impl BlockStore {
             spilled_bytes: AtomicU64::new(0),
             external_bytes: AtomicU64::new(0),
             hook: Mutex::new(None),
+            faults: Mutex::new(Arc::new(FaultPlane::disarmed())),
         }
     }
 
     /// Install the spill/reload observer (replacing any previous one).
     pub fn set_spill_hook(&self, hook: BlockIoHook) {
         *self.hook.lock().unwrap() = Some(hook);
+    }
+
+    /// Arm the spill read/write fault sites with the context's plane.
+    pub fn set_fault_plane(&self, plane: Arc<FaultPlane>) {
+        *self.faults.lock().unwrap() = plane;
+    }
+
+    fn fault_plane(&self) -> Arc<FaultPlane> {
+        Arc::clone(&self.faults.lock().unwrap())
     }
 
     /// Fire collected notifications outside the store lock.
@@ -192,14 +247,20 @@ impl BlockStore {
 
     /// Fetch a block, transparently reloading it from disk if it was
     /// spilled (the reload re-admits it under the budget, which may in
-    /// turn spill colder blocks). `None` if the id was never written.
-    pub fn get(&self, id: &BlockId) -> Option<ShuffleBlock> {
+    /// turn spill colder blocks). `Ok(None)` if the id was never
+    /// written; `Err` when the spill file cannot be read back — the
+    /// entry and its file stay in place, so a retry after a transient
+    /// disk fault can still succeed.
+    pub fn get(&self, id: &BlockId) -> Result<Option<ShuffleBlock>, BlockIoError> {
+        let faults = self.fault_plane();
         let mut fired = Vec::new();
         let block = {
             let mut inner = self.inner.lock().unwrap();
             inner.clock += 1;
             let clock = inner.clock;
-            let entry = inner.blocks.get_mut(id)?;
+            let Some(entry) = inner.blocks.get_mut(id) else {
+                return Ok(None);
+            };
             entry.last_use = clock;
             let records = entry.records;
             let spilled_path = match &entry.slot {
@@ -214,14 +275,33 @@ impl BlockStore {
                     (Arc::clone(b), 0)
                 }
                 Some(path) => {
-                    let data = std::fs::read(&path).unwrap_or_else(|e| {
-                        panic!("shuffle spill file {} unreadable: {e}", path.display())
-                    });
-                    assert_eq!(
-                        data.len(),
-                        entry.len,
-                        "spill file length drift for block {id}"
-                    );
+                    // Inject BEFORE the read: the file is untouched, so
+                    // the fault is indistinguishable from a transient
+                    // IO error and a retry genuinely recovers.
+                    if faults.should_fail(FaultSite::SpillRead) {
+                        return Err(BlockIoError::Read {
+                            id: *id,
+                            path: path.display().to_string(),
+                            reason: "injected spill_read fault".into(),
+                        });
+                    }
+                    let data = match std::fs::read(&path) {
+                        Ok(data) => data,
+                        Err(e) => {
+                            return Err(BlockIoError::Read {
+                                id: *id,
+                                path: path.display().to_string(),
+                                reason: e.to_string(),
+                            })
+                        }
+                    };
+                    if data.len() != entry.len {
+                        return Err(BlockIoError::LengthDrift {
+                            id: *id,
+                            expected: entry.len,
+                            got: data.len(),
+                        });
+                    }
                     let _ = std::fs::remove_file(&path);
                     let arc = Arc::new(data);
                     entry.slot = Slot::Mem(Arc::clone(&arc));
@@ -235,7 +315,7 @@ impl BlockStore {
                 inner.mem_bytes += readmitted;
                 self.enforce_budget(&mut inner, &mut fired);
             }
-            Some(ShuffleBlock { bytes, records })
+            Ok(Some(ShuffleBlock { bytes, records }))
         };
         self.fire_hook(&fired);
         block
@@ -349,6 +429,7 @@ impl BlockStore {
     /// notifications are collected into `fired` for the caller to
     /// deliver once the lock is released.
     fn enforce_budget(&self, inner: &mut Inner, fired: &mut Vec<(BlockId, usize, bool)>) {
+        let faults = self.fault_plane();
         let external = self.external_bytes.load(Ordering::Relaxed) as usize;
         while inner.mem_bytes.saturating_add(external) > self.budget {
             let victim = inner
@@ -369,6 +450,13 @@ impl BlockStore {
                 "block-{}-{}-{}.bin",
                 id.shuffle_id, id.reduce_part, id.map_part
             ));
+            // Inject BEFORE the write: a failed spill degrades exactly
+            // like a full disk — the block stays resident over budget
+            // and mining proceeds, never losing data to a half-write.
+            if faults.should_fail(FaultSite::SpillWrite) {
+                log::warn!("spill of block {id} to {}: injected spill_write fault", path.display());
+                break;
+            }
             match std::fs::write(&path, bytes.as_slice()) {
                 Ok(()) => {
                     let len = entry.len;
@@ -439,10 +527,10 @@ mod tests {
         }
         assert_eq!(store.spilled_blocks(), 0);
         assert_eq!(store.mem_bytes(), 10_000);
-        let b = store.get(&id(0, 3, 0)).unwrap();
+        let b = store.get(&id(0, 3, 0)).unwrap().unwrap();
         assert_eq!(b.bytes.as_slice(), payload(3, 1000).as_slice());
         assert_eq!(b.records, 1);
-        assert!(store.get(&id(9, 9, 9)).is_none());
+        assert!(store.get(&id(9, 9, 9)).unwrap().is_none());
     }
 
     #[test]
@@ -451,12 +539,12 @@ mod tests {
         store.put(id(0, 0, 0), payload(0, 1000), 10);
         store.put(id(0, 1, 0), payload(1, 1000), 11);
         // touch block 0 so block 1 is the LRU victim
-        let _ = store.get(&id(0, 0, 0)).unwrap();
+        let _ = store.get(&id(0, 0, 0)).unwrap().unwrap();
         store.put(id(0, 2, 0), payload(2, 1000), 12);
         assert_eq!(store.spilled_blocks(), 1, "one block over budget");
         assert!(store.mem_bytes() <= 2500);
         // the spilled block reloads byte-identically
-        let b = store.get(&id(0, 1, 0)).unwrap();
+        let b = store.get(&id(0, 1, 0)).unwrap().unwrap();
         assert_eq!(b.bytes.as_slice(), payload(1, 1000).as_slice());
         assert_eq!(b.records, 11);
         assert_eq!(store.reloaded_blocks(), 1);
@@ -472,7 +560,7 @@ mod tests {
         // the oversized block cannot stay resident
         assert!(store.mem_bytes() <= 100);
         assert!(store.spilled_blocks() >= 1);
-        let b = store.get(&id(1, 0, 0)).unwrap();
+        let b = store.get(&id(1, 0, 0)).unwrap().unwrap();
         assert_eq!(b.len(), 5000);
         assert!(b.bytes.iter().all(|&x| x == 7));
     }
@@ -483,7 +571,7 @@ mod tests {
         store.put(id(0, 0, 0), payload(1, 100), 1);
         store.put(id(0, 0, 0), payload(2, 300), 2);
         assert_eq!(store.mem_bytes(), 300);
-        let b = store.get(&id(0, 0, 0)).unwrap();
+        let b = store.get(&id(0, 0, 0)).unwrap().unwrap();
         assert_eq!(b.records, 2);
         assert_eq!(b.len(), 300);
     }
@@ -500,7 +588,7 @@ mod tests {
         store.put(id(0, 1, 0), payload(1, 1000), 1); // evicts block 0
         let spills: Vec<_> = seen.lock().unwrap().clone();
         assert_eq!(spills, vec![(id(0, 0, 0), 1000, false)]);
-        let _ = store.get(&id(0, 0, 0)).unwrap(); // reload (+ evict other)
+        let _ = store.get(&id(0, 0, 0)).unwrap().unwrap(); // reload (+ evict other)
         let all = seen.lock().unwrap().clone();
         assert!(all.contains(&(id(0, 0, 0), 1000, true)), "{all:?}");
         assert!(all.contains(&(id(0, 1, 0), 1000, false)), "{all:?}");
@@ -526,7 +614,7 @@ mod tests {
         // Releasing makes headroom again; spilled blocks still reload.
         store.release_external(1000);
         assert_eq!(store.external_bytes(), 0);
-        let b = store.get(&id(0, 0, 0)).unwrap();
+        let b = store.get(&id(0, 0, 0)).unwrap().unwrap();
         assert_eq!(b.bytes.as_slice(), payload(1, 800).as_slice());
 
         // Over-release clamps instead of wrapping.
@@ -547,17 +635,85 @@ mod tests {
     }
 
     #[test]
+    fn injected_spill_read_fault_is_typed_and_recoverable() {
+        use crate::sparklet::faults::{FaultPlan, FaultPlane};
+        let store = BlockStore::new(Some(1));
+        store.set_fault_plane(Arc::new(FaultPlane::new(
+            FaultPlan::parse("spill_read:nth=1").unwrap(),
+        )));
+        store.put(id(0, 0, 0), payload(9, 400), 5);
+        assert_eq!(store.spilled_blocks(), 1, "budget of 1 byte spills");
+        // First read hits the injected fault, typed.
+        let err = store.get(&id(0, 0, 0)).unwrap_err();
+        assert!(matches!(err, BlockIoError::Read { .. }), "{err}");
+        assert!(err.to_string().contains("injected"), "{err}");
+        // The entry and its spill file survived: the retry succeeds.
+        let b = store.get(&id(0, 0, 0)).unwrap().unwrap();
+        assert_eq!(b.bytes.as_slice(), payload(9, 400).as_slice());
+        assert_eq!(b.records, 5);
+    }
+
+    #[test]
+    fn injected_spill_write_fault_keeps_the_block_resident() {
+        use crate::sparklet::faults::{FaultPlan, FaultPlane};
+        let store = BlockStore::new(Some(100));
+        store.set_fault_plane(Arc::new(FaultPlane::new(
+            FaultPlan::parse("spill_write:nth=1").unwrap(),
+        )));
+        store.put(id(0, 0, 0), payload(1, 500), 1);
+        // The spill failed, so the block stays in memory over budget —
+        // degraded, never lost.
+        assert_eq!(store.spilled_blocks(), 0);
+        assert_eq!(store.mem_bytes(), 500);
+        let b = store.get(&id(0, 0, 0)).unwrap().unwrap();
+        assert_eq!(b.bytes.as_slice(), payload(1, 500).as_slice());
+        // The next over-budget put spills normally (nth=1 fired once).
+        store.put(id(0, 1, 0), payload(2, 500), 1);
+        assert!(store.spilled_blocks() >= 1);
+    }
+
+    #[test]
+    fn real_disk_loss_surfaces_as_typed_read_error() {
+        let store = BlockStore::new(Some(1));
+        store.put(id(0, 0, 0), payload(3, 300), 1);
+        assert_eq!(store.spill_file_count(), 1);
+        // Delete the spill file behind the store's back.
+        let dir = store.inner.lock().unwrap().spill_dir.clone().unwrap();
+        for f in std::fs::read_dir(&dir).unwrap() {
+            std::fs::remove_file(f.unwrap().path()).unwrap();
+        }
+        let err = store.get(&id(0, 0, 0)).unwrap_err();
+        assert!(matches!(err, BlockIoError::Read { .. }), "{err}");
+        assert!(err.to_string().contains("block shuffle0/reduce0/map0"), "{err}");
+    }
+
+    #[test]
+    fn truncated_spill_file_surfaces_as_length_drift() {
+        let store = BlockStore::new(Some(1));
+        store.put(id(0, 0, 0), payload(3, 300), 1);
+        let dir = store.inner.lock().unwrap().spill_dir.clone().unwrap();
+        for f in std::fs::read_dir(&dir).unwrap() {
+            std::fs::write(f.unwrap().path(), b"short").unwrap();
+        }
+        let err = store.get(&id(0, 0, 0)).unwrap_err();
+        assert!(
+            matches!(err, BlockIoError::LengthDrift { expected: 300, got: 5, .. }),
+            "{err}"
+        );
+    }
+
+    #[test]
     fn remove_where_scopes_and_deletes_spill_files() {
         let store = BlockStore::new(Some(1));
         store.put(id(5, 0, 0), payload(1, 500), 1);
         store.put(id(6, 0, 0), payload(2, 500), 1);
         assert_eq!(store.spilled_blocks(), 2, "budget of 1 byte spills all");
         store.remove_where(|b| b.shuffle_id == 5);
-        assert!(store.get(&id(5, 0, 0)).is_none());
-        let b = store.get(&id(6, 0, 0)).unwrap();
+        assert!(store.get(&id(5, 0, 0)).unwrap().is_none());
+        let b = store.get(&id(6, 0, 0)).unwrap().unwrap();
         assert_eq!(b.bytes.as_slice(), payload(2, 500).as_slice());
         store.clear();
-        assert!(store.get(&id(6, 0, 0)).is_none());
+        assert!(store.get(&id(6, 0, 0)).unwrap().is_none());
         assert_eq!(store.mem_bytes(), 0);
     }
 }

@@ -6,6 +6,7 @@
 //! abort.
 
 use super::executor::{ExecutorError, ExecutorRegistry};
+use super::faults::FaultPlan;
 
 /// Typed configuration errors.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -40,6 +41,14 @@ pub enum ConfError {
     InvalidCacheBudget { value: String },
     /// `event_log_max_bytes` must be >= 1 (use `None` for uncapped).
     InvalidEventLogCap { value: String },
+    /// The fault-plan spec did not parse against the
+    /// [`FaultPlan`](super::faults::FaultPlan) grammar.
+    InvalidFaultPlan { value: String, reason: String },
+    /// A deadline must be >= 1 ms (use `None` for unbounded).
+    InvalidDeadline {
+        what: &'static str,
+        value: String,
+    },
 }
 
 impl From<ExecutorError> for ConfError {
@@ -84,6 +93,12 @@ impl std::fmt::Display for ConfError {
             }
             Self::InvalidEventLogCap { value } => {
                 write!(f, "event log size cap must be >= 1 MiB (got {value})")
+            }
+            Self::InvalidFaultPlan { value, reason } => {
+                write!(f, "invalid fault plan {value:?}: {reason}")
+            }
+            Self::InvalidDeadline { what, value } => {
+                write!(f, "{what} must be >= 1 ms (got {value})")
             }
         }
     }
@@ -156,8 +171,33 @@ pub struct SparkletConf {
     /// Fault injection for the multi-process backend: `"w1:2"` makes
     /// worker `w1` exit abruptly after completing 2 tasks. Passed to
     /// the spawned worker via its hidden `--fault` flag; used by the
-    /// kill-a-worker recovery tests.
+    /// kill-a-worker recovery tests. Subsumed by the general
+    /// `fault_plan` (a spec here becomes a `worker_kill=` clause via
+    /// [`SparkletConf::effective_fault_plan`]); kept as its own knob for
+    /// compatibility with the original kill tests.
     pub worker_fault: Option<String>,
+    /// Deterministic fault-injection plan (`SPARKLET_FAULT_PLAN`,
+    /// `--fault-plan`), in the [`FaultPlan`](super::faults::FaultPlan)
+    /// grammar: `seed=42; spill_read:nth=1; worker_kill=w0:1`. Parsed
+    /// and armed when the context is built; `None` disables injection.
+    pub fault_plan: Option<String>,
+    /// Base of the deterministic exponential backoff between task/job
+    /// retry attempts, milliseconds (`SPARKLET_RETRY_BACKOFF_MS`).
+    /// Attempt `a` sleeps `base * 2^(a-1)`, capped at
+    /// [`super::faults::BACKOFF_CAP_MS`]. `0` disables sleeping
+    /// (fast tests).
+    pub retry_backoff_ms: u64,
+    /// Per-job wall-clock deadline, milliseconds
+    /// (`SPARKLET_JOB_DEADLINE_MS`). A job whose retry schedule is
+    /// still failing past this budget stops with a typed
+    /// `DeadlineExceeded` instead of burning the remaining attempts.
+    /// `None` = unbounded.
+    pub job_deadline_ms: Option<u64>,
+    /// Per-request deadline for serve mode, milliseconds
+    /// (`SPARKLET_SERVE_DEADLINE_MS`, `--deadline-ms`). Measured from
+    /// request receipt; a request still queued past it is rejected
+    /// typed with its admission ticket released. `None` = unbounded.
+    pub serve_deadline_ms: Option<u64>,
     /// Rotate the event log once it exceeds this many **bytes**: the
     /// current file is renamed to `<path>.1` (replacing any previous
     /// generation) and a fresh file is started, bounding a long-lived
@@ -206,6 +246,10 @@ impl Default for SparkletConf {
             worker_timeout_ms: 5_000,
             worker_binary: None,
             worker_fault: None,
+            fault_plan: None,
+            retry_backoff_ms: 10,
+            job_deadline_ms: None,
+            serve_deadline_ms: None,
             event_log_max_bytes: None,
             serve_socket: None,
             serve_queue_depth: 16,
@@ -342,6 +386,63 @@ impl SparkletConf {
         self
     }
 
+    /// Set the deterministic fault-injection plan. The spec is parsed
+    /// here so a typo fails the conf, not silently injects nothing.
+    pub fn with_fault_plan(mut self, spec: &str) -> Result<Self, ConfError> {
+        FaultPlan::parse(spec).map_err(|reason| ConfError::InvalidFaultPlan {
+            value: spec.to_string(),
+            reason,
+        })?;
+        self.fault_plan = Some(spec.to_string());
+        Ok(self)
+    }
+
+    /// Base backoff between retry attempts, milliseconds (0 disables
+    /// sleeping).
+    pub fn with_retry_backoff_ms(mut self, ms: u64) -> Self {
+        self.retry_backoff_ms = ms;
+        self
+    }
+
+    /// Per-job wall-clock deadline in milliseconds (0 is an error;
+    /// unset means unbounded).
+    pub fn with_job_deadline_ms(mut self, ms: u64) -> Result<Self, ConfError> {
+        if ms == 0 {
+            return Err(ConfError::InvalidDeadline {
+                what: "job deadline",
+                value: "0".into(),
+            });
+        }
+        self.job_deadline_ms = Some(ms);
+        Ok(self)
+    }
+
+    /// Per-request serve-mode deadline in milliseconds (0 is an error;
+    /// unset means unbounded).
+    pub fn with_serve_deadline_ms(mut self, ms: u64) -> Result<Self, ConfError> {
+        if ms == 0 {
+            return Err(ConfError::InvalidDeadline {
+                what: "serve deadline",
+                value: "0".into(),
+            });
+        }
+        self.serve_deadline_ms = Some(ms);
+        Ok(self)
+    }
+
+    /// The fault plan with the legacy `worker_fault` spec folded in as
+    /// a `worker_kill=` clause — the single string handed to the
+    /// context's [`FaultPlane`](super::faults::FaultPlane) and to
+    /// spawned workers via `--fault`. `None` when neither knob is set.
+    pub fn effective_fault_plan(&self) -> Option<String> {
+        match (&self.fault_plan, &self.worker_fault) {
+            (None, None) => None,
+            (Some(plan), None) => Some(plan.clone()),
+            (None, Some(w)) => Some(format!("worker_kill={w}")),
+            (Some(plan), Some(w)) => Some(format!("{plan}; worker_kill={w}")),
+        }
+    }
+
     /// Rotate the event log to `<path>.1` once it exceeds `mb` MiB
     /// (0 is an error; unset means never rotate).
     pub fn with_event_log_max_mb(mut self, mb: usize) -> Result<Self, ConfError> {
@@ -414,8 +515,10 @@ impl SparkletConf {
     /// `SPARKLET_SOCKET_DIR`, `SPARKLET_HEARTBEAT_MS`,
     /// `SPARKLET_WORKER_TIMEOUT_MS`, `SPARKLET_WORKER_BINARY`,
     /// `SPARKLET_EVENT_LOG_MAX_MB`, `SPARKLET_SERVE_SOCKET`,
-    /// `SPARKLET_SERVE_QUEUE_DEPTH`, `SPARKLET_SERVE_TENANT_RATE`, and
-    /// `SPARKLET_SERVE_CACHE_MB`
+    /// `SPARKLET_SERVE_QUEUE_DEPTH`, `SPARKLET_SERVE_TENANT_RATE`,
+    /// `SPARKLET_SERVE_CACHE_MB`, `SPARKLET_FAULT_PLAN`,
+    /// `SPARKLET_RETRY_BACKOFF_MS`, `SPARKLET_JOB_DEADLINE_MS`, and
+    /// `SPARKLET_SERVE_DEADLINE_MS`
     /// environment overrides on top of the current values (empty/unset
     /// variables are ignored). Cores are applied before shuffle
     /// partitions, so setting both honours the explicit partition count.
@@ -464,6 +567,18 @@ impl SparkletConf {
         }
         if let Some(mb) = env_usize("SPARKLET_SERVE_CACHE_MB")? {
             self = self.with_serve_cache_budget_mb(mb)?;
+        }
+        if let Some(spec) = env_str("SPARKLET_FAULT_PLAN") {
+            self = self.with_fault_plan(&spec)?;
+        }
+        if let Some(ms) = env_usize("SPARKLET_RETRY_BACKOFF_MS")? {
+            self = self.with_retry_backoff_ms(ms as u64);
+        }
+        if let Some(ms) = env_usize("SPARKLET_JOB_DEADLINE_MS")? {
+            self = self.with_job_deadline_ms(ms as u64)?;
+        }
+        if let Some(ms) = env_usize("SPARKLET_SERVE_DEADLINE_MS")? {
+            self = self.with_serve_deadline_ms(ms as u64)?;
         }
         Ok(self)
     }
@@ -693,6 +808,10 @@ mod tests {
             std::env::remove_var("SPARKLET_SERVE_QUEUE_DEPTH");
             std::env::remove_var("SPARKLET_SERVE_TENANT_RATE");
             std::env::remove_var("SPARKLET_SERVE_CACHE_MB");
+            std::env::remove_var("SPARKLET_FAULT_PLAN");
+            std::env::remove_var("SPARKLET_RETRY_BACKOFF_MS");
+            std::env::remove_var("SPARKLET_JOB_DEADLINE_MS");
+            std::env::remove_var("SPARKLET_SERVE_DEADLINE_MS");
         };
         clear();
 
@@ -799,8 +918,89 @@ mod tests {
         std::env::set_var("SPARKLET_SERVE_TENANT_RATE", "fast");
         let err = base.clone().with_env_overrides().unwrap_err();
         assert!(err.to_string().contains("not a number"), "{err}");
+        std::env::set_var("SPARKLET_SERVE_TENANT_RATE", "1.5");
+
+        // Fault-injection and retry knobs.
+        std::env::set_var("SPARKLET_FAULT_PLAN", "seed=7; spill_read:nth=1");
+        std::env::set_var("SPARKLET_RETRY_BACKOFF_MS", "25");
+        std::env::set_var("SPARKLET_JOB_DEADLINE_MS", "30000");
+        std::env::set_var("SPARKLET_SERVE_DEADLINE_MS", "2000");
+        let c = base.clone().with_env_overrides().unwrap();
+        assert_eq!(c.fault_plan.as_deref(), Some("seed=7; spill_read:nth=1"));
+        assert_eq!(c.retry_backoff_ms, 25);
+        assert_eq!(c.job_deadline_ms, Some(30_000));
+        assert_eq!(c.serve_deadline_ms, Some(2_000));
+        std::env::set_var("SPARKLET_FAULT_PLAN", "spill_read:whenever");
+        let err = base.clone().with_env_overrides().unwrap_err();
+        assert!(
+            matches!(err, ConfError::InvalidFaultPlan { .. }),
+            "{err}"
+        );
+        std::env::set_var("SPARKLET_FAULT_PLAN", "seed=7");
+        std::env::set_var("SPARKLET_JOB_DEADLINE_MS", "soon");
+        let err = base.clone().with_env_overrides().unwrap_err();
+        assert!(
+            matches!(err, ConfError::InvalidEnv { var: "SPARKLET_JOB_DEADLINE_MS", .. }),
+            "{err}"
+        );
 
         clear();
+    }
+
+    #[test]
+    fn fault_plan_knobs_validate_and_merge_with_worker_fault() {
+        let c = SparkletConf::default();
+        assert_eq!(c.fault_plan, None, "no injection by default");
+        assert_eq!(c.retry_backoff_ms, 10);
+        assert_eq!(c.job_deadline_ms, None);
+        assert_eq!(c.serve_deadline_ms, None);
+        assert_eq!(c.effective_fault_plan(), None);
+
+        let c = c
+            .with_fault_plan("seed=3; spill_write:every=2")
+            .unwrap()
+            .with_retry_backoff_ms(0)
+            .with_job_deadline_ms(5_000)
+            .unwrap()
+            .with_serve_deadline_ms(250)
+            .unwrap();
+        assert_eq!(c.fault_plan.as_deref(), Some("seed=3; spill_write:every=2"));
+        assert_eq!(c.retry_backoff_ms, 0);
+        assert_eq!(c.job_deadline_ms, Some(5_000));
+        assert_eq!(c.serve_deadline_ms, Some(250));
+        assert_eq!(
+            c.effective_fault_plan().as_deref(),
+            Some("seed=3; spill_write:every=2")
+        );
+
+        // The legacy worker_fault spec folds in as a worker_kill clause,
+        // alone or merged after an explicit plan.
+        let legacy = SparkletConf::default().with_worker_fault("w0:1");
+        assert_eq!(
+            legacy.effective_fault_plan().as_deref(),
+            Some("worker_kill=w0:1")
+        );
+        let both = legacy.with_fault_plan("spill_read:nth=1").unwrap();
+        assert_eq!(
+            both.effective_fault_plan().as_deref(),
+            Some("spill_read:nth=1; worker_kill=w0:1")
+        );
+
+        // Bad values are typed errors.
+        let err = SparkletConf::default()
+            .with_fault_plan("spill_read:nth=zero")
+            .unwrap_err();
+        assert!(matches!(err, ConfError::InvalidFaultPlan { .. }));
+        assert!(err.to_string().contains("invalid fault plan"), "{err}");
+        let err = SparkletConf::default().with_job_deadline_ms(0).unwrap_err();
+        assert!(
+            matches!(err, ConfError::InvalidDeadline { what: "job deadline", .. }),
+            "{err}"
+        );
+        let err = SparkletConf::default()
+            .with_serve_deadline_ms(0)
+            .unwrap_err();
+        assert!(err.to_string().contains("serve deadline"), "{err}");
     }
 
     #[test]

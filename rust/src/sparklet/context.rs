@@ -9,6 +9,7 @@ use super::cache::CacheManager;
 use super::conf::{ConfError, SparkletConf};
 use super::events::{EventBus, EventLogWriter, MetricsListener, SparkletEvent};
 use super::executor::{ExecutorBackend, ExecutorRegistry};
+use super::faults::{FaultPlan, FaultPlane};
 use super::metrics::MetricsRegistry;
 use super::rdd::{Data, Rdd};
 use super::shuffle::ShuffleManager;
@@ -22,6 +23,7 @@ struct ContextInner {
     broadcasts: BroadcastRegistry,
     metrics: Arc<MetricsRegistry>,
     events: Arc<EventBus>,
+    faults: Arc<FaultPlane>,
     next_rdd_id: AtomicUsize,
 }
 
@@ -68,10 +70,26 @@ impl SparkletContext {
             )?;
             events.register(Arc::new(writer));
         }
+        // Arm the fault plane before the shuffle manager exists so the
+        // block store's spill sites are live from the first block. The
+        // plane is per-context: parallel tests each inject into their
+        // own schedule.
+        let faults = match conf.effective_fault_plan() {
+            Some(spec) => {
+                let plan =
+                    FaultPlan::parse(&spec).map_err(|reason| ConfError::InvalidFaultPlan {
+                        value: spec.clone(),
+                        reason,
+                    })?;
+                Arc::new(FaultPlane::new(plan))
+            }
+            None => Arc::new(FaultPlane::disarmed()),
+        };
         let shuffle = Arc::new(ShuffleManager::with_conf(
             conf.memory_budget,
             conf.shared_nothing,
         ));
+        shuffle.set_fault_plane(Arc::clone(&faults));
         {
             let bus = Arc::clone(&events);
             shuffle.set_spill_hook(Arc::new(move |block, bytes, reloaded| {
@@ -90,6 +108,7 @@ impl SparkletContext {
             .attach(super::executor::BackendServices {
                 shuffle: Arc::clone(&shuffle),
                 events: Arc::clone(&events),
+                faults: Arc::clone(&faults),
                 conf: conf.clone(),
             })
             .map_err(|reason| ConfError::BackendAttach {
@@ -104,6 +123,7 @@ impl SparkletContext {
                 broadcasts: BroadcastRegistry::default(),
                 metrics,
                 events,
+                faults,
                 next_rdd_id: AtomicUsize::new(0),
                 conf,
             }),
@@ -160,6 +180,13 @@ impl SparkletContext {
     /// The context's event bus — register listeners or emit directly.
     pub fn events(&self) -> &Arc<EventBus> {
         &self.inner.events
+    }
+
+    /// The armed fault-injection plane (disarmed unless the conf set a
+    /// plan). Chaos tests read its injection counters to prove their
+    /// schedule actually fired.
+    pub fn faults(&self) -> &Arc<FaultPlane> {
+        &self.inner.faults
     }
 
     pub(crate) fn new_rdd_id(&self) -> usize {
@@ -265,6 +292,34 @@ mod tests {
             err.to_string().contains("unknown executor backend"),
             "{err}"
         );
+    }
+
+    #[test]
+    fn fault_plane_arms_from_conf_and_raw_garbage_fails_typed() {
+        let sc = SparkletContext::local(2);
+        assert!(!sc.faults().is_active(), "disarmed by default");
+        let conf = SparkletConf::new("faulty")
+            .with_cores(2)
+            .unwrap()
+            .with_fault_plan("seed=1; task_panic:nth=1")
+            .unwrap();
+        let sc = SparkletContext::new(conf);
+        assert!(sc.faults().is_active());
+        // The legacy worker_fault knob arms the plane too.
+        let conf = SparkletConf::new("legacy")
+            .with_cores(2)
+            .unwrap()
+            .with_worker_fault("w0:1");
+        let sc = SparkletContext::new(conf);
+        assert_eq!(sc.faults().worker_kill_after("w0"), Some(1));
+        // A raw-field spec that bypassed the validating builder still
+        // fails typed when the context arms it.
+        let conf = SparkletConf {
+            fault_plan: Some("bogus_site:always".into()),
+            ..Default::default()
+        };
+        let err = SparkletContext::try_new(conf).unwrap_err();
+        assert!(matches!(err, ConfError::InvalidFaultPlan { .. }), "{err}");
     }
 
     #[test]

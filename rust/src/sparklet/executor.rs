@@ -91,12 +91,15 @@ impl Task {
 /// Handles the driver gives an [`ExecutorBackend`] at context creation
 /// ([`ExecutorBackend::attach`]): the shuffle manager whose blocks the
 /// backend serves to remote workers, the event bus for
-/// worker-lifecycle events, and the resolved configuration (worker
-/// count, socket dir, heartbeat/timeout knobs).
+/// worker-lifecycle events, the context's fault-injection plane (so
+/// driver-side transport sites fire on the same schedule tests
+/// observe), and the resolved configuration (worker count, socket dir,
+/// heartbeat/timeout knobs).
 #[derive(Clone)]
 pub struct BackendServices {
     pub shuffle: Arc<super::shuffle::ShuffleManager>,
     pub events: Arc<super::events::EventBus>,
+    pub faults: Arc<super::faults::FaultPlane>,
     pub conf: super::conf::SparkletConf,
 }
 

@@ -1,0 +1,655 @@
+//! Deterministic, seeded fault injection and unified retry policy.
+//!
+//! The "R" in RDD is *resilient*, and resilience claims are only worth
+//! what their failure model covers. This module turns the repo's ad-hoc
+//! failure knobs (`worker_fault "w0:1"`, `task_failure_rate`) into one
+//! systematic plane: a [`FaultPlan`] names *sites* threaded through the
+//! real code paths — spill write/read in the block store, frame
+//! write/read/corrupt in the transport, task panics in the scheduler,
+//! worker kill / heartbeat stall in the remote executor, client
+//! disconnect in serve mode — and a seeded trigger per site, so a fault
+//! schedule replays bit-exactly from its spec string. The armed runtime
+//! form is a [`FaultPlane`], held per [`SparkletContext`] (never
+//! process-global: parallel `cargo test` threads must not contaminate
+//! each other's schedules).
+//!
+//! Plan grammar (`SPARKLET_FAULT_PLAN` / `--fault-plan`), clauses split
+//! on `;`:
+//!
+//! ```text
+//! seed=42; spill_read:nth=1; frame_corrupt:p=0.05; worker_kill=w0:1
+//! ```
+//!
+//! * `seed=N` — seeds the probabilistic triggers and corruption offsets
+//!   (default 0).
+//! * `<site>:nth=K` — fire exactly once, on the K-th arming (1-based).
+//! * `<site>:every=K` — fire on every K-th arming.
+//! * `<site>:p=F` — seeded Bernoulli coin per arming, `0 < F <= 1`.
+//! * `<site>:always` — fire on every arming (`every=1`).
+//! * `worker_kill=<id>:<n>` — worker `<id>` dies after completing `<n>`
+//!   tasks (subsumes the legacy `worker_fault` spec).
+//! * `heartbeat_stall=<id>:<n>` — worker `<id>` stops heartbeating after
+//!   `<n>` tasks while its socket stays open, so the driver's liveness
+//!   watchdog — not an EOF — must declare it lost.
+//!
+//! Alongside the plane lives [`RetryPolicy`]: max attempts, a
+//! deterministic exponential backoff schedule, and an optional per-job
+//! deadline, with typed [`RetryError`] outcomes. The DAG scheduler's
+//! described-job loop and the worker fetch path both retry through it,
+//! so "how many times, how long apart, give up when" is decided in one
+//! place instead of per call site.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::rng::SplitMix64;
+
+/// Named injection points. Each variant corresponds to exactly one
+/// arming call threaded through the production code path it names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// `BlockStore::enforce_budget`, just before a victim block's bytes
+    /// are written to its spill file (fails like a full/broken disk;
+    /// the block stays resident, mining proceeds degraded).
+    SpillWrite,
+    /// `BlockStore::get`, just before reading a spilled block back
+    /// (fails like an unreadable disk; surfaces as a typed, retryable
+    /// shuffle error).
+    SpillRead,
+    /// `transport::write_frame_with`, before any bytes hit the wire
+    /// (fails like a reset connection; the stream stays unwritten, so a
+    /// retry re-sends a whole frame).
+    FrameWrite,
+    /// `transport::read_frame_with`, before the length prefix is read
+    /// (fails like a truncated/reset connection).
+    FrameRead,
+    /// `transport::write_frame_with`, after encoding: flips one seeded
+    /// payload byte (never the length prefix, so framing stays aligned
+    /// and the peer sees a typed codec error, not a desynced stream).
+    FrameCorrupt,
+    /// Scheduler task bodies: the task panics before running, and the
+    /// stage retries it from lineage.
+    TaskPanic,
+    /// `serve::Server::serve_connection`: the client vanishes after its
+    /// request is handled, before the response is written — the
+    /// admission ticket must already be released and waiters unwedged.
+    ServeDisconnect,
+}
+
+impl FaultSite {
+    /// Every site, for table-driven tests and docs.
+    pub const ALL: [FaultSite; 7] = [
+        FaultSite::SpillWrite,
+        FaultSite::SpillRead,
+        FaultSite::FrameWrite,
+        FaultSite::FrameRead,
+        FaultSite::FrameCorrupt,
+        FaultSite::TaskPanic,
+        FaultSite::ServeDisconnect,
+    ];
+
+    /// The grammar name of this site.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultSite::SpillWrite => "spill_write",
+            FaultSite::SpillRead => "spill_read",
+            FaultSite::FrameWrite => "frame_write",
+            FaultSite::FrameRead => "frame_read",
+            FaultSite::FrameCorrupt => "frame_corrupt",
+            FaultSite::TaskPanic => "task_panic",
+            FaultSite::ServeDisconnect => "serve_disconnect",
+        }
+    }
+
+    fn parse(s: &str) -> Option<FaultSite> {
+        FaultSite::ALL.into_iter().find(|site| site.as_str() == s)
+    }
+
+    /// Stable tag for forking the plan seed per site (discriminant
+    /// order is append-only, like the wire tags).
+    fn tag(self) -> u64 {
+        self as u64 + 1
+    }
+}
+
+/// When an armed site actually fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Trigger {
+    /// Fire exactly once, on the k-th arming (1-based).
+    Nth(u64),
+    /// Fire on every k-th arming.
+    Every(u64),
+    /// Seeded Bernoulli coin per arming.
+    Prob(f64),
+}
+
+/// A parsed fault schedule. Pure data: arm it into a [`FaultPlane`] to
+/// get the stateful, thread-safe runtime form.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    sites: Vec<(FaultSite, Trigger)>,
+    worker_kill: Vec<(String, u64)>,
+    heartbeat_stall: Vec<(String, u64)>,
+}
+
+impl FaultPlan {
+    /// Parse the plan grammar. Every clause must parse; unknown sites,
+    /// malformed triggers, and out-of-range probabilities are errors
+    /// (a typo silently injecting nothing would make every chaos test
+    /// vacuous).
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(';') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            if let Some(v) = clause.strip_prefix("seed=") {
+                plan.seed = v
+                    .trim()
+                    .parse::<u64>()
+                    .map_err(|_| format!("clause {clause:?}: seed must be a u64"))?;
+            } else if let Some(v) = clause.strip_prefix("worker_kill=") {
+                plan.worker_kill.push(parse_worker_clause(clause, v)?);
+            } else if let Some(v) = clause.strip_prefix("heartbeat_stall=") {
+                plan.heartbeat_stall.push(parse_worker_clause(clause, v)?);
+            } else {
+                let (site, trigger) = clause.split_once(':').ok_or(format!(
+                    "clause {clause:?}: expected <site>:<trigger>, \
+                     seed=N, worker_kill=<id>:<n>, or heartbeat_stall=<id>:<n>"
+                ))?;
+                let site = FaultSite::parse(site.trim()).ok_or_else(|| {
+                    format!(
+                        "clause {clause:?}: unknown site {:?} (known: {})",
+                        site.trim(),
+                        FaultSite::ALL.map(|s| s.as_str()).join(", ")
+                    )
+                })?;
+                plan.sites.push((site, parse_trigger(clause, trigger.trim())?));
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True when the plan injects nothing (e.g. parsed from `"seed=7"`).
+    pub fn is_empty(&self) -> bool {
+        self.sites.is_empty() && self.worker_kill.is_empty() && self.heartbeat_stall.is_empty()
+    }
+}
+
+fn parse_worker_clause(clause: &str, v: &str) -> Result<(String, u64), String> {
+    let (id, n) = v
+        .split_once(':')
+        .ok_or(format!("clause {clause:?}: expected <worker-id>:<n-tasks>"))?;
+    let n = n
+        .trim()
+        .parse::<u64>()
+        .ok()
+        .filter(|&n| n >= 1)
+        .ok_or(format!("clause {clause:?}: task count must be an integer >= 1"))?;
+    Ok((id.trim().to_string(), n))
+}
+
+fn parse_trigger(clause: &str, t: &str) -> Result<Trigger, String> {
+    if t == "always" {
+        return Ok(Trigger::Every(1));
+    }
+    if let Some(v) = t.strip_prefix("nth=") {
+        let k = v
+            .parse::<u64>()
+            .ok()
+            .filter(|&k| k >= 1)
+            .ok_or(format!("clause {clause:?}: nth wants an integer >= 1"))?;
+        return Ok(Trigger::Nth(k));
+    }
+    if let Some(v) = t.strip_prefix("every=") {
+        let k = v
+            .parse::<u64>()
+            .ok()
+            .filter(|&k| k >= 1)
+            .ok_or(format!("clause {clause:?}: every wants an integer >= 1"))?;
+        return Ok(Trigger::Every(k));
+    }
+    if let Some(v) = t.strip_prefix("p=") {
+        let p = v
+            .parse::<f64>()
+            .ok()
+            .filter(|p| p.is_finite() && *p > 0.0 && *p <= 1.0)
+            .ok_or(format!("clause {clause:?}: p wants a probability in (0, 1]"))?;
+        return Ok(Trigger::Prob(p));
+    }
+    Err(format!(
+        "clause {clause:?}: unknown trigger {t:?} (want nth=K, every=K, p=F, or always)"
+    ))
+}
+
+/// Per-site arming state under the plane's one lock.
+#[derive(Default)]
+struct SiteState {
+    /// Times this site has been armed (reached in the code path).
+    hits: u64,
+    /// Times the trigger actually fired.
+    fired: u64,
+    /// A `nth=` trigger that already fired stays quiet forever.
+    nth_done: bool,
+}
+
+/// The armed, thread-safe runtime form of a [`FaultPlan`]. One per
+/// context (and one per worker process, parsed from `--fault`); a
+/// disarmed plane is a no-op on every path, so production code arms
+/// sites unconditionally.
+pub struct FaultPlane {
+    plan: Option<FaultPlan>,
+    state: Mutex<HashMap<FaultSite, SiteState>>,
+}
+
+impl FaultPlane {
+    /// A plane that never fires — the default wiring.
+    pub fn disarmed() -> FaultPlane {
+        FaultPlane {
+            plan: None,
+            state: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Arm a parsed plan.
+    pub fn new(plan: FaultPlan) -> FaultPlane {
+        let plan = if plan.is_empty() { None } else { Some(plan) };
+        FaultPlane {
+            plan,
+            state: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// True when any clause could fire. Hot paths may skip arming work
+    /// (not correctness) when inactive.
+    pub fn is_active(&self) -> bool {
+        self.plan.is_some()
+    }
+
+    /// Arm `site` once: count the hit and decide whether the fault
+    /// fires here. The decision depends only on the plan seed, the
+    /// site, and this site's own hit ordinal — never on other sites'
+    /// traffic — so a schedule replays even when unrelated code paths
+    /// change.
+    pub fn should_fail(&self, site: FaultSite) -> bool {
+        let Some(plan) = &self.plan else {
+            return false;
+        };
+        let triggers: Vec<Trigger> = plan
+            .sites
+            .iter()
+            .filter(|(s, _)| *s == site)
+            .map(|(_, t)| *t)
+            .collect();
+        if triggers.is_empty() {
+            return false;
+        }
+        let mut state = self.state.lock().unwrap();
+        let st = state.entry(site).or_default();
+        st.hits += 1;
+        let hit = st.hits;
+        let fire = triggers.iter().any(|t| match *t {
+            Trigger::Nth(k) => !st.nth_done && hit == k,
+            Trigger::Every(k) => hit % k == 0,
+            Trigger::Prob(p) => {
+                // Stateless per-(seed, site, hit) derivation: parallel
+                // armings of *other* sites cannot perturb this coin.
+                let mut base = SplitMix64::new(plan.seed);
+                let mut per_site = base.fork(site.tag());
+                per_site.fork(hit).gen_bool(p)
+            }
+        });
+        if fire {
+            st.fired += 1;
+            if triggers.iter().any(|t| matches!(t, Trigger::Nth(k) if *k == hit)) {
+                st.nth_done = true;
+            }
+        }
+        fire
+    }
+
+    /// How many times `site` has actually fired (test signal: a chaos
+    /// test that injected nothing proved nothing).
+    pub fn injected(&self, site: FaultSite) -> u64 {
+        self.state
+            .lock()
+            .unwrap()
+            .get(&site)
+            .map_or(0, |st| st.fired)
+    }
+
+    /// Total faults fired across all sites.
+    pub fn total_injected(&self) -> u64 {
+        self.state.lock().unwrap().values().map(|st| st.fired).sum()
+    }
+
+    /// Flip one seeded byte of `payload` in place (the
+    /// [`FaultSite::FrameCorrupt`] payload mutation). The offset
+    /// derives from the seed and the site's fired count, so corruption
+    /// is replayable; the XOR constant is nonzero, so the byte always
+    /// actually changes.
+    pub fn corrupt_byte(&self, payload: &mut [u8]) {
+        if payload.is_empty() {
+            return;
+        }
+        let seed = self.plan.as_ref().map_or(0, |p| p.seed);
+        let fired = self.injected(FaultSite::FrameCorrupt);
+        let mut base = SplitMix64::new(seed);
+        let mut rng = base.fork(FaultSite::FrameCorrupt.tag()).fork(fired);
+        let idx = rng.gen_range(payload.len());
+        payload[idx] ^= 0xA5;
+    }
+
+    /// `worker_kill=<id>:<n>`: the task count after which worker `id`
+    /// should die, if the plan names it.
+    pub fn worker_kill_after(&self, worker_id: &str) -> Option<u64> {
+        self.plan.as_ref().and_then(|p| {
+            p.worker_kill
+                .iter()
+                .find(|(id, _)| id == worker_id)
+                .map(|(_, n)| *n)
+        })
+    }
+
+    /// `heartbeat_stall=<id>:<n>`: the task count after which worker
+    /// `id` should stop heartbeating, if the plan names it.
+    pub fn heartbeat_stall_after(&self, worker_id: &str) -> Option<u64> {
+        self.plan.as_ref().and_then(|p| {
+            p.heartbeat_stall
+                .iter()
+                .find(|(id, _)| id == worker_id)
+                .map(|(_, n)| *n)
+        })
+    }
+}
+
+/// Unified retry/backoff/deadline policy. Attempt loops ask
+/// [`RetryPolicy::backoff`] how long to sleep between attempts and
+/// [`RetryPolicy::check_deadline`] whether the job may continue; both
+/// are pure functions of the policy, so a schedule is deterministic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts (first try included). At least 1.
+    pub max_attempts: u32,
+    /// Backoff before retry `a` is `base << (a-1)`, capped.
+    pub backoff_base_ms: u64,
+    /// Ceiling on any single backoff sleep.
+    pub backoff_cap_ms: u64,
+    /// Whole-job wall-clock budget; `None` = unbounded.
+    pub deadline_ms: Option<u64>,
+}
+
+/// Ceiling on a single backoff sleep: retries are for transient faults,
+/// and anything still failing after a second of backoff needs the
+/// deadline, not more patience.
+pub const BACKOFF_CAP_MS: u64 = 1_000;
+
+impl RetryPolicy {
+    pub fn new(max_attempts: u32, backoff_base_ms: u64, deadline_ms: Option<u64>) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: max_attempts.max(1),
+            backoff_base_ms,
+            backoff_cap_ms: BACKOFF_CAP_MS,
+            deadline_ms,
+        }
+    }
+
+    /// How long to sleep before attempt `attempt` (0-based; attempt 0
+    /// never waits). Deterministic: `base * 2^(attempt-1)`, capped.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        if attempt == 0 || self.backoff_base_ms == 0 {
+            return Duration::ZERO;
+        }
+        let exp = (attempt - 1).min(20); // 2^20 * base already dwarfs any cap
+        let ms = self
+            .backoff_base_ms
+            .saturating_mul(1u64 << exp)
+            .min(self.backoff_cap_ms);
+        Duration::from_millis(ms)
+    }
+
+    /// Typed deadline check against the job's start instant.
+    pub fn check_deadline(&self, started: Instant) -> Result<(), RetryError> {
+        let Some(deadline_ms) = self.deadline_ms else {
+            return Ok(());
+        };
+        let elapsed_ms = started.elapsed().as_millis() as u64;
+        if elapsed_ms > deadline_ms {
+            Err(RetryError::DeadlineExceeded {
+                elapsed_ms,
+                deadline_ms,
+            })
+        } else {
+            Ok(())
+        }
+    }
+
+    /// `RetriesExhausted` carrying the final attempt's error.
+    pub fn exhausted(&self, last_error: impl Into<String>) -> RetryError {
+        RetryError::RetriesExhausted {
+            attempts: self.max_attempts,
+            last_error: last_error.into(),
+        }
+    }
+}
+
+/// Why a retried operation gave up. The typed boundary the property
+/// suite checks against: persistent faults must end here, never in a
+/// wrong answer or a hang.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RetryError {
+    /// Every attempt failed; `last_error` is the final attempt's cause.
+    RetriesExhausted { attempts: u32, last_error: String },
+    /// The per-job wall-clock budget ran out mid-schedule.
+    DeadlineExceeded { elapsed_ms: u64, deadline_ms: u64 },
+}
+
+impl std::fmt::Display for RetryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RetryError::RetriesExhausted {
+                attempts,
+                last_error,
+            } => write!(f, "retries exhausted after {attempts} attempts: {last_error}"),
+            RetryError::DeadlineExceeded {
+                elapsed_ms,
+                deadline_ms,
+            } => write!(
+                f,
+                "deadline exceeded: {elapsed_ms} ms elapsed against a {deadline_ms} ms budget"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RetryError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_grammar() {
+        let plan = FaultPlan::parse(
+            "seed=42; spill_read:nth=1; frame_corrupt:p=0.25; task_panic:every=3; \
+             spill_write:always; worker_kill=w0:1; heartbeat_stall=w1:2;",
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 42);
+        assert_eq!(plan.sites.len(), 4);
+        assert_eq!(plan.sites[0], (FaultSite::SpillRead, Trigger::Nth(1)));
+        assert_eq!(plan.sites[3], (FaultSite::SpillWrite, Trigger::Every(1)));
+        assert_eq!(plan.worker_kill, vec![("w0".to_string(), 1)]);
+        assert_eq!(plan.heartbeat_stall, vec![("w1".to_string(), 2)]);
+        assert!(!plan.is_empty());
+        assert!(FaultPlan::parse("seed=7").unwrap().is_empty());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_clauses_typed() {
+        for (spec, needle) in [
+            ("spillread:nth=1", "unknown site"),
+            ("spill_read", "expected <site>:<trigger>"),
+            ("spill_read:sometimes", "unknown trigger"),
+            ("spill_read:nth=0", "nth wants an integer >= 1"),
+            ("spill_read:every=zero", "every wants an integer >= 1"),
+            ("spill_read:p=1.5", "probability in (0, 1]"),
+            ("spill_read:p=0", "probability in (0, 1]"),
+            ("seed=minus-one", "seed must be a u64"),
+            ("worker_kill=w0", "expected <worker-id>:<n-tasks>"),
+            ("worker_kill=w0:0", "task count must be an integer >= 1"),
+            ("heartbeat_stall=w0:x", "task count must be an integer >= 1"),
+        ] {
+            let err = FaultPlan::parse(spec).unwrap_err();
+            assert!(err.contains(needle), "{spec:?} -> {err}");
+            // Every error names the offending clause.
+            assert!(err.contains("clause"), "{spec:?} -> {err}");
+        }
+    }
+
+    #[test]
+    fn nth_fires_exactly_once_at_the_named_hit() {
+        let plane = FaultPlane::new(FaultPlan::parse("spill_read:nth=3").unwrap());
+        let fired: Vec<bool> = (0..6)
+            .map(|_| plane.should_fail(FaultSite::SpillRead))
+            .collect();
+        assert_eq!(fired, vec![false, false, true, false, false, false]);
+        assert_eq!(plane.injected(FaultSite::SpillRead), 1);
+        // Other sites are untouched.
+        assert!(!plane.should_fail(FaultSite::SpillWrite));
+        assert_eq!(plane.injected(FaultSite::SpillWrite), 0);
+    }
+
+    #[test]
+    fn every_fires_periodically_and_always_is_every_one() {
+        let plane = FaultPlane::new(FaultPlan::parse("task_panic:every=2").unwrap());
+        let fired: Vec<bool> = (0..6)
+            .map(|_| plane.should_fail(FaultSite::TaskPanic))
+            .collect();
+        assert_eq!(fired, vec![false, true, false, true, false, true]);
+        let plane = FaultPlane::new(FaultPlan::parse("frame_write:always").unwrap());
+        assert!((0..4).all(|_| plane.should_fail(FaultSite::FrameWrite)));
+    }
+
+    #[test]
+    fn prob_trigger_replays_exactly_for_a_seed() {
+        let run = |seed: u64| -> Vec<bool> {
+            let plane =
+                FaultPlane::new(FaultPlan::parse(&format!("seed={seed}; frame_read:p=0.5")).unwrap());
+            (0..64).map(|_| plane.should_fail(FaultSite::FrameRead)).collect()
+        };
+        let a = run(9);
+        assert_eq!(a, run(9), "same seed, same schedule");
+        assert_ne!(a, run(10), "different seed, different schedule");
+        let fires = a.iter().filter(|&&f| f).count();
+        assert!((16..=48).contains(&fires), "p=0.5 over 64 hits fired {fires}");
+    }
+
+    #[test]
+    fn prob_schedule_is_immune_to_other_sites_traffic() {
+        let spec = "seed=5; frame_read:p=0.5; spill_write:always";
+        let quiet = FaultPlane::new(FaultPlan::parse(spec).unwrap());
+        let noisy = FaultPlane::new(FaultPlan::parse(spec).unwrap());
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for i in 0..32 {
+            a.push(quiet.should_fail(FaultSite::FrameRead));
+            // Interleave unrelated spill traffic on only one plane.
+            for _ in 0..i {
+                let _ = noisy.should_fail(FaultSite::SpillWrite);
+            }
+            b.push(noisy.should_fail(FaultSite::FrameRead));
+        }
+        assert_eq!(a, b, "frame_read coin depends only on its own hit ordinal");
+    }
+
+    #[test]
+    fn disarmed_plane_never_fires_and_empty_plan_is_disarmed() {
+        let plane = FaultPlane::disarmed();
+        assert!(!plane.is_active());
+        for site in FaultSite::ALL {
+            assert!(!plane.should_fail(site));
+        }
+        assert_eq!(plane.total_injected(), 0);
+        assert!(!FaultPlane::new(FaultPlan::parse("seed=3").unwrap()).is_active());
+    }
+
+    #[test]
+    fn corrupt_byte_changes_payload_deterministically() {
+        let plane = FaultPlane::new(FaultPlan::parse("seed=11; frame_corrupt:nth=1").unwrap());
+        let original = vec![0u8; 64];
+        let mut a = original.clone();
+        let mut b = original.clone();
+        plane.corrupt_byte(&mut a);
+        plane.corrupt_byte(&mut b);
+        assert_ne!(a, original, "corruption must actually change a byte");
+        assert_eq!(a, b, "same seed + fired count, same flip");
+        assert_eq!(a.iter().filter(|&&x| x != 0).count(), 1, "exactly one byte flips");
+        plane.corrupt_byte(&mut []); // empty payload is a no-op, not a panic
+    }
+
+    #[test]
+    fn worker_clauses_answer_only_for_their_id() {
+        let plane = FaultPlane::new(
+            FaultPlan::parse("worker_kill=w0:1; heartbeat_stall=w2:3").unwrap(),
+        );
+        assert_eq!(plane.worker_kill_after("w0"), Some(1));
+        assert_eq!(plane.worker_kill_after("w1"), None);
+        assert_eq!(plane.heartbeat_stall_after("w2"), Some(3));
+        assert_eq!(plane.heartbeat_stall_after("w0"), None);
+        assert_eq!(FaultPlane::disarmed().worker_kill_after("w0"), None);
+    }
+
+    #[test]
+    fn backoff_schedule_doubles_from_base_and_caps() {
+        let policy = RetryPolicy::new(5, 10, None);
+        assert_eq!(policy.backoff(0), Duration::ZERO);
+        assert_eq!(policy.backoff(1), Duration::from_millis(10));
+        assert_eq!(policy.backoff(2), Duration::from_millis(20));
+        assert_eq!(policy.backoff(3), Duration::from_millis(40));
+        assert_eq!(policy.backoff(30), Duration::from_millis(BACKOFF_CAP_MS));
+        // Zero base disables sleeping entirely (test configs).
+        assert_eq!(RetryPolicy::new(5, 0, None).backoff(3), Duration::ZERO);
+        // max_attempts is clamped to at least one try.
+        assert_eq!(RetryPolicy::new(0, 1, None).max_attempts, 1);
+    }
+
+    #[test]
+    fn deadline_check_is_typed_and_unbounded_without_one() {
+        let policy = RetryPolicy::new(3, 0, Some(0));
+        let started = Instant::now() - Duration::from_millis(5);
+        match policy.check_deadline(started) {
+            Err(RetryError::DeadlineExceeded {
+                elapsed_ms,
+                deadline_ms,
+            }) => {
+                assert!(elapsed_ms >= 5);
+                assert_eq!(deadline_ms, 0);
+            }
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert!(RetryPolicy::new(3, 0, None).check_deadline(started).is_ok());
+        assert!(RetryPolicy::new(3, 0, Some(60_000))
+            .check_deadline(Instant::now())
+            .is_ok());
+    }
+
+    #[test]
+    fn retry_errors_display_their_numbers() {
+        let e = RetryPolicy::new(4, 10, None).exhausted("worker lost");
+        assert_eq!(
+            e.to_string(),
+            "retries exhausted after 4 attempts: worker lost"
+        );
+        let e = RetryError::DeadlineExceeded {
+            elapsed_ms: 120,
+            deadline_ms: 100,
+        };
+        assert!(e.to_string().contains("120 ms"), "{e}");
+        assert!(e.to_string().contains("100 ms"), "{e}");
+    }
+}

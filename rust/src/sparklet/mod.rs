@@ -33,6 +33,7 @@ pub mod conf;
 pub mod context;
 pub mod events;
 pub mod executor;
+pub mod faults;
 pub mod metrics;
 pub mod pair;
 pub mod partitioner;
@@ -53,6 +54,7 @@ pub use context::SparkletContext;
 pub use events::{
     CollectingListener, EventBus, EventListener, EventLogWriter, MetricsListener, SparkletEvent,
 };
+pub use faults::{FaultPlan, FaultPlane, FaultSite, RetryError, RetryPolicy};
 pub use serde::{SerDe, SerDeError};
 pub use shuffle::ShuffleError;
 pub use executor::{

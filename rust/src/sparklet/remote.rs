@@ -54,10 +54,22 @@ use super::executor::{
     BackendServices, DescribedSink, ExecutorBackend, ExecutorRegistry, JobHandle, JobState, Task,
     TaskSet,
 };
+use super::faults::{FaultPlan, FaultPlane, RetryPolicy};
 use super::transport::{
-    read_frame, write_frame, BlockFetcher, Message, TaskDescriptor, TaskEnv, TaskRegistry,
-    TransportError, WireBlock,
+    read_frame, read_frame_with, write_frame, write_frame_with, BlockFetcher, Message,
+    TaskDescriptor, TaskEnv, TaskRegistry, TransportError, WireBlock,
 };
+
+/// One clamp window for heartbeat pacing, shared by the driver's
+/// liveness watchdog and the worker's send loop. The two sides used to
+/// clamp independently ((10, 1_000) vs (10, 10_000)): a conf in the gap
+/// made the worker beat slower than the watchdog sampled for, turning a
+/// live worker into a false `WorkerLost`.
+pub const HEARTBEAT_CLAMP_MS: (u64, u64) = (10, 1_000);
+
+fn clamp_heartbeat(ms: u64) -> u64 {
+    ms.clamp(HEARTBEAT_CLAMP_MS.0, HEARTBEAT_CLAMP_MS.1)
+}
 
 /// Register the backend under `"multi-process"`. Called once from
 /// `main()` (and explicitly by integration tests); see the module docs
@@ -174,7 +186,7 @@ impl LoopState {
             };
             let wrote = {
                 let mut w = conn.writer.lock().unwrap();
-                write_frame(&mut *w, &launch)
+                write_frame_with(&mut *w, &launch, Some(&disp.services.faults))
             };
             match wrote {
                 Ok(()) => {
@@ -206,6 +218,15 @@ impl LoopState {
         if !conn.alive.swap(false, Ordering::SeqCst) {
             return; // reader EOF and liveness timeout can race; first wins
         }
+        // Sever the socket so both blocked ends unwind: the driver's
+        // reader thread (else backend drop would join it forever when a
+        // worker stalls its heartbeat without closing the socket) and
+        // the worker's own read loop, which sees EOF and exits.
+        let _ = conn
+            .writer
+            .lock()
+            .unwrap()
+            .shutdown(std::net::Shutdown::Both);
         self.dead += 1;
         self.idle.retain(|w| w != worker);
         disp.services.events.emit(SparkletEvent::WorkerLost {
@@ -359,7 +380,7 @@ fn serve_connection(disp: Arc<Dispatcher>, stream: UnixStream) {
         return;
     }
     loop {
-        match read_frame(&mut &stream) {
+        match read_frame_with(&mut &stream, Some(&disp.services.faults)) {
             Ok(msg) => {
                 conn.last_seen_ms.store(disp.now_ms(), Ordering::Relaxed);
                 match msg {
@@ -403,7 +424,7 @@ fn serve_connection(disp: Arc<Dispatcher>, stream: UnixStream) {
                         };
                         let wrote = {
                             let mut w = conn.writer.lock().unwrap();
-                            write_frame(&mut *w, &reply)
+                            write_frame_with(&mut *w, &reply, Some(&disp.services.faults))
                         };
                         if wrote.is_err() {
                             let _ = disp.send_control(Control::Dead {
@@ -438,7 +459,7 @@ fn serve_connection(disp: Arc<Dispatcher>, stream: UnixStream) {
 
 /// Watchdog: declare workers dead after `worker_timeout_ms` of silence.
 fn liveness_loop(disp: Arc<Dispatcher>) {
-    let interval = disp.services.conf.heartbeat_ms.clamp(10, 1_000);
+    let interval = clamp_heartbeat(disp.services.conf.heartbeat_ms);
     let timeout = disp.services.conf.worker_timeout_ms;
     while !disp.shutdown.load(Ordering::SeqCst) {
         std::thread::sleep(Duration::from_millis(interval));
@@ -578,7 +599,9 @@ impl ExecutorBackend for MultiProcessBackend {
         }
 
         let hb = disp.services.conf.heartbeat_ms;
-        let fault = disp.services.conf.worker_fault.clone();
+        // Workers get the *merged* plan (legacy `worker_fault` folded
+        // in), so every worker-side fault speaks one grammar.
+        let fault = disp.services.conf.effective_fault_plan();
         let binary = disp.services.conf.worker_binary.clone();
         for i in 0..n {
             let id = format!("w{i}");
@@ -715,6 +738,12 @@ impl Drop for MultiProcessBackend {
 /// binary must never be re-exec'd).
 pub const THREAD_WORKERS: &str = "<thread>";
 
+/// Fixed retry budget for the worker fetch path (workers carry no
+/// conf; this bounds transient transport hiccups without masking a
+/// dead driver for long).
+const FETCH_ATTEMPTS: u32 = 3;
+const FETCH_BACKOFF_MS: u64 = 5;
+
 /// Worker-side block fetcher: write `FetchBlock`, then read the
 /// `BlockData` reply off the *main* stream. Safe because the worker is
 /// single-slot: while a task runs (and fetches), the worker's read loop
@@ -723,6 +752,56 @@ pub const THREAD_WORKERS: &str = "<thread>";
 struct SocketFetcher<'a> {
     reader: &'a UnixStream,
     writer: &'a Mutex<UnixStream>,
+    faults: Option<&'a FaultPlane>,
+}
+
+impl SocketFetcher<'_> {
+    /// One fetch round trip. The outer `Err` is a transport-level
+    /// failure — retryable, because every injected frame site fires
+    /// *before* bytes move, so the stream stays frame-aligned. The
+    /// inner `Result` is the driver's authoritative answer and is never
+    /// retried here (an incomplete map stage is the scheduler's call).
+    fn round_trip(
+        &self,
+        shuffle_id: usize,
+        reduce_part: usize,
+    ) -> Result<Result<Vec<WireBlock>, String>, String> {
+        {
+            let mut w = self.writer.lock().unwrap();
+            write_frame_with(
+                &mut *w,
+                &Message::FetchBlock {
+                    shuffle_id,
+                    reduce_part,
+                },
+                self.faults,
+            )
+            .map_err(|e| format!("fetch request failed: {e}"))?;
+        }
+        let mut reader = self.reader;
+        match read_frame_with(&mut reader, self.faults)
+            .map_err(|e| format!("fetch reply failed: {e}"))?
+        {
+            Message::BlockData {
+                shuffle_id: sid,
+                reduce_part: rp,
+                result,
+            } => {
+                if sid != shuffle_id || rp != reduce_part {
+                    return Err(format!(
+                        "fetch reply mismatch: asked ({shuffle_id},{reduce_part}), got ({sid},{rp})"
+                    ));
+                }
+                Ok(result)
+            }
+            Message::Shutdown => Ok(Err("driver shut down mid-fetch".into())),
+            // Anything else mid-fetch is a protocol violation.
+            other => Err(format!(
+                "unexpected frame during fetch: {}",
+                frame_name(&other)
+            )),
+        }
+    }
 }
 
 impl BlockFetcher for SocketFetcher<'_> {
@@ -731,42 +810,24 @@ impl BlockFetcher for SocketFetcher<'_> {
         shuffle_id: usize,
         reduce_part: usize,
     ) -> Result<Vec<WireBlock>, String> {
-        {
-            let mut w = self.writer.lock().unwrap();
-            write_frame(
-                &mut *w,
-                &Message::FetchBlock {
-                    shuffle_id,
-                    reduce_part,
-                },
-            )
-            .map_err(|e| format!("fetch request failed: {e}"))?;
-        }
-        let mut reader = self.reader;
-        loop {
-            match read_frame(&mut reader).map_err(|e| format!("fetch reply failed: {e}"))? {
-                Message::BlockData {
-                    shuffle_id: sid,
-                    reduce_part: rp,
-                    result,
-                } => {
-                    if sid != shuffle_id || rp != reduce_part {
-                        return Err(format!(
-                            "fetch reply mismatch: asked ({shuffle_id},{reduce_part}), got ({sid},{rp})"
-                        ));
-                    }
-                    return result;
-                }
-                Message::Shutdown => return Err("driver shut down mid-fetch".into()),
-                // Anything else mid-fetch is a protocol violation.
-                other => {
-                    return Err(format!(
-                        "unexpected frame during fetch: {}",
-                        frame_name(&other)
-                    ))
+        let policy = RetryPolicy::new(FETCH_ATTEMPTS, FETCH_BACKOFF_MS, None);
+        let mut last = String::new();
+        for attempt in 1..=policy.max_attempts {
+            if attempt > 1 {
+                std::thread::sleep(policy.backoff(attempt - 1));
+            }
+            match self.round_trip(shuffle_id, reduce_part) {
+                Ok(answer) => return answer,
+                Err(e) => {
+                    log::warn!(
+                        "worker fetch attempt {attempt}/{}: {e}",
+                        policy.max_attempts
+                    );
+                    last = e;
                 }
             }
         }
+        Err(policy.exhausted(last).to_string())
     }
 }
 
@@ -780,11 +841,15 @@ fn frame_name(msg: &Message) -> &'static str {
         Message::Heartbeat { .. } => "Heartbeat",
         Message::WorkerLost { .. } => "WorkerLost",
         Message::Shutdown => "Shutdown",
+        Message::Request { .. } => "Request",
+        Message::Response { .. } => "Response",
     }
 }
 
-/// Parse a `"<worker-id>:<after-n-tasks>"` fault spec against this
-/// worker's id. `Some(n)` = die instead of reporting task `n`'s result.
+/// Parse the legacy `"<worker-id>:<after-n-tasks>"` fault spec against
+/// this worker's id. `Some(n)` = die instead of reporting task `n`'s
+/// result. Kept as a fallback for hand-launched workers; the driver
+/// now ships the full [`FaultPlan`] grammar instead.
 fn parse_fault(spec: Option<&str>, my_id: &str) -> Option<usize> {
     let spec = spec?;
     let (id, n) = spec.split_once(':')?;
@@ -792,6 +857,38 @@ fn parse_fault(spec: Option<&str>, my_id: &str) -> Option<usize> {
         return None;
     }
     n.parse().ok().filter(|n| *n >= 1)
+}
+
+/// What the `--fault` spec means for one worker: the parsed plan (for
+/// frame-site injection in the fetch path) plus this worker's kill /
+/// heartbeat-stall task counts.
+struct WorkerFaults {
+    plane: Option<FaultPlane>,
+    die_after: Option<usize>,
+    stall_after: Option<usize>,
+}
+
+impl WorkerFaults {
+    fn resolve(spec: Option<&str>, my_id: &str) -> WorkerFaults {
+        match spec.and_then(|s| FaultPlan::parse(s).ok()) {
+            Some(plan) => {
+                let plane = FaultPlane::new(plan);
+                let die_after = plane.worker_kill_after(my_id).map(|n| n as usize);
+                let stall_after = plane.heartbeat_stall_after(my_id).map(|n| n as usize);
+                WorkerFaults {
+                    plane: Some(plane),
+                    die_after,
+                    stall_after,
+                }
+            }
+            // Not plan grammar: fall back to the legacy "w0:1" form.
+            None => WorkerFaults {
+                plane: None,
+                die_after: parse_fault(spec, my_id),
+                stall_after: None,
+            },
+        }
+    }
 }
 
 /// The worker's event loop. Connects to the driver's socket, registers,
@@ -840,14 +937,21 @@ pub fn worker_loop(
         }
     }
 
-    // Heartbeat side thread; stops when the main loop exits (flag) or
-    // the socket dies (write error).
+    let wf = WorkerFaults::resolve(fault, id);
+    let completed = Arc::new(AtomicUsize::new(0));
+
+    // Heartbeat side thread; stops when the main loop exits (flag), the
+    // socket dies (write error), or an injected heartbeat stall fires
+    // (falls silent with the socket left open — the driver's liveness
+    // watchdog, not an EOF, must be what declares this worker dead).
     let done = Arc::new(AtomicBool::new(false));
     let hb_handle = {
         let done = Arc::clone(&done);
         let writer = Arc::clone(&writer);
+        let completed = Arc::clone(&completed);
+        let stall_after = wf.stall_after;
         let id = id.to_string();
-        let interval = heartbeat_ms.clamp(10, 10_000);
+        let interval = clamp_heartbeat(heartbeat_ms);
         std::thread::Builder::new()
             .name(format!("sparklet-hb-{id}"))
             .spawn(move || {
@@ -856,6 +960,9 @@ pub fn worker_loop(
                     std::thread::sleep(Duration::from_millis(interval));
                     if done.load(Ordering::SeqCst) {
                         return;
+                    }
+                    if stall_after.is_some_and(|n| completed.load(Ordering::SeqCst) >= n) {
+                        return; // injected stall: silence, not EOF
                     }
                     seq += 1;
                     let beat = Message::Heartbeat {
@@ -870,22 +977,22 @@ pub fn worker_loop(
             })
     };
 
-    let die_after = parse_fault(fault, id);
-    let mut completed = 0usize;
+    let die_after = wf.die_after;
     let code = loop {
         match read_frame(&mut &stream) {
             Ok(Message::LaunchTask { task }) => {
                 let fetcher = SocketFetcher {
                     reader: &stream,
                     writer: &writer,
+                    faults: wf.plane.as_ref(),
                 };
                 let env = TaskEnv::new(&fetcher);
                 let t = Instant::now();
                 let result = catch_unwind(AssertUnwindSafe(|| TaskRegistry::run(&task, &env)))
                     .unwrap_or_else(|_| Err(format!("task panicked (key '{}')", task.key)));
                 let run_ms = t.elapsed().as_secs_f64() * 1e3;
-                completed += 1;
-                if die_after.is_some_and(|n| completed >= n) {
+                let n_done = completed.fetch_add(1, Ordering::SeqCst) + 1;
+                if die_after.is_some_and(|n| n_done >= n) {
                     // Injected fault: die *instead of* reporting, so the
                     // driver sees an in-flight task vanish with the
                     // worker — the recovery path under test.
@@ -1195,5 +1302,137 @@ mod tests {
         assert_eq!(parse_fault(Some("w0:0"), "w0"), None, "0 tasks is no fault");
         assert_eq!(parse_fault(Some("garbage"), "w0"), None);
         assert_eq!(parse_fault(None, "w0"), None);
+    }
+
+    #[test]
+    fn heartbeat_clamp_is_shared_and_bounded() {
+        assert_eq!(clamp_heartbeat(0), HEARTBEAT_CLAMP_MS.0);
+        assert_eq!(clamp_heartbeat(9), 10);
+        assert_eq!(clamp_heartbeat(10), 10);
+        assert_eq!(clamp_heartbeat(500), 500);
+        assert_eq!(clamp_heartbeat(1_000), 1_000);
+        assert_eq!(clamp_heartbeat(1_001), 1_000);
+        // The old worker-side clamp allowed 10 s beats — silent for 10×
+        // longer than the driver's watchdog ever sampled for.
+        assert_eq!(clamp_heartbeat(10_000), HEARTBEAT_CLAMP_MS.1);
+    }
+
+    #[test]
+    fn worker_faults_resolve_plan_grammar_and_legacy_spec() {
+        let spec = Some("worker_kill=w0:2; heartbeat_stall=w1:3");
+        let wf = WorkerFaults::resolve(spec, "w0");
+        assert_eq!(wf.die_after, Some(2));
+        assert_eq!(wf.stall_after, None);
+        assert!(wf.plane.is_some(), "plan grammar arms a worker-side plane");
+        let wf = WorkerFaults::resolve(spec, "w1");
+        assert_eq!(wf.die_after, None);
+        assert_eq!(wf.stall_after, Some(3));
+        // Legacy "<id>:<n>" specs still work for hand-launched workers.
+        let wf = WorkerFaults::resolve(Some("w0:2"), "w0");
+        assert_eq!(wf.die_after, Some(2));
+        assert!(wf.plane.is_none());
+        let wf = WorkerFaults::resolve(None, "w0");
+        assert_eq!(wf.die_after, None);
+        assert_eq!(wf.stall_after, None);
+    }
+
+    #[test]
+    fn fetch_path_retries_through_injected_frame_faults() {
+        use super::super::faults::FaultSite;
+        let (a, b) = UnixStream::pair().unwrap();
+        // Driver stand-in: answer every FetchBlock with an empty list.
+        let server = std::thread::spawn(move || loop {
+            match read_frame(&mut &b) {
+                Ok(Message::FetchBlock {
+                    shuffle_id,
+                    reduce_part,
+                }) => {
+                    let reply = Message::BlockData {
+                        shuffle_id,
+                        reduce_part,
+                        result: Ok(vec![]),
+                    };
+                    if write_frame(&mut &b, &reply).is_err() {
+                        return;
+                    }
+                }
+                _ => return,
+            }
+        });
+        // Attempt 1: the request write fails injected (no bytes moved).
+        // Attempt 2: the request goes out, the reply read fails
+        // injected (reply stays buffered). Attempt 3: clean.
+        let plane = FaultPlane::new(
+            FaultPlan::parse("seed=1; frame_write:nth=1; frame_read:nth=1").unwrap(),
+        );
+        let writer = Mutex::new(a.try_clone().unwrap());
+        let fetcher = SocketFetcher {
+            reader: &a,
+            writer: &writer,
+            faults: Some(&plane),
+        };
+        let got = fetcher.fetch_blocks(3, 0).unwrap();
+        assert!(got.is_empty());
+        assert_eq!(plane.injected(FaultSite::FrameWrite), 1);
+        assert_eq!(plane.injected(FaultSite::FrameRead), 1);
+        // A schedule that never stops injecting exhausts the budget as
+        // a typed, countable error — not a hang.
+        let always = FaultPlane::new(FaultPlan::parse("frame_write:always").unwrap());
+        let doomed = SocketFetcher {
+            reader: &a,
+            writer: &writer,
+            faults: Some(&always),
+        };
+        let err = doomed.fetch_blocks(3, 0).unwrap_err();
+        assert!(
+            err.contains("retries exhausted after 3 attempts"),
+            "{err}"
+        );
+        assert_eq!(always.injected(FaultSite::FrameWrite), 3);
+        drop(writer);
+        drop(a);
+        let _ = server.join();
+    }
+
+    #[test]
+    fn stalled_heartbeat_surfaces_as_worker_lost_via_the_watchdog() {
+        register_echo_tasks();
+        let sink = CollectingListener::new();
+        // w0 keeps its socket open but falls silent after one task; only
+        // the liveness watchdog (not an EOF) can notice.
+        let conf = mp_conf(2)
+            .with_worker_timeouts(20, 200)
+            .with_fault_plan("heartbeat_stall=w0:1")
+            .unwrap();
+        let sc = SparkletContext::try_new(conf).unwrap();
+        sc.events().register(Arc::new(sink.clone()));
+        // Enough tasks that w0 is certain to complete one.
+        let got = submit_echo(&sc, 6);
+        for (part, bytes) in got.iter().enumerate() {
+            assert_eq!(bytes, &vec![part as u8; 3], "stall must not corrupt results");
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let (worker, reason) = loop {
+            sc.events().flush();
+            let found = sink.snapshot().iter().find_map(|(_, e)| match e {
+                SparkletEvent::WorkerLost { worker, reason } => {
+                    Some((worker.clone(), reason.clone()))
+                }
+                _ => None,
+            });
+            if let Some(l) = found {
+                break l;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "watchdog never fired on the stalled worker"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        };
+        assert_eq!(worker, "w0");
+        assert!(reason.contains("no heartbeat"), "{reason}");
+        // The survivor still executes new work.
+        let got = submit_echo(&sc, 2);
+        assert_eq!(got[1], vec![1u8; 3]);
     }
 }

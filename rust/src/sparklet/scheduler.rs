@@ -25,6 +25,7 @@ use std::time::Instant;
 use super::context::SparkletContext;
 use super::events::SparkletEvent;
 use super::executor::{panic_message, TaskSet};
+use super::faults::{FaultSite, RetryError, RetryPolicy};
 use super::metrics::{StageKind, StageMetrics};
 use super::pair::ShuffleDepObj;
 use super::rdd::{materialize, Data, Dep, DepNode, Rdd, TaskContext};
@@ -79,10 +80,25 @@ fn run_stage<U: Send + 'static>(
     let mut steals = 0usize;
     let mut queue_wait_ms = 0.0f64;
     let max_attempts = ctx.conf().max_task_failures;
+    let policy = RetryPolicy::new(
+        max_attempts as u32,
+        ctx.conf().retry_backoff_ms,
+        ctx.conf().job_deadline_ms,
+    );
+    let started = Instant::now();
+    let mut deadline_hit: Option<RetryError> = None;
+    let mut last_error = String::new();
 
     for attempt in 0..max_attempts {
         if pending.is_empty() {
             break;
+        }
+        if attempt > 0 {
+            if let Err(e) = policy.check_deadline(started) {
+                deadline_hit = Some(e);
+                break;
+            }
+            std::thread::sleep(policy.backoff(attempt as u32));
         }
         // Build the stage's task set. Each task catches its own panic
         // and reports `(partition, outcome)` through the channel; the
@@ -107,6 +123,9 @@ fn run_stage<U: Send + 'static>(
                 let outcome = catch_unwind(AssertUnwindSafe(|| {
                     if injected_failure(&ctx2, stage_tag, part, attempt) {
                         panic!("injected task failure (stage {stage_tag}, part {part})");
+                    }
+                    if ctx2.faults().should_fail(FaultSite::TaskPanic) {
+                        panic!("injected task_panic fault (stage {stage_tag}, part {part})");
                     }
                     let t = Instant::now();
                     let out = run(part, attempt);
@@ -145,6 +164,7 @@ fn run_stage<U: Send + 'static>(
                 Err(msg) => {
                     log::warn!("task {part} failed (attempt {attempt}): {msg}");
                     retries += 1;
+                    last_error = msg;
                     still_pending.push(part);
                 }
             }
@@ -153,10 +173,14 @@ fn run_stage<U: Send + 'static>(
     }
 
     if !pending.is_empty() {
-        panic!(
-            "stage failed: partitions {pending:?} exceeded {} attempts",
-            max_attempts
-        );
+        // run_stage serves closure-typed public APIs (`collect` et al.)
+        // whose signatures can't carry a Result; the typed error rides
+        // the panic payload and is re-typed at the engine boundary
+        // (`MiningSession::run_*` catches it into `FimError`).
+        let err = deadline_hit.unwrap_or_else(|| {
+            policy.exhausted(format!("partitions {pending:?}: {last_error}"))
+        });
+        panic!("stage {stage_tag:x} failed: {err}");
     }
 
     // StageCompleted always goes out; whether it lands in the metrics
@@ -269,12 +293,16 @@ fn direct_shuffle_dep(node: &Arc<dyn DepNode>) -> Option<Arc<dyn ShuffleDepObj>>
 /// lives in the driver's store, so a worker death never loses map
 /// stages — lineage re-execution is only needed when the *driver*
 /// retries a map task, which the existing path already covers.
+///
+/// Retry exhaustion and per-job deadline overrun surface as typed
+/// [`RetryError`]s (the stage/job spans still close, so event streams
+/// stay balanced for replay).
 pub fn run_described_job<T: Data>(
     ctx: &SparkletContext,
     rdd: &Rdd<T>,
     key: &str,
     payload: impl Fn(usize, usize) -> Vec<u8>,
-) -> Vec<Vec<u8>> {
+) -> Result<Vec<Vec<u8>>, RetryError> {
     let job_id = ctx.events().next_job_id();
     ctx.events().emit(SparkletEvent::JobStart { job_id });
 
@@ -307,10 +335,25 @@ pub fn run_described_job<T: Data>(
     let mut queue_wait_ms = 0.0f64;
     let max_attempts = ctx.conf().max_task_failures;
     let remote = ctx.executor().supports_described();
+    let policy = RetryPolicy::new(
+        max_attempts as u32,
+        ctx.conf().retry_backoff_ms,
+        ctx.conf().job_deadline_ms,
+    );
+    let started = Instant::now();
+    let mut deadline_hit: Option<RetryError> = None;
+    let mut last_error = String::new();
 
     for attempt in 0..max_attempts {
         if pending.is_empty() {
             break;
+        }
+        if attempt > 0 {
+            if let Err(e) = policy.check_deadline(started) {
+                deadline_hit = Some(e);
+                break;
+            }
+            std::thread::sleep(policy.backoff(attempt as u32));
         }
         let mut taskset = TaskSet::new(stage_tag, format!("Described/{key}/attempt{attempt}"));
         let (tx, rx) = channel::<(usize, Result<(Vec<u8>, f64), String>)>();
@@ -349,6 +392,9 @@ pub fn run_described_job<T: Data>(
                     let outcome = catch_unwind(AssertUnwindSafe(|| {
                         if injected_failure(&ctx2, stage_tag, part, attempt) {
                             panic!("injected task failure (stage {stage_tag}, part {part})");
+                        }
+                        if ctx2.faults().should_fail(FaultSite::TaskPanic) {
+                            panic!("injected task_panic fault (stage {stage_tag}, part {part})");
                         }
                         let t = Instant::now();
                         let fetcher = LocalBlockFetcher::new(ctx2.shuffle_arc());
@@ -391,6 +437,7 @@ pub fn run_described_job<T: Data>(
                 Err(msg) => {
                     log::warn!("described task {part} failed (attempt {attempt}): {msg}");
                     retries += 1;
+                    last_error = msg;
                     still_pending.push(part);
                 }
             }
@@ -398,12 +445,13 @@ pub fn run_described_job<T: Data>(
         pending = still_pending;
     }
 
-    if !pending.is_empty() {
-        panic!(
-            "described stage failed: partitions {pending:?} exceeded {} attempts",
-            max_attempts
-        );
-    }
+    let failure = if pending.is_empty() {
+        None
+    } else {
+        Some(deadline_hit.unwrap_or_else(|| {
+            policy.exhausted(format!("partitions {pending:?}: {last_error}"))
+        }))
+    };
 
     ctx.events().emit(SparkletEvent::StageCompleted {
         job_id,
@@ -426,7 +474,10 @@ pub fn run_described_job<T: Data>(
     ctx.events().emit(SparkletEvent::JobEnd { job_id });
     ctx.events().flush();
 
-    results.into_iter().map(|r| r.unwrap()).collect()
+    match failure {
+        Some(err) => Err(err),
+        None => Ok(results.into_iter().map(|r| r.unwrap()).collect()),
+    }
 }
 
 /// Entry point used by all actions.

@@ -19,7 +19,8 @@ use std::fmt;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use super::block::{BlockId, BlockStore, ShuffleBlock};
+use super::block::{BlockId, BlockIoError, BlockStore, ShuffleBlock};
+use super::faults::FaultPlane;
 
 /// Typed shuffle failures.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -34,6 +35,10 @@ pub enum ShuffleError {
     /// The block index knows the id but the store lost the payload
     /// (e.g. a spill file vanished between index and store lookups).
     MissingBlock { id: BlockId },
+    /// Disk IO on a spilled block failed (real or injected). The block
+    /// entry survives, so this is retryable: the task fails typed, the
+    /// stage re-runs it, and a transient fault recovers.
+    SpillIo(BlockIoError),
 }
 
 impl fmt::Display for ShuffleError {
@@ -48,11 +53,18 @@ impl fmt::Display for ShuffleError {
                  map stage completed (scheduler ordering bug)"
             ),
             Self::MissingBlock { id } => write!(f, "shuffle block {id} missing from the store"),
+            Self::SpillIo(e) => e.fmt(f),
         }
     }
 }
 
 impl std::error::Error for ShuffleError {}
+
+impl From<BlockIoError> for ShuffleError {
+    fn from(e: BlockIoError) -> Self {
+        Self::SpillIo(e)
+    }
+}
 
 /// Shuffle data + completion registry for one context.
 pub struct ShuffleManager {
@@ -162,7 +174,7 @@ impl ShuffleManager {
         for id in ids {
             let block = self
                 .store
-                .get(&id)
+                .get(&id)?
                 .ok_or(ShuffleError::MissingBlock { id })?;
             if self.shared_nothing {
                 // The store holds one Arc, we hold one: anything above 2
@@ -217,6 +229,12 @@ impl ShuffleManager {
     /// (the context routes it onto the event bus).
     pub fn set_spill_hook(&self, hook: super::block::BlockIoHook) {
         self.store.set_spill_hook(hook);
+    }
+
+    /// Arm the store's spill read/write fault sites with the context's
+    /// plane.
+    pub fn set_fault_plane(&self, plane: std::sync::Arc<FaultPlane>) {
+        self.store.set_fault_plane(plane);
     }
 
     /// Spilled blocks reloaded on fetch.
@@ -306,7 +324,7 @@ impl ShuffleManager {
         for id in ids {
             let block = self
                 .store
-                .get(&id)
+                .get(&id)?
                 .ok_or(ShuffleError::MissingBlock { id })?;
             out.push((id, block.bytes.to_vec(), block.records));
         }
@@ -481,6 +499,32 @@ mod tests {
             .fetch_blocks(sid + 100, 0)
             .unwrap_err()
             .contains("before its map stage"));
+    }
+
+    #[test]
+    fn injected_spill_fault_propagates_as_typed_shuffle_error() {
+        use super::super::faults::{FaultPlan, FaultPlane};
+        let m = ShuffleManager::with_conf(Some(1), true);
+        m.set_fault_plane(Arc::new(FaultPlane::new(
+            FaultPlan::parse("spill_read:nth=1").unwrap(),
+        )));
+        let sid = m.new_shuffle_id();
+        let (bytes, n) = block_of(&[(1u32, "x".to_string())]);
+        m.write_block(sid, 0, 0, bytes, n);
+        m.mark_completed(sid);
+        let err = m.fetch(sid, 0).unwrap_err();
+        assert!(matches!(err, ShuffleError::SpillIo(_)), "{err}");
+        assert!(err.to_string().contains("injected"), "{err}");
+        // The entry survived, so the retry fetch recovers.
+        assert_eq!(m.fetch(sid, 0).unwrap().len(), 1);
+        // fetch_serialized hits the same typed path.
+        m.set_fault_plane(Arc::new(FaultPlane::new(
+            FaultPlan::parse("spill_read:nth=1").unwrap(),
+        )));
+        assert!(matches!(
+            m.fetch_serialized(sid, 0),
+            Err(ShuffleError::SpillIo(_))
+        ));
     }
 
     #[test]

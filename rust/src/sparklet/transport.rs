@@ -22,6 +22,7 @@ use std::io::{Read, Write};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::block::BlockId;
+use super::faults::{FaultPlane, FaultSite};
 use super::serde::{Reader, SerDe, SerDeError};
 
 /// Upper bound on one frame's payload. Shuffle blocks are the largest
@@ -294,7 +295,33 @@ impl Message {
 
 /// Write one `u32`-length-prefixed frame and flush it.
 pub fn write_frame(w: &mut impl Write, msg: &Message) -> Result<(), TransportError> {
-    let payload = msg.to_bytes();
+    write_frame_with(w, msg, None)
+}
+
+/// [`write_frame`] with an optional fault plane threaded through.
+///
+/// Two sites live here: `frame_write` fires *before* any bytes touch
+/// the stream (so the connection stays frame-aligned and a retry can
+/// genuinely succeed), and `frame_corrupt` flips exactly one seeded
+/// payload byte after encoding — the length prefix is never corrupted,
+/// so the peer reads a well-framed payload that fails to *decode*
+/// (typed `Codec`/`UnknownTag`), which is the interesting failure.
+pub fn write_frame_with(
+    w: &mut impl Write,
+    msg: &Message,
+    faults: Option<&FaultPlane>,
+) -> Result<(), TransportError> {
+    if let Some(plane) = faults {
+        if plane.should_fail(FaultSite::FrameWrite) {
+            return Err(TransportError::Io("injected frame_write fault".into()));
+        }
+    }
+    let mut payload = msg.to_bytes();
+    if let Some(plane) = faults {
+        if plane.should_fail(FaultSite::FrameCorrupt) {
+            plane.corrupt_byte(&mut payload);
+        }
+    }
     if payload.len() > MAX_FRAME_BYTES {
         return Err(TransportError::Oversize {
             len: payload.len(),
@@ -314,6 +341,22 @@ pub fn write_frame(w: &mut impl Write, msg: &Message) -> Result<(), TransportErr
 ///
 /// [`Io`]: TransportError::Io
 pub fn read_frame(r: &mut impl Read) -> Result<Message, TransportError> {
+    read_frame_with(r, None)
+}
+
+/// [`read_frame`] with an optional fault plane. The `frame_read` site
+/// fires before the length prefix is consumed — it models a connection
+/// reset between frames, so the stream is *not* desynchronized and the
+/// caller can treat it exactly like a socket error.
+pub fn read_frame_with(
+    r: &mut impl Read,
+    faults: Option<&FaultPlane>,
+) -> Result<Message, TransportError> {
+    if let Some(plane) = faults {
+        if plane.should_fail(FaultSite::FrameRead) {
+            return Err(TransportError::Io("injected frame_read fault".into()));
+        }
+    }
     let mut len_buf = [0u8; 4];
     let mut filled = 0usize;
     while filled < 4 {
@@ -676,4 +719,119 @@ mod tests {
         assert!(err.contains("test.nope") && err.contains("test.echo"), "{err}");
     }
 
+    use super::super::faults::FaultPlan;
+
+    fn plane(spec: &str) -> FaultPlane {
+        FaultPlane::new(FaultPlan::parse(spec).unwrap())
+    }
+
+    #[test]
+    fn injected_frame_write_fails_before_any_bytes_hit_the_stream() {
+        let plane = plane("seed=3; frame_write:nth=1");
+        let mut wire = Vec::new();
+        let err = write_frame_with(&mut wire, &Message::Shutdown, Some(&plane)).unwrap_err();
+        assert!(matches!(&err, TransportError::Io(e) if e.contains("injected")), "{err:?}");
+        assert!(wire.is_empty(), "a failed write must not leave partial bytes");
+        // nth=1 fired once; the retry goes through and frames normally.
+        write_frame_with(&mut wire, &Message::Shutdown, Some(&plane)).unwrap();
+        assert_eq!(read_frame(&mut wire.as_slice()).unwrap(), Message::Shutdown);
+    }
+
+    #[test]
+    fn injected_frame_read_is_a_typed_io_error_and_stream_stays_aligned() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Message::Shutdown).unwrap();
+        write_frame(
+            &mut wire,
+            &Message::Heartbeat {
+                worker: "w0".into(),
+                seq: 1,
+            },
+        )
+        .unwrap();
+        let plane = plane("seed=3; frame_read:nth=1");
+        let mut cursor = wire.as_slice();
+        let err = read_frame_with(&mut cursor, Some(&plane)).unwrap_err();
+        assert!(matches!(&err, TransportError::Io(e) if e.contains("injected")), "{err:?}");
+        // The fault fired before consuming the prefix: both frames are
+        // still intact on the stream.
+        assert_eq!(read_frame_with(&mut cursor, Some(&plane)).unwrap(), Message::Shutdown);
+        assert!(matches!(
+            read_frame_with(&mut cursor, Some(&plane)).unwrap(),
+            Message::Heartbeat { .. }
+        ));
+    }
+
+    #[test]
+    fn corrupted_frame_decodes_as_typed_error_and_next_frame_survives() {
+        let plane = plane("seed=7; frame_corrupt:nth=1");
+        let mut wire = Vec::new();
+        // Shutdown's payload is a single tag byte, so the one flipped
+        // byte *must* hit the tag: the corruption is guaranteed to
+        // surface at decode, whatever index the seed picks.
+        write_frame_with(&mut wire, &Message::Shutdown, Some(&plane)).unwrap();
+        // Second frame written after nth=1 fired: clean.
+        write_frame_with(
+            &mut wire,
+            &Message::Heartbeat {
+                worker: "w0".into(),
+                seq: 5,
+            },
+            Some(&plane),
+        )
+        .unwrap();
+        let mut cursor = wire.as_slice();
+        // The corrupted payload is well-framed (length prefix intact) so
+        // it decodes as a typed error, never a panic or a
+        // desynchronized stream...
+        let err = read_frame(&mut cursor).unwrap_err();
+        assert_eq!(err, TransportError::UnknownTag(TAG_SHUTDOWN ^ 0xA5));
+        // ...and the following frame reads back exactly.
+        assert_eq!(
+            read_frame(&mut cursor).unwrap(),
+            Message::Heartbeat {
+                worker: "w0".into(),
+                seq: 5,
+            }
+        );
+        assert_eq!(plane.injected(FaultSite::FrameCorrupt), 1);
+    }
+
+    #[test]
+    fn corruption_replays_identically_for_a_seed() {
+        let bytes_for = |seed: u64| {
+            let plane = plane(&format!("seed={seed}; frame_corrupt:always"));
+            let mut wire = Vec::new();
+            write_frame_with(
+                &mut wire,
+                &Message::Request {
+                    body: vec![0x11; 64],
+                },
+                Some(&plane),
+            )
+            .unwrap();
+            wire
+        };
+        let clean = {
+            let mut wire = Vec::new();
+            write_frame(
+                &mut wire,
+                &Message::Request {
+                    body: vec![0x11; 64],
+                },
+            )
+            .unwrap();
+            wire
+        };
+        assert_eq!(bytes_for(42), bytes_for(42), "same seed, same corruption");
+        assert_ne!(bytes_for(42), clean, "exactly one byte differs from clean");
+        assert_eq!(
+            bytes_for(42)
+                .iter()
+                .zip(clean.iter())
+                .filter(|(a, b)| a != b)
+                .count(),
+            1
+        );
+    }
 }

@@ -1,0 +1,454 @@
+//! "Crash anywhere, answer identical": the fault plane's payoff suite.
+//!
+//! Over 100+ seeded fault schedules spanning every injection site —
+//! spill write/read in the block store, frame write/read/corrupt on the
+//! worker transport, task panics in the scheduler, worker kill and
+//! heartbeat stall in the remote executor — a mine must either return a
+//! result identical to the sequential oracle or fail with a typed
+//! [`FimError`]. Never a wrong answer, never a hang, never a leaked
+//! shuffle byte or orphaned spill file.
+//!
+//! Schedules are composed from the plan grammar per seed, so a failing
+//! seed prints its exact `--fault-plan` spec and replays bit-for-bit
+//! from the CLI.
+
+use std::sync::Arc;
+
+use rdd_eclat::fim::engine::{FimError, MiningSession, TidsetRepr};
+use rdd_eclat::fim::sequential::eclat_sequential;
+use rdd_eclat::fim::types::Transaction;
+use rdd_eclat::sparklet::events::{CollectingListener, SparkletEvent};
+use rdd_eclat::sparklet::{FaultSite, SparkletConf, SparkletContext, THREAD_WORKERS};
+use rdd_eclat::util::prop::gen;
+use rdd_eclat::util::rng::SplitMix64;
+
+const ENGINES: [&str; 8] = [
+    "eclat-v1", "eclat-v2", "eclat-v3", "eclat-v4", "eclat-v5", "eclat-v6", "apriori", "fpgrowth",
+];
+const REPRS: [TidsetRepr; 5] = [
+    TidsetRepr::Vec,
+    TidsetRepr::Bitmap,
+    TidsetRepr::Diffset,
+    TidsetRepr::Hybrid,
+    TidsetRepr::Auto,
+];
+
+/// A seed-deterministic transaction database.
+fn db_for(seed: u64) -> Vec<Transaction> {
+    let mut rng = SplitMix64::new(seed ^ 0xC0FF_EE00_D15E_A5ED);
+    gen::database(24, 8, 0.4)(&mut rng)
+}
+
+/// The per-run outcome dichotomy: identical to the oracle, or a typed
+/// execution error. Anything else — a divergent answer, a non-execution
+/// error from a fault schedule — fails the property.
+fn assert_oracle_or_typed(
+    seed: u64,
+    spec: &str,
+    engine: &str,
+    got: Result<rdd_eclat::fim::engine::MiningReport, FimError>,
+    oracle: &rdd_eclat::fim::types::MiningResult,
+) -> bool {
+    match got {
+        Ok(report) => {
+            assert!(
+                report.result.same_as(oracle),
+                "seed {seed} ({engine}, plan {spec:?}): survived the fault schedule \
+                 with a WRONG answer ({} itemsets, oracle has {})",
+                report.result.len(),
+                oracle.len()
+            );
+            true
+        }
+        Err(FimError::Execution { reason }) => {
+            assert!(
+                !reason.is_empty(),
+                "seed {seed}: typed failure with an empty reason"
+            );
+            false
+        }
+        Err(other) => panic!("seed {seed} (plan {spec:?}): non-execution error: {other}"),
+    }
+}
+
+/// No leaked shuffle state after teardown: a faulted run may abandon
+/// blocks mid-stage, but `reset_state` must reclaim every byte and
+/// delete every spill file.
+fn assert_no_leaks(seed: u64, sc: &SparkletContext) {
+    sc.reset_state();
+    assert_eq!(
+        sc.shuffle_manager().used_bytes(),
+        0,
+        "seed {seed}: leaked shuffle bytes after reset"
+    );
+    assert_eq!(
+        sc.shuffle_manager().spill_file_count(),
+        0,
+        "seed {seed}: orphaned spill files after reset"
+    );
+}
+
+/// Compose a 1–3 clause schedule from the local-path site menu. The
+/// menu mixes triggers that recover under retry (nth, low p) with ones
+/// that exhaust it (always), so the sweep exercises both arms of the
+/// dichotomy.
+fn local_spec(seed: u64) -> String {
+    const MENU: [&str; 12] = [
+        "spill_write:always",
+        "spill_write:nth=1",
+        "spill_write:p=0.5",
+        "spill_read:nth=1",
+        "spill_read:every=3",
+        "spill_read:p=0.2",
+        "spill_read:always",
+        "task_panic:nth=1",
+        "task_panic:nth=2",
+        "task_panic:every=4",
+        "task_panic:p=0.15",
+        "task_panic:always",
+    ];
+    let mut rng = SplitMix64::new(seed);
+    let n = 1 + rng.gen_range(3);
+    let mut clauses = vec![format!("seed={seed}")];
+    for _ in 0..n {
+        clauses.push(MENU[rng.gen_range(MENU.len())].to_string());
+    }
+    clauses.join("; ")
+}
+
+#[test]
+fn prop_crash_anywhere_local_100_seeded_schedules() {
+    let mut oks = 0usize;
+    let mut typed_failures = 0usize;
+    let mut fired_spill = 0u64;
+    let mut fired_panic = 0u64;
+    for seed in 0..100u64 {
+        let db = db_for(seed);
+        let oracle = eclat_sequential(&db, 2);
+        let spec = local_spec(seed);
+        // A 512-byte budget forces constant spill traffic, so the
+        // spill_write/spill_read sites actually arm.
+        let mut conf = SparkletConf::new(&format!("crash-local-{seed}"))
+            .with_cores(2)
+            .unwrap()
+            .with_memory_budget_bytes(512)
+            .unwrap()
+            .with_fault_plan(&spec)
+            .unwrap();
+        conf.retry_backoff_ms = 0; // keep the 100-run sweep fast
+        let sc = SparkletContext::new(conf);
+        let engine = ENGINES[(seed as usize) % ENGINES.len()];
+        let repr = REPRS[(seed as usize) % REPRS.len()];
+        let got = MiningSession::new(engine)
+            .min_sup(2)
+            .tidset(repr)
+            .p(3)
+            .run_vec(&sc, &db);
+        if assert_oracle_or_typed(seed, &spec, engine, got, &oracle) {
+            oks += 1;
+        } else {
+            typed_failures += 1;
+        }
+        fired_spill += sc.faults().injected(FaultSite::SpillWrite)
+            + sc.faults().injected(FaultSite::SpillRead);
+        fired_panic += sc.faults().injected(FaultSite::TaskPanic);
+        assert_no_leaks(seed, &sc);
+    }
+    // The sweep proves nothing unless both outcomes and the targeted
+    // sites actually occurred.
+    assert!(oks > 0, "no schedule ever recovered to the oracle answer");
+    assert!(
+        typed_failures > 0,
+        "no schedule ever exhausted retries into a typed failure"
+    );
+    assert!(fired_panic > 0, "task_panic never fired across 100 schedules");
+    assert!(
+        fired_spill > 0,
+        "spill faults never fired across 100 schedules — is the budget arming spills?"
+    );
+}
+
+/// Thread-mode multi-process conf (workers are in-process threads over
+/// a real unix socket), with a fault plan attached.
+fn mp_conf(app: &str, spec: &str) -> SparkletConf {
+    rdd_eclat::sparklet::remote::register_backend();
+    rdd_eclat::fim::distributed::register_tasks();
+    let mut conf = SparkletConf::new(app)
+        .with_workers(2)
+        .unwrap()
+        .with_worker_binary(THREAD_WORKERS)
+        .with_worker_timeouts(50, 2_000)
+        .with_executor_backend("multi-process")
+        .unwrap()
+        .with_fault_plan(spec)
+        .unwrap();
+    conf.retry_backoff_ms = 0;
+    conf
+}
+
+#[test]
+fn prop_crash_anywhere_multiprocess_transport_and_worker_faults() {
+    // Deterministic schedules over the remote-path sites. frame_read
+    // sticks to nth triggers: a probabilistic clause could fail BOTH
+    // workers' registration reads, and a worker that never registers is
+    // not counted dead (there is nothing to recover), which would park
+    // the job forever — a hang, which this suite exists to forbid.
+    let schedules: [&str; 13] = [
+        "seed=0; worker_kill=w0:1",
+        "seed=1; worker_kill=w1:2",
+        "seed=2; frame_write:nth=2",
+        "seed=3; frame_write:every=3",
+        "seed=4; frame_read:nth=2",
+        "seed=5; frame_read:nth=4",
+        "seed=6; frame_corrupt:nth=1",
+        "seed=7; frame_corrupt:every=2",
+        "seed=8; task_panic:nth=1",
+        "seed=9; task_panic:always",
+        "seed=10; worker_kill=w0:1; frame_write:nth=3",
+        "seed=11; worker_kill=w0:1; worker_kill=w1:1",
+        "seed=12; heartbeat_stall=w0:1", // lost via the watchdog, not EOF
+    ];
+    let db = db_for(7);
+    let oracle = eclat_sequential(&db, 2);
+    let mut oks = 0usize;
+    let mut typed_failures = 0usize;
+    let mut fired_frames = 0u64;
+    for (i, spec) in schedules.iter().enumerate() {
+        let seed = i as u64;
+        let sc = SparkletContext::new(mp_conf(&format!("crash-mp-{seed}"), spec));
+        assert_eq!(sc.executor().name(), "multi-process");
+        let got = MiningSession::new("eclat-v3")
+            .min_sup(2)
+            .p(3)
+            .run_vec(&sc, &db);
+        if assert_oracle_or_typed(seed, spec, "eclat-v3", got, &oracle) {
+            oks += 1;
+        } else {
+            typed_failures += 1;
+        }
+        // Driver-side frame counters only: worker threads arm their own
+        // plane instances parsed from the shipped plan string.
+        fired_frames += sc.faults().injected(FaultSite::FrameWrite)
+            + sc.faults().injected(FaultSite::FrameRead)
+            + sc.faults().injected(FaultSite::FrameCorrupt);
+        assert_no_leaks(seed, &sc);
+        drop(sc); // join worker threads before the next schedule
+    }
+    assert!(oks > 0, "no multi-process schedule recovered to the oracle");
+    assert!(
+        typed_failures > 0,
+        "no multi-process schedule failed typed (worker_kill=w0+w1 at least must)"
+    );
+    assert!(
+        fired_frames > 0,
+        "no driver-side frame fault ever fired across the schedules"
+    );
+}
+
+#[test]
+fn plan_grammar_worker_kill_is_as_deterministic_as_the_legacy_knob() {
+    // The legacy `with_worker_fault("w0:1")` contract, re-expressed
+    // through the plan grammar: w0 dies exactly once, the in-flight
+    // task re-runs from lineage on the survivor, and the answer is
+    // byte-identical to the oracle.
+    let db = db_for(42);
+    let oracle = eclat_sequential(&db, 2);
+    let sc = SparkletContext::new(mp_conf("crash-kill-det", "worker_kill=w0:1"));
+    let sink = CollectingListener::new();
+    sc.events().register(Arc::new(sink.clone()));
+
+    let got = MiningSession::new("eclat-v3")
+        .min_sup(2)
+        .p(3)
+        .run_vec(&sc, &db)
+        .expect("a single worker kill must recover via lineage");
+    assert!(got.result.same_as(&oracle), "post-kill result diverged");
+
+    let lost: Vec<String> = sink
+        .snapshot()
+        .into_iter()
+        .filter_map(|(_, ev)| match ev {
+            SparkletEvent::WorkerLost { worker, .. } => Some(worker),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(lost, vec!["w0".to_string()], "w0 should die exactly once");
+    assert!(
+        sc.metrics().total_retries() > 0,
+        "the killed worker's task should have retried"
+    );
+}
+
+#[test]
+fn spill_write_failure_degrades_but_answers_identically() {
+    // A disk that refuses every spill write leaves blocks resident
+    // (budget overrun, not data loss): the mine must still equal the
+    // oracle, and the site counter must prove the fault actually fired.
+    let db = db_for(3);
+    let oracle = eclat_sequential(&db, 2);
+    let conf = SparkletConf::new("crash-spill-write")
+        .with_cores(2)
+        .unwrap()
+        .with_memory_budget_bytes(512)
+        .unwrap()
+        .with_fault_plan("spill_write:always")
+        .unwrap();
+    let sc = SparkletContext::new(conf);
+    let got = MiningSession::new("eclat-v2")
+        .min_sup(2)
+        .p(3)
+        .run_vec(&sc, &db)
+        .expect("failed spills degrade memory accounting, never the answer");
+    assert!(got.result.same_as(&oracle));
+    assert!(
+        sc.faults().injected(FaultSite::SpillWrite) > 0,
+        "the tiny budget never attempted a spill — the test proved nothing"
+    );
+    assert_no_leaks(3, &sc);
+}
+
+#[test]
+fn spill_read_failure_recovers_once_and_exhausts_when_persistent() {
+    let db = db_for(4);
+    let oracle = eclat_sequential(&db, 2);
+    // One failed reload: the spill file is intact (injection happens
+    // before I/O), so the task retry re-fetches and recovers.
+    let mut conf = SparkletConf::new("crash-spill-read-once")
+        .with_cores(2)
+        .unwrap()
+        .with_memory_budget_bytes(512)
+        .unwrap()
+        .with_fault_plan("spill_read:nth=1")
+        .unwrap();
+    conf.retry_backoff_ms = 0;
+    let sc = SparkletContext::new(conf);
+    let got = MiningSession::new("eclat-v3")
+        .min_sup(2)
+        .p(3)
+        .run_vec(&sc, &db)
+        .expect("a single spill-read fault must recover under retry");
+    assert!(got.result.same_as(&oracle));
+    if sc.faults().injected(FaultSite::SpillRead) > 0 {
+        assert!(sc.metrics().total_retries() > 0, "recovery implies a retry");
+    }
+    assert_no_leaks(4, &sc);
+
+    // An unreadable disk forever: retries exhaust into a typed error
+    // whose display names the policy, not a panic or a wrong answer.
+    let mut conf = SparkletConf::new("crash-spill-read-always")
+        .with_cores(2)
+        .unwrap()
+        .with_memory_budget_bytes(512)
+        .unwrap()
+        .with_fault_plan("spill_read:always")
+        .unwrap();
+    conf.retry_backoff_ms = 0;
+    let sc = SparkletContext::new(conf);
+    let got = MiningSession::new("eclat-v3")
+        .min_sup(2)
+        .p(3)
+        .run_vec(&sc, &db);
+    match got {
+        Err(FimError::Execution { reason }) => {
+            assert!(
+                sc.faults().injected(FaultSite::SpillRead) > 0,
+                "typed failure without any injected fault"
+            );
+            assert!(
+                reason.contains("retries exhausted"),
+                "want the unified retry policy's display, got: {reason}"
+            );
+        }
+        Ok(report) => {
+            // Nothing spilled on this run's layout — legal only if the
+            // site never armed AND the answer is exact.
+            assert_eq!(sc.faults().injected(FaultSite::SpillRead), 0);
+            assert!(report.result.same_as(&oracle));
+        }
+        Err(other) => panic!("non-execution error: {other}"),
+    }
+    assert_no_leaks(4, &sc);
+}
+
+#[test]
+fn task_panic_exhaustion_and_job_deadline_are_typed() {
+    let db = db_for(5);
+    // Every attempt panics: the retry policy exhausts and the session
+    // boundary re-types the panic into FimError::Execution.
+    let mut conf = SparkletConf::new("crash-panic-always")
+        .with_cores(2)
+        .unwrap()
+        .with_fault_plan("task_panic:always")
+        .unwrap();
+    conf.retry_backoff_ms = 0;
+    let sc = SparkletContext::new(conf);
+    let err = MiningSession::new("eclat-v1")
+        .min_sup(2)
+        .p(3)
+        .run_vec(&sc, &db)
+        .expect_err("a task that always panics cannot produce a result");
+    let msg = err.to_string();
+    assert!(msg.contains("mining failed"), "{msg}");
+    assert!(msg.contains("retries exhausted"), "{msg}");
+    assert!(sc.faults().injected(FaultSite::TaskPanic) > 0);
+    assert_no_leaks(5, &sc);
+
+    // Same schedule under a 1 ms job deadline with real backoff: the
+    // deadline check between attempts fires before exhaustion can.
+    let conf = SparkletConf::new("crash-deadline")
+        .with_cores(2)
+        .unwrap()
+        .with_fault_plan("task_panic:always")
+        .unwrap()
+        .with_job_deadline_ms(1)
+        .unwrap();
+    let sc = SparkletContext::new(conf); // default 10 ms backoff
+    let err = MiningSession::new("eclat-v1")
+        .min_sup(2)
+        .p(3)
+        .run_vec(&sc, &db)
+        .expect_err("a 1 ms budget cannot absorb panicking attempts");
+    let msg = err.to_string();
+    assert!(
+        msg.contains("deadline exceeded") || msg.contains("retries exhausted"),
+        "want a typed policy error, got: {msg}"
+    );
+    assert_no_leaks(5, &sc);
+}
+
+#[test]
+fn fault_schedules_replay_identically_for_the_same_seed() {
+    // The whole point of seeding: one seed, one schedule, one outcome —
+    // run twice, the injection counters and the answer both repeat.
+    let db = db_for(6);
+    let run = |app: &str| {
+        let mut conf = SparkletConf::new(app)
+            .with_cores(2)
+            .unwrap()
+            .with_memory_budget_bytes(512)
+            .unwrap()
+            .with_fault_plan("seed=9; spill_read:p=0.3; task_panic:p=0.1")
+            .unwrap();
+        conf.retry_backoff_ms = 0;
+        let sc = SparkletContext::new(conf);
+        let got = MiningSession::new("eclat-v4")
+            .min_sup(2)
+            .p(3)
+            .run_vec(&sc, &db)
+            .map(|r| r.result)
+            .map_err(|e| e.to_string());
+        let counters: Vec<u64> = FaultSite::ALL
+            .iter()
+            .map(|&s| sc.faults().injected(s))
+            .collect();
+        (got, counters)
+    };
+    let (a, ca) = run("crash-replay-a");
+    let (b, cb) = run("crash-replay-b");
+    match (&a, &b) {
+        (Ok(ra), Ok(rb)) => assert!(ra.same_as(rb), "same seed, different answers"),
+        (Err(ea), Err(eb)) => assert_eq!(ea, eb, "same seed, different typed errors"),
+        _ => panic!("same seed, different outcome kinds: {a:?} vs {b:?}"),
+    }
+    assert_eq!(ca, cb, "same seed, different injection schedules");
+}

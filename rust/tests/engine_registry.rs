@@ -9,8 +9,8 @@
 use std::sync::Arc;
 
 use rdd_eclat::fim::engine::{
-    EngineRegistry, FimEngine, MiningConfig, MiningSession, PartitionStrategy, PostStage,
-    TidsetRepr,
+    EngineRegistry, FimEngine, FimError, MiningConfig, MiningSession, PartitionStrategy,
+    PostStage, TidsetRepr,
 };
 use rdd_eclat::fim::sequential::eclat_sequential;
 use rdd_eclat::fim::types::{MiningResult, Transaction};
@@ -149,8 +149,8 @@ fn newly_registered_engine_joins_the_agreement_sweep() {
             _sc: &SparkletContext,
             txns: &Rdd<Transaction>,
             cfg: &MiningConfig,
-        ) -> MiningResult {
-            eclat_sequential(&txns.collect(), cfg.min_sup)
+        ) -> Result<MiningResult, FimError> {
+            Ok(eclat_sequential(&txns.collect(), cfg.min_sup))
         }
     }
     EngineRegistry::register(Arc::new(OracleBackend));

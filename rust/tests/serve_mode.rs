@@ -7,12 +7,16 @@
 //! `Server::handle` — the wire framing has its own tests in
 //! `serve::protocol` and `serve::server`.
 
+use std::net::Shutdown;
+use std::os::unix::net::UnixStream;
 use std::sync::Arc;
+use std::time::Duration;
 
 use rdd_eclat::fim::sequential::eclat_sequential;
 use rdd_eclat::fim::types::{abs_min_sup, MiningResult, Transaction};
 use rdd_eclat::serve::{DatasetResolver, ServeError, ServeRequest, ServeResponse, ServeResult, Server};
-use rdd_eclat::sparklet::{SparkletConf, SparkletContext};
+use rdd_eclat::sparklet::transport::{read_frame, write_frame};
+use rdd_eclat::sparklet::{FaultSite, SparkletConf, SparkletContext};
 
 /// Deterministic pseudo-random database derived purely from `name`, so
 /// the test-side oracle and the server-side resolver agree exactly.
@@ -173,6 +177,143 @@ fn many_requests_leave_no_shuffle_artifacts() {
         );
     }
     assert!(server.cache_len() > 0, "the sweep populated the cache");
+}
+
+// ------------------------------------------------- client disconnects
+
+/// Spawn `server.run` on a fresh unix socket and wait until it accepts.
+fn serve_on_socket(server: &Arc<Server>, name: &str) -> (String, std::thread::JoinHandle<()>) {
+    let sock = std::env::temp_dir()
+        .join(format!("sparklet-serve-{name}-{}.sock", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let srv = Arc::clone(server);
+    let path = sock.clone();
+    let handle = std::thread::spawn(move || {
+        srv.run(&path).expect("serve loop failed");
+    });
+    for _ in 0..200 {
+        if UnixStream::connect(&sock).is_ok() {
+            return (sock, handle);
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("server never bound {sock}");
+}
+
+/// Ask the server to shut down and join its accept loop.
+fn shutdown_server(sock: &str, handle: std::thread::JoinHandle<()>) {
+    let mut bye = req("small", 0.5, "vec");
+    bye.shutdown = true;
+    let mut s = UnixStream::connect(sock).expect("connect for shutdown");
+    write_frame(&mut s, &bye.to_message()).expect("send shutdown");
+    let _ = read_frame(&mut s); // ShuttingDown (or the stream closing)
+    handle.join().expect("serve thread panicked");
+    let _ = std::fs::remove_file(sock);
+}
+
+fn roundtrip(sock: &str, request: &ServeRequest) -> ServeResponse {
+    let mut s = UnixStream::connect(sock).expect("connect");
+    write_frame(&mut s, &request.to_message()).expect("send request");
+    let msg = read_frame(&mut s).expect("read response");
+    ServeResponse::from_message(&msg).expect("decode response")
+}
+
+/// A client that vanishes while its request is QUEUED behind a slow
+/// mine (or mid-mine — the race is the point): the server's response
+/// write fails, which must release the admission slot, wedge no other
+/// waiter, and leak nothing.
+#[test]
+fn queued_client_disconnect_releases_slot_and_leaks_nothing() {
+    let server = Arc::new(Server::new(SparkletContext::local(2), resolver()));
+    let baseline = server.context().shuffle_manager().spill_file_count();
+    let (sock, handle) = serve_on_socket(&server, "dc-queued");
+
+    // C1 starts a slow mine ("huge" is ~20k transactions) that holds
+    // the single admission slot for a while.
+    let mut c1 = UnixStream::connect(&sock).expect("c1 connect");
+    write_frame(&mut c1, &req("huge", 0.2, "vec").to_message()).expect("c1 send");
+    std::thread::sleep(Duration::from_millis(20));
+
+    // C2 sends a request that queues behind C1, then hangs up without
+    // reading its answer.
+    let mut c2 = UnixStream::connect(&sock).expect("c2 connect");
+    write_frame(&mut c2, &req("dropped", 0.05, "vec").to_message()).expect("c2 send");
+    c2.shutdown(Shutdown::Both).expect("c2 disconnect");
+    drop(c2);
+
+    // C3 must still be served exactly (the gate is not wedged by C2's
+    // abandoned ticket) and agree with the oracle.
+    let txns = dataset_for("alive");
+    let r = result(roundtrip(&sock, &req("alive", 0.1, "vec")));
+    let oracle = eclat_sequential(&txns, abs_min_sup(0.1, txns.len()));
+    assert!(
+        MiningResult::new(r.itemsets).same_as(&oracle),
+        "post-disconnect client served a wrong answer"
+    );
+
+    // C1's slow mine also completes normally.
+    let msg = read_frame(&mut c1).expect("c1 response");
+    let c1_result = result(ServeResponse::from_message(&msg).expect("c1 decode"));
+    let huge = dataset_for("huge");
+    let oracle = eclat_sequential(&huge, c1_result.min_sup_abs);
+    assert!(MiningResult::new(c1_result.itemsets).same_as(&oracle));
+    drop(c1);
+
+    shutdown_server(&sock, handle);
+    // Hygiene: the block store holds only the result cache's charges,
+    // and the spill directory is back at its baseline.
+    let sm = server.context().shuffle_manager();
+    assert_eq!(sm.used_bytes(), server.cache_bytes(), "leaked shuffle bytes");
+    assert_eq!(sm.spill_file_count(), baseline, "orphaned spill files");
+}
+
+/// The injected variant: `serve_disconnect:nth=1` severs the connection
+/// AFTER the request is fully handled (admitted, mined, ticket
+/// released) but before the response bytes are written — the client
+/// sees a dead socket, the server keeps serving, and the completed work
+/// is already cached.
+#[test]
+fn admitted_client_disconnect_is_injected_and_recovered() {
+    let conf = SparkletConf::new("serve-dc-inject")
+        .with_cores(2)
+        .unwrap()
+        .with_fault_plan("serve_disconnect:nth=1")
+        .unwrap();
+    let server = Arc::new(Server::new(SparkletContext::new(conf), resolver()));
+    let baseline = server.context().shuffle_manager().spill_file_count();
+    let (sock, handle) = serve_on_socket(&server, "dc-admitted");
+
+    // C1's request is handled, then the plane drops the connection
+    // instead of writing the response.
+    let mut c1 = UnixStream::connect(&sock).expect("c1 connect");
+    write_frame(&mut c1, &req("inject", 0.05, "vec").to_message()).expect("c1 send");
+    assert!(
+        read_frame(&mut c1).is_err(),
+        "the injected disconnect should close the stream before any response"
+    );
+    assert_eq!(
+        server.context().faults().injected(FaultSite::ServeDisconnect),
+        1,
+        "the schedule must actually have fired"
+    );
+
+    // The request WAS admitted and completed: the same query from a
+    // live client is answered from cache, exactly, with no re-mine.
+    let r = result(roundtrip(&sock, &req("inject", 0.05, "vec")));
+    assert_eq!(r.cache_hit, "exact", "the dropped client's mine was lost");
+    let txns = dataset_for("inject");
+    let oracle = eclat_sequential(&txns, abs_min_sup(0.05, txns.len()));
+    assert!(MiningResult::new(r.itemsets).same_as(&oracle));
+
+    // nth=1 is spent: later requests are served over intact streams.
+    let r = result(roundtrip(&sock, &req("inject", 0.1, "vec")));
+    assert_eq!(r.cache_hit, "subsumed");
+
+    shutdown_server(&sock, handle);
+    let sm = server.context().shuffle_manager();
+    assert_eq!(sm.used_bytes(), server.cache_bytes(), "leaked shuffle bytes");
+    assert_eq!(sm.spill_file_count(), baseline, "orphaned spill files");
 }
 
 /// A mine whose estimated working set exceeds the memory budget is
