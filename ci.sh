@@ -36,6 +36,7 @@ counters = [
     "kernel_early_aborts",
     "kernel_repr_switches",
     "kernel_bytes_allocated",
+    "kernel_nanos",
     "shuffle_bytes",
     "spilled_blocks",
     "spill_reloads",
@@ -56,6 +57,14 @@ for r in rows:
         assert k in r, (k, r)
         assert isinstance(r[k], (int, float)) and r[k] >= 0, (k, r[k])
     assert r["task_p50_ms"] <= r["task_p95_ms"] <= r["task_p99_ms"], r
+    # kernel throughput: every row carries intersections_per_sec, and it
+    # must be non-zero wherever the engine actually intersected tidsets
+    # (apriori/fp-growth never do — their rows are legitimately 0.0)
+    assert "intersections_per_sec" in r, r
+    ips = r["intersections_per_sec"]
+    assert isinstance(ips, (int, float)) and ips >= 0, (ips, r)
+    if r["kernel_intersections"] > 0:
+        assert ips > 0, ("intersecting row reports zero throughput", r)
 # the tidset sweep must cover the full representation axis
 tidsets = {r["tidset"] for r in rows}
 assert {"vec", "bitmap", "diffset", "hybrid"} <= tidsets, tidsets
@@ -322,12 +331,38 @@ EOF
 # offline replay tallies the request spans in the footer
 cargo run --release --quiet -- timeline --log EVENTS_serve.jsonl | grep "serving:"
 
-echo "== micro-bench smoke (diffset kernel)"
-# One-rep pass over the intersection + Bottom-Up micro-benches so
-# diffset-kernel regressions surface as wall-time deltas in the
-# uploaded bench-results artifact.
-REPRO_BENCH_REPS=1 REPRO_BENCH_WARMUP=0 REPRO_MICRO_ONLY=intersect,bottom-up \
+echo "== micro-bench smoke (kernel scalar-vs-unrolled gate + diffset kernel)"
+# One-rep pass over the intersection + kernel + Bottom-Up micro-benches
+# so kernel regressions surface as wall-time deltas in the uploaded
+# bench-results artifact, then gate the unrolled bitmap AND+popcount
+# kernel at >= 1.3x its scalar reference loop.
+REPRO_BENCH_REPS=1 REPRO_BENCH_WARMUP=0 REPRO_MICRO_ONLY=intersect,kernel,bottom-up \
     cargo bench --bench micro
+python3 - <<'EOF'
+import csv, os
+# cargo runs bench binaries from the package dir, so the CSVs land under
+# rust/target/bench-results (plain target/ kept as a fallback).
+candidates = ("rust/target/bench-results/micro_kernel.csv",
+              "target/bench-results/micro_kernel.csv")
+path = next((p for p in candidates if os.path.exists(p)), None)
+assert path, f"micro_kernel.csv not written to any of {candidates}"
+rows = list(csv.DictReader(open(path)))
+assert rows, f"{path} is empty"
+med = {r["series"]: float(r["median_ms"]) for r in rows}
+for s in ("bitmap-into-min-scalar", "bitmap-into-min-unrolled",
+          "bitmap-count-scalar", "bitmap-count-unrolled",
+          "vec-merge-scalar", "vec-merge-branchless",
+          "diffset-subtract-scalar", "diffset-subtract-branchless",
+          "class-per-call", "class-batched"):
+    assert s in med, (s, sorted(med))
+ratio = med["bitmap-into-min-scalar"] / max(med["bitmap-into-min-unrolled"], 1e-9)
+assert ratio >= 1.3, (
+    f"unrolled bitmap AND+popcount is only {ratio:.2f}x the scalar loop "
+    f"(gate: >= 1.3x; medians {med['bitmap-into-min-scalar']:.3f} ms vs "
+    f"{med['bitmap-into-min-unrolled']:.3f} ms)")
+print(f"kernel micro gate OK: unrolled into-min {ratio:.2f}x scalar "
+      f"({len(rows)} series rows in {path})")
+EOF
 
 echo "== cargo clippy --all-targets -- -D warnings"
 if cargo clippy --version >/dev/null 2>&1; then

@@ -2,6 +2,8 @@
 //! to the §Perf optimization loop (EXPERIMENTS.md).
 //!
 //!  * tidset intersection throughput (merge, gallop, bitmap)
+//!  * scalar vs unrolled kernel series (the u64×8 block loops) plus
+//!    batched vs per-call class intersection
 //!  * triangular-matrix update throughput
 //!  * trie candidate counting
 //!  * Sparklet shuffle (reduceByKey) record throughput
@@ -13,17 +15,20 @@ use rdd_eclat::fim::trie::ItemTrie;
 use rdd_eclat::fim::trimatrix::TriMatrix;
 use rdd_eclat::sparklet::{PairRdd, SparkletContext};
 use rdd_eclat::util::bench::BenchSuite;
-use rdd_eclat::util::SplitMix64;
+use rdd_eclat::util::{Bitmap, SplitMix64};
 
 fn main() {
-    // REPRO_MICRO_ONLY=intersect,bottom-up runs a subset — the CI bench
-    // smoke uses it so diffset-kernel regressions surface as wall-time
+    // REPRO_MICRO_ONLY=intersect,kernel,bottom-up runs a subset — the CI
+    // bench smoke uses it so kernel regressions surface as wall-time
     // deltas in the uploaded bench-results artifact without paying for
     // the full suite.
     let only = std::env::var("REPRO_MICRO_ONLY").unwrap_or_default();
     let run = |name: &str| only.is_empty() || only.split(',').any(|s| s.trim() == name);
     if run("intersect") {
         intersection_bench();
+    }
+    if run("kernel") {
+        kernel_bench();
     }
     if run("trimatrix") {
         trimatrix_bench();
@@ -94,6 +99,176 @@ fn intersection_bench() {
     let mut scratch = DiffTidset::empty();
     suite.measure("diffset-into-min-dense", "case", 6.0, || {
         std::hint::black_box(dx.intersect_into_min(&dy, 1, &mut scratch));
+    });
+    suite.finish();
+}
+
+/// Scalar reference loops for the kernel series: the pre-unroll 3-way
+/// branch shapes, kept here so the CSV always carries a baseline to
+/// ratio the shipped kernels against.
+fn scalar_merge_intersect(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+    out.clear();
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+}
+
+fn scalar_merge_difference_count(a: &[u32], b: &[u32]) -> usize {
+    let (mut i, mut j, mut count) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => {
+                count += 1;
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    count + (a.len() - i)
+}
+
+fn kernel_bench() {
+    let mut suite = BenchSuite::new(
+        "micro_kernel",
+        "scalar vs unrolled/branchless tidset kernels (u64×8 word blocks)",
+    );
+    let mut rng = SplitMix64::new(7);
+
+    // --- bitmap AND+popcount: the CI-gated pair ------------------------
+    // Dense 50% bitmaps over 200k tids = 6250 words = ~390 unroll blocks;
+    // need=1 so the min-bound probe never aborts and both loops walk the
+    // full word arrays. Inner-repeat so medians are stable even under
+    // REPRO_BENCH_REPS=1 (the CI smoke setting).
+    let universe = 200_000;
+    let inner = 256;
+    let ba = Bitmap::from_sorted_tids(&random_tids(&mut rng, universe, 0.5), universe);
+    let bb = Bitmap::from_sorted_tids(&random_tids(&mut rng, universe, 0.5), universe);
+    let mut out = Bitmap::new(universe);
+    suite.measure("bitmap-into-min-scalar", "case", 0.0, || {
+        for _ in 0..inner {
+            std::hint::black_box(ba.and_into_min_scalar(&bb, 1, &mut out));
+        }
+    });
+    suite.measure("bitmap-into-min-unrolled", "case", 1.0, || {
+        for _ in 0..inner {
+            std::hint::black_box(ba.and_into_min(&bb, 1, &mut out));
+        }
+    });
+    suite.measure("bitmap-count-scalar", "case", 2.0, || {
+        for _ in 0..inner {
+            std::hint::black_box(ba.and_count_scalar(&bb));
+        }
+    });
+    suite.measure("bitmap-count-unrolled", "case", 3.0, || {
+        for _ in 0..inner {
+            std::hint::black_box(ba.and_count(&bb));
+        }
+    });
+    suite.measure("bitmap-count-min-scalar", "case", 4.0, || {
+        for _ in 0..inner {
+            std::hint::black_box(ba.and_count_min_scalar(&bb, 1));
+        }
+    });
+    suite.measure("bitmap-count-min-unrolled", "case", 5.0, || {
+        for _ in 0..inner {
+            std::hint::black_box(ba.and_count_min(&bb, 1));
+        }
+    });
+
+    // --- vec merge: 3-way-branch scalar vs branchless two-pointer ------
+    let a = random_tids(&mut rng, universe, 0.1);
+    let b = random_tids(&mut rng, universe, 0.1);
+    let mut vout: Vec<u32> = Vec::new();
+    let vec_inner = 32;
+    suite.measure("vec-merge-scalar", "case", 6.0, || {
+        for _ in 0..vec_inner {
+            scalar_merge_intersect(&a, &b, &mut vout);
+            std::hint::black_box(vout.len());
+        }
+    });
+    suite.measure("vec-merge-branchless", "case", 7.0, || {
+        for _ in 0..vec_inner {
+            VecTidset::intersect_sorted_into(&a, &b, &mut vout);
+            std::hint::black_box(vout.len());
+        }
+    });
+
+    // --- diffset subtraction: 3-way-branch scalar vs branchless --------
+    // d(PXY) = d(PY) \ d(PX) on ~20% holes of a dense base (the dEclat
+    // shape from intersection_bench).
+    let dense_universe = 50_000;
+    let base = random_tids(&mut rng, dense_universe, 0.8);
+    let keep = |rng: &mut SplitMix64, frac: f64| -> Vec<u32> {
+        base.iter().copied().filter(|_| rng.gen_bool(frac)).collect()
+    };
+    let (x, y) = (keep(&mut rng, 0.8), keep(&mut rng, 0.8));
+    let dp = DiffTidset::from_tids(&base, dense_universe);
+    let dx = dp.intersect(&DiffTidset::from_tids(&x, dense_universe));
+    let dy = dp.intersect(&DiffTidset::from_tids(&y, dense_universe));
+    let diffs_of = |d: &DiffTidset| -> Vec<u32> {
+        match d {
+            DiffTidset::Diff { diffs, .. } => diffs.clone(),
+            DiffTidset::Tids(t) => t.clone(),
+        }
+    };
+    let (dx_tids, dy_tids) = (diffs_of(&dx), diffs_of(&dy));
+    suite.measure("diffset-subtract-scalar", "case", 8.0, || {
+        for _ in 0..vec_inner {
+            std::hint::black_box(scalar_merge_difference_count(&dy_tids, &dx_tids));
+        }
+    });
+    suite.measure("diffset-subtract-branchless", "case", 9.0, || {
+        for _ in 0..vec_inner {
+            std::hint::black_box(dx.intersect_support(&dy));
+        }
+    });
+
+    // --- class intersection: per-call loop vs batched entry point ------
+    // Same 32-member bitmap class through both paths; the batched path
+    // amortizes the kernel clock to two reads per class.
+    let class_universe = 20_000;
+    let cbase = random_tids(&mut rng, class_universe, 0.4);
+    let prefix_ts = BitmapTidset::from_tids(&cbase, class_universe);
+    let members: Vec<(u32, BitmapTidset)> = (0..32u32)
+        .map(|i| {
+            let tids: Vec<u32> =
+                cbase.iter().copied().filter(|_| rng.gen_bool(0.8)).collect();
+            (i, BitmapTidset::from_tids(&tids, class_universe))
+        })
+        .collect();
+    let mut pool: Vec<BitmapTidset> = Vec::new();
+    let mut survivors: Vec<(u32, BitmapTidset)> = Vec::new();
+    suite.measure("class-per-call", "case", 10.0, || {
+        for (_, m) in &members {
+            let mut buf = pool.pop().unwrap_or_else(BitmapTidset::empty);
+            match prefix_ts.intersect_into_min(m, 1, &mut buf) {
+                Some(sup) => {
+                    std::hint::black_box(sup);
+                    survivors.push((0, buf));
+                }
+                None => pool.push(buf),
+            }
+        }
+        pool.extend(survivors.drain(..).map(|(_, ts)| ts));
+    });
+    suite.measure("class-batched", "case", 11.0, || {
+        prefix_ts.intersect_class_into(&members, 1, &mut pool, &mut survivors, |_, sup| {
+            std::hint::black_box(sup);
+        });
+        pool.extend(survivors.drain(..).map(|(_, ts)| ts));
     });
     suite.finish();
 }

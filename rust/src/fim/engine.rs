@@ -723,12 +723,19 @@ impl MiningReport {
         events::aggregate_skew(&self.stages)
     }
 
+    /// Intersection kernel throughput for this run (invocations per
+    /// second of in-kernel wall time; 0.0 for engines that never
+    /// intersect tidsets).
+    pub fn intersections_per_sec(&self) -> f64 {
+        self.kernel.intersections_per_sec()
+    }
+
     /// One-line human summary.
     pub fn summary(&self) -> String {
         let (_, p95, _) = self.task_percentiles();
         format!(
             "{}: {} itemsets (max length {}) in {:.1} ms — {} stages, \
-             shuffle {} records / {} bytes, kernel {} ∩ \
+             shuffle {} records / {} bytes, kernel {} ∩ @ {:.0} ∩/s \
              ({} early-aborts, {} repr switches), \
              p95 task {:.1} ms / skew {:.1}x",
             self.label,
@@ -739,6 +746,7 @@ impl MiningReport {
             self.shuffle_records(),
             self.shuffle_bytes(),
             self.kernel.intersections,
+            self.intersections_per_sec(),
             self.kernel.early_aborts,
             self.kernel.repr_switches,
             p95,
@@ -907,6 +915,7 @@ impl MiningSession {
             early_aborts: kernel_stats.early_aborts,
             repr_switches: kernel_stats.repr_switches,
             bytes_allocated: kernel_stats.bytes_allocated,
+            nanos: kernel_stats.nanos,
         });
         let all_stages = sc.metrics().stages();
         let stages = all_stages

@@ -88,22 +88,23 @@ fn bottom_up_rec<TS: TidOps>(
         prefix.push(item_i);
         let mut next_members = scratch.member_vecs.pop().unwrap_or_default();
         debug_assert!(next_members.is_empty());
-        for (item_j, ts_j) in &members[i + 1..] {
-            // §Perf O5+O6+O8: one fused walk applies the min_sup bound
-            // AND materializes the survivor — no count-then-rewalk, no
-            // allocation (the buffer comes from the pool).
-            let mut ts_ij = scratch.tidsets.pop().unwrap_or_else(TS::empty);
-            match ts_i.intersect_into_min(ts_j, min_sup, &mut ts_ij) {
-                Some(sup) => {
-                    let mut items = Vec::with_capacity(prefix.len() + 1);
-                    items.extend_from_slice(prefix);
-                    items.push(*item_j);
-                    out.push(FrequentItemset::new(items, sup));
-                    next_members.push((*item_j, ts_ij));
-                }
-                None => scratch.tidsets.push(ts_ij),
-            }
-        }
+        // §Perf O5+O6+O8 + batching: one fused walk per candidate
+        // applies the min_sup bound AND materializes the survivor into
+        // a pool-recycled buffer, and the whole class is intersected in
+        // one batched kernel call so per-call overhead (clock reads,
+        // counter atomics, operand borrows) amortizes across members.
+        ts_i.intersect_class_into(
+            &members[i + 1..],
+            min_sup,
+            &mut scratch.tidsets,
+            &mut next_members,
+            |item_j, sup| {
+                let mut items = Vec::with_capacity(prefix.len() + 1);
+                items.extend_from_slice(prefix);
+                items.push(item_j);
+                out.push(FrequentItemset::new(items, sup));
+            },
+        );
         if !next_members.is_empty() {
             // adaptive representations re-measure the fresh class here
             TS::adapt_class(ts_i, &mut next_members, depth);
@@ -140,26 +141,32 @@ pub fn build_classes<TS: TidOps>(
     for i in 0..n.saturating_sub(1) {
         let (item_i, ref ts_i) = vertical[i];
         let mut members: Vec<(Item, TS)> = Vec::new();
-        for (item_j, ts_j) in &vertical[i + 1..] {
-            if let Some(m) = tri_matrix {
-                // tri-matrix pre-filter: survivors are frequent by
-                // construction (the fused walk below never aborts).
-                if m.get_support(rank_of(item_i), rank_of(*item_j)) < min_sup {
-                    continue;
-                }
-            }
-            // §Perf O5+O6+O8: one fused walk — the bounded probe and the
-            // materialization used to be two passes over both sets for
-            // every survivor; now each pair is walked exactly once, and
-            // failing candidates recycle their buffer.
-            let mut ts_ij = spare.pop().unwrap_or_else(TS::empty);
-            match ts_i.intersect_into_min(ts_j, min_sup, &mut ts_ij) {
-                Some(sup) => {
-                    two_itemsets.push(FrequentItemset::new(vec![item_i, *item_j], sup));
-                    members.push((*item_j, ts_ij));
-                }
-                None => spare.push(ts_ij),
-            }
+        // §Perf O5+O6+O8 + batching: each surviving pair is walked
+        // exactly once by the fused bounded+materializing kernel, and
+        // the whole row is one batched class-intersection call. With a
+        // tri-matrix the pre-filter drops infrequent pairs *before* the
+        // batch (triMatrixMode = true; survivors are frequent by
+        // construction, so the fused walk never aborts).
+        let on_survivor = |item_j: Item, sup: u32| {
+            two_itemsets.push(FrequentItemset::new(vec![item_i, item_j], sup));
+        };
+        match tri_matrix {
+            Some(m) => ts_i.intersect_class_into(
+                vertical[i + 1..]
+                    .iter()
+                    .filter(|(item_j, _)| m.get_support(rank_of(item_i), rank_of(*item_j)) >= min_sup),
+                min_sup,
+                &mut spare,
+                &mut members,
+                on_survivor,
+            ),
+            None => ts_i.intersect_class_into(
+                &vertical[i + 1..],
+                min_sup,
+                &mut spare,
+                &mut members,
+                on_survivor,
+            ),
         }
         if !members.is_empty() {
             TS::adapt_class(ts_i, &mut members, 0);
@@ -197,19 +204,19 @@ pub fn decompose_to_prefix2<TS: TidOps>(
             let mut prefix = class.prefix.clone();
             prefix.push(item_i);
             let mut members: Vec<(Item, TS)> = Vec::new();
-            for (item_j, ts_j) in &class.members[i + 1..] {
-                // §Perf O5+O6+O8: fused bounded+materializing walk
-                let mut ts_ij = spare.pop().unwrap_or_else(TS::empty);
-                match ts_i.intersect_into_min(ts_j, min_sup, &mut ts_ij) {
-                    Some(sup) => {
-                        let mut items = prefix.clone();
-                        items.push(*item_j);
-                        three_itemsets.push(FrequentItemset::new(items, sup));
-                        members.push((*item_j, ts_ij));
-                    }
-                    None => spare.push(ts_ij),
-                }
-            }
+            // §Perf O5+O6+O8 + batching: fused bounded+materializing
+            // walks, one batched kernel call per sub-class row
+            ts_i.intersect_class_into(
+                &class.members[i + 1..],
+                min_sup,
+                &mut spare,
+                &mut members,
+                |item_j, sup| {
+                    let mut items = prefix.clone();
+                    items.push(item_j);
+                    three_itemsets.push(FrequentItemset::new(items, sup));
+                },
+            );
             if !members.is_empty() {
                 TS::adapt_class(ts_i, &mut members, 1);
                 out.push((

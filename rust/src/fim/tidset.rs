@@ -73,6 +73,11 @@ pub struct KernelStats {
     /// calls. The scratch-pool paths (`intersect_into_min`) add nothing
     /// here — that drop is the allocation-free recursion's signal.
     pub bytes_allocated: u64,
+    /// Wall nanoseconds spent inside the intersection kernels, recorded
+    /// once per class batch ([`TidOps::intersect_class_into`]) or
+    /// streaming kernel call — the denominator of
+    /// [`intersections_per_sec`](Self::intersections_per_sec).
+    pub nanos: u64,
 }
 
 impl KernelStats {
@@ -84,6 +89,18 @@ impl KernelStats {
             early_aborts: self.early_aborts.wrapping_sub(earlier.early_aborts),
             repr_switches: self.repr_switches.wrapping_sub(earlier.repr_switches),
             bytes_allocated: self.bytes_allocated.wrapping_sub(earlier.bytes_allocated),
+            nanos: self.nanos.wrapping_sub(earlier.nanos),
+        }
+    }
+
+    /// Intersection kernel throughput (invocations per second of
+    /// in-kernel wall time). `0.0` when no kernel time was recorded —
+    /// e.g. engines that never intersect tidsets (Apriori, FP-Growth).
+    pub fn intersections_per_sec(&self) -> f64 {
+        if self.nanos == 0 {
+            0.0
+        } else {
+            self.intersections as f64 * 1e9 / self.nanos as f64
         }
     }
 }
@@ -113,6 +130,7 @@ pub mod kernel {
     static EARLY_ABORTS: PaddedCounter = PaddedCounter(AtomicU64::new(0));
     static REPR_SWITCHES: PaddedCounter = PaddedCounter(AtomicU64::new(0));
     static BYTES_ALLOCATED: PaddedCounter = PaddedCounter(AtomicU64::new(0));
+    static NANOS: PaddedCounter = PaddedCounter(AtomicU64::new(0));
 
     /// Current counter values.
     pub fn snapshot() -> KernelStats {
@@ -121,12 +139,31 @@ pub mod kernel {
             early_aborts: EARLY_ABORTS.0.load(Relaxed),
             repr_switches: REPR_SWITCHES.0.load(Relaxed),
             bytes_allocated: BYTES_ALLOCATED.0.load(Relaxed),
+            nanos: NANOS.0.load(Relaxed),
         }
     }
 
     #[inline]
     pub(crate) fn intersection() {
         INTERSECTIONS.0.fetch_add(1, Relaxed);
+    }
+
+    /// Bulk-count `n` intersections in one atomic add — how the batched
+    /// class kernels stay counter-identical to the per-call paths
+    /// without an atomic op per member.
+    #[inline]
+    pub(crate) fn intersections_n(n: u64) {
+        if n > 0 {
+            INTERSECTIONS.0.fetch_add(n, Relaxed);
+        }
+    }
+
+    /// Record wall time spent inside a kernel batch.
+    #[inline]
+    pub(crate) fn nanos(ns: u64) {
+        // clamp to ≥1 so a sub-nanosecond-resolution clock on a tiny
+        // batch still leaves a nonzero throughput denominator
+        NANOS.0.fetch_add(ns.max(1), Relaxed);
     }
 
     #[inline]
@@ -190,6 +227,44 @@ pub trait TidOps: Clone + Send + Sync + 'static + SerDe {
         *out = self.intersect(other);
         Some(sup)
     }
+    /// Batched class intersection: one prefix tidset (`self`) against
+    /// every candidate member of an equivalence class in a single pass.
+    /// For each candidate, the fused bounded walk materializes the
+    /// survivor into a `pool`-recycled buffer; survivors are appended to
+    /// `survivors` (in candidate order) and reported via
+    /// `on_survivor(item, support)`, while failed candidates hand their
+    /// buffer straight back to the pool.
+    ///
+    /// Batching is what amortizes per-call overhead across the class:
+    /// the kernel-time clock is read twice per *class* instead of twice
+    /// per pair, and the specialized overrides ([`VecTidset`],
+    /// [`BitmapTidset`]) hoist operand borrows out of the loop and fold
+    /// the intersection counter into one bulk add — counter totals stay
+    /// identical to the per-call path by construction.
+    fn intersect_class_into<'a, I, F>(
+        &self,
+        candidates: I,
+        min_sup: u32,
+        pool: &mut Vec<Self>,
+        survivors: &mut Vec<(Item, Self)>,
+        mut on_survivor: F,
+    ) where
+        I: IntoIterator<Item = &'a (Item, Self)>,
+        F: FnMut(Item, u32),
+    {
+        let t0 = std::time::Instant::now();
+        for (item, other) in candidates {
+            let mut buf = pool.pop().unwrap_or_else(Self::empty);
+            match self.intersect_into_min(other, min_sup, &mut buf) {
+                Some(sup) => {
+                    on_survivor(*item, sup);
+                    survivors.push((*item, buf));
+                }
+                None => pool.push(buf),
+            }
+        }
+        kernel::nanos(t0.elapsed().as_nanos() as u64);
+    }
     /// Hook invoked whenever the Bottom-Up search finishes building an
     /// equivalence class: `prefix` is the class prefix's tidset, and
     /// `members` the freshly materialized member tidsets. Adaptive
@@ -207,6 +282,11 @@ pub trait TidOps: Clone + Send + Sync + 'static + SerDe {
 
 // --------------------------------------------- raw sorted-slice kernels
 
+/// Early-abort probe cadence for the bounded merge loops, in merge
+/// steps — re-exported from the bitmap kernel so the tid-list and
+/// bitmap paths share one block size and the cadence cannot drift.
+pub use crate::util::bitset::ABORT_PROBE_WORDS;
+
 /// Merge-intersect `a ∩ b` into `out` (cleared first), galloping when
 /// the sizes are skewed by more than [`GALLOP_RATIO`].
 fn merge_intersect_into(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
@@ -219,24 +299,28 @@ fn merge_intersect_into(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
         gallop_intersect_into(b, a, out);
         return;
     }
-    // Branch-light two-pointer merge (§Perf O2): advancing both cursors
-    // arithmetically instead of a 3-way branch lets the compiler keep
-    // the loop tight; bounds checks are elided by the loop condition.
-    out.reserve(a.len().min(b.len()));
-    let (mut i, mut j) = (0usize, 0usize);
+    // Branchless two-pointer merge (§Perf O2): both cursors advance
+    // arithmetically, and the write side is branchless too — every step
+    // stores the current element into a pre-sized buffer and bumps the
+    // write cursor only on a match, so the loop body carries no
+    // data-dependent branch at all.
+    let cap = a.len().min(b.len());
+    out.resize(cap, 0);
+    let (mut i, mut j, mut k) = (0usize, 0usize, 0usize);
     while i < a.len() && j < b.len() {
         let (x, y) = (a[i], b[j]);
-        if x == y {
-            out.push(x);
-        }
+        out[k] = x;
+        k += (x == y) as usize;
         i += (x <= y) as usize;
         j += (y <= x) as usize;
     }
+    out.truncate(k);
 }
 
 /// For |small| ≪ |large|: binary-search each element of the small side
 /// in the remaining suffix of the large side.
 fn gallop_intersect_into(small: &[u32], large: &[u32], out: &mut Vec<u32>) {
+    out.reserve(small.len());
     let mut lo = 0usize;
     for &x in small {
         if lo >= large.len() {
@@ -306,17 +390,26 @@ fn merge_count_min(a: &[u32], b: &[u32], need: usize) -> Option<u32> {
     }
     let mut count = 0usize;
     let (mut i, mut j) = (0usize, 0usize);
+    let mut until_probe = ABORT_PROBE_WORDS;
     while i < a.len() && j < b.len() {
-        // infeasibility bound: even matching every remaining element of
-        // the shorter side cannot reach min_sup
-        if count + (a.len() - i).min(b.len() - j) < need {
-            kernel::early_abort();
-            return None;
-        }
         let (x, y) = (a[i], b[j]);
         count += (x == y) as usize;
         i += (x <= y) as usize;
         j += (y <= x) as usize;
+        // infeasibility bound — even matching every remaining element
+        // of the shorter side cannot reach min_sup — probed once per
+        // ABORT_PROBE_WORDS merge steps so the steady-state loop body
+        // stays branchless. The final count >= need check is exact, so
+        // sparser probing never changes the result, only how late a
+        // hopeless walk is cut.
+        until_probe -= 1;
+        if until_probe == 0 {
+            until_probe = ABORT_PROBE_WORDS;
+            if count + (a.len() - i).min(b.len() - j) < need {
+                kernel::early_abort();
+                return None;
+            }
+        }
     }
     (count >= need).then_some(count as u32)
 }
@@ -357,22 +450,30 @@ fn merge_intersect_min_into(a: &[u32], b: &[u32], need: usize, out: &mut Vec<u32
     if b.len() * GALLOP_RATIO < a.len() {
         return gallop_intersect_min_into(b, a, need, out);
     }
-    out.reserve(a.len().min(b.len()));
-    let (mut i, mut j) = (0usize, 0usize);
+    // branchless pre-sized write loop (see merge_intersect_into) with
+    // the infeasibility probe lifted to ABORT_PROBE_WORDS boundaries
+    let cap = a.len().min(b.len());
+    out.resize(cap, 0);
+    let (mut i, mut j, mut k) = (0usize, 0usize, 0usize);
+    let mut until_probe = ABORT_PROBE_WORDS;
     while i < a.len() && j < b.len() {
-        if out.len() + (a.len() - i).min(b.len() - j) < need {
-            kernel::early_abort();
-            return None;
-        }
         let (x, y) = (a[i], b[j]);
-        if x == y {
-            out.push(x);
-        }
+        out[k] = x;
+        k += (x == y) as usize;
         i += (x <= y) as usize;
         j += (y <= x) as usize;
+        until_probe -= 1;
+        if until_probe == 0 {
+            until_probe = ABORT_PROBE_WORDS;
+            if k + (a.len() - i).min(b.len() - j) < need {
+                kernel::early_abort();
+                out.truncate(k);
+                return None;
+            }
+        }
     }
-    let sup = out.len();
-    (sup >= need).then_some(sup as u32)
+    out.truncate(k);
+    (k >= need).then_some(k as u32)
 }
 
 fn gallop_intersect_min_into(
@@ -381,6 +482,7 @@ fn gallop_intersect_min_into(
     need: usize,
     out: &mut Vec<u32>,
 ) -> Option<u32> {
+    out.reserve(small.len());
     let mut lo = 0usize;
     for (k, &x) in small.iter().enumerate() {
         if out.len() + (small.len() - k) < need {
@@ -402,27 +504,26 @@ fn gallop_intersect_min_into(
     (sup >= need).then_some(sup as u32)
 }
 
-/// Set difference `a \ b` into `out` (cleared first).
+/// Set difference `a \ b` into `out` (cleared first). The merge arm is
+/// the sorted-list ANDNOT: the same branchless-advance loop as the
+/// intersection kernels, keeping an element only when it is strictly
+/// smaller than the cursor on the `b` side.
 fn merge_difference_into(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
     out.clear();
     if a.len() * GALLOP_RATIO < b.len() {
         gallop_difference_into(a, b, out);
         return;
     }
-    out.reserve(a.len());
-    let (mut i, mut j) = (0usize, 0usize);
+    out.resize(a.len(), 0);
+    let (mut i, mut j, mut k) = (0usize, 0usize, 0usize);
     while i < a.len() && j < b.len() {
         let (x, y) = (a[i], b[j]);
-        if x < y {
-            out.push(x);
-            i += 1;
-        } else if y < x {
-            j += 1;
-        } else {
-            i += 1;
-            j += 1;
-        }
+        out[k] = x;
+        k += (x < y) as usize;
+        i += (x <= y) as usize;
+        j += (y <= x) as usize;
     }
+    out.truncate(k);
     out.extend_from_slice(&a[i..]);
 }
 
@@ -467,15 +568,9 @@ fn merge_difference_count(a: &[u32], b: &[u32]) -> usize {
     let (mut i, mut j) = (0usize, 0usize);
     while i < a.len() && j < b.len() {
         let (x, y) = (a[i], b[j]);
-        if x < y {
-            count += 1;
-            i += 1;
-        } else if y < x {
-            j += 1;
-        } else {
-            i += 1;
-            j += 1;
-        }
+        count += (x < y) as usize;
+        i += (x <= y) as usize;
+        j += (y <= x) as usize;
     }
     count + (a.len() - i)
 }
@@ -492,20 +587,23 @@ fn merge_difference_count_max(a: &[u32], b: &[u32], budget: usize) -> Option<usi
     }
     let mut count = 0usize;
     let (mut i, mut j) = (0usize, 0usize);
+    let mut until_probe = ABORT_PROBE_WORDS;
     while i < a.len() && j < b.len() {
         let (x, y) = (a[i], b[j]);
-        if x < y {
-            if count >= budget {
+        count += (x < y) as usize;
+        i += (x <= y) as usize;
+        j += (y <= x) as usize;
+        // budget bound at block boundaries: even if every remaining b
+        // element cancels an a element, the difference ends with at
+        // least count + (rem_a − rem_b) elements. The final exact check
+        // below makes sparser probing result-neutral.
+        until_probe -= 1;
+        if until_probe == 0 {
+            until_probe = ABORT_PROBE_WORDS;
+            if count + (a.len() - i).saturating_sub(b.len() - j) > budget {
                 kernel::early_abort();
                 return None;
             }
-            count += 1;
-            i += 1;
-        } else if y < x {
-            j += 1;
-        } else {
-            i += 1;
-            j += 1;
         }
     }
     if count + (a.len() - i) > budget {
@@ -553,27 +651,32 @@ fn merge_difference_max_into(
         }
         return Some(out.len());
     }
-    let (mut i, mut j) = (0usize, 0usize);
+    // branchless pre-sized ANDNOT merge with block-aligned budget probes
+    out.resize(a.len(), 0);
+    let (mut i, mut j, mut k) = (0usize, 0usize, 0usize);
+    let mut until_probe = ABORT_PROBE_WORDS;
     while i < a.len() && j < b.len() {
         let (x, y) = (a[i], b[j]);
-        if x < y {
-            if out.len() >= budget {
+        out[k] = x;
+        k += (x < y) as usize;
+        i += (x <= y) as usize;
+        j += (y <= x) as usize;
+        until_probe -= 1;
+        if until_probe == 0 {
+            until_probe = ABORT_PROBE_WORDS;
+            if k + (a.len() - i).saturating_sub(b.len() - j) > budget {
                 kernel::early_abort();
+                out.truncate(k);
                 return None;
             }
-            out.push(x);
-            i += 1;
-        } else if y < x {
-            j += 1;
-        } else {
-            i += 1;
-            j += 1;
         }
     }
-    if out.len() + (a.len() - i) > budget {
+    if k + (a.len() - i) > budget {
         kernel::early_abort();
+        out.truncate(k);
         return None;
     }
+    out.truncate(k);
     out.extend_from_slice(&a[i..]);
     Some(out.len())
 }
@@ -650,20 +753,18 @@ fn bitmap_and_into_min(a: &Bitmap, b: &Bitmap, need: usize, out: &mut Bitmap) ->
 }
 
 /// Bitmap AND popcount with the remaining-popcount bound, probed every
-/// 8 words: abort when the remaining words — even all-ones — cannot
-/// lift the count to `need`.
+/// [`ABORT_PROBE_WORDS`] words at unroll-block boundaries: abort when
+/// the remaining words — even all-ones — cannot lift the count to
+/// `need`. A bound-abort counts as a kernel early abort; a *completed*
+/// count below `need` is a plain failed candidate.
 fn bitmap_count_min(a: &Bitmap, b: &Bitmap, need: usize) -> Option<u32> {
-    let (aw, bw) = (a.words(), b.words());
-    let n = aw.len().min(bw.len());
-    let mut count = 0usize;
-    for (i, (&wa, &wb)) in aw.iter().zip(bw).enumerate() {
-        count += (wa & wb).count_ones() as usize;
-        if i & 7 == 7 && count + (n - i - 1) * 32 < need {
+    match a.and_count_min(b, need) {
+        None => {
             kernel::early_abort();
-            return None;
+            None
         }
+        Some(count) => (count >= need).then_some(count as u32),
     }
-    (count >= need).then_some(count as u32)
 }
 
 /// Membership-filter intersection for mixed tid-list × bitmap operands:
@@ -733,19 +834,26 @@ impl VecTidset {
     /// incremental streaming miner, which intersects tid-range *slices*
     /// (kept / newly-arrived regions) of window tidsets.
     pub fn intersect_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
+        let t0 = std::time::Instant::now();
         kernel::intersection();
-        let mut out = Vec::new();
+        let mut out = Vec::with_capacity(a.len().min(b.len()));
         merge_intersect_into(a, b, &mut out);
         kernel::bytes(4 * out.len());
+        kernel::nanos(t0.elapsed().as_nanos() as u64);
         out
     }
 
     /// [`VecTidset::intersect_sorted`] into a caller-provided scratch
-    /// buffer (cleared first) — the allocation-free twin the streaming
-    /// lattice cache reuses per candidate.
+    /// buffer (cleared first, pre-reserved to `min(|a|, |b|)` so growth
+    /// reallocs never land inside the merge loop) — the allocation-free
+    /// twin the streaming lattice cache reuses per candidate.
     pub fn intersect_sorted_into(a: &[u32], b: &[u32], out: &mut Vec<u32>) {
+        let t0 = std::time::Instant::now();
         kernel::intersection();
+        out.clear();
+        out.reserve(a.len().min(b.len()));
         merge_intersect_into(a, b, out);
+        kernel::nanos(t0.elapsed().as_nanos() as u64);
     }
 }
 
@@ -786,6 +894,37 @@ impl TidOps for VecTidset {
     fn intersect_into_min(&self, other: &Self, min_sup: u32, out: &mut Self) -> Option<u32> {
         kernel::intersection();
         merge_intersect_min_into(&self.tids, &other.tids, min_sup as usize, &mut out.tids)
+    }
+
+    /// Batched override: drive the raw merge kernel directly and fold
+    /// the intersection counter into one bulk add per class.
+    fn intersect_class_into<'a, I, F>(
+        &self,
+        candidates: I,
+        min_sup: u32,
+        pool: &mut Vec<Self>,
+        survivors: &mut Vec<(Item, Self)>,
+        mut on_survivor: F,
+    ) where
+        I: IntoIterator<Item = &'a (Item, Self)>,
+        F: FnMut(Item, u32),
+    {
+        let t0 = std::time::Instant::now();
+        let need = min_sup as usize;
+        let mut n = 0u64;
+        for (item, other) in candidates {
+            n += 1;
+            let mut buf = pool.pop().unwrap_or_else(Self::empty);
+            match merge_intersect_min_into(&self.tids, &other.tids, need, &mut buf.tids) {
+                Some(sup) => {
+                    on_survivor(*item, sup);
+                    survivors.push((*item, buf));
+                }
+                None => pool.push(buf),
+            }
+        }
+        kernel::intersections_n(n);
+        kernel::nanos(t0.elapsed().as_nanos() as u64);
     }
 
     fn to_tids(&self) -> Vec<u32> {
@@ -847,6 +986,39 @@ impl TidOps for BitmapTidset {
     fn intersect_into_min(&self, other: &Self, min_sup: u32, out: &mut Self) -> Option<u32> {
         kernel::intersection();
         bitmap_and_into_min(&self.bits, &other.bits, min_sup as usize, &mut out.bits)
+    }
+
+    /// Batched override: one pass of the unrolled AND+popcount kernel
+    /// per class member, with the prefix bitmap borrow hoisted out of
+    /// the loop and one bulk counter add per class.
+    fn intersect_class_into<'a, I, F>(
+        &self,
+        candidates: I,
+        min_sup: u32,
+        pool: &mut Vec<Self>,
+        survivors: &mut Vec<(Item, Self)>,
+        mut on_survivor: F,
+    ) where
+        I: IntoIterator<Item = &'a (Item, Self)>,
+        F: FnMut(Item, u32),
+    {
+        let t0 = std::time::Instant::now();
+        let need = min_sup as usize;
+        let prefix = &self.bits;
+        let mut n = 0u64;
+        for (item, other) in candidates {
+            n += 1;
+            let mut buf = pool.pop().unwrap_or_else(Self::empty);
+            match bitmap_and_into_min(prefix, &other.bits, need, &mut buf.bits) {
+                Some(sup) => {
+                    on_survivor(*item, sup);
+                    survivors.push((*item, buf));
+                }
+                None => pool.push(buf),
+            }
+        }
+        kernel::intersections_n(n);
+        kernel::nanos(t0.elapsed().as_nanos() as u64);
     }
 
     fn to_tids(&self) -> Vec<u32> {
@@ -1204,6 +1376,10 @@ impl TidOps for HybridTidset {
             // Borrow the prefix tids in place (materialize only for a
             // bitmap prefix) and take each member's storage instead of
             // cloning full tid vectors that die on the next line.
+            let pbits = match &prefix.repr {
+                HybridRepr::Bits(b) => Some(b),
+                _ => None,
+            };
             let ptids_storage: Vec<u32>;
             let ptids: &[u32] = match &prefix.repr {
                 HybridRepr::Tids(t) => t,
@@ -1231,7 +1407,18 @@ impl TidOps for HybridTidset {
                         let mut d = Vec::with_capacity(
                             ptids.len().saturating_sub(support as usize),
                         );
-                        d.extend(ptids.iter().copied().filter(|&t| !b.get(t as usize)));
+                        match pbits {
+                            // bitmap prefix: one unrolled ANDNOT pass
+                            // instead of a per-tid membership probe
+                            Some(pb) => {
+                                pb.andnot_tids_into(&b, &mut d);
+                            }
+                            None => {
+                                d.extend(
+                                    ptids.iter().copied().filter(|&t| !b.get(t as usize)),
+                                );
+                            }
+                        }
                         d
                     }
                     HybridRepr::Diff { .. } => unreachable!("diffset members handled above"),

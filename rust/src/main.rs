@@ -645,8 +645,10 @@ fn run_mine(args: &Args, cfg: &ExperimentConfig) -> Result<()> {
         }
     }
     println!(
-        "kernel: {} intersections, {} early-aborts, {} repr switches, ~{} B allocated",
+        "kernel: {} intersections @ {:.0} ∩/s, {} early-aborts, {} repr switches, \
+         ~{} B allocated",
         report.kernel.intersections,
+        report.kernel.intersections_per_sec(),
         report.kernel.early_aborts,
         report.kernel.repr_switches,
         report.kernel.bytes_allocated
@@ -875,6 +877,7 @@ impl BenchRow<'_> {
              \"task_p99_ms\": {:.3}, \"task_skew\": {:.3}, \
              \"kernel_intersections\": {}, \"kernel_early_aborts\": {}, \
              \"kernel_repr_switches\": {}, \"kernel_bytes_allocated\": {}, \
+             \"kernel_nanos\": {}, \"intersections_per_sec\": {:.1}, \
              \"memory_budget_mb\": {}, \"spilled_blocks\": {}, \
              \"spill_reloads\": {}, \"bp_shrinks\": {}, \"bp_recoveries\": {}, \
              \"bp_effective_batch\": {}, \"bp_watermark_bytes\": {}}}",
@@ -901,6 +904,8 @@ impl BenchRow<'_> {
             self.kernel.early_aborts,
             self.kernel.repr_switches,
             self.kernel.bytes_allocated,
+            self.kernel.nanos,
+            self.kernel.intersections_per_sec(),
             budget_mb,
             self.spilled_blocks,
             self.spill_reloads,

@@ -134,6 +134,9 @@ pub enum SparkletEvent {
         early_aborts: u64,
         repr_switches: u64,
         bytes_allocated: u64,
+        /// Wall nanoseconds spent inside the intersection kernels —
+        /// with `intersections`, the run's intersections/sec.
+        nanos: u64,
     },
     /// Serve mode: a mining request arrived on the socket. Every
     /// received request is closed by exactly one `RequestRejected` or
@@ -320,11 +323,13 @@ impl SparkletEvent {
                 early_aborts,
                 repr_switches,
                 bytes_allocated,
+                nanos,
             } => {
                 push_field(&mut s, "intersections", &intersections.to_string());
                 push_field(&mut s, "early_aborts", &early_aborts.to_string());
                 push_field(&mut s, "repr_switches", &repr_switches.to_string());
                 push_field(&mut s, "bytes_allocated", &bytes_allocated.to_string());
+                push_field(&mut s, "nanos", &nanos.to_string());
             }
             Self::RequestReceived { request, tenant } => {
                 push_field(&mut s, "request", &request.to_string());
@@ -398,8 +403,9 @@ pub trait EventListener: Send + Sync {
 
 /// The first listener every context registers (when
 /// `SparkletConf::collect_metrics` is on): folds `StageCompleted`
-/// events into the context's [`MetricsRegistry`], making the registry a
-/// pure derivation of the event stream.
+/// events into the context's [`MetricsRegistry`] and accumulates
+/// `KernelSnapshot` deltas there, making the registry a pure derivation
+/// of the event stream.
 pub struct MetricsListener {
     registry: Arc<MetricsRegistry>,
 }
@@ -412,8 +418,18 @@ impl MetricsListener {
 
 impl EventListener for MetricsListener {
     fn on_event(&self, _t_ms: f64, event: &SparkletEvent) {
-        if let SparkletEvent::StageCompleted { metrics, .. } = event {
-            self.registry.record(metrics.clone());
+        match event {
+            SparkletEvent::StageCompleted { metrics, .. } => {
+                self.registry.record(metrics.clone());
+            }
+            SparkletEvent::KernelSnapshot {
+                intersections,
+                nanos,
+                ..
+            } => {
+                self.registry.record_kernel(*intersections, *nanos);
+            }
+            _ => {}
         }
     }
 }
@@ -967,6 +983,7 @@ mod tests {
                 early_aborts: 2,
                 repr_switches: 1,
                 bytes_allocated: 640,
+                nanos: 1_000,
             },
             SparkletEvent::RequestReceived {
                 request: 3,

@@ -86,6 +86,11 @@ pub struct MetricsRegistry {
     /// observed stages — the feedback `PartitionStrategy::Weighted`
     /// reads so class placement learns from the previous run/window.
     ewma_partition_ms: Mutex<Vec<f64>>,
+    /// Accumulated intersection-kernel work, folded from
+    /// `KernelSnapshot` events by the metrics listener: (intersections,
+    /// in-kernel wall nanos). Kept here as plain totals so the registry
+    /// can report kernel throughput without depending on `fim`.
+    kernel_work: Mutex<(u64, u64)>,
 }
 
 impl MetricsRegistry {
@@ -95,6 +100,33 @@ impl MetricsRegistry {
 
     pub fn record(&self, m: StageMetrics) {
         self.stages.lock().unwrap().push(m);
+    }
+
+    /// Fold one `KernelSnapshot` delta (intersections, in-kernel wall
+    /// nanos) into the registry's running totals. Called by the metrics
+    /// listener, so the registry stays a pure derivation of the event
+    /// stream.
+    pub fn record_kernel(&self, intersections: u64, nanos: u64) {
+        let mut k = self.kernel_work.lock().unwrap();
+        k.0 += intersections;
+        k.1 += nanos;
+    }
+
+    /// Accumulated (intersections, in-kernel wall nanos) across every
+    /// mine this context ran.
+    pub fn kernel_totals(&self) -> (u64, u64) {
+        *self.kernel_work.lock().unwrap()
+    }
+
+    /// Intersection kernel throughput across the context's lifetime
+    /// (0.0 when no kernel time was recorded).
+    pub fn kernel_intersections_per_sec(&self) -> f64 {
+        let (n, ns) = self.kernel_totals();
+        if ns == 0 {
+            0.0
+        } else {
+            n as f64 * 1e9 / ns as f64
+        }
     }
 
     /// Wire the live active-task gauge (called by the context with the
@@ -239,11 +271,14 @@ impl MetricsRegistry {
         } else {
             crate::util::stats::max(&all_tasks) / med
         };
+        let (kernel_n, _) = self.kernel_totals();
         format!(
             "{n} stages ({maps} map, {} result, {streaming} streaming), {wall_ms:.1} ms wall, \
              {retries} retries, {steals} steals, shuffle: {records} records / {bytes} bytes \
-             ({spilled} blocks spilled), p95 task {p95:.1} ms / skew {skew:.1}x, {} tasks active",
+             ({spilled} blocks spilled), kernel {kernel_n} ∩ @ {:.0} ∩/s, \
+             p95 task {p95:.1} ms / skew {skew:.1}x, {} tasks active",
             n - maps - streaming,
+            self.kernel_intersections_per_sec(),
             self.active_tasks(),
         )
     }
@@ -424,6 +459,20 @@ mod tests {
         // empty registry still renders (zeros, no NaN)
         let report = MetricsRegistry::new().report();
         assert!(report.contains("p95 task 0.0 ms / skew 0.0x"), "{report}");
+    }
+
+    #[test]
+    fn kernel_totals_accumulate_and_report_throughput() {
+        let r = MetricsRegistry::new();
+        assert_eq!(r.kernel_totals(), (0, 0));
+        assert_eq!(r.kernel_intersections_per_sec(), 0.0, "no time, no rate");
+        r.record_kernel(500, 1_000_000); // 500 ∩ in 1 ms
+        r.record_kernel(500, 1_000_000);
+        assert_eq!(r.kernel_totals(), (1000, 2_000_000));
+        let per_sec = r.kernel_intersections_per_sec();
+        assert!((per_sec - 500_000.0).abs() < 1e-6, "{per_sec}");
+        let report = r.report();
+        assert!(report.contains("kernel 1000 ∩ @ 500000 ∩/s"), "{report}");
     }
 
     #[test]

@@ -311,11 +311,18 @@ pub fn replay(log: &str) -> Result<Replay, String> {
             }
             "KernelSnapshot" => {
                 rp.kernel_snapshots += 1;
+                let intersections = num(&obj, "intersections");
+                let nanos = num(&obj, "nanos");
+                let per_sec = if nanos > 0.0 {
+                    intersections * 1e9 / nanos
+                } else {
+                    0.0
+                };
                 annotations.push((
                     t_ms,
                     format!(
-                        "kernel: {} ∩, {} early-aborts, {} repr switches",
-                        num(&obj, "intersections"),
+                        "kernel: {intersections} ∩ @ {per_sec:.0} ∩/s, \
+                         {} early-aborts, {} repr switches",
                         num(&obj, "early_aborts"),
                         num(&obj, "repr_switches"),
                     ),

@@ -3,6 +3,69 @@
 //! (whose operands are `s32[rows, words]` with identical bit layout:
 //! tid `t` lives at bit `t % 32` of word `t / 32`).
 
+/// Words per unrolled kernel block. 16 u32 words = 8 u64 popcounts =
+/// 512 bits per block — wide enough for the autovectorizer to emit
+/// full-width AND+popcount lanes, small enough that the scalar tail
+/// stays cheap. Storage stays `Vec<u32>` (not u64) because the XLA
+/// artifact consumes `s32[rows, words]` with this exact layout and the
+/// shuffle SerDe mirrors memory; the kernels pair adjacent u32 words
+/// into u64s only inside a block.
+pub const UNROLL_WORDS: usize = 16;
+
+/// Early-abort probe cadence for the `*_min` kernels, in words. Kept
+/// equal to [`UNROLL_WORDS`] so the scalar reference loops and the
+/// unrolled block loops probe the infeasibility bound at the *same*
+/// word boundaries — scalar and unrolled paths return bit-identical
+/// `Option` results, not just identical counts.
+pub const ABORT_PROBE_WORDS: usize = UNROLL_WORDS;
+
+/// AND + popcount one block, pairing u32 words into u64 lanes.
+#[inline(always)]
+fn block_and_count(a: &[u32; UNROLL_WORDS], b: &[u32; UNROLL_WORDS]) -> usize {
+    let mut c = 0usize;
+    for k in 0..UNROLL_WORDS / 2 {
+        let lo = (a[2 * k] & b[2 * k]) as u64;
+        let hi = (a[2 * k + 1] & b[2 * k + 1]) as u64;
+        c += (lo | (hi << 32)).count_ones() as usize;
+    }
+    c
+}
+
+/// AND one block into `out`, returning its popcount.
+#[inline(always)]
+fn block_and_into(
+    a: &[u32; UNROLL_WORDS],
+    b: &[u32; UNROLL_WORDS],
+    out: &mut [u32; UNROLL_WORDS],
+) -> usize {
+    let mut c = 0usize;
+    for k in 0..UNROLL_WORDS / 2 {
+        let lo = a[2 * k] & b[2 * k];
+        let hi = a[2 * k + 1] & b[2 * k + 1];
+        out[2 * k] = lo;
+        out[2 * k + 1] = hi;
+        c += ((lo as u64) | ((hi as u64) << 32)).count_ones() as usize;
+    }
+    c
+}
+
+/// ANDNOT (`a & !b`) one block into `out`.
+#[inline(always)]
+fn block_andnot_into(
+    a: &[u32; UNROLL_WORDS],
+    b: &[u32; UNROLL_WORDS],
+    out: &mut [u32; UNROLL_WORDS],
+) {
+    for k in 0..UNROLL_WORDS {
+        out[k] = a[k] & !b[k];
+    }
+}
+
+#[inline(always)]
+fn as_block(words: &[u32]) -> &[u32; UNROLL_WORDS] {
+    words.try_into().expect("slice is one unroll block")
+}
+
 /// A fixed-capacity bitmap of transaction ids.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Bitmap {
@@ -101,18 +164,30 @@ impl Bitmap {
     }
 
     /// Intersect into a caller-provided buffer, returning the popcount.
-    /// This is the native hot path: one pass, no allocation.
+    /// This is the native hot path: one pass, no allocation. Unrolled
+    /// in [`UNROLL_WORDS`] blocks with a scalar tail.
     #[inline]
     pub fn and_into(&self, other: &Self, out: &mut Self) -> usize {
         debug_assert_eq!(self.words.len(), other.words.len());
         debug_assert_eq!(self.words.len(), out.words.len());
+        out.nbits = self.nbits;
+        let n = self.words.len().min(other.words.len()).min(out.words.len());
+        let (aw, bw, ow) = (&self.words[..n], &other.words[..n], &mut out.words[..n]);
+        let blocks = n / UNROLL_WORDS;
         let mut count = 0usize;
-        for ((o, &a), &b) in out.words.iter_mut().zip(&self.words).zip(&other.words) {
-            let w = a & b;
-            *o = w;
+        for bi in 0..blocks {
+            let s = bi * UNROLL_WORDS;
+            count += block_and_into(
+                as_block(&aw[s..s + UNROLL_WORDS]),
+                as_block(&bw[s..s + UNROLL_WORDS]),
+                (&mut ow[s..s + UNROLL_WORDS]).try_into().unwrap(),
+            );
+        }
+        for i in blocks * UNROLL_WORDS..n {
+            let w = aw[i] & bw[i];
+            ow[i] = w;
             count += w.count_ones() as usize;
         }
-        out.nbits = self.nbits;
         count
     }
 
@@ -120,10 +195,46 @@ impl Bitmap {
     /// aborting — returning `None` — as soon as the remaining words,
     /// even all-ones, cannot lift the count to `need`. `Some(count)`
     /// means the AND *completed*; the count may still fall short of
-    /// `need` (callers decide). The bound is probed every 8 words so
+    /// `need` (callers decide). The bound is probed every
+    /// [`ABORT_PROBE_WORDS`] words, aligned to the unroll blocks, so
     /// the hot loop stays branch-light. On `None`, `out` holds a
     /// partial result but its storage stays reusable.
     pub fn and_into_min(&self, other: &Self, need: usize, out: &mut Self) -> Option<usize> {
+        debug_assert_eq!(self.words.len(), other.words.len());
+        let n = self.words.len().min(other.words.len());
+        out.nbits = self.nbits;
+        out.words.clear();
+        out.words.resize(n, 0);
+        let (aw, bw, ow) = (&self.words[..n], &other.words[..n], &mut out.words[..n]);
+        let blocks = n / UNROLL_WORDS;
+        let mut count = 0usize;
+        for bi in 0..blocks {
+            let s = bi * UNROLL_WORDS;
+            count += block_and_into(
+                as_block(&aw[s..s + UNROLL_WORDS]),
+                as_block(&bw[s..s + UNROLL_WORDS]),
+                (&mut ow[s..s + UNROLL_WORDS]).try_into().unwrap(),
+            );
+            let done = s + UNROLL_WORDS;
+            if count + (n - done) * 32 < need {
+                return None;
+            }
+        }
+        for i in blocks * UNROLL_WORDS..n {
+            let w = aw[i] & bw[i];
+            ow[i] = w;
+            count += w.count_ones() as usize;
+        }
+        Some(count)
+    }
+
+    /// Scalar reference for [`and_into_min`](Self::and_into_min): the
+    /// original push-based word loop. Probes the same infeasibility
+    /// bound at the same [`ABORT_PROBE_WORDS`] boundaries, so its
+    /// `Option` result is bit-identical to the unrolled kernel's. Kept
+    /// public as the equivalence-test oracle and the micro-bench
+    /// baseline the ≥1.3× CI gate measures against.
+    pub fn and_into_min_scalar(&self, other: &Self, need: usize, out: &mut Self) -> Option<usize> {
         debug_assert_eq!(self.words.len(), other.words.len());
         let n = self.words.len().min(other.words.len());
         out.nbits = self.nbits;
@@ -134,7 +245,7 @@ impl Bitmap {
             let w = a & b;
             count += w.count_ones() as usize;
             out.words.push(w);
-            if i & 7 == 7 && count + (n - i - 1) * 32 < need {
+            if i % ABORT_PROBE_WORDS == ABORT_PROBE_WORDS - 1 && count + (n - i - 1) * 32 < need {
                 return None;
             }
         }
@@ -142,14 +253,124 @@ impl Bitmap {
     }
 
     /// Popcount of the intersection without materializing it — used when
-    /// only the support survives the min_sup test.
+    /// only the support survives the min_sup test. Unrolled in
+    /// [`UNROLL_WORDS`] blocks with a scalar tail.
     #[inline]
     pub fn and_count(&self, other: &Self) -> usize {
+        let n = self.words.len().min(other.words.len());
+        let (aw, bw) = (&self.words[..n], &other.words[..n]);
+        let blocks = n / UNROLL_WORDS;
+        let mut count = 0usize;
+        for bi in 0..blocks {
+            let s = bi * UNROLL_WORDS;
+            count += block_and_count(
+                as_block(&aw[s..s + UNROLL_WORDS]),
+                as_block(&bw[s..s + UNROLL_WORDS]),
+            );
+        }
+        for i in blocks * UNROLL_WORDS..n {
+            count += (aw[i] & bw[i]).count_ones() as usize;
+        }
+        count
+    }
+
+    /// Scalar reference for [`and_count`](Self::and_count).
+    pub fn and_count_scalar(&self, other: &Self) -> usize {
         self.words
             .iter()
             .zip(&other.words)
             .map(|(&a, &b)| (a & b).count_ones() as usize)
             .sum()
+    }
+
+    /// Intersection popcount with the remaining-words infeasibility
+    /// bound: `None` once even all-ones remaining words cannot reach
+    /// `need`, probed every [`ABORT_PROBE_WORDS`] words at unroll-block
+    /// boundaries. The count-only twin of
+    /// [`and_into_min`](Self::and_into_min).
+    pub fn and_count_min(&self, other: &Self, need: usize) -> Option<usize> {
+        let n = self.words.len().min(other.words.len());
+        let (aw, bw) = (&self.words[..n], &other.words[..n]);
+        let blocks = n / UNROLL_WORDS;
+        let mut count = 0usize;
+        for bi in 0..blocks {
+            let s = bi * UNROLL_WORDS;
+            count += block_and_count(
+                as_block(&aw[s..s + UNROLL_WORDS]),
+                as_block(&bw[s..s + UNROLL_WORDS]),
+            );
+            let done = s + UNROLL_WORDS;
+            if count + (n - done) * 32 < need {
+                return None;
+            }
+        }
+        for i in blocks * UNROLL_WORDS..n {
+            count += (aw[i] & bw[i]).count_ones() as usize;
+        }
+        Some(count)
+    }
+
+    /// Scalar reference for [`and_count_min`](Self::and_count_min),
+    /// probing at the same boundaries.
+    pub fn and_count_min_scalar(&self, other: &Self, need: usize) -> Option<usize> {
+        let n = self.words.len().min(other.words.len());
+        let mut count = 0usize;
+        for i in 0..n {
+            count += (self.words[i] & other.words[i]).count_ones() as usize;
+            if i % ABORT_PROBE_WORDS == ABORT_PROBE_WORDS - 1 && count + (n - i - 1) * 32 < need {
+                return None;
+            }
+        }
+        Some(count)
+    }
+
+    /// Append the tids of `self & !other` (set in `self`, absent from
+    /// `other`) to `out`, returning how many were appended. The ANDNOT
+    /// words are produced block-unrolled into a stack buffer; bit
+    /// extraction then touches only nonzero words. This is the diffset
+    /// builder: `d(PX) = t(P) \ t(PX)` in one pass instead of a
+    /// per-tid membership probe.
+    pub fn andnot_tids_into(&self, other: &Self, out: &mut Vec<u32>) -> usize {
+        let n = self.words.len().min(other.words.len());
+        let (aw, bw) = (&self.words[..n], &other.words[..n]);
+        let blocks = n / UNROLL_WORDS;
+        let before = out.len();
+        let mut buf = [0u32; UNROLL_WORDS];
+        for bi in 0..blocks {
+            let s = bi * UNROLL_WORDS;
+            block_andnot_into(
+                as_block(&aw[s..s + UNROLL_WORDS]),
+                as_block(&bw[s..s + UNROLL_WORDS]),
+                &mut buf,
+            );
+            for (k, &w) in buf.iter().enumerate() {
+                let mut w = w;
+                let base = ((s + k) * 32) as u32;
+                while w != 0 {
+                    out.push(base + w.trailing_zeros());
+                    w &= w - 1;
+                }
+            }
+        }
+        for i in blocks * UNROLL_WORDS..n {
+            let mut w = aw[i] & !bw[i];
+            let base = (i * 32) as u32;
+            while w != 0 {
+                out.push(base + w.trailing_zeros());
+                w &= w - 1;
+            }
+        }
+        // self may address more bits than other: everything past other's
+        // words survives the subtraction untouched.
+        for i in n..self.words.len() {
+            let mut w = self.words[i];
+            let base = (i * 32) as u32;
+            while w != 0 {
+                out.push(base + w.trailing_zeros());
+                w &= w - 1;
+            }
+        }
+        out.len() - before
     }
 
     /// Iterate set bit indices in ascending order.
@@ -268,13 +489,68 @@ mod tests {
         assert_eq!(a.and_into_min(&b, want, &mut out), Some(want));
         assert_eq!(out, a.and(&b));
         // impossible need on sparse maps: the remaining-popcount bound
-        // fires at the first probe (word 7: count + 24*32 < 1000)
+        // fires at the first block boundary (16 words done:
+        // count + 16*32 < 1000)
         assert_eq!(a.and_into_min(&b, 1000, &mut out), None);
-        // small maps (< 8 words) never probe but still complete
+        assert_eq!(a.and_into_min_scalar(&b, 1000, &mut out), None);
+        // small maps (< ABORT_PROBE_WORDS words) never probe but still
+        // complete
         let s1 = Bitmap::from_sorted_tids(&[1, 2, 3], 64);
         let s2 = Bitmap::from_sorted_tids(&[2, 3, 4], 64);
         let mut sout = Bitmap::new(0);
         assert_eq!(s1.and_into_min(&s2, 60, &mut sout), Some(2));
+        assert_eq!(s1.and_into_min_scalar(&s2, 60, &mut sout), Some(2));
+    }
+
+    #[test]
+    fn unrolled_matches_scalar_including_tails() {
+        let mut rng = crate::util::SplitMix64::new(0xC0DE);
+        // sweep sizes that land on every tail length around the block
+        // boundary, plus multi-block sizes
+        for nwords in (0..=2 * UNROLL_WORDS + 1).chain([61, 64, 100]) {
+            let n = (nwords.max(1)) * 32;
+            let a_tids: Vec<u32> = (0..n as u32).filter(|_| rng.gen_bool(0.3)).collect();
+            let b_tids: Vec<u32> = (0..n as u32).filter(|_| rng.gen_bool(0.3)).collect();
+            let a = Bitmap::from_sorted_tids(&a_tids, n);
+            let b = Bitmap::from_sorted_tids(&b_tids, n);
+            assert_eq!(a.and_count(&b), a.and_count_scalar(&b));
+            for need in [0, 1, a.and_count_scalar(&b), n] {
+                assert_eq!(a.and_count_min(&b, need), a.and_count_min_scalar(&b, need));
+                let (mut u, mut s) = (Bitmap::new(0), Bitmap::new(0));
+                let ru = a.and_into_min(&b, need, &mut u);
+                let rs = a.and_into_min_scalar(&b, need, &mut s);
+                assert_eq!(ru, rs);
+                if ru.is_some() {
+                    assert_eq!(u, s);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn andnot_tids_matches_filter() {
+        let mut rng = crate::util::SplitMix64::new(0xD1FF);
+        for n in [1usize, 31, 32, 512, 513, 1000] {
+            let a_tids: Vec<u32> = (0..n as u32).filter(|_| rng.gen_bool(0.4)).collect();
+            let b_tids: Vec<u32> = (0..n as u32).filter(|_| rng.gen_bool(0.4)).collect();
+            let a = Bitmap::from_sorted_tids(&a_tids, n);
+            let b = Bitmap::from_sorted_tids(&b_tids, n);
+            let want: Vec<u32> = a_tids
+                .iter()
+                .copied()
+                .filter(|&t| !b.get(t as usize))
+                .collect();
+            let mut got = vec![9999u32]; // appends, never clears
+            assert_eq!(a.andnot_tids_into(&b, &mut got), want.len());
+            assert_eq!(&got[1..], &want[..]);
+        }
+        // all-ones minus empty = identity; x minus itself = empty
+        let full = Bitmap::from_sorted_tids(&(0..96).collect::<Vec<_>>(), 96);
+        let empty = Bitmap::new(96);
+        let mut out = Vec::new();
+        assert_eq!(full.andnot_tids_into(&empty, &mut out), 96);
+        out.clear();
+        assert_eq!(full.andnot_tids_into(&full, &mut out), 0);
     }
 
     #[test]

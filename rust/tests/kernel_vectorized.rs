@@ -1,0 +1,302 @@
+//! Equivalence properties for the unrolled/branchless tidset kernels:
+//! every vectorization-friendly loop must be bit-identical to its scalar
+//! reference — same counts, same `Option` abort decisions at the same
+//! [`ABORT_PROBE_WORDS`] boundaries — and the batched class entry point
+//! must bump the kernel counters exactly like the per-call path.
+
+use rdd_eclat::fim::tidset::{
+    kernel, BitmapTidset, DiffTidset, HybridTidset, TidOps, VecTidset, ABORT_PROBE_WORDS,
+};
+use rdd_eclat::util::{Bitmap, SplitMix64};
+use std::sync::Mutex;
+
+/// The kernel counters are process-global and the harness runs tests in
+/// threads; serialize every test here so the counter-delta assertions
+/// (and the randomized sweeps feeding them) never interleave.
+static KERNEL_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    KERNEL_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn random_tids(rng: &mut SplitMix64, universe: usize, density: f64) -> Vec<u32> {
+    (0..universe as u32).filter(|_| rng.gen_bool(density)).collect()
+}
+
+/// Assert the full scalar/unrolled bitmap contract on one operand pair:
+/// counts equal, and for every probed `need` the bounded kernels return
+/// the same `Option` — with identical materialized words whenever the
+/// walk completed.
+fn assert_bitmap_pair(a: &Bitmap, b: &Bitmap) {
+    let exact = a.and_count_scalar(b);
+    assert_eq!(a.and_count(b), exact, "and_count != scalar");
+
+    let nbits = a.nbits().min(b.nbits());
+    let ceiling = nbits.div_ceil(32) * 32;
+    // Sweep need across every block boundary's infeasibility threshold
+    // plus the exact-count edges, so the abort fires (or doesn't) at
+    // each boundary in turn on both paths.
+    let mut needs: Vec<usize> = vec![0, 1, exact, exact + 1, ceiling, ceiling + 1];
+    let mut boundary = ABORT_PROBE_WORDS;
+    while boundary * 32 <= ceiling + 32 {
+        let remaining = ceiling.saturating_sub(boundary * 32);
+        needs.push(remaining);
+        needs.push(remaining + 1);
+        boundary += ABORT_PROBE_WORDS;
+    }
+    let (mut out_u, mut out_s) = (Bitmap::new(nbits), Bitmap::new(nbits));
+    for need in needs {
+        let cu = a.and_count_min(b, need);
+        let cs = a.and_count_min_scalar(b, need);
+        assert_eq!(cu, cs, "and_count_min diverged at need={need}");
+
+        let ru = a.and_into_min(b, need, &mut out_u);
+        let rs = a.and_into_min_scalar(b, need, &mut out_s);
+        assert_eq!(ru, rs, "and_into_min diverged at need={need}");
+        assert_eq!(cu, ru, "count-only and materializing kernels diverged at need={need}");
+        if ru.is_some() {
+            // On None the two paths leave different partial buffers
+            // (resize-and-fill vs push prefix) — contents are only
+            // specified on completion.
+            assert_eq!(ru, Some(exact));
+            assert_eq!(
+                out_u.to_tids(),
+                out_s.to_tids(),
+                "materialized words diverged at need={need}"
+            );
+        }
+    }
+}
+
+#[test]
+fn bitmap_unrolled_matches_scalar_randomized() {
+    let _g = lock();
+    let mut rng = SplitMix64::new(0xB17);
+    // nbits chosen to hit every tail length 0..UNROLL_WORDS words around
+    // block boundaries, plus multi-block sizes.
+    let mut sizes: Vec<usize> = (0..=(2 * ABORT_PROBE_WORDS + 1)).map(|w| w * 32).collect();
+    sizes.extend([33, 517, 1000, 4096, 5000]);
+    for &nbits in &sizes {
+        for &density in &[0.0, 0.02, 0.5, 0.97] {
+            let a = Bitmap::from_sorted_tids(&random_tids(&mut rng, nbits, density), nbits);
+            let b = Bitmap::from_sorted_tids(&random_tids(&mut rng, nbits, density), nbits);
+            assert_bitmap_pair(&a, &b);
+        }
+    }
+}
+
+#[test]
+fn bitmap_unrolled_matches_scalar_adversarial() {
+    let _g = lock();
+    let nbits = 4 * ABORT_PROBE_WORDS * 32 + 17;
+    let all: Vec<u32> = (0..nbits as u32).collect();
+    let none: Vec<u32> = Vec::new();
+    let evens: Vec<u32> = (0..nbits as u32).step_by(2).collect();
+    let odds: Vec<u32> = (1..nbits as u32).step_by(2).collect();
+    // One set bit per block — counts crawl, so the infeasibility bound
+    // triggers at a different boundary for nearly every need value.
+    let sparse_blocks: Vec<u32> = (0..nbits as u32).step_by(ABORT_PROBE_WORDS * 32).collect();
+    // Front-loaded: dense first half, empty second half — completion
+    // depends on credit earned before the half-way boundary.
+    let front: Vec<u32> = (0..(nbits / 2) as u32).collect();
+    let cases = [&all, &none, &evens, &odds, &sparse_blocks, &front];
+    for x in cases {
+        for y in cases {
+            let a = Bitmap::from_sorted_tids(x, nbits);
+            let b = Bitmap::from_sorted_tids(y, nbits);
+            assert_bitmap_pair(&a, &b);
+        }
+    }
+    // Empty bitmaps (zero words) exercise the no-block/no-tail path.
+    assert_bitmap_pair(&Bitmap::new(0), &Bitmap::new(0));
+}
+
+/// Reference implementations for the sorted-tid-list kernels: plain
+/// 3-way-branch merges, the shape the branchless loops replaced.
+fn ref_intersect(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::new();
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out
+}
+
+fn ref_difference(a: &[u32], b: &[u32]) -> Vec<u32> {
+    a.iter().copied().filter(|t| b.binary_search(t).is_err()).collect()
+}
+
+#[test]
+fn vec_branchless_matches_reference() {
+    let _g = lock();
+    let mut rng = SplitMix64::new(0x5EC);
+    let universe = 3000;
+    let mut pairs: Vec<(Vec<u32>, Vec<u32>)> = Vec::new();
+    for &(da, db) in &[(0.3, 0.3), (0.5, 0.01), (0.01, 0.5), (0.9, 0.9)] {
+        pairs.push((random_tids(&mut rng, universe, da), random_tids(&mut rng, universe, db)));
+    }
+    let every: Vec<u32> = (0..universe as u32).collect();
+    pairs.push((Vec::new(), every.clone()));
+    pairs.push((every.clone(), Vec::new()));
+    pairs.push((every.clone(), every.clone()));
+    for (ta, tb) in pairs {
+        let expected = ref_intersect(&ta, &tb);
+        let exact = expected.len() as u32;
+        let (a, b) = (VecTidset::from_tids(&ta, universe), VecTidset::from_tids(&tb, universe));
+        assert_eq!(a.intersect(&b).to_tids(), expected);
+        assert_eq!(a.intersect_support(&b), expected.len());
+        let mut out = VecTidset::empty();
+        // The bounded walks may abort early, but the contract is exact:
+        // Some(sup) iff sup >= min_sup, because the final feasibility
+        // check is precise even when probes are block-sparse.
+        for min_sup in [0, 1, exact / 2, exact, exact + 1, universe as u32] {
+            let want = (exact >= min_sup).then_some(exact);
+            assert_eq!(a.intersect_support_min(&b, min_sup), want);
+            assert_eq!(a.intersect_into_min(&b, min_sup, &mut out), want);
+            if want.is_some() {
+                assert_eq!(out.to_tids(), expected);
+            }
+        }
+    }
+}
+
+#[test]
+fn diffset_branchless_matches_reference() {
+    let _g = lock();
+    let mut rng = SplitMix64::new(0xD1F);
+    let universe = 2000;
+    let base = random_tids(&mut rng, universe, 0.7);
+    let subset = |rng: &mut SplitMix64, frac: f64| -> Vec<u32> {
+        base.iter().copied().filter(|_| rng.gen_bool(frac)).collect()
+    };
+    let p = DiffTidset::from_tids(&base, universe);
+    for _ in 0..6 {
+        let (tx, ty) = (subset(&mut rng, 0.8), subset(&mut rng, 0.6));
+        let dx = p.intersect(&DiffTidset::from_tids(&tx, universe));
+        let dy = p.intersect(&DiffTidset::from_tids(&ty, universe));
+        let exact = ref_intersect(&tx, &ty).len() as u32;
+        // d(PXY) = d(PY) \ d(PX): support from the branchless ANDNOT
+        // merge must equal the naive tid-list intersection.
+        assert_eq!(dx.intersect(&dy).support(), exact as usize);
+        assert_eq!(dx.intersect_support(&dy), exact as usize);
+        let mut out = DiffTidset::empty();
+        for min_sup in [0, 1, exact / 2, exact, exact + 1] {
+            let want = (exact >= min_sup).then_some(exact);
+            assert_eq!(dx.intersect_support_min(&dy, min_sup), want);
+            assert_eq!(dx.intersect_into_min(&dy, min_sup, &mut out), want);
+        }
+        // And the diffs themselves match the reference set difference.
+        if let (DiffTidset::Diff { diffs: da, .. }, DiffTidset::Diff { diffs: db, .. }) = (&dx, &dy)
+        {
+            assert_eq!(ref_difference(db, da), {
+                let DiffTidset::Diff { diffs, .. } = dx.intersect(&dy) else { unreachable!() };
+                diffs
+            });
+        }
+    }
+}
+
+/// Run one class through the per-call loop and through
+/// `intersect_class_into`, asserting identical survivors *and* identical
+/// kernel-counter deltas (the batched overrides bulk-add the
+/// intersection counter; totals must not drift).
+fn assert_class_counters<TS: TidOps>(universe: usize, min_sup: u32) {
+    let mut rng = SplitMix64::new(0xC1A55);
+    let base = random_tids(&mut rng, universe, 0.5);
+    let prefix = TS::from_tids(&base, universe);
+    // Keep fractions spread from 0.5 to 0.96 so supports straddle
+    // min_sup: some candidates must fail (early-abort paths fire) and
+    // some must survive, deterministically.
+    let members: Vec<(u32, TS)> = (0..24u32)
+        .map(|i| {
+            let frac = 0.5 + 0.02 * i as f64;
+            let tids: Vec<u32> =
+                base.iter().copied().filter(|_| rng.gen_bool(frac)).collect();
+            (i, TS::from_tids(&tids, universe))
+        })
+        .collect();
+
+    let before_per_call = kernel::snapshot();
+    let mut per_call: Vec<(u32, u32, Vec<u32>)> = Vec::new();
+    for (item, m) in &members {
+        let mut buf = TS::empty();
+        if let Some(sup) = prefix.intersect_into_min(m, min_sup, &mut buf) {
+            per_call.push((*item, sup, buf.to_tids()));
+        }
+    }
+    let per_call_delta = kernel::snapshot().since(&before_per_call);
+
+    let before_batched = kernel::snapshot();
+    let mut pool: Vec<TS> = Vec::new();
+    let mut survivors: Vec<(u32, TS)> = Vec::new();
+    let mut reported: Vec<(u32, u32)> = Vec::new();
+    prefix.intersect_class_into(&members, min_sup, &mut pool, &mut survivors, |item, sup| {
+        reported.push((item, sup));
+    });
+    let batched_delta = kernel::snapshot().since(&before_batched);
+
+    let batched: Vec<(u32, u32, Vec<u32>)> = survivors
+        .iter()
+        .zip(&reported)
+        .map(|((item, ts), &(ritem, sup))| {
+            assert_eq!(*item, ritem);
+            (*item, sup, ts.to_tids())
+        })
+        .collect();
+    assert_eq!(per_call, batched, "batched survivors diverged from per-call");
+    assert!(!per_call.is_empty(), "test class produced no survivors — weak test");
+    assert!(per_call.len() < members.len(), "no candidate failed min_sup — weak test");
+
+    assert_eq!(
+        batched_delta.intersections, per_call_delta.intersections,
+        "batched intersection counter drifted from per-call"
+    );
+    assert_eq!(
+        batched_delta.early_aborts, per_call_delta.early_aborts,
+        "batched early-abort counter drifted from per-call"
+    );
+    assert!(batched_delta.nanos > 0, "batched path recorded no kernel time");
+    assert!(
+        batched_delta.intersections_per_sec() > 0.0,
+        "throughput must be derivable from the batched deltas"
+    );
+}
+
+#[test]
+fn batched_class_counters_match_per_call_vec() {
+    let _g = lock();
+    assert_class_counters::<VecTidset>(4000, 1500);
+}
+
+#[test]
+fn batched_class_counters_match_per_call_bitmap() {
+    let _g = lock();
+    assert_class_counters::<BitmapTidset>(4000, 1500);
+}
+
+#[test]
+fn batched_class_counters_match_per_call_hybrid() {
+    let _g = lock();
+    assert_class_counters::<HybridTidset>(4000, 1500);
+}
+
+#[test]
+fn kernel_stats_throughput_semantics() {
+    let _g = lock();
+    let idle = rdd_eclat::fim::tidset::KernelStats::default();
+    assert_eq!(idle.intersections_per_sec(), 0.0, "no kernel time → zero throughput");
+    let busy = rdd_eclat::fim::tidset::KernelStats {
+        intersections: 1_000,
+        nanos: 2_000_000_000,
+        ..Default::default()
+    };
+    assert_eq!(busy.intersections_per_sec(), 500.0);
+}
